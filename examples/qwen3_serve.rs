@@ -1,0 +1,61 @@
+//! **E2E driver**: serve real batched requests on the Qwen3-tiny model
+//! with real numerics end to end, proving the three layers compose:
+//!
+//! * weights come from `artifacts/weights.bin` (written by the L2/L1
+//!   python build, the exact tensors baked into the JAX decode artifact
+//!   that integration tests check against this engine), falling back to
+//!   deterministic random weights when artifacts are absent;
+//! * the serving coordinator (L3) runs the decode loop with static
+//!   per-core partitioning ("cores as distributed nodes", §4.2);
+//! * latency and throughput are measured per thread count, showing the
+//!   multi-core scaling story of Figure 10 on real execution.
+//!
+//! Run: `cargo run --release --example qwen3_serve`
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine};
+use nncase_repro::model::{Qwen3Config, Qwen3Weights};
+
+fn main() {
+    let cfg = Qwen3Config::tiny();
+    let weights_path = std::path::Path::new("artifacts/weights.bin");
+    let load = |()| -> Qwen3Weights {
+        if weights_path.exists() {
+            println!("weights: artifacts/weights.bin (shared with the JAX artifact)");
+            Qwen3Weights::from_file(&cfg, weights_path).expect("weights.bin")
+        } else {
+            println!("weights: deterministic random (run `make artifacts` to share with JAX)");
+            Qwen3Weights::random(&cfg, 42)
+        }
+    };
+    println!(
+        "model: {} — {} params, {} weight bytes, vocab {}",
+        cfg.name,
+        cfg.param_count(),
+        nncase_repro::util::human_bytes(cfg.weight_bytes() as usize),
+        cfg.vocab
+    );
+
+    let requests = synthetic_workload(8, 8, 32, cfg.vocab);
+    println!(
+        "workload: {} requests x (8-token prompt + 32 generated tokens)\n",
+        requests.len()
+    );
+
+    let mut last_output = None;
+    for threads in [1usize, 2, 4] {
+        let engine = Qwen3Engine::new(load(()), threads, 512);
+        let mut coord = Coordinator::new(engine);
+        let report = coord.serve(&requests);
+        println!("threads={threads}: {}", report.render());
+        // Decode output must be identical across thread counts (static
+        // partitioning preserves numerics).
+        if let Some(prev) = &last_output {
+            assert_eq!(prev, &report.outputs, "thread count changed outputs!");
+        }
+        last_output = Some(report.outputs);
+    }
+    let sample = &last_output.unwrap()[0].1;
+    println!("\nsample generation (request 0): {:?}", &sample[..12.min(sample.len())]);
+    println!("qwen3_serve OK");
+}

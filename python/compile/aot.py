@@ -1,0 +1,129 @@
+"""AOT lowering: JAX/Pallas -> HLO **text** artifacts for the Rust PJRT
+runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  kernels/matmul_<m>x<k>x<n>.hlo.txt   L1 blocked matmul (several shapes)
+  kernels/attention_<m>x<d>.hlo.txt    L1 fused exp-attention (Fig. 3)
+  kernels/rmsnorm_<r>x<h>.hlo.txt      L1 rmsnorm
+  decode_tiny.hlo.txt                  L2 full decode step, weights baked
+  weights.bin                          the baked weights, flat f32 LE
+  manifest.tsv                         name<TAB>path<TAB>k=v...
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.attention import attention_exp
+from .kernels.matmul import matmul
+from .kernels.rmsnorm import rmsnorm
+from .model import TinyConfig, decode_step_args_fn, decode_step_fn, weight_specs
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *specs):
+    return jax.jit(fn).lower(*specs)
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(os.path.join(out, "kernels"), exist_ok=True)
+    manifest = []
+
+    def emit(name, rel, lowered, **meta):
+        text = to_hlo_text(lowered)
+        path = os.path.join(out, rel)
+        with open(path, "w") as f:
+            f.write(text)
+        kv = "\t".join(f"{k}={v}" for k, v in meta.items())
+        manifest.append(f"{name}\t{rel}" + ("\t" + kv if kv else ""))
+        print(f"  {name}: {len(text)} chars -> {rel}")
+
+    # ---- L1 kernels --------------------------------------------------
+    for m, k, n in [(16, 16, 16), (64, 64, 64), (64, 128, 32)]:
+        fn = lambda x, y: (matmul(x, y),)
+        emit(
+            f"matmul_{m}x{k}x{n}",
+            f"kernels/matmul_{m}x{k}x{n}.hlo.txt",
+            lower(fn, f32((m, k)), f32((k, n))),
+            m=m, k=k, n=n,
+        )
+    for m, d in [(32, 64)]:
+        fn = lambda q, k, v: (attention_exp(q, k, v),)
+        emit(
+            f"attention_{m}x{d}",
+            f"kernels/attention_{m}x{d}.hlo.txt",
+            lower(fn, f32((m, d)), f32((d, m)), f32((m, d))),
+            m=m, d=d,
+        )
+    for r, h in [(8, 256)]:
+        fn = lambda x, w: (rmsnorm(x, w),)
+        emit(
+            f"rmsnorm_{r}x{h}",
+            f"kernels/rmsnorm_{r}x{h}.hlo.txt",
+            lower(fn, f32((r, h)), f32((h,))),
+            rows=r, hidden=h,
+        )
+
+    # ---- L2 decode step (weights as positional arguments) -------------
+    # HLO text elides large constants, so weights travel via weights.bin
+    # and are fed as arguments (see model.decode_step_args_fn docstring).
+    cfg = TinyConfig()
+    _, params = decode_step_fn(cfg, args.seed)
+    afn, specs = decode_step_args_fn(cfg)
+    kvd = cfg.kv_heads * cfg.head_dim
+    arg_specs = [f32(shape) for _, shape in specs] + [
+        f32((1, cfg.hidden)),
+        f32((cfg.layers, cfg.max_seq, kvd)),
+        f32((cfg.layers, cfg.max_seq, kvd)),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ]
+    lowered = jax.jit(afn).lower(*arg_specs)
+    emit(
+        "decode_tiny",
+        "decode_tiny.hlo.txt",
+        lowered,
+        hidden=cfg.hidden, layers=cfg.layers, max_seq=cfg.max_seq,
+        vocab=cfg.vocab, n_weight_args=len(specs),
+    )
+
+    # ---- weights.bin (same tensors the HLO bakes) ---------------------
+    with open(os.path.join(out, "weights.bin"), "wb") as f:
+        for name, shape in weight_specs(cfg):
+            arr = np.asarray(params[name], dtype=np.float32)
+            assert arr.shape == tuple(shape), name
+            f.write(arr.tobytes())
+    manifest.append("# weights.bin: flat f32 LE, order per model.weight_specs")
+
+    with open(os.path.join(out, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} manifest entries to {out}/manifest.tsv")
+
+
+if __name__ == "__main__":
+    main()

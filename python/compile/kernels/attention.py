@@ -1,0 +1,50 @@
+"""L1: the Fig. 3 fused attention-like kernel in Pallas.
+
+O = MatMul(Exp(MatMul(Q, K)), V), with the Exp applied *directly to the
+blocked tile* while it sits in VMEM — the "pass-through layout" the
+paper's MetaPackOperation + FoldNopPack rules discover (§3.1.2, Eq. 1):
+no unpack between the first matmul and the exp, no pack before the second
+matmul. The grid walks M blocks; K and V stream through whole.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_kernel(q_ref, k_ref, v_ref, o_ref):
+    # Step 1: blocked matmul tile (stays in VMEM).
+    s = jnp.dot(
+        q_ref[...].astype(jnp.float32),
+        k_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    # Step 2: Exp on the blocked tile — the 16x16 block is treated as one
+    # contiguous vector of 256 lanes (no layout restore).
+    e = jnp.exp(s)
+    # Step 3: second blocked matmul straight from the blocked layout.
+    o_ref[...] = jnp.dot(
+        e, v_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def attention_exp(q, k, v, *, bm=16):
+    """Fused O = exp(Q @ K) @ V over an M-blocked grid."""
+    m, d = q.shape
+    d2, n = k.shape
+    n2, dv = v.shape
+    assert d == d2 and n == n2, "shape mismatch"
+    assert m % bm == 0, f"bm {bm} must divide M {m}"
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, dv), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, dv), q.dtype),
+        interpret=True,
+    )(q, k, v)

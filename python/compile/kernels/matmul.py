@@ -1,0 +1,82 @@
+"""L1: blocked matmul as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper packs for
+AVX2/AMX on x86; on TPU-style hardware the same insight becomes VMEM
+tiling for the MXU systolic array. The BlockSpec grid expresses the
+HBM↔VMEM staging schedule (what the paper does with cache-level tiling),
+and the (bm, bk, bn) block shapes are the MXU-aligned pack sizes.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO ops and runs (and is
+validated) on CPU; real-TPU performance is estimated analytically in
+DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nsteps):
+    """Grid (M/bm, N/bn, K/bk); K is innermost so the output block stays
+    resident in VMEM across the accumulation (double-buffered A/B tiles).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+    del nsteps  # shape bookkeeping only
+
+
+def matmul(x, y, *, bm=16, bk=16, bn=16):
+    """C = X @ Y over an (M/bm, N/bn, K/bk) Pallas grid.
+
+    Block sizes default to the 16x16 tensor-unit tiles the paper's
+    MetaPackOperation generates; all dims must divide evenly.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul k mismatch {k} vs {k2}"
+    # Degrade block sizes gracefully for thin shapes (e.g. the M=1 decode
+    # GEMV): fall back to the GCD so the grid still tiles exactly.
+    import math
+
+    bm = bm if m % bm == 0 else math.gcd(m, bm)
+    bk = bk if k % bk == 0 else math.gcd(k, bk)
+    bn = bn if n % bn == 0 else math.gcd(n, bn)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"block sizes ({bm},{bk},{bn}) must divide ({m},{k},{n})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nsteps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_footprint_bytes(bm, bk, bn, dtype_bytes=4):
+    """Analytical VMEM footprint of one grid step (A, B, C tiles, double-
+    buffered inputs) — the §Perf L1 metric."""
+    return dtype_bytes * (2 * (bm * bk + bk * bn) + bm * bn)
+
+
+def mxu_utilization(bm, bk, bn, mxu=(128, 128)):
+    """Estimated MXU utilization of the block shape: fraction of the
+    systolic array's lanes a (bm, bk)x(bk, bn) issue keeps busy."""
+    return min(1.0, bm / mxu[0]) * min(1.0, bn / mxu[1])

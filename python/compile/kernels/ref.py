@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest asserts allclose between the two across shapes and dtypes. These
+are also the semantics the Rust NTT kernels implement, so the oracle
+chain is: Pallas kernel == jnp reference == (via PJRT artifacts) Rust NTT.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """C = X @ Y with f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_exp_ref(q, k, v):
+    """The Fig. 3 subgraph: O = MatMul(Exp(MatMul(Q, K)), V).
+
+    Deliberately *not* softmax — the paper's Auto Vectorize example uses a
+    bare Exp between the two matmuls (the pass-through blocked layout).
+    """
+    s = jnp.matmul(q.astype(jnp.float32), k.astype(jnp.float32))
+    return jnp.matmul(jnp.exp(s), v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    """RMS normalization over the last axis."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf / jnp.sqrt(ms + eps) * w).astype(x.dtype)
+
+
+def softmax_ref(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def rope_ref(x, pos, theta):
+    """Rotary embedding, half-split convention (matches rust
+    ``ntt::rope_inplace``): pairs ``(i, i + d/2)``, ``freq =
+    theta**(-2i/d)``."""
+    d = x.shape[-1]
+    half = d // 2
+    i = jnp.arange(half, dtype=jnp.float32)
+    freq = 1.0 / (theta ** (2.0 * i / d))
+    angle = pos * freq
+    sin, cos = jnp.sin(angle), jnp.cos(angle)
+    a, b = x[..., :half], x[..., half:]
+    return jnp.concatenate([a * cos - b * sin, a * sin + b * cos], axis=-1)

@@ -1,0 +1,33 @@
+"""L1: RMSNorm as a row-blocked Pallas kernel."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x / jnp.sqrt(ms + eps) * w_ref[...]).astype(o_ref.dtype)
+
+
+def rmsnorm(x, w, *, eps=1e-6, block_rows=8):
+    """RMS-normalize the last axis of a [rows, h] tensor."""
+    rows, h = x.shape
+    assert w.shape == (h,)
+    if rows % block_rows != 0:
+        block_rows = 1
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, h), x.dtype),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,206 @@
+"""L2: the Qwen3-tiny decode step in JAX, calling the L1 Pallas kernels.
+
+The decode step mirrors the Rust NTT engine semantics exactly (RMSNorm →
+GQA attention with half-split RoPE and per-position KV cache → SwiGLU
+MLP → final norm → LM head) so the two stacks can be cross-validated
+numerically through the PJRT artifacts.
+
+Weights are generated here deterministically (`init_params`) and saved by
+aot.py as `artifacts/weights.bin`; the Rust side loads the same file, so
+both stacks compute over identical parameters.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import attention_exp  # noqa: F401  (exported artifact)
+from .kernels.matmul import matmul
+from .kernels.rmsnorm import rmsnorm
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyConfig:
+    """Must match rust `Qwen3Config::tiny()`."""
+
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 4
+    kv_heads: int = 2
+    head_dim: int = 64
+    intermediate: int = 768
+    vocab: int = 4096
+    rope_theta: float = 1.0e4
+    rms_eps: float = 1e-6
+    max_seq: int = 16
+
+
+# Weight tensor order in weights.bin (row-major f32, little endian).
+def weight_specs(cfg: TinyConfig):
+    specs = [("embedding", (cfg.vocab, cfg.hidden))]
+    qd = cfg.heads * cfg.head_dim
+    kvd = cfg.kv_heads * cfg.head_dim
+    for l in range(cfg.layers):
+        specs += [
+            (f"l{l}.attn_norm", (cfg.hidden,)),
+            (f"l{l}.wq", (cfg.hidden, qd)),
+            (f"l{l}.wk", (cfg.hidden, kvd)),
+            (f"l{l}.wv", (cfg.hidden, kvd)),
+            (f"l{l}.wo", (qd, cfg.hidden)),
+            (f"l{l}.mlp_norm", (cfg.hidden,)),
+            (f"l{l}.w_gate", (cfg.hidden, cfg.intermediate)),
+            (f"l{l}.w_up", (cfg.hidden, cfg.intermediate)),
+            (f"l{l}.w_down", (cfg.intermediate, cfg.hidden)),
+        ]
+    specs += [("final_norm", (cfg.hidden,)), ("lm_head", (cfg.hidden, cfg.vocab))]
+    return specs
+
+
+def init_params(cfg: TinyConfig, seed: int = 0):
+    """Deterministic random weights (numpy RNG; norms initialized to 1)."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in weight_specs(cfg):
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            scale = 0.02 if not name.endswith(("wo", "w_down")) else 0.02 / np.sqrt(
+                2.0 * cfg.layers
+            )
+            params[name] = jnp.asarray(
+                rng.standard_normal(shape, dtype=np.float32) * scale
+            )
+    return params
+
+
+def rope(x, pos, theta):
+    return ref.rope_ref(x, pos, theta)
+
+
+def decode_step(params, cfg: TinyConfig, x_emb, kcache, vcache, pos):
+    """One decode step.
+
+    Args:
+      x_emb: [1, hidden] current token embedding.
+      kcache/vcache: [layers, max_seq, kv_heads*head_dim] (already roped
+        K; rows >= pos are ignored via masking).
+      pos: scalar int32 position of the current token.
+
+    Returns:
+      (logits [1, vocab], k_new [layers, kvd], v_new [layers, kvd])
+    """
+    h = cfg.hidden
+    hd = cfg.head_dim
+    group = cfg.heads // cfg.kv_heads
+    x = x_emb.reshape(1, h)
+    k_news, v_news = [], []
+    posf = pos.astype(jnp.float32)
+    for l in range(cfg.layers):
+        xn = rmsnorm(x, params[f"l{l}.attn_norm"], eps=cfg.rms_eps)
+        q = matmul(xn, params[f"l{l}.wq"])  # [1, qd]
+        k = matmul(xn, params[f"l{l}.wk"])  # [1, kvd]
+        v = matmul(xn, params[f"l{l}.wv"])  # [1, kvd]
+        # RoPE per head (half-split convention).
+        q = q.reshape(cfg.heads, hd)
+        q = jax.vmap(lambda row: rope(row, posf, cfg.rope_theta))(q)
+        k = k.reshape(cfg.kv_heads, hd)
+        k = jax.vmap(lambda row: rope(row, posf, cfg.rope_theta))(k)
+        k_news.append(k.reshape(-1))
+        v_news.append(v.reshape(-1))
+        # Attention over cache rows [0, pos) plus the current k/v.
+        kc = kcache[l].reshape(cfg.max_seq, cfg.kv_heads, hd)
+        vc = vcache[l].reshape(cfg.max_seq, cfg.kv_heads, hd)
+        v = v.reshape(cfg.kv_heads, hd)
+        outs = []
+        mask_hist = (jnp.arange(cfg.max_seq) < pos).astype(jnp.float32)
+        for head in range(cfg.heads):
+            kvh = head // group
+            qrow = q[head]  # [hd]
+            hist = jnp.einsum("sh,h->s", kc[:, kvh, :], qrow) / jnp.sqrt(float(hd))
+            cur = jnp.dot(k[kvh], qrow) / jnp.sqrt(float(hd))
+            scores = jnp.concatenate([hist, cur[None]])
+            neg = jnp.float32(-1e30)
+            mask = jnp.concatenate([mask_hist, jnp.ones((1,), jnp.float32)])
+            scores = jnp.where(mask > 0, scores, neg)
+            probs = ref.softmax_ref(scores)
+            ctx = jnp.einsum("s,sh->h", probs[: cfg.max_seq], vc[:, kvh, :]) + probs[
+                cfg.max_seq
+            ] * v[kvh]
+            outs.append(ctx)
+        ctx = jnp.concatenate(outs).reshape(1, cfg.heads * hd)
+        attn_out = matmul(ctx, params[f"l{l}.wo"])
+        x = x + attn_out
+        # SwiGLU MLP.
+        xn2 = rmsnorm(x, params[f"l{l}.mlp_norm"], eps=cfg.rms_eps)
+        gate = matmul(xn2, params[f"l{l}.w_gate"])
+        up = matmul(xn2, params[f"l{l}.w_up"])
+        gate = gate * jax.nn.sigmoid(gate)
+        x = x + matmul(gate * up, params[f"l{l}.w_down"])
+    xn = rmsnorm(x, params["final_norm"], eps=cfg.rms_eps)
+    logits = matmul(xn, params["lm_head"])
+    return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def decode_step_fn(cfg: TinyConfig, seed: int = 0):
+    """Closure with baked weights, ready for jit/lowering."""
+    params = init_params(cfg, seed)
+
+    @functools.wraps(decode_step)
+    def fn(x_emb, kcache, vcache, pos):
+        return decode_step(params, cfg, x_emb, kcache, vcache, pos)
+
+    return fn, params
+
+
+def decode_step_args_fn(cfg: TinyConfig):
+    """Variant taking the weights as *positional arguments* (in
+    `weight_specs` order, embedding excluded) ahead of the activations.
+
+    Why: the AOT interchange is HLO **text**, and `as_hlo_text()` elides
+    large constant literals (`constant({...})`), so baked weights do not
+    survive the text round-trip. Passing them as arguments keeps the
+    artifact small and lets the Rust side feed the same `weights.bin`
+    tensors it uses for the NTT engine.
+    """
+    specs = [s for s in weight_specs(cfg) if s[0] != "embedding"]
+
+    def fn(*args):
+        ws = args[: len(specs)]
+        x_emb, kcache, vcache, pos = args[len(specs):]
+        params = {name: w for (name, _), w in zip(specs, ws)}
+        return decode_step(params, cfg, x_emb, kcache, vcache, pos)
+
+    return fn, specs
+
+
+def reference_decode(params, cfg: TinyConfig, tokens, n_steps):
+    """Pure-python greedy decode used by pytest to sanity-check the jitted
+    decode_step against an un-jitted run."""
+    kcache = jnp.zeros((cfg.layers, cfg.max_seq, cfg.kv_heads * cfg.head_dim))
+    vcache = jnp.zeros_like(kcache)
+    pos = 0
+    logits = None
+    for t in tokens:
+        x = params["embedding"][t][None, :]
+        logits, knew, vnew = decode_step(
+            params, cfg, x, kcache, vcache, jnp.int32(pos)
+        )
+        kcache = kcache.at[:, pos, :].set(knew)
+        vcache = vcache.at[:, pos, :].set(vnew)
+        pos += 1
+    out = []
+    for _ in range(n_steps):
+        t = int(jnp.argmax(logits))
+        out.append(t)
+        x = params["embedding"][t][None, :]
+        logits, knew, vnew = decode_step(
+            params, cfg, x, kcache, vcache, jnp.int32(pos)
+        )
+        kcache = kcache.at[:, pos, :].set(knew)
+        vcache = vcache.at[:, pos, :].set(vnew)
+        pos += 1
+    return out

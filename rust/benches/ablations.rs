@@ -1,0 +1,222 @@
+//! Ablation benches for the design choices DESIGN.md §6 calls out:
+//!
+//! * e-graph saturation + WPMaxSAT vs destructive greedy rewriting
+//! * MetaPackOperation pass-through layout vs kernel-local packing
+//! * SBP SAT extraction (memory-constrained) vs greedy / all-Broadcast
+//! * MCTS+MINLP vs random structural search vs fixed-tile heuristic
+//! * SAT bin-packing memory planner vs first-fit vs bump allocator
+//!
+//! Run: `cargo bench --bench ablations`
+
+mod bench_util;
+
+use bench_util::row;
+use nncase_repro::codegen::{plan_memory, PlannerKind};
+use nncase_repro::cost::MachineSpec;
+use nncase_repro::dist::{build_dist_egraph, extract_dist, Placement};
+use nncase_repro::egraph::{
+    extract_greedy, extract_wpmaxsat, roofline_cost_fn, EGraph, Runner,
+};
+use nncase_repro::ir::{BinaryKind, DType, Graph, Op, TensorType, UnaryKind};
+use nncase_repro::model::{decode_graph, Qwen3Config};
+use nncase_repro::rewrite::greedy::{count_transposes, greedy_rewrite, GreedyOrder};
+use nncase_repro::rewrite::{all_rules, pack::PackOptions, transpose_rules};
+use nncase_repro::schedule::{
+    autoschedule, solve_parametric, subgraph_to_tileops, MctsConfig, MinlpConfig, TiledState,
+};
+use nncase_repro::util::Rng;
+
+fn fig2_graph() -> (Graph, nncase_repro::ir::NodeId) {
+    let mut g = Graph::new();
+    let a = g.input("A", &[256, 256], DType::F32);
+    let b = g.input("B", &[256, 256], DType::F32);
+    let ta = g.transpose(a, &[1, 0]);
+    let tb = g.transpose(b, &[1, 0]);
+    let ub = g.unary(UnaryKind::Exp, tb);
+    let sum = g.binary(BinaryKind::Add, ta, ub);
+    let out = g.transpose(sum, &[1, 0]);
+    g.mark_output(out);
+    (g, out)
+}
+
+fn ablation_egraph(machine: &MachineSpec) {
+    println!("== ablation: e-graph vs greedy rewriting (Fig. 2) ==");
+    let (g, out) = fig2_graph();
+    let (gl, _) = greedy_rewrite(&g, GreedyOrder::LeftFirst);
+    let (gr, _) = greedy_rewrite(&g, GreedyOrder::RightFirst);
+    row("greedy left-first transposes", count_transposes(&gl));
+    row("greedy right-first transposes", count_transposes(&gr));
+    let (mut eg, map) = EGraph::from_graph(&g);
+    let rules = transpose_rules();
+    let refs: Vec<&dyn nncase_repro::egraph::Rewrite> =
+        rules.iter().map(|r| r.as_ref()).collect();
+    Runner::new(&mut eg).run(&refs);
+    let cost = roofline_cost_fn(machine);
+    let sat = extract_wpmaxsat(&eg, &[map[out.index()]], &cost);
+    let grd = extract_greedy(&eg, &[map[out.index()]], &cost);
+    row("egraph+WPMaxSAT transposes", count_transposes(&sat.graph));
+    row("egraph+WPMaxSAT cost (ns)", sat.cost);
+    row("egraph+greedy-extract cost (ns)", grd.cost);
+    assert_eq!(count_transposes(&sat.graph), 0);
+    println!();
+}
+
+fn ablation_vectorize(machine: &MachineSpec) {
+    println!("== ablation: pass-through layout vs kernel-local packing (Fig. 3) ==");
+    let mut g = Graph::new();
+    let q = g.input("Q", &[64, 64], DType::F32);
+    let k = g.input("K", &[64, 64], DType::F32);
+    let v = g.input("V", &[64, 64], DType::F32);
+    let s = g.matmul(q, k);
+    let e = g.unary(UnaryKind::Exp, s);
+    let o = g.matmul(e, v);
+    g.mark_output(o);
+    let (mut eg, map) = EGraph::from_graph(&g);
+    let rules = all_rules(&PackOptions::default());
+    let refs: Vec<&dyn nncase_repro::egraph::Rewrite> =
+        rules.iter().map(|r| r.as_ref()).collect();
+    Runner::new(&mut eg).run(&refs);
+    let cost = roofline_cost_fn(machine);
+    let global = extract_wpmaxsat(&eg, &[map[o.index()]], &cost);
+    // Kernel-local packing: every packed op pays its own pack+unpack —
+    // modeled by pricing a pack/unpack pair around each of the 3 compute
+    // ops (what IPEX-style local optimization does).
+    let packs = |graph: &Graph| {
+        graph
+            .live_nodes()
+            .iter()
+            .filter(|&&id| {
+                matches!(graph.node(id).op, Op::Pack { .. } | Op::Unpack { .. })
+            })
+            .count()
+    };
+    row("global (e-graph) pack+unpack ops", packs(&global.graph));
+    row("kernel-local pack+unpack ops (2 per op)", 3 * 2);
+    let conv_bytes = |n: usize| n as u64 * (64 * 64 * 4) as u64 * 2;
+    row(
+        "conversion traffic: global",
+        format!("{} KiB", conv_bytes(packs(&global.graph)) / 1024),
+    );
+    row("conversion traffic: kernel-local", format!("{} KiB", conv_bytes(6) / 1024));
+    assert!(packs(&global.graph) < 6);
+    println!();
+}
+
+fn ablation_dist(machine: &MachineSpec) {
+    println!("== ablation: SBP extraction strategies (MLP, 4 devices) ==");
+    let mut g = Graph::new();
+    let x = g.input("x", &[8, 512], DType::F32);
+    let w1 = g.constant("w1", &[512, 2048], DType::F32);
+    let w2 = g.constant("w2", &[2048, 512], DType::F32);
+    let h = g.matmul(x, w1);
+    let a = g.unary(UnaryKind::Silu, h);
+    let out = g.matmul(a, w2);
+    g.mark_output(out);
+    let d = build_dist_egraph(&g, &Placement::line(4));
+    let sat = extract_dist(&d, machine, u64::MAX / 4, true).unwrap();
+    let greedy = extract_dist(&d, machine, u64::MAX / 4, false).unwrap();
+    row("SAT total (us)", format!("{:.1}", sat.total_ns as f64 / 1e3));
+    row("SAT comm (us)", format!("{:.1}", sat.comm_ns as f64 / 1e3));
+    row("greedy total (us)", format!("{:.1}", greedy.total_ns as f64 / 1e3));
+    row(
+        "SAT weight shard/device",
+        nncase_repro::util::human_bytes(sat.weight_bytes_per_device as usize),
+    );
+    // All-Broadcast reference: every device holds all weights.
+    let full: u64 = 2 * 512 * 2048 * 4;
+    row(
+        "all-Broadcast weights/device",
+        nncase_repro::util::human_bytes(full as usize),
+    );
+    assert!(sat.weight_bytes_per_device <= full);
+    println!();
+}
+
+fn ablation_schedule(machine: &MachineSpec) {
+    println!("== ablation: MCTS+MINLP vs random search vs fixed tiles ==");
+    let mut g = Graph::new();
+    let q = g.input("Q", &[512, 256], DType::F32);
+    let k = g.input("K", &[256, 512], DType::F32);
+    let v = g.input("V", &[512, 256], DType::F32);
+    let t1 = g.matmul(q, k);
+    let t2 = g.unary(UnaryKind::Exp, t1);
+    let o = g.matmul(t2, v);
+    g.mark_output(o);
+    let nodes = g.live_nodes();
+    let mk = || TiledState::initial(subgraph_to_tileops(&g, &nodes), machine.caches.len());
+
+    let mcts = autoschedule(mk(), machine, MctsConfig { iterations: 120, ..Default::default() })
+        .unwrap();
+    row("MCTS+MINLP latency (us)", format!("{:.1}", mcts.solution.latency_s * 1e6));
+
+    // Random structural search with the same evaluation budget.
+    let mut rng = Rng::new(42);
+    let mut best_rand = f64::INFINITY;
+    for _ in 0..120 {
+        let mut s = mk();
+        for _ in 0..rng.below(4) {
+            let acts = s.legal_actions();
+            if acts.is_empty() {
+                break;
+            }
+            let a = acts[rng.below(acts.len())].clone();
+            s = s.apply(&a);
+        }
+        if let Some(sol) = solve_parametric(&s, machine, &MinlpConfig::default()) {
+            best_rand = best_rand.min(sol.latency_s);
+        }
+    }
+    row("random search latency (us)", format!("{:.1}", best_rand * 1e6));
+
+    // Fixed-tile heuristic: initial structure, default MINLP on the
+    // unfused state only (no structural exploration).
+    let fixed = solve_parametric(&mk(), machine, &MinlpConfig::default()).unwrap();
+    row("fixed structure latency (us)", format!("{:.1}", fixed.latency_s * 1e6));
+    assert!(mcts.solution.latency_s <= fixed.latency_s * 1.0001);
+    assert!(mcts.solution.latency_s <= best_rand * 1.25, "MCTS within 25% of random-best");
+    println!();
+}
+
+fn ablation_memplan() {
+    println!("== ablation: memory planners on the tiny decode graph ==");
+    let g = decode_graph(&Qwen3Config::tiny(), 7, None);
+    let bufs = nncase_repro::codegen::bufferize(&g);
+    let live = nncase_repro::codegen::Liveness::compute(&g, &bufs);
+    for kind in [PlannerKind::Bump, PlannerKind::FirstFit, PlannerKind::SatOptimal] {
+        let plan = plan_memory(&bufs, &live, kind);
+        row(
+            &format!("{kind:?} arena"),
+            nncase_repro::util::human_bytes(plan.arena_bytes),
+        );
+    }
+    let bump = plan_memory(&bufs, &live, PlannerKind::Bump).arena_bytes;
+    let ff = plan_memory(&bufs, &live, PlannerKind::FirstFit).arena_bytes;
+    assert!(ff < bump / 2, "liveness reuse must at least halve the arena");
+    println!();
+}
+
+fn ablation_f16(machine: &MachineSpec) {
+    println!("== ablation: dtype sweep (nncase, 1T, simulator) ==");
+    use nncase_repro::sim::{simulate_decode, Framework};
+    for (name, cfg) in [
+        ("0.6B F32", Qwen3Config::qwen3_0_6b(DType::F32)),
+        ("0.6B F16", Qwen3Config::qwen3_0_6b(DType::F16)),
+        ("0.6B BF16", Qwen3Config::qwen3_0_6b(DType::BF16)),
+        ("1.7B F16", Qwen3Config::qwen3_1_7b(DType::F16)),
+    ] {
+        let s = simulate_decode(&cfg, 1, &Framework::nncase(), machine, 8);
+        row(&format!("nncase {name} (tok/s)"), format!("{:.2}", s.tokens_per_s));
+    }
+    println!();
+}
+
+fn main() {
+    let machine = MachineSpec::ryzen_5900x();
+    ablation_egraph(&machine);
+    ablation_vectorize(&machine);
+    ablation_dist(&machine);
+    ablation_schedule(&machine);
+    ablation_memplan();
+    ablation_f16(&machine);
+    println!("ablations OK");
+}

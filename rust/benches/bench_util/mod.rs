@@ -1,0 +1,38 @@
+//! Minimal benchmark harness (criterion is not in the offline vendor
+//! set): median-of-N wall-clock timing with warmup, ns-resolution.
+
+use std::time::Instant;
+
+/// Time `f` with `warmup` + `reps` runs; returns median seconds.
+pub fn time_median<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Pretty time.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Print one result row.
+pub fn row(name: &str, value: impl std::fmt::Display) {
+    println!("{name:<48} {value}");
+}

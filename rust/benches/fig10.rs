@@ -1,0 +1,53 @@
+//! Figure 10 regeneration: multi-core (4T/8T) decode throughput, with
+//! §4.2's shape checks: nncase overtakes the hand-optimized llama.cpp,
+//! the 1T→4T scaling gap, and the 8T bandwidth wall.
+//!
+//! Run: `cargo bench --bench fig10`
+
+use nncase_repro::cost::MachineSpec;
+use nncase_repro::ir::DType;
+use nncase_repro::model::Qwen3Config;
+use nncase_repro::sim::figures::{fig10_table, render};
+use nncase_repro::sim::{simulate_decode, Framework};
+
+fn main() {
+    let machine = MachineSpec::ryzen_5900x();
+    let rows = fig10_table(&machine);
+    println!("{}", render(&rows, "Figure 10 — multi-core (4T/8T) token throughput"));
+
+    let get = |model: &str, fw: &str, t: usize| {
+        rows.iter()
+            .find(|r| r.model == model && r.framework == fw && r.threads == t)
+            .map(|r| r.tokens_per_s)
+            .unwrap()
+    };
+
+    // Crossover: nncase >= llama.cpp at 4T and 8T (paper: 23.5 vs 23.2
+    // on 0.6B-F16-4T; 8.85 vs 8.34 on 1.7B-F16-4T).
+    for model in ["Qwen3-0.6B-f16", "Qwen3-1.7B-f16"] {
+        for t in [4usize, 8] {
+            let (n, l) = (get(model, "nncase", t), get(model, "llama.cpp", t));
+            assert!(n > l, "{model} {t}T: nncase {n:.2} must overtake llama.cpp {l:.2}");
+            println!("{model} {t}T: nncase/llama.cpp = {:.3} (paper ~1.01-1.06)", n / l);
+        }
+    }
+
+    // Scaling efficiency 1T -> 4T on 1.7B (paper: +74% nncase vs +32%
+    // llama.cpp).
+    let cfg = Qwen3Config::qwen3_1_7b(DType::F16);
+    let gain = |f: &Framework| {
+        simulate_decode(&cfg, 4, f, &machine, 8).tokens_per_s
+            / simulate_decode(&cfg, 1, f, &machine, 8).tokens_per_s
+    };
+    let gn = (gain(&Framework::nncase()) - 1.0) * 100.0;
+    let gl = (gain(&Framework::llamacpp()) - 1.0) * 100.0;
+    println!("1.7B 1T->4T scaling: nncase +{gn:.0}% (paper +74%), llama.cpp +{gl:.0}% (paper +32%)");
+    assert!(gn > gl);
+
+    // Bandwidth wall: 8T ~ 4T.
+    let t4 = get("Qwen3-0.6B-f16", "nncase", 4);
+    let t8 = get("Qwen3-0.6B-f16", "nncase", 8);
+    println!("0.6B-F16 nncase 8T/4T = {:.3} (paper: 23.98/23.5 = 1.02)", t8 / t4);
+    assert!(t8 / t4 < 1.3, "8T must sit on the bandwidth wall");
+    println!("\nfig10 shape checks OK");
+}

@@ -1,0 +1,43 @@
+//! Figure 9 regeneration: single-core (1T) decode throughput, all
+//! models x all frameworks, on the Roofline simulator, with the paper's
+//! reference values and shape checks.
+//!
+//! Run: `cargo bench --bench fig9`
+
+use nncase_repro::cost::MachineSpec;
+use nncase_repro::sim::figures::{fig9_table, render};
+
+fn main() {
+    let machine = MachineSpec::ryzen_5900x();
+    let rows = fig9_table(&machine);
+    println!("{}", render(&rows, "Figure 9 — single-core (1T) token throughput"));
+
+    // Shape assertions from §4.1 (who wins, by roughly what factor).
+    let get = |model: &str, fw: &str| {
+        rows.iter()
+            .find(|r| r.model == model && r.framework == fw)
+            .map(|r| r.tokens_per_s)
+            .unwrap()
+    };
+    for model in ["Qwen3-0.6B-f32", "Qwen3-0.6B-f16", "Qwen3-1.7B-f16"] {
+        let (l, n, i, m) = (
+            get(model, "llama.cpp"),
+            get(model, "nncase"),
+            get(model, "Intel IPEX"),
+            get(model, "MLC LLM"),
+        );
+        assert!(l > n && n > i && i > 2.0 * m, "{model}: hierarchy violated");
+        println!(
+            "{model}: llama.cpp/nncase = {:.2} (paper ~1.2), nncase/IPEX = {:.2} (paper ~1.15-1.35)",
+            l / n,
+            n / i
+        );
+    }
+    let f32t = get("Qwen3-0.6B-f32", "nncase");
+    let f16t = get("Qwen3-0.6B-f16", "nncase");
+    println!(
+        "nncase F16 gain over F32: {:.0}% (paper: 59%)",
+        (f16t / f32t - 1.0) * 100.0
+    );
+    println!("\nfig9 shape checks OK");
+}

@@ -1,0 +1,148 @@
+//! Hot-path microbenchmarks — the §Perf instrumentation.
+//!
+//! Covers each layer's hot loop:
+//! * L3 compiler: saturation, WPMaxSAT extraction, distributed e-graph
+//!   build+extract, MINLP solve, memory planning.
+//! * L3 runtime: NTT blocked matmul GFLOP/s (vs naive), GEMV bandwidth,
+//!   real decode step latency at 1/2/4 threads.
+//!
+//! Run: `cargo bench --bench hotpaths`
+
+mod bench_util;
+
+use bench_util::{fmt_time, row, time_median};
+use nncase_repro::codegen::{plan_memory, PlannerKind};
+use nncase_repro::coordinator::Qwen3Engine;
+use nncase_repro::cost::MachineSpec;
+use nncase_repro::dist::{build_dist_egraph, extract_dist, Placement};
+use nncase_repro::egraph::{extract_wpmaxsat, roofline_cost_fn, EGraph, Runner};
+use nncase_repro::ir::{DType, Graph, UnaryKind};
+use nncase_repro::model::{decode_graph, Qwen3Config, Qwen3Weights};
+use nncase_repro::ntt::{gemv, matmul_blocked, matmul_naive, Tensor};
+use nncase_repro::rewrite::{all_rules, pack::PackOptions};
+use nncase_repro::schedule::{solve_parametric, subgraph_to_tileops, MinlpConfig, TiledState};
+use nncase_repro::util::Rng;
+
+fn attention_graph(n: usize) -> Graph {
+    let mut g = Graph::new();
+    let q = g.input("Q", &[n, n], DType::F32);
+    let k = g.input("K", &[n, n], DType::F32);
+    let v = g.input("V", &[n, n], DType::F32);
+    let s = g.matmul(q, k);
+    let e = g.unary(UnaryKind::Exp, s);
+    let o = g.matmul(e, v);
+    g.mark_output(o);
+    g
+}
+
+fn main() {
+    let machine = MachineSpec::ryzen_5900x();
+
+    println!("== L3 compiler hot paths ==");
+    let g = attention_graph(64);
+    let t = time_median(1, 5, || {
+        let (mut eg, _) = EGraph::from_graph(&g);
+        let rules = all_rules(&PackOptions::default());
+        let refs: Vec<&dyn nncase_repro::egraph::Rewrite> =
+            rules.iter().map(|r| r.as_ref()).collect();
+        Runner::new(&mut eg).run(&refs);
+        eg.n_nodes
+    });
+    row("saturation (attention, Tables 1+2)", fmt_time(t));
+
+    let (mut eg, map) = EGraph::from_graph(&g);
+    let rules = all_rules(&PackOptions::default());
+    let refs: Vec<&dyn nncase_repro::egraph::Rewrite> =
+        rules.iter().map(|r| r.as_ref()).collect();
+    Runner::new(&mut eg).run(&refs);
+    let roots = [map[g.outputs[0].index()]];
+    let cost = roofline_cost_fn(&machine);
+    let t = time_median(1, 5, || extract_wpmaxsat(&eg, &roots, &cost).cost);
+    row("WPMaxSAT extraction", fmt_time(t));
+    let t = time_median(1, 20, || {
+        nncase_repro::egraph::extract_greedy(&eg, &roots, &cost).cost
+    });
+    row("greedy extraction", fmt_time(t));
+
+    let mlp = {
+        let mut g = Graph::new();
+        let x = g.input("x", &[8, 512], DType::F32);
+        let w1 = g.constant("w1", &[512, 2048], DType::F32);
+        let w2 = g.constant("w2", &[2048, 512], DType::F32);
+        let h = g.matmul(x, w1);
+        let a = g.unary(UnaryKind::Silu, h);
+        let o = g.matmul(a, w2);
+        g.mark_output(o);
+        g
+    };
+    let t = time_median(1, 3, || {
+        let d = build_dist_egraph(&mlp, &Placement::line(4));
+        extract_dist(&d, &machine, u64::MAX / 4, true).unwrap().total_ns
+    });
+    row("dist e-graph build + SAT extract (4 dev)", fmt_time(t));
+
+    let ops = subgraph_to_tileops(&g, &g.live_nodes());
+    let state = TiledState::initial(ops, machine.caches.len());
+    let t = time_median(1, 5, || {
+        solve_parametric(&state, &machine, &MinlpConfig::default()).unwrap().latency_s
+    });
+    row("MINLP parametric solve", fmt_time(t));
+
+    let dg = decode_graph(&Qwen3Config::tiny(), 7, None);
+    let bufs = nncase_repro::codegen::bufferize(&dg);
+    let live = nncase_repro::codegen::Liveness::compute(&dg, &bufs);
+    let t = time_median(1, 10, || plan_memory(&bufs, &live, PlannerKind::FirstFit).arena_bytes);
+    row("memory planning (tiny decode, first-fit)", fmt_time(t));
+
+    println!("\n== NTT kernels (L3 runtime) ==");
+    let mut rng = Rng::new(1);
+    for n in [128usize, 256, 512] {
+        let a = Tensor::randn(&[n, n], &mut rng, 1.0);
+        let b = Tensor::randn(&[n, n], &mut rng, 1.0);
+        let flops = 2.0 * (n * n * n) as f64;
+        let tb = time_median(2, 7, || matmul_blocked(&a, &b));
+        row(
+            &format!("matmul_blocked {n}x{n}x{n}"),
+            format!("{} ({:.2} GFLOP/s)", fmt_time(tb), flops / tb / 1e9),
+        );
+        if n <= 256 {
+            let tn = time_median(1, 3, || matmul_naive(&a, &b));
+            row(
+                &format!("matmul_naive   {n}x{n}x{n}"),
+                format!("{} ({:.2} GFLOP/s)", fmt_time(tn), flops / tn / 1e9),
+            );
+        }
+    }
+    let (k, n) = (1024usize, 1024usize);
+    let x: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+    let w = Tensor::randn(&[k, n], &mut rng, 1.0);
+    let mut y = vec![0.0f32; n];
+    let t = time_median(3, 11, || gemv(&x, &w, &mut y));
+    let bytes = (k * n * 4) as f64;
+    row(
+        "gemv 1024x1024 (weight stream)",
+        format!("{} ({:.2} GB/s)", fmt_time(t), bytes / t / 1e9),
+    );
+
+    println!("\n== decode engine (real execution, tiny model) ==");
+    let cfg = Qwen3Config::tiny();
+    for threads in [1usize, 2, 4] {
+        let w = Qwen3Weights::random(&cfg, 42);
+        let mut e = Qwen3Engine::new(w, threads, 64);
+        // Warm the cache with a short prompt.
+        for (i, tok) in [1usize, 2, 3].iter().enumerate() {
+            e.decode_step(*tok, i);
+        }
+        let mut pos = 3usize;
+        let t = time_median(2, 9, || {
+            let l = e.decode_step(7, pos % 60);
+            pos += 1;
+            l[0]
+        });
+        row(
+            &format!("decode_step {threads}T"),
+            format!("{} ({:.1} tok/s)", fmt_time(t), 1.0 / t),
+        );
+    }
+    println!("\nhotpaths OK");
+}

@@ -1,0 +1,188 @@
+//! Bufferization, alias analysis and liveness (§3.3.1).
+
+use std::collections::HashMap;
+
+use crate::ir::{Graph, NodeId};
+
+/// Physical buffer id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BufferId(pub u32);
+
+/// The logical-to-physical mapping produced by bufferization.
+#[derive(Debug)]
+pub struct BufferTable {
+    /// node -> physical buffer (views alias their producer's buffer).
+    pub of_node: HashMap<NodeId, BufferId>,
+    /// buffer -> size in bytes.
+    pub sizes: Vec<usize>,
+    /// buffer -> true if it is a weight/constant (pre-allocated, pinned).
+    pub is_const: Vec<bool>,
+    /// buffer -> true if graph input/output (externally owned).
+    pub is_io: Vec<bool>,
+}
+
+impl BufferTable {
+    pub fn len(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sizes.is_empty()
+    }
+
+    /// Intermediate (plannable) buffers: not const, not I/O.
+    pub fn intermediates(&self) -> Vec<BufferId> {
+        (0..self.sizes.len() as u32)
+            .map(BufferId)
+            .filter(|b| !self.is_const[b.0 as usize] && !self.is_io[b.0 as usize])
+            .collect()
+    }
+}
+
+/// Assign physical buffers to every live node. View ops (Reshape, Slice)
+/// are marked as aliases of their input — *zero-copy* shape
+/// transformations.
+pub fn bufferize(g: &Graph) -> BufferTable {
+    let mut of_node: HashMap<NodeId, BufferId> = HashMap::new();
+    let mut sizes = Vec::new();
+    let mut is_const = Vec::new();
+    let mut is_io = Vec::new();
+    for id in g.live_nodes() {
+        let node = g.node(id);
+        if node.op.is_view() {
+            // Alias: share the producer's buffer.
+            let src = of_node[&node.inputs[0]];
+            of_node.insert(id, src);
+            // A view marked as output promotes its storage to I/O.
+            if g.outputs.contains(&id) {
+                is_io[src.0 as usize] = true;
+            }
+            continue;
+        }
+        let b = BufferId(sizes.len() as u32);
+        sizes.push(node.ty.size_bytes());
+        is_const.push(matches!(node.op, crate::ir::Op::Const(_) | crate::ir::Op::Scalar(_)));
+        is_io.push(
+            matches!(node.op, crate::ir::Op::Input(_)) || g.outputs.contains(&id),
+        );
+        of_node.insert(id, b);
+    }
+    BufferTable { of_node, sizes, is_const, is_io }
+}
+
+/// Live interval per buffer over the topological schedule: `[def, last_use]`.
+#[derive(Debug)]
+pub struct Liveness {
+    /// buffer -> (first def position, last use position).
+    pub interval: HashMap<BufferId, (usize, usize)>,
+}
+
+impl Liveness {
+    /// True if two buffers' lifetimes overlap.
+    pub fn overlap(&self, a: BufferId, b: BufferId) -> bool {
+        match (self.interval.get(&a), self.interval.get(&b)) {
+            (Some(&(s1, e1)), Some(&(s2, e2))) => s1 <= e2 && s2 <= e1,
+            _ => false,
+        }
+    }
+
+    /// Compute liveness for `g` under its topological node order.
+    pub fn compute(g: &Graph, bufs: &BufferTable) -> Liveness {
+        let order = g.live_nodes();
+        let pos: HashMap<NodeId, usize> =
+            order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        let mut interval: HashMap<BufferId, (usize, usize)> = HashMap::new();
+        for (&node, &buf) in &bufs.of_node {
+            let p = pos[&node];
+            let e = interval.entry(buf).or_insert((p, p));
+            e.0 = e.0.min(p);
+            e.1 = e.1.max(p);
+        }
+        // Extend to last use by consumers.
+        for &id in &order {
+            let p = pos[&id];
+            for &inp in &g.node(id).inputs {
+                if let Some(&b) = bufs.of_node.get(&inp) {
+                    let e = interval.get_mut(&b).unwrap();
+                    e.1 = e.1.max(p);
+                }
+            }
+        }
+        // Outputs live to the end.
+        for &o in &g.outputs {
+            if let Some(&b) = bufs.of_node.get(&o) {
+                interval.get_mut(&b).unwrap().1 = order.len();
+            }
+        }
+        Liveness { interval }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, Graph, UnaryKind};
+
+    #[test]
+    fn views_alias_zero_copy() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4, 6], DType::F32);
+        let e = g.unary(UnaryKind::Exp, a);
+        let r = g.reshape(e, &[24]);
+        let r2 = g.reshape(r, &[2, 12]);
+        let n = g.unary(UnaryKind::Neg, r2);
+        g.mark_output(n);
+        let bufs = bufferize(&g);
+        assert_eq!(bufs.of_node[&r], bufs.of_node[&e], "reshape aliases");
+        assert_eq!(bufs.of_node[&r2], bufs.of_node[&e], "reshape chain aliases");
+        assert_ne!(bufs.of_node[&n], bufs.of_node[&e]);
+        // 3 buffers total: a, e, n.
+        assert_eq!(bufs.len(), 3);
+    }
+
+    #[test]
+    fn output_view_promotes_io() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let e = g.unary(UnaryKind::Exp, a);
+        let r = g.reshape(e, &[2, 2]);
+        g.mark_output(r);
+        let bufs = bufferize(&g);
+        let b = bufs.of_node[&e];
+        assert!(bufs.is_io[b.0 as usize], "aliased output storage must be IO");
+    }
+
+    #[test]
+    fn liveness_intervals_and_overlap() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[8], DType::F32);
+        let e1 = g.unary(UnaryKind::Exp, a); // dies after e2
+        let e2 = g.unary(UnaryKind::Neg, e1);
+        let e3 = g.unary(UnaryKind::Sqrt, e2);
+        g.mark_output(e3);
+        let bufs = bufferize(&g);
+        let live = Liveness::compute(&g, &bufs);
+        let (b1, b2, b3) = (bufs.of_node[&e1], bufs.of_node[&e2], bufs.of_node[&e3]);
+        assert!(live.overlap(b1, b2), "producer overlaps its consumer");
+        assert!(
+            !live.overlap(b1, b3),
+            "e1 is dead before e3 is written: intervals {:?} {:?}",
+            live.interval[&b1],
+            live.interval[&b3]
+        );
+    }
+
+    #[test]
+    fn intermediates_exclude_io_and_const() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[8], DType::F32);
+        let w = g.constant("w", &[8], DType::F32);
+        let s = g.binary(crate::ir::BinaryKind::Add, a, w);
+        let t = g.unary(UnaryKind::Exp, s);
+        g.mark_output(t);
+        let bufs = bufferize(&g);
+        let inter = bufs.intermediates();
+        assert_eq!(inter.len(), 1, "only s is an intermediate");
+        assert_eq!(inter[0], bufs.of_node[&s]);
+    }
+}

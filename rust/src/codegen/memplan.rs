@@ -1,0 +1,297 @@
+//! Memory planning (§3.3.1): assign arena offsets to intermediate
+//! buffers, maximizing reuse by overlapping buffers that are never live
+//! simultaneously. Modeled as bin packing / 2-D strip packing:
+//!
+//! * [`PlannerKind::FirstFit`] — first-fit-decreasing over the interval
+//!   conflict graph (fast, the production default — and the bump-
+//!   allocator ablation baseline lives here too).
+//! * [`PlannerKind::SatOptimal`] — for small instances, binary-search the
+//!   arena size with a SAT feasibility probe over discretized offset
+//!   slots (the paper's "SAT solver … optimal arrangement").
+
+use std::collections::HashMap;
+
+use super::{BufferId, BufferTable, Liveness};
+use crate::sat::{Lit, SatResult, Solver};
+
+/// Planner selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerKind {
+    /// No reuse at all: every buffer gets fresh space (ablation baseline).
+    Bump,
+    /// First-fit decreasing with lifetime-overlap constraints.
+    FirstFit,
+    /// SAT-optimal (falls back to FirstFit above `max_sat_buffers`).
+    SatOptimal,
+}
+
+/// The memory plan.
+#[derive(Debug)]
+pub struct MemPlan {
+    /// Arena offsets for intermediate buffers.
+    pub offsets: HashMap<BufferId, usize>,
+    /// Total arena size in bytes.
+    pub arena_bytes: usize,
+    /// Which planner produced it.
+    pub kind: PlannerKind,
+}
+
+const ALIGN: usize = 64;
+const MAX_SAT_BUFFERS: usize = 14;
+
+fn align_up(x: usize) -> usize {
+    x.div_ceil(ALIGN) * ALIGN
+}
+
+/// Plan arena offsets for the intermediates of `bufs`.
+pub fn plan_memory(bufs: &BufferTable, live: &Liveness, kind: PlannerKind) -> MemPlan {
+    let inter = bufs.intermediates();
+    match kind {
+        PlannerKind::Bump => {
+            let mut offsets = HashMap::new();
+            let mut cur = 0usize;
+            for b in inter {
+                offsets.insert(b, cur);
+                cur += align_up(bufs.sizes[b.0 as usize]);
+            }
+            MemPlan { offsets, arena_bytes: cur, kind }
+        }
+        PlannerKind::FirstFit => first_fit(bufs, live, &inter),
+        PlannerKind::SatOptimal => {
+            let ff = first_fit(bufs, live, &inter);
+            if inter.len() > MAX_SAT_BUFFERS {
+                return ff;
+            }
+            sat_refine(bufs, live, &inter, ff)
+        }
+    }
+}
+
+/// First-fit decreasing: place big buffers first at the lowest offset
+/// that does not collide with an already-placed, lifetime-overlapping
+/// buffer.
+fn first_fit(bufs: &BufferTable, live: &Liveness, inter: &[BufferId]) -> MemPlan {
+    let mut order: Vec<BufferId> = inter.to_vec();
+    order.sort_by_key(|b| std::cmp::Reverse(bufs.sizes[b.0 as usize]));
+    let mut placed: Vec<(BufferId, usize, usize)> = Vec::new(); // (buf, off, size)
+    let mut offsets = HashMap::new();
+    let mut arena = 0usize;
+    for &b in &order {
+        let size = align_up(bufs.sizes[b.0 as usize]).max(ALIGN);
+        // Collect forbidden intervals from overlapping-lifetime buffers.
+        let mut blocked: Vec<(usize, usize)> = placed
+            .iter()
+            .filter(|(o, _, _)| live.overlap(b, *o))
+            .map(|&(_, off, sz)| (off, off + sz))
+            .collect();
+        blocked.sort();
+        let mut cand = 0usize;
+        for &(s, e) in &blocked {
+            if cand + size <= s {
+                break;
+            }
+            cand = cand.max(e);
+        }
+        offsets.insert(b, cand);
+        placed.push((b, cand, size));
+        arena = arena.max(cand + size);
+    }
+    MemPlan { offsets, arena_bytes: arena, kind: PlannerKind::FirstFit }
+}
+
+/// Binary-search the arena size with SAT feasibility probes. Offsets are
+/// discretized to `gran`-sized slots; buffers occupy contiguous slot
+/// ranges and lifetime-overlapping buffers must not share slots.
+fn sat_refine(
+    bufs: &BufferTable,
+    live: &Liveness,
+    inter: &[BufferId],
+    ff: MemPlan,
+) -> MemPlan {
+    if inter.is_empty() {
+        return MemPlan { kind: PlannerKind::SatOptimal, ..ff };
+    }
+    let gran = inter
+        .iter()
+        .map(|b| align_up(bufs.sizes[b.0 as usize]).max(ALIGN))
+        .min()
+        .unwrap_or(ALIGN);
+    let lower = inter
+        .iter()
+        .map(|b| align_up(bufs.sizes[b.0 as usize]))
+        .max()
+        .unwrap_or(0);
+    let mut best = ff;
+    let mut lo = lower.div_ceil(gran);
+    let mut hi = best.arena_bytes.div_ceil(gran);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        match sat_feasible(bufs, live, inter, mid, gran) {
+            Some(offsets) => {
+                let arena = offsets
+                    .iter()
+                    .map(|(b, &o)| o + align_up(bufs.sizes[b.0 as usize]))
+                    .max()
+                    .unwrap_or(0);
+                if arena <= best.arena_bytes {
+                    best =
+                        MemPlan { offsets, arena_bytes: arena, kind: PlannerKind::SatOptimal };
+                }
+                hi = mid;
+            }
+            None => lo = mid + 1,
+        }
+    }
+    best.kind = PlannerKind::SatOptimal;
+    best
+}
+
+/// SAT probe: can all buffers be placed within `slots * gran` bytes?
+fn sat_feasible(
+    bufs: &BufferTable,
+    live: &Liveness,
+    inter: &[BufferId],
+    slots: usize,
+    gran: usize,
+) -> Option<HashMap<BufferId, usize>> {
+    let mut solver = Solver::new();
+    // pos[b][s]: buffer b starts at slot s.
+    let nslots = |b: BufferId| align_up(bufs.sizes[b.0 as usize]).div_ceil(gran);
+    let mut pos: HashMap<(usize, usize), u32> = HashMap::new();
+    for (bi, &b) in inter.iter().enumerate() {
+        let need = nslots(b);
+        if need > slots {
+            return None;
+        }
+        let starts: Vec<u32> =
+            (0..=(slots - need)).map(|s| {
+                let v = solver.new_var();
+                pos.insert((bi, s), v);
+                v
+            }).collect();
+        // Exactly one start.
+        let lits: Vec<Lit> = starts.iter().map(|&v| Lit::pos(v)).collect();
+        solver.add_clause(&lits);
+        for i in 0..starts.len() {
+            for j in (i + 1)..starts.len() {
+                solver.add_clause(&[Lit::neg(starts[i]), Lit::neg(starts[j])]);
+            }
+        }
+    }
+    // Non-overlap for lifetime-conflicting pairs.
+    for (bi, &b1) in inter.iter().enumerate() {
+        for (bj, &b2) in inter.iter().enumerate().skip(bi + 1) {
+            if !live.overlap(b1, b2) {
+                continue;
+            }
+            let (n1, n2) = (nslots(b1), nslots(b2));
+            for s1 in 0..=(slots.saturating_sub(n1)) {
+                for s2 in 0..=(slots.saturating_sub(n2)) {
+                    let disjoint = s1 + n1 <= s2 || s2 + n2 <= s1;
+                    if !disjoint {
+                        if let (Some(&v1), Some(&v2)) =
+                            (pos.get(&(bi, s1)), pos.get(&(bj, s2)))
+                        {
+                            solver.add_clause(&[Lit::neg(v1), Lit::neg(v2)]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    match solver.solve() {
+        SatResult::Sat(model) => {
+            let mut offsets = HashMap::new();
+            for (bi, &b) in inter.iter().enumerate() {
+                for s in 0..slots {
+                    if let Some(&v) = pos.get(&(bi, s)) {
+                        if model[v as usize] {
+                            offsets.insert(b, s * gran);
+                            break;
+                        }
+                    }
+                }
+            }
+            Some(offsets)
+        }
+        SatResult::Unsat => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::bufferize;
+    use crate::ir::{DType, Graph, UnaryKind};
+
+    fn chain_graph(n: usize) -> Graph {
+        let mut g = Graph::new();
+        let mut x = g.input("a", &[1024], DType::F32);
+        for _ in 0..n {
+            x = g.unary(UnaryKind::Exp, x);
+        }
+        g.mark_output(x);
+        g
+    }
+
+    #[test]
+    fn firstfit_reuses_dead_buffers() {
+        // In a chain, only two intermediates are ever live at once.
+        let g = chain_graph(8);
+        let bufs = bufferize(&g);
+        let live = Liveness::compute(&g, &bufs);
+        let bump = plan_memory(&bufs, &live, PlannerKind::Bump);
+        let ff = plan_memory(&bufs, &live, PlannerKind::FirstFit);
+        assert!(
+            ff.arena_bytes <= 2 * 4096 + 128,
+            "chain needs ~2 slots, got {}",
+            ff.arena_bytes
+        );
+        assert!(ff.arena_bytes < bump.arena_bytes, "reuse must beat bump");
+    }
+
+    #[test]
+    fn no_overlapping_live_buffers_share_memory() {
+        let g = chain_graph(6);
+        let bufs = bufferize(&g);
+        let live = Liveness::compute(&g, &bufs);
+        for kind in [PlannerKind::FirstFit, PlannerKind::SatOptimal] {
+            let plan = plan_memory(&bufs, &live, kind);
+            let inter = bufs.intermediates();
+            for (i, &a) in inter.iter().enumerate() {
+                for &b in inter.iter().skip(i + 1) {
+                    if live.overlap(a, b) {
+                        let (oa, ob) = (plan.offsets[&a], plan.offsets[&b]);
+                        let (sa, sb) =
+                            (bufs.sizes[a.0 as usize], bufs.sizes[b.0 as usize]);
+                        assert!(
+                            oa + sa <= ob || ob + sb <= oa,
+                            "{kind:?}: live-overlapping buffers collide"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sat_no_worse_than_firstfit() {
+        let g = chain_graph(5);
+        let bufs = bufferize(&g);
+        let live = Liveness::compute(&g, &bufs);
+        let ff = plan_memory(&bufs, &live, PlannerKind::FirstFit);
+        let sat = plan_memory(&bufs, &live, PlannerKind::SatOptimal);
+        assert!(sat.arena_bytes <= ff.arena_bytes);
+    }
+
+    #[test]
+    fn empty_graph_plans_empty() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        g.mark_output(a);
+        let bufs = bufferize(&g);
+        let live = Liveness::compute(&g, &bufs);
+        let plan = plan_memory(&bufs, &live, PlannerKind::SatOptimal);
+        assert_eq!(plan.arena_bytes, 0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Code generation (§3.3): buffer scheduling and kernel instantiation.
+//!
+//! * [`bufferize`] — logical-to-physical mapping with **alias analysis**:
+//!   view ops (Reshape/Slice) share their input's storage (zero-copy).
+//! * [`liveness`] — per-buffer live intervals over the topological
+//!   schedule.
+//! * [`memplan`] — address assignment. Overlapping-lifetime buffers must
+//!   not overlap in memory; the planner minimizes the arena size (a bin
+//!   packing problem): first-fit-decreasing heuristic always, plus a
+//!   SAT-based optimality refinement for small instances (§3.3.1).
+//! * [`plan`] — the executable [`ExecPlan`]: a flat step list binding
+//!   μkernels to buffer offsets.
+//! * [`ntt_emit`] — NTT-style C++ source emission (Fig. 8), showing the
+//!   kernel the real nncase would hand to GCC/Clang.
+
+mod bufferize;
+mod memplan;
+mod ntt_emit;
+mod plan;
+
+pub use bufferize::{bufferize, BufferId, BufferTable, Liveness};
+pub use memplan::{plan_memory, MemPlan, PlannerKind};
+pub use ntt_emit::emit_ntt_cpp;
+pub use plan::{lower_to_plan, step_offsets, ExecPlan, Step};

@@ -1,0 +1,151 @@
+//! The executable plan: a flat list of μkernel steps with resolved
+//! buffer bindings. Consumed by the performance simulator (every step
+//! carries its FLOP/byte footprint) and by the C++ emitter.
+
+use std::collections::HashMap;
+
+use super::{bufferize, plan_memory, BufferId, BufferTable, Liveness, MemPlan, PlannerKind};
+use crate::ir::{Graph, NodeId, Op, TensorType};
+
+/// One executable step.
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub node: NodeId,
+    pub op: Op,
+    pub inputs: Vec<BufferId>,
+    pub output: BufferId,
+    pub out_ty: TensorType,
+    pub flops: u64,
+    pub bytes: u64,
+}
+
+/// A lowered module: steps + buffer table + memory plan.
+#[derive(Debug)]
+pub struct ExecPlan {
+    pub steps: Vec<Step>,
+    pub bufs: BufferTable,
+    pub mem: MemPlan,
+    /// Weight bytes (const buffers, pre-pinned per §3.3.1).
+    pub const_bytes: u64,
+}
+
+impl ExecPlan {
+    pub fn total_flops(&self) -> u64 {
+        self.steps.iter().map(|s| s.flops).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} steps, {:.2} MFLOP, {} traffic, arena {}, weights {}",
+            self.steps.len(),
+            self.total_flops() as f64 / 1e6,
+            crate::util::human_bytes(self.total_bytes() as usize),
+            crate::util::human_bytes(self.mem.arena_bytes),
+            crate::util::human_bytes(self.const_bytes as usize),
+        )
+    }
+}
+
+/// Lower a graph to an [`ExecPlan`]: bufferize, liveness, memory plan,
+/// then emit one step per non-leaf non-view node.
+pub fn lower_to_plan(g: &Graph, planner: PlannerKind) -> ExecPlan {
+    let bufs = bufferize(g);
+    let live = Liveness::compute(g, &bufs);
+    let mem = plan_memory(&bufs, &live, planner);
+    let mut steps = Vec::new();
+    for id in g.live_nodes() {
+        let node = g.node(id);
+        if node.op.is_leaf() || node.op.is_view() {
+            continue;
+        }
+        let in_tys: Vec<&TensorType> =
+            node.inputs.iter().map(|&i| &g.node(i).ty).collect();
+        steps.push(Step {
+            node: id,
+            op: node.op.clone(),
+            inputs: node.inputs.iter().map(|&i| bufs.of_node[&i]).collect(),
+            output: bufs.of_node[&id],
+            out_ty: node.ty.clone(),
+            flops: crate::cost::op_flops(&node.op, &in_tys, &node.ty),
+            bytes: crate::cost::op_bytes(&node.op, &in_tys, &node.ty),
+        });
+    }
+    let const_bytes = bufs
+        .sizes
+        .iter()
+        .zip(&bufs.is_const)
+        .filter(|(_, &c)| c)
+        .map(|(&s, _)| s as u64)
+        .sum();
+    ExecPlan { steps, bufs, mem, const_bytes }
+}
+
+/// Map each step's output to its arena offset (None for I/O and consts).
+pub fn step_offsets(plan: &ExecPlan) -> HashMap<NodeId, Option<usize>> {
+    plan.steps
+        .iter()
+        .map(|s| (s.node, plan.mem.offsets.get(&s.output).copied()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, Graph, UnaryKind};
+    use crate::model::{decode_graph, Qwen3Config};
+
+    #[test]
+    fn plan_covers_all_compute_nodes() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[8, 8], DType::F32);
+        let w = g.constant("w", &[8, 8], DType::F32);
+        let m = g.matmul(a, w);
+        let e = g.unary(UnaryKind::Exp, m);
+        let r = g.reshape(e, &[64]);
+        g.mark_output(r);
+        let plan = lower_to_plan(&g, PlannerKind::FirstFit);
+        assert_eq!(plan.steps.len(), 2, "matmul + exp (reshape is a view)");
+        assert_eq!(plan.const_bytes, 8 * 8 * 4);
+        assert!(plan.total_flops() > 0);
+    }
+
+    #[test]
+    fn decode_step_plan_scales_with_model() {
+        let tiny = decode_graph(&Qwen3Config::tiny(), 7, None);
+        let plan = lower_to_plan(&tiny, PlannerKind::FirstFit);
+        // Per layer: 8 matmuls + 2 norms + rope x2 + softmax + residuals...
+        assert!(plan.steps.len() > 4 * 10);
+        // Weight bytes close to config estimate (graph excludes embedding).
+        let cfg = Qwen3Config::tiny();
+        let expected = cfg.weight_bytes()
+            - (cfg.vocab * cfg.hidden * cfg.dtype.size_bytes()) as u64; // embedding outside
+        let got = plan.const_bytes;
+        let ratio = got as f64 / expected as f64;
+        assert!(
+            (0.8..1.2).contains(&ratio),
+            "plan const bytes {got} vs expected {expected}"
+        );
+    }
+
+    #[test]
+    fn arena_much_smaller_than_total_intermediates() {
+        let g = decode_graph(&Qwen3Config::tiny(), 3, None);
+        let plan = lower_to_plan(&g, PlannerKind::FirstFit);
+        let total: usize = plan
+            .bufs
+            .intermediates()
+            .iter()
+            .map(|b| plan.bufs.sizes[b.0 as usize])
+            .sum();
+        assert!(
+            plan.mem.arena_bytes * 3 < total,
+            "liveness reuse should shrink the arena: {} vs {total}",
+            plan.mem.arena_bytes
+        );
+    }
+}

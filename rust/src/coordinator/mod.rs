@@ -1,0 +1,18 @@
+//! The serving coordinator (L3 runtime side).
+//!
+//! * [`engine`] — the decode engine: KV cache + one decode step executed
+//!   with NTT μkernels. Multi-core execution follows the paper's
+//!   "multi-core as multi-node" design (§4.2): every heavy operator is
+//!   *statically column/head-partitioned* across worker threads at plan
+//!   time (the Auto Distribution S(1) strategy for column-parallel
+//!   GEMV), synchronized with lightweight barriers — no fork-join work
+//!   stealing, no dynamic scheduling.
+//! * [`serve`] — the request loop: FCFS queue, decode loop, token
+//!   throughput and latency metrics (the E2E driver of examples/
+//!   qwen3_serve.rs).
+
+pub mod engine;
+pub mod serve;
+
+pub use engine::{argmax, KvCache, Qwen3Engine};
+pub use serve::{synthetic_workload, Coordinator, Request, ServeReport};

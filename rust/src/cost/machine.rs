@@ -1,0 +1,163 @@
+//! Machine descriptions.
+//!
+//! All targets are modeled through the same NUMA-style abstraction the
+//! paper uses for its "compile once, adapt everywhere" story: a set of
+//! cores, a cache/scratchpad hierarchy and a shared memory bandwidth.
+//! The evaluation platform (AMD Ryzen 9 5900X + DDR4-3600) is a preset;
+//! substitute machines (a TPU-like device for the Pallas L1 kernel) use
+//! the same struct.
+
+
+/// One level of on-chip memory (cache or scratchpad).
+#[derive(Debug, Clone)]
+pub struct CacheLevel {
+    pub name: String,
+    /// Capacity in bytes (per core for private levels, total for shared).
+    pub size_bytes: usize,
+    /// Sustained bandwidth to the next level down, GB/s per core.
+    pub bw_gbps: f64,
+    /// True if shared by all cores (e.g. L3), false if per-core.
+    pub shared: bool,
+}
+
+/// A deployment target.
+#[derive(Debug, Clone)]
+pub struct MachineSpec {
+    pub name: String,
+    pub cores: usize,
+    /// SIMD width in bits (AVX2 = 256).
+    pub vector_bits: usize,
+    /// FMA units per core (AVX2 Zen3 = 2 × 256-bit FMA).
+    pub fma_units: usize,
+    pub freq_ghz: f64,
+    /// Cache hierarchy, innermost first (L1, L2, L3).
+    pub caches: Vec<CacheLevel>,
+    /// Sustained DRAM bandwidth achievable by a single core, GB/s.
+    pub dram_bw_core_gbps: f64,
+    /// Sustained DRAM bandwidth at full socket saturation, GB/s.
+    pub dram_bw_total_gbps: f64,
+    /// Alpha (latency) for inter-core synchronization, seconds.
+    pub sync_alpha_s: f64,
+    /// Inter-core (cache-to-cache / NUMA) bandwidth, GB/s.
+    pub intercore_bw_gbps: f64,
+    /// Total memory capacity in bytes (hard constraint for Auto
+    /// Distribution, Observation 2).
+    pub mem_capacity_bytes: usize,
+}
+
+impl MachineSpec {
+    /// Peak f32 FLOP/s for `threads` cores: 2 (FMA) × lanes × units × freq.
+    pub fn peak_flops(&self, threads: usize, dtype_bytes: usize) -> f64 {
+        let lanes = self.vector_bits / (8 * dtype_bytes.max(1));
+        2.0 * lanes as f64
+            * self.fma_units as f64
+            * self.freq_ghz
+            * 1e9
+            * threads.min(self.cores) as f64
+    }
+
+    /// Sustained DRAM bandwidth for `threads` cores in bytes/s. Bandwidth
+    /// saturates well below core count on desktop parts — the "memory
+    /// wall" that shapes Figure 10's 8T results.
+    pub fn dram_bw(&self, threads: usize) -> f64 {
+        let t = threads.min(self.cores) as f64;
+        (self.dram_bw_core_gbps * t).min(self.dram_bw_total_gbps) * 1e9
+    }
+
+    /// The evaluation platform of §4: AMD Ryzen 9 5900X, 12 cores, AVX2,
+    /// 128 GB DDR4-3600 (dual channel).
+    pub fn ryzen_5900x() -> Self {
+        MachineSpec {
+            name: "AMD Ryzen 9 5900X".into(),
+            cores: 12,
+            vector_bits: 256,
+            fma_units: 2,
+            freq_ghz: 4.5,
+            caches: vec![
+                CacheLevel { name: "L1d".into(), size_bytes: 32 << 10, bw_gbps: 900.0, shared: false },
+                CacheLevel { name: "L2".into(), size_bytes: 512 << 10, bw_gbps: 450.0, shared: false },
+                CacheLevel { name: "L3".into(), size_bytes: 64 << 20, bw_gbps: 300.0, shared: true },
+            ],
+            // DDR4-3600 dual channel: 57.6 GB/s theoretical; a single Zen3
+            // core sustains ~24 GB/s, the socket ~42 GB/s in practice.
+            dram_bw_core_gbps: 24.0,
+            dram_bw_total_gbps: 42.0,
+            sync_alpha_s: 2.0e-6,
+            intercore_bw_gbps: 60.0,
+            mem_capacity_bytes: 128 << 30,
+        }
+    }
+
+    /// A TPU-like device used for the §Hardware-Adaptation discussion of
+    /// the L1 Pallas kernel: VMEM scratchpad + MXU systolic array.
+    pub fn tpu_like() -> Self {
+        MachineSpec {
+            name: "TPU-like (1 core, MXU + VMEM)".into(),
+            cores: 1,
+            vector_bits: 8 * 128 * 4, // (8,128) vregs, f32
+            fma_units: 2,
+            freq_ghz: 0.94,
+            caches: vec![CacheLevel {
+                name: "VMEM".into(),
+                size_bytes: 16 << 20,
+                bw_gbps: 3000.0,
+                shared: false,
+            }],
+            dram_bw_core_gbps: 800.0,
+            dram_bw_total_gbps: 800.0,
+            sync_alpha_s: 1.0e-6,
+            intercore_bw_gbps: 100.0,
+            mem_capacity_bytes: 32 << 30,
+        }
+    }
+
+    /// A small generic NUMA box used in tests (2 nodes × 2 cores).
+    pub fn test_numa() -> Self {
+        MachineSpec {
+            name: "test-numa-2x2".into(),
+            cores: 4,
+            vector_bits: 256,
+            fma_units: 2,
+            freq_ghz: 3.0,
+            caches: vec![
+                CacheLevel { name: "L1d".into(), size_bytes: 32 << 10, bw_gbps: 600.0, shared: false },
+                CacheLevel { name: "L2".into(), size_bytes: 256 << 10, bw_gbps: 300.0, shared: false },
+            ],
+            dram_bw_core_gbps: 10.0,
+            dram_bw_total_gbps: 25.0,
+            sync_alpha_s: 2.0e-6,
+            intercore_bw_gbps: 30.0,
+            mem_capacity_bytes: 8 << 30,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_flops_scaling() {
+        let m = MachineSpec::ryzen_5900x();
+        // One core AVX2 f32: 2 * 8 lanes * 2 units * 4.5 GHz = 144 GFLOP/s.
+        assert_eq!(m.peak_flops(1, 4), 144.0e9);
+        assert_eq!(m.peak_flops(12, 4), 12.0 * 144.0e9);
+        // Thread count clamps at core count.
+        assert_eq!(m.peak_flops(64, 4), m.peak_flops(12, 4));
+    }
+
+    #[test]
+    fn bandwidth_saturates() {
+        let m = MachineSpec::ryzen_5900x();
+        assert_eq!(m.dram_bw(1), 24.0e9);
+        // 2 cores double, but the socket caps at 42 GB/s.
+        assert_eq!(m.dram_bw(2), 42.0e9);
+        assert_eq!(m.dram_bw(8), 42.0e9);
+    }
+
+    #[test]
+    fn f16_doubles_lanes() {
+        let m = MachineSpec::ryzen_5900x();
+        assert_eq!(m.peak_flops(1, 2), 2.0 * m.peak_flops(1, 4));
+    }
+}

@@ -1,0 +1,12 @@
+//! Cost models: Roofline (§3.1.1), alpha-beta communication (§3.1.3),
+//! per-op FLOPs/bytes accounting and machine descriptions.
+
+mod comm;
+mod machine;
+mod opcost;
+mod roofline;
+
+pub use comm::{collective_time_s, AlphaBeta, Collective};
+pub use machine::{CacheLevel, MachineSpec};
+pub use opcost::{op_bytes, op_flops};
+pub use roofline::{enode_cost, roofline_time_s, RooflineCost};

@@ -1,0 +1,118 @@
+//! Per-op FLOP and byte accounting used by the Roofline cost model.
+
+use crate::ir::{Op, TensorType, UnaryKind};
+
+/// FLOPs performed by `op` given input/output types. Transcendentals are
+/// weighted by their polynomial cost on AVX2 (vectorized `exp` ≈ 8 FLOPs
+/// per element with a degree-7 estrin polynomial + scalb).
+pub fn op_flops(op: &Op, ins: &[&TensorType], out: &TensorType) -> u64 {
+    let out_elems = out.numel() as u64;
+    match op {
+        Op::MatMul => {
+            // 2 * M * N * K, batched over leading dims (logical elements,
+            // so packed and flat layouts report identical FLOPs).
+            let a = ins[0];
+            let k_logical = {
+                let r = a.shape.rank();
+                let mut k = a.shape.0[r - 1];
+                if a.is_packed() && a.lanes.len() == 2 {
+                    k *= a.lanes[1];
+                }
+                k as u64
+            };
+            2 * out_elems * k_logical
+        }
+        Op::Unary(UnaryKind::Exp | UnaryKind::Log) => 8 * out_elems,
+        Op::Unary(UnaryKind::Silu) => 10 * out_elems, // exp + mul + div
+        Op::Unary(UnaryKind::Sqrt | UnaryKind::Rsqrt) => 4 * out_elems,
+        Op::Unary(_) => out_elems,
+        Op::Binary(_) => out_elems,
+        Op::Reduce { .. } => ins[0].numel() as u64,
+        Op::Softmax { .. } => 12 * out_elems, // max + sub + exp + sum + div
+        Op::RmsNorm { .. } => 6 * out_elems,  // sq + mean + rsqrt + mul + mul
+        Op::Rope { .. } => 6 * out_elems,     // 2 mul + 1 add/sub per pair, ×2
+        Op::Gather => 0,
+        // Pure data movement:
+        Op::Transpose { .. }
+        | Op::Reshape { .. }
+        | Op::Slice { .. }
+        | Op::Concat { .. }
+        | Op::Pack { .. }
+        | Op::Unpack { .. }
+        | Op::Boxing { .. }
+        | Op::Input(_)
+        | Op::Const(_)
+        | Op::Scalar(_) => 0,
+    }
+}
+
+/// Bytes moved through memory by `op`: all inputs read + output written.
+/// View ops are free after alias analysis (§3.3.1); `Pack`/`Unpack` and
+/// `Transpose` pay a full read+write (this is exactly the conversion
+/// overhead the Auto Vectorize trade-off weighs, §3.1.2).
+pub fn op_bytes(op: &Op, ins: &[&TensorType], out: &TensorType) -> u64 {
+    match op {
+        Op::Reshape { .. } | Op::Slice { .. } | Op::Input(_) | Op::Const(_) | Op::Scalar(_) => 0,
+        Op::Boxing { .. } => 0, // costed by the alpha-beta comm model instead
+        _ => {
+            let read: u64 = ins.iter().map(|t| t.size_bytes() as u64).sum();
+            read + out.size_bytes() as u64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, Shape};
+
+    fn t(dims: &[usize]) -> TensorType {
+        TensorType::of(dims, DType::F32)
+    }
+
+    #[test]
+    fn matmul_flops() {
+        let a = t(&[128, 256]);
+        let b = t(&[256, 64]);
+        let out = t(&[128, 64]);
+        assert_eq!(op_flops(&Op::MatMul, &[&a, &b], &out), 2 * 128 * 64 * 256);
+    }
+
+    #[test]
+    fn packed_matmul_same_flops() {
+        // [8,16]<16,16> x [16,4]<16,16> == logical 128x256 * 256x64.
+        let mut a = t(&[8, 16]);
+        a.lanes = vec![16, 16];
+        a.pack_axes = vec![0, 1];
+        let mut b = t(&[16, 4]);
+        b.lanes = vec![16, 16];
+        b.pack_axes = vec![0, 1];
+        let mut out = t(&[8, 4]);
+        out.lanes = vec![16, 16];
+        out.pack_axes = vec![0, 1];
+        assert_eq!(op_flops(&Op::MatMul, &[&a, &b], &out), 2 * 128 * 64 * 256);
+    }
+
+    #[test]
+    fn views_are_free() {
+        let x = t(&[64, 64]);
+        let out = t(&[4096]);
+        assert_eq!(op_bytes(&Op::Reshape { shape: Shape::of(&[4096]) }, &[&x], &out), 0);
+        // Transpose is NOT free: it is real data movement.
+        let tr = t(&[64, 64]);
+        assert_eq!(
+            op_bytes(&Op::Transpose { perm: vec![1, 0] }, &[&x], &tr),
+            2 * 64 * 64 * 4
+        );
+    }
+
+    #[test]
+    fn pack_costs_movement() {
+        let x = t(&[64, 64]);
+        let mut packed = t(&[4, 4]);
+        packed.lanes = vec![16, 16];
+        packed.pack_axes = vec![0, 1];
+        let b = op_bytes(&Op::Pack { lanes: vec![16, 16], axes: vec![0, 1] }, &[&x], &packed);
+        assert_eq!(b, 2 * 64 * 64 * 4);
+    }
+}

@@ -1,0 +1,112 @@
+//! Roofline cost model (Williams et al.), the weight source for e-graph
+//! extraction (§3.1.1): `time = max(flops / peak, bytes / bandwidth)`.
+
+use super::{op_bytes, op_flops, MachineSpec};
+use crate::ir::{Op, TensorType};
+
+/// Cost of one e-node under the Roofline model, in abstract "nanoseconds"
+/// (u64 so it can be used as a WPMaxSAT weight).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RooflineCost {
+    pub ns: u64,
+    pub flops: u64,
+    pub bytes: u64,
+}
+
+/// Execution-time estimate for a kernel of `flops` FLOPs moving `bytes`
+/// bytes on `machine` with `threads` threads, plus `efficiency` derating
+/// of peak compute (compilers rarely reach 100% of peak).
+pub fn roofline_time_s(
+    flops: u64,
+    bytes: u64,
+    machine: &MachineSpec,
+    threads: usize,
+    dtype_bytes: usize,
+    efficiency: f64,
+) -> f64 {
+    let peak = machine.peak_flops(threads, dtype_bytes) * efficiency.clamp(0.01, 1.0);
+    let bw = machine.dram_bw(threads);
+    let t_comp = flops as f64 / peak;
+    let t_mem = bytes as f64 / bw;
+    t_comp.max(t_mem)
+}
+
+/// Roofline weight of a single e-node. Packed (blocked-layout) compute
+/// ops run at higher efficiency — the tensor-unit saturation the paper's
+/// MetaPackOperation trades against layout-conversion cost. Pack/Unpack
+/// and Transpose are pure bandwidth.
+pub fn enode_cost(
+    op: &Op,
+    ins: &[&TensorType],
+    out: &TensorType,
+    machine: &MachineSpec,
+) -> RooflineCost {
+    let flops = op_flops(op, ins, out);
+    let bytes = op_bytes(op, ins, out);
+    let dtype_bytes = out.dtype.size_bytes();
+    // Efficiency model: blocked layouts keep the FMA pipes fed
+    // (GotoBLAS-style packing); flat matmuls thrash associativity.
+    let efficiency = match op {
+        Op::MatMul if out.is_packed() => 0.85,
+        Op::MatMul => 0.35,
+        Op::Unary(_) | Op::Binary(_) if out.is_packed() => 0.80,
+        Op::Unary(_) | Op::Binary(_) => 0.60,
+        _ => 0.50,
+    };
+    let secs = roofline_time_s(flops, bytes, machine, 1, dtype_bytes, efficiency);
+    RooflineCost { ns: (secs * 1e9).ceil() as u64 + 1, flops, bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DType;
+
+    fn t(dims: &[usize]) -> TensorType {
+        TensorType::of(dims, DType::F32)
+    }
+
+    #[test]
+    fn compute_vs_memory_bound() {
+        let m = MachineSpec::ryzen_5900x();
+        // Huge FLOPs, no bytes -> compute bound.
+        let t1 = roofline_time_s(1_000_000_000, 0, &m, 1, 4, 1.0);
+        assert!((t1 - 1e9 / 144e9).abs() < 1e-6);
+        // No FLOPs, lots of bytes -> memory bound.
+        let t2 = roofline_time_s(0, 24_000_000_000, &m, 1, 4, 1.0);
+        assert!((t2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn packed_matmul_cheaper_than_flat() {
+        let m = MachineSpec::ryzen_5900x();
+        let a = t(&[512, 512]);
+        let b = t(&[512, 512]);
+        let flat = enode_cost(&Op::MatMul, &[&a, &b], &t(&[512, 512]), &m);
+
+        let mut pa = t(&[32, 32]);
+        pa.lanes = vec![16, 16];
+        pa.pack_axes = vec![0, 1];
+        let pb = pa.clone();
+        let pout = pa.clone();
+        let packed = enode_cost(&Op::MatMul, &[&pa, &pb], &pout, &m);
+        assert!(
+            packed.ns < flat.ns,
+            "packed {} should beat flat {}",
+            packed.ns,
+            flat.ns
+        );
+        assert_eq!(packed.flops, flat.flops);
+    }
+
+    #[test]
+    fn threads_reduce_time_until_bw_wall() {
+        let m = MachineSpec::ryzen_5900x();
+        let t1 = roofline_time_s(0, 1_000_000_000, &m, 1, 4, 1.0);
+        let t2 = roofline_time_s(0, 1_000_000_000, &m, 2, 4, 1.0);
+        let t8 = roofline_time_s(0, 1_000_000_000, &m, 8, 4, 1.0);
+        assert!(t2 < t1);
+        // 2T..8T are all capped by the 42 GB/s socket limit.
+        assert_eq!(t2, t8);
+    }
+}

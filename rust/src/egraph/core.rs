@@ -1,0 +1,375 @@
+//! E-graph data structure: union-find, hash-consing, congruence closure.
+
+use std::collections::HashMap;
+
+use crate::ir::{infer_type, Graph, NodeId, Op, TensorType};
+
+/// Id of an e-class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClassId(pub u32);
+
+impl ClassId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// An e-node: an operation whose children are e-classes.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ENode {
+    pub op: Op,
+    pub children: Vec<ClassId>,
+}
+
+impl ENode {
+    pub fn leaf(op: Op) -> Self {
+        ENode { op, children: vec![] }
+    }
+}
+
+/// An e-class: a set of equivalent e-nodes sharing a [`TensorType`].
+///
+/// Equivalence is *semantic equality of the value including its layout
+/// and distribution attributes* — a packed tensor is a different value
+/// from its flat form (they are bridged by explicit Pack/Unpack nodes),
+/// and in the distributed e-graph "nodes with consistent SBP attributes
+/// are equivalent" (§3.1.3) because the SBP is part of the type.
+#[derive(Debug, Clone)]
+pub struct EClass {
+    pub nodes: Vec<ENode>,
+    pub ty: TensorType,
+    /// Parent e-nodes (and the class they live in) for congruence repair.
+    pub(crate) parents: Vec<(ENode, ClassId)>,
+}
+
+/// The e-graph.
+#[derive(Debug, Clone, Default)]
+pub struct EGraph {
+    uf: Vec<u32>,
+    classes: HashMap<ClassId, EClass>,
+    memo: HashMap<ENode, ClassId>,
+    dirty: Vec<ClassId>,
+    /// Total number of e-nodes ever added (growth metric for saturation).
+    pub n_nodes: usize,
+}
+
+impl EGraph {
+    pub fn new() -> Self {
+        EGraph::default()
+    }
+
+    /// Canonical representative of `id`.
+    pub fn find(&self, mut id: ClassId) -> ClassId {
+        while self.uf[id.index()] != id.0 {
+            id = ClassId(self.uf[id.index()]);
+        }
+        id
+    }
+
+    fn find_compress(&mut self, id: ClassId) -> ClassId {
+        let root = self.find(id);
+        let mut cur = id;
+        while self.uf[cur.index()] != root.0 {
+            let next = ClassId(self.uf[cur.index()]);
+            self.uf[cur.index()] = root.0;
+            cur = next;
+        }
+        root
+    }
+
+    pub fn canonicalize(&self, node: &ENode) -> ENode {
+        ENode {
+            op: node.op.clone(),
+            children: node.children.iter().map(|&c| self.find(c)).collect(),
+        }
+    }
+
+    /// Number of live e-classes.
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn class(&self, id: ClassId) -> &EClass {
+        &self.classes[&self.find(id)]
+    }
+
+    pub fn classes(&self) -> impl Iterator<Item = (ClassId, &EClass)> {
+        self.classes.iter().map(|(&id, c)| (id, c))
+    }
+
+    /// Infer the type an enode would have, from its children's types.
+    pub fn node_type(&self, node: &ENode) -> Result<TensorType, crate::ir::InferError> {
+        let tys: Vec<TensorType> = node.children.iter().map(|&c| self.class(c).ty.clone()).collect();
+        let refs: Vec<&TensorType> = tys.iter().collect();
+        infer_type(&node.op, &refs)
+    }
+
+    /// Add an e-node (children must already be canonical or will be
+    /// canonicalized). Returns the e-class containing it.
+    pub fn add(&mut self, node: ENode) -> ClassId {
+        let node = self.canonicalize(&node);
+        if let Some(&id) = self.memo.get(&node) {
+            return self.find(id);
+        }
+        let ty = match &node.op {
+            Op::Input(_) | Op::Const(_) => {
+                panic!("leaf Input/Const must be added with add_leaf(ty)")
+            }
+            _ => self.node_type(&node).expect("egraph add: type inference failed"),
+        };
+        self.add_with_type(node, ty)
+    }
+
+    /// Add a leaf (Input/Const) with an explicit type.
+    pub fn add_leaf(&mut self, op: Op, ty: TensorType) -> ClassId {
+        let node = ENode::leaf(op);
+        if let Some(&id) = self.memo.get(&node) {
+            return self.find(id);
+        }
+        self.add_with_type(node, ty)
+    }
+
+    pub(crate) fn add_with_type(&mut self, node: ENode, ty: TensorType) -> ClassId {
+        let node = self.canonicalize(&node);
+        if let Some(&id) = self.memo.get(&node) {
+            return self.find(id);
+        }
+        self.add_with_type_unchecked(node, ty)
+    }
+
+    fn add_with_type_unchecked(&mut self, node: ENode, ty: TensorType) -> ClassId {
+        let id = ClassId(self.uf.len() as u32);
+        self.uf.push(id.0);
+        for &c in &node.children {
+            let c = self.find(c);
+            self.classes.get_mut(&c).unwrap().parents.push((node.clone(), id));
+        }
+        self.classes.insert(id, EClass { nodes: vec![node.clone()], ty, parents: vec![] });
+        self.memo.insert(node, id);
+        self.n_nodes += 1;
+        id
+    }
+
+    /// Merge two e-classes. Their types must agree (same value semantics).
+    /// Returns the surviving root.
+    pub fn union(&mut self, a: ClassId, b: ClassId) -> ClassId {
+        let (ra, rb) = (self.find_compress(a), self.find_compress(b));
+        if ra == rb {
+            return ra;
+        }
+        let (ta, tb) = (&self.classes[&ra].ty, &self.classes[&rb].ty);
+        debug_assert_eq!(
+            (&ta.shape, ta.dtype, &ta.lanes, &ta.sbp),
+            (&tb.shape, tb.dtype, &tb.lanes, &tb.sbp),
+            "union of e-classes with different types"
+        );
+        // Merge smaller into larger.
+        let (root, child) = if self.classes[&ra].nodes.len() >= self.classes[&rb].nodes.len() {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.uf[child.index()] = root.0;
+        let mut removed = self.classes.remove(&child).unwrap();
+        let rc = self.classes.get_mut(&root).unwrap();
+        rc.nodes.append(&mut removed.nodes);
+        rc.parents.append(&mut removed.parents);
+        self.dirty.push(root);
+        root
+    }
+
+    /// Restore congruence invariants after unions (egg-style rebuild).
+    pub fn rebuild(&mut self) {
+        while let Some(dirty) = self.dirty.pop() {
+            let dirty = self.find(dirty);
+            let parents = match self.classes.get_mut(&dirty) {
+                Some(c) => std::mem::take(&mut c.parents),
+                None => continue,
+            };
+            let mut new_parents: Vec<(ENode, ClassId)> = Vec::with_capacity(parents.len());
+            for (pnode, pclass) in parents {
+                let canon = self.canonicalize(&pnode);
+                self.memo.remove(&pnode);
+                let pclass = self.find(pclass);
+                if let Some(&existing) = self.memo.get(&canon) {
+                    let existing = self.find(existing);
+                    if existing != pclass {
+                        self.union(existing, pclass);
+                    }
+                } else {
+                    self.memo.insert(canon.clone(), pclass);
+                }
+                new_parents.push((canon, self.find(pclass)));
+            }
+            let dirty = self.find(dirty);
+            // Also canonicalize + dedup the class's own nodes.
+            if let Some(c) = self.classes.get_mut(&dirty) {
+                c.parents.extend(new_parents);
+            }
+        }
+        // Canonicalize node lists (cheap full sweep; graphs here are small).
+        let ids: Vec<ClassId> = self.classes.keys().copied().collect();
+        for id in ids {
+            if let Some(mut c) = self.classes.remove(&id) {
+                let mut seen = std::collections::HashSet::new();
+                c.nodes = c
+                    .nodes
+                    .drain(..)
+                    .map(|n| self.canonicalize(&n))
+                    .filter(|n| seen.insert(n.clone()))
+                    .collect();
+                self.classes.insert(id, c);
+            }
+        }
+    }
+
+    /// Import an IR [`Graph`]; returns the e-class of each graph node.
+    pub fn from_graph(g: &Graph) -> (EGraph, Vec<ClassId>) {
+        let mut eg = EGraph::new();
+        let mut map: Vec<ClassId> = Vec::with_capacity(g.len());
+        for node in &g.nodes {
+            let id = if node.op.is_leaf() {
+                eg.add_leaf(node.op.clone(), node.ty.clone())
+            } else {
+                let children = node.inputs.iter().map(|&i| map[i.index()]).collect();
+                eg.add(ENode { op: node.op.clone(), children })
+            };
+            map.push(id);
+        }
+        (eg, map)
+    }
+
+    /// Reconstruct a [`Graph`] from a per-class node choice (used by the
+    /// extractors). `choice` maps canonical class -> index into its nodes.
+    pub fn to_graph(
+        &self,
+        roots: &[ClassId],
+        choice: &HashMap<ClassId, ENode>,
+    ) -> Result<(Graph, Vec<NodeId>), String> {
+        let mut g = Graph::new();
+        let mut memo: HashMap<ClassId, NodeId> = HashMap::new();
+        let mut visiting: std::collections::HashSet<ClassId> = Default::default();
+        let mut out_roots = Vec::new();
+        for &r in roots {
+            let id = self.emit(self.find(r), choice, &mut g, &mut memo, &mut visiting)?;
+            g.mark_output(id);
+            out_roots.push(id);
+        }
+        Ok((g, out_roots))
+    }
+
+    fn emit(
+        &self,
+        class: ClassId,
+        choice: &HashMap<ClassId, ENode>,
+        g: &mut Graph,
+        memo: &mut HashMap<ClassId, NodeId>,
+        visiting: &mut std::collections::HashSet<ClassId>,
+    ) -> Result<NodeId, String> {
+        let class = self.find(class);
+        if let Some(&id) = memo.get(&class) {
+            return Ok(id);
+        }
+        if !visiting.insert(class) {
+            return Err(format!("cycle through e-class {}", class.0));
+        }
+        let node = choice.get(&class).ok_or_else(|| format!("no choice for class {}", class.0))?;
+        let mut inputs = Vec::with_capacity(node.children.len());
+        for &c in &node.children {
+            inputs.push(self.emit(c, choice, g, memo, visiting)?);
+        }
+        visiting.remove(&class);
+        let id = if node.op.is_leaf() {
+            match &node.op {
+                Op::Input(name) => {
+                    let ty = &self.class(class).ty;
+                    g.input(name, ty.shape.dims(), ty.dtype)
+                }
+                Op::Const(name) => {
+                    let ty = &self.class(class).ty;
+                    g.constant(name, ty.shape.dims(), ty.dtype)
+                }
+                _ => g.add(node.op.clone(), &[]),
+            }
+        } else {
+            g.try_add(node.op.clone(), &inputs).map_err(|e| e.to_string())?
+        };
+        memo.insert(class, id);
+        Ok(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{BinaryKind, DType, Graph, UnaryKind};
+
+    #[test]
+    fn hash_consing() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[2, 2], DType::F32);
+        let e1 = g.unary(UnaryKind::Exp, a);
+        g.mark_output(e1);
+        let (mut eg, map) = EGraph::from_graph(&g);
+        // Adding the same node again lands in the same class.
+        let again = eg.add(ENode {
+            op: crate::ir::Op::Unary(UnaryKind::Exp),
+            children: vec![map[a.index()]],
+        });
+        assert_eq!(eg.find(again), eg.find(map[e1.index()]));
+    }
+
+    #[test]
+    fn union_merges_and_congruence_closes() {
+        // f(a), f(b): union(a, b) must make f(a) ~ f(b) after rebuild.
+        let mut eg = EGraph::new();
+        let ta = crate::ir::TensorType::of(&[4], DType::F32);
+        let a = eg.add_leaf(crate::ir::Op::Input("a".into()), ta.clone());
+        let b = eg.add_leaf(crate::ir::Op::Input("b".into()), ta.clone());
+        let fa = eg.add(ENode { op: crate::ir::Op::Unary(UnaryKind::Exp), children: vec![a] });
+        let fb = eg.add(ENode { op: crate::ir::Op::Unary(UnaryKind::Exp), children: vec![b] });
+        assert_ne!(eg.find(fa), eg.find(fb));
+        eg.union(a, b);
+        eg.rebuild();
+        assert_eq!(eg.find(fa), eg.find(fb), "congruence closure must merge f(a) and f(b)");
+    }
+
+    #[test]
+    fn roundtrip_graph() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[2, 3], DType::F32);
+        let b = g.input("b", &[3, 4], DType::F32);
+        let m = g.matmul(a, b);
+        let e = g.unary(UnaryKind::Exp, m);
+        let s = g.binary(BinaryKind::Add, e, e);
+        g.mark_output(s);
+
+        let (eg, map) = EGraph::from_graph(&g);
+        // Choice: pick the single node of each class.
+        let mut choice = HashMap::new();
+        for (id, c) in eg.classes() {
+            choice.insert(eg.find(id), c.nodes[0].clone());
+        }
+        let (g2, roots) = eg.to_graph(&[map[s.index()]], &choice).unwrap();
+        assert_eq!(roots.len(), 1);
+        assert_eq!(g2.node(roots[0]).ty.shape.dims(), &[2, 4]);
+        // Same number of live ops.
+        assert_eq!(g2.live_nodes().len(), g.live_nodes().len());
+    }
+
+    #[test]
+    #[should_panic(expected = "different types")]
+    #[cfg(debug_assertions)] // the check is a debug_assert (hot path)
+    fn union_type_mismatch_panics() {
+        let mut eg = EGraph::new();
+        let a = eg.add_leaf(
+            crate::ir::Op::Input("a".into()),
+            crate::ir::TensorType::of(&[4], DType::F32),
+        );
+        let b = eg.add_leaf(
+            crate::ir::Op::Input("b".into()),
+            crate::ir::TensorType::of(&[5], DType::F32),
+        );
+        eg.union(a, b);
+    }
+}

@@ -1,0 +1,345 @@
+//! Extraction: pick one e-node per needed e-class minimizing total cost.
+//!
+//! * [`extract_greedy`] — bottom-up fixed point. Optimal for tree costs,
+//!   may overcount shared subterms.
+//! * [`extract_wpmaxsat`] — the paper's formulation (§3.1.1): selection
+//!   variables per e-node, well-formedness as hard clauses, per-node
+//!   Roofline weights as soft clauses, solved by our WPMaxSAT solver with
+//!   *lazy acyclicity constraints* (solve → detect cycle → forbid →
+//!   re-solve), following He et al.'s acyclic-extraction observation.
+
+use std::collections::HashMap;
+
+use super::{ClassId, EGraph, ENode};
+use crate::ir::{Graph, NodeId, TensorType};
+use crate::sat::{Lit, WpmsSolver};
+
+/// Cost function over e-nodes: (node, children-types, own-type) -> weight.
+pub type CostFn<'a> = dyn Fn(&ENode, &[&TensorType], &TensorType) -> u64 + 'a;
+
+/// Result of extraction.
+pub struct Extraction {
+    pub graph: Graph,
+    pub roots: Vec<NodeId>,
+    /// Total cost of the selected nodes (each shared node counted once
+    /// for the SAT extractor; greedy reports the DAG-aware recount too).
+    pub cost: u64,
+}
+
+fn node_cost(eg: &EGraph, node: &ENode, cost: &CostFn) -> u64 {
+    let tys: Vec<TensorType> = node.children.iter().map(|&c| eg.class(c).ty.clone()).collect();
+    let refs: Vec<&TensorType> = tys.iter().collect();
+    // Output type: the class type of the node's own class is what the
+    // extractor uses; for cost purposes infer from the node itself when
+    // possible, falling back to the first child's type for leaves.
+    let out = eg
+        .node_type(node)
+        .unwrap_or_else(|_| tys.first().cloned().unwrap_or(TensorType::of(&[], crate::ir::DType::F32)));
+    cost(node, &refs, &out)
+}
+
+/// Greedy bottom-up extraction.
+pub fn extract_greedy(eg: &EGraph, roots: &[ClassId], cost: &CostFn) -> Extraction {
+    // Fixed point: best[class] = min over nodes of (cost + sum best[child]).
+    let mut best: HashMap<ClassId, (u64, ENode)> = HashMap::new();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for (id, class) in eg.classes() {
+            let id = eg.find(id);
+            for node in &class.nodes {
+                let mut total = node_cost(eg, node, cost) as u128;
+                let mut ok = true;
+                for &c in &node.children {
+                    match best.get(&eg.find(c)) {
+                        Some((bc, _)) => total += *bc as u128,
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !ok {
+                    continue;
+                }
+                let total = total.min(u64::MAX as u128) as u64;
+                let better = best.get(&id).map(|(b, _)| total < *b).unwrap_or(true);
+                if better {
+                    best.insert(id, (total, node.clone()));
+                    changed = true;
+                }
+            }
+        }
+    }
+    let choice: HashMap<ClassId, ENode> =
+        best.iter().map(|(&id, (_, n))| (id, n.clone())).collect();
+    let (graph, out_roots) =
+        eg.to_graph(roots, &choice).expect("greedy extraction produced a cycle");
+    // DAG-aware recount: each selected class counted once.
+    let mut counted: u64 = 0;
+    let mut seen = std::collections::HashSet::new();
+    let mut stack: Vec<ClassId> = roots.iter().map(|&r| eg.find(r)).collect();
+    while let Some(c) = stack.pop() {
+        if !seen.insert(c) {
+            continue;
+        }
+        if let Some((_, n)) = best.get(&c) {
+            counted += node_cost(eg, n, cost);
+            stack.extend(n.children.iter().map(|&ch| eg.find(ch)));
+        }
+    }
+    Extraction { graph, roots: out_roots, cost: counted }
+}
+
+/// WPMaxSAT extraction with lazy acyclicity. Falls back to greedy if the
+/// MaxSAT solve fails (should not happen on well-formed e-graphs) or if
+/// the instance exceeds the practical SAT size budget.
+pub fn extract_wpmaxsat(eg: &EGraph, roots: &[ClassId], cost: &CostFn) -> Extraction {
+    if eg.n_nodes > 1200 {
+        return extract_greedy(eg, roots, cost);
+    }
+    // Enumerate canonical classes and their nodes.
+    let mut class_ids: Vec<ClassId> = eg.classes().map(|(id, _)| eg.find(id)).collect();
+    class_ids.sort();
+    class_ids.dedup();
+    let class_index: HashMap<ClassId, usize> =
+        class_ids.iter().enumerate().map(|(i, &c)| (c, i)).collect();
+
+    // Node list per class with costs.
+    struct NodeVar {
+        class: ClassId,
+        node: ENode,
+        cost: u64,
+    }
+    let mut node_vars: Vec<NodeVar> = Vec::new();
+    let mut class_nodes: Vec<Vec<usize>> = vec![Vec::new(); class_ids.len()];
+    for &cid in &class_ids {
+        for node in &eg.class(cid).nodes {
+            let idx = node_vars.len();
+            node_vars.push(NodeVar { class: cid, node: node.clone(), cost: node_cost(eg, node, cost) });
+            class_nodes[class_index[&cid]].push(idx);
+        }
+    }
+
+    // Variables: x_i per node, y_c per class. Layout: nodes then classes.
+    let n_nodes = node_vars.len();
+    let var_node = |i: usize| i as u32;
+    let var_class = |c: usize| (n_nodes + c) as u32;
+
+    let mut banned_combos: Vec<Vec<usize>> = Vec::new(); // lazy cycle cuts
+    for _attempt in 0..24 {
+        let mut w = WpmsSolver::new();
+        w.ensure_vars((n_nodes + class_ids.len()) as u32);
+        // Roots must be selected.
+        for &r in roots {
+            let r = eg.find(r);
+            w.add_hard(&[Lit::pos(var_class(class_index[&r]))]);
+        }
+        // y_c -> OR x_i.
+        for (ci, nodes) in class_nodes.iter().enumerate() {
+            let mut cl: Vec<Lit> = vec![Lit::neg(var_class(ci))];
+            cl.extend(nodes.iter().map(|&i| Lit::pos(var_node(i))));
+            w.add_hard(&cl);
+        }
+        // x_i -> y_{class(i)} and x_i -> y_child for each child.
+        for (i, nv) in node_vars.iter().enumerate() {
+            w.add_hard(&[Lit::neg(var_node(i)), Lit::pos(var_class(class_index[&nv.class]))]);
+            for &c in &nv.node.children {
+                let c = eg.find(c);
+                w.add_hard(&[Lit::neg(var_node(i)), Lit::pos(var_class(class_index[&c]))]);
+            }
+        }
+        // Lazy cycle cuts: at least one node of the cycle must be off.
+        for combo in &banned_combos {
+            let cl: Vec<Lit> = combo.iter().map(|&i| Lit::neg(var_node(i))).collect();
+            w.add_hard(&cl);
+        }
+        // Soft: not selecting node i is free; selecting costs its weight.
+        for (i, nv) in node_vars.iter().enumerate() {
+            w.add_soft(&[Lit::neg(var_node(i))], nv.cost.max(1));
+        }
+
+        let Some(res) = w.solve() else {
+            break; // fall through to greedy
+        };
+
+        // Build per-class choice: cheapest selected node.
+        let mut choice: HashMap<ClassId, (u64, usize)> = HashMap::new();
+        for (i, nv) in node_vars.iter().enumerate() {
+            if res.model[i] {
+                let e = choice.entry(nv.class).or_insert((nv.cost, i));
+                if nv.cost < e.0 {
+                    *e = (nv.cost, i);
+                }
+            }
+        }
+        // Cycle check via iterative colored DFS from roots over the
+        // chosen nodes.
+        let mut state: HashMap<ClassId, u8> = HashMap::new(); // 1=visiting 2=done
+        let mut cycle: Option<Vec<usize>> = None;
+        for &r in roots {
+            if cycle.is_some() {
+                break;
+            }
+            // Stack entries: (class, entered?).
+            let mut stack: Vec<(ClassId, bool)> = vec![(eg.find(r), false)];
+            let mut path: Vec<usize> = Vec::new();
+            while let Some((c, entered)) = stack.pop() {
+                if entered {
+                    state.insert(c, 2);
+                    path.pop();
+                    continue;
+                }
+                match state.get(&c) {
+                    Some(2) => continue,
+                    Some(1) => {
+                        cycle = Some(path.clone());
+                        break;
+                    }
+                    _ => {}
+                }
+                state.insert(c, 1);
+                stack.push((c, true));
+                if let Some(&(_, i)) = choice.get(&c) {
+                    path.push(i);
+                    for &ch in &node_vars[i].node.children {
+                        stack.push((eg.find(ch), false));
+                    }
+                } else {
+                    path.push(usize::MAX); // placeholder so pops balance
+                }
+            }
+        }
+        if let Some(c) = &mut cycle {
+            c.retain(|&i| i != usize::MAX);
+        }
+        match cycle {
+            Some(combo) if !combo.is_empty() => {
+                banned_combos.push(combo);
+                continue;
+            }
+            _ => {
+                let choice_nodes: HashMap<ClassId, ENode> = choice
+                    .iter()
+                    .map(|(&c, &(_, i))| (c, node_vars[i].node.clone()))
+                    .collect();
+                if let Ok((graph, out_roots)) = eg.to_graph(roots, &choice_nodes) {
+                    // Count cost of reachable selected nodes only.
+                    let mut total = 0u64;
+                    let mut seen = std::collections::HashSet::new();
+                    let mut stack: Vec<ClassId> = roots.iter().map(|&r| eg.find(r)).collect();
+                    while let Some(c) = stack.pop() {
+                        if !seen.insert(c) {
+                            continue;
+                        }
+                        if let Some(&(cost_i, i)) = choice.get(&c) {
+                            total += cost_i;
+                            stack.extend(node_vars[i].node.children.iter().map(|&ch| eg.find(ch)));
+                        }
+                    }
+                    return Extraction { graph, roots: out_roots, cost: total };
+                }
+            }
+        }
+    }
+    extract_greedy(eg, roots, cost)
+}
+
+/// Default cost: Roofline weight per node on `machine` (§3.1.1).
+pub fn roofline_cost_fn(machine: &crate::cost::MachineSpec) -> impl Fn(&ENode, &[&TensorType], &TensorType) -> u64 + '_ {
+    move |node, ins, out| crate::cost::enode_cost(&node.op, ins, out, machine).ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::Tree;
+    use crate::ir::{DType, Graph, Op, UnaryKind};
+
+    fn unit_cost(node: &ENode, _ins: &[&TensorType], _out: &TensorType) -> u64 {
+        if node.op.is_leaf() {
+            1
+        } else {
+            10
+        }
+    }
+
+    #[test]
+    fn greedy_picks_cheaper_variant() {
+        // Class with two equivalent nodes: exp(a) and an artificially
+        // cheap alias (neg(a) unioned in by hand with a cost override).
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let e = g.unary(UnaryKind::Exp, a);
+        g.mark_output(e);
+        let (mut eg, map) = EGraph::from_graph(&g);
+        let neg = Tree::node(Op::Unary(UnaryKind::Neg), vec![Tree::class(map[a.index()])])
+            .add_to(&mut eg);
+        eg.union(map[e.index()], neg);
+        eg.rebuild();
+        let cost = |n: &ENode, _: &[&TensorType], _: &TensorType| -> u64 {
+            match n.op {
+                Op::Unary(UnaryKind::Neg) => 2,
+                Op::Unary(UnaryKind::Exp) => 50,
+                _ => 1,
+            }
+        };
+        let ex = extract_greedy(&eg, &[map[e.index()]], &cost);
+        let has_neg = ex.graph.nodes.iter().any(|n| matches!(n.op, Op::Unary(UnaryKind::Neg)));
+        assert!(has_neg, "greedy must pick the cheap variant");
+    }
+
+    #[test]
+    fn wpmaxsat_matches_greedy_on_tree() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[8], DType::F32);
+        let e = g.unary(UnaryKind::Exp, a);
+        let n = g.unary(UnaryKind::Neg, e);
+        g.mark_output(n);
+        let (eg, map) = EGraph::from_graph(&g);
+        let ge = extract_greedy(&eg, &[map[n.index()]], &unit_cost);
+        let se = extract_wpmaxsat(&eg, &[map[n.index()]], &unit_cost);
+        assert_eq!(ge.cost, se.cost);
+        assert_eq!(ge.graph.live_nodes().len(), se.graph.live_nodes().len());
+    }
+
+    #[test]
+    fn wpmaxsat_beats_greedy_on_shared_subterm() {
+        // Two roots sharing an expensive subterm. The greedy *tree* cost
+        // double-counts the shared node when comparing variants; the SAT
+        // extractor optimizes the true DAG cost. Construct a class where
+        // variant A is locally cheap but blocks sharing, variant B is
+        // shared by both roots.
+        let mut g = Graph::new();
+        let a = g.input("a", &[64, 64], DType::F32);
+        // Shared expensive node exp(a).
+        let e = g.unary(UnaryKind::Exp, a);
+        let r1 = g.unary(UnaryKind::Neg, e);
+        let r2 = g.unary(UnaryKind::Sqrt, e);
+        g.mark_output(r1);
+        g.mark_output(r2);
+        let (mut eg, map) = EGraph::from_graph(&g);
+        // Alternative for r1: abs(a) (avoids exp but costs 55 alone).
+        let alt = Tree::node(Op::Unary(UnaryKind::Abs), vec![Tree::class(map[a.index()])])
+            .add_to(&mut eg);
+        eg.union(map[r1.index()], alt);
+        eg.rebuild();
+        let cost = |n: &ENode, _: &[&TensorType], _: &TensorType| -> u64 {
+            match n.op {
+                Op::Unary(UnaryKind::Exp) => 50,
+                Op::Unary(UnaryKind::Abs) => 55,
+                Op::Unary(UnaryKind::Neg) => 1,
+                Op::Unary(UnaryKind::Sqrt) => 1,
+                _ => 1,
+            }
+        };
+        let roots = [map[r1.index()], map[r2.index()]];
+        let se = extract_wpmaxsat(&eg, &roots, &cost);
+        // exp is shared: neg(exp(a)) + sqrt(exp(a)) = 50+1+1+leaf, while
+        // abs path = 55+1(sqrt)+50(exp still needed for r2)+leaf.
+        // Optimal total: 1 (leaf) + 50 + 1 + 1 = 53.
+        assert_eq!(se.cost, 53, "SAT extraction must share the exp node");
+        let has_abs = se.graph.nodes.iter().any(|n| matches!(n.op, Op::Unary(UnaryKind::Abs)));
+        assert!(!has_abs);
+    }
+}

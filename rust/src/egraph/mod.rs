@@ -1,0 +1,24 @@
+//! E-graph with equality saturation (§3.1.1).
+//!
+//! The e-graph stores *e-classes* (equivalence classes of values) whose
+//! members are *e-nodes* (operations over child e-classes). Instead of
+//! destructively rewriting the IR — which suffers from the phase-ordering
+//! problem of Fig. 2 — saturation applies every rule everywhere,
+//! accumulating all equivalent program versions, and a cost-based
+//! extraction picks the best one afterwards.
+//!
+//! Two extractors are provided:
+//! * [`extract::extract_greedy`] — bottom-up fixed point, fast, optimal
+//!   when costs are local (used inside the saturation loop and for
+//!   baselines).
+//! * [`extract::extract_wpmaxsat`] — the paper's Weighted Partial MaxSAT
+//!   formulation with lazy acyclicity constraints, optimal for shared
+//!   sub-terms.
+
+mod core;
+mod extract;
+mod saturate;
+
+pub use self::core::{ClassId, EClass, ENode, EGraph};
+pub use extract::{extract_greedy, extract_wpmaxsat, roofline_cost_fn, CostFn, Extraction};
+pub use saturate::{Rewrite, Runner, RunnerLimits, RunnerReport, Subst, Tree};

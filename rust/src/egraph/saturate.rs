@@ -1,0 +1,239 @@
+//! Equality-saturation runner and the rewrite-rule interface.
+
+use std::collections::HashMap;
+
+use super::{ClassId, EGraph, ENode};
+use crate::ir::TensorType;
+
+/// A tree of new nodes a rewrite wants to add. Leaves may reference
+/// existing e-classes, so rules can splice into the graph.
+#[derive(Debug, Clone)]
+pub enum Tree {
+    /// A new node with child trees.
+    Node(crate::ir::Op, Vec<Tree>),
+    /// An existing e-class.
+    Class(ClassId),
+    /// A new leaf with an explicit type (Input/Const clones).
+    Leaf(crate::ir::Op, TensorType),
+}
+
+impl Tree {
+    pub fn class(id: ClassId) -> Tree {
+        Tree::Class(id)
+    }
+
+    pub fn node(op: crate::ir::Op, children: Vec<Tree>) -> Tree {
+        Tree::Node(op, children)
+    }
+
+    /// Add this tree to the e-graph, returning the root e-class.
+    pub fn add_to(&self, eg: &mut EGraph) -> ClassId {
+        match self {
+            Tree::Class(id) => eg.find(*id),
+            Tree::Leaf(op, ty) => eg.add_leaf(op.clone(), ty.clone()),
+            Tree::Node(op, children) => {
+                let ch: Vec<ClassId> = children.iter().map(|t| t.add_to(eg)).collect();
+                eg.add(ENode { op: op.clone(), children: ch })
+            }
+        }
+    }
+}
+
+/// Variable bindings produced by a match (kept for debugging/reporting).
+pub type Subst = HashMap<&'static str, ClassId>;
+
+/// A rewrite rule. `matches` inspects one e-node and returns equivalent
+/// trees to union with the node's class. Rules never mutate the e-graph
+/// while matching — saturation applies all matches afterwards, which is
+/// exactly what makes the engine non-destructive (Observation 1).
+pub trait Rewrite {
+    fn name(&self) -> &'static str;
+
+    /// Return equivalent trees for `node` (member of `class`).
+    fn matches(&self, eg: &EGraph, class: ClassId, node: &ENode) -> Vec<Tree>;
+}
+
+/// Saturation limits.
+#[derive(Debug, Clone, Copy)]
+pub struct RunnerLimits {
+    pub max_iters: usize,
+    pub max_nodes: usize,
+}
+
+impl Default for RunnerLimits {
+    fn default() -> Self {
+        RunnerLimits { max_iters: 12, max_nodes: 50_000 }
+    }
+}
+
+/// Report of one saturation run.
+#[derive(Debug, Clone, Default)]
+pub struct RunnerReport {
+    pub iterations: usize,
+    pub saturated: bool,
+    pub nodes: usize,
+    pub classes: usize,
+    /// Applications per rule name.
+    pub applications: HashMap<&'static str, usize>,
+}
+
+/// The equality-saturation driver: repeatedly match all rules against all
+/// (class, node) pairs, apply the produced unions, rebuild, and stop at a
+/// fixed point or when limits are hit.
+pub struct Runner<'a> {
+    pub egraph: &'a mut EGraph,
+    pub limits: RunnerLimits,
+}
+
+impl<'a> Runner<'a> {
+    pub fn new(egraph: &'a mut EGraph) -> Self {
+        Runner { egraph, limits: RunnerLimits::default() }
+    }
+
+    pub fn with_limits(mut self, limits: RunnerLimits) -> Self {
+        self.limits = limits;
+        self
+    }
+
+    pub fn run(self, rules: &[&dyn Rewrite]) -> RunnerReport {
+        let mut report = RunnerReport::default();
+        for iter in 0..self.limits.max_iters {
+            report.iterations = iter + 1;
+            // Match phase: collect (class, tree, rule) triples.
+            let mut pending: Vec<(ClassId, Tree, &'static str)> = Vec::new();
+            let snapshot: Vec<(ClassId, Vec<ENode>)> = self
+                .egraph
+                .classes()
+                .map(|(id, c)| (id, c.nodes.clone()))
+                .collect();
+            for (class, nodes) in &snapshot {
+                for node in nodes {
+                    for rule in rules {
+                        for tree in rule.matches(self.egraph, *class, node) {
+                            pending.push((*class, tree, rule.name()));
+                        }
+                    }
+                }
+            }
+            // Apply phase.
+            let before_nodes = self.egraph.n_nodes;
+            let mut changed = false;
+            for (class, tree, rule_name) in pending {
+                let new_root = tree.add_to(self.egraph);
+                let class = self.egraph.find(class);
+                if self.egraph.find(new_root) != class {
+                    self.egraph.union(class, new_root);
+                    changed = true;
+                    *report.applications.entry(rule_name).or_default() += 1;
+                }
+                if self.egraph.n_nodes > self.limits.max_nodes {
+                    break;
+                }
+            }
+            self.egraph.rebuild();
+            let grew = self.egraph.n_nodes > before_nodes;
+            if !changed && !grew {
+                report.saturated = true;
+                break;
+            }
+            if self.egraph.n_nodes > self.limits.max_nodes {
+                break;
+            }
+        }
+        report.nodes = self.egraph.n_nodes;
+        report.classes = self.egraph.num_classes();
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, Graph, Op, UnaryKind};
+
+    /// Toy rule: exp(x) also equals exp(x) wrapped in two negs (saturates
+    /// after one application thanks to hash-consing).
+    struct DoubleNeg;
+
+    impl Rewrite for DoubleNeg {
+        fn name(&self) -> &'static str {
+            "double-neg"
+        }
+
+        fn matches(&self, _eg: &EGraph, _class: ClassId, node: &ENode) -> Vec<Tree> {
+            if let Op::Unary(UnaryKind::Exp) = node.op {
+                vec![Tree::node(
+                    Op::Unary(UnaryKind::Neg),
+                    vec![Tree::node(
+                        Op::Unary(UnaryKind::Neg),
+                        vec![Tree::node(
+                            Op::Unary(UnaryKind::Exp),
+                            vec![Tree::class(node.children[0])],
+                        )],
+                    )],
+                )]
+            } else {
+                vec![]
+            }
+        }
+    }
+
+    #[test]
+    fn saturates_and_reports() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let e = g.unary(UnaryKind::Exp, a);
+        g.mark_output(e);
+        let (mut eg, _) = EGraph::from_graph(&g);
+        let report = Runner::new(&mut eg).run(&[&DoubleNeg]);
+        assert!(report.saturated, "tiny rule set must saturate");
+        assert!(report.applications["double-neg"] >= 1);
+        assert!(report.nodes >= 3);
+    }
+
+    #[test]
+    fn iter_limit_stops_before_saturation() {
+        // Transpose rules on the Fig. 2 graph need several iterations to
+        // saturate; max_iters = 1 must stop early and report !saturated.
+        use crate::ir::BinaryKind;
+        let mut g = Graph::new();
+        let a = g.input("A", &[8, 8], DType::F32);
+        let b = g.input("B", &[8, 8], DType::F32);
+        let ta = g.transpose(a, &[1, 0]);
+        let tb = g.transpose(b, &[1, 0]);
+        let ub = g.unary(UnaryKind::Exp, tb);
+        let sum = g.binary(BinaryKind::Add, ta, ub);
+        let out = g.transpose(sum, &[1, 0]);
+        g.mark_output(out);
+        let (mut eg, _) = EGraph::from_graph(&g);
+        let rules = crate::rewrite::transpose_rules();
+        let refs: Vec<&dyn Rewrite> = rules.iter().map(|r| r.as_ref()).collect();
+        let report = Runner::new(&mut eg)
+            .with_limits(RunnerLimits { max_iters: 1, max_nodes: 100_000 })
+            .run(&refs);
+        assert_eq!(report.iterations, 1);
+        assert!(!report.saturated, "one iteration cannot reach the fixed point");
+    }
+
+    #[test]
+    fn node_limit_bounds_growth() {
+        // With a tiny node budget the runner must stop promptly even
+        // though the rule set would keep growing the graph.
+        use crate::ir::BinaryKind;
+        let mut g = Graph::new();
+        let a = g.input("A", &[8, 8], DType::F32);
+        let b = g.input("B", &[8, 8], DType::F32);
+        let ta = g.transpose(a, &[1, 0]);
+        let tb = g.transpose(b, &[1, 0]);
+        let ub = g.unary(UnaryKind::Exp, tb);
+        let sum = g.binary(BinaryKind::Add, ta, ub);
+        g.mark_output(sum);
+        let (mut eg, _) = EGraph::from_graph(&g);
+        let rules = crate::rewrite::transpose_rules();
+        let refs: Vec<&dyn Rewrite> = rules.iter().map(|r| r.as_ref()).collect();
+        let report = Runner::new(&mut eg)
+            .with_limits(RunnerLimits { max_iters: 50, max_nodes: 10 })
+            .run(&refs);
+        assert!(report.nodes <= 30, "node limit must bound growth, got {}", report.nodes);
+    }
+}

@@ -1,0 +1,88 @@
+//! Element datatypes.
+
+
+/// Element datatype of a tensor.
+///
+/// `F16`/`BF16` are carried symbolically through the compiler and the
+/// performance simulator (they halve memory traffic, the dominant term of
+/// LLM decode); the real NTT execution backend computes in `F32` and the
+/// PJRT backend executes whatever the artifact was lowered with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    BF16,
+    I32,
+    I8,
+    Bool,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 | DType::BF16 => 2,
+            DType::I8 | DType::Bool => 1,
+        }
+    }
+
+    /// True for floating-point types.
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F16 | DType::BF16)
+    }
+
+    /// Short lowercase name used in artifact manifests and NTT C++
+    /// emission (`float`, `half`, ...).
+    pub fn cpp_name(self) -> &'static str {
+        match self {
+            DType::F32 => "float",
+            DType::F16 => "half",
+            DType::BF16 => "bfloat16",
+            DType::I32 => "int32_t",
+            DType::I8 => "int8_t",
+            DType::Bool => "bool",
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::I32 => "i32",
+            DType::I8 => "i8",
+            DType::Bool => "bool",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::F16.size_bytes(), 2);
+        assert_eq!(DType::BF16.size_bytes(), 2);
+        assert_eq!(DType::I8.size_bytes(), 1);
+    }
+
+    #[test]
+    fn float_predicate() {
+        assert!(DType::F32.is_float());
+        assert!(DType::BF16.is_float());
+        assert!(!DType::I32.is_float());
+    }
+
+    #[test]
+    fn display_roundtrip_names() {
+        assert_eq!(DType::F32.to_string(), "f32");
+        assert_eq!(DType::F16.to_string(), "f16");
+        assert_eq!(DType::F32.cpp_name(), "float");
+    }
+}

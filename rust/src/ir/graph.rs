@@ -1,0 +1,243 @@
+//! The IR graph: a flat DAG of nodes with a builder API.
+
+use std::collections::HashMap;
+
+
+use super::{infer_type, DType, Op, Shape, TensorType};
+
+/// Index of a node inside a [`Graph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One IR node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    pub ty: TensorType,
+}
+
+/// A computation graph. Nodes are append-only and always stored in a
+/// valid topological order (inputs precede users).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<NodeId>,
+    /// De-duplication memo: identical (op, inputs) pairs share a node.
+    memo: HashMap<(Op, Vec<NodeId>), NodeId>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.index()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Add a node, de-duplicating structurally identical ones (hash-consing).
+    /// Panics if type inference fails — graph construction bugs are
+    /// programmer errors, not runtime conditions.
+    pub fn add(&mut self, op: Op, inputs: &[NodeId]) -> NodeId {
+        self.try_add(op, inputs).expect("type inference failed")
+    }
+
+    /// Fallible [`Graph::add`].
+    pub fn try_add(&mut self, op: Op, inputs: &[NodeId]) -> Result<NodeId, super::InferError> {
+        let key = (op.clone(), inputs.to_vec());
+        if let Some(&id) = self.memo.get(&key) {
+            return Ok(id);
+        }
+        let in_tys: Vec<&TensorType> = inputs.iter().map(|&i| &self.node(i).ty).collect();
+        let ty = infer_type(&op, &in_tys)?;
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node { op, inputs: inputs.to_vec(), ty });
+        self.memo.insert(key, id);
+        Ok(id)
+    }
+
+    /// Mark a node as a graph output.
+    pub fn mark_output(&mut self, id: NodeId) {
+        if !self.outputs.contains(&id) {
+            self.outputs.push(id);
+        }
+    }
+
+    // ---- convenience builders -------------------------------------------
+
+    pub fn input(&mut self, name: &str, dims: &[usize], dtype: DType) -> NodeId {
+        let mut n = Node {
+            op: Op::Input(name.to_string()),
+            inputs: vec![],
+            ty: TensorType::of(dims, dtype),
+        };
+        // Inputs with the same name must be distinct nodes only if their
+        // types differ; hash-consing handles the common case.
+        let key = (n.op.clone(), vec![]);
+        if let Some(&id) = self.memo.get(&key) {
+            return id;
+        }
+        let id = NodeId(self.nodes.len() as u32);
+        n.ty = TensorType::of(dims, dtype);
+        self.nodes.push(n);
+        self.memo.insert(key, id);
+        id
+    }
+
+    pub fn constant(&mut self, name: &str, dims: &[usize], dtype: DType) -> NodeId {
+        let key = (Op::Const(name.to_string()), vec![]);
+        if let Some(&id) = self.memo.get(&key) {
+            return id;
+        }
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node {
+            op: Op::Const(name.to_string()),
+            inputs: vec![],
+            ty: TensorType::of(dims, dtype),
+        });
+        self.memo.insert(key, id);
+        id
+    }
+
+    pub fn matmul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.add(Op::MatMul, &[a, b])
+    }
+
+    pub fn unary(&mut self, kind: super::UnaryKind, x: NodeId) -> NodeId {
+        self.add(Op::Unary(kind), &[x])
+    }
+
+    pub fn binary(&mut self, kind: super::BinaryKind, a: NodeId, b: NodeId) -> NodeId {
+        self.add(Op::Binary(kind), &[a, b])
+    }
+
+    pub fn transpose(&mut self, x: NodeId, perm: &[usize]) -> NodeId {
+        self.add(Op::Transpose { perm: perm.to_vec() }, &[x])
+    }
+
+    pub fn reshape(&mut self, x: NodeId, dims: &[usize]) -> NodeId {
+        self.add(Op::Reshape { shape: Shape::of(dims) }, &[x])
+    }
+
+    pub fn softmax(&mut self, x: NodeId, axis: usize) -> NodeId {
+        self.add(Op::Softmax { axis }, &[x])
+    }
+
+    /// Users of each node (computed on demand).
+    pub fn users(&self) -> Vec<Vec<NodeId>> {
+        let mut users = vec![Vec::new(); self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &inp in &n.inputs {
+                users[inp.index()].push(NodeId(i as u32));
+            }
+        }
+        users
+    }
+
+    /// Nodes reachable from the outputs, in topological order.
+    pub fn live_nodes(&self) -> Vec<NodeId> {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack: Vec<NodeId> = self.outputs.clone();
+        while let Some(id) = stack.pop() {
+            if std::mem::replace(&mut live[id.index()], true) {
+                continue;
+            }
+            stack.extend(self.node(id).inputs.iter().copied());
+        }
+        (0..self.nodes.len() as u32).map(NodeId).filter(|id| live[id.index()]).collect()
+    }
+
+    /// Pretty-print the graph, one node per line.
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            let args: Vec<String> = n.inputs.iter().map(|x| format!("%{}", x.0)).collect();
+            let out = if self.outputs.contains(&NodeId(i as u32)) { " (output)" } else { "" };
+            s.push_str(&format!(
+                "%{i}: {} = {}({}){out}\n",
+                n.ty,
+                n.op.mnemonic(),
+                args.join(", ")
+            ));
+        }
+        s
+    }
+
+    /// Total FLOPs of all live nodes (see [`crate::cost::op_flops`]).
+    pub fn total_flops(&self) -> u64 {
+        self.live_nodes()
+            .iter()
+            .map(|&id| {
+                let n = self.node(id);
+                let in_tys: Vec<&TensorType> =
+                    n.inputs.iter().map(|&i| &self.node(i).ty).collect();
+                crate::cost::op_flops(&n.op, &in_tys, &n.ty)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{BinaryKind, UnaryKind};
+
+    #[test]
+    fn build_and_dedup() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[2, 3], DType::F32);
+        let b = g.input("b", &[3, 4], DType::F32);
+        let m1 = g.matmul(a, b);
+        let m2 = g.matmul(a, b);
+        assert_eq!(m1, m2, "hash-consing must dedup identical nodes");
+        assert_eq!(g.node(m1).ty.shape.dims(), &[2, 4]);
+    }
+
+    #[test]
+    fn live_nodes_skips_dead() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let _dead = g.unary(UnaryKind::Neg, a);
+        let live = g.unary(UnaryKind::Exp, a);
+        g.mark_output(live);
+        let ids = g.live_nodes();
+        assert_eq!(ids.len(), 2); // input + exp
+    }
+
+    #[test]
+    fn users() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let e = g.unary(UnaryKind::Exp, a);
+        let s = g.binary(BinaryKind::Add, e, a);
+        let users = g.users();
+        assert_eq!(users[a.index()].len(), 2);
+        assert_eq!(users[e.index()], vec![s]);
+    }
+
+    #[test]
+    fn dump_contains_ops() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[2, 2], DType::F32);
+        let t = g.transpose(a, &[1, 0]);
+        g.mark_output(t);
+        let d = g.dump();
+        assert!(d.contains("transpose"));
+        assert!(d.contains("(output)"));
+    }
+}

@@ -1,0 +1,335 @@
+//! Shape / type inference for every [`Op`].
+
+use super::{Op, Shape, TensorType};
+
+/// Type-inference failure, carrying a human-readable explanation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InferError(pub String);
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "type inference: {}", self.0)
+    }
+}
+
+impl std::error::Error for InferError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, InferError> {
+    Err(InferError(msg.into()))
+}
+
+/// Numpy-style broadcast of two shapes.
+pub fn broadcast(a: &Shape, b: &Shape) -> Result<Shape, InferError> {
+    let rank = a.rank().max(b.rank());
+    let mut out = Vec::with_capacity(rank);
+    for i in 0..rank {
+        let da = if i + a.rank() >= rank { a.0[i + a.rank() - rank] } else { 1 };
+        let db = if i + b.rank() >= rank { b.0[i + b.rank() - rank] } else { 1 };
+        if da != db && da != 1 && db != 1 {
+            return err(format!("cannot broadcast {a} with {b}"));
+        }
+        out.push(da.max(db));
+    }
+    Ok(Shape(out))
+}
+
+/// Infer the output type of `op` applied to `ins`.
+pub fn infer_type(op: &Op, ins: &[&TensorType]) -> Result<TensorType, InferError> {
+    if let Some(ar) = op.arity() {
+        if ins.len() != ar {
+            return err(format!("{} expects {ar} inputs, got {}", op.mnemonic(), ins.len()));
+        }
+    }
+    match op {
+        Op::Input(_) | Op::Const(_) => err("leaf nodes carry their own type"),
+        Op::Scalar(_) => Ok(TensorType::of(&[], super::DType::F32)),
+
+        Op::MatMul => {
+            let (a, b) = (ins[0], ins[1]);
+            if a.shape.rank() < 2 || b.shape.rank() < 2 {
+                return err("matmul inputs must be rank >= 2");
+            }
+            if a.is_packed() != b.is_packed() {
+                return err("matmul inputs must agree on packedness");
+            }
+            let (ar, br) = (a.shape.rank(), b.shape.rank());
+            let (m, ka) = (a.shape.0[ar - 2], a.shape.0[ar - 1]);
+            let (kb, n) = (b.shape.0[br - 2], b.shape.0[br - 1]);
+            if ka != kb {
+                return err(format!("matmul k mismatch: {} vs {}", ka, kb));
+            }
+            // Batch dims broadcast.
+            let abatch = Shape(a.shape.0[..ar - 2].to_vec());
+            let bbatch = Shape(b.shape.0[..br - 2].to_vec());
+            let mut dims = broadcast(&abatch, &bbatch)?.0;
+            dims.push(m);
+            dims.push(n);
+            let mut ty = TensorType::new(Shape(dims), a.dtype);
+            if a.is_packed() {
+                // Packed matmul keeps the block structure: [M',K']<lm,lk> x
+                // [K',N']<lk,ln> -> [M',N']<lm,ln>.
+                if a.lanes.len() != 2 || b.lanes.len() != 2 || a.lanes[1] != b.lanes[0] {
+                    return err("packed matmul lane mismatch");
+                }
+                ty.lanes = vec![a.lanes[0], b.lanes[1]];
+                ty.pack_axes = vec![ty.shape.rank() - 2, ty.shape.rank() - 1];
+            }
+            Ok(ty)
+        }
+
+        Op::Unary(_) => Ok(ins[0].clone()),
+
+        Op::Binary(_) => {
+            let (a, b) = (ins[0], ins[1]);
+            if a.dtype != b.dtype && !(a.shape.rank() == 0 || b.shape.rank() == 0) {
+                return err(format!("binary dtype mismatch: {} vs {}", a.dtype, b.dtype));
+            }
+            if a.is_packed() != b.is_packed()
+                && a.shape.rank() != 0
+                && b.shape.rank() != 0
+            {
+                return err("binary packedness mismatch");
+            }
+            let shape = broadcast(&a.shape, &b.shape)?;
+            let wide = if a.shape.rank() >= b.shape.rank() { a } else { b };
+            let mut ty = TensorType::new(shape, wide.dtype);
+            ty.lanes = wide.lanes.clone();
+            ty.pack_axes = wide.pack_axes.clone();
+            Ok(ty)
+        }
+
+        Op::Reduce { axis, keep_dim, .. } => {
+            let x = ins[0];
+            if *axis >= x.shape.rank() {
+                return err("reduce axis out of range");
+            }
+            let mut dims = x.shape.0.clone();
+            if *keep_dim {
+                dims[*axis] = 1;
+            } else {
+                dims.remove(*axis);
+            }
+            Ok(TensorType::new(Shape(dims), x.dtype))
+        }
+
+        Op::Softmax { axis } => {
+            if *axis >= ins[0].shape.rank() {
+                return err("softmax axis out of range");
+            }
+            Ok(ins[0].clone())
+        }
+
+        Op::RmsNorm { .. } => {
+            let (x, w) = (ins[0], ins[1]);
+            let last = *x.shape.0.last().ok_or_else(|| InferError("rmsnorm on scalar".into()))?;
+            if w.shape.dims() != [last] {
+                return err(format!("rmsnorm weight must be [{last}], got {}", w.shape));
+            }
+            Ok(x.clone())
+        }
+
+        Op::Rope { .. } => Ok(ins[0].clone()),
+
+        Op::Transpose { perm } => {
+            let x = ins[0];
+            if perm.len() != x.shape.rank() {
+                return err("transpose perm rank mismatch");
+            }
+            let mut seen = vec![false; perm.len()];
+            for &p in perm {
+                if p >= perm.len() || std::mem::replace(&mut seen[p], true) {
+                    return err("transpose perm is not a permutation");
+                }
+            }
+            let mut ty = x.clone();
+            ty.shape = x.shape.permute(perm);
+            Ok(ty)
+        }
+
+        Op::Reshape { shape } => {
+            let x = ins[0];
+            if shape.numel() != x.shape.numel() {
+                return err(format!("reshape {} -> {} changes element count", x.shape, shape));
+            }
+            let mut ty = x.clone();
+            ty.shape = shape.clone();
+            Ok(ty)
+        }
+
+        Op::Slice { axis, start, stop } => {
+            let x = ins[0];
+            if *axis >= x.shape.rank() || start >= stop || *stop > x.shape.0[*axis] {
+                return err("slice out of range");
+            }
+            let mut ty = x.clone();
+            ty.shape.0[*axis] = stop - start;
+            Ok(ty)
+        }
+
+        Op::Concat { axis } => {
+            if ins.is_empty() {
+                return err("concat needs at least one input");
+            }
+            let first = ins[0];
+            if *axis >= first.shape.rank() {
+                return err("concat axis out of range");
+            }
+            let mut dims = first.shape.0.clone();
+            for t in &ins[1..] {
+                if t.shape.rank() != first.shape.rank() || t.dtype != first.dtype {
+                    return err("concat inputs must have same rank/dtype");
+                }
+                for (i, (&a, &b)) in t.shape.0.iter().zip(&first.shape.0).enumerate() {
+                    if i != *axis && a != b {
+                        return err("concat non-axis dims must match");
+                    }
+                }
+                dims[*axis] += t.shape.0[*axis];
+            }
+            dims[*axis] = dims[*axis] - first.shape.0[*axis] + first.shape.0[*axis];
+            Ok(TensorType::new(Shape(dims), first.dtype))
+        }
+
+        Op::Gather => {
+            let (table, ids) = (ins[0], ins[1]);
+            if table.shape.rank() != 2 || ids.shape.rank() != 1 {
+                return err("gather expects (table[v,h], ids[n])");
+            }
+            Ok(TensorType::of(&[ids.shape.0[0], table.shape.0[1]], table.dtype))
+        }
+
+        Op::Pack { lanes, axes } => {
+            let x = ins[0];
+            if x.is_packed() {
+                return err("pack of already-packed tensor");
+            }
+            if lanes.len() != axes.len() || lanes.is_empty() {
+                return err("pack lanes/axes mismatch");
+            }
+            let mut ty = x.clone();
+            for (&l, &ax) in lanes.iter().zip(axes) {
+                if ax >= ty.shape.rank() {
+                    return err("pack axis out of range");
+                }
+                if ty.shape.0[ax] % l != 0 {
+                    return err(format!(
+                        "pack lane {l} does not divide dim {} of {}",
+                        ty.shape.0[ax], ty.shape
+                    ));
+                }
+                ty.shape.0[ax] /= l;
+            }
+            ty.lanes = lanes.clone();
+            ty.pack_axes = axes.clone();
+            Ok(ty)
+        }
+
+        Op::Unpack { axes } => {
+            let x = ins[0];
+            if !x.is_packed() {
+                return err("unpack of flat tensor");
+            }
+            if *axes != x.pack_axes {
+                return err("unpack axes must match the pack axes");
+            }
+            let mut ty = x.clone();
+            for (&l, &ax) in x.lanes.iter().zip(&x.pack_axes) {
+                ty.shape.0[ax] *= l;
+            }
+            ty.lanes.clear();
+            ty.pack_axes.clear();
+            Ok(ty)
+        }
+
+        Op::Boxing { to } => Ok(ins[0].with_sbp(to.clone())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{BinaryKind, DType};
+
+    fn t(dims: &[usize]) -> TensorType {
+        TensorType::of(dims, DType::F32)
+    }
+
+    #[test]
+    fn broadcast_shapes() {
+        assert_eq!(broadcast(&Shape::of(&[4, 1]), &Shape::of(&[3])).unwrap().dims(), &[4, 3]);
+        assert!(broadcast(&Shape::of(&[2]), &Shape::of(&[3])).is_err());
+    }
+
+    #[test]
+    fn matmul_batched() {
+        let a = t(&[8, 2, 3]);
+        let b = t(&[3, 4]);
+        let out = infer_type(&Op::MatMul, &[&a, &b]).unwrap();
+        assert_eq!(out.shape.dims(), &[8, 2, 4]);
+        assert!(infer_type(&Op::MatMul, &[&t(&[2, 3]), &t(&[4, 5])]).is_err());
+    }
+
+    #[test]
+    fn packed_matmul_lanes() {
+        let mut a = t(&[4, 2]);
+        a.lanes = vec![16, 32];
+        a.pack_axes = vec![0, 1];
+        let mut b = t(&[2, 8]);
+        b.lanes = vec![32, 16];
+        b.pack_axes = vec![0, 1];
+        let out = infer_type(&Op::MatMul, &[&a, &b]).unwrap();
+        assert_eq!(out.shape.dims(), &[4, 8]);
+        assert_eq!(out.lanes, vec![16, 16]);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let x = t(&[64, 128]);
+        let packed =
+            infer_type(&Op::Pack { lanes: vec![16, 16], axes: vec![0, 1] }, &[&x]).unwrap();
+        assert_eq!(packed.shape.dims(), &[4, 8]);
+        assert_eq!(packed.lanes, vec![16, 16]);
+        let back = infer_type(&Op::Unpack { axes: vec![0, 1] }, &[&packed]).unwrap();
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn pack_requires_divisibility() {
+        let x = t(&[60, 128]);
+        assert!(infer_type(&Op::Pack { lanes: vec![16, 16], axes: vec![0, 1] }, &[&x]).is_err());
+    }
+
+    #[test]
+    fn transpose_validation() {
+        let x = t(&[2, 3, 4]);
+        let ty = infer_type(&Op::Transpose { perm: vec![2, 0, 1] }, &[&x]).unwrap();
+        assert_eq!(ty.shape.dims(), &[4, 2, 3]);
+        assert!(infer_type(&Op::Transpose { perm: vec![0, 0, 1] }, &[&x]).is_err());
+    }
+
+    #[test]
+    fn binary_broadcast_and_scalar() {
+        let a = t(&[4, 4]);
+        let s = t(&[]);
+        let out = infer_type(&Op::Binary(BinaryKind::Add), &[&a, &s]).unwrap();
+        assert_eq!(out.shape.dims(), &[4, 4]);
+    }
+
+    #[test]
+    fn concat_infers_sum() {
+        let a = t(&[2, 3]);
+        let b = t(&[2, 5]);
+        let out = infer_type(&Op::Concat { axis: 1 }, &[&a, &b]).unwrap();
+        assert_eq!(out.shape.dims(), &[2, 8]);
+        assert!(infer_type(&Op::Concat { axis: 0 }, &[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn reduce_keepdim() {
+        let x = t(&[2, 3, 4]);
+        let op = Op::Reduce { kind: crate::ir::ReduceKind::Sum, axis: 1, keep_dim: true };
+        assert_eq!(infer_type(&op, &[&x]).unwrap().shape.dims(), &[2, 1, 4]);
+        let op = Op::Reduce { kind: crate::ir::ReduceKind::Sum, axis: 1, keep_dim: false };
+        assert_eq!(infer_type(&op, &[&x]).unwrap().shape.dims(), &[2, 4]);
+    }
+}

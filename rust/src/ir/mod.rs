@@ -1,0 +1,23 @@
+//! Tensor-level intermediate representation.
+//!
+//! The IR is a flat, append-only DAG of [`Node`]s held in a [`Graph`].
+//! Every node carries an [`Op`] (operation kind plus static attributes),
+//! its input node ids, and an inferred [`TensorType`] (shape + dtype +
+//! optional packed layout + optional SBP distribution attribute).
+//!
+//! The same IR is used by every compiler phase: the importer / model
+//! builders produce it, the e-graph rounds-trips it, Auto Distribution
+//! annotates it with SBP attributes and boxing nodes, and codegen lowers
+//! it to an [`crate::codegen::ExecPlan`].
+
+mod dtype;
+mod graph;
+mod infer;
+mod op;
+mod shape;
+
+pub use dtype::DType;
+pub use graph::{Graph, Node, NodeId};
+pub use infer::{infer_type, InferError};
+pub use op::{BinaryKind, Op, ReduceKind, UnaryKind};
+pub use shape::{Shape, TensorType};

@@ -1,0 +1,203 @@
+//! Operation kinds and their static attributes.
+
+
+use super::Shape;
+use crate::dist::NdSbp;
+
+/// Element-wise unary operator kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnaryKind {
+    Exp,
+    Neg,
+    Sqrt,
+    Rsqrt,
+    Silu,
+    Abs,
+    Log,
+}
+
+/// Element-wise binary operator kinds (broadcasting, numpy-style).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinaryKind {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+}
+
+/// Reduction kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    Sum,
+    Max,
+    Mean,
+}
+
+/// An IR operation: the kind plus all static attributes.
+///
+/// Children are stored in the owning node / e-node, not here, so `Op`
+/// itself is hashable and serves as the e-node label.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Graph input (activation). Attribute: stable name.
+    Input(String),
+    /// Weight / constant tensor. Attribute: stable name. Constants are
+    /// pre-split per their SBP attribute at codegen time (§3.3.1).
+    Const(String),
+    /// Scalar float constant materialized in the graph.
+    Scalar(u32 /* f32 bits, kept as bits for Eq/Hash */),
+
+    /// Dense matrix multiply over the last two dims (leading dims batch).
+    MatMul,
+    /// Element-wise unary.
+    Unary(UnaryKind),
+    /// Element-wise binary with numpy broadcasting.
+    Binary(BinaryKind),
+    /// Reduction over one axis. `keep_dim` keeps the reduced axis as 1.
+    Reduce { kind: ReduceKind, axis: usize, keep_dim: bool },
+    /// Softmax over `axis` (kept fused — it is an NTT μkernel).
+    Softmax { axis: usize },
+    /// RMS normalization over the last axis with weight input.
+    RmsNorm { eps_bits: u32 },
+    /// Rotary position embedding over the last axis; attribute: rotary base.
+    Rope { theta_bits: u32 },
+
+    /// Transpose by `perm` (output dim i reads input dim perm[i]).
+    Transpose { perm: Vec<usize> },
+    /// Reshape to `shape` (view — zero-copy after bufferization).
+    Reshape { shape: Shape },
+    /// Slice `[start, stop)` on `axis` (view).
+    Slice { axis: usize, start: usize, stop: usize },
+    /// Concatenate along `axis`.
+    Concat { axis: usize },
+    /// Embedding row gather: (table[v, h], ids[n]) -> [n, h].
+    Gather,
+
+    /// Layout pack (§3.1.2): fold `lanes[i]` elements of `axes[i]` into a
+    /// trailing contiguous block dimension, producing a blocked layout.
+    Pack { lanes: Vec<usize>, axes: Vec<usize> },
+    /// Inverse of `Pack`.
+    Unpack { axes: Vec<usize> },
+
+    /// Boxing (§3.1.3): the unified communication primitive. Converts a
+    /// tensor's distribution attribute to `to` (splitting, broadcasting,
+    /// all-reducing, resharding as needed). `to == None` gathers the full
+    /// tensor back to the host (Unshard).
+    Boxing { to: Option<NdSbp> },
+}
+
+impl Op {
+    /// True for ops with *view semantics*: their output aliases the input
+    /// buffer (zero-copy after alias analysis, §3.3.1).
+    pub fn is_view(&self) -> bool {
+        matches!(self, Op::Reshape { .. } | Op::Slice { .. })
+    }
+
+    /// True for element-wise ops (packable with any lane structure).
+    pub fn is_elementwise(&self) -> bool {
+        matches!(self, Op::Unary(_) | Op::Binary(_))
+    }
+
+    /// True for leaf (no-input) ops.
+    pub fn is_leaf(&self) -> bool {
+        matches!(self, Op::Input(_) | Op::Const(_) | Op::Scalar(_))
+    }
+
+    /// Number of inputs this op expects (`None` = variadic).
+    pub fn arity(&self) -> Option<usize> {
+        Some(match self {
+            Op::Input(_) | Op::Const(_) | Op::Scalar(_) => 0,
+            Op::MatMul | Op::Binary(_) | Op::Gather => 2,
+            Op::RmsNorm { .. } => 2,
+            Op::Unary(_)
+            | Op::Reduce { .. }
+            | Op::Softmax { .. }
+            | Op::Rope { .. }
+            | Op::Transpose { .. }
+            | Op::Reshape { .. }
+            | Op::Slice { .. }
+            | Op::Pack { .. }
+            | Op::Unpack { .. }
+            | Op::Boxing { .. } => 1,
+            Op::Concat { .. } => return None,
+        })
+    }
+
+    /// Short mnemonic used in dumps, cost tables and emitted code.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Op::Input(_) => "input",
+            Op::Const(_) => "const",
+            Op::Scalar(_) => "scalar",
+            Op::MatMul => "matmul",
+            Op::Unary(UnaryKind::Exp) => "exp",
+            Op::Unary(UnaryKind::Neg) => "neg",
+            Op::Unary(UnaryKind::Sqrt) => "sqrt",
+            Op::Unary(UnaryKind::Rsqrt) => "rsqrt",
+            Op::Unary(UnaryKind::Silu) => "silu",
+            Op::Unary(UnaryKind::Abs) => "abs",
+            Op::Unary(UnaryKind::Log) => "log",
+            Op::Binary(BinaryKind::Add) => "add",
+            Op::Binary(BinaryKind::Sub) => "sub",
+            Op::Binary(BinaryKind::Mul) => "mul",
+            Op::Binary(BinaryKind::Div) => "div",
+            Op::Binary(BinaryKind::Max) => "max",
+            Op::Binary(BinaryKind::Min) => "min",
+            Op::Reduce { .. } => "reduce",
+            Op::Softmax { .. } => "softmax",
+            Op::RmsNorm { .. } => "rmsnorm",
+            Op::Rope { .. } => "rope",
+            Op::Transpose { .. } => "transpose",
+            Op::Reshape { .. } => "reshape",
+            Op::Slice { .. } => "slice",
+            Op::Concat { .. } => "concat",
+            Op::Gather => "gather",
+            Op::Pack { .. } => "pack",
+            Op::Unpack { .. } => "unpack",
+            Op::Boxing { .. } => "boxing",
+        }
+    }
+
+    /// Helper: scalar constant from an f32.
+    pub fn scalar(v: f32) -> Op {
+        Op::Scalar(v.to_bits())
+    }
+
+    /// Value of a `Scalar` op.
+    pub fn scalar_value(&self) -> Option<f32> {
+        match self {
+            Op::Scalar(bits) => Some(f32::from_bits(*bits)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_semantics() {
+        assert!(Op::Reshape { shape: Shape::of(&[2, 2]) }.is_view());
+        assert!(Op::Slice { axis: 0, start: 0, stop: 1 }.is_view());
+        assert!(!Op::MatMul.is_view());
+    }
+
+    #[test]
+    fn arity() {
+        assert_eq!(Op::MatMul.arity(), Some(2));
+        assert_eq!(Op::Concat { axis: 0 }.arity(), None);
+        assert_eq!(Op::Input("x".into()).arity(), Some(0));
+    }
+
+    #[test]
+    fn scalar_bits_roundtrip() {
+        let op = Op::scalar(2.5);
+        assert_eq!(op.scalar_value(), Some(2.5));
+        // Eq/Hash work through the bit pattern.
+        assert_eq!(op, Op::scalar(2.5));
+        assert_ne!(op, Op::scalar(2.0));
+    }
+}

@@ -1,0 +1,195 @@
+//! Shapes, packed layouts and tensor types.
+
+
+use super::DType;
+use crate::dist::NdSbp;
+
+/// A dense row-major tensor shape.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn scalar() -> Self {
+        Shape(vec![])
+    }
+
+    pub fn of(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Total number of elements.
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Row-major strides, in elements.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut strides = vec![1usize; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * self.0[i + 1];
+        }
+        strides
+    }
+
+    /// Apply a permutation (output dim `i` takes input dim `perm[i]`).
+    pub fn permute(&self, perm: &[usize]) -> Shape {
+        debug_assert_eq!(perm.len(), self.rank());
+        Shape(perm.iter().map(|&p| self.0[p]).collect())
+    }
+
+    /// True if `perm` is the identity permutation.
+    pub fn is_identity_perm(perm: &[usize]) -> bool {
+        perm.iter().enumerate().all(|(i, &p)| i == p)
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// The full static type of an IR value.
+///
+/// `lanes`/`pack_axes` describe the packed (blocked) layout produced by
+/// `Pack` nodes: `lanes = [16,16], pack_axes = [0,1]` means the logical
+/// tensor was reorganised so that 16×16 blocks of (axis0, axis1) are
+/// contiguous — the blocked format the paper feeds to tensor units
+/// (§3.1.2). An empty `lanes` is the flat (unpacked) layout.
+///
+/// `sbp` is the distribution attribute attached by Auto Distribution
+/// (§3.1.3); `None` means host-resident / undistributed.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorType {
+    pub shape: Shape,
+    pub dtype: DType,
+    pub lanes: Vec<usize>,
+    pub pack_axes: Vec<usize>,
+    pub sbp: Option<NdSbp>,
+}
+
+impl TensorType {
+    pub fn new(shape: Shape, dtype: DType) -> Self {
+        TensorType { shape, dtype, lanes: vec![], pack_axes: vec![], sbp: None }
+    }
+
+    pub fn of(dims: &[usize], dtype: DType) -> Self {
+        Self::new(Shape::of(dims), dtype)
+    }
+
+    pub fn is_packed(&self) -> bool {
+        !self.lanes.is_empty()
+    }
+
+    /// Number of *logical* elements (pack blocks count as lanes elements).
+    pub fn numel(&self) -> usize {
+        self.shape.numel() * self.lanes.iter().product::<usize>()
+    }
+
+    /// Size in bytes of the full (local, undistributed) tensor.
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+
+    /// Size in bytes of one device's shard under the current SBP
+    /// attribute on `placement` (product of mesh dims that split it).
+    pub fn local_size_bytes(&self, placement_dims: &[usize]) -> usize {
+        let mut size = self.size_bytes();
+        if let Some(sbp) = &self.sbp {
+            for (mesh_axis, s) in sbp.0.iter().enumerate() {
+                if let crate::dist::Sbp::Split(_) = s {
+                    let p = placement_dims.get(mesh_axis).copied().unwrap_or(1);
+                    size = size.div_ceil(p);
+                }
+            }
+        }
+        size
+    }
+
+    /// Same type with a different SBP attribute.
+    pub fn with_sbp(&self, sbp: Option<NdSbp>) -> Self {
+        let mut t = self.clone();
+        t.sbp = sbp;
+        t
+    }
+}
+
+impl std::fmt::Display for TensorType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}{}", self.dtype, self.shape)?;
+        if self.is_packed() {
+            write!(f, "<")?;
+            for (i, l) in self.lanes.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ",")?;
+                }
+                write!(f, "{l}")?;
+            }
+            write!(f, ">")?;
+        }
+        if let Some(sbp) = &self.sbp {
+            write!(f, "@{sbp}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_strides() {
+        let s = Shape::of(&[2, 3, 4]);
+        assert_eq!(s.numel(), 24);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+        assert_eq!(Shape::scalar().numel(), 1);
+        assert_eq!(Shape::scalar().strides(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn permute() {
+        let s = Shape::of(&[2, 3, 4]);
+        assert_eq!(s.permute(&[2, 0, 1]).dims(), &[4, 2, 3]);
+        assert!(Shape::is_identity_perm(&[0, 1, 2]));
+        assert!(!Shape::is_identity_perm(&[1, 0]));
+    }
+
+    #[test]
+    fn packed_type_sizes() {
+        // [8, 8]<16,16> == logical [128, 128] f32 = 64 KiB
+        let mut t = TensorType::of(&[8, 8], DType::F32);
+        t.lanes = vec![16, 16];
+        t.pack_axes = vec![0, 1];
+        assert_eq!(t.numel(), 128 * 128);
+        assert_eq!(t.size_bytes(), 128 * 128 * 4);
+        assert_eq!(t.to_string(), "f32[8,8]<16,16>");
+    }
+
+    #[test]
+    fn local_size_under_split() {
+        use crate::dist::{NdSbp, Sbp};
+        let t = TensorType::of(&[1024, 1024], DType::F16)
+            .with_sbp(Some(NdSbp(vec![Sbp::Split(0)])));
+        assert_eq!(t.size_bytes(), 1024 * 1024 * 2);
+        assert_eq!(t.local_size_bytes(&[4]), 1024 * 1024 * 2 / 4);
+        // Broadcast does not shrink the local shard.
+        let tb = t.with_sbp(Some(NdSbp(vec![Sbp::Broadcast])));
+        assert_eq!(tb.local_size_bytes(&[4]), 1024 * 1024 * 2);
+    }
+}

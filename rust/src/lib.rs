@@ -1,0 +1,49 @@
+//! # nncase-repro
+//!
+//! Reproduction of *"nncase: An End-to-End Compiler for Efficient LLM
+//! Deployment on Heterogeneous Storage Architectures"* (Canaan Inc.,
+//! CS.DC 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate contains the full compiler pipeline the paper describes:
+//!
+//! * [`ir`] — the tensor-level intermediate representation.
+//! * [`egraph`] — e-graph with equality saturation and cost-based
+//!   extraction (greedy and Weighted-Partial-MaxSAT, §3.1.1).
+//! * [`rewrite`] — rewrite rules: Table 1 (transpose), Table 2
+//!   (`MetaPackOperation` / `FoldNopPack`, §3.1.2) and a destructive
+//!   greedy rewriter used as the phase-ordering baseline (Fig. 2).
+//! * [`sat`] — a self-contained CDCL SAT solver plus WPMaxSAT and
+//!   pseudo-boolean layers used by extraction and memory planning.
+//! * [`cost`] — Roofline cost model, alpha-beta communication model and
+//!   machine descriptions (§3.1.1, §3.1.3).
+//! * [`dist`] — Auto Distribution: SBP abstraction and the distributed
+//!   e-graph construction of Fig. 5 (§3.1.3).
+//! * [`schedule`] — Auto Schedule: tiered tile graphs, MCTS structural
+//!   search and the MINLP parametric optimizer (§3.2).
+//! * [`codegen`] — bufferization, alias analysis, liveness, bin-packing
+//!   memory planning and NTT-style C++ emission (§3.3).
+//! * [`ntt`] — the Rust analog of the nncase Tensor Template library:
+//!   register-blocked μkernels used by the real execution backend.
+//! * [`model`] — Qwen3-family graph builders (0.6B / 1.7B / tiny).
+//! * [`sim`] — the machine simulator and the analytic baseline models
+//!   (llama.cpp / IPEX / MLC) used to regenerate Figures 9 and 10.
+//! * [`runtime`] — PJRT (xla crate) artifact loading and execution.
+//! * [`coordinator`] — the serving layer: request batching, KV cache and
+//!   the multi-core "cores as distributed nodes" decode engine (§4.2).
+
+pub mod cost;
+pub mod codegen;
+pub mod coordinator;
+pub mod dist;
+pub mod egraph;
+pub mod ir;
+pub mod model;
+pub mod ntt;
+pub mod pipeline;
+pub mod rewrite;
+pub mod runtime;
+pub mod sat;
+pub mod schedule;
+pub mod sim;
+pub mod util;
+

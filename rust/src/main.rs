@@ -1,0 +1,159 @@
+//! `repro` — the nncase-repro CLI.
+//!
+//! Subcommands:
+//! * `compile`  — run the full pipeline on a built-in graph and print the
+//!   per-phase report.
+//! * `inspect`  — dump the optimized graph / emitted NTT C++.
+//! * `serve`    — run the tiny-Qwen3 serving workload (real execution).
+//! * `sweep`    — regenerate Figure 9 / Figure 10 tables on the simulator.
+//! * `artifacts`— smoke-test the PJRT runtime against `artifacts/`.
+
+use nncase_repro::coordinator::{Coordinator, Qwen3Engine};
+use nncase_repro::cost::MachineSpec;
+use nncase_repro::ir::DType;
+use nncase_repro::model::{decode_graph, Qwen3Config, Qwen3Weights};
+use nncase_repro::pipeline::{CompileOptions, Compiler};
+use nncase_repro::runtime::{Manifest, PjrtRuntime};
+use nncase_repro::sim::figures;
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <compile|inspect|serve|sweep|artifacts> [options]\n\
+         \n\
+         compile   [--model tiny|0.6b|1.7b] [--devices N] [--schedule] [--greedy]\n\
+         inspect   [--emit-cpp] [--model tiny]\n\
+         serve     [--threads N] [--requests N] [--max-new N]\n\
+         sweep     [--figure 9|10]\n\
+         artifacts [--dir artifacts]"
+    );
+    std::process::exit(2)
+}
+
+fn model_cfg(args: &[String]) -> Qwen3Config {
+    match opt(args, "--model").as_deref() {
+        Some("0.6b") => Qwen3Config::qwen3_0_6b(DType::F16),
+        Some("1.7b") => Qwen3Config::qwen3_1_7b(DType::F16),
+        _ => Qwen3Config::tiny(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let machine = MachineSpec::ryzen_5900x();
+    match cmd.as_str() {
+        "compile" => {
+            let cfg = model_cfg(&args);
+            let devices: usize =
+                opt(&args, "--devices").and_then(|v| v.parse().ok()).unwrap_or(1);
+            // Full-scale graphs get one representative layer (strategies
+            // replicate across identical layers); tiny compiles whole.
+            let layers = if cfg.hidden > 512 { Some(1) } else { None };
+            let g = decode_graph(&cfg, 8, layers);
+            let opts = CompileOptions {
+                devices,
+                schedule: flag(&args, "--schedule"),
+                sat_extraction: !flag(&args, "--greedy") && g.len() < 300,
+                ..Default::default()
+            };
+            let c = Compiler::new(machine, opts);
+            let m = c.compile(&g);
+            println!("model: {}", cfg.name);
+            println!("graph: {} nodes ({} live)", m.graph.len(), m.graph.live_nodes().len());
+            println!(
+                "egraph: {} nodes, {} classes, {} iters (saturated={})",
+                m.report.egraph_nodes,
+                m.report.egraph_classes,
+                m.report.saturation_iters,
+                m.report.saturated
+            );
+            println!("extraction cost: {} ns (roofline)", m.report.extraction_cost);
+            if let Some(d) = &m.dist {
+                println!(
+                    "distribution: total {} ns, comm {} ns, weights/device {}",
+                    d.total_ns,
+                    d.comm_ns,
+                    nncase_repro::util::human_bytes(d.weight_bytes_per_device as usize)
+                );
+            }
+            if let Some(s) = &m.schedule {
+                println!(
+                    "schedule: {:.3} us over {} MCTS evals\n{}",
+                    s.solution.latency_s * 1e6,
+                    s.evaluations,
+                    s.state.notation()
+                );
+            }
+            println!("plan: {}", m.plan.summary());
+        }
+        "inspect" => {
+            let cfg = model_cfg(&args);
+            let g = decode_graph(&cfg, 4, Some(1));
+            let c = Compiler::new(machine, CompileOptions::default());
+            let m = c.compile(&g);
+            if flag(&args, "--emit-cpp") {
+                println!("{}", m.emit_cpp("decode_layer"));
+            } else {
+                println!("{}", m.graph.dump());
+            }
+        }
+        "serve" => {
+            let threads: usize =
+                opt(&args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(4);
+            let n_req: usize =
+                opt(&args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(8);
+            let max_new: usize =
+                opt(&args, "--max-new").and_then(|v| v.parse().ok()).unwrap_or(32);
+            let cfg = Qwen3Config::tiny();
+            println!(
+                "serving {} ({} params, {} threads)",
+                cfg.name,
+                cfg.param_count(),
+                threads
+            );
+            let w = Qwen3Weights::random(&cfg, 42);
+            let mut c = Coordinator::new(Qwen3Engine::new(w, threads, 512));
+            let reqs = nncase_repro::coordinator::serve::synthetic_workload(
+                n_req, 8, max_new, cfg.vocab,
+            );
+            let rep = c.serve(&reqs);
+            println!("{}", rep.render());
+        }
+        "sweep" => {
+            let fig = opt(&args, "--figure").unwrap_or_else(|| "9".into());
+            match fig.as_str() {
+                "9" => println!(
+                    "{}",
+                    figures::render(&figures::fig9_table(&machine), "Figure 9 (1T)")
+                ),
+                "10" => println!(
+                    "{}",
+                    figures::render(&figures::fig10_table(&machine), "Figure 10 (4T/8T)")
+                ),
+                _ => usage(),
+            }
+        }
+        "artifacts" => {
+            let dir = opt(&args, "--dir").unwrap_or_else(|| "artifacts".into());
+            let manifest =
+                Manifest::load(std::path::Path::new(&dir).join("manifest.tsv").as_path())?;
+            let mut rt = PjrtRuntime::cpu(&dir)?;
+            println!("platform: {}", rt.platform());
+            for e in &manifest.entries {
+                rt.load(&e.name, &e.path)?;
+                println!("loaded {} <- {}", e.name, e.path);
+            }
+            println!("{} artifacts compiled OK", manifest.entries.len());
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! The nncase Tensor Template library analog (§3.3.2).
+//!
+//! The C++20 NTT library of the paper supplies register-level μkernels
+//! that the generated code instantiates. Here the same role is played by
+//! a small Rust kernel library:
+//!
+//! * [`tensor`] — a dense f32 tensor with shape/strides (the hybrid
+//!   static/dynamic shape system collapses to dynamic shapes in Rust;
+//!   the static-inference side lives in the L1 Pallas kernel where block
+//!   shapes are compile-time constants).
+//! * [`kernels`] — blocked/packed matmul (GotoBLAS-style register
+//!   tiling), exp/silu, softmax, RMSNorm, RoPE, pack/unpack and gather.
+//! * [`ukt`] — the μKernelTime linear-regression model (Eq. 15) with a
+//!   runtime calibration hook.
+//!
+//! These kernels are the *real execution* backend of the coordinator; the
+//! same computation is validated against the JAX reference through the
+//! PJRT artifacts (python/tests + rust/tests).
+
+mod kernels;
+mod tensor;
+mod ukt;
+
+pub use kernels::*;
+pub use tensor::Tensor;
+pub use ukt::{calibrate_ukt, UKernelModel};

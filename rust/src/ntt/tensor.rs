@@ -1,0 +1,99 @@
+//! Dense f32 tensors for the NTT execution backend.
+
+use crate::ir::Shape;
+use crate::util::Rng;
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::of(dims);
+        Tensor { data: vec![0.0; shape.numel()], shape }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Self {
+        let shape = Shape::of(dims);
+        assert_eq!(shape.numel(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    /// Deterministic random-normal tensor scaled like typical weight init.
+    pub fn randn(dims: &[usize], rng: &mut Rng, scale: f32) -> Self {
+        let shape = Shape::of(dims);
+        let data = (0..shape.numel()).map(|_| rng.normal() * scale).collect();
+        Tensor { shape, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape.0[i]
+    }
+
+    /// Last-axis row view.
+    pub fn row(&self, r: usize) -> &[f32] {
+        let cols = *self.shape.0.last().unwrap();
+        &self.data[r * cols..(r + 1) * cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let cols = *self.shape.0.last().unwrap();
+        &mut self.data[r * cols..(r + 1) * cols]
+    }
+
+    /// Reshape view (copy-free since data is owned contiguous).
+    pub fn reshaped(mut self, dims: &[usize]) -> Tensor {
+        let shape = Shape::of(dims);
+        assert_eq!(shape.numel(), self.numel());
+        self.shape = shape;
+        self
+    }
+
+    /// Max |a - b| between two tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_rows() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = Tensor::randn(&[16], &mut r1, 0.02);
+        let b = Tensor::randn(&[16], &mut r2, 0.02);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,81 @@
+//! μKernelTime: the linear-regression μkernel time model of Eq. 15,
+//! `μKT(op) = overhead + flops / effective_rate`, with an optional
+//! runtime calibration pass that fits both coefficients from measured
+//! blocked matmuls.
+
+use super::{matmul_blocked, Tensor};
+use crate::util::Rng;
+
+/// Linear μkernel time model.
+#[derive(Debug, Clone, Copy)]
+pub struct UKernelModel {
+    /// Per-call overhead, seconds.
+    pub overhead_s: f64,
+    /// Effective FLOP/s of the inner loop.
+    pub flops_per_s: f64,
+}
+
+impl UKernelModel {
+    /// Predicted time of a μkernel call doing `flops` FLOPs.
+    pub fn time_s(&self, flops: u64) -> f64 {
+        self.overhead_s + flops as f64 / self.flops_per_s
+    }
+
+    /// A conservative default for machines we cannot measure on.
+    pub fn default_for(machine: &crate::cost::MachineSpec) -> Self {
+        UKernelModel { overhead_s: 40e-9, flops_per_s: machine.peak_flops(1, 4) * 0.5 }
+    }
+}
+
+/// Calibrate the model by timing blocked matmuls of increasing size and
+/// least-squares fitting `t = a + b * flops`.
+pub fn calibrate_ukt(reps: usize) -> UKernelModel {
+    let sizes = [8usize, 16, 32, 64, 96, 128];
+    let mut rng = Rng::new(0xCAFE);
+    let mut xs = Vec::new(); // flops
+    let mut ys = Vec::new(); // seconds per call
+    for &s in &sizes {
+        let a = Tensor::randn(&[s, s], &mut rng, 1.0);
+        let b = Tensor::randn(&[s, s], &mut rng, 1.0);
+        // Warm up.
+        let _ = matmul_blocked(&a, &b);
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(matmul_blocked(&a, &b));
+        }
+        let per_call = t0.elapsed().as_secs_f64() / reps as f64;
+        xs.push((2 * s * s * s) as f64);
+        ys.push(per_call);
+    }
+    // Least squares.
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let intercept = (sy - slope * sx) / n;
+    UKernelModel {
+        overhead_s: intercept.max(1e-9),
+        flops_per_s: (1.0 / slope.max(1e-15)).clamp(1e8, 1e13),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_predicts_monotone_times() {
+        let m = UKernelModel { overhead_s: 1e-7, flops_per_s: 1e10 };
+        assert!(m.time_s(1000) < m.time_s(1_000_000));
+        assert!((m.time_s(0) - 1e-7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibration_returns_sane_coefficients() {
+        let m = calibrate_ukt(2);
+        assert!(m.overhead_s > 0.0 && m.overhead_s < 1e-3);
+        assert!(m.flops_per_s > 1e7, "rate {} too low", m.flops_per_s);
+    }
+}

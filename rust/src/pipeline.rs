@@ -1,0 +1,207 @@
+//! The end-to-end compiler driver: wires the five phases of Fig. 1
+//! (ingest → e-graph layout optimization → auto distribution → auto
+//! scheduling → codegen) into one call.
+
+use crate::codegen::{emit_ntt_cpp, lower_to_plan, ExecPlan, PlannerKind};
+use crate::cost::MachineSpec;
+use crate::dist::{build_dist_egraph, extract_dist, DistSolution, Placement};
+use crate::egraph::{extract_wpmaxsat, roofline_cost_fn, EGraph, Runner, RunnerLimits};
+use crate::ir::Graph;
+use crate::rewrite::{all_rules, pack::PackOptions};
+use crate::schedule::{autoschedule, subgraph_to_tileops, MctsConfig, ScheduleResult, TiledState};
+
+/// Compilation options.
+#[derive(Debug, Clone)]
+pub struct CompileOptions {
+    pub pack: PackOptions,
+    pub saturation_limits: RunnerLimits,
+    /// Number of devices ("cores as nodes"); 1 disables Auto Distribution.
+    pub devices: usize,
+    /// Per-device memory capacity for the distribution constraint.
+    pub per_device_capacity: u64,
+    /// Run the MCTS+MINLP scheduler on the attention core subgraph.
+    pub schedule: bool,
+    pub mcts: MctsConfig,
+    pub planner: PlannerKind,
+    /// Use WPMaxSAT extraction (false = greedy, the ablation baseline).
+    pub sat_extraction: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            pack: PackOptions::default(),
+            saturation_limits: RunnerLimits { max_iters: 8, max_nodes: 30_000 },
+            devices: 1,
+            per_device_capacity: u64::MAX / 4,
+            schedule: false,
+            mcts: MctsConfig::default(),
+            planner: PlannerKind::FirstFit,
+            sat_extraction: true,
+        }
+    }
+}
+
+/// Per-phase compilation report.
+#[derive(Debug, Default)]
+pub struct CompileReport {
+    pub egraph_nodes: usize,
+    pub egraph_classes: usize,
+    pub saturation_iters: usize,
+    pub saturated: bool,
+    pub extraction_cost: u64,
+    pub dist_total_ns: Option<u64>,
+    pub dist_comm_ns: Option<u64>,
+    pub schedule_latency_s: Option<f64>,
+}
+
+/// The compiled module.
+pub struct CompiledModule {
+    pub graph: Graph,
+    pub dist: Option<DistSolution>,
+    pub schedule: Option<ScheduleResult>,
+    pub plan: ExecPlan,
+    pub report: CompileReport,
+}
+
+impl CompiledModule {
+    /// Emit the NTT C++ kernel source (Fig. 8).
+    pub fn emit_cpp(&self, name: &str) -> String {
+        emit_ntt_cpp(&self.plan, name)
+    }
+}
+
+/// The compiler.
+pub struct Compiler {
+    pub machine: MachineSpec,
+    pub options: CompileOptions,
+}
+
+impl Compiler {
+    pub fn new(machine: MachineSpec, options: CompileOptions) -> Self {
+        Compiler { machine, options }
+    }
+
+    /// Run the full pipeline on `graph`.
+    pub fn compile(&self, graph: &Graph) -> CompiledModule {
+        let mut report = CompileReport::default();
+
+        // Phase 1+2: e-graph ingestion + saturation with Tables 1 & 2.
+        let (mut eg, map) = EGraph::from_graph(graph);
+        let rules = all_rules(&self.options.pack);
+        let refs: Vec<&dyn crate::egraph::Rewrite> = rules.iter().map(|r| r.as_ref()).collect();
+        let rep = Runner::new(&mut eg).with_limits(self.options.saturation_limits).run(&refs);
+        report.saturation_iters = rep.iterations;
+        report.saturated = rep.saturated;
+        report.egraph_nodes = rep.nodes;
+        report.egraph_classes = rep.classes;
+
+        // Extraction with the Roofline cost model (WPMaxSAT or greedy).
+        let roots: Vec<_> = graph.outputs.iter().map(|o| map[o.index()]).collect();
+        let cost = roofline_cost_fn(&self.machine);
+        let ex = if self.options.sat_extraction {
+            extract_wpmaxsat(&eg, &roots, &cost)
+        } else {
+            crate::egraph::extract_greedy(&eg, &roots, &cost)
+        };
+        report.extraction_cost = ex.cost;
+        let optimized = ex.graph;
+
+        // Phase 3: Auto Distribution ("cores as distributed nodes").
+        let dist = if self.options.devices > 1 {
+            let placement = Placement::line(self.options.devices);
+            let d = build_dist_egraph(&optimized, &placement);
+            match extract_dist(&d, &self.machine, self.options.per_device_capacity, true) {
+                Ok(sol) => {
+                    report.dist_total_ns = Some(sol.total_ns);
+                    report.dist_comm_ns = Some(sol.comm_ns);
+                    Some(sol)
+                }
+                Err(_) => None,
+            }
+        } else {
+            None
+        };
+
+        // Phase 4: Auto Schedule on the attention core.
+        let schedule = if self.options.schedule {
+            let core = crate::model::attention_core_nodes(&optimized);
+            if core.len() >= 2 {
+                let ops = subgraph_to_tileops(&optimized, &core);
+                if !ops.is_empty() {
+                    let levels = self.machine.caches.len();
+                    let init = TiledState::initial(ops, levels.max(2));
+                    autoschedule(init, &self.machine, self.options.mcts.clone()).inspect(|r| {
+                        report.schedule_latency_s = Some(r.solution.latency_s);
+                    })
+                } else {
+                    None
+                }
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+
+        // Phase 5: codegen (bufferize, liveness, memory plan, steps).
+        let plan = lower_to_plan(&optimized, self.options.planner);
+
+        CompiledModule { graph: optimized, dist, schedule, plan, report }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, UnaryKind};
+    use crate::model::{decode_graph, Qwen3Config};
+
+    #[test]
+    fn full_pipeline_on_attention_subgraph() {
+        let mut g = Graph::new();
+        let q = g.input("Q", &[64, 64], DType::F32);
+        let k = g.input("K", &[64, 64], DType::F32);
+        let v = g.input("V", &[64, 64], DType::F32);
+        let s = g.matmul(q, k);
+        let e = g.unary(UnaryKind::Exp, s);
+        let o = g.matmul(e, v);
+        g.mark_output(o);
+
+        let c = Compiler::new(MachineSpec::ryzen_5900x(), CompileOptions::default());
+        let m = c.compile(&g);
+        assert!(m.report.saturated);
+        assert!(m.report.extraction_cost > 0);
+        // Vectorize keeps the blocked layout through the chain: packed
+        // exp present, single unpack.
+        let packed_exp = m.graph.live_nodes().iter().any(|&id| {
+            let n = m.graph.node(id);
+            matches!(n.op, crate::ir::Op::Unary(UnaryKind::Exp)) && n.ty.is_packed()
+        });
+        assert!(packed_exp, "pipeline must select the pass-through layout:\n{}", m.graph.dump());
+        // Codegen produced steps and C++.
+        assert!(!m.plan.steps.is_empty());
+        let cpp = m.emit_cpp("attn");
+        assert!(cpp.contains("ntt::matmul"));
+    }
+
+    #[test]
+    fn pipeline_with_distribution_and_schedule() {
+        let cfg = Qwen3Config::tiny();
+        let g = decode_graph(&cfg, 4, Some(1));
+        let opts = CompileOptions {
+            devices: 2,
+            schedule: true,
+            mcts: MctsConfig { iterations: 20, ..Default::default() },
+            saturation_limits: RunnerLimits { max_iters: 3, max_nodes: 8_000 },
+            sat_extraction: false, // large graph: greedy extraction
+            ..Default::default()
+        };
+        let c = Compiler::new(MachineSpec::ryzen_5900x(), opts);
+        let m = c.compile(&g);
+        assert!(m.dist.is_some(), "distribution must produce a plan");
+        assert!(m.report.dist_comm_ns.unwrap() > 0);
+        assert!(m.schedule.is_some(), "scheduler must run on the attention core");
+        assert!(m.report.schedule_latency_s.unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Small algebraic cleanups shared by all pipelines.
+
+use crate::egraph::{ClassId, EGraph, ENode, Rewrite, Tree};
+use crate::ir::{Op, UnaryKind};
+
+/// `Neg(Neg(x)) -> x`, `Reshape(Reshape(x, s1), s2) -> Reshape(x, s2)`.
+pub struct FoldSelfInverse;
+
+impl Rewrite for FoldSelfInverse {
+    fn name(&self) -> &'static str {
+        "FoldSelfInverse"
+    }
+
+    fn matches(&self, eg: &EGraph, _class: ClassId, node: &ENode) -> Vec<Tree> {
+        let mut trees = Vec::new();
+        match &node.op {
+            Op::Unary(UnaryKind::Neg) => {
+                for inner in &eg.class(node.children[0]).nodes {
+                    if matches!(inner.op, Op::Unary(UnaryKind::Neg)) {
+                        trees.push(Tree::class(inner.children[0]));
+                    }
+                }
+            }
+            Op::Reshape { shape } => {
+                for inner in &eg.class(node.children[0]).nodes {
+                    if matches!(inner.op, Op::Reshape { .. }) {
+                        trees.push(Tree::node(
+                            Op::Reshape { shape: shape.clone() },
+                            vec![Tree::class(inner.children[0])],
+                        ));
+                    }
+                }
+                // Reshape to the same shape is the identity.
+                if eg.class(node.children[0]).ty.shape == *shape {
+                    trees.push(Tree::class(node.children[0]));
+                }
+            }
+            _ => {}
+        }
+        trees
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::Runner;
+    use crate::ir::{DType, Graph};
+
+    #[test]
+    fn double_neg_cancels() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4], DType::F32);
+        let n1 = g.unary(UnaryKind::Neg, a);
+        let n2 = g.unary(UnaryKind::Neg, n1);
+        g.mark_output(n2);
+        let (mut eg, map) = crate::egraph::EGraph::from_graph(&g);
+        Runner::new(&mut eg).run(&[&FoldSelfInverse]);
+        assert_eq!(eg.find(map[n2.index()]), eg.find(map[a.index()]));
+    }
+
+    #[test]
+    fn reshape_chain_folds() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4, 6], DType::F32);
+        let r1 = g.reshape(a, &[24]);
+        let r2 = g.reshape(r1, &[6, 4]);
+        g.mark_output(r2);
+        let (mut eg, map) = crate::egraph::EGraph::from_graph(&g);
+        Runner::new(&mut eg).run(&[&FoldSelfInverse]);
+        // r2's class must contain a direct reshape-of-a node.
+        let direct = eg.class(map[r2.index()]).nodes.iter().any(|n| {
+            matches!(&n.op, Op::Reshape { .. }) && eg.find(n.children[0]) == eg.find(map[a.index()])
+        });
+        assert!(direct);
+    }
+
+    #[test]
+    fn identity_reshape_is_input() {
+        let mut g = Graph::new();
+        let a = g.input("a", &[4, 6], DType::F32);
+        let r = g.reshape(a, &[4, 6]);
+        g.mark_output(r);
+        let (mut eg, map) = crate::egraph::EGraph::from_graph(&g);
+        Runner::new(&mut eg).run(&[&FoldSelfInverse]);
+        assert_eq!(eg.find(map[r.index()]), eg.find(map[a.index()]));
+    }
+}

@@ -1,0 +1,299 @@
+//! The destructive, sequential rewriter — the baseline that exhibits the
+//! phase-ordering problem (Fig. 2).
+//!
+//! Traditional term rewriting applies rules one at a time, in a fixed
+//! priority order, destructively replacing the matched subgraph. Once a
+//! rule fires, the alternative orderings are gone. Fig. 2(c) shows the
+//! failure mode: applying `CombineBinaryRightTrans` before
+//! `CombineBinaryLeftTrans` isolates one transpose and leaves a redundant
+//! operator behind. We reproduce that exact behaviour here for the
+//! ablation bench.
+
+use crate::ir::{Graph, Node, NodeId, Op, Shape};
+
+use super::transpose::{compose_perm, invert_perm};
+
+/// Canonicalization direction of the destructive rewriter. A greedy
+/// pipeline commits to one combine-binary direction (this is the
+/// phase-ordering commitment of Fig. 2): `RightFirst` pushes transposes
+/// found on the *right* operand (Fig. 2(c)'s suboptimal choice on the
+/// example graph), `LeftFirst` pushes those on the *left* (Fig. 2(b)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GreedyOrder {
+    RightFirst,
+    LeftFirst,
+}
+
+/// Destructively rewrite `g` to a fixed point with the Table-1 rules in
+/// the given priority order. Returns the rewritten graph and the number
+/// of rule applications.
+pub fn greedy_rewrite(g: &Graph, order: GreedyOrder) -> (Graph, usize) {
+    let mut nodes: Vec<Node> = g.nodes.clone();
+    let mut outputs: Vec<NodeId> = g.outputs.clone();
+    let mut applications = 0usize;
+
+    // Work on a mutable node vec with structural replacement: each rule
+    // application appends nodes and redirects one node in place.
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for idx in 0..nodes.len() {
+            let node = nodes[idx].clone();
+            let fired = match order {
+                GreedyOrder::RightFirst => {
+                    try_fold_nop(&mut nodes, idx, &node)
+                        || try_fold_two(&mut nodes, idx, &node)
+                        || try_binary_right(&mut nodes, idx, &node)
+                        || try_unary(&mut nodes, idx, &node)
+                }
+                GreedyOrder::LeftFirst => {
+                    try_fold_nop(&mut nodes, idx, &node)
+                        || try_fold_two(&mut nodes, idx, &node)
+                        || try_binary_left(&mut nodes, idx, &node)
+                        || try_unary(&mut nodes, idx, &node)
+                }
+            };
+            if fired {
+                applications += 1;
+                changed = true;
+            }
+        }
+    }
+
+    // Rebuild a clean graph (re-inferring types, dropping dead nodes).
+    // Rule applications may create forward references (replaced nodes
+    // point at appended ones), so emit by DFS from the outputs.
+    let mut out = Graph::new();
+    let mut remap: Vec<Option<NodeId>> = vec![None; nodes.len()];
+    fn emit(
+        nodes: &[Node],
+        i: usize,
+        out: &mut Graph,
+        remap: &mut Vec<Option<NodeId>>,
+    ) -> NodeId {
+        if let Some(id) = remap[i] {
+            return id;
+        }
+        let n = &nodes[i];
+        let inputs: Vec<NodeId> =
+            n.inputs.iter().map(|&x| emit(nodes, x.index(), out, remap)).collect();
+        let id = match &n.op {
+            Op::Input(name) => out.input(name, n.ty.shape.dims(), n.ty.dtype),
+            Op::Const(name) => out.constant(name, n.ty.shape.dims(), n.ty.dtype),
+            op => out.add(op.clone(), &inputs),
+        };
+        remap[i] = Some(id);
+        id
+    }
+    for o in &mut outputs {
+        *o = emit(&nodes, o.index(), &mut out, &mut remap);
+    }
+    for o in outputs {
+        out.mark_output(o);
+    }
+    // Re-extract live subgraph only.
+    let live = out.live_nodes();
+    let mut clean = Graph::new();
+    let mut remap2: std::collections::HashMap<NodeId, NodeId> = Default::default();
+    for id in live {
+        let n = out.node(id);
+        let inputs: Vec<NodeId> = n.inputs.iter().map(|x| remap2[x]).collect();
+        let new_id = match &n.op {
+            Op::Input(name) => clean.input(name, n.ty.shape.dims(), n.ty.dtype),
+            Op::Const(name) => clean.constant(name, n.ty.shape.dims(), n.ty.dtype),
+            op => clean.add(op.clone(), &inputs),
+        };
+        remap2.insert(id, new_id);
+    }
+    for o in &out.outputs {
+        clean.mark_output(remap2[o]);
+    }
+    (clean, applications)
+}
+
+fn as_transpose(nodes: &[Node], id: NodeId) -> Option<(Vec<usize>, NodeId)> {
+    match &nodes[id.index()].op {
+        Op::Transpose { perm } => Some((perm.clone(), nodes[id.index()].inputs[0])),
+        _ => None,
+    }
+}
+
+fn push_node(nodes: &mut Vec<Node>, op: Op, inputs: Vec<NodeId>) -> NodeId {
+    let in_tys: Vec<&crate::ir::TensorType> =
+        inputs.iter().map(|&i| &nodes[i.index()].ty).collect();
+    let ty = crate::ir::infer_type(&op, &in_tys).expect("greedy rewrite type error");
+    let id = NodeId(nodes.len() as u32);
+    nodes.push(Node { op, inputs, ty });
+    id
+}
+
+/// FoldNopTrans: replace the node in place with an identity view of its
+/// input (Reshape to same shape models the no-op).
+fn try_fold_nop(nodes: &mut Vec<Node>, idx: usize, node: &Node) -> bool {
+    if let Op::Transpose { perm } = &node.op {
+        if Shape::is_identity_perm(perm) {
+            let src = node.inputs[0];
+            nodes[idx] = Node {
+                op: Op::Reshape { shape: nodes[src.index()].ty.shape.clone() },
+                inputs: vec![src],
+                ty: nodes[src.index()].ty.clone(),
+            };
+            return true;
+        }
+    }
+    false
+}
+
+fn try_fold_two(nodes: &mut Vec<Node>, idx: usize, node: &Node) -> bool {
+    if let Op::Transpose { perm: p2 } = &node.op {
+        if let Some((p1, src)) = as_transpose(nodes, node.inputs[0]) {
+            let composed = compose_perm(&p1, p2);
+            let ty = nodes[src.index()].ty.clone();
+            let mut out_ty = ty.clone();
+            out_ty.shape = ty.shape.permute(&composed);
+            nodes[idx] = Node { op: Op::Transpose { perm: composed }, inputs: vec![src], ty: out_ty };
+            return true;
+        }
+    }
+    false
+}
+
+fn try_unary(nodes: &mut Vec<Node>, idx: usize, node: &Node) -> bool {
+    if let Op::Unary(kind) = node.op {
+        if let Some((perm, src)) = as_transpose(nodes, node.inputs[0]) {
+            let u = push_node(nodes, Op::Unary(kind), vec![src]);
+            let out_ty = node.ty.clone();
+            nodes[idx] = Node { op: Op::Transpose { perm }, inputs: vec![u], ty: out_ty };
+            return true;
+        }
+    }
+    false
+}
+
+fn try_binary_left(nodes: &mut Vec<Node>, idx: usize, node: &Node) -> bool {
+    if let Op::Binary(kind) = node.op {
+        let (l, r) = (node.inputs[0], node.inputs[1]);
+        if nodes[l.index()].ty.shape != nodes[r.index()].ty.shape {
+            return false;
+        }
+        if let Some((perm, a)) = as_transpose(nodes, l) {
+            // Destructive: the transpose on the left is consumed; the
+            // right operand gets an inverse transpose.
+            let inv = invert_perm(&perm);
+            let tb = push_node(nodes, Op::Transpose { perm: inv }, vec![r]);
+            let bin = push_node(nodes, Op::Binary(kind), vec![a, tb]);
+            let out_ty = node.ty.clone();
+            nodes[idx] = Node { op: Op::Transpose { perm }, inputs: vec![bin], ty: out_ty };
+            return true;
+        }
+    }
+    false
+}
+
+fn try_binary_right(nodes: &mut Vec<Node>, idx: usize, node: &Node) -> bool {
+    if let Op::Binary(kind) = node.op {
+        let (l, r) = (node.inputs[0], node.inputs[1]);
+        if nodes[l.index()].ty.shape != nodes[r.index()].ty.shape {
+            return false;
+        }
+        if let Some((perm, b)) = as_transpose(nodes, r) {
+            let inv = invert_perm(&perm);
+            let ta = push_node(nodes, Op::Transpose { perm: inv }, vec![l]);
+            let bin = push_node(nodes, Op::Binary(kind), vec![ta, b]);
+            let out_ty = node.ty.clone();
+            nodes[idx] = Node { op: Op::Transpose { perm }, inputs: vec![bin], ty: out_ty };
+            return true;
+        }
+    }
+    false
+}
+
+/// Count live transpose nodes (the Fig. 2 quality metric).
+pub fn count_transposes(g: &Graph) -> usize {
+    g.live_nodes()
+        .iter()
+        .filter(|&&id| matches!(g.node(id).op, Op::Transpose { .. }))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{BinaryKind, DType, UnaryKind};
+
+    /// Build the Fig. 2(a) graph: out = T(Add(T(A), Exp(T(B)))).
+    fn figure2_graph() -> (Graph, NodeId) {
+        let mut g = Graph::new();
+        let a = g.input("A", &[8, 8], DType::F32);
+        let b = g.input("B", &[8, 8], DType::F32);
+        let ta = g.transpose(a, &[1, 0]);
+        let tb = g.transpose(b, &[1, 0]);
+        let ub = g.unary(UnaryKind::Exp, tb);
+        let sum = g.binary(BinaryKind::Add, ta, ub);
+        let out = g.transpose(sum, &[1, 0]);
+        g.mark_output(out);
+        (g, out)
+    }
+
+    /// Asymmetric variant where the greedy direction choice genuinely
+    /// diverges: out = Add(A, Exp(T(B))). Pushing the (post-unary-commute)
+    /// right transpose outward forces an un-cancellable inverse transpose
+    /// onto the plain input A *and* an outer transpose — the greedy
+    /// rewriter makes the graph WORSE, while left-first leaves the single
+    /// original transpose in place.
+    fn asymmetric_graph() -> Graph {
+        let mut g = Graph::new();
+        let a = g.input("A", &[8, 8], DType::F32);
+        let b = g.input("B", &[8, 8], DType::F32);
+        let tb = g.transpose(b, &[1, 0]);
+        let ub = g.unary(UnaryKind::Exp, tb);
+        let sum = g.binary(BinaryKind::Add, a, ub);
+        g.mark_output(sum);
+        g
+    }
+
+    #[test]
+    fn greedy_left_first_eliminates_all_fig2() {
+        let (g, _) = figure2_graph();
+        let (left, _) = greedy_rewrite(&g, GreedyOrder::LeftFirst);
+        assert_eq!(
+            count_transposes(&left),
+            0,
+            "left-first eliminates all transposes:\n{}",
+            left.dump()
+        );
+    }
+
+    #[test]
+    fn greedy_right_first_is_suboptimal() {
+        let g = asymmetric_graph();
+        let (right, _) = greedy_rewrite(&g, GreedyOrder::RightFirst);
+        let (left, _) = greedy_rewrite(&g, GreedyOrder::LeftFirst);
+        let (rt, lt) = (count_transposes(&right), count_transposes(&left));
+        assert!(
+            rt > lt,
+            "right-first must leave more transposes (got right={rt}, left={lt})\nright:\n{}\nleft:\n{}",
+            right.dump(),
+            left.dump()
+        );
+    }
+
+    #[test]
+    fn greedy_preserves_semantics_shape() {
+        let (g, out) = figure2_graph();
+        let want = g.node(out).ty.clone();
+        for order in [GreedyOrder::RightFirst, GreedyOrder::LeftFirst] {
+            let (h, _) = greedy_rewrite(&g, order);
+            let got = &h.node(*h.outputs.last().unwrap()).ty;
+            assert_eq!(got.shape, want.shape, "{order:?}");
+            assert_eq!(got.dtype, want.dtype);
+        }
+    }
+
+    #[test]
+    fn fixed_point_terminates() {
+        let (g, _) = figure2_graph();
+        let (_, apps) = greedy_rewrite(&g, GreedyOrder::LeftFirst);
+        assert!(apps > 0 && apps < 100);
+    }
+}

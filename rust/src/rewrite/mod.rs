@@ -1,0 +1,44 @@
+//! Rewrite rules and rewriting strategies.
+//!
+//! * [`transpose`] — Table 1: CombineBinaryLeftTrans / RightTrans,
+//!   CombineUnaryTrans, FoldTwoTrans, FoldNopTrans.
+//! * [`pack`] — Table 2: MetaPackOperation (exploration) and FoldNopPack
+//!   (optimization), the Auto Vectorize pass (§3.1.2).
+//! * [`algebraic`] — small algebraic cleanups used by all pipelines.
+//! * [`greedy`] — the *destructive* sequential rewriter traditional
+//!   compilers use; it exhibits the phase-ordering problem of Fig. 2 and
+//!   serves as the ablation baseline.
+
+pub mod algebraic;
+pub mod greedy;
+pub mod pack;
+pub mod transpose;
+
+use crate::egraph::Rewrite;
+
+/// The full nncase rule set (Tables 1 + 2 + algebraic).
+pub fn all_rules(pack_options: &pack::PackOptions) -> Vec<Box<dyn Rewrite>> {
+    let mut rules = transpose_rules();
+    rules.extend(pack_rules(pack_options));
+    rules.push(Box::new(algebraic::FoldSelfInverse));
+    rules
+}
+
+/// Table 1 rules only.
+pub fn transpose_rules() -> Vec<Box<dyn Rewrite>> {
+    vec![
+        Box::new(transpose::CombineBinaryLeftTrans),
+        Box::new(transpose::CombineBinaryRightTrans),
+        Box::new(transpose::CombineUnaryTrans),
+        Box::new(transpose::FoldTwoTrans),
+        Box::new(transpose::FoldNopTrans),
+    ]
+}
+
+/// Table 2 rules only.
+pub fn pack_rules(options: &pack::PackOptions) -> Vec<Box<dyn Rewrite>> {
+    vec![
+        Box::new(pack::MetaPackOperation::new(options.clone())),
+        Box::new(pack::FoldNopPack),
+    ]
+}

@@ -1,0 +1,197 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! Python runs once at build time (`make artifacts`): L2 (JAX model) and
+//! L1 (Pallas kernels, `interpret=True`) lower to **HLO text**
+//! (`artifacts/*.hlo.txt` — text, not serialized proto: xla_extension
+//! 0.5.1 rejects jax≥0.5's 64-bit-id protos). This module loads the
+//! artifacts through the `xla` crate's PJRT CPU client and executes them
+//! from the Rust request path, with a per-path executable cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A loaded artifact manifest: name -> relative HLO path plus metadata.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub path: String,
+    /// "k=v" metadata pairs from the manifest (shapes, dtypes).
+    pub meta: HashMap<String, String>,
+}
+
+impl Manifest {
+    /// Parse the simple line-oriented manifest `aot.py` writes:
+    /// `name<TAB>path<TAB>k=v<TAB>k=v...` (comments with `#`).
+    pub fn parse(text: &str) -> Manifest {
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let (Some(name), Some(path)) = (parts.next(), parts.next()) else {
+                continue;
+            };
+            let mut meta = HashMap::new();
+            for kv in parts {
+                if let Some((k, v)) = kv.split_once('=') {
+                    meta.insert(k.to_string(), v.to_string());
+                }
+            }
+            entries.push(ManifestEntry {
+                name: name.to_string(),
+                path: path.to_string(),
+                meta,
+            });
+        }
+        Manifest { entries }
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Ok(Self::parse(&text))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+/// The PJRT runtime with an executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(PjrtRuntime { client, artifacts_dir: artifacts_dir.into(), cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached by name).
+    pub fn load(&mut self, name: &str, rel_path: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts_dir.join(rel_path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a cached executable on f32 inputs; returns the flat f32
+    /// outputs of the (single-tuple) result.
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.cache.get(name).context("artifact not loaded")?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .map_err(|e| anyhow::anyhow!("reshape input: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True; unpack all elements.
+        let tuple = result.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            out.push(t.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?);
+        }
+        Ok(out)
+    }
+
+    /// Execute with mixed arguments (f32 tensors + i32 scalars), in the
+    /// artifact's positional order.
+    pub fn run_args(&self, name: &str, args: &[ArgValue<'_>]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.cache.get(name).context("artifact not loaded")?;
+        let mut literals = Vec::with_capacity(args.len());
+        for a in args {
+            literals.push(match a {
+                ArgValue::F32(data, dims) => {
+                    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data)
+                        .reshape(&dims_i64)
+                        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+                }
+                ArgValue::I32Scalar(v) => xla::Literal::scalar(*v),
+            });
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync {name}: {e:?}"))?;
+        let tuple = result.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            out.push(t.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?);
+        }
+        Ok(out)
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.cache.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// One positional argument for [`PjrtRuntime::run_args`].
+pub enum ArgValue<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32Scalar(i32),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_lines_and_meta() {
+        let m = Manifest::parse(
+            "# comment\nmatmul\tkernels/matmul.hlo.txt\tm=64\tn=64\n\ndecode\tdecode.hlo.txt\n",
+        );
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("matmul").unwrap();
+        assert_eq!(e.path, "kernels/matmul.hlo.txt");
+        assert_eq!(e.meta["m"], "64");
+        assert!(m.get("missing").is_none());
+    }
+
+    #[test]
+    fn manifest_ignores_malformed() {
+        let m = Manifest::parse("justaname\n");
+        assert!(m.entries.is_empty());
+    }
+}

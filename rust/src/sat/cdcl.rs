@@ -1,0 +1,647 @@
+//! A CDCL SAT solver (two-watched literals, 1UIP learning, VSIDS-lite
+//! activities, Luby restarts, assumption interface).
+
+/// Variable index (0-based).
+pub type Var = u32;
+
+/// A literal: variable + polarity, encoded as `var * 2 + (neg as u32)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Lit(pub u32);
+
+impl Lit {
+    pub fn pos(v: Var) -> Lit {
+        Lit(v * 2)
+    }
+
+    pub fn neg(v: Var) -> Lit {
+        Lit(v * 2 + 1)
+    }
+
+    pub fn var(self) -> Var {
+        self.0 / 2
+    }
+
+    pub fn is_neg(self) -> bool {
+        self.0 & 1 == 1
+    }
+
+    pub fn negate(self) -> Lit {
+        Lit(self.0 ^ 1)
+    }
+
+    fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::ops::Not for Lit {
+    type Output = Lit;
+    fn not(self) -> Lit {
+        self.negate()
+    }
+}
+
+/// Tri-state assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Assign {
+    Unset,
+    True,
+    False,
+}
+
+/// Result of a solve call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SatResult {
+    /// Satisfiable; the model maps each var to its value.
+    Sat(Vec<bool>),
+    Unsat,
+}
+
+impl SatResult {
+    pub fn is_sat(&self) -> bool {
+        matches!(self, SatResult::Sat(_))
+    }
+
+    pub fn model(&self) -> Option<&[bool]> {
+        match self {
+            SatResult::Sat(m) => Some(m),
+            SatResult::Unsat => None,
+        }
+    }
+}
+
+const REASON_NONE: u32 = u32::MAX;
+const REASON_ASSUMPTION: u32 = u32::MAX - 1;
+
+/// The CDCL solver.
+pub struct Solver {
+    nvars: u32,
+    /// Clause arena; clause i occupies `clauses[i]`.
+    clauses: Vec<Vec<Lit>>,
+    /// For each literal, the clauses watching it.
+    watches: Vec<Vec<u32>>,
+    assign: Vec<Assign>,
+    /// Decision level per variable.
+    level: Vec<u32>,
+    /// Reason clause per variable (index into `clauses`), REASON_NONE for
+    /// decisions/unset, REASON_ASSUMPTION for assumptions.
+    reason: Vec<u32>,
+    trail: Vec<Lit>,
+    trail_lim: Vec<usize>,
+    prop_head: usize,
+    /// VSIDS-style activity.
+    activity: Vec<f64>,
+    act_inc: f64,
+    /// Saved phases for phase-saving.
+    phase: Vec<bool>,
+    /// Unit input clauses, asserted at level 0 at the start of solve.
+    units: Vec<(Lit, u32)>,
+    /// Set true if an empty clause was added.
+    trivially_unsat: bool,
+    /// Statistics.
+    pub conflicts: u64,
+    pub propagations: u64,
+}
+
+impl Default for Solver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Solver {
+    pub fn new() -> Self {
+        Solver {
+            nvars: 0,
+            clauses: Vec::new(),
+            watches: Vec::new(),
+            assign: Vec::new(),
+            level: Vec::new(),
+            reason: Vec::new(),
+            trail: Vec::new(),
+            trail_lim: Vec::new(),
+            prop_head: 0,
+            activity: Vec::new(),
+            act_inc: 1.0,
+            phase: Vec::new(),
+            units: Vec::new(),
+            trivially_unsat: false,
+            conflicts: 0,
+            propagations: 0,
+        }
+    }
+
+    /// Allocate a fresh variable.
+    pub fn new_var(&mut self) -> Var {
+        let v = self.nvars;
+        self.nvars += 1;
+        self.watches.push(Vec::new());
+        self.watches.push(Vec::new());
+        self.assign.push(Assign::Unset);
+        self.level.push(0);
+        self.reason.push(REASON_NONE);
+        self.activity.push(0.0);
+        self.phase.push(false);
+        v
+    }
+
+    pub fn num_vars(&self) -> u32 {
+        self.nvars
+    }
+
+    fn value(&self, l: Lit) -> Assign {
+        match self.assign[l.var() as usize] {
+            Assign::Unset => Assign::Unset,
+            Assign::True => {
+                if l.is_neg() {
+                    Assign::False
+                } else {
+                    Assign::True
+                }
+            }
+            Assign::False => {
+                if l.is_neg() {
+                    Assign::True
+                } else {
+                    Assign::False
+                }
+            }
+        }
+    }
+
+    /// Add a clause (empty clause makes the instance trivially UNSAT).
+    /// Must be called before `solve`; the solver is not incremental across
+    /// learnt state but may be re-solved with different assumptions.
+    pub fn add_clause(&mut self, lits: &[Lit]) {
+        // Deduplicate; drop tautologies.
+        let mut ls: Vec<Lit> = lits.to_vec();
+        ls.sort();
+        ls.dedup();
+        for w in ls.windows(2) {
+            if w[0].var() == w[1].var() {
+                return; // x ∨ ¬x: tautology
+            }
+        }
+        match ls.len() {
+            0 => self.trivially_unsat = true,
+            _ => {
+                let ci = self.clauses.len() as u32;
+                self.watches[ls[0].index()].push(ci);
+                if ls.len() > 1 {
+                    self.watches[ls[1].index()].push(ci);
+                } else {
+                    // Unit clauses are asserted at level 0 when solving.
+                    self.units.push((ls[0], ci));
+                }
+                self.clauses.push(ls);
+            }
+        }
+    }
+
+    fn enqueue(&mut self, l: Lit, reason: u32) -> bool {
+        match self.value(l) {
+            Assign::True => true,
+            Assign::False => false,
+            Assign::Unset => {
+                let v = l.var() as usize;
+                self.assign[v] = if l.is_neg() { Assign::False } else { Assign::True };
+                self.level[v] = self.trail_lim.len() as u32;
+                self.reason[v] = reason;
+                self.phase[v] = !l.is_neg();
+                self.trail.push(l);
+                true
+            }
+        }
+    }
+
+    /// Unit propagation. Returns a conflicting clause index or None.
+    fn propagate(&mut self) -> Option<u32> {
+        while self.prop_head < self.trail.len() {
+            let l = self.trail[self.prop_head];
+            self.prop_head += 1;
+            self.propagations += 1;
+            let falsified = !l;
+            let mut i = 0;
+            // Take the watch list for the falsified literal.
+            let mut watch_list = std::mem::take(&mut self.watches[falsified.index()]);
+            while i < watch_list.len() {
+                let ci = watch_list[i];
+                // Ensure the falsified literal is at position 1.
+                {
+                    let c = &mut self.clauses[ci as usize];
+                    if c.len() > 1 && c[0] == falsified {
+                        c.swap(0, 1);
+                    }
+                }
+                let first = self.clauses[ci as usize][0];
+                if self.value(first) == Assign::True {
+                    i += 1;
+                    continue; // clause already satisfied
+                }
+                // Look for a new literal to watch.
+                let mut moved = false;
+                let clen = self.clauses[ci as usize].len();
+                for k in 2..clen {
+                    let lk = self.clauses[ci as usize][k];
+                    if self.value(lk) != Assign::False {
+                        self.clauses[ci as usize].swap(1, k);
+                        self.watches[lk.index()].push(ci);
+                        // Remove from current list.
+                        watch_list.swap_remove(i);
+                        moved = true;
+                        break;
+                    }
+                }
+                if moved {
+                    continue;
+                }
+                // Clause is unit or conflicting.
+                if !self.enqueue(first, ci) {
+                    // Conflict: restore remaining watches.
+                    self.watches[falsified.index()].extend_from_slice(&watch_list);
+                    return Some(ci);
+                }
+                i += 1;
+            }
+            self.watches[falsified.index()].extend_from_slice(&watch_list);
+        }
+        None
+    }
+
+    fn bump(&mut self, v: Var) {
+        self.activity[v as usize] += self.act_inc;
+        if self.activity[v as usize] > 1e100 {
+            for a in &mut self.activity {
+                *a *= 1e-100;
+            }
+            self.act_inc *= 1e-100;
+        }
+    }
+
+    /// 1UIP conflict analysis (MiniSat-style). Returns (learnt clause,
+    /// backjump level).
+    fn analyze(&mut self, confl: u32) -> (Vec<Lit>, u32) {
+        let cur_level = self.trail_lim.len() as u32;
+        let mut learnt: Vec<Lit> = Vec::new();
+        let mut seen = vec![false; self.nvars as usize];
+        let mut counter = 0usize;
+        let mut confl = confl;
+        let mut idx = self.trail.len();
+        let mut resolve_var: Option<Var> = None;
+        let uip;
+
+        loop {
+            for q in self.clauses[confl as usize].clone() {
+                // Skip the literal we are resolving on.
+                if Some(q.var()) == resolve_var {
+                    continue;
+                }
+                let v = q.var() as usize;
+                if !seen[v] && self.level[v] > 0 {
+                    seen[v] = true;
+                    self.bump(q.var());
+                    if self.level[v] >= cur_level {
+                        counter += 1;
+                    } else {
+                        learnt.push(q);
+                    }
+                }
+            }
+            // Walk the trail backwards to the next seen literal.
+            loop {
+                idx -= 1;
+                if seen[self.trail[idx].var() as usize] {
+                    break;
+                }
+            }
+            let l = self.trail[idx];
+            seen[l.var() as usize] = false;
+            counter -= 1;
+            if counter == 0 {
+                uip = !l;
+                break;
+            }
+            // counter > 0 implies another current-level literal sits above
+            // the decision, so l cannot be the decision: it has a reason.
+            confl = self.reason[l.var() as usize];
+            debug_assert!(confl != REASON_NONE && confl != REASON_ASSUMPTION);
+            resolve_var = Some(l.var());
+        }
+        learnt.insert(0, uip);
+        // Backjump level = max level among the non-UIP literals.
+        let bj = learnt[1..]
+            .iter()
+            .map(|l| self.level[l.var() as usize])
+            .max()
+            .unwrap_or(0);
+        (learnt, bj)
+    }
+
+    fn backtrack(&mut self, to_level: u32) {
+        while self.trail_lim.len() as u32 > to_level {
+            let lim = self.trail_lim.pop().unwrap();
+            while self.trail.len() > lim {
+                let l = self.trail.pop().unwrap();
+                let v = l.var() as usize;
+                self.assign[v] = Assign::Unset;
+                self.reason[v] = REASON_NONE;
+            }
+        }
+        self.prop_head = self.trail.len().min(self.prop_head);
+        self.prop_head = self.trail.len();
+    }
+
+    fn decide(&mut self) -> Option<Lit> {
+        let mut best: Option<(Var, f64)> = None;
+        for v in 0..self.nvars {
+            if self.assign[v as usize] == Assign::Unset {
+                let a = self.activity[v as usize];
+                if best.map(|(_, ba)| a > ba).unwrap_or(true) {
+                    best = Some((v, a));
+                }
+            }
+        }
+        best.map(|(v, _)| {
+            if self.phase[v as usize] {
+                Lit::pos(v)
+            } else {
+                Lit::neg(v)
+            }
+        })
+    }
+
+    fn luby(i: u64) -> u64 {
+        // Luby sequence (1-indexed): 1 1 2 1 1 2 4 1 1 2 1 1 2 4 8 ...
+        let mut i = i + 1;
+        loop {
+            let mut k = 1u64;
+            while (1u64 << k) - 1 < i {
+                k += 1;
+            }
+            if (1u64 << k) - 1 == i {
+                return 1u64 << (k - 1);
+            }
+            i -= (1u64 << (k - 1)) - 1;
+        }
+    }
+
+    /// Solve without assumptions.
+    pub fn solve(&mut self) -> SatResult {
+        self.solve_with(&[])
+    }
+
+    /// Solve under `assumptions` (each forced true at level >= 1).
+    pub fn solve_with(&mut self, assumptions: &[Lit]) -> SatResult {
+        if self.trivially_unsat {
+            return SatResult::Unsat;
+        }
+        self.backtrack(0);
+        // Assert all unit input clauses at level 0.
+        for (lit, ci) in self.units.clone() {
+            if !self.enqueue(lit, ci) {
+                return SatResult::Unsat;
+            }
+        }
+        if self.propagate().is_some() {
+            return SatResult::Unsat;
+        }
+        let mut restart_count = 0u64;
+        let mut conflicts_until_restart = 100 * Self::luby(restart_count);
+
+        loop {
+            // (Re-)apply assumptions above the current level.
+            while (self.trail_lim.len()) < assumptions.len() {
+                let a = assumptions[self.trail_lim.len()];
+                match self.value(a) {
+                    Assign::True => {
+                        // Already implied: open an empty decision level to
+                        // keep the level <-> assumption indexing aligned.
+                        self.trail_lim.push(self.trail.len());
+                    }
+                    Assign::False => return SatResult::Unsat,
+                    Assign::Unset => {
+                        self.trail_lim.push(self.trail.len());
+                        self.enqueue(a, REASON_ASSUMPTION);
+                    }
+                }
+                if let Some(confl) = self.propagate() {
+                    // Conflict directly under assumptions.
+                    let lvl = self.trail_lim.len() as u32;
+                    if lvl <= assumptions.len() as u32 {
+                        // Cannot learn past assumptions in this simple
+                        // scheme: check whether the conflict is at level 0.
+                        let all_assumed = self.clauses[confl as usize]
+                            .iter()
+                            .all(|l| self.level[l.var() as usize] <= assumptions.len() as u32);
+                        let _ = all_assumed;
+                        return SatResult::Unsat;
+                    }
+                }
+            }
+
+            match self.propagate() {
+                Some(confl) => {
+                    self.conflicts += 1;
+                    let cur = self.trail_lim.len() as u32;
+                    if cur == 0 {
+                        return SatResult::Unsat;
+                    }
+                    if cur <= assumptions.len() as u32 {
+                        return SatResult::Unsat;
+                    }
+                    let (learnt, bj) = self.analyze(confl);
+                    let bj = bj.max(assumptions.len() as u32);
+                    self.backtrack(bj);
+                    let ci = self.clauses.len() as u32;
+                    let unit = learnt[0];
+                    // Install watches on the learnt clause.
+                    self.watches[learnt[0].index()].push(ci);
+                    if learnt.len() > 1 {
+                        self.watches[learnt[1].index()].push(ci);
+                    }
+                    self.clauses.push(learnt);
+                    if !self.enqueue(unit, ci) {
+                        return SatResult::Unsat;
+                    }
+                    self.act_inc *= 1.05;
+                    if self.conflicts % conflicts_until_restart == 0 {
+                        restart_count += 1;
+                        conflicts_until_restart = 100 * Self::luby(restart_count);
+                        self.backtrack(assumptions.len() as u32);
+                    }
+                }
+                None => match self.decide() {
+                    Some(l) => {
+                        self.trail_lim.push(self.trail.len());
+                        self.enqueue(l, REASON_NONE);
+                    }
+                    None => {
+                        let model: Vec<bool> = self
+                            .assign
+                            .iter()
+                            .map(|a| *a == Assign::True)
+                            .collect();
+                        return SatResult::Sat(model);
+                    }
+                },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lit(v: i32) -> Lit {
+        if v > 0 {
+            Lit::pos((v - 1) as u32)
+        } else {
+            Lit::neg((-v - 1) as u32)
+        }
+    }
+
+    fn solver_with(nvars: u32, clauses: &[&[i32]]) -> Solver {
+        let mut s = Solver::new();
+        for _ in 0..nvars {
+            s.new_var();
+        }
+        for c in clauses {
+            let ls: Vec<Lit> = c.iter().map(|&v| lit(v)).collect();
+            s.add_clause(&ls);
+        }
+        s
+    }
+
+    #[test]
+    fn trivial_sat() {
+        let mut s = solver_with(2, &[&[1, 2], &[-1, 2]]);
+        let r = s.solve();
+        assert!(r.is_sat());
+        let m = r.model().unwrap();
+        assert!(m[1], "x2 must be true");
+    }
+
+    #[test]
+    fn trivial_unsat() {
+        let mut s = solver_with(1, &[&[1], &[-1]]);
+        assert_eq!(s.solve(), SatResult::Unsat);
+    }
+
+    #[test]
+    fn empty_clause_unsat() {
+        let mut s = Solver::new();
+        s.new_var();
+        s.add_clause(&[]);
+        assert_eq!(s.solve(), SatResult::Unsat);
+    }
+
+    #[test]
+    fn tautology_removed() {
+        let mut s = solver_with(1, &[&[1, -1]]);
+        assert!(s.solve().is_sat());
+    }
+
+    #[test]
+    fn chain_implications() {
+        // x1 -> x2 -> x3 -> ... -> x10, x1 forced.
+        let mut s = Solver::new();
+        for _ in 0..10 {
+            s.new_var();
+        }
+        s.add_clause(&[Lit::pos(0)]);
+        for i in 0..9 {
+            s.add_clause(&[Lit::neg(i), Lit::pos(i + 1)]);
+        }
+        let r = s.solve();
+        let m = r.model().unwrap();
+        assert!(m.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn pigeonhole_3_into_2_unsat() {
+        // PHP(3,2): 3 pigeons, 2 holes. p_{i,j} = pigeon i in hole j.
+        // var index = i*2 + j.
+        let mut s = Solver::new();
+        for _ in 0..6 {
+            s.new_var();
+        }
+        for i in 0..3u32 {
+            s.add_clause(&[Lit::pos(i * 2), Lit::pos(i * 2 + 1)]);
+        }
+        for j in 0..2u32 {
+            for i1 in 0..3u32 {
+                for i2 in (i1 + 1)..3u32 {
+                    s.add_clause(&[Lit::neg(i1 * 2 + j), Lit::neg(i2 * 2 + j)]);
+                }
+            }
+        }
+        assert_eq!(s.solve(), SatResult::Unsat);
+    }
+
+    #[test]
+    fn assumptions_flip_result() {
+        let mut s = solver_with(2, &[&[1, 2]]);
+        assert!(s.solve_with(&[lit(-1)]).is_sat());
+        assert!(s.solve_with(&[lit(-1), lit(-2)]) == SatResult::Unsat);
+        // Solver is reusable after an UNSAT-under-assumptions call.
+        assert!(s.solve().is_sat());
+    }
+
+    #[test]
+    fn model_satisfies_all_clauses_random() {
+        // Randomized 3-SAT instances cross-checked by direct evaluation.
+        let mut rng = crate::util::Rng::new(0xC0FFEE);
+        for round in 0..30 {
+            let nv = 8 + (round % 5);
+            let nc = 20 + (round % 17);
+            let mut clauses: Vec<Vec<i32>> = Vec::new();
+            for _ in 0..nc {
+                let mut c = Vec::new();
+                for _ in 0..3 {
+                    let v = rng.below(nv) as i32 + 1;
+                    c.push(if rng.next_f64() < 0.5 { v } else { -v });
+                }
+                clauses.push(c);
+            }
+            let refs: Vec<&[i32]> = clauses.iter().map(|c| c.as_slice()).collect();
+            let mut s = solver_with(nv as u32, &refs);
+            // Brute-force reference.
+            let mut brute_sat = false;
+            'outer: for m in 0u32..(1 << nv) {
+                for c in &clauses {
+                    if !c.iter().any(|&l| {
+                        let v = (l.unsigned_abs() - 1) as usize;
+                        let val = (m >> v) & 1 == 1;
+                        if l > 0 {
+                            val
+                        } else {
+                            !val
+                        }
+                    }) {
+                        continue 'outer;
+                    }
+                }
+                brute_sat = true;
+                break;
+            }
+            let r = s.solve();
+            assert_eq!(r.is_sat(), brute_sat, "round {round}");
+            if let SatResult::Sat(m) = r {
+                for c in &clauses {
+                    assert!(
+                        c.iter().any(|&l| {
+                            let v = (l.unsigned_abs() - 1) as usize;
+                            if l > 0 {
+                                m[v]
+                            } else {
+                                !m[v]
+                            }
+                        }),
+                        "model must satisfy clause {c:?}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,316 @@
+//! Weighted Partial MaxSAT on top of the CDCL core.
+//!
+//! Hard clauses must hold; each soft clause carries a weight and the
+//! solver minimizes the total weight of *violated* soft clauses. This is
+//! the form e-graph extraction takes in §3.1.1 (select e-nodes with
+//! minimal total Roofline cost subject to the well-formedness constraints)
+//! — WPMAXSAT per He et al.
+//!
+//! Algorithm: relax every soft clause with a fresh selector `rᵢ`
+//! (`clause ∨ rᵢ`), find any model, then binary-search the optimal cost
+//! with a sequential-weighted-counter bound `Σ wᵢ·rᵢ ≤ k` re-encoded per
+//! probe. Instances here are small (hundreds of soft clauses), so probe
+//! re-encoding is cheaper than incremental totalizers.
+
+use super::{encode_pb_leq, Lit, SatResult, Solver};
+
+/// Result of a WPMaxSAT solve.
+#[derive(Debug, Clone)]
+pub struct MaxSatResult {
+    /// Model over the original variables.
+    pub model: Vec<bool>,
+    /// Total weight of violated soft clauses.
+    pub cost: u64,
+}
+
+/// Weighted Partial MaxSAT solver (one-shot builder).
+#[derive(Default)]
+pub struct WpmsSolver {
+    nvars: u32,
+    hard: Vec<Vec<Lit>>,
+    soft: Vec<(Vec<Lit>, u64)>,
+    /// Hard pseudo-boolean constraints `Σ wᵢ·lᵢ ≤ k` (used for the Auto
+    /// Distribution memory-capacity constraint, Observation 2).
+    pb_hard: Vec<(Vec<(Lit, u64)>, u64)>,
+}
+
+impl WpmsSolver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn new_var(&mut self) -> u32 {
+        let v = self.nvars;
+        self.nvars += 1;
+        v
+    }
+
+    /// Reserve variables 0..n (idempotent).
+    pub fn ensure_vars(&mut self, n: u32) {
+        self.nvars = self.nvars.max(n);
+    }
+
+    pub fn add_hard(&mut self, lits: &[Lit]) {
+        self.hard.push(lits.to_vec());
+    }
+
+    /// Add a soft clause with `weight`; violating it costs `weight`.
+    pub fn add_soft(&mut self, lits: &[Lit], weight: u64) {
+        if weight == 0 {
+            return;
+        }
+        self.soft.push((lits.to_vec(), weight));
+    }
+
+    /// Add a hard pseudo-boolean constraint `Σ wᵢ·lᵢ ≤ bound`.
+    pub fn add_pb_leq(&mut self, terms: &[(Lit, u64)], bound: u64) {
+        self.pb_hard.push((terms.to_vec(), bound));
+    }
+
+    /// Quantize weights so their total is at most `max_total`. Keeps the
+    /// pseudo-boolean encodings polynomial for Roofline-scale (ns) weights
+    /// at the price of a bounded relative error (≤ n/max_total).
+    fn quantize(weights: &[u64], max_total: u64) -> (Vec<u64>, u64) {
+        let total: u64 = weights.iter().sum();
+        let q = (total / max_total).max(1);
+        (weights.iter().map(|&w| (w / q).max(1)).collect(), q)
+    }
+
+    fn build(&self, quant_weights: &[u64], cost_bound: Option<u64>) -> (Solver, Vec<(Lit, u64)>) {
+        let mut s = Solver::new();
+        for _ in 0..self.nvars {
+            s.new_var();
+        }
+        for c in &self.hard {
+            s.add_clause(c);
+        }
+        for (terms, bound) in &self.pb_hard {
+            // Quantize hard PB constraints conservatively (round weights
+            // up, bound down) so the true constraint is never violated.
+            let q = (*bound / 1024).max(1);
+            let qterms: Vec<(Lit, u64)> =
+                terms.iter().map(|&(l, w)| (l, w.div_ceil(q))).collect();
+            encode_pb_leq(&mut s, &qterms, bound / q);
+        }
+        let mut selectors = Vec::with_capacity(self.soft.len());
+        for ((c, _), qw) in self.soft.iter().zip(quant_weights) {
+            let r = Lit::pos(s.new_var());
+            let mut cl = c.clone();
+            cl.push(r);
+            s.add_clause(&cl);
+            selectors.push((r, *qw));
+        }
+        if let Some(k) = cost_bound {
+            encode_pb_leq(&mut s, &selectors, k);
+        }
+        (s, selectors)
+    }
+
+    fn model_cost_with(&self, model: &[bool], weights: &[u64]) -> u64 {
+        self.soft
+            .iter()
+            .zip(weights)
+            .map(|((c, _), w)| {
+                let sat = c.iter().any(|l| {
+                    let v = model[l.var() as usize];
+                    if l.is_neg() {
+                        !v
+                    } else {
+                        v
+                    }
+                });
+                if sat {
+                    0
+                } else {
+                    *w
+                }
+            })
+            .sum()
+    }
+
+    fn model_cost(&self, model: &[bool]) -> u64 {
+        let weights: Vec<u64> = self.soft.iter().map(|(_, w)| *w).collect();
+        self.model_cost_with(model, &weights)
+    }
+
+    /// Solve. Returns `None` if the hard clauses are UNSAT. The search is
+    /// exact for small total weights; for large (Roofline-scale) weights
+    /// it optimizes the quantized objective (≤ 0.1% per-soft-clause error).
+    pub fn solve(&self) -> Option<MaxSatResult> {
+        let weights: Vec<u64> = self.soft.iter().map(|(_, w)| *w).collect();
+        let (qweights, _q) = Self::quantize(&weights, 1024);
+
+        // Initial feasibility probe (no bound).
+        let (mut s, _) = self.build(&qweights, None);
+        let model = match s.solve() {
+            SatResult::Sat(m) => m,
+            SatResult::Unsat => return None,
+        };
+        let mut best_model = model[..self.nvars as usize].to_vec();
+        let mut best_qcost = self.model_cost_with(&best_model, &qweights);
+
+        // Binary search over the quantized cost bound.
+        let mut lo = 0u64;
+        while lo < best_qcost {
+            let mid = lo + (best_qcost - lo) / 2;
+            let (mut s, _) = self.build(&qweights, Some(mid));
+            match s.solve() {
+                SatResult::Sat(m) => {
+                    let cand = m[..self.nvars as usize].to_vec();
+                    let c = self.model_cost_with(&cand, &qweights);
+                    debug_assert!(c <= mid);
+                    best_qcost = c;
+                    best_model = cand;
+                }
+                SatResult::Unsat => {
+                    lo = mid + 1;
+                }
+            }
+        }
+        let cost = self.model_cost(&best_model);
+        Some(MaxSatResult { model: best_model, cost })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pure_soft_prefers_high_weight() {
+        // x and ¬x both soft: keep the heavier one.
+        let mut w = WpmsSolver::new();
+        let x = w.new_var();
+        w.add_soft(&[Lit::pos(x)], 5);
+        w.add_soft(&[Lit::neg(x)], 3);
+        let r = w.solve().unwrap();
+        assert!(r.model[x as usize]);
+        assert_eq!(r.cost, 3);
+    }
+
+    #[test]
+    fn hard_overrides_soft() {
+        let mut w = WpmsSolver::new();
+        let x = w.new_var();
+        w.add_hard(&[Lit::neg(x)]);
+        w.add_soft(&[Lit::pos(x)], 1000);
+        let r = w.solve().unwrap();
+        assert!(!r.model[x as usize]);
+        assert_eq!(r.cost, 1000);
+    }
+
+    #[test]
+    fn unsat_hard_returns_none() {
+        let mut w = WpmsSolver::new();
+        let x = w.new_var();
+        w.add_hard(&[Lit::pos(x)]);
+        w.add_hard(&[Lit::neg(x)]);
+        assert!(w.solve().is_none());
+    }
+
+    #[test]
+    fn min_vertex_cover_triangle() {
+        // Triangle graph min vertex cover = 2. Soft: ¬v (prefer few
+        // vertices, weight 1 each); hard: every edge covered.
+        let mut w = WpmsSolver::new();
+        let vs: Vec<u32> = (0..3).map(|_| w.new_var()).collect();
+        for &(a, b) in &[(0, 1), (1, 2), (0, 2)] {
+            w.add_hard(&[Lit::pos(vs[a]), Lit::pos(vs[b])]);
+        }
+        for &v in &vs {
+            w.add_soft(&[Lit::neg(v)], 1);
+        }
+        let r = w.solve().unwrap();
+        assert_eq!(r.cost, 2);
+        let chosen = r.model.iter().filter(|&&b| b).count();
+        assert_eq!(chosen, 2);
+    }
+
+    #[test]
+    fn weighted_selection_exact() {
+        // Choose exactly one of three options (hard), each option's
+        // rejection is free but selecting option i costs w_i via a soft
+        // clause preferring ¬o_i. Optimal picks the min-weight option.
+        let weights = [7u64, 3, 9];
+        let mut w = WpmsSolver::new();
+        let os: Vec<u32> = (0..3).map(|_| w.new_var()).collect();
+        w.add_hard(&[Lit::pos(os[0]), Lit::pos(os[1]), Lit::pos(os[2])]);
+        for i in 0..3 {
+            for j in (i + 1)..3 {
+                w.add_hard(&[Lit::neg(os[i]), Lit::neg(os[j])]);
+            }
+        }
+        for (i, &wt) in weights.iter().enumerate() {
+            w.add_soft(&[Lit::neg(os[i])], wt);
+        }
+        let r = w.solve().unwrap();
+        assert_eq!(r.cost, 3);
+        assert!(r.model[os[1] as usize]);
+    }
+
+    #[test]
+    fn randomized_against_bruteforce() {
+        let mut rng = crate::util::Rng::new(99);
+        for round in 0..10 {
+            let nv = 6;
+            let mut w = WpmsSolver::new();
+            for _ in 0..nv {
+                w.new_var();
+            }
+            // A few random hard 2-clauses (keep satisfiable by
+            // including one all-positive clause set).
+            let mut hard: Vec<Vec<i64>> = Vec::new();
+            for _ in 0..3 {
+                let a = rng.below(nv) as i64 + 1;
+                let b = rng.below(nv) as i64 + 1;
+                hard.push(vec![a, if rng.next_f64() < 0.5 { b } else { -b }]);
+            }
+            let mut soft: Vec<(Vec<i64>, u64)> = Vec::new();
+            for _ in 0..5 {
+                let a = rng.below(nv) as i64 + 1;
+                let lit = if rng.next_f64() < 0.5 { a } else { -a };
+                soft.push((vec![lit], 1 + rng.below(10) as u64));
+            }
+            let to_lit = |v: i64| {
+                if v > 0 {
+                    Lit::pos((v - 1) as u32)
+                } else {
+                    Lit::neg((-v - 1) as u32)
+                }
+            };
+            for c in &hard {
+                let ls: Vec<Lit> = c.iter().map(|&v| to_lit(v)).collect();
+                w.add_hard(&ls);
+            }
+            for (c, wt) in &soft {
+                let ls: Vec<Lit> = c.iter().map(|&v| to_lit(v)).collect();
+                w.add_soft(&ls, *wt);
+            }
+            // Brute force optimum.
+            let eval = |m: u32, c: &[i64]| {
+                c.iter().any(|&l| {
+                    let v = (l.unsigned_abs() - 1) as usize;
+                    let val = (m >> v) & 1 == 1;
+                    if l > 0 {
+                        val
+                    } else {
+                        !val
+                    }
+                })
+            };
+            let mut best: Option<u64> = None;
+            for m in 0u32..(1 << nv) {
+                if hard.iter().all(|c| eval(m, c)) {
+                    let cost: u64 =
+                        soft.iter().filter(|(c, _)| !eval(m, c)).map(|(_, w)| *w).sum();
+                    best = Some(best.map_or(cost, |b: u64| b.min(cost)));
+                }
+            }
+            let got = w.solve();
+            match best {
+                None => assert!(got.is_none(), "round {round}"),
+                Some(b) => assert_eq!(got.unwrap().cost, b, "round {round}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Self-contained SAT stack.
+//!
+//! The paper leans on a SAT solver in three places: e-graph extraction is
+//! a Weighted Partial MaxSAT problem (§3.1.1), Auto Distribution's
+//! extraction adds hard memory-capacity constraints (§3.1.3), and the
+//! memory planner solves bin packing with SAT (§3.3.1). We implement the
+//! whole stack from scratch:
+//!
+//! * [`cdcl`] — a CDCL solver with two-watched-literal propagation, 1UIP
+//!   conflict analysis, VSIDS-style activity and Luby restarts.
+//! * [`pb`] — pseudo-boolean `Σ wᵢ·xᵢ ≤ k` constraints encoded with a
+//!   sequential weighted counter.
+//! * [`maxsat`] — Weighted Partial MaxSAT via iterative cost-bound
+//!   tightening (SAT-UNSAT linear + binary search over the PB bound).
+
+mod cdcl;
+mod maxsat;
+mod pb;
+
+pub use cdcl::{Lit, SatResult, Solver, Var};
+pub use maxsat::{MaxSatResult, WpmsSolver};
+pub use pb::encode_pb_leq;

@@ -1,0 +1,177 @@
+//! Pseudo-boolean constraints `Σ wᵢ·xᵢ ≤ k` via the sequential weighted
+//! counter encoding (Hölldobler/Manthey/Steinke). Used for the WPMaxSAT
+//! cost bound and the Auto Distribution memory-capacity constraint.
+
+use super::{Lit, Solver};
+
+/// Encode `Σ wᵢ·lᵢ ≤ bound` into `solver`. `terms` are (literal, weight)
+/// pairs with weights > 0. Auxiliary variables are allocated inside.
+///
+/// The sequential weighted counter builds s[i][j] = "after the first i
+/// terms, the running sum is ≥ j" for j in 1..=bound+1, with the clause
+/// `¬s[n][bound+1]` closing the constraint. To keep the encoding small
+/// for large weights, weights are first divided by their GCD.
+pub fn encode_pb_leq(solver: &mut Solver, terms: &[(Lit, u64)], bound: u64) {
+    let terms: Vec<(Lit, u64)> = terms.iter().filter(|(_, w)| *w > 0).cloned().collect();
+    if terms.is_empty() {
+        return;
+    }
+    // Normalize by GCD.
+    let g = terms.iter().fold(0u64, |g, &(_, w)| gcd(g, w)).max(1);
+    let bound = bound / g;
+    let terms: Vec<(Lit, u64)> = terms.iter().map(|&(l, w)| (l, w / g)).collect();
+
+    // Terms whose weight alone exceeds the bound must be false.
+    let mut active: Vec<(Lit, u64)> = Vec::new();
+    for &(l, w) in &terms {
+        if w > bound {
+            solver.add_clause(&[!l]);
+        } else {
+            active.push((l, w));
+        }
+    }
+    if active.is_empty() || bound == 0 {
+        return;
+    }
+    let total: u64 = active.iter().map(|&(_, w)| w).sum();
+    if total <= bound {
+        return; // constraint is vacuous
+    }
+
+    let n = active.len();
+    let k = bound as usize;
+    // s[i][j], i in 0..n, j in 0..k  ("sum of first i+1 terms >= j+1").
+    let mut s = vec![vec![None::<Lit>; k]; n];
+    for (i, row) in s.iter_mut().enumerate() {
+        for (j, slot) in row.iter_mut().enumerate() {
+            // Registers only need to track up to min(prefix sum, k).
+            let prefix: u64 = active[..=i].iter().map(|&(_, w)| w).sum();
+            if (j as u64) < prefix.min(bound) {
+                *slot = Some(Lit::pos(solver.new_var()));
+            }
+        }
+    }
+    let get = |s: &Vec<Vec<Option<Lit>>>, i: usize, j: i64| -> Option<Lit> {
+        if j < 0 {
+            None // trivially true level
+        } else {
+            s[i].get(j as usize).copied().flatten()
+        }
+    };
+
+    for i in 0..n {
+        let (xi, wi) = active[i];
+        let wi = wi as i64;
+        for j in 0..k as i64 {
+            let sij = match get(&s, i, j) {
+                Some(l) => l,
+                None => continue,
+            };
+            // x_i ∧ (s[i-1][j-w] or j-w<0)  ->  s[i][j]
+            if i == 0 {
+                if j < wi {
+                    solver.add_clause(&[!xi, sij]);
+                }
+            } else {
+                // carry: s[i-1][j] -> s[i][j]
+                if let Some(prev) = get(&s, i - 1, j) {
+                    solver.add_clause(&[!prev, sij]);
+                }
+                // add: x_i ∧ s[i-1][j-wi] -> s[i][j]
+                if j - wi < 0 {
+                    solver.add_clause(&[!xi, sij]);
+                } else if let Some(prev) = get(&s, i - 1, j - wi) {
+                    solver.add_clause(&[!xi, !prev, sij]);
+                }
+            }
+        }
+        // Overflow: x_i ∧ s[i-1][k-wi] -> ⊥  (sum would exceed bound)
+        if i > 0 {
+            let jo = k as i64 - wi;
+            if jo < 0 {
+                // handled above (w > bound filtered), unreachable
+            } else if let Some(prev) = get(&s, i - 1, jo) {
+                solver.add_clause(&[!xi, !prev]);
+            }
+        }
+    }
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sat::SatResult;
+
+    /// Exhaustively check the encoding: every model of the encoded
+    /// formula satisfies the PB constraint and every assignment
+    /// satisfying the constraint extends to a model.
+    fn check_pb(weights: &[u64], bound: u64) {
+        let n = weights.len();
+        for forced in 0u32..(1 << n) {
+            let mut solver = Solver::new();
+            let vars: Vec<_> = (0..n).map(|_| solver.new_var()).collect();
+            let terms: Vec<(Lit, u64)> =
+                vars.iter().zip(weights).map(|(&v, &w)| (Lit::pos(v), w)).collect();
+            encode_pb_leq(&mut solver, &terms, bound);
+            // Force the assignment.
+            for (i, &v) in vars.iter().enumerate() {
+                if (forced >> i) & 1 == 1 {
+                    solver.add_clause(&[Lit::pos(v)]);
+                } else {
+                    solver.add_clause(&[Lit::neg(v)]);
+                }
+            }
+            let sum: u64 =
+                weights.iter().enumerate().filter(|(i, _)| (forced >> i) & 1 == 1).map(|(_, &w)| w).sum();
+            let expect_sat = sum <= bound;
+            let got = solver.solve();
+            assert_eq!(
+                got.is_sat(),
+                expect_sat,
+                "weights={weights:?} bound={bound} forced={forced:b} sum={sum}"
+            );
+            if let SatResult::Sat(_) = got {
+                assert!(sum <= bound);
+            }
+        }
+    }
+
+    #[test]
+    fn unit_weights_cardinality() {
+        check_pb(&[1, 1, 1, 1], 2);
+    }
+
+    #[test]
+    fn mixed_weights() {
+        check_pb(&[3, 5, 7, 2], 9);
+        check_pb(&[1, 2, 4, 8], 7);
+    }
+
+    #[test]
+    fn gcd_normalization() {
+        check_pb(&[10, 20, 30], 30);
+    }
+
+    #[test]
+    fn zero_bound_forces_all_false() {
+        check_pb(&[2, 3], 0);
+    }
+
+    #[test]
+    fn vacuous_constraint() {
+        check_pb(&[1, 1], 10);
+    }
+
+    #[test]
+    fn single_huge_weight() {
+        check_pb(&[100, 1], 1);
+    }
+}

@@ -1,0 +1,259 @@
+//! MCTS-based structural search (§3.2.1).
+//!
+//! Nodes of the search tree are [`TiledState`]s, edges are
+//! merge / reorder [`Action`]s. Selection uses UCB1; *simulation* is the
+//! deterministic MINLP evaluation of the leaf (no random rollouts —
+//! "Analytical Simulation").
+
+use super::minlp::{solve_parametric, MinlpConfig, ParametricSolution};
+use super::tile::{Action, TiledState};
+use crate::cost::MachineSpec;
+use crate::util::Rng;
+
+/// MCTS configuration.
+#[derive(Debug, Clone)]
+pub struct MctsConfig {
+    pub iterations: usize,
+    /// UCB1 exploration constant.
+    pub exploration: f64,
+    /// Maximum action-sequence depth.
+    pub max_depth: usize,
+    pub seed: u64,
+    pub minlp: MinlpConfig,
+}
+
+impl Default for MctsConfig {
+    fn default() -> Self {
+        MctsConfig {
+            iterations: 120,
+            exploration: 1.2,
+            max_depth: 6,
+            seed: 0x5EED,
+            minlp: MinlpConfig::default(),
+        }
+    }
+}
+
+struct TreeNode {
+    state: TiledState,
+    parent: Option<usize>,
+    /// Untried actions.
+    untried: Vec<Action>,
+    children: Vec<(Action, usize)>,
+    visits: f64,
+    /// Sum of rewards (reward = -latency in μs).
+    reward_sum: f64,
+    /// Best latency ever observed under this node.
+    best_latency: f64,
+}
+
+/// The search driver.
+pub struct Mcts {
+    nodes: Vec<TreeNode>,
+    cfg: MctsConfig,
+    rng: Rng,
+}
+
+/// The chosen schedule: structure + parameters + estimated latency.
+#[derive(Debug)]
+pub struct ScheduleResult {
+    pub state: TiledState,
+    pub solution: ParametricSolution,
+    pub actions: Vec<Action>,
+    pub evaluations: usize,
+}
+
+impl Mcts {
+    pub fn new(root: TiledState, cfg: MctsConfig) -> Self {
+        let untried = root.legal_actions();
+        let rng = Rng::new(cfg.seed);
+        Mcts {
+            nodes: vec![TreeNode {
+                state: root,
+                parent: None,
+                untried,
+                children: Vec::new(),
+                visits: 0.0,
+                reward_sum: 0.0,
+                best_latency: f64::INFINITY,
+            }],
+            cfg,
+            rng,
+        }
+    }
+
+    fn ucb_child(&self, id: usize) -> Option<usize> {
+        let n = &self.nodes[id];
+        if n.children.is_empty() {
+            return None;
+        }
+        let ln_n = n.visits.max(1.0).ln();
+        n.children
+            .iter()
+            .map(|&(_, c)| {
+                let ch = &self.nodes[c];
+                let mean = ch.reward_sum / ch.visits.max(1.0);
+                let ucb = mean + self.cfg.exploration * (ln_n / ch.visits.max(1.0)).sqrt();
+                (c, ucb)
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(c, _)| c)
+    }
+
+    fn depth(&self, mut id: usize) -> usize {
+        let mut d = 0;
+        while let Some(p) = self.nodes[id].parent {
+            id = p;
+            d += 1;
+        }
+        d
+    }
+
+    /// Run the search on `machine`; returns the best schedule found.
+    pub fn run(mut self, machine: &MachineSpec) -> Option<ScheduleResult> {
+        let mut best: Option<(usize, ParametricSolution)> = None;
+        let mut evaluations = 0usize;
+
+        for _ in 0..self.cfg.iterations {
+            // Selection: descend while fully expanded.
+            let mut cur = 0usize;
+            while self.nodes[cur].untried.is_empty() && !self.nodes[cur].children.is_empty() {
+                match self.ucb_child(cur) {
+                    Some(c) => cur = c,
+                    None => break,
+                }
+            }
+            // Expansion: pop one untried action (if depth allows).
+            if !self.nodes[cur].untried.is_empty() && self.depth(cur) < self.cfg.max_depth {
+                let idx = self.rng.below(self.nodes[cur].untried.len());
+                let action = self.nodes[cur].untried.swap_remove(idx);
+                let state = self.nodes[cur].state.apply(&action);
+                let untried = if self.depth(cur) + 1 < self.cfg.max_depth {
+                    state.legal_actions()
+                } else {
+                    vec![]
+                };
+                let child = self.nodes.len();
+                self.nodes.push(TreeNode {
+                    state,
+                    parent: Some(cur),
+                    untried,
+                    children: Vec::new(),
+                    visits: 0.0,
+                    reward_sum: 0.0,
+                    best_latency: f64::INFINITY,
+                });
+                self.nodes[cur].children.push((action, child));
+                cur = child;
+            }
+            // Simulation: deterministic MINLP evaluation of the state.
+            evaluations += 1;
+            let latency = match solve_parametric(&self.nodes[cur].state, machine, &self.cfg.minlp)
+            {
+                Some(sol) => {
+                    let l = sol.latency_s;
+                    let better = best
+                        .as_ref()
+                        .map(|(_, b)| l < b.latency_s)
+                        .unwrap_or(true);
+                    if better {
+                        best = Some((cur, sol));
+                    }
+                    l
+                }
+                None => f64::INFINITY,
+            };
+            // Backpropagation: reward = -latency in microseconds.
+            let reward = if latency.is_finite() { -latency * 1e6 } else { -1e12 };
+            let mut up = Some(cur);
+            while let Some(id) = up {
+                let n = &mut self.nodes[id];
+                n.visits += 1.0;
+                n.reward_sum += reward;
+                n.best_latency = n.best_latency.min(latency);
+                up = n.parent;
+            }
+        }
+
+        let (best_id, solution) = best?;
+        // Recover the action sequence.
+        let mut actions = Vec::new();
+        let mut cur = best_id;
+        while let Some(p) = self.nodes[cur].parent {
+            let (a, _) = self.nodes[p]
+                .children
+                .iter()
+                .find(|&&(_, c)| c == cur)
+                .expect("child link")
+                .clone();
+            actions.push(a);
+            cur = p;
+        }
+        actions.reverse();
+        Some(ScheduleResult {
+            state: self.nodes[best_id].state.clone(),
+            solution,
+            actions,
+            evaluations,
+        })
+    }
+}
+
+/// One-call driver: schedule `state` on `machine`.
+pub fn autoschedule(
+    state: TiledState,
+    machine: &MachineSpec,
+    cfg: MctsConfig,
+) -> Option<ScheduleResult> {
+    Mcts::new(state, cfg).run(machine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::tile::tests::attention_ops;
+    use crate::schedule::{solve_parametric, MinlpConfig};
+
+    #[test]
+    fn mcts_finds_schedule_at_least_as_good_as_initial() {
+        let m = MachineSpec::ryzen_5900x();
+        let init = TiledState::initial(attention_ops(), 3);
+        let base = solve_parametric(&init, &m, &MinlpConfig::default()).unwrap();
+        let cfg = MctsConfig { iterations: 60, ..Default::default() };
+        let res = autoschedule(init, &m, cfg).unwrap();
+        assert!(
+            res.solution.latency_s <= base.latency_s * 1.0001,
+            "MCTS {} must not lose to the initial structure {}",
+            res.solution.latency_s,
+            base.latency_s
+        );
+        assert!(res.evaluations >= 60);
+    }
+
+    #[test]
+    fn mcts_discovers_fusion() {
+        // On the attention kernel the best structures fuse at least one
+        // producer into its consumer (keeping T1/T2 on-chip).
+        let m = MachineSpec::ryzen_5900x();
+        let init = TiledState::initial(attention_ops(), 3);
+        let cfg = MctsConfig { iterations: 150, seed: 7, ..Default::default() };
+        let res = autoschedule(init, &m, cfg).unwrap();
+        let fused_any = res.state.fused_at.iter().any(|f| f.is_some());
+        assert!(
+            fused_any,
+            "best schedule should fuse; actions: {:?}",
+            res.actions
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = MachineSpec::ryzen_5900x();
+        let cfg = MctsConfig { iterations: 40, ..Default::default() };
+        let r1 =
+            autoschedule(TiledState::initial(attention_ops(), 3), &m, cfg.clone()).unwrap();
+        let r2 = autoschedule(TiledState::initial(attention_ops(), 3), &m, cfg).unwrap();
+        assert_eq!(r1.actions, r2.actions);
+        assert_eq!(r1.solution.latency_s, r2.solution.latency_s);
+    }
+}

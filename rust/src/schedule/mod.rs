@@ -1,0 +1,26 @@
+//! Auto Scheduling (§3.2).
+//!
+//! The design space of a computation kernel is decoupled into two
+//! orthogonal dimensions (Fig. 7):
+//!
+//! * **Structural part** — the Tiered Tile Graph: which ops fuse at which
+//!   memory level and in which loop order. Explored with Monte Carlo Tree
+//!   Search ([`mcts`]) whose actions are `merge(src, dst, level)` and
+//!   `reorder(op, level, loops)`.
+//! * **Parametric part** — tile sizes and buffer placement. Solved per
+//!   candidate structure by the analytical MINLP model ([`minlp`]):
+//!   static analysis Eqs. 6–9, constraints Eqs. 10–14, objective
+//!   `min max(T_mem, T_comp)` Eqs. 15–16 over divisor-valued integer
+//!   variables with branch-and-bound.
+//!
+//! MCTS simulation is *deterministic*: instead of random rollouts, each
+//! leaf is evaluated by the MINLP solver (§3.2.1 "Analytical
+//! Simulation").
+
+mod mcts;
+mod minlp;
+mod tile;
+
+pub use mcts::{autoschedule, Mcts, MctsConfig, ScheduleResult};
+pub use minlp::{solve_parametric, MinlpConfig, ParametricSolution};
+pub use tile::{subgraph_to_tileops, Action, BufferAccess, TileOp, TiledState};

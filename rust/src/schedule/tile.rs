@@ -1,0 +1,360 @@
+//! Tiered tile graphs: ops, loop dims, buffer access relations, and the
+//! structural state with its `merge` / `reorder` actions (Eq. 3).
+
+use std::collections::HashMap;
+
+use crate::ir::{Graph, NodeId, Op};
+
+/// One buffer access of a [`TileOp`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BufferAccess {
+    pub buffer: String,
+    pub write: bool,
+    /// The loop dims (by name) indexing this buffer — the access relation
+    /// 𝒜 of Eq. 7.
+    pub dims: Vec<char>,
+    /// Element size in bytes.
+    pub elem_bytes: usize,
+}
+
+/// One operator of the kernel subgraph, as a loop nest over named dims.
+#[derive(Debug, Clone)]
+pub struct TileOp {
+    pub name: String,
+    /// (dim name, full extent) — the iteration domain.
+    pub loops: Vec<(char, usize)>,
+    pub buffers: Vec<BufferAccess>,
+    /// FLOPs per iteration-space point (2 for FMA in matmul).
+    pub flops_per_point: u64,
+}
+
+impl TileOp {
+    pub fn extent(&self, d: char) -> Option<usize> {
+        self.loops.iter().find(|(n, _)| *n == d).map(|(_, e)| *e)
+    }
+
+    pub fn total_points(&self) -> u64 {
+        self.loops.iter().map(|(_, e)| *e as u64).product()
+    }
+}
+
+/// Structural actions (§3.2.1 "Search Mechanics").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// merge(src, dst, level): fuse `src` into `dst` at memory `level`.
+    Merge { src: usize, dst: usize, level: usize },
+    /// reorder(op, level, loops): set the loop order of `op` at `level`.
+    Reorder { op: usize, level: usize, order: Vec<char> },
+}
+
+/// The structural state: a Tiered Tile Graph in the tile-centric notation
+/// of Eq. 3. `fused_at[i] = Some((j, l))` means op i's subtree lives under
+/// op j at level l (intermediate results stay within level l and below —
+/// the green box of Fig. 7). `order[l][i]` is op i's loop order at level
+/// l.
+#[derive(Debug, Clone)]
+pub struct TiledState {
+    pub ops: std::rc::Rc<Vec<TileOp>>,
+    /// Fusion assignment: op -> (host op, fusion level).
+    pub fused_at: Vec<Option<(usize, usize)>>,
+    /// Loop order per level per op.
+    pub order: Vec<Vec<Vec<char>>>,
+    /// Number of memory levels (level 0 = registers/L1 μkernel tile,
+    /// level `levels` = top/DRAM).
+    pub levels: usize,
+}
+
+impl TiledState {
+    /// Initial state: no fusion, natural loop order at every level.
+    pub fn initial(ops: Vec<TileOp>, levels: usize) -> Self {
+        let order: Vec<Vec<Vec<char>>> = (0..=levels)
+            .map(|_| ops.iter().map(|op| op.loops.iter().map(|(d, _)| *d).collect()).collect())
+            .collect();
+        let n = ops.len();
+        TiledState { ops: std::rc::Rc::new(ops), fused_at: vec![None; n], order, levels }
+    }
+
+    /// Producer-consumer pairs: (producer, consumer) where consumer reads
+    /// a buffer the producer writes.
+    pub fn dependencies(&self) -> Vec<(usize, usize)> {
+        let mut deps = Vec::new();
+        for (pi, p) in self.ops.iter().enumerate() {
+            for pb in p.buffers.iter().filter(|b| b.write) {
+                for (ci, c) in self.ops.iter().enumerate() {
+                    if ci != pi
+                        && c.buffers.iter().any(|b| !b.write && b.buffer == pb.buffer)
+                    {
+                        deps.push((pi, ci));
+                    }
+                }
+            }
+        }
+        deps
+    }
+
+    /// Legal actions from this state. Merges follow producer-consumer
+    /// edges; reorders are adjacent-swaps of each op's per-level order
+    /// (keeping the branching factor tractable).
+    pub fn legal_actions(&self) -> Vec<Action> {
+        let mut acts = Vec::new();
+        for (src, dst) in self.dependencies() {
+            if self.fused_at[src].is_none() {
+                // Fusing at level l means the intermediate buffer lives at
+                // level l and below. Level 0 fusion = register fusion.
+                for level in 1..self.levels {
+                    acts.push(Action::Merge { src, dst, level });
+                }
+            }
+        }
+        for op in 0..self.ops.len() {
+            for level in 1..=self.levels {
+                let ord = &self.order[level][op];
+                for i in 0..ord.len().saturating_sub(1) {
+                    let mut next = ord.clone();
+                    next.swap(i, i + 1);
+                    acts.push(Action::Reorder { op, level, order: next });
+                }
+            }
+        }
+        acts
+    }
+
+    /// Apply an action, returning the successor state.
+    pub fn apply(&self, action: &Action) -> TiledState {
+        let mut s = self.clone();
+        match action {
+            Action::Merge { src, dst, level } => {
+                s.fused_at[*src] = Some((*dst, *level));
+            }
+            Action::Reorder { op, level, order } => {
+                s.order[*level][*op] = order.clone();
+            }
+        }
+        s
+    }
+
+    /// Render the state in the tile-centric notation of Eq. 3.
+    pub fn notation(&self) -> String {
+        let mut out = String::new();
+        for level in (0..=self.levels).rev() {
+            out.push_str(&format!("Level {level}: "));
+            let mut first = true;
+            for (i, op) in self.ops.iter().enumerate() {
+                // Fused ops do not appear above their fusion level.
+                if let Some((_, fl)) = self.fused_at[i] {
+                    if level > fl {
+                        continue;
+                    }
+                }
+                if !first {
+                    out.push_str(", ");
+                }
+                first = false;
+                let loops: Vec<String> = self.order[level][i]
+                    .iter()
+                    .map(|d| format!("{d}^{level}"))
+                    .collect();
+                let children: Vec<String> = if level == 0 {
+                    vec![op.name.clone()]
+                } else {
+                    let mut ch = vec![format!("Op_{i}^{}", level - 1)];
+                    // Fused children at this level.
+                    for (j, f) in self.fused_at.iter().enumerate() {
+                        if let Some((host, fl)) = f {
+                            if *host == i && *fl == level {
+                                ch.insert(0, format!("Op_{j}^{}", level - 1));
+                            }
+                        }
+                    }
+                    ch
+                };
+                out.push_str(&format!(
+                    "Op_{i}^{level} = {{{}}}({})",
+                    loops.join(","),
+                    children.join(", ")
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Convert a fusable IR subgraph (matmul / element-wise / softmax chain)
+/// into [`TileOp`]s with shared loop-dim names, following Fig. 7's
+/// convention (the first matmul gets dims i,k,l; consumers inherit the
+/// producer's output dims).
+pub fn subgraph_to_tileops(g: &Graph, nodes: &[NodeId]) -> Vec<TileOp> {
+    let mut next_dim = b'i';
+    let mut fresh = || {
+        let d = next_dim as char;
+        next_dim += 1;
+        d
+    };
+    // Output dims of each emitted node.
+    let mut out_dims: HashMap<NodeId, Vec<char>> = HashMap::new();
+    let mut ops = Vec::new();
+
+    for &id in nodes {
+        let node = g.node(id);
+        let elem = node.ty.dtype.size_bytes();
+        let bufname = |nid: NodeId| format!("t{}", nid.0);
+        match &node.op {
+            Op::MatMul => {
+                let (a, b) = (node.inputs[0], node.inputs[1]);
+                let a_dims = out_dims.get(&a).cloned().unwrap_or_else(|| {
+                    let r = g.node(a).ty.shape.rank();
+                    (0..r).map(|_| fresh()).collect()
+                });
+                // B: k dim shared with A's last dim; fresh n dim.
+                let k = *a_dims.last().unwrap();
+                let n = fresh();
+                let m = a_dims[a_dims.len() - 2];
+                let a_shape = &g.node(a).ty.shape;
+                let b_shape = &g.node(b).ty.shape;
+                let loops = vec![
+                    (m, a_shape.0[a_shape.rank() - 2]),
+                    (k, a_shape.0[a_shape.rank() - 1]),
+                    (n, b_shape.0[b_shape.rank() - 1]),
+                ];
+                let my_out = vec![m, n];
+                ops.push(TileOp {
+                    name: format!("matmul_{}", id.0),
+                    loops,
+                    buffers: vec![
+                        BufferAccess { buffer: bufname(a), write: false, dims: vec![m, k], elem_bytes: elem },
+                        BufferAccess { buffer: bufname(b), write: false, dims: vec![k, n], elem_bytes: elem },
+                        BufferAccess { buffer: bufname(id), write: true, dims: my_out.clone(), elem_bytes: elem },
+                    ],
+                    flops_per_point: 2,
+                });
+                out_dims.insert(id, my_out);
+            }
+            Op::Unary(_) | Op::Softmax { .. } | Op::Binary(_) => {
+                let x = node.inputs[0];
+                let dims = out_dims.get(&x).cloned().unwrap_or_else(|| {
+                    let r = g.node(x).ty.shape.rank();
+                    (0..r).map(|_| fresh()).collect()
+                });
+                let shape = &g.node(x).ty.shape;
+                let loops: Vec<(char, usize)> =
+                    dims.iter().zip(&shape.0).map(|(&d, &e)| (d, e)).collect();
+                let mut buffers = vec![BufferAccess {
+                    buffer: bufname(x),
+                    write: false,
+                    dims: dims.clone(),
+                    elem_bytes: elem,
+                }];
+                if node.inputs.len() > 1 {
+                    buffers.push(BufferAccess {
+                        buffer: bufname(node.inputs[1]),
+                        write: false,
+                        dims: dims.clone(),
+                        elem_bytes: elem,
+                    });
+                }
+                buffers.push(BufferAccess {
+                    buffer: bufname(id),
+                    write: true,
+                    dims: dims.clone(),
+                    elem_bytes: elem,
+                });
+                let fpp = match &node.op {
+                    Op::Unary(crate::ir::UnaryKind::Exp) => 8,
+                    Op::Softmax { .. } => 12,
+                    _ => 1,
+                };
+                ops.push(TileOp {
+                    name: format!("{}_{}", node.op.mnemonic(), id.0),
+                    loops,
+                    buffers,
+                    flops_per_point: fpp,
+                });
+                out_dims.insert(id, dims);
+            }
+            _ => { /* leaves and views contribute no loop nest */ }
+        }
+    }
+    ops
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::ir::{DType, Graph, UnaryKind};
+
+    /// Fig. 7's kernel: T1 = MatMul(Q,K); T2 = Exp(T1); O = MatMul(T2,V).
+    pub(crate) fn attention_ops() -> Vec<TileOp> {
+        let mut g = Graph::new();
+        let q = g.input("Q", &[128, 64], DType::F32);
+        let k = g.input("K", &[64, 128], DType::F32);
+        let v = g.input("V", &[128, 64], DType::F32);
+        let t1 = g.matmul(q, k);
+        let t2 = g.unary(UnaryKind::Exp, t1);
+        let o = g.matmul(t2, v);
+        g.mark_output(o);
+        let nodes = g.live_nodes();
+        subgraph_to_tileops(&g, &nodes)
+    }
+
+    #[test]
+    fn dims_are_shared_across_ops() {
+        let ops = attention_ops();
+        assert_eq!(ops.len(), 3);
+        // Exp inherits matmul0's output dims; matmul2 reads them.
+        let mm0_out: Vec<char> =
+            ops[0].buffers.iter().find(|b| b.write).unwrap().dims.clone();
+        let exp_in: Vec<char> =
+            ops[1].buffers.iter().find(|b| !b.write).unwrap().dims.clone();
+        assert_eq!(mm0_out, exp_in, "Exp must read the dims MatMul writes");
+        let mm2_in: Vec<char> = ops[2].buffers[0].dims.clone();
+        assert_eq!(exp_in, mm2_in);
+        // Loop extents match the shapes.
+        assert_eq!(ops[0].extent(mm0_out[0]), Some(128));
+    }
+
+    #[test]
+    fn initial_state_and_deps() {
+        let ops = attention_ops();
+        let s = TiledState::initial(ops, 2);
+        let deps = s.dependencies();
+        assert!(deps.contains(&(0, 1)), "matmul0 -> exp");
+        assert!(deps.contains(&(1, 2)), "exp -> matmul2");
+        assert!(!deps.contains(&(0, 2)));
+    }
+
+    #[test]
+    fn merge_changes_notation() {
+        let ops = attention_ops();
+        let s = TiledState::initial(ops, 2);
+        let before = s.notation();
+        let s2 = s.apply(&Action::Merge { src: 1, dst: 2, level: 2 });
+        let after = s2.notation();
+        assert_ne!(before, after);
+        // After merge(1,2,2), Op_2^2 hosts Op_1^1 (the Eq. 3 example).
+        assert!(after.contains("Op_1^1, Op_2^1"), "notation:\n{after}");
+    }
+
+    #[test]
+    fn legal_actions_nonempty_and_apply() {
+        let ops = attention_ops();
+        let s = TiledState::initial(ops, 2);
+        let acts = s.legal_actions();
+        assert!(acts.iter().any(|a| matches!(a, Action::Merge { .. })));
+        assert!(acts.iter().any(|a| matches!(a, Action::Reorder { .. })));
+        for a in acts.iter().take(8) {
+            let _ = s.apply(a);
+        }
+    }
+
+    #[test]
+    fn merged_op_not_offered_again() {
+        let ops = attention_ops();
+        let s = TiledState::initial(ops, 2);
+        let s2 = s.apply(&Action::Merge { src: 1, dst: 2, level: 1 });
+        assert!(!s2
+            .legal_actions()
+            .iter()
+            .any(|a| matches!(a, Action::Merge { src: 1, .. })));
+    }
+}

@@ -1,0 +1,170 @@
+//! Analytic models of the compared frameworks (§4's competitors).
+//!
+//! Every model is a set of strategy parameters with a first-principles
+//! justification. None of them is fitted to the paper's reported
+//! numbers; see EXPERIMENTS.md for the resulting deviations.
+
+/// Which framework a model stands for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FrameworkKind {
+    Nncase,
+    LlamaCpp,
+    Ipex,
+    Mlc,
+}
+
+impl FrameworkKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameworkKind::Nncase => "nncase",
+            FrameworkKind::LlamaCpp => "llama.cpp",
+            FrameworkKind::Ipex => "Intel IPEX",
+            FrameworkKind::Mlc => "MLC LLM",
+        }
+    }
+}
+
+/// Strategy parameters of one framework.
+#[derive(Debug, Clone)]
+pub struct Framework {
+    pub kind: FrameworkKind,
+    /// Fraction of peak FLOP/s the GEMM/GEMV inner loops reach.
+    pub kernel_eff: f64,
+    /// Fraction of stream bandwidth achieved on the weight stream.
+    pub bw_eff: f64,
+    /// Multiplier on memory traffic from layout behaviour (1.0 = weights
+    /// streamed once; >1 = re-reads from packing/unpacking/copies).
+    pub bytes_factor: f64,
+    /// Per-parallel-region synchronization cost at `t` threads, seconds.
+    /// OpenMP-style fork-join grows with threads; static partitioning
+    /// pays one lightweight barrier.
+    pub sync_base_s: f64,
+    pub sync_per_thread_s: f64,
+    /// Per-operator dispatch overhead (graph interpreter / VM), seconds.
+    pub dispatch_s: f64,
+    /// Multi-thread bandwidth derating from *dynamic* work scheduling:
+    /// fork-join runtimes hand threads interleaved weight chunks, so the
+    /// per-channel streams stop being sequential and the effective DRAM
+    /// bandwidth drops. Static compile-time partitioning (nncase's
+    /// "cores as nodes") keeps each core on a contiguous shard — no
+    /// penalty. Applied as `bw *= 1 - penalty` when threads > 1.
+    pub dyn_sched_bw_penalty: f64,
+}
+
+impl Framework {
+    pub fn sync_s(&self, threads: usize) -> f64 {
+        if threads <= 1 {
+            return 0.0;
+        }
+        self.sync_base_s + self.sync_per_thread_s * threads as f64
+    }
+
+    /// nncase: NTT μkernels (≈ the packed-matmul Roofline efficiency of
+    /// our cost model), e-graph global layout (weights pre-packed at
+    /// compile time — no runtime conversion), compile-time static
+    /// partitioning ("cores as distributed nodes") with deterministic
+    /// point-to-point sync instead of fork-join barriers.
+    pub fn nncase() -> Self {
+        Framework {
+            kind: FrameworkKind::Nncase,
+            kernel_eff: 0.85,
+            bw_eff: 0.86,
+            bytes_factor: 1.0,
+            sync_base_s: 1.0e-6,
+            sync_per_thread_s: 0.2e-6,
+            dispatch_s: 0.3e-6,
+            dyn_sched_bw_penalty: 0.0,
+        }
+    }
+
+    /// llama.cpp: hand-written AVX2 kernels (the ceiling: ~0.92 of peak,
+    /// ~0.93 of stream), weights stored pre-packed in GGUF (factor 1.0),
+    /// but OpenMP-style thread-pool barriers per op (ggml graph executes
+    /// with a spin-barrier per node).
+    pub fn llamacpp() -> Self {
+        Framework {
+            kind: FrameworkKind::LlamaCpp,
+            kernel_eff: 0.92,
+            bw_eff: 0.93,
+            bytes_factor: 1.0,
+            sync_base_s: 3.0e-6,
+            sync_per_thread_s: 1.5e-6,
+            dispatch_s: 0.2e-6,
+            dyn_sched_bw_penalty: 0.10,
+        }
+    }
+
+    /// Intel IPEX: oneDNN kernels are good (0.8 of peak) but the
+    /// kernel-level packing strategy re-packs activations/weights at
+    /// operator boundaries (§2.1 "layout thrashing"): ~25% extra traffic;
+    /// OpenMP parallel regions per op.
+    pub fn ipex() -> Self {
+        Framework {
+            kind: FrameworkKind::Ipex,
+            kernel_eff: 0.80,
+            bw_eff: 0.80,
+            bytes_factor: 1.25,
+            sync_base_s: 5.0e-6,
+            sync_per_thread_s: 2.0e-6,
+            dispatch_s: 1.0e-6,
+            dyn_sched_bw_penalty: 0.12,
+        }
+    }
+
+    /// MLC LLM: TVM/Relax VM on CPU without tuned schedules for this
+    /// target — F16 GEMV falls back to near-scalar loops with element
+    /// conversions (≈1-2% of peak), intermediate tensors materialize
+    /// through memory (×3 traffic), and the VM dispatches per op.
+    /// This is the structural explanation the paper gives for MLC's
+    /// collapse (0.2 tok/s on Qwen3-1.7B).
+    pub fn mlc() -> Self {
+        Framework {
+            kind: FrameworkKind::Mlc,
+            kernel_eff: 0.012,
+            bw_eff: 0.50,
+            bytes_factor: 3.0,
+            sync_base_s: 8.0e-6,
+            sync_per_thread_s: 3.0e-6,
+            dispatch_s: 20.0e-6,
+            dyn_sched_bw_penalty: 0.10,
+        }
+    }
+
+    pub fn all() -> Vec<Framework> {
+        vec![Self::llamacpp(), Self::nncase(), Self::ipex(), Self::mlc()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_scales_with_threads() {
+        let f = Framework::llamacpp();
+        assert_eq!(f.sync_s(1), 0.0);
+        assert!(f.sync_s(8) > f.sync_s(4));
+        // nncase's static partition syncs cheaper than OpenMP models.
+        assert!(Framework::nncase().sync_s(8) < Framework::ipex().sync_s(8));
+    }
+
+    #[test]
+    fn kernel_quality_ordering() {
+        // The paper's single-core hierarchy stems from kernel quality:
+        // llama.cpp > nncase > IPEX >> MLC.
+        let (l, n, i, m) = (
+            Framework::llamacpp().kernel_eff,
+            Framework::nncase().kernel_eff,
+            Framework::ipex().kernel_eff,
+            Framework::mlc().kernel_eff,
+        );
+        assert!(l > n && n > i && i > 10.0 * m);
+    }
+
+    #[test]
+    fn layout_traffic_ordering() {
+        assert_eq!(Framework::nncase().bytes_factor, 1.0, "pass-through layout");
+        assert!(Framework::ipex().bytes_factor > 1.0, "kernel-local packing re-reads");
+        assert!(Framework::mlc().bytes_factor > Framework::ipex().bytes_factor);
+    }
+}

@@ -1,0 +1,226 @@
+//! Roofline decode simulator.
+//!
+//! Walks the real decode-step IR graph of the model (so op counts, weight
+//! shapes and KV traffic are structural, not hand-waved) and accumulates
+//! per-op times under a framework's strategy parameters:
+//!
+//! `t_op = max(flops / (peak·kernel_eff·t), bytes·bytes_factor /
+//!            (bw(t)·bw_eff)) + sync(t) + dispatch`
+//!
+//! Decode throughput is `1 / Σ t_op`. The memory term uses the machine's
+//! thread-dependent DRAM bandwidth, which saturates around 2–3 cores on
+//! the 5900X — the "memory wall" that flattens Figure 10's 8T columns.
+
+use crate::cost::MachineSpec;
+use crate::ir::{Op, TensorType};
+use crate::model::{decode_graph, Qwen3Config};
+
+use super::Framework;
+
+/// Simulation result for one (model, framework, threads) cell.
+#[derive(Debug, Clone)]
+pub struct DecodeSim {
+    pub tokens_per_s: f64,
+    pub t_mem_s: f64,
+    pub t_comp_s: f64,
+    pub t_overhead_s: f64,
+    pub ops: usize,
+}
+
+/// Simulate decode throughput. `ctx` is the KV context length (the paper
+/// uses an 8-token prompt; decode happens at short context, so KV traffic
+/// is negligible next to weights — we default to 64 to include it).
+pub fn simulate_decode(
+    cfg: &Qwen3Config,
+    threads: usize,
+    fw: &Framework,
+    machine: &MachineSpec,
+    ctx: usize,
+) -> DecodeSim {
+    let g = decode_graph(cfg, ctx, None);
+    let dtype_bytes = cfg.dtype.size_bytes();
+    // Compute peak uses f32 FMA lanes: F16 on AVX2 is converted to f32 in
+    // registers, so FLOP peak does not double, only the memory stream
+    // halves (this matches llama.cpp's F16 behaviour on Zen 3).
+    let peak1 = machine.peak_flops(1, 4);
+    let dyn_penalty = if threads > 1 { 1.0 - fw.dyn_sched_bw_penalty } else { 1.0 };
+    // F16/BF16 weights must be widened to f32 in registers on AVX2; the
+    // conversion interleaves with the load stream and costs ~13% of the
+    // achievable bandwidth (why the paper's F16 gain is ~59%, not 2x).
+    let convert_penalty = if cfg.dtype == crate::ir::DType::F32 { 1.0 } else { 0.87 };
+    let bw = machine.dram_bw(threads) * fw.bw_eff * dyn_penalty * convert_penalty;
+
+    let (mut t_mem, mut t_comp, mut t_ovh) = (0.0f64, 0.0f64, 0.0f64);
+    let mut ops = 0usize;
+    for id in g.live_nodes() {
+        let n = g.node(id);
+        if n.op.is_leaf() || n.op.is_view() {
+            continue;
+        }
+        let in_tys: Vec<&TensorType> = n.inputs.iter().map(|&i| &g.node(i).ty).collect();
+        let flops = crate::cost::op_flops(&n.op, &in_tys, &n.ty) as f64;
+        let bytes = crate::cost::op_bytes(&n.op, &in_tys, &n.ty) as f64;
+        let _ = dtype_bytes;
+        ops += 1;
+        // Parallelizable fraction: matmuls and big elementwise ops scale;
+        // tiny vector ops (norms over h elements) stay single-thread.
+        let scalable = matches!(n.op, Op::MatMul) || bytes > 256.0 * 1024.0;
+        let t_eff = if scalable { threads } else { 1 };
+        let comp = flops / (peak1 * fw.kernel_eff * t_eff as f64);
+        let mem = bytes * fw.bytes_factor
+            / if scalable { bw } else { machine.dram_bw(1) * fw.bw_eff };
+        // Roofline: overlap compute and memory, take the max.
+        let t_op = comp.max(mem);
+        t_comp += comp;
+        t_mem += mem;
+        t_ovh += fw.dispatch_s + if scalable { fw.sync_s(threads) } else { 0.0 };
+        // Accumulate the max into whichever bucket dominated for the
+        // total; we track buckets separately for reporting and use the
+        // roofline sum for throughput below via max-accounting:
+        let _ = t_op;
+    }
+    // Roofline at the token level: weights stream once per token, compute
+    // overlaps; token time = max(total mem, total comp) + overheads.
+    let token_s = t_mem.max(t_comp) + t_ovh;
+    DecodeSim {
+        tokens_per_s: 1.0 / token_s,
+        t_mem_s: t_mem,
+        t_comp_s: t_comp,
+        t_overhead_s: t_ovh,
+        ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DType;
+    use crate::sim::Framework;
+
+    fn ryzen() -> MachineSpec {
+        MachineSpec::ryzen_5900x()
+    }
+
+    #[test]
+    fn single_core_hierarchy_matches_paper() {
+        // Fig. 9: llama.cpp > nncase > IPEX >> MLC, all models.
+        for cfg in [
+            Qwen3Config::qwen3_0_6b(DType::F32),
+            Qwen3Config::qwen3_0_6b(DType::F16),
+            Qwen3Config::qwen3_1_7b(DType::F16),
+        ] {
+            let tput = |f: &Framework| simulate_decode(&cfg, 1, f, &ryzen(), 8).tokens_per_s;
+            let l = tput(&Framework::llamacpp());
+            let n = tput(&Framework::nncase());
+            let i = tput(&Framework::ipex());
+            let m = tput(&Framework::mlc());
+            assert!(l > n, "{}: llama.cpp {l} > nncase {n}", cfg.name);
+            assert!(n > i, "{}: nncase {n} > IPEX {i}", cfg.name);
+            assert!(i > 2.0 * m, "{}: IPEX {i} >> MLC {m}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn absolute_numbers_in_paper_ballpark() {
+        // Fig. 9 reference values (tokens/s, 1T): nncase 8.7 (0.6B F32),
+        // 13.87 (0.6B F16), 5.09 (1.7B F16); llama.cpp 10.61 / 17.21.
+        // The simulator must land within 2x of each.
+        let close = |got: f64, want: f64| {
+            assert!(
+                got > want * 0.5 && got < want * 2.0,
+                "simulated {got:.2} vs paper {want:.2}"
+            );
+        };
+        let m = ryzen();
+        let nn = Framework::nncase();
+        let lc = Framework::llamacpp();
+        close(
+            simulate_decode(&Qwen3Config::qwen3_0_6b(DType::F32), 1, &nn, &m, 8).tokens_per_s,
+            8.7,
+        );
+        close(
+            simulate_decode(&Qwen3Config::qwen3_0_6b(DType::F16), 1, &nn, &m, 8).tokens_per_s,
+            13.87,
+        );
+        close(
+            simulate_decode(&Qwen3Config::qwen3_1_7b(DType::F16), 1, &nn, &m, 8).tokens_per_s,
+            5.09,
+        );
+        close(
+            simulate_decode(&Qwen3Config::qwen3_0_6b(DType::F32), 1, &lc, &m, 8).tokens_per_s,
+            10.61,
+        );
+    }
+
+    #[test]
+    fn f16_speedup_over_f32() {
+        // Paper: F16 gives ~59% over F32 on 0.6B (memory-bound halving,
+        // minus compute floor).
+        let m = ryzen();
+        let nn = Framework::nncase();
+        let f32t =
+            simulate_decode(&Qwen3Config::qwen3_0_6b(DType::F32), 1, &nn, &m, 8).tokens_per_s;
+        let f16t =
+            simulate_decode(&Qwen3Config::qwen3_0_6b(DType::F16), 1, &nn, &m, 8).tokens_per_s;
+        let gain = f16t / f32t;
+        assert!((1.3..2.05).contains(&gain), "F16 gain {gain}");
+    }
+
+    #[test]
+    fn multicore_crossover_nncase_overtakes_llamacpp() {
+        // Fig. 10: at 4T/8T nncase ≥ llama.cpp (static partitioning vs
+        // fork-join overhead).
+        let m = ryzen();
+        for cfg in
+            [Qwen3Config::qwen3_0_6b(DType::F16), Qwen3Config::qwen3_1_7b(DType::F16)]
+        {
+            for t in [4usize, 8] {
+                let n = simulate_decode(&cfg, t, &Framework::nncase(), &m, 8).tokens_per_s;
+                let l = simulate_decode(&cfg, t, &Framework::llamacpp(), &m, 8).tokens_per_s;
+                assert!(
+                    n > l,
+                    "{} {t}T: nncase {n:.2} must beat llama.cpp {l:.2}",
+                    cfg.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_wall_flattens_8t() {
+        // Fig. 10: 8T barely improves over 4T (socket bandwidth wall).
+        let m = ryzen();
+        let cfg = Qwen3Config::qwen3_0_6b(DType::F16);
+        let t4 = simulate_decode(&cfg, 4, &Framework::nncase(), &m, 8).tokens_per_s;
+        let t8 = simulate_decode(&cfg, 8, &Framework::nncase(), &m, 8).tokens_per_s;
+        assert!(t8 >= t4 * 0.95 && t8 <= t4 * 1.25, "4T {t4} vs 8T {t8}");
+    }
+
+    #[test]
+    fn scaling_efficiency_nncase_beats_llamacpp_17b() {
+        // Fig. 10: 1T->4T gain 74% (nncase) vs 32% (llama.cpp) on 1.7B.
+        let m = ryzen();
+        let cfg = Qwen3Config::qwen3_1_7b(DType::F16);
+        let gain = |f: &Framework| {
+            simulate_decode(&cfg, 4, f, &m, 8).tokens_per_s
+                / simulate_decode(&cfg, 1, f, &m, 8).tokens_per_s
+        };
+        let gn = gain(&Framework::nncase());
+        let gl = gain(&Framework::llamacpp());
+        assert!(gn > gl, "nncase scaling {gn:.2} must beat llama.cpp {gl:.2}");
+    }
+
+    #[test]
+    fn memory_bound_regime() {
+        // Decode on CPUs is memory-bound for every competent framework.
+        let m = ryzen();
+        let s = simulate_decode(
+            &Qwen3Config::qwen3_0_6b(DType::F32),
+            1,
+            &Framework::nncase(),
+            &m,
+            8,
+        );
+        assert!(s.t_mem_s > s.t_comp_s, "decode must be memory bound");
+    }
+}

@@ -1,0 +1,138 @@
+//! Regeneration of the paper's evaluation figures as printed tables.
+
+use crate::cost::MachineSpec;
+use crate::ir::DType;
+use crate::model::Qwen3Config;
+
+use super::{simulate_decode, Framework};
+
+/// One (model, framework, threads) cell with the paper's reference value
+/// where it is stated in §4.
+#[derive(Debug, Clone)]
+pub struct FigureRow {
+    pub model: String,
+    pub framework: &'static str,
+    pub threads: usize,
+    pub tokens_per_s: f64,
+    pub paper_tokens_per_s: Option<f64>,
+}
+
+/// Reference values quoted in §4.1 / §4.2 of the paper.
+fn paper_ref(model: &str, fw: &str, threads: usize) -> Option<f64> {
+    match (model, fw, threads) {
+        ("Qwen3-0.6B-f32", "nncase", 1) => Some(8.7),
+        ("Qwen3-0.6B-f32", "llama.cpp", 1) => Some(10.61),
+        ("Qwen3-0.6B-f32", "Intel IPEX", 1) => Some(7.58),
+        ("Qwen3-0.6B-f16", "nncase", 1) => Some(13.87),
+        ("Qwen3-0.6B-f16", "llama.cpp", 1) => Some(17.21),
+        ("Qwen3-0.6B-f16", "Intel IPEX", 1) => Some(10.22),
+        ("Qwen3-1.7B-f16", "nncase", 1) => Some(5.09),
+        ("Qwen3-1.7B-f16", "MLC LLM", 1) => Some(0.2),
+        ("Qwen3-0.6B-f16", "nncase", 4) => Some(23.5),
+        ("Qwen3-0.6B-f16", "llama.cpp", 4) => Some(23.2),
+        ("Qwen3-0.6B-f16", "Intel IPEX", 4) => Some(15.52),
+        ("Qwen3-0.6B-f16", "nncase", 8) => Some(23.98),
+        ("Qwen3-1.7B-f16", "nncase", 4) => Some(8.85),
+        ("Qwen3-1.7B-f16", "llama.cpp", 4) => Some(8.34),
+        ("Qwen3-1.7B-f16", "Intel IPEX", 4) => Some(6.93),
+        _ => None,
+    }
+}
+
+fn eval_cell(cfg: &Qwen3Config, fw: &Framework, threads: usize, m: &MachineSpec) -> FigureRow {
+    let sim = simulate_decode(cfg, threads, fw, m, 8);
+    FigureRow {
+        model: cfg.name.clone(),
+        framework: fw.kind.name(),
+        threads,
+        tokens_per_s: sim.tokens_per_s,
+        paper_tokens_per_s: paper_ref(&cfg.name, fw.kind.name(), threads),
+    }
+}
+
+fn models() -> Vec<Qwen3Config> {
+    vec![
+        Qwen3Config::qwen3_0_6b(DType::F32),
+        Qwen3Config::qwen3_0_6b(DType::F16),
+        Qwen3Config::qwen3_1_7b(DType::F16),
+    ]
+}
+
+/// Figure 9 — single-core (1T) token throughput.
+pub fn fig9_table(m: &MachineSpec) -> Vec<FigureRow> {
+    let mut rows = Vec::new();
+    for cfg in models() {
+        for fw in Framework::all() {
+            rows.push(eval_cell(&cfg, &fw, 1, m));
+        }
+    }
+    rows
+}
+
+/// Figure 10 — multi-core (4T/8T) token throughput.
+pub fn fig10_table(m: &MachineSpec) -> Vec<FigureRow> {
+    let mut rows = Vec::new();
+    for cfg in models() {
+        for threads in [4usize, 8] {
+            for fw in Framework::all() {
+                rows.push(eval_cell(&cfg, &fw, threads, m));
+            }
+        }
+    }
+    rows
+}
+
+/// Render rows as an aligned text table.
+pub fn render(rows: &[FigureRow], title: &str) -> String {
+    let mut s = format!("== {title} ==\n");
+    s.push_str(&format!(
+        "{:<18} {:<12} {:>3}  {:>10}  {:>10}  {:>7}\n",
+        "model", "framework", "T", "sim tok/s", "paper", "ratio"
+    ));
+    for r in rows {
+        let (paper, ratio) = match r.paper_tokens_per_s {
+            Some(p) => (format!("{p:.2}"), format!("{:.2}x", r.tokens_per_s / p)),
+            None => ("-".into(), "-".into()),
+        };
+        s.push_str(&format!(
+            "{:<18} {:<12} {:>3}  {:>10.2}  {:>10}  {:>7}\n",
+            r.model, r.framework, r.threads, r.tokens_per_s, paper, ratio
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_has_all_cells() {
+        let rows = fig9_table(&MachineSpec::ryzen_5900x());
+        assert_eq!(rows.len(), 3 * 4, "3 models x 4 frameworks");
+        assert!(rows.iter().all(|r| r.threads == 1));
+        assert!(rows.iter().all(|r| r.tokens_per_s > 0.0));
+    }
+
+    #[test]
+    fn fig10_has_all_cells() {
+        let rows = fig10_table(&MachineSpec::ryzen_5900x());
+        assert_eq!(rows.len(), 3 * 2 * 4, "3 models x {{4T,8T}} x 4 frameworks");
+    }
+
+    #[test]
+    fn paper_refs_attached_where_known() {
+        let rows = fig9_table(&MachineSpec::ryzen_5900x());
+        let with_ref = rows.iter().filter(|r| r.paper_tokens_per_s.is_some()).count();
+        assert!(with_ref >= 7, "known §4.1 references must be attached");
+    }
+
+    #[test]
+    fn render_contains_headline_cells() {
+        let rows = fig9_table(&MachineSpec::ryzen_5900x());
+        let s = render(&rows, "Figure 9");
+        assert!(s.contains("nncase"));
+        assert!(s.contains("llama.cpp"));
+        assert!(s.contains("Qwen3-0.6B-f32"));
+    }
+}

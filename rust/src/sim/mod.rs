@@ -1,0 +1,22 @@
+//! Machine simulator and baseline framework models (§4).
+//!
+//! The paper's evaluation platform (Ryzen 9 5900X + DDR4-3600) is not
+//! available here, and neither are the competitor binaries, so the
+//! experiments of Figures 9 and 10 run on a Roofline-based performance
+//! simulator ([`decode`]) in which each framework is represented by its
+//! *strategy* ([`baselines`]): kernel efficiency, layout behaviour,
+//! threading model, dispatch overheads. The parameters are derived from
+//! first principles (documented per framework), not fitted to the
+//! paper's numbers; the claim reproduced is the *shape* of the results —
+//! orderings, rough factors, crossovers — per DESIGN.md §2.
+//!
+//! [`figures`] regenerates the two evaluation figures as printed tables
+//! with the paper's reference values alongside.
+
+pub mod baselines;
+pub mod decode;
+pub mod figures;
+
+pub use baselines::{Framework, FrameworkKind};
+pub use decode::{simulate_decode, DecodeSim};
+pub use figures::{fig10_table, fig9_table, FigureRow};

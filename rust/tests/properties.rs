@@ -1,0 +1,202 @@
+//! Property-based tests over randomized inputs (our own generator-based
+//! harness; the offline vendor set has no proptest). Each property runs
+//! across many random seeds and asserts an invariant of a subsystem.
+
+use nncase_repro::codegen::{bufferize, plan_memory, Liveness, PlannerKind};
+use nncase_repro::cost::MachineSpec;
+use nncase_repro::dist::{reshard_cost_bytes, NdSbp, Placement, Sbp};
+use nncase_repro::egraph::{extract_greedy, EGraph, Runner, RunnerLimits};
+use nncase_repro::ir::{BinaryKind, DType, Graph, NodeId, UnaryKind};
+use nncase_repro::model::Qwen3Config;
+use nncase_repro::ntt::{matmul_blocked, matmul_naive, Tensor};
+use nncase_repro::rewrite::transpose_rules;
+use nncase_repro::sim::{simulate_decode, Framework};
+use nncase_repro::util::Rng;
+
+/// Random square-tensor DAG of transposes, unaries and binaries.
+fn random_graph(rng: &mut Rng, n_ops: usize) -> (Graph, NodeId) {
+    let mut g = Graph::new();
+    let mut pool: Vec<NodeId> = vec![
+        g.input("a", &[16, 16], DType::F32),
+        g.input("b", &[16, 16], DType::F32),
+    ];
+    for _ in 0..n_ops {
+        let pick = pool[rng.below(pool.len())];
+        let kind = rng.below(4);
+        let other = pool[rng.below(pool.len())];
+        let id = match kind {
+            0 => g.transpose(pick, &[1, 0]),
+            1 => g.unary(UnaryKind::Exp, pick),
+            2 => g.unary(UnaryKind::Neg, pick),
+            _ => g.binary(BinaryKind::Add, pick, other),
+        };
+        pool.push(id);
+    }
+    let out = *pool.last().unwrap();
+    g.mark_output(out);
+    (g, out)
+}
+
+/// Saturation + extraction never changes the output type and never
+/// *increases* the number of live transposes.
+#[test]
+fn prop_saturation_preserves_type_and_improves() {
+    let mut rng = Rng::new(0xF00D);
+    for round in 0..25 {
+        let n = 4 + rng.below(8);
+        let (g, out) = random_graph(&mut rng, n);
+        let want_ty = g.node(out).ty.clone();
+        let before = count_transposes(&g);
+        let (mut eg, map) = EGraph::from_graph(&g);
+        let rules = transpose_rules();
+        let refs: Vec<&dyn nncase_repro::egraph::Rewrite> =
+            rules.iter().map(|r| r.as_ref()).collect();
+        Runner::new(&mut eg)
+            .with_limits(RunnerLimits { max_iters: 6, max_nodes: 20_000 })
+            .run(&refs);
+        let cost = |n: &nncase_repro::egraph::ENode,
+                    _: &[&nncase_repro::ir::TensorType],
+                    _: &nncase_repro::ir::TensorType|
+         -> u64 {
+            match n.op {
+                nncase_repro::ir::Op::Transpose { .. } => 100,
+                _ => 1,
+            }
+        };
+        let ex = extract_greedy(&eg, &[map[out.index()]], &cost);
+        let got_ty = &ex.graph.node(*ex.graph.outputs.last().unwrap()).ty;
+        assert_eq!(got_ty.shape, want_ty.shape, "round {round}: shape changed");
+        assert_eq!(got_ty.dtype, want_ty.dtype);
+        let after = count_transposes(&ex.graph);
+        assert!(
+            after <= before,
+            "round {round}: transposes grew {before} -> {after}\n{}",
+            ex.graph.dump()
+        );
+    }
+}
+
+fn count_transposes(g: &Graph) -> usize {
+    g.live_nodes()
+        .iter()
+        .filter(|&&id| matches!(g.node(id).op, nncase_repro::ir::Op::Transpose { .. }))
+        .count()
+}
+
+/// Memory planner invariant: for every planner, lifetime-overlapping
+/// buffers never overlap in the arena, and the SAT planner never loses
+/// to first-fit.
+#[test]
+fn prop_memplan_no_overlap_random_graphs() {
+    let mut rng = Rng::new(0xBEE);
+    for _round in 0..20 {
+        let n = 6 + rng.below(10);
+        let (g, _) = random_graph(&mut rng, n);
+        let bufs = bufferize(&g);
+        let live = Liveness::compute(&g, &bufs);
+        let ff = plan_memory(&bufs, &live, PlannerKind::FirstFit);
+        let sat = plan_memory(&bufs, &live, PlannerKind::SatOptimal);
+        assert!(sat.arena_bytes <= ff.arena_bytes);
+        for plan in [&ff, &sat] {
+            let inter = bufs.intermediates();
+            for (i, &a) in inter.iter().enumerate() {
+                for &b in inter.iter().skip(i + 1) {
+                    if live.overlap(a, b) {
+                        let (oa, ob) = (plan.offsets[&a], plan.offsets[&b]);
+                        let (sa, sb) = (bufs.sizes[a.0 as usize], bufs.sizes[b.0 as usize]);
+                        assert!(oa + sa <= ob || ob + sb <= oa, "overlap in {:?}", plan.kind);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Resharding cost properties: identity is free, costs are non-negative,
+/// and P->B (all-reduce) dominates S->B (all-gather) at equal size.
+#[test]
+fn prop_reshard_cost_properties() {
+    let ab = nncase_repro::cost::AlphaBeta { alpha_s: 1e-6, beta_bytes_per_s: 20e9 };
+    let mut rng = Rng::new(0x5B9);
+    for _ in 0..50 {
+        let p = Placement::line(2 + rng.below(7));
+        let bytes = 1u64 << (10 + rng.below(16));
+        let sbps = [NdSbp::split1(0), NdSbp::split1(1), NdSbp::broadcast(1), NdSbp(vec![Sbp::Partial])];
+        for s in &sbps {
+            assert_eq!(reshard_cost_bytes(s, s, bytes, &p, &ab), 0.0, "identity not free");
+            for t in &sbps {
+                assert!(reshard_cost_bytes(s, t, bytes, &p, &ab) >= 0.0);
+            }
+        }
+        let p2b = reshard_cost_bytes(&NdSbp(vec![Sbp::Partial]), &NdSbp::broadcast(1), bytes, &p, &ab);
+        let s2b = reshard_cost_bytes(&NdSbp::split1(0), &NdSbp::broadcast(1), bytes, &p, &ab);
+        assert!(p2b >= s2b, "all-reduce must dominate all-gather");
+    }
+}
+
+/// Blocked matmul equals naive matmul on random (including awkward)
+/// shapes — the NTT packing path is shape-safe.
+#[test]
+fn prop_blocked_matmul_random_shapes() {
+    let mut rng = Rng::new(0xAB);
+    for _ in 0..30 {
+        let m = 1 + rng.below(70);
+        let k = 1 + rng.below(70);
+        let n = 1 + rng.below(70);
+        let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+        let b = Tensor::randn(&[k, n], &mut rng, 1.0);
+        let want = matmul_naive(&a, &b);
+        let got = matmul_blocked(&a, &b);
+        let diff = want.max_abs_diff(&got);
+        assert!(diff < 1e-3, "({m},{k},{n}): diff {diff}");
+    }
+}
+
+/// Simulator monotonicity: more threads never reduce simulated
+/// throughput; larger models never increase it; lower precision never
+/// decreases it. (These hold for every framework model.)
+#[test]
+fn prop_simulator_monotonicity() {
+    let m = MachineSpec::ryzen_5900x();
+    for fw in Framework::all() {
+        let tput = |cfg: &Qwen3Config, t: usize| simulate_decode(cfg, t, &fw, &m, 8).tokens_per_s;
+        let c06_f16 = Qwen3Config::qwen3_0_6b(DType::F16);
+        let c06_f32 = Qwen3Config::qwen3_0_6b(DType::F32);
+        let c17 = Qwen3Config::qwen3_1_7b(DType::F16);
+        let mut prev = 0.0;
+        for t in [1usize, 2, 4, 8, 12] {
+            let cur = tput(&c06_f16, t);
+            assert!(
+                cur >= prev * 0.90,
+                "{}: threads {t} dropped throughput {prev} -> {cur}",
+                fw.kind.name()
+            );
+            prev = cur;
+        }
+        assert!(tput(&c17, 1) < tput(&c06_f16, 1), "bigger model must be slower");
+        // F16 halves the weight stream: a clear win for memory-bound
+        // frameworks; compute-bound MLC only must not get much worse
+        // (the f16->f32 conversion penalty).
+        if matches!(
+            fw.kind,
+            nncase_repro::sim::FrameworkKind::Nncase | nncase_repro::sim::FrameworkKind::LlamaCpp
+        ) {
+            assert!(tput(&c06_f16, 1) > tput(&c06_f32, 1), "f16 must beat f32");
+        } else {
+            assert!(tput(&c06_f16, 1) > 0.85 * tput(&c06_f32, 1));
+        }
+    }
+}
+
+/// KV-cache accounting: the config-level bytes-per-token formula matches
+/// the engine's actual cache allocation.
+#[test]
+fn prop_kv_accounting_matches_engine() {
+    let cfg = Qwen3Config::tiny();
+    let per_token = cfg.kv_bytes_per_token();
+    // Engine allocates 2 tensors of [max_seq, kvh*hd] f32 per layer.
+    let max_seq = 64;
+    let engine_bytes =
+        (2 * cfg.layers * max_seq * cfg.kv_heads * cfg.head_dim * 4) as u64;
+    assert_eq!(per_token * max_seq as u64, engine_bytes);
+}

@@ -13,8 +13,9 @@
 //! Run: `cargo run --release --example qwen3_serve`
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
-use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine};
+use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServePolicy};
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
+use nncase_repro::serving::ContinuousConfig;
 
 fn main() {
     let cfg = Qwen3Config::tiny();
@@ -55,6 +56,25 @@ fn main() {
         }
         last_output = Some(report.outputs);
     }
+    // Continuous batching over the paged KV pool: same outputs, one
+    // weight stream per iteration instead of per request (docs/serving.md).
+    let engine = Qwen3Engine::new(load(()), 1, 512);
+    let mut coord = Coordinator::new(engine);
+    let report = coord.serve_with_policy(
+        &requests,
+        ServePolicy::Continuous(ContinuousConfig {
+            block_size: 16,
+            num_blocks: 64,
+            max_batch: requests.len(),
+        }),
+    );
+    println!("continuous: {}", report.render());
+    assert_eq!(
+        last_output.as_ref().unwrap(),
+        &report.outputs,
+        "continuous batching changed outputs!"
+    );
+
     let sample = &last_output.unwrap()[0].1;
     println!("\nsample generation (request 0): {:?}", &sample[..12.min(sample.len())]);
     println!("qwen3_serve OK");

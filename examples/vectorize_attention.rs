@@ -38,7 +38,7 @@ fn main() {
 
     // Execute the L1 Pallas fused kernel through PJRT if available.
     let dir = std::path::Path::new("artifacts");
-    if dir.join("manifest.tsv").exists() {
+    if dir.join("manifest.tsv").exists() && nncase_repro::runtime::PjrtRuntime::available() {
         use nncase_repro::ntt::{exp_inplace, matmul_blocked, Tensor};
         use nncase_repro::runtime::{Manifest, PjrtRuntime};
         use nncase_repro::util::Rng;
@@ -65,7 +65,9 @@ fn main() {
         println!("\nPallas fused kernel vs NTT composition: max |Δ| = {diff:.2e}");
         assert!(diff < 1e-2);
     } else {
-        println!("\n(artifacts/ missing — run `make artifacts` for the PJRT check)");
+        println!(
+            "\n(PJRT check skipped — needs `make artifacts` and an xla-enabled build)"
+        );
     }
     println!("vectorize_attention OK");
 }

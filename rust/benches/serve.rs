@@ -1,0 +1,85 @@
+//! Serving benchmark: FCFS (batch 1, dense KV) vs continuous batching
+//! (paged KV pool) on the synthetic workload at batch pressures
+//! {1, 4, 16}.
+//!
+//! The decode hot path is memory-bound on the weight stream; FCFS pays
+//! it once per sequence per token while the batched engine pays it once
+//! per iteration, so continuous batching's decode throughput should
+//! scale with concurrency until attention (per-sequence) dominates.
+//!
+//! Run: `cargo bench --bench serve`
+
+mod bench_util;
+
+use bench_util::row;
+use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServePolicy};
+use nncase_repro::model::{Qwen3Config, Qwen3Weights};
+use nncase_repro::serving::ContinuousConfig;
+
+fn main() {
+    let cfg = Qwen3Config::tiny();
+    let (prompt_len, max_new) = (8usize, 32usize);
+    println!(
+        "== serving: FCFS vs continuous batching ({}, {}+{} tokens/request) ==",
+        cfg.name, prompt_len, max_new
+    );
+
+    let mut speedup_at_16 = 0.0f64;
+    for pressure in [1usize, 4, 16] {
+        let reqs = synthetic_workload(pressure, prompt_len, max_new, cfg.vocab);
+
+        let mut fcfs = Coordinator::new(Qwen3Engine::new(
+            Qwen3Weights::random(&cfg, 42),
+            1,
+            prompt_len + max_new + 1,
+        ));
+        let fcfs_rep = fcfs.serve(&reqs);
+
+        let mut cont = Coordinator::new(Qwen3Engine::new(
+            Qwen3Weights::random(&cfg, 42),
+            1,
+            prompt_len + max_new + 1,
+        ));
+        let ccfg = ContinuousConfig {
+            block_size: 16,
+            num_blocks: 4 * pressure + 8,
+            max_batch: pressure,
+        };
+        let cont_rep = cont.serve_with_policy(&reqs, ServePolicy::Continuous(ccfg));
+
+        assert_eq!(
+            fcfs_rep.outputs, cont_rep.outputs,
+            "continuous batching must be token-identical to the FCFS oracle"
+        );
+
+        let speedup = if fcfs_rep.decode_tokens_per_s > 0.0 {
+            cont_rep.decode_tokens_per_s / fcfs_rep.decode_tokens_per_s
+        } else {
+            0.0
+        };
+        if pressure == 16 {
+            speedup_at_16 = speedup;
+        }
+        row(
+            &format!("batch pressure {pressure:>2}"),
+            format!(
+                "fcfs {:>8.2} tok/s | continuous {:>8.2} tok/s | {:>5.2}x | wall {:.2}s -> {:.2}s",
+                fcfs_rep.decode_tokens_per_s,
+                cont_rep.decode_tokens_per_s,
+                speedup,
+                fcfs_rep.wall_s,
+                cont_rep.wall_s,
+            ),
+        );
+        if let Some(m) = &cont_rep.serving {
+            row("  continuous metrics", m.render());
+        }
+    }
+
+    assert!(
+        speedup_at_16 >= 2.0,
+        "continuous batching must be >= 2x FCFS decode throughput at 16 \
+         concurrent requests (got {speedup_at_16:.2}x)"
+    );
+    println!("\nserve OK ({speedup_at_16:.2}x at 16 concurrent)");
+}

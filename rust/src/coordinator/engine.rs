@@ -44,8 +44,8 @@ impl SpinBarrier {
 
 use crate::model::{Qwen3Config, Qwen3Weights};
 use crate::ntt::{
-    add_inplace, gemv_cols, mul_inplace, rmsnorm, rope_inplace, silu_inplace, softmax_inplace,
-    Tensor,
+    add_inplace, dot, gemv_cols, mul_inplace, rmsnorm, rope_inplace, silu_inplace,
+    softmax_inplace, Tensor,
 };
 
 /// Per-layer KV cache: rows are positions, columns `kv_heads * head_dim`.
@@ -80,10 +80,53 @@ fn splits(n: usize, parts: usize) -> Vec<(usize, usize)> {
 struct SharedVec(std::cell::UnsafeCell<Vec<f32>>);
 unsafe impl Sync for SharedVec {}
 
-/// Single-writer cell: only worker 0 takes the &mut, in barrier-separated
-/// phases (used for the KV-cache commit).
-struct SharedMut<T>(std::cell::UnsafeCell<T>);
-unsafe impl<T> Sync for SharedMut<T> {}
+/// Single-writer handoff cell for the KV-cache commit.
+///
+/// Invariant (checked with `debug_assert!`s): only worker 0 calls
+/// [`KvCell::commit`], and every `commit` is separated from every
+/// [`KvCell::read`] by a barrier — writes in phase 3 happen-before reads
+/// in phase 4 via the barrier's Release/Acquire pair. The `writers`
+/// counter turns a violated invariant into a deterministic debug panic
+/// instead of a silent data race; block tables in the paged serving path
+/// make these aliasing rules stricter, so the contract is enforced here
+/// rather than scattered across raw `UnsafeCell` pokes.
+struct KvCell<'a> {
+    kv: std::cell::UnsafeCell<&'a mut Vec<KvCache>>,
+    writers: AtomicUsize,
+}
+
+unsafe impl Sync for KvCell<'_> {}
+
+impl<'a> KvCell<'a> {
+    fn new(kv: &'a mut Vec<KvCache>) -> Self {
+        KvCell { kv: std::cell::UnsafeCell::new(kv), writers: AtomicUsize::new(0) }
+    }
+
+    /// Exclusive commit window. SAFETY: caller must be the single writer
+    /// (worker 0) inside a barrier-separated phase.
+    fn commit(&self, worker: usize, f: impl FnOnce(&mut Vec<KvCache>)) {
+        debug_assert_eq!(worker, 0, "only worker 0 may commit the KV cache");
+        let prev = self.writers.fetch_add(1, Ordering::AcqRel);
+        debug_assert_eq!(prev, 0, "concurrent KV commit: barrier invariant violated");
+        let _ = prev;
+        // SAFETY: single writer by contract (debug-checked above); all
+        // readers are on the other side of a barrier.
+        f(unsafe { &mut **self.kv.get() });
+        self.writers.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Shared read. SAFETY: must be barrier-separated from any commit.
+    fn read(&self) -> &Vec<KvCache> {
+        debug_assert_eq!(
+            self.writers.load(Ordering::Acquire),
+            0,
+            "KV read overlapping a commit: barrier invariant violated"
+        );
+        // SAFETY: no writer is active (debug-checked above); the commit
+        // phase happened-before this read via the barrier.
+        unsafe { &**self.kv.get() }
+    }
+}
 
 impl SharedVec {
     fn new(n: usize) -> Self {
@@ -167,8 +210,9 @@ impl Qwen3Engine {
         let down = SharedVec::new(h);
         let logits = SharedVec::new(cfg.vocab);
         // KV caches are committed by worker 0 in a barrier-separated
-        // phase; the cell hands out the &mut only there.
-        let kv_cell = SharedMut(std::cell::UnsafeCell::new(&mut self.kv));
+        // phase; the cell hands out the &mut only there (see KvCell docs
+        // for the checked invariant).
+        let kv_cell = KvCell::new(&mut self.kv);
 
         let weights = &self.weights;
         let barrier = SpinBarrier::new(t);
@@ -221,14 +265,15 @@ impl Qwen3Engine {
                         barrier.wait();
                         // Phase 3 (serial): commit this position's K/V.
                         if wi == 0 {
-                            let kv = unsafe { &mut **kv_cell.0.get() };
-                            kv[l].k.row_mut(pos).copy_from_slice(kvec.read());
-                            kv[l].v.row_mut(pos).copy_from_slice(vvec.read());
-                            kv[l].len = seq;
+                            kv_cell.commit(wi, |kv| {
+                                kv[l].k.row_mut(pos).copy_from_slice(kvec.read());
+                                kv[l].v.row_mut(pos).copy_from_slice(vvec.read());
+                                kv[l].len = seq;
+                            });
                         }
                         barrier.wait();
                         // Phase 4: attention per query head (GQA).
-                        let kv = unsafe { &**(kv_cell.0.get() as *const &mut Vec<KvCache>) };
+                        let kv = kv_cell.read();
                         let kc = &kv[l];
                         let group = heads / kvh;
                         let inv_sqrt = 1.0 / (hd as f32).sqrt();
@@ -330,10 +375,6 @@ impl Qwen3Engine {
         }
         out
     }
-}
-
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
 /// Index of the maximum logit.

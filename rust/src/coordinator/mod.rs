@@ -7,12 +7,13 @@
 //!   time (the Auto Distribution S(1) strategy for column-parallel
 //!   GEMV), synchronized with lightweight barriers — no fork-join work
 //!   stealing, no dynamic scheduling.
-//! * [`serve`] — the request loop: FCFS queue, decode loop, token
-//!   throughput and latency metrics (the E2E driver of examples/
-//!   qwen3_serve.rs).
+//! * [`serve`] — the request loop behind [`ServePolicy`]: the FCFS
+//!   oracle (batch 1, dense KV) and the continuous-batching path over
+//!   the paged KV pool of [`crate::serving`], with token throughput and
+//!   latency metrics (the E2E driver of examples/qwen3_serve.rs).
 
 pub mod engine;
 pub mod serve;
 
 pub use engine::{argmax, KvCache, Qwen3Engine};
-pub use serve::{synthetic_workload, Coordinator, Request, ServeReport};
+pub use serve::{synthetic_workload, Coordinator, Request, ServePolicy, ServeReport};

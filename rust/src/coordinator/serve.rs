@@ -1,9 +1,11 @@
-//! Request serving: FCFS queue over the decode engine with throughput and
-//! latency metrics (the workload of the E2E driver).
+//! Request serving: the FCFS oracle path and the continuous-batching
+//! path over the paged KV pool, behind [`ServePolicy`].
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use super::Qwen3Engine;
+use crate::serving::{BatchEngine, ContinuousConfig, ContinuousScheduler, ServingMetrics, StepSlot};
 use crate::util::Stats;
 
 /// One generation request.
@@ -14,6 +16,19 @@ pub struct Request {
     pub max_new_tokens: usize,
 }
 
+/// How the coordinator schedules requests.
+#[derive(Debug, Clone)]
+pub enum ServePolicy {
+    /// One request at a time over the dense per-request KV cache
+    /// (batch size 1, §4's methodology). Kept as the differential
+    /// oracle for the continuous path.
+    Fcfs,
+    /// Continuous batching over the paged KV block pool
+    /// (`crate::serving`): iteration-level prefill+decode batching,
+    /// prefix sharing, preemption-to-queue.
+    Continuous(ContinuousConfig),
+}
+
 /// Aggregate serving metrics.
 #[derive(Debug)]
 pub struct ServeReport {
@@ -21,34 +36,52 @@ pub struct ServeReport {
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
     pub wall_s: f64,
-    /// Decode throughput over generated tokens only.
+    /// Decode throughput over the decode-timed tokens only, computed
+    /// from directly accumulated decode seconds (never `mean * count`).
     pub decode_tokens_per_s: f64,
     /// Per-token decode latency stats (seconds).
     pub token_latency: Stats,
-    /// Per-request end-to-end latency stats (seconds).
+    /// Time-to-first-token per request, seconds, measured from
+    /// submission (= the start of the serve call, when the whole batch
+    /// arrives) to the first sampled token. Queue / head-of-line wait
+    /// is included under both policies, so the field is comparable
+    /// across them — FCFS tail requests rightly show the wait behind
+    /// earlier generations.
+    pub ttft: Stats,
+    /// Per-request end-to-end latency stats (seconds), measured from
+    /// submission (= serve start) to completion under both policies, so
+    /// FCFS head-of-line wait is included just as queue wait is for the
+    /// continuous path.
     pub request_latency: Stats,
     /// Generated token ids per request.
     pub outputs: Vec<(u64, Vec<usize>)>,
+    /// Extended metrics of the continuous-batching path (None for FCFS).
+    pub serving: Option<ServingMetrics>,
 }
 
 impl ServeReport {
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} prompt_toks={} gen_toks={} wall={:.2}s decode={:.2} tok/s \
-             tok_lat p50={:.2}ms p99={:.2}ms req_lat mean={:.2}s",
+             ttft p50={:.2}ms tok_lat p50={:.2}ms p99={:.2}ms req_lat mean={:.2}s",
             self.requests,
             self.prompt_tokens,
             self.generated_tokens,
             self.wall_s,
             self.decode_tokens_per_s,
+            self.ttft.percentile(50.0) * 1e3,
             self.token_latency.percentile(50.0) * 1e3,
             self.token_latency.percentile(99.0) * 1e3,
             self.request_latency.mean(),
-        )
+        );
+        if let Some(m) = &self.serving {
+            s.push_str(&format!(" | {}", m.render()));
+        }
+        s
     }
 }
 
-/// The FCFS serving coordinator (batch size 1, matching §4's methodology).
+/// The serving coordinator.
 pub struct Coordinator {
     pub engine: Qwen3Engine,
 }
@@ -58,16 +91,33 @@ impl Coordinator {
         Coordinator { engine }
     }
 
-    /// Serve a list of requests to completion.
+    /// Serve a list of requests to completion, FCFS (the oracle path).
     pub fn serve(&mut self, requests: &[Request]) -> ServeReport {
+        self.serve_with_policy(requests, ServePolicy::Fcfs)
+    }
+
+    /// Serve a list of requests under `policy`.
+    pub fn serve_with_policy(&mut self, requests: &[Request], policy: ServePolicy) -> ServeReport {
+        match policy {
+            ServePolicy::Fcfs => self.serve_fcfs(requests),
+            ServePolicy::Continuous(cfg) => self.serve_continuous(requests, cfg),
+        }
+    }
+
+    fn serve_fcfs(&mut self, requests: &[Request]) -> ServeReport {
         let wall = Instant::now();
         let mut token_latency = Stats::default();
+        let mut ttft = Stats::default();
         let mut request_latency = Stats::default();
         let mut outputs = Vec::new();
         let mut prompt_tokens = 0usize;
         let mut generated = 0usize;
+        // Decode seconds accumulated directly (the old report derived
+        // them back from `mean * count`, and sampled the first token's
+        // latency outside any timing window).
+        let mut decode_s = 0.0f64;
+        let mut decode_steps = 0usize;
         for req in requests {
-            let t_req = Instant::now();
             self.engine.reset();
             let mut pos = 0usize;
             let mut logits = Vec::new();
@@ -77,30 +127,108 @@ impl Coordinator {
             }
             prompt_tokens += req.prompt.len();
             let mut toks = Vec::with_capacity(req.max_new_tokens);
-            let mut next = super::engine::argmax(&logits);
-            for _ in 0..req.max_new_tokens {
-                let t_tok = Instant::now();
+            if req.max_new_tokens > 0 && !req.prompt.is_empty() {
+                // First token: sampled from the prompt's final logits,
+                // inside the TTFT window (from serve start, so FCFS
+                // head-of-line wait is visible, as in the continuous
+                // path).
+                let mut next = super::engine::argmax(&logits);
+                ttft.push(wall.elapsed().as_secs_f64());
                 toks.push(next);
-                logits = self.engine.decode_step(next, pos);
-                pos += 1;
-                next = super::engine::argmax(&logits);
-                token_latency.push(t_tok.elapsed().as_secs_f64());
                 generated += 1;
+                // Remaining tokens: each decode step timed directly. The
+                // old loop also ran one extra step whose logits were
+                // discarded; stop at the last sampled token instead.
+                for _ in 1..req.max_new_tokens {
+                    let t_tok = Instant::now();
+                    logits = self.engine.decode_step(next, pos);
+                    pos += 1;
+                    next = super::engine::argmax(&logits);
+                    let dt = t_tok.elapsed().as_secs_f64();
+                    token_latency.push(dt);
+                    decode_s += dt;
+                    decode_steps += 1;
+                    toks.push(next);
+                    generated += 1;
+                }
             }
-            request_latency.push(t_req.elapsed().as_secs_f64());
+            // From serve start, like the continuous path (see the field
+            // doc): the wait behind earlier requests is part of this
+            // request's latency.
+            request_latency.push(wall.elapsed().as_secs_f64());
             outputs.push((req.id, toks));
         }
         let wall_s = wall.elapsed().as_secs_f64();
-        let decode_s: f64 = token_latency.mean() * generated as f64;
         ServeReport {
             requests: requests.len(),
             prompt_tokens,
             generated_tokens: generated,
             wall_s,
-            decode_tokens_per_s: if decode_s > 0.0 { generated as f64 / decode_s } else { 0.0 },
+            decode_tokens_per_s: if decode_s > 0.0 { decode_steps as f64 / decode_s } else { 0.0 },
             token_latency,
+            ttft,
             request_latency,
             outputs,
+            serving: None,
+        }
+    }
+
+    fn serve_continuous(&mut self, requests: &[Request], cfg: ContinuousConfig) -> ServeReport {
+        let wall = Instant::now();
+        let mut sched = ContinuousScheduler::new(cfg.clone());
+        let mut be = BatchEngine::new(&self.engine.weights, cfg.num_blocks, cfg.block_size);
+        for r in requests {
+            sched.submit(r);
+        }
+        let mut request_latency = Stats::default();
+        let mut done: HashMap<u64, Vec<usize>> = HashMap::new();
+        let mut collect =
+            |sched: &mut ContinuousScheduler, lat: &mut Stats, t0: &Instant| {
+                for f in sched.take_finished() {
+                    lat.push(t0.elapsed().as_secs_f64());
+                    done.insert(f.id, f.generated);
+                }
+            };
+        while !sched.is_done() {
+            // schedule() either yields at least one runnable sequence or
+            // panics (pool too small for the queue head) — a 0 return
+            // with work left cannot happen.
+            let _scheduled = sched.schedule();
+            debug_assert!(_scheduled > 0, "scheduler yielded no work while not done");
+            let t_iter = Instant::now();
+            let slots: Vec<StepSlot> = sched
+                .running()
+                .iter()
+                .map(|s| StepSlot {
+                    token: s.tokens[s.pos],
+                    pos: s.pos,
+                    table: &s.table.blocks,
+                    sample: s.at_frontier(),
+                })
+                .collect();
+            let samples = be.step(&slots);
+            drop(slots);
+            sched.commit(&samples, t_iter.elapsed().as_secs_f64());
+            collect(&mut sched, &mut request_latency, &wall);
+        }
+        collect(&mut sched, &mut request_latency, &wall);
+
+        let metrics = std::mem::take(&mut sched.metrics);
+        let outputs: Vec<(u64, Vec<usize>)> = requests
+            .iter()
+            .map(|r| (r.id, done.remove(&r.id).unwrap_or_default()))
+            .collect();
+        ServeReport {
+            requests: requests.len(),
+            prompt_tokens: requests.iter().map(|r| r.prompt.len()).sum(),
+            generated_tokens: outputs.iter().map(|(_, t)| t.len()).sum(),
+            wall_s: wall.elapsed().as_secs_f64(),
+            decode_tokens_per_s: metrics.decode_tokens_per_s(),
+            token_latency: metrics.tpot.clone(),
+            ttft: metrics.ttft.clone(),
+            request_latency,
+            outputs,
+            serving: Some(metrics),
         }
     }
 }
@@ -136,6 +264,11 @@ mod tests {
         assert!(rep.decode_tokens_per_s > 0.0);
         assert_eq!(rep.outputs.len(), 3);
         assert!(rep.render().contains("tok/s"));
+        // Satellite fix: first-token latency is captured (TTFT window)
+        // and decode seconds come from direct accumulation.
+        assert_eq!(rep.ttft.len(), 3);
+        assert_eq!(rep.token_latency.len(), 3 * 4, "max_new-1 timed steps per request");
+        assert!(rep.serving.is_none());
     }
 
     #[test]
@@ -145,5 +278,47 @@ mod tests {
         assert_eq!(a[0].prompt, b[0].prompt);
         assert_eq!(a[1].prompt, b[1].prompt);
         assert_ne!(a[0].prompt, a[1].prompt);
+    }
+
+    #[test]
+    fn continuous_policy_reports() {
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
+        let reqs = synthetic_workload(3, 4, 5, cfg.vocab);
+        let rep = c.serve_with_policy(
+            &reqs,
+            ServePolicy::Continuous(ContinuousConfig {
+                block_size: 4,
+                num_blocks: 32,
+                max_batch: 3,
+            }),
+        );
+        assert_eq!(rep.requests, 3);
+        assert_eq!(rep.generated_tokens, 15);
+        assert_eq!(rep.outputs.len(), 3);
+        let m = rep.serving.as_ref().expect("continuous metrics");
+        assert!(m.iterations > 0);
+        assert!(m.batch_size.max() >= 2.0, "requests must actually batch");
+        assert!(rep.render().contains("batch mean"));
+    }
+
+    #[test]
+    fn degenerate_requests_round_trip() {
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
+        let reqs = vec![
+            Request { id: 5, prompt: vec![], max_new_tokens: 3 },
+            Request { id: 9, prompt: vec![1, 2], max_new_tokens: 0 },
+        ];
+        for policy in [
+            ServePolicy::Fcfs,
+            ServePolicy::Continuous(ContinuousConfig::default()),
+        ] {
+            let rep = c.serve_with_policy(&reqs, policy);
+            assert_eq!(rep.generated_tokens, 0);
+            assert_eq!(rep.outputs, vec![(5, vec![]), (9, vec![])]);
+        }
     }
 }

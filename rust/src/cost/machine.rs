@@ -64,6 +64,18 @@ impl MachineSpec {
         (self.dram_bw_core_gbps * t).min(self.dram_bw_total_gbps) * 1e9
     }
 
+    /// KV-cache block budget of the serving subsystem: how many paged KV
+    /// blocks of `block_bytes` fit after reserving `reserved_bytes`
+    /// (weights + activations) out of `mem_capacity_bytes`. This is the
+    /// same hard memory constraint Auto Distribution enforces per device
+    /// (Observation 2), applied to the serving-side KV pool.
+    pub fn kv_block_budget(&self, reserved_bytes: u64, block_bytes: u64) -> u64 {
+        if block_bytes == 0 {
+            return 0;
+        }
+        (self.mem_capacity_bytes as u64).saturating_sub(reserved_bytes) / block_bytes
+    }
+
     /// The evaluation platform of §4: AMD Ryzen 9 5900X, 12 cores, AVX2,
     /// 128 GB DDR4-3600 (dual channel).
     pub fn ryzen_5900x() -> Self {
@@ -153,6 +165,18 @@ mod tests {
         // 2 cores double, but the socket caps at 42 GB/s.
         assert_eq!(m.dram_bw(2), 42.0e9);
         assert_eq!(m.dram_bw(8), 42.0e9);
+    }
+
+    #[test]
+    fn kv_block_budget_accounts_reservation() {
+        let m = MachineSpec::ryzen_5900x(); // 128 GiB
+        let block = 2u64 << 20; // 2 MiB blocks
+        assert_eq!(m.kv_block_budget(0, block), (128u64 << 30) / (2 << 20));
+        // Reserving 64 GiB of weights halves the pool.
+        assert_eq!(m.kv_block_budget(64 << 30, block), (64u64 << 30) / (2 << 20));
+        // Over-reservation and degenerate block size are safe.
+        assert_eq!(m.kv_block_budget(u64::MAX, block), 0);
+        assert_eq!(m.kv_block_budget(0, 0), 0);
     }
 
     #[test]

@@ -1,0 +1,734 @@
+//! Auto Distribution (§3.1.3): the SBP abstraction, the distributed
+//! e-graph of Fig. 5, and memory-constrained strategy extraction.
+//!
+//! Following OneFlow's SBP formalism (which the paper adopts), every
+//! tensor on a device mesh carries a distribution signature:
+//!
+//! * `S(d)` — **Split**: the tensor is partitioned along axis `d`; each
+//!   device holds a `1/p` shard.
+//! * `B` — **Broadcast**: every device holds a full replica.
+//! * `P` — **Partial**: every device holds a full-shape partial sum;
+//!   the true value is the element-wise sum over devices (produced by
+//!   inner-dimension-split matmuls).
+//!
+//! The distributed e-graph gives every logical node an *e-cluster*: one
+//! e-class per legal SBP signature of its output, with explicit
+//! [`Op::Boxing`] e-nodes bridging the signatures ("nodes with
+//! consistent SBP attributes are equivalent", §3.1.3). Extraction picks
+//! one signature per node minimizing `compute + reshard` time under the
+//! alpha-beta communication model, subject to the per-device memory
+//! capacity constraint of Observation 2 (weights resident in every
+//! demanded form must fit).
+
+use std::collections::HashMap;
+
+use crate::cost::{collective_time_s, enode_cost, AlphaBeta, Collective, MachineSpec};
+use crate::egraph::{ClassId, EGraph, ENode};
+use crate::ir::{Graph, NodeId, Op, TensorType};
+
+/// One axis of an SBP signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Sbp {
+    /// Split along tensor axis `d`.
+    Split(usize),
+    /// Full replica on every device.
+    Broadcast,
+    /// Element-wise partial sum across devices.
+    Partial,
+}
+
+impl std::fmt::Display for Sbp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Sbp::Split(d) => write!(f, "S({d})"),
+            Sbp::Broadcast => write!(f, "B"),
+            Sbp::Partial => write!(f, "P"),
+        }
+    }
+}
+
+/// An n-dimensional SBP signature (one [`Sbp`] per mesh axis). All the
+/// placements used here are 1-D ([`Placement::line`]), so signatures are
+/// usually a single component.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct NdSbp(pub Vec<Sbp>);
+
+impl NdSbp {
+    /// 1-D mesh, split along tensor axis `axis`.
+    pub fn split1(axis: usize) -> Self {
+        NdSbp(vec![Sbp::Split(axis)])
+    }
+
+    /// Broadcast over a `mesh_rank`-dimensional mesh.
+    pub fn broadcast(mesh_rank: usize) -> Self {
+        NdSbp(vec![Sbp::Broadcast; mesh_rank.max(1)])
+    }
+
+    /// 1-D mesh, partial sum.
+    pub fn partial1() -> Self {
+        NdSbp(vec![Sbp::Partial])
+    }
+
+    /// True if every mesh axis is Broadcast.
+    pub fn is_broadcast(&self) -> bool {
+        self.0.iter().all(|s| matches!(s, Sbp::Broadcast))
+    }
+
+    /// True if any mesh axis splits the tensor.
+    pub fn is_split(&self) -> bool {
+        self.0.iter().any(|s| matches!(s, Sbp::Split(_)))
+    }
+}
+
+impl std::fmt::Display for NdSbp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.0.len() == 1 {
+            return write!(f, "{}", self.0[0]);
+        }
+        write!(f, "(")?;
+        for (i, s) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{s}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// A device mesh ("cores as distributed nodes", §4.2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// Mesh extents; `[p]` is a 1-D line of `p` devices.
+    pub dims: Vec<usize>,
+}
+
+impl Placement {
+    /// 1-D line placement of `devices` devices.
+    pub fn line(devices: usize) -> Self {
+        Placement { dims: vec![devices.max(1)] }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// Time (seconds) to convert a tensor of `bytes` logical bytes from
+/// signature `from` to `to` on `p`, under the alpha-beta link `ab`.
+/// This is the cost of the [`Op::Boxing`] node the conversion lowers to:
+///
+/// * identity — free
+/// * `P -> B` — ring all-reduce
+/// * `S -> B` — all-gather
+/// * `P -> S` — reduce-scatter
+/// * `S(i) -> S(j)` — all-to-all
+/// * `B -> S` / `B -> P` / `S -> P` — local slice / reinterpret, free
+pub fn reshard_cost_bytes(
+    from: &NdSbp,
+    to: &NdSbp,
+    bytes: u64,
+    p: &Placement,
+    ab: &AlphaBeta,
+) -> f64 {
+    if from == to {
+        return 0.0;
+    }
+    let devs = p.num_devices();
+    let f = from.0.first().copied().unwrap_or(Sbp::Broadcast);
+    let t = to.0.first().copied().unwrap_or(Sbp::Broadcast);
+    let coll = match (f, t) {
+        (a, b) if a == b => Collective::Identity,
+        (Sbp::Partial, Sbp::Broadcast) => Collective::AllReduce,
+        (Sbp::Split(_), Sbp::Broadcast) => Collective::AllGather,
+        (Sbp::Partial, Sbp::Split(_)) => Collective::ReduceScatter,
+        (Sbp::Split(_), Sbp::Split(_)) => Collective::AllToAll,
+        // A replica can be sliced locally, and a shard (or replica) can
+        // be reinterpreted as one term of a partial sum with zero fill.
+        // (Equal-variant pairs are caught by the first arm at runtime;
+        // this arm keeps the match exhaustive without guards.)
+        (Sbp::Broadcast, _) | (_, Sbp::Partial) => Collective::Identity,
+    };
+    collective_time_s(coll, bytes, devs, ab)
+}
+
+/// One candidate strategy of a logical node: the output signature and
+/// the signature required of each input.
+#[derive(Debug, Clone)]
+pub struct Strategy {
+    pub out: NdSbp,
+    pub ins: Vec<NdSbp>,
+}
+
+/// One extracted per-node decision.
+#[derive(Debug, Clone)]
+pub struct DistChoice {
+    pub node: NodeId,
+    pub sbp: NdSbp,
+}
+
+/// The extracted distribution plan.
+#[derive(Debug, Clone)]
+pub struct DistSolution {
+    /// Estimated per-token step time: compute + communication, ns.
+    pub total_ns: u64,
+    /// Communication (boxing + output gather) share of `total_ns`.
+    pub comm_ns: u64,
+    /// Bytes of weight shards resident on each device (every demanded
+    /// SBP form of every constant counted).
+    pub weight_bytes_per_device: u64,
+    pub choices: Vec<DistChoice>,
+}
+
+/// Extraction failure.
+#[derive(Debug)]
+pub enum DistError {
+    /// Even the most aggressively sharded strategy does not fit.
+    OutOfMemory { required_bytes: u64, capacity_bytes: u64 },
+}
+
+impl std::fmt::Display for DistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DistError::OutOfMemory { required_bytes, capacity_bytes } => write!(
+                f,
+                "distribution needs {required_bytes} bytes/device, capacity {capacity_bytes}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DistError {}
+
+/// The distributed e-graph: the logical graph plus, per node, an
+/// e-cluster mapping each legal SBP signature to its e-class (Fig. 5/6).
+pub struct DistGraph {
+    pub graph: Graph,
+    pub placement: Placement,
+    pub egraph: EGraph,
+    /// Node index -> signature -> e-class of that distributed variant.
+    pub clusters: Vec<HashMap<NdSbp, ClassId>>,
+    /// Node index -> candidate strategies (extraction search space).
+    pub strategies: Vec<Vec<Strategy>>,
+}
+
+/// Legal SBP strategies of `id` on a 1-D mesh of `p` devices. Split
+/// requires the split axis to be divisible by `p` (shards stay uniform
+/// and boxing stays a pure collective). A Broadcast strategy is always
+/// included, so every node has at least one candidate and an all-B
+/// solution always exists.
+fn candidates(g: &Graph, id: NodeId, p: usize) -> Vec<Strategy> {
+    let node = g.node(id);
+    let dims = node.ty.shape.dims().to_vec();
+    let rank = dims.len();
+    let divisible = |d: usize| dims.get(d).map_or(false, |&n| n >= p && n % p == 0);
+    let b = NdSbp::broadcast(1);
+    let mut out: Vec<Strategy> = Vec::new();
+
+    match &node.op {
+        Op::Input(_) | Op::Const(_) => {
+            out.push(Strategy { out: b.clone(), ins: vec![] });
+            for d in 0..rank {
+                if divisible(d) {
+                    out.push(Strategy { out: NdSbp::split1(d), ins: vec![] });
+                }
+            }
+        }
+        Op::Scalar(_) => out.push(Strategy { out: b.clone(), ins: vec![] }),
+        Op::MatMul => {
+            let a = &g.node(node.inputs[0]).ty;
+            let bt = &g.node(node.inputs[1]).ty;
+            let (ar, br) = (a.shape.rank(), bt.shape.rank());
+            if ar == 2 && br == 2 {
+                let (m, k) = (a.shape.0[0], a.shape.0[1]);
+                let n = bt.shape.0[1];
+                // Column-parallel (Megatron S(1)): weight sharded, listed
+                // first so ties prefer the memory-friendly form.
+                if n >= p && n % p == 0 {
+                    out.push(Strategy {
+                        out: NdSbp::split1(1),
+                        ins: vec![b.clone(), NdSbp::split1(1)],
+                    });
+                }
+                // Row-parallel over the batch/sequence axis.
+                if m >= p && m % p == 0 {
+                    out.push(Strategy {
+                        out: NdSbp::split1(0),
+                        ins: vec![NdSbp::split1(0), b.clone()],
+                    });
+                }
+                // Inner split: both operands sharded on k, partial output.
+                if k >= p && k % p == 0 {
+                    out.push(Strategy {
+                        out: NdSbp::partial1(),
+                        ins: vec![NdSbp::split1(1), NdSbp::split1(0)],
+                    });
+                }
+            } else if ar == br && ar >= 3 && a.shape.0[0] == bt.shape.0[0] {
+                // Batched matmul: shard the leading batch axis (e.g. the
+                // kv-head axis of grouped-query attention).
+                let batch = a.shape.0[0];
+                if batch >= p && batch % p == 0 {
+                    out.push(Strategy {
+                        out: NdSbp::split1(0),
+                        ins: vec![NdSbp::split1(0), NdSbp::split1(0)],
+                    });
+                }
+            }
+            out.push(Strategy { out: b.clone(), ins: vec![b.clone(), b.clone()] });
+        }
+        Op::Unary(_) => {
+            for d in 0..rank {
+                if divisible(d) {
+                    out.push(Strategy { out: NdSbp::split1(d), ins: vec![NdSbp::split1(d)] });
+                }
+            }
+            out.push(Strategy { out: b.clone(), ins: vec![b.clone()] });
+        }
+        Op::Rope { .. } => {
+            // RoPE rotates within the last axis; only earlier axes split.
+            for d in 0..rank.saturating_sub(1) {
+                if divisible(d) {
+                    out.push(Strategy { out: NdSbp::split1(d), ins: vec![NdSbp::split1(d)] });
+                }
+            }
+            out.push(Strategy { out: b.clone(), ins: vec![b.clone()] });
+        }
+        Op::Binary(_) => {
+            for d in 0..rank {
+                if !divisible(d) {
+                    continue;
+                }
+                let mut ins = Vec::with_capacity(2);
+                let mut ok = true;
+                for &inp in &node.inputs {
+                    let t = &g.node(inp).ty;
+                    if t.shape == node.ty.shape {
+                        ins.push(NdSbp::split1(d));
+                    } else if t.shape.numel() == 1 {
+                        // Scalar-like broadcast operand stays replicated.
+                        ins.push(b.clone());
+                    } else {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    out.push(Strategy { out: NdSbp::split1(d), ins });
+                }
+            }
+            out.push(Strategy { out: b.clone(), ins: vec![b.clone(); node.inputs.len()] });
+        }
+        Op::RmsNorm { .. } => {
+            // Normalizes over the last axis; the [h] weight replicates.
+            for d in 0..rank.saturating_sub(1) {
+                if divisible(d) {
+                    out.push(Strategy {
+                        out: NdSbp::split1(d),
+                        ins: vec![NdSbp::split1(d), b.clone()],
+                    });
+                }
+            }
+            out.push(Strategy { out: b.clone(), ins: vec![b.clone(), b.clone()] });
+        }
+        Op::Softmax { axis } => {
+            for d in 0..rank {
+                if d != *axis && divisible(d) {
+                    out.push(Strategy { out: NdSbp::split1(d), ins: vec![NdSbp::split1(d)] });
+                }
+            }
+            out.push(Strategy { out: b.clone(), ins: vec![b.clone()] });
+        }
+        Op::Transpose { perm } => {
+            for d in 0..rank {
+                if divisible(d) {
+                    out.push(Strategy {
+                        out: NdSbp::split1(d),
+                        ins: vec![NdSbp::split1(perm[d])],
+                    });
+                }
+            }
+            out.push(Strategy { out: b.clone(), ins: vec![b.clone()] });
+        }
+        // Shape-changing / gather / pack ops: replicate (conservative).
+        _ => {
+            out.push(Strategy { out: b.clone(), ins: vec![b.clone(); node.inputs.len()] });
+        }
+    }
+    out
+}
+
+/// Build the distributed e-graph of Fig. 5: one e-cluster per live
+/// logical node with an e-class per legal SBP signature, bridged by
+/// [`Op::Boxing`] e-nodes.
+pub fn build_dist_egraph(g: &Graph, placement: &Placement) -> DistGraph {
+    let p = placement.num_devices();
+    let mut eg = EGraph::new();
+    let mut clusters: Vec<HashMap<NdSbp, ClassId>> = vec![HashMap::new(); g.len()];
+    let mut strategies: Vec<Vec<Strategy>> = vec![Vec::new(); g.len()];
+
+    for id in g.live_nodes() {
+        let node = g.node(id);
+        let cands = candidates(g, id, p);
+        let mut cluster: HashMap<NdSbp, ClassId> = HashMap::new();
+        let mut kept: Vec<Strategy> = Vec::new();
+
+        if node.op.is_leaf() {
+            // Host-resident base value; each device form is a Boxing of it
+            // (the initial scatter/replication, free at setup time).
+            let base = eg.add_leaf(node.op.clone(), node.ty.clone());
+            for st in cands {
+                let cls = eg.add(ENode {
+                    op: Op::Boxing { to: Some(st.out.clone()) },
+                    children: vec![base],
+                });
+                cluster.insert(st.out.clone(), cls);
+                kept.push(st);
+            }
+        } else {
+            for st in cands {
+                let mut children = Vec::with_capacity(node.inputs.len());
+                let mut ok = true;
+                for (inp, need) in node.inputs.iter().zip(&st.ins) {
+                    match clusters[inp.index()].get(need) {
+                        Some(&c) => children.push(c),
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !ok {
+                    continue;
+                }
+                let ty = node.ty.with_sbp(Some(st.out.clone()));
+                let cls = eg.add_with_type(ENode { op: node.op.clone(), children }, ty);
+                cluster.insert(st.out.clone(), cls);
+                kept.push(st);
+            }
+        }
+
+        // Boxing bridges between every pair of signatures in the cluster.
+        let keys: Vec<NdSbp> = cluster.keys().cloned().collect();
+        for from in &keys {
+            for to in &keys {
+                if from == to {
+                    continue;
+                }
+                let src = cluster[from];
+                let dst = cluster[to];
+                let bx = eg.add(ENode {
+                    op: Op::Boxing { to: Some(to.clone()) },
+                    children: vec![src],
+                });
+                if eg.find(bx) != eg.find(dst) {
+                    eg.union(bx, dst);
+                }
+            }
+        }
+
+        clusters[id.index()] = cluster;
+        strategies[id.index()] = kept;
+    }
+    eg.rebuild();
+    for cluster in &mut clusters {
+        for cls in cluster.values_mut() {
+            *cls = eg.find(*cls);
+        }
+    }
+    DistGraph {
+        graph: g.clone(),
+        placement: placement.clone(),
+        egraph: eg,
+        clusters,
+        strategies,
+    }
+}
+
+/// Extract a distribution strategy.
+///
+/// `sat = true` selects per node the candidate minimizing
+/// `compute + reshard-from-producers` (the objective the WPMaxSAT
+/// formulation optimizes), re-running with Broadcast-resident weights
+/// forbidden when the first pass exceeds `capacity_bytes`. `sat = false`
+/// is the greedy ablation baseline: compute cost only, communication
+/// falls where it may.
+pub fn extract_dist(
+    d: &DistGraph,
+    machine: &MachineSpec,
+    capacity_bytes: u64,
+    sat: bool,
+) -> Result<DistSolution, DistError> {
+    let ab = AlphaBeta::from_machine(machine);
+    let sol = select(d, machine, &ab, sat, false);
+    if sol.weight_bytes_per_device <= capacity_bytes {
+        return Ok(sol);
+    }
+    let tight = select(d, machine, &ab, sat, true);
+    if tight.weight_bytes_per_device <= capacity_bytes {
+        return Ok(tight);
+    }
+    Err(DistError::OutOfMemory {
+        required_bytes: tight.weight_bytes_per_device,
+        capacity_bytes,
+    })
+}
+
+fn select(
+    d: &DistGraph,
+    machine: &MachineSpec,
+    ab: &AlphaBeta,
+    sat: bool,
+    shard_weights: bool,
+) -> DistSolution {
+    let g = &d.graph;
+    let p = d.placement.num_devices() as f64;
+    let live = g.live_nodes();
+    // Chosen candidate index per node (compute nodes only).
+    let mut chosen: HashMap<usize, usize> = HashMap::new();
+    let mut compute_s = 0.0f64;
+    let mut comm_s = 0.0f64;
+
+    for &id in &live {
+        let node = g.node(id);
+        if node.op.is_leaf() {
+            continue;
+        }
+        let cands = &d.strategies[id.index()];
+        if cands.is_empty() {
+            continue;
+        }
+        // Under memory pressure, refuse strategies that keep a constant
+        // input Broadcast when some candidate shards it.
+        let viable: Vec<usize> = if shard_weights {
+            let filtered: Vec<usize> = (0..cands.len())
+                .filter(|&ci| {
+                    cands[ci].ins.iter().enumerate().all(|(ii, s)| {
+                        let inp = node.inputs[ii];
+                        if !matches!(g.node(inp).op, Op::Const(_)) || s.is_split() {
+                            return true;
+                        }
+                        !cands.iter().any(|o| o.ins[ii].is_split())
+                    })
+                })
+                .collect();
+            if filtered.is_empty() {
+                (0..cands.len()).collect()
+            } else {
+                filtered
+            }
+        } else {
+            (0..cands.len()).collect()
+        };
+
+        let in_tys: Vec<&TensorType> = node.inputs.iter().map(|&i| &g.node(i).ty).collect();
+        let full_ns = enode_cost(&node.op, &in_tys, &node.ty, machine).ns as f64;
+
+        let mut best: Option<(f64, f64, f64, usize)> = None; // (score, compute, comm, idx)
+        for &ci in &viable {
+            let st = &cands[ci];
+            let shard = if st.out.is_broadcast() { 1.0 } else { 1.0 / p };
+            let compute = full_ns * shard * 1e-9;
+            let mut comm = 0.0f64;
+            for (inp, need) in node.inputs.iter().zip(&st.ins) {
+                let prod = g.node(*inp);
+                if prod.op.is_leaf() {
+                    continue; // initial shard/replication is setup-time
+                }
+                let have = &d.strategies[inp.index()][chosen[&inp.index()]].out;
+                comm += reshard_cost_bytes(
+                    have,
+                    need,
+                    prod.ty.size_bytes() as u64,
+                    &d.placement,
+                    ab,
+                );
+            }
+            let score = if sat { compute + comm } else { compute };
+            let better = match &best {
+                None => true,
+                Some((s, ..)) => score < *s,
+            };
+            if better {
+                best = Some((score, compute, comm, ci));
+            }
+        }
+        let (_, compute, comm, ci) = best.expect("every node keeps a Broadcast candidate");
+        chosen.insert(id.index(), ci);
+        compute_s += compute;
+        comm_s += comm;
+    }
+
+    // Unshard every graph output back to the host (Boxing to None).
+    for &out in &g.outputs {
+        if let Some(&ci) = chosen.get(&out.index()) {
+            let sbp = &d.strategies[out.index()][ci].out;
+            let bytes = g.node(out).ty.size_bytes() as u64;
+            let coll = match sbp.0.first() {
+                Some(Sbp::Partial) => Some(Collective::AllReduce),
+                Some(Sbp::Split(_)) => Some(Collective::Gather),
+                _ => None,
+            };
+            if let Some(c) = coll {
+                comm_s += collective_time_s(c, bytes, d.placement.num_devices(), ab);
+            }
+        }
+    }
+
+    // Weight residency: every SBP form a constant is demanded in must be
+    // resident on each device (Observation 2's hard constraint).
+    let mut weight_bytes = 0u64;
+    let users = g.users();
+    for &id in &live {
+        let node = g.node(id);
+        if !matches!(node.op, Op::Const(_)) {
+            continue;
+        }
+        let mut demanded: Vec<NdSbp> = Vec::new();
+        for &u in &users[id.index()] {
+            let Some(&ci) = chosen.get(&u.index()) else { continue };
+            let st = &d.strategies[u.index()][ci];
+            for (inp, need) in g.node(u).inputs.iter().zip(&st.ins) {
+                if *inp == id && !demanded.contains(need) {
+                    demanded.push(need.clone());
+                }
+            }
+        }
+        if demanded.is_empty() {
+            demanded.push(NdSbp::broadcast(1));
+        }
+        for sbp in demanded {
+            weight_bytes += node
+                .ty
+                .with_sbp(Some(sbp))
+                .local_size_bytes(&d.placement.dims) as u64;
+        }
+    }
+
+    // Report choices for every live node; leaves report their primary
+    // demanded form (or B).
+    let mut choices = Vec::with_capacity(live.len());
+    for &id in &live {
+        let sbp = if let Some(&ci) = chosen.get(&id.index()) {
+            d.strategies[id.index()][ci].out.clone()
+        } else {
+            let mut primary = NdSbp::broadcast(1);
+            'outer: for &u in &users[id.index()] {
+                if let Some(&ci) = chosen.get(&u.index()) {
+                    let st = &d.strategies[u.index()][ci];
+                    for (inp, need) in g.node(u).inputs.iter().zip(&st.ins) {
+                        if *inp == id {
+                            primary = need.clone();
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            primary
+        };
+        choices.push(DistChoice { node: id, sbp });
+    }
+
+    DistSolution {
+        total_ns: ((compute_s + comm_s) * 1e9).ceil() as u64 + 1,
+        comm_ns: (comm_s * 1e9).ceil() as u64,
+        weight_bytes_per_device: weight_bytes,
+        choices,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, UnaryKind};
+
+    fn mlp(batch: usize, hidden: usize, inter: usize) -> Graph {
+        let mut g = Graph::new();
+        let x = g.input("x", &[batch, hidden], DType::F32);
+        let w1 = g.constant("w1", &[hidden, inter], DType::F32);
+        let w2 = g.constant("w2", &[inter, hidden], DType::F32);
+        let h = g.matmul(x, w1);
+        let a = g.unary(UnaryKind::Silu, h);
+        let o = g.matmul(a, w2);
+        g.mark_output(o);
+        g
+    }
+
+    #[test]
+    fn sbp_display() {
+        assert_eq!(NdSbp::split1(1).to_string(), "S(1)");
+        assert_eq!(NdSbp::broadcast(1).to_string(), "B");
+        assert_eq!(NdSbp::partial1().to_string(), "P");
+        assert_eq!(NdSbp(vec![Sbp::Split(0), Sbp::Broadcast]).to_string(), "(S(0),B)");
+    }
+
+    #[test]
+    fn reshard_identity_free_and_ordering() {
+        let ab = AlphaBeta { alpha_s: 1e-6, beta_bytes_per_s: 20e9 };
+        let p = Placement::line(4);
+        let n = 1u64 << 20;
+        let s0 = NdSbp::split1(0);
+        assert_eq!(reshard_cost_bytes(&s0, &s0, n, &p, &ab), 0.0);
+        let p2b = reshard_cost_bytes(&NdSbp::partial1(), &NdSbp::broadcast(1), n, &p, &ab);
+        let s2b = reshard_cost_bytes(&s0, &NdSbp::broadcast(1), n, &p, &ab);
+        assert!(p2b >= s2b && s2b > 0.0);
+        // Local slice is free.
+        assert_eq!(reshard_cost_bytes(&NdSbp::broadcast(1), &s0, n, &p, &ab), 0.0);
+    }
+
+    #[test]
+    fn dist_egraph_has_clusters_and_boxing() {
+        let g = mlp(8, 64, 128);
+        let d = build_dist_egraph(&g, &Placement::line(2));
+        let mm = g
+            .live_nodes()
+            .into_iter()
+            .find(|&id| matches!(g.node(id).op, Op::MatMul))
+            .unwrap();
+        let cluster = &d.clusters[mm.index()];
+        assert!(cluster.len() >= 3, "matmul cluster: {:?}", cluster.keys().collect::<Vec<_>>());
+        assert!(cluster.contains_key(&NdSbp::broadcast(1)));
+        assert!(cluster.contains_key(&NdSbp::split1(1)));
+        assert!(d.egraph.n_nodes > g.live_nodes().len());
+    }
+
+    #[test]
+    fn extraction_splits_and_accounts_memory() {
+        let m = MachineSpec::ryzen_5900x();
+        let g = mlp(8, 512, 2048);
+        let d = build_dist_egraph(&g, &Placement::line(4));
+        let sol = extract_dist(&d, &m, u64::MAX / 4, true).unwrap();
+        let full: u64 = 2 * 512 * 2048 * 4;
+        assert!(sol.weight_bytes_per_device <= full);
+        assert!(sol.total_ns > 0);
+        assert!(sol.comm_ns > 0, "split strategies must pay boxing/gather");
+        assert_eq!(sol.choices.len(), g.live_nodes().len());
+    }
+
+    #[test]
+    fn capacity_forces_sharding_then_oom() {
+        let m = MachineSpec::ryzen_5900x();
+        let g = mlp(8, 1024, 3072);
+        let d = build_dist_egraph(&g, &Placement::line(2));
+        // Full weights are 24 MiB; 16 MiB/device forces splits.
+        let capped = extract_dist(&d, &m, 16 << 20, true).unwrap();
+        assert!(capped.weight_bytes_per_device <= 16 << 20);
+        match extract_dist(&d, &m, 1 << 20, true) {
+            Err(DistError::OutOfMemory { required_bytes, capacity_bytes }) => {
+                assert!(required_bytes > capacity_bytes);
+            }
+            other => panic!("expected OOM, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn greedy_and_sat_both_extract() {
+        let m = MachineSpec::ryzen_5900x();
+        let g = mlp(8, 512, 2048);
+        let d = build_dist_egraph(&g, &Placement::line(4));
+        let sat = extract_dist(&d, &m, u64::MAX / 4, true).unwrap();
+        let greedy = extract_dist(&d, &m, u64::MAX / 4, false).unwrap();
+        // The comm-aware objective never loses to compute-only greedy.
+        assert!(sat.total_ns <= greedy.total_ns);
+    }
+}

@@ -30,6 +30,8 @@
 //! * [`runtime`] — PJRT (xla crate) artifact loading and execution.
 //! * [`coordinator`] — the serving layer: request batching, KV cache and
 //!   the multi-core "cores as distributed nodes" decode engine (§4.2).
+//! * [`serving`] — the paged KV-cache block pool and continuous-batching
+//!   scheduler behind `ServePolicy::Continuous` (docs/serving.md).
 
 pub mod cost;
 pub mod codegen;
@@ -44,6 +46,7 @@ pub mod rewrite;
 pub mod runtime;
 pub mod sat;
 pub mod schedule;
+pub mod serving;
 pub mod sim;
 pub mod util;
 

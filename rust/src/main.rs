@@ -8,12 +8,13 @@
 //! * `sweep`    — regenerate Figure 9 / Figure 10 tables on the simulator.
 //! * `artifacts`— smoke-test the PJRT runtime against `artifacts/`.
 
-use nncase_repro::coordinator::{Coordinator, Qwen3Engine};
+use nncase_repro::coordinator::{Coordinator, Qwen3Engine, ServePolicy};
 use nncase_repro::cost::MachineSpec;
 use nncase_repro::ir::DType;
 use nncase_repro::model::{decode_graph, Qwen3Config, Qwen3Weights};
 use nncase_repro::pipeline::{CompileOptions, Compiler};
 use nncase_repro::runtime::{Manifest, PjrtRuntime};
+use nncase_repro::serving::ContinuousConfig;
 use nncase_repro::sim::figures;
 
 fn flag(args: &[String], name: &str) -> bool {
@@ -30,7 +31,8 @@ fn usage() -> ! {
          \n\
          compile   [--model tiny|0.6b|1.7b] [--devices N] [--schedule] [--greedy]\n\
          inspect   [--emit-cpp] [--model tiny]\n\
-         serve     [--threads N] [--requests N] [--max-new N]\n\
+         serve     [--threads N] [--requests N] [--max-new N] [--policy fcfs|continuous]\n\
+         \x20          [--max-batch N]\n\
          sweep     [--figure 9|10]\n\
          artifacts [--dir artifacts]"
     );
@@ -45,7 +47,7 @@ fn model_cfg(args: &[String]) -> Qwen3Config {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
     let machine = MachineSpec::ryzen_5900x();
@@ -124,7 +126,16 @@ fn main() -> anyhow::Result<()> {
             let reqs = nncase_repro::coordinator::serve::synthetic_workload(
                 n_req, 8, max_new, cfg.vocab,
             );
-            let rep = c.serve(&reqs);
+            let max_batch: usize =
+                opt(&args, "--max-batch").and_then(|v| v.parse().ok()).unwrap_or(8);
+            let policy = match opt(&args, "--policy").as_deref() {
+                Some("continuous") => ServePolicy::Continuous(
+                    ContinuousConfig::for_machine(&cfg, &machine, max_batch),
+                ),
+                _ => ServePolicy::Fcfs,
+            };
+            println!("policy: {policy:?}");
+            let rep = c.serve_with_policy(&reqs, policy);
             println!("{}", rep.render());
         }
         "sweep" => {

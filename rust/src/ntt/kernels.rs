@@ -169,6 +169,117 @@ pub fn gemv_cols(x: &[f32], w: &Tensor, lo: usize, hi: usize, y: &mut [f32]) {
     }
 }
 
+/// Dot product with a sequential accumulation order (the order every
+/// attention path in the repo shares, so paged and dense attention are
+/// bit-identical).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// A weight matrix pre-packed into NR-column panels, for GEMMs where the
+/// same `W` is streamed every decode step (continuous batching: pack
+/// once at engine build, then each batched step reads the panels exactly
+/// once instead of once per sequence — the weight-stream saving that
+/// makes iteration-level batching pay on memory-bound decode).
+#[derive(Debug, Clone)]
+pub struct PackedMat {
+    pub k: usize,
+    pub n: usize,
+    panels: Vec<f32>,
+}
+
+impl PackedMat {
+    /// Pack a `[k, n]` weight tensor.
+    pub fn pack(w: &Tensor) -> Self {
+        let (k, n) = (w.dim(0), w.dim(1));
+        let mut panels = Vec::new();
+        pack_b(&w.data, k, n, &mut panels);
+        PackedMat { k, n, panels }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.panels.len() * 4
+    }
+}
+
+/// `C[rows, n] = X[rows, k] @ W` over a pre-packed `W`. Per-element
+/// accumulation runs over `k` in ascending order, matching [`gemv`] /
+/// [`gemv_cols`], so batched and per-sequence decode agree bitwise.
+pub fn matmul_prepacked(x: &[f32], rows: usize, w: &PackedMat, c: &mut [f32]) {
+    let mut scratch = Vec::new();
+    matmul_prepacked_into(x, rows, w, c, &mut scratch);
+}
+
+/// [`matmul_prepacked`] with a caller-owned A-pack scratch buffer, for
+/// hot loops (the batched decode path calls this 7 times per layer per
+/// iteration — re-allocating the pack buffer each time is pure
+/// overhead).
+pub fn matmul_prepacked_into(
+    x: &[f32],
+    rows: usize,
+    w: &PackedMat,
+    c: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), rows * w.k, "X shape mismatch");
+    assert_eq!(c.len(), rows * w.n, "C shape mismatch");
+    pack_a(x, rows, w.k, scratch);
+    matmul_packed_range(scratch, &w.panels, rows, w.k, w.n, 0, rows, c);
+}
+
+/// Physical row of logical position `pos` under a paged block table.
+#[inline]
+pub fn paged_row(table: &[u32], block_size: usize, pos: usize) -> usize {
+    table[pos / block_size] as usize * block_size + pos % block_size
+}
+
+/// Attention scores over a paged K store: for each logical position
+/// `p < scores.len()`, gathers the K row through `table` (fixed-size
+/// blocks of `block_size` positions) and computes
+/// `scores[p] = dot(q, K[row(p)][head_off..head_off+head_dim]) * scale`.
+/// Identical arithmetic order to the dense row-per-position path.
+pub fn attn_scores_paged(
+    q: &[f32],
+    kstore: &Tensor,
+    table: &[u32],
+    block_size: usize,
+    head_off: usize,
+    head_dim: usize,
+    scale: f32,
+    scores: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), head_dim);
+    for (p, score) in scores.iter_mut().enumerate() {
+        let row = paged_row(table, block_size, p);
+        let krow = &kstore.row(row)[head_off..head_off + head_dim];
+        *score = dot(q, krow) * scale;
+    }
+}
+
+/// Attention context over a paged V store: `out = Σ_p scores[p] * V[row(p)]`
+/// accumulated in ascending position order (bit-identical to the dense
+/// path's accumulation).
+pub fn attn_context_paged(
+    scores: &[f32],
+    vstore: &Tensor,
+    table: &[u32],
+    block_size: usize,
+    head_off: usize,
+    head_dim: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), head_dim);
+    out.fill(0.0);
+    for (p, &sc) in scores.iter().enumerate() {
+        let row = paged_row(table, block_size, p);
+        let vrow = &vstore.row(row)[head_off..head_off + head_dim];
+        for (o, &vv) in out.iter_mut().zip(vrow) {
+            *o += sc * vv;
+        }
+    }
+}
+
 /// Element-wise exp (vector-friendly loop).
 pub fn exp_inplace(x: &mut [f32]) {
     for v in x.iter_mut() {
@@ -323,6 +434,72 @@ mod tests {
         for (a, b) in joined.iter().zip(&want.data) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn prepacked_matches_naive_and_gemv_bitwise() {
+        let mut rng = Rng::new(21);
+        for &(m, k, n) in &[(1usize, 48, 40), (5, 33, 17), (16, 64, 96)] {
+            let x = Tensor::randn(&[m, k], &mut rng, 1.0);
+            let w = Tensor::randn(&[k, n], &mut rng, 1.0);
+            let pm = PackedMat::pack(&w);
+            let mut c = vec![0.0f32; m * n];
+            matmul_prepacked(&x.data, m, &pm, &mut c);
+            let want = matmul_naive(&x, &w);
+            for (a, b) in c.iter().zip(&want.data) {
+                assert!((a - b).abs() < 1e-4);
+            }
+            // The decode-path contract: row 0 equals gemv_cols exactly
+            // (same per-column accumulation order over k).
+            let mut y = vec![0.0f32; n];
+            gemv_cols(&x.data[..k], &w, 0, n, &mut y);
+            assert_eq!(&c[..n], &y[..], "prepacked row 0 must be bit-identical to gemv");
+        }
+    }
+
+    #[test]
+    fn paged_attention_matches_contiguous() {
+        let mut rng = Rng::new(33);
+        let (block_size, width, head_dim, head_off) = (4usize, 16usize, 8usize, 8usize);
+        let seq = 11usize; // 3 blocks, last partially filled
+        // Contiguous store: position p at row p.
+        let dense = Tensor::randn(&[16, width], &mut rng, 1.0);
+        // Paged store: blocks scattered through a larger arena.
+        let table: Vec<u32> = vec![5, 2, 7];
+        let mut paged = Tensor::zeros(&[10 * block_size, width]);
+        for p in 0..seq {
+            let row = paged_row(&table, block_size, p);
+            paged.row_mut(row).copy_from_slice(dense.row(p));
+        }
+        let q: Vec<f32> = (0..head_dim).map(|_| rng.normal()).collect();
+        let scale = 0.25f32;
+
+        let mut want_scores = vec![0.0f32; seq];
+        for (p, s) in want_scores.iter_mut().enumerate() {
+            *s = dot(&q, &dense.row(p)[head_off..head_off + head_dim]) * scale;
+        }
+        let mut got_scores = vec![0.0f32; seq];
+        attn_scores_paged(&q, &paged, &table, block_size, head_off, head_dim, scale, &mut got_scores);
+        assert_eq!(want_scores, got_scores);
+
+        let mut want_ctx = vec![0.0f32; head_dim];
+        for (p, &sc) in want_scores.iter().enumerate() {
+            for (o, &vv) in want_ctx.iter_mut().zip(&dense.row(p)[head_off..head_off + head_dim]) {
+                *o += sc * vv;
+            }
+        }
+        let mut got_ctx = vec![0.0f32; head_dim];
+        attn_context_paged(&want_scores, &paged, &table, block_size, head_off, head_dim, &mut got_ctx);
+        assert_eq!(want_ctx, got_ctx);
+    }
+
+    #[test]
+    fn paged_row_mapping() {
+        let table = [9u32, 0, 4];
+        assert_eq!(paged_row(&table, 8, 0), 72);
+        assert_eq!(paged_row(&table, 8, 7), 79);
+        assert_eq!(paged_row(&table, 8, 8), 0);
+        assert_eq!(paged_row(&table, 8, 17), 33);
     }
 
     #[test]

@@ -2,15 +2,37 @@
 //!
 //! Python runs once at build time (`make artifacts`): L2 (JAX model) and
 //! L1 (Pallas kernels, `interpret=True`) lower to **HLO text**
-//! (`artifacts/*.hlo.txt` — text, not serialized proto: xla_extension
-//! 0.5.1 rejects jax≥0.5's 64-bit-id protos). This module loads the
-//! artifacts through the `xla` crate's PJRT CPU client and executes them
-//! from the Rust request path, with a per-path executable cache.
+//! (`artifacts/*.hlo.txt`). In a full build this module loads the
+//! artifacts through the `xla` crate's PJRT CPU client; the offline
+//! build environment has no vendored third-party crates, so the client
+//! here is a stub that reports the backend as unavailable. The
+//! [`Manifest`] parsing (and everything downstream that only needs
+//! artifact metadata) is fully functional; `PjrtRuntime` methods return
+//! [`RuntimeError`] until the `xla`-backed client is restored (see the
+//! seed revision of this file for the original implementation).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+/// Runtime-layer error (IO or unavailable backend).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "runtime: {}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
 
 /// A loaded artifact manifest: name -> relative HLO path plus metadata.
 #[derive(Debug, Clone)]
@@ -57,7 +79,7 @@ impl Manifest {
 
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading manifest {}", path.display()))?;
+            .map_err(|e| RuntimeError(format!("reading manifest {}: {e}", path.display())))?;
         Ok(Self::parse(&text))
     }
 
@@ -66,100 +88,54 @@ impl Manifest {
     }
 }
 
-/// The PJRT runtime with an executable cache.
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable: this build has no `xla` crate (offline environment); \
+     restore the xla-backed client to execute HLO artifacts";
+
+/// The PJRT runtime with an executable cache (stubbed, see module docs).
 pub struct PjrtRuntime {
-    client: xla::PjRtClient,
+    #[allow(dead_code)]
     artifacts_dir: PathBuf,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: HashMap<String, PathBuf>,
 }
 
 impl PjrtRuntime {
+    /// Whether a real PJRT backend is compiled in. Callers that would
+    /// otherwise `unwrap()` a client (artifact-gated tests, examples)
+    /// must check this and skip when false — the artifacts existing on
+    /// disk does not mean this build can execute them.
+    pub fn available() -> bool {
+        false
+    }
+
     /// Create a CPU PJRT client rooted at `artifacts_dir`.
-    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        Ok(PjrtRuntime { client, artifacts_dir: artifacts_dir.into(), cache: HashMap::new() })
+    pub fn cpu(_artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        Err(RuntimeError(UNAVAILABLE.into()))
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "unavailable".into()
     }
 
     /// Load + compile an HLO text artifact (cached by name).
-    pub fn load(&mut self, name: &str, rel_path: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
-            return Ok(());
-        }
-        let path = self.artifacts_dir.join(rel_path);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
-        self.cache.insert(name.to_string(), exe);
-        Ok(())
+    pub fn load(&mut self, _name: &str, _rel_path: &str) -> Result<()> {
+        Err(RuntimeError(UNAVAILABLE.into()))
     }
 
     /// Execute a cached executable on f32 inputs; returns the flat f32
     /// outputs of the (single-tuple) result.
     pub fn run_f32(
         &self,
-        name: &str,
-        inputs: &[(&[f32], &[usize])],
+        _name: &str,
+        _inputs: &[(&[f32], &[usize])],
     ) -> Result<Vec<Vec<f32>>> {
-        let exe = self.cache.get(name).context("artifact not loaded")?;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims_i64)
-                .map_err(|e| anyhow::anyhow!("reshape input: {e:?}"))?;
-            literals.push(lit);
-        }
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("sync {name}: {e:?}"))?;
-        // aot.py lowers with return_tuple=True; unpack all elements.
-        let tuple = result.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let mut out = Vec::with_capacity(tuple.len());
-        for t in tuple {
-            out.push(t.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?);
-        }
-        Ok(out)
+        Err(RuntimeError(UNAVAILABLE.into()))
     }
 
     /// Execute with mixed arguments (f32 tensors + i32 scalars), in the
     /// artifact's positional order.
-    pub fn run_args(&self, name: &str, args: &[ArgValue<'_>]) -> Result<Vec<Vec<f32>>> {
-        let exe = self.cache.get(name).context("artifact not loaded")?;
-        let mut literals = Vec::with_capacity(args.len());
-        for a in args {
-            literals.push(match a {
-                ArgValue::F32(data, dims) => {
-                    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(data)
-                        .reshape(&dims_i64)
-                        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
-                }
-                ArgValue::I32Scalar(v) => xla::Literal::scalar(*v),
-            });
-        }
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("sync {name}: {e:?}"))?;
-        let tuple = result.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let mut out = Vec::with_capacity(tuple.len());
-        for t in tuple {
-            out.push(t.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?);
-        }
-        Ok(out)
+    pub fn run_args(&self, _name: &str, _args: &[ArgValue<'_>]) -> Result<Vec<Vec<f32>>> {
+        Err(RuntimeError(UNAVAILABLE.into()))
     }
 
     pub fn loaded(&self) -> Vec<&str> {
@@ -193,5 +169,10 @@ mod tests {
     fn manifest_ignores_malformed() {
         let m = Manifest::parse("justaname\n");
         assert!(m.entries.is_empty());
+    }
+
+    #[test]
+    fn stub_backend_reports_unavailable() {
+        assert!(PjrtRuntime::cpu("artifacts").is_err());
     }
 }

@@ -1,0 +1,351 @@
+//! Batched decode over paged KV storage.
+//!
+//! One [`BatchEngine::step`] advances *every* scheduled sequence by one
+//! position — iteration-level batching. The win over per-request decode
+//! is in the weight stream: decode is memory-bound on weights, and the
+//! FCFS path re-reads every projection matrix once per sequence per
+//! token. Here the projections of all `B` batched rows run as one GEMM
+//! over weights pre-packed at engine build ([`PackedMat`]), so the
+//! weight stream is paid once per iteration instead of `B` times.
+//!
+//! K/V rows are gathered through per-sequence block tables
+//! ([`attn_scores_paged`] / [`attn_context_paged`]) instead of
+//! contiguous rows. Every kernel shares its accumulation order with the
+//! dense single-sequence engine, so a batched continuous run produces
+//! outputs identical to the FCFS oracle (the differential test in
+//! `rust/tests/serving.rs` pins this down).
+
+use crate::coordinator::argmax;
+use crate::model::Qwen3Weights;
+use crate::ntt::{
+    add_inplace, attn_context_paged, attn_scores_paged, matmul_prepacked_into, mul_inplace,
+    paged_row, rmsnorm, rope_inplace, silu_inplace, softmax_inplace, PackedMat, Tensor,
+};
+
+/// Paged KV arena: per layer, `num_blocks * block_size` rows of width
+/// `kv_heads * head_dim`. Physical block `b` owns the same row range in
+/// every layer.
+pub struct PagedKv {
+    pub block_size: usize,
+    pub k: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+}
+
+impl PagedKv {
+    pub fn new(layers: usize, num_blocks: usize, block_size: usize, width: usize) -> Self {
+        let rows = num_blocks * block_size;
+        PagedKv {
+            block_size,
+            k: (0..layers).map(|_| Tensor::zeros(&[rows, width])).collect(),
+            v: (0..layers).map(|_| Tensor::zeros(&[rows, width])).collect(),
+        }
+    }
+
+    /// Bytes of the whole arena (both K and V, all layers).
+    pub fn arena_bytes(&self) -> usize {
+        self.k.iter().chain(&self.v).map(|t| t.numel() * 4).sum()
+    }
+}
+
+struct PackedLayer {
+    wq: PackedMat,
+    wk: PackedMat,
+    wv: PackedMat,
+    wo: PackedMat,
+    w_gate: PackedMat,
+    w_up: PackedMat,
+    w_down: PackedMat,
+}
+
+/// One sequence's slot in a batched iteration.
+pub struct StepSlot<'t> {
+    /// Token to feed at `pos`.
+    pub token: usize,
+    /// Logical position of `token` in the sequence.
+    pub pos: usize,
+    /// The sequence's block table; must cover `pos`.
+    pub table: &'t [u32],
+    /// Sample an output token from this row's logits (the sequence is
+    /// at its frontier: last prompt token or a decode step).
+    pub sample: bool,
+}
+
+/// The batched paged-attention decode engine.
+pub struct BatchEngine<'w> {
+    pub weights: &'w Qwen3Weights,
+    packed: Vec<PackedLayer>,
+    packed_lm_head: PackedMat,
+    pub kv: PagedKv,
+    /// Reused A-pack scratch for the per-iteration GEMMs.
+    scratch: Vec<f32>,
+}
+
+impl<'w> BatchEngine<'w> {
+    pub fn new(weights: &'w Qwen3Weights, num_blocks: usize, block_size: usize) -> Self {
+        let cfg = &weights.cfg;
+        let packed = weights
+            .layers
+            .iter()
+            .map(|l| PackedLayer {
+                wq: PackedMat::pack(&l.wq),
+                wk: PackedMat::pack(&l.wk),
+                wv: PackedMat::pack(&l.wv),
+                wo: PackedMat::pack(&l.wo),
+                w_gate: PackedMat::pack(&l.w_gate),
+                w_up: PackedMat::pack(&l.w_up),
+                w_down: PackedMat::pack(&l.w_down),
+            })
+            .collect();
+        let kv = PagedKv::new(cfg.layers, num_blocks, block_size, cfg.kv_heads * cfg.head_dim);
+        BatchEngine {
+            weights,
+            packed,
+            packed_lm_head: PackedMat::pack(&weights.lm_head),
+            kv,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Advance every slot one position; returns the argmax token for
+    /// slots with `sample = true`. Also returns the full logits rows
+    /// via `step_logits` for white-box tests.
+    pub fn step(&mut self, slots: &[StepSlot]) -> Vec<Option<usize>> {
+        let (samples, _) = self.step_logits(slots, false);
+        samples
+    }
+
+    /// As [`BatchEngine::step`]; with `keep_logits` the `[B * vocab]`
+    /// logits buffer of the iteration is returned too.
+    pub fn step_logits(
+        &mut self,
+        slots: &[StepSlot],
+        keep_logits: bool,
+    ) -> (Vec<Option<usize>>, Vec<f32>) {
+        let b = slots.len();
+        if b == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        let cfg = self.weights.cfg.clone();
+        let (h, hd, heads, kvh) = (cfg.hidden, cfg.head_dim, cfg.heads, cfg.kv_heads);
+        let (qdim, kvdim, inter, vocab) = (heads * hd, kvh * hd, cfg.intermediate, cfg.vocab);
+        let bs = self.kv.block_size;
+        let group = heads / kvh;
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+
+        for s in slots {
+            debug_assert!(
+                s.table.len() * bs > s.pos,
+                "block table does not cover position {}",
+                s.pos
+            );
+        }
+
+        // Residual stream and scratch, one row per sequence.
+        let mut x = vec![0.0f32; b * h];
+        for (i, s) in slots.iter().enumerate() {
+            x[i * h..(i + 1) * h]
+                .copy_from_slice(self.weights.embedding.row(s.token % vocab));
+        }
+        let mut xn = vec![0.0f32; b * h];
+        let mut q = vec![0.0f32; b * qdim];
+        let mut kvec = vec![0.0f32; b * kvdim];
+        let mut vvec = vec![0.0f32; b * kvdim];
+        let mut ctx = vec![0.0f32; b * qdim];
+        let mut attn = vec![0.0f32; b * h];
+        let mut gate = vec![0.0f32; b * inter];
+        let mut up = vec![0.0f32; b * inter];
+        let mut down = vec![0.0f32; b * h];
+        let mut logits = vec![0.0f32; b * vocab];
+
+        for l in 0..cfg.layers {
+            let w = &self.weights.layers[l];
+            let pw = &self.packed[l];
+            // Attention RMSNorm, per row.
+            for i in 0..b {
+                rmsnorm(
+                    &x[i * h..(i + 1) * h],
+                    &w.attn_norm.data,
+                    cfg.rms_eps,
+                    &mut xn[i * h..(i + 1) * h],
+                );
+            }
+            // Batched QKV projections: the weight stream is read once
+            // for the whole batch.
+            matmul_prepacked_into(&xn, b, &pw.wq, &mut q, &mut self.scratch);
+            matmul_prepacked_into(&xn, b, &pw.wk, &mut kvec, &mut self.scratch);
+            matmul_prepacked_into(&xn, b, &pw.wv, &mut vvec, &mut self.scratch);
+            // RoPE, per row with that row's position.
+            for (i, s) in slots.iter().enumerate() {
+                for head in 0..heads {
+                    let o = i * qdim + head * hd;
+                    rope_inplace(&mut q[o..o + hd], s.pos, cfg.rope_theta);
+                }
+                for head in 0..kvh {
+                    let o = i * kvdim + head * hd;
+                    rope_inplace(&mut kvec[o..o + hd], s.pos, cfg.rope_theta);
+                }
+            }
+            // Commit this position's K/V through the block table.
+            for (i, s) in slots.iter().enumerate() {
+                let row = paged_row(s.table, bs, s.pos);
+                self.kv.k[l].row_mut(row).copy_from_slice(&kvec[i * kvdim..(i + 1) * kvdim]);
+                self.kv.v[l].row_mut(row).copy_from_slice(&vvec[i * kvdim..(i + 1) * kvdim]);
+            }
+            // Paged GQA attention, per sequence per query head.
+            for (i, s) in slots.iter().enumerate() {
+                let seq = s.pos + 1;
+                let mut scores = vec![0.0f32; seq];
+                for head in 0..heads {
+                    let kvhead = head / group;
+                    let qo = i * qdim + head * hd;
+                    attn_scores_paged(
+                        &q[qo..qo + hd],
+                        &self.kv.k[l],
+                        s.table,
+                        bs,
+                        kvhead * hd,
+                        hd,
+                        inv_sqrt,
+                        &mut scores,
+                    );
+                    softmax_inplace(&mut scores);
+                    attn_context_paged(
+                        &scores,
+                        &self.kv.v[l],
+                        s.table,
+                        bs,
+                        kvhead * hd,
+                        hd,
+                        &mut ctx[qo..qo + hd],
+                    );
+                }
+            }
+            // Output projection + residual.
+            matmul_prepacked_into(&ctx, b, &pw.wo, &mut attn, &mut self.scratch);
+            for i in 0..b {
+                add_inplace(&mut x[i * h..(i + 1) * h], &attn[i * h..(i + 1) * h]);
+            }
+            // MLP (SwiGLU), batched.
+            for i in 0..b {
+                rmsnorm(
+                    &x[i * h..(i + 1) * h],
+                    &w.mlp_norm.data,
+                    cfg.rms_eps,
+                    &mut xn[i * h..(i + 1) * h],
+                );
+            }
+            matmul_prepacked_into(&xn, b, &pw.w_gate, &mut gate, &mut self.scratch);
+            matmul_prepacked_into(&xn, b, &pw.w_up, &mut up, &mut self.scratch);
+            for i in 0..b {
+                let g = &mut gate[i * inter..(i + 1) * inter];
+                silu_inplace(g);
+                mul_inplace(g, &up[i * inter..(i + 1) * inter]);
+            }
+            matmul_prepacked_into(&gate, b, &pw.w_down, &mut down, &mut self.scratch);
+            for i in 0..b {
+                add_inplace(&mut x[i * h..(i + 1) * h], &down[i * h..(i + 1) * h]);
+            }
+        }
+        // Final norm + LM head.
+        for i in 0..b {
+            rmsnorm(
+                &x[i * h..(i + 1) * h],
+                &self.weights.final_norm.data,
+                cfg.rms_eps,
+                &mut xn[i * h..(i + 1) * h],
+            );
+        }
+        matmul_prepacked_into(&xn, b, &self.packed_lm_head, &mut logits, &mut self.scratch);
+
+        let samples = slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                if s.sample {
+                    Some(argmax(&logits[i * vocab..(i + 1) * vocab]))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        (samples, if keep_logits { logits } else { Vec::new() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Qwen3Engine;
+    use crate::model::{Qwen3Config, Qwen3Weights};
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+    }
+
+    #[test]
+    fn paged_batch_of_one_matches_dense_engine() {
+        let cfg = Qwen3Config::tiny();
+        let w_dense = Qwen3Weights::random(&cfg, 99);
+        let w_paged = Qwen3Weights::random(&cfg, 99);
+        let mut dense = Qwen3Engine::new(w_dense, 1, 32);
+        let mut be = BatchEngine::new(&w_paged, 8, 4);
+        // Non-contiguous table: 3 blocks out of order.
+        let table: Vec<u32> = vec![3, 0, 6];
+        let tokens = [7usize, 300, 5, 42, 9, 1000];
+        for (pos, &tok) in tokens.iter().enumerate() {
+            let dense_logits = dense.decode_step(tok, pos);
+            let slot = StepSlot { token: tok, pos, table: &table, sample: true };
+            let (samples, paged_logits) = be.step_logits(&[slot], true);
+            let diff = max_abs_diff(&dense_logits, &paged_logits);
+            assert!(diff < 1e-6, "pos {pos}: paged vs dense logits differ by {diff}");
+            assert_eq!(
+                samples[0].unwrap(),
+                crate::coordinator::argmax(&dense_logits),
+                "pos {pos}: sampled token diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_rows_do_not_interfere() {
+        let cfg = Qwen3Config::tiny();
+        let w_a = Qwen3Weights::random(&cfg, 5);
+        let w_b = Qwen3Weights::random(&cfg, 5);
+        let mut solo = BatchEngine::new(&w_a, 16, 4);
+        let mut duo = BatchEngine::new(&w_b, 16, 4);
+        let t1: Vec<u32> = vec![0, 1];
+        let t2: Vec<u32> = vec![2, 3];
+        let seq1 = [11usize, 22, 33];
+        let seq2 = [500usize, 600, 700];
+        // Solo: run seq1 alone.
+        let mut solo_logits = Vec::new();
+        for (pos, &tok) in seq1.iter().enumerate() {
+            let (_, l) = solo.step_logits(
+                &[StepSlot { token: tok, pos, table: &t1, sample: true }],
+                true,
+            );
+            solo_logits = l;
+        }
+        // Duo: run seq1 batched with an unrelated seq2.
+        let mut duo_logits = Vec::new();
+        for pos in 0..seq1.len() {
+            let slots = [
+                StepSlot { token: seq1[pos], pos, table: &t1, sample: true },
+                StepSlot { token: seq2[pos], pos, table: &t2, sample: true },
+            ];
+            let (_, l) = duo.step_logits(&slots, true);
+            duo_logits = l;
+        }
+        let vocab = cfg.vocab;
+        let diff = max_abs_diff(&solo_logits[..vocab], &duo_logits[..vocab]);
+        assert!(diff < 1e-6, "batch companion changed a row's logits by {diff}");
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 1);
+        let mut be = BatchEngine::new(&w, 2, 4);
+        assert!(be.step(&[]).is_empty());
+    }
+}

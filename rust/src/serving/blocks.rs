@@ -1,0 +1,333 @@
+//! Paged KV-cache block pool: fixed-size blocks, per-sequence block
+//! tables, free-list allocation, and refcounted prefix sharing.
+//!
+//! A *block* is `block_size` consecutive token positions of KV storage,
+//! shared across all layers: physical block `b` owns rows
+//! `[b*block_size, (b+1)*block_size)` of every layer's K and V arena.
+//! A sequence maps logical positions to physical rows through its
+//! [`BlockTable`]; nothing about a sequence's KV footprint is contiguous
+//! or pre-reserved, so the pool admits many more sequences than a dense
+//! per-request cache of the worst-case length would.
+//!
+//! Prefix sharing: a *full* block's contents are a pure function of the
+//! tokens at positions `[0, (i+1)*block_size)` (each K/V row depends on
+//! the whole prefix through attention, so the cache key is the entire
+//! token prefix, not the block's own tokens). Sequences whose prompts
+//! share such a prefix reference the same physical block, refcounted.
+//! Only full blocks are ever shared — the active tail block is always
+//! private — so no copy-on-write is needed: full blocks are immutable.
+
+use std::collections::HashMap;
+
+/// Free-list block pool with per-block reference counts.
+#[derive(Debug)]
+pub struct BlockPool {
+    block_size: usize,
+    refcount: Vec<u32>,
+    free: Vec<u32>,
+    max_in_use: usize,
+}
+
+impl BlockPool {
+    pub fn new(num_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        BlockPool {
+            block_size,
+            refcount: vec![0; num_blocks],
+            // Pop order: lowest block id first (purely cosmetic).
+            free: (0..num_blocks as u32).rev().collect(),
+            max_in_use: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.refcount.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.refcount.len() - self.free.len()
+    }
+
+    /// High-water mark of `blocks_in_use` over the pool's lifetime.
+    pub fn max_in_use(&self) -> usize {
+        self.max_in_use
+    }
+
+    /// Allocate a block with refcount 1, or `None` when the pool is dry.
+    pub fn try_alloc(&mut self) -> Option<u32> {
+        let b = self.free.pop()?;
+        debug_assert_eq!(self.refcount[b as usize], 0);
+        self.refcount[b as usize] = 1;
+        self.max_in_use = self.max_in_use.max(self.blocks_in_use());
+        Some(b)
+    }
+
+    /// Add a reference to an allocated block (prefix sharing).
+    pub fn retain(&mut self, b: u32) {
+        debug_assert!(self.refcount[b as usize] > 0, "retain of a free block");
+        self.refcount[b as usize] += 1;
+    }
+
+    /// Drop a reference; returns true if the block went back on the
+    /// free list.
+    pub fn release(&mut self, b: u32) -> bool {
+        let rc = &mut self.refcount[b as usize];
+        debug_assert!(*rc > 0, "release of a free block");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(b);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn refcount(&self, b: u32) -> u32 {
+        self.refcount[b as usize]
+    }
+}
+
+/// A sequence's logical-position -> physical-block mapping.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    pub blocks: Vec<u32>,
+}
+
+impl BlockTable {
+    /// Token positions this table can address.
+    pub fn capacity_tokens(&self, block_size: usize) -> usize {
+        self.blocks.len() * block_size
+    }
+}
+
+/// The block pool plus the prefix cache: the KV allocator the
+/// continuous-batching scheduler talks to.
+#[derive(Debug)]
+pub struct KvBlockManager {
+    pub pool: BlockPool,
+    /// Full-block prefix -> physical block. The key is the *entire*
+    /// token prefix covered by the block (see module docs). The cache
+    /// holds its own reference on each entry so a cached block survives
+    /// its originating sequence.
+    prefix: HashMap<Vec<usize>, u32>,
+    /// Entry cap: key storage is O(prefix length) per entry, so an
+    /// unbounded map would grow with every request served. At the cap,
+    /// unreferenced entries are evicted; if everything is live, new
+    /// registrations are skipped (sharing is an optimization, never a
+    /// correctness requirement).
+    max_entries: usize,
+    /// Number of prompt blocks served from the cache.
+    pub prefix_hits: usize,
+}
+
+impl KvBlockManager {
+    pub fn new(num_blocks: usize, block_size: usize) -> Self {
+        KvBlockManager {
+            pool: BlockPool::new(num_blocks, block_size),
+            prefix: HashMap::new(),
+            // One entry per pool block is the most that can ever be
+            // simultaneously useful.
+            max_entries: num_blocks,
+            prefix_hits: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.pool.block_size()
+    }
+
+    /// Reuse cached full blocks covering a prefix of `prompt`. Returns
+    /// the (possibly empty) table of shared blocks and the number of
+    /// positions they cover. Always leaves at least the final prompt
+    /// token to compute, so the caller has logits to sample from.
+    pub fn lookup_prefix(&mut self, prompt: &[usize]) -> (BlockTable, usize) {
+        let bs = self.pool.block_size();
+        let mut table = BlockTable::default();
+        let mut covered = 0usize;
+        while covered + bs < prompt.len() {
+            let key = &prompt[..covered + bs];
+            match self.prefix.get(key) {
+                Some(&b) => {
+                    self.pool.retain(b);
+                    table.blocks.push(b);
+                    covered += bs;
+                    self.prefix_hits += 1;
+                }
+                None => break,
+            }
+        }
+        (table, covered)
+    }
+
+    /// Ensure `table` addresses position `pos`, allocating the next
+    /// block if needed. Returns false when the pool is dry (caller
+    /// preempts someone and retries).
+    pub fn ensure_slot(&mut self, table: &mut BlockTable, pos: usize) -> bool {
+        let bs = self.pool.block_size();
+        while table.capacity_tokens(bs) <= pos {
+            match self.pool.try_alloc() {
+                Some(b) => table.blocks.push(b),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Register a just-filled full block for sharing. `prefix` is the
+    /// whole token sequence covered by positions `[0, k*block_size)`
+    /// where the block is `table.blocks[k-1]`. First writer wins; at
+    /// the entry cap, unreferenced entries are evicted first and the
+    /// registration is dropped if the cache is still full.
+    pub fn register_full_block(&mut self, prefix: &[usize], block: u32) {
+        debug_assert_eq!(prefix.len() % self.pool.block_size(), 0);
+        if self.prefix.contains_key(prefix) {
+            return;
+        }
+        if self.prefix.len() >= self.max_entries {
+            self.evict_unused_cached();
+        }
+        if self.prefix.len() >= self.max_entries {
+            return;
+        }
+        self.pool.retain(block);
+        self.prefix.insert(prefix.to_vec(), block);
+    }
+
+    /// Release every block of a finished or preempted sequence.
+    pub fn release_table(&mut self, table: &mut BlockTable) {
+        for b in table.blocks.drain(..) {
+            self.pool.release(b);
+        }
+    }
+
+    /// Under memory pressure: drop cache entries whose block no live
+    /// sequence references (refcount 1 = cache only). Returns how many
+    /// blocks were freed.
+    pub fn evict_unused_cached(&mut self) -> usize {
+        let pool = &mut self.pool;
+        let before = pool.free_blocks();
+        self.prefix.retain(|_, &mut b| {
+            if pool.refcount(b) == 1 {
+                pool.release(b);
+                false
+            } else {
+                true
+            }
+        });
+        pool.free_blocks() - before
+    }
+
+    pub fn cached_blocks(&self) -> usize {
+        self.prefix.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut p = BlockPool::new(4, 8);
+        assert_eq!(p.free_blocks(), 4);
+        let a = p.try_alloc().unwrap();
+        let b = p.try_alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.blocks_in_use(), 2);
+        assert!(p.release(a));
+        assert_eq!(p.free_blocks(), 3);
+        // Refcounted sharing: release drops to the free list only at 0.
+        p.retain(b);
+        assert!(!p.release(b));
+        assert!(p.release(b));
+        assert_eq!(p.free_blocks(), 4);
+        assert_eq!(p.max_in_use(), 2);
+    }
+
+    #[test]
+    fn pool_exhaustion() {
+        let mut p = BlockPool::new(2, 4);
+        assert!(p.try_alloc().is_some());
+        assert!(p.try_alloc().is_some());
+        assert!(p.try_alloc().is_none());
+    }
+
+    #[test]
+    fn table_growth_via_manager() {
+        let mut m = KvBlockManager::new(8, 4);
+        let mut t = BlockTable::default();
+        assert!(m.ensure_slot(&mut t, 0));
+        assert_eq!(t.blocks.len(), 1);
+        assert!(m.ensure_slot(&mut t, 3));
+        assert_eq!(t.blocks.len(), 1, "position 3 still fits the first block");
+        assert!(m.ensure_slot(&mut t, 4));
+        assert_eq!(t.blocks.len(), 2);
+        // Jumping ahead allocates every intermediate block.
+        assert!(m.ensure_slot(&mut t, 15));
+        assert_eq!(t.blocks.len(), 4);
+        m.release_table(&mut t);
+        assert_eq!(m.pool.free_blocks(), 8);
+    }
+
+    #[test]
+    fn prefix_sharing_reuses_blocks() {
+        let mut m = KvBlockManager::new(8, 4);
+        let prompt: Vec<usize> = (0..9).collect(); // 2 full blocks + 1 token
+        let (mut t1, covered) = m.lookup_prefix(&prompt);
+        assert_eq!(covered, 0, "nothing cached yet");
+        assert!(m.ensure_slot(&mut t1, 8));
+        // Sequence 1 fills its first two blocks and registers them.
+        m.register_full_block(&prompt[..4], t1.blocks[0]);
+        m.register_full_block(&prompt[..8], t1.blocks[1]);
+
+        let (t2, covered2) = m.lookup_prefix(&prompt);
+        assert_eq!(covered2, 8, "both full blocks served from cache");
+        assert_eq!(t2.blocks, t1.blocks[..2].to_vec());
+        assert_eq!(m.prefix_hits, 2);
+        assert_eq!(m.pool.refcount(t1.blocks[0]), 3); // seq1 + cache + seq2
+
+        // A diverging prompt only shares the common full block.
+        let mut other = prompt.clone();
+        other[6] = 999;
+        let (t3, covered3) = m.lookup_prefix(&other);
+        assert_eq!(covered3, 4);
+        assert_eq!(t3.blocks, vec![t1.blocks[0]]);
+    }
+
+    #[test]
+    fn lookup_always_leaves_final_token() {
+        let mut m = KvBlockManager::new(8, 4);
+        let prompt: Vec<usize> = (0..8).collect(); // exactly 2 blocks
+        let (mut t1, _) = m.lookup_prefix(&prompt);
+        assert!(m.ensure_slot(&mut t1, 7));
+        m.register_full_block(&prompt[..4], t1.blocks[0]);
+        m.register_full_block(&prompt[..8], t1.blocks[1]);
+        let (_, covered) = m.lookup_prefix(&prompt);
+        assert_eq!(covered, 4, "the final prompt token must stay computable");
+    }
+
+    #[test]
+    fn cache_eviction_frees_only_unreferenced() {
+        let mut m = KvBlockManager::new(4, 4);
+        let prompt: Vec<usize> = (0..5).collect();
+        let (mut t1, _) = m.lookup_prefix(&prompt);
+        assert!(m.ensure_slot(&mut t1, 4));
+        m.register_full_block(&prompt[..4], t1.blocks[0]);
+        // Block 0 is held by seq1 + cache: eviction must not free it.
+        assert_eq!(m.evict_unused_cached(), 0);
+        assert_eq!(m.cached_blocks(), 1);
+        m.release_table(&mut t1);
+        // Now only the cache holds it.
+        assert_eq!(m.evict_unused_cached(), 1);
+        assert_eq!(m.cached_blocks(), 0);
+        assert_eq!(m.pool.free_blocks(), 4);
+    }
+}

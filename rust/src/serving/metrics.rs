@@ -1,0 +1,80 @@
+//! Serving metrics: per-request TTFT/TPOT, queue depth, pool occupancy
+//! and preemption counters (extends [`crate::coordinator::ServeReport`]
+//! for the continuous-batching path).
+
+use crate::util::Stats;
+
+/// Aggregate metrics of one continuous-batching serve run.
+#[derive(Debug, Default)]
+pub struct ServingMetrics {
+    /// Time-to-first-token per request, seconds (submission -> first
+    /// sampled token).
+    pub ttft: Stats,
+    /// Time-per-output-token across decode iterations, seconds.
+    pub tpot: Stats,
+    /// Queue depth sampled once per scheduler iteration.
+    pub queue_depth: Stats,
+    /// Running batch size sampled once per scheduler iteration.
+    pub batch_size: Stats,
+    /// Pool occupancy (fraction of blocks in use) per iteration.
+    pub pool_occupancy: Stats,
+    /// Sequences preempted back to the queue on pool exhaustion.
+    pub preemptions: usize,
+    /// Prompt blocks served from the prefix cache.
+    pub prefix_hits: usize,
+    /// High-water mark of blocks in use.
+    pub peak_blocks_in_use: usize,
+    /// Scheduler iterations executed.
+    pub iterations: usize,
+    /// Total seconds spent in iterations attributed to decode tokens.
+    pub decode_s: f64,
+    /// Decode tokens covered by `decode_s`.
+    pub decode_steps: usize,
+}
+
+impl ServingMetrics {
+    /// Decode throughput over the directly-accumulated decode seconds
+    /// (never derived from `mean * count`; all the percentile calls are
+    /// safe on empty series — see `Stats`).
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.decode_s > 0.0 {
+            self.decode_steps as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "ttft p50={:.2}ms tpot p50={:.2}ms batch mean={:.1} queue mean={:.1} \
+             pool peak={} blocks preempt={} prefix_hits={} iters={}",
+            self.ttft.percentile(50.0) * 1e3,
+            self.tpot.percentile(50.0) * 1e3,
+            self.batch_size.mean(),
+            self.queue_depth.mean(),
+            self.peak_blocks_in_use,
+            self.preemptions,
+            self.prefix_hits,
+            self.iterations,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_metrics_render_without_nan() {
+        let m = ServingMetrics::default();
+        assert_eq!(m.decode_tokens_per_s(), 0.0);
+        let s = m.render();
+        assert!(!s.contains("NaN"), "render must survive empty series: {s}");
+    }
+
+    #[test]
+    fn decode_throughput_from_accumulated_seconds() {
+        let m = ServingMetrics { decode_s: 2.0, decode_steps: 100, ..Default::default() };
+        assert_eq!(m.decode_tokens_per_s(), 50.0);
+    }
+}

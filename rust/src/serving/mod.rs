@@ -1,0 +1,33 @@
+//! The serving subsystem: paged KV-cache management and continuous
+//! batching (see `docs/serving.md`).
+//!
+//! The FCFS path in [`crate::coordinator::serve`] processes one request
+//! at a time over a dense per-request KV cache — correct, and kept as
+//! the differential-testing oracle, but throughput collapses under
+//! concurrent load because every request re-streams the full weight set
+//! per token. This module treats KV storage as a first-class managed
+//! resource instead:
+//!
+//! * [`blocks`] — fixed-size KV block pool: free-list allocation,
+//!   per-sequence block tables, refcounted prefix sharing.
+//! * [`scheduler`] — continuous-batching scheduler: admission control,
+//!   iteration-level batching of prefill and decode, preemption to the
+//!   queue when the pool is exhausted.
+//! * [`batch_engine`] — the batched decode path: one GEMM per projection
+//!   over pre-packed weights for the whole batch, attention gathered
+//!   through block tables.
+//! * [`metrics`] — TTFT/TPOT, queue depth, pool occupancy, preemption
+//!   counters ([`crate::coordinator::ServeReport`] extension).
+//!
+//! Selected via [`crate::coordinator::ServePolicy`]; outputs are
+//! token-identical to the FCFS oracle (`rust/tests/serving.rs`).
+
+pub mod batch_engine;
+pub mod blocks;
+pub mod metrics;
+pub mod scheduler;
+
+pub use batch_engine::{BatchEngine, PagedKv, StepSlot};
+pub use blocks::{BlockPool, BlockTable, KvBlockManager};
+pub use metrics::ServingMetrics;
+pub use scheduler::{ContinuousConfig, ContinuousScheduler, SeqState, Sequence};

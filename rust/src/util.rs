@@ -105,25 +105,43 @@ impl Stats {
         self.samples.is_empty()
     }
 
+    /// Sum of all samples (0.0 when empty).
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum::<f64>()
+    }
+
+    /// Mean; 0.0 on an empty sample set (metrics code calls this on
+    /// possibly-empty series, e.g. preemption stats — never NaN).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        self.sum() / self.samples.len() as f64
     }
 
+    /// Minimum; 0.0 on an empty sample set (not +inf).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Maximum; 0.0 on an empty sample set (not -inf).
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
+    /// `p`-th percentile (nearest-rank). 0.0 on an empty sample set;
+    /// `p` is clamped to [0, 100] and NaN `p` maps to the median.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
+        let p = if p.is_nan() { 50.0 } else { p.clamp(0.0, 100.0) };
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
@@ -193,6 +211,39 @@ mod tests {
         assert_eq!(s.max(), 100.0);
         assert!((s.percentile(50.0) - 50.0).abs() <= 1.0);
         assert!((s.percentile(99.0) - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zero_not_nan() {
+        let s = Stats::default();
+        assert_eq!(s.len(), 0);
+        assert!(s.is_empty());
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.sum(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert_eq!(s.percentile(99.0), 0.0);
+        assert!(!s.mean().is_nan() && !s.percentile(0.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_clamps_degenerate_p() {
+        let mut s = Stats::default();
+        for i in 1..=10 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.percentile(-5.0), 1.0);
+        assert_eq!(s.percentile(250.0), 10.0);
+        assert_eq!(s.percentile(f64::NAN), s.percentile(50.0));
+    }
+
+    #[test]
+    fn sum_accumulates() {
+        let mut s = Stats::default();
+        s.push(1.5);
+        s.push(2.5);
+        assert_eq!(s.sum(), 4.0);
     }
 
     #[test]

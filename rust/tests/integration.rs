@@ -17,6 +17,10 @@ use nncase_repro::runtime::{ArgValue, Manifest, PjrtRuntime};
 use nncase_repro::util::Rng;
 
 fn artifacts_dir() -> Option<&'static Path> {
+    if !PjrtRuntime::available() {
+        eprintln!("skipping: PJRT backend not compiled into this build");
+        return None;
+    }
     let p = Path::new("artifacts");
     if p.join("manifest.tsv").exists() {
         Some(p)

@@ -1,0 +1,144 @@
+//! Serving-equivalence tests: the continuous-batching path must be an
+//! invisible optimization — token-identical outputs to the FCFS oracle —
+//! while actually exercising batching, prefix sharing and preemption.
+
+use nncase_repro::coordinator::{
+    synthetic_workload, Coordinator, Qwen3Engine, Request, ServePolicy,
+};
+use nncase_repro::model::{Qwen3Config, Qwen3Weights};
+use nncase_repro::serving::ContinuousConfig;
+
+fn coordinator(seed: u64, threads: usize) -> (Qwen3Config, Coordinator) {
+    let cfg = Qwen3Config::tiny();
+    let w = Qwen3Weights::random(&cfg, seed);
+    (cfg.clone(), Coordinator::new(Qwen3Engine::new(w, threads, 128)))
+}
+
+/// Continuous batching produces byte-identical output token ids to the
+/// FCFS oracle on the synthetic workload.
+#[test]
+fn continuous_matches_fcfs_oracle() {
+    let (cfg, mut oracle) = coordinator(11, 1);
+    let (_, mut cont) = coordinator(11, 1);
+    let reqs = synthetic_workload(6, 5, 8, cfg.vocab);
+    let want = oracle.serve(&reqs);
+    let got = cont.serve_with_policy(
+        &reqs,
+        ServePolicy::Continuous(ContinuousConfig {
+            block_size: 4,
+            num_blocks: 64,
+            max_batch: 4,
+        }),
+    );
+    assert_eq!(want.outputs, got.outputs, "continuous batching changed outputs");
+    assert_eq!(got.generated_tokens, 6 * 8);
+    let m = got.serving.expect("continuous metrics");
+    assert!(m.batch_size.max() >= 2.0, "the workload must actually batch");
+}
+
+/// Equivalence holds across the multi-threaded FCFS engine too (the
+/// static partition is numerically identical to 1T).
+#[test]
+fn continuous_matches_multithreaded_oracle() {
+    let (cfg, mut oracle) = coordinator(12, 4);
+    let (_, mut cont) = coordinator(12, 1);
+    let reqs = synthetic_workload(3, 6, 6, cfg.vocab);
+    let want = oracle.serve(&reqs);
+    let got = cont
+        .serve_with_policy(&reqs, ServePolicy::Continuous(ContinuousConfig::default()));
+    assert_eq!(want.outputs, got.outputs);
+}
+
+/// A pool sized below the working set forces preemption-to-queue; the
+/// recomputation must still reproduce the oracle's tokens exactly.
+#[test]
+fn preemption_is_invisible_in_outputs() {
+    let (cfg, mut oracle) = coordinator(13, 1);
+    let (_, mut cont) = coordinator(13, 1);
+    // Two requests, each needing 4 blocks over its lifetime
+    // (4 prompt + 12 generated tokens, block_size 4); a 5-block pool
+    // cannot host both, so the later one is preempted mid-flight.
+    let reqs = synthetic_workload(2, 4, 12, cfg.vocab);
+    let want = oracle.serve(&reqs);
+    let got = cont.serve_with_policy(
+        &reqs,
+        ServePolicy::Continuous(ContinuousConfig {
+            block_size: 4,
+            num_blocks: 5,
+            max_batch: 2,
+        }),
+    );
+    assert_eq!(want.outputs, got.outputs, "preemption/recompute changed outputs");
+    let m = got.serving.expect("continuous metrics");
+    assert!(m.preemptions > 0, "the tiny pool must trigger preemption");
+}
+
+/// Two requests sharing a long prompt prefix consume fewer pool blocks
+/// than two with disjoint prompts, and reach the same outputs as the
+/// oracle (shared full blocks hold identical K/V).
+#[test]
+fn prefix_sharing_reduces_block_pressure() {
+    let (cfg, _) = coordinator(14, 1);
+    let block_size = 4usize;
+    // 9-token prompts: the first 8 tokens (2 full blocks) shared.
+    let common: Vec<usize> = (0..8).map(|i| (i * 37 + 11) % cfg.vocab).collect();
+    let mut p1 = common.clone();
+    p1.push(100);
+    let mut p2 = common.clone();
+    p2.push(200);
+    let shared_reqs = vec![
+        Request { id: 0, prompt: p1.clone(), max_new_tokens: 4 },
+        Request { id: 1, prompt: p2.clone(), max_new_tokens: 4 },
+    ];
+    let disjoint_reqs = vec![
+        Request { id: 0, prompt: p1, max_new_tokens: 4 },
+        Request {
+            id: 1,
+            prompt: (0..9).map(|i| (i * 53 + 29) % cfg.vocab).collect(),
+            max_new_tokens: 4,
+        },
+    ];
+    // max_batch 1 staggers the two requests: the second is admitted
+    // after the first has filled (and published) its prompt blocks, so
+    // the lookup actually hits the prefix cache.
+    let run = |reqs: &[Request]| {
+        let (_, mut c) = coordinator(14, 1);
+        c.serve_with_policy(
+            reqs,
+            ServePolicy::Continuous(ContinuousConfig {
+                block_size,
+                num_blocks: 32,
+                max_batch: 1,
+            }),
+        )
+    };
+    let shared = run(&shared_reqs);
+    let disjoint = run(&disjoint_reqs);
+    let (ms, md) = (shared.serving.unwrap(), disjoint.serving.unwrap());
+    assert!(ms.prefix_hits >= 2, "both full prompt blocks must be shared");
+    assert!(
+        ms.peak_blocks_in_use < md.peak_blocks_in_use,
+        "prefix sharing must reduce peak pool pressure: shared {} vs disjoint {}",
+        ms.peak_blocks_in_use,
+        md.peak_blocks_in_use
+    );
+
+    // And sharing does not change the tokens: FCFS oracle agreement.
+    let (_, mut oracle) = coordinator(14, 1);
+    let want = oracle.serve(&shared_reqs);
+    assert_eq!(want.outputs, shared.outputs);
+}
+
+/// The engine's own generate() agrees with serve() outputs (the report
+/// path adds no divergence).
+#[test]
+fn serve_agrees_with_generate() {
+    let (cfg, mut c) = coordinator(15, 1);
+    let reqs = synthetic_workload(2, 4, 6, cfg.vocab);
+    let rep = c.serve(&reqs);
+    for req in &reqs {
+        let toks = c.engine.generate(&req.prompt, req.max_new_tokens);
+        let served = &rep.outputs.iter().find(|(id, _)| *id == req.id).unwrap().1;
+        assert_eq!(&toks, served);
+    }
+}

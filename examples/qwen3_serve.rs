@@ -57,23 +57,29 @@ fn main() {
         last_output = Some(report.outputs);
     }
     // Continuous batching over the paged KV pool: same outputs, one
-    // weight stream per iteration instead of per request (docs/serving.md).
-    let engine = Qwen3Engine::new(load(()), 1, 512);
-    let mut coord = Coordinator::new(engine);
-    let report = coord.serve_with_policy(
-        &requests,
-        ServePolicy::Continuous(ContinuousConfig {
-            block_size: 16,
-            num_blocks: 64,
-            max_batch: requests.len(),
-        }),
-    );
-    println!("continuous: {}", report.render());
-    assert_eq!(
-        last_output.as_ref().unwrap(),
-        &report.outputs,
-        "continuous batching changed outputs!"
-    );
+    // weight stream per iteration instead of per request, and the
+    // batched step itself runs SPMD across persistent workers — the
+    // static partition keeps outputs identical at every thread count
+    // (docs/serving.md).
+    for threads in [1usize, 4] {
+        let engine = Qwen3Engine::new(load(()), 1, 512);
+        let mut coord = Coordinator::new(engine);
+        let report = coord.serve_with_policy(
+            &requests,
+            ServePolicy::Continuous(ContinuousConfig {
+                block_size: 16,
+                num_blocks: 64,
+                max_batch: requests.len(),
+                threads,
+            }),
+        );
+        println!("continuous ({} workers): {}", report.threads, report.render());
+        assert_eq!(
+            last_output.as_ref().unwrap(),
+            &report.outputs,
+            "continuous batching changed outputs!"
+        );
+    }
 
     let sample = &last_output.unwrap()[0].1;
     println!("\nsample generation (request 0): {:?}", &sample[..12.min(sample.len())]);

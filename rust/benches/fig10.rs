@@ -41,7 +41,9 @@ fn main() {
     };
     let gn = (gain(&Framework::nncase()) - 1.0) * 100.0;
     let gl = (gain(&Framework::llamacpp()) - 1.0) * 100.0;
-    println!("1.7B 1T->4T scaling: nncase +{gn:.0}% (paper +74%), llama.cpp +{gl:.0}% (paper +32%)");
+    println!(
+        "1.7B 1T->4T scaling: nncase +{gn:.0}% (paper +74%), llama.cpp +{gl:.0}% (paper +32%)"
+    );
     assert!(gn > gl);
 
     // Bandwidth wall: 8T ~ 4T.

@@ -28,7 +28,8 @@ fn main() {
         );
         assert!(l > n && n > i && i > 2.0 * m, "{model}: hierarchy violated");
         println!(
-            "{model}: llama.cpp/nncase = {:.2} (paper ~1.2), nncase/IPEX = {:.2} (paper ~1.15-1.35)",
+            "{model}: llama.cpp/nncase = {:.2} (paper ~1.2), \
+             nncase/IPEX = {:.2} (paper ~1.15-1.35)",
             l / n,
             n / i
         );

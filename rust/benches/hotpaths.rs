@@ -139,8 +139,10 @@ fn main() {
             pos += 1;
             l[0]
         });
+        // The engine clamps at the model's partition width (tiny:
+        // kv_heads = 2), so report the effective worker count.
         row(
-            &format!("decode_step {threads}T"),
+            &format!("decode_step {}T (req {threads})", e.threads),
             format!("{} ({:.1} tok/s)", fmt_time(t), 1.0 / t),
         );
     }

@@ -1,31 +1,82 @@
 //! Serving benchmark: FCFS (batch 1, dense KV) vs continuous batching
-//! (paged KV pool) on the synthetic workload at batch pressures
-//! {1, 4, 16}.
+//! (paged KV pool) swept over batch pressure × SPMD worker threads.
 //!
 //! The decode hot path is memory-bound on the weight stream; FCFS pays
 //! it once per sequence per token while the batched engine pays it once
 //! per iteration, so continuous batching's decode throughput should
-//! scale with concurrency until attention (per-sequence) dominates.
+//! scale with concurrency — and, past one core, with workers: the
+//! batched step shards GEMM row panels and per-sequence attention across
+//! the persistent SPMD workers, so threaded decode must beat
+//! single-thread once the batch is wide enough to shard.
+//!
+//! Asserts (full mode):
+//! * continuous (1T) >= 2x FCFS decode throughput at 16 concurrent;
+//! * continuous 4T > continuous 1T decode throughput at batch 16
+//!   (skipped with a warning when the host has < 4 usable cores —
+//!   a 1-core CI container cannot demonstrate a parallel speedup).
+//!
+//! Env knobs (the CI bench-smoke job sets both):
+//! * `PALLAS_BENCH_QUICK=1` — reduced workload for a fast smoke signal;
+//!   the thread-speedup assert becomes a warning (short quick-mode runs
+//!   on shared runners are too noisy to gate CI on).
+//! * `PALLAS_BENCH_JSON=path` — write the sweep as a JSON report.
 //!
 //! Run: `cargo bench --bench serve`
 
 mod bench_util;
+
+use std::fmt::Write as _;
 
 use bench_util::row;
 use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServePolicy};
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
 use nncase_repro::serving::ContinuousConfig;
 
+struct Sample {
+    pressure: usize,
+    threads: usize,
+    decode_tok_s: f64,
+    wall_s: f64,
+    speedup_vs_fcfs: f64,
+}
+
+fn json_report(samples: &[Sample], quick: bool) -> String {
+    let mut out = String::from("{\n  \"bench\": \"serve\",\n");
+    let _ = writeln!(out, "  \"quick\": {quick},");
+    out.push_str("  \"samples\": [\n");
+    for (i, s) in samples.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"pressure\": {}, \"threads\": {}, \"decode_tok_s\": {:.3}, \
+             \"wall_s\": {:.4}, \"speedup_vs_fcfs\": {:.3}}}",
+            s.pressure, s.threads, s.decode_tok_s, s.wall_s, s.speedup_vs_fcfs
+        );
+        out.push_str(if i + 1 < samples.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
 fn main() {
+    let quick = std::env::var("PALLAS_BENCH_QUICK").is_ok();
     let cfg = Qwen3Config::tiny();
-    let (prompt_len, max_new) = (8usize, 32usize);
+    // Quick mode: fewer generated tokens and pressures — a smoke signal
+    // for CI, not a measurement.
+    let (prompt_len, max_new) = if quick { (4usize, 10usize) } else { (8, 32) };
+    let pressures: &[usize] = if quick { &[1, 16] } else { &[1, 4, 16] };
+    let thread_counts = [1usize, 4];
     println!(
-        "== serving: FCFS vs continuous batching ({}, {}+{} tokens/request) ==",
-        cfg.name, prompt_len, max_new
+        "== serving: FCFS vs continuous batching x threads ({}, {}+{} tokens/request{}) ==",
+        cfg.name,
+        prompt_len,
+        max_new,
+        if quick { ", quick" } else { "" }
     );
 
+    let mut samples = Vec::new();
     let mut speedup_at_16 = 0.0f64;
-    for pressure in [1usize, 4, 16] {
+    let mut tok_s_16 = [0.0f64; 2]; // [1T, 4T] continuous at pressure 16
+    for &pressure in pressures {
         let reqs = synthetic_workload(pressure, prompt_len, max_new, cfg.vocab);
 
         let mut fcfs = Coordinator::new(Qwen3Engine::new(
@@ -35,51 +86,104 @@ fn main() {
         ));
         let fcfs_rep = fcfs.serve(&reqs);
 
-        let mut cont = Coordinator::new(Qwen3Engine::new(
-            Qwen3Weights::random(&cfg, 42),
-            1,
-            prompt_len + max_new + 1,
-        ));
-        let ccfg = ContinuousConfig {
-            block_size: 16,
-            num_blocks: 4 * pressure + 8,
-            max_batch: pressure,
-        };
-        let cont_rep = cont.serve_with_policy(&reqs, ServePolicy::Continuous(ccfg));
+        for (ti, &threads) in thread_counts.iter().enumerate() {
+            let mut cont = Coordinator::new(Qwen3Engine::new(
+                Qwen3Weights::random(&cfg, 42),
+                1,
+                prompt_len + max_new + 1,
+            ));
+            let ccfg = ContinuousConfig {
+                block_size: 16,
+                num_blocks: 4 * pressure + 8,
+                max_batch: pressure,
+                threads,
+            };
+            let cont_rep = cont.serve_with_policy(&reqs, ServePolicy::Continuous(ccfg));
 
-        assert_eq!(
-            fcfs_rep.outputs, cont_rep.outputs,
-            "continuous batching must be token-identical to the FCFS oracle"
-        );
+            assert_eq!(
+                fcfs_rep.outputs, cont_rep.outputs,
+                "continuous batching ({threads}T) must be token-identical to the FCFS oracle"
+            );
 
-        let speedup = if fcfs_rep.decode_tokens_per_s > 0.0 {
-            cont_rep.decode_tokens_per_s / fcfs_rep.decode_tokens_per_s
-        } else {
-            0.0
-        };
-        if pressure == 16 {
-            speedup_at_16 = speedup;
-        }
-        row(
-            &format!("batch pressure {pressure:>2}"),
-            format!(
-                "fcfs {:>8.2} tok/s | continuous {:>8.2} tok/s | {:>5.2}x | wall {:.2}s -> {:.2}s",
-                fcfs_rep.decode_tokens_per_s,
-                cont_rep.decode_tokens_per_s,
-                speedup,
-                fcfs_rep.wall_s,
-                cont_rep.wall_s,
-            ),
-        );
-        if let Some(m) = &cont_rep.serving {
-            row("  continuous metrics", m.render());
+            let speedup = if fcfs_rep.decode_tokens_per_s > 0.0 {
+                cont_rep.decode_tokens_per_s / fcfs_rep.decode_tokens_per_s
+            } else {
+                0.0
+            };
+            if pressure == 16 {
+                tok_s_16[ti] = cont_rep.decode_tokens_per_s;
+                if threads == 1 {
+                    speedup_at_16 = speedup;
+                }
+            }
+            row(
+                &format!("batch {pressure:>2} x {}T", cont_rep.threads),
+                format!(
+                    "fcfs {:>8.2} tok/s | continuous {:>8.2} tok/s | {:>5.2}x | \
+                     wall {:.2}s -> {:.2}s",
+                    fcfs_rep.decode_tokens_per_s,
+                    cont_rep.decode_tokens_per_s,
+                    speedup,
+                    fcfs_rep.wall_s,
+                    cont_rep.wall_s,
+                ),
+            );
+            if let Some(m) = &cont_rep.serving {
+                row("  continuous metrics", m.render());
+            }
+            samples.push(Sample {
+                pressure,
+                threads: cont_rep.threads,
+                decode_tok_s: cont_rep.decode_tokens_per_s,
+                wall_s: cont_rep.wall_s,
+                speedup_vs_fcfs: speedup,
+            });
         }
     }
 
-    assert!(
-        speedup_at_16 >= 2.0,
-        "continuous batching must be >= 2x FCFS decode throughput at 16 \
-         concurrent requests (got {speedup_at_16:.2}x)"
+    if let Ok(path) = std::env::var("PALLAS_BENCH_JSON") {
+        std::fs::write(&path, json_report(&samples, quick)).expect("write bench JSON");
+        println!("json report -> {path}");
+    }
+
+    // Quick mode is a smoke signal on a shared runner with a tiny timed
+    // window — report, don't gate (same reasoning as the thread gate
+    // below); full mode enforces the 2x batching claim.
+    if quick {
+        if speedup_at_16 < 2.0 {
+            println!(
+                "WARN: continuous < 2x FCFS at 16 ({speedup_at_16:.2}x) — not gating (quick)"
+            );
+        }
+    } else {
+        assert!(
+            speedup_at_16 >= 2.0,
+            "continuous batching must be >= 2x FCFS decode throughput at 16 \
+             concurrent requests (got {speedup_at_16:.2}x)"
+        );
+    }
+
+    // Threaded decode must beat single-thread at batch 16 — the SPMD
+    // partition is only worth shipping if it actually buys throughput.
+    let thread_speedup = if tok_s_16[0] > 0.0 { tok_s_16[1] / tok_s_16[0] } else { 0.0 };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let can_gate = cores >= 4 && !quick;
+    if can_gate {
+        assert!(
+            thread_speedup > 1.0,
+            "4T continuous decode must beat 1T at batch 16 \
+             (got {:.2} vs {:.2} tok/s, {thread_speedup:.2}x)",
+            tok_s_16[1],
+            tok_s_16[0],
+        );
+    } else if thread_speedup <= 1.0 {
+        println!(
+            "WARN: 4T <= 1T at batch 16 ({thread_speedup:.2}x) — not gating \
+             ({cores} cores, quick={quick})"
+        );
+    }
+    println!(
+        "\nserve OK ({speedup_at_16:.2}x batching at 16 concurrent, \
+         {thread_speedup:.2}x from 4 workers)"
     );
-    println!("\nserve OK ({speedup_at_16:.2}x at 16 concurrent)");
 }

@@ -1,52 +1,17 @@
 //! The decode engine: real Qwen3 inference over NTT μkernels with
 //! compile-time static partitioning across cores.
-
-use std::sync::atomic::{AtomicUsize, Ordering};
-
-/// Sense-reversing spin barrier: ~100 ns per wait vs several us for the
-/// mutex/condvar `std::sync::Barrier` (§Perf L3 — the decode step passes
-/// ~40 barriers per token, so this matters on small models).
-struct SpinBarrier {
-    n: usize,
-    count: AtomicUsize,
-    generation: AtomicUsize,
-}
-
-impl SpinBarrier {
-    fn new(n: usize) -> Self {
-        SpinBarrier { n, count: AtomicUsize::new(0), generation: AtomicUsize::new(0) }
-    }
-
-    fn wait(&self) {
-        if self.n <= 1 {
-            return;
-        }
-        let gen = self.generation.load(Ordering::Acquire);
-        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
-            self.count.store(0, Ordering::Relaxed);
-            self.generation.store(gen.wrapping_add(1), Ordering::Release);
-        } else {
-            // Spin briefly, then yield: on oversubscribed machines (or a
-            // 1-CPU container) pure spinning burns whole scheduler quanta
-            // while the straggler cannot run.
-            let mut spins = 0u32;
-            while self.generation.load(Ordering::Acquire) == gen {
-                spins += 1;
-                if spins < 512 {
-                    std::hint::spin_loop();
-                } else {
-                    std::thread::yield_now();
-                }
-            }
-        }
-    }
-}
+//!
+//! The SPMD building blocks (sense-reversing barrier, deterministic
+//! `splits`, disjoint-range scratch, single-writer KV handoff) live in
+//! [`crate::parallel`] and are shared with the batched paged-attention
+//! engine of [`crate::serving::batch_engine`].
 
 use crate::model::{Qwen3Config, Qwen3Weights};
 use crate::ntt::{
     add_inplace, dot, gemv_cols, mul_inplace, rmsnorm, rope_inplace, silu_inplace,
     softmax_inplace, Tensor,
 };
+use crate::parallel::{splits, KvCell, PoisonGuard, SharedVec, SpinBarrier};
 
 /// Per-layer KV cache: rows are positions, columns `kv_heads * head_dim`.
 pub struct KvCache {
@@ -61,94 +26,6 @@ impl KvCache {
     }
 }
 
-/// Column ranges statically assigned to each worker (the S(1) split the
-/// Auto Distribution pass selects for 1-row GEMV).
-fn splits(n: usize, parts: usize) -> Vec<(usize, usize)> {
-    let base = n / parts;
-    let rem = n % parts;
-    let mut out = Vec::with_capacity(parts);
-    let mut lo = 0;
-    for p in 0..parts {
-        let sz = base + usize::from(p < rem);
-        out.push((lo, lo + sz));
-        lo += sz;
-    }
-    out
-}
-
-/// Shared mutable scratch written by disjoint ranges from worker threads.
-struct SharedVec(std::cell::UnsafeCell<Vec<f32>>);
-unsafe impl Sync for SharedVec {}
-
-/// Single-writer handoff cell for the KV-cache commit.
-///
-/// Invariant (checked with `debug_assert!`s): only worker 0 calls
-/// [`KvCell::commit`], and every `commit` is separated from every
-/// [`KvCell::read`] by a barrier — writes in phase 3 happen-before reads
-/// in phase 4 via the barrier's Release/Acquire pair. The `writers`
-/// counter turns a violated invariant into a deterministic debug panic
-/// instead of a silent data race; block tables in the paged serving path
-/// make these aliasing rules stricter, so the contract is enforced here
-/// rather than scattered across raw `UnsafeCell` pokes.
-struct KvCell<'a> {
-    kv: std::cell::UnsafeCell<&'a mut Vec<KvCache>>,
-    writers: AtomicUsize,
-}
-
-unsafe impl Sync for KvCell<'_> {}
-
-impl<'a> KvCell<'a> {
-    fn new(kv: &'a mut Vec<KvCache>) -> Self {
-        KvCell { kv: std::cell::UnsafeCell::new(kv), writers: AtomicUsize::new(0) }
-    }
-
-    /// Exclusive commit window. SAFETY: caller must be the single writer
-    /// (worker 0) inside a barrier-separated phase.
-    fn commit(&self, worker: usize, f: impl FnOnce(&mut Vec<KvCache>)) {
-        debug_assert_eq!(worker, 0, "only worker 0 may commit the KV cache");
-        let prev = self.writers.fetch_add(1, Ordering::AcqRel);
-        debug_assert_eq!(prev, 0, "concurrent KV commit: barrier invariant violated");
-        let _ = prev;
-        // SAFETY: single writer by contract (debug-checked above); all
-        // readers are on the other side of a barrier.
-        f(unsafe { &mut **self.kv.get() });
-        self.writers.fetch_sub(1, Ordering::AcqRel);
-    }
-
-    /// Shared read. SAFETY: must be barrier-separated from any commit.
-    fn read(&self) -> &Vec<KvCache> {
-        debug_assert_eq!(
-            self.writers.load(Ordering::Acquire),
-            0,
-            "KV read overlapping a commit: barrier invariant violated"
-        );
-        // SAFETY: no writer is active (debug-checked above); the commit
-        // phase happened-before this read via the barrier.
-        unsafe { &**self.kv.get() }
-    }
-}
-
-impl SharedVec {
-    fn new(n: usize) -> Self {
-        SharedVec(std::cell::UnsafeCell::new(vec![0.0; n]))
-    }
-
-    /// SAFETY: callers must write disjoint ranges between barriers.
-    #[allow(clippy::mut_from_ref)]
-    unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [f32] {
-        let v: &mut Vec<f32> = unsafe { &mut *self.0.get() };
-        &mut v[lo..hi]
-    }
-
-    fn read(&self) -> &[f32] {
-        unsafe { &*self.0.get() }
-    }
-
-    fn write_all(&self, src: &[f32]) {
-        unsafe { (*self.0.get()).copy_from_slice(src) }
-    }
-}
-
 /// The decode engine.
 pub struct Qwen3Engine {
     pub weights: Qwen3Weights,
@@ -158,11 +35,17 @@ pub struct Qwen3Engine {
 }
 
 impl Qwen3Engine {
+    /// `threads` is clamped to `[1, cfg.partition_width()]`: the static
+    /// column/head partition shards every dimension down to `kv_heads`
+    /// wide, so worker counts beyond the model's partitionable width
+    /// would only produce empty shards (wasted threads spinning on every
+    /// barrier).
     pub fn new(weights: Qwen3Weights, threads: usize, max_seq: usize) -> Self {
         let cfg = weights.cfg.clone();
         let width = cfg.kv_heads * cfg.head_dim;
         let kv = (0..cfg.layers).map(|_| KvCache::new(max_seq, width)).collect();
-        Qwen3Engine { weights, kv, threads: threads.max(1), max_seq }
+        let threads = threads.clamp(1, cfg.partition_width());
+        Qwen3Engine { weights, kv, threads, max_seq }
     }
 
     pub fn cfg(&self) -> &Qwen3Config {
@@ -223,12 +106,21 @@ impl Qwen3Engine {
                 );
                 let (barrier, kv_cell) = (&barrier, &kv_cell);
                 s.spawn(move || {
+                    // A panicking worker poisons the barrier so its
+                    // siblings unwind instead of spinning forever on a
+                    // participant that will never arrive (see SpinBarrier).
+                    let _poison = PoisonGuard::new(barrier);
                     for l in 0..cfg.layers {
                         let w = &weights.layers[l];
                         // Phase 0 (serial): attention RMSNorm.
                         if wi == 0 {
                             unsafe {
-                                rmsnorm(x.read(), &w.attn_norm.data, cfg.rms_eps, xn.slice_mut(0, h));
+                                rmsnorm(
+                                    x.read(),
+                                    &w.attn_norm.data,
+                                    cfg.rms_eps,
+                                    xn.slice_mut(0, h),
+                                );
                             }
                         }
                         barrier.wait();
@@ -306,7 +198,12 @@ impl Qwen3Engine {
                         if wi == 0 {
                             unsafe {
                                 add_inplace(x.slice_mut(0, h), attn_out.read());
-                                rmsnorm(x.read(), &w.mlp_norm.data, cfg.rms_eps, xn.slice_mut(0, h));
+                                rmsnorm(
+                                    x.read(),
+                                    &w.mlp_norm.data,
+                                    cfg.rms_eps,
+                                    xn.slice_mut(0, h),
+                                );
                             }
                         }
                         barrier.wait();
@@ -422,6 +319,18 @@ mod tests {
                 .fold(0.0f32, f32::max);
             assert!(maxdiff < 1e-4, "thread-count changed numerics: {maxdiff}");
         }
+    }
+
+    #[test]
+    fn oversubscribed_threads_clamp_to_partition_width() {
+        // Tiny has kv_heads = 2: the narrowest split dimension. A 64-way
+        // request must clamp there instead of spawning workers with
+        // empty shards.
+        let e = tiny_engine(64);
+        assert_eq!(e.threads, e.cfg().partition_width());
+        assert_eq!(e.threads, 2);
+        // And the lower clamp still holds.
+        assert_eq!(tiny_engine(0).threads, 1);
     }
 
     #[test]

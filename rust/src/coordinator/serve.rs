@@ -35,6 +35,11 @@ pub struct ServeReport {
     pub requests: usize,
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
+    /// Effective SPMD worker threads of the decode engine that served
+    /// this run (after clamping: partition width for FCFS, batch width
+    /// for continuous) — outputs are identical at any value, so this is
+    /// a performance annotation, not a result descriptor.
+    pub threads: usize,
     pub wall_s: f64,
     /// Decode throughput over the decode-timed tokens only, computed
     /// from directly accumulated decode seconds (never `mean * count`).
@@ -62,11 +67,12 @@ pub struct ServeReport {
 impl ServeReport {
     pub fn render(&self) -> String {
         let mut s = format!(
-            "requests={} prompt_toks={} gen_toks={} wall={:.2}s decode={:.2} tok/s \
+            "requests={} prompt_toks={} gen_toks={} threads={} wall={:.2}s decode={:.2} tok/s \
              ttft p50={:.2}ms tok_lat p50={:.2}ms p99={:.2}ms req_lat mean={:.2}s",
             self.requests,
             self.prompt_tokens,
             self.generated_tokens,
+            self.threads,
             self.wall_s,
             self.decode_tokens_per_s,
             self.ttft.percentile(50.0) * 1e3,
@@ -163,6 +169,7 @@ impl Coordinator {
             requests: requests.len(),
             prompt_tokens,
             generated_tokens: generated,
+            threads: self.engine.threads,
             wall_s,
             decode_tokens_per_s: if decode_s > 0.0 { decode_steps as f64 / decode_s } else { 0.0 },
             token_latency,
@@ -175,6 +182,10 @@ impl Coordinator {
 
     fn serve_continuous(&mut self, requests: &[Request], cfg: ContinuousConfig) -> ServeReport {
         let wall = Instant::now();
+        let max_batch = cfg.max_batch.max(1);
+        // Effective worker count (the engine applies the same clamp;
+        // computed here so the report records what actually ran).
+        let threads = cfg.threads.clamp(1, max_batch);
         let mut sched = ContinuousScheduler::new(cfg.clone());
         let mut be = BatchEngine::new(&self.engine.weights, cfg.num_blocks, cfg.block_size);
         for r in requests {
@@ -182,36 +193,42 @@ impl Coordinator {
         }
         let mut request_latency = Stats::default();
         let mut done: HashMap<u64, Vec<usize>> = HashMap::new();
-        let mut collect =
-            |sched: &mut ContinuousScheduler, lat: &mut Stats, t0: &Instant| {
+        // One SPMD run for the whole serve: the workers are spawned once
+        // and parked between iterations, so the per-step cost is one
+        // barrier release instead of a spawn/join per step.
+        be.run(threads, max_batch, |stepper| {
+            while !sched.is_done() {
+                // schedule() either yields at least one runnable sequence
+                // or panics (pool too small for the queue head) — a 0
+                // return with work left cannot happen.
+                let _scheduled = sched.schedule();
+                debug_assert!(_scheduled > 0, "scheduler yielded no work while not done");
+                let t_iter = Instant::now();
+                let slots: Vec<StepSlot> = sched
+                    .running()
+                    .iter()
+                    .map(|s| StepSlot {
+                        token: s.tokens[s.pos],
+                        pos: s.pos,
+                        table: &s.table.blocks,
+                        sample: s.at_frontier(),
+                    })
+                    .collect();
+                let samples = stepper.step(&slots);
+                drop(slots);
+                sched.commit(&samples, t_iter.elapsed().as_secs_f64());
                 for f in sched.take_finished() {
-                    lat.push(t0.elapsed().as_secs_f64());
+                    request_latency.push(wall.elapsed().as_secs_f64());
                     done.insert(f.id, f.generated);
                 }
-            };
-        while !sched.is_done() {
-            // schedule() either yields at least one runnable sequence or
-            // panics (pool too small for the queue head) — a 0 return
-            // with work left cannot happen.
-            let _scheduled = sched.schedule();
-            debug_assert!(_scheduled > 0, "scheduler yielded no work while not done");
-            let t_iter = Instant::now();
-            let slots: Vec<StepSlot> = sched
-                .running()
-                .iter()
-                .map(|s| StepSlot {
-                    token: s.tokens[s.pos],
-                    pos: s.pos,
-                    table: &s.table.blocks,
-                    sample: s.at_frontier(),
-                })
-                .collect();
-            let samples = be.step(&slots);
-            drop(slots);
-            sched.commit(&samples, t_iter.elapsed().as_secs_f64());
-            collect(&mut sched, &mut request_latency, &wall);
+            }
+        });
+        // Degenerate requests (empty prompt / zero budget) finish at
+        // submit time without ever entering the loop.
+        for f in sched.take_finished() {
+            request_latency.push(wall.elapsed().as_secs_f64());
+            done.insert(f.id, f.generated);
         }
-        collect(&mut sched, &mut request_latency, &wall);
 
         let metrics = std::mem::take(&mut sched.metrics);
         let outputs: Vec<(u64, Vec<usize>)> = requests
@@ -222,6 +239,7 @@ impl Coordinator {
             requests: requests.len(),
             prompt_tokens: requests.iter().map(|r| r.prompt.len()).sum(),
             generated_tokens: outputs.iter().map(|(_, t)| t.len()).sum(),
+            threads,
             wall_s: wall.elapsed().as_secs_f64(),
             decode_tokens_per_s: metrics.decode_tokens_per_s(),
             token_latency: metrics.tpot.clone(),
@@ -235,7 +253,12 @@ impl Coordinator {
 
 /// Build a deterministic synthetic workload (`n` requests with pseudo-
 /// random prompts over the model vocab).
-pub fn synthetic_workload(n: usize, prompt_len: usize, max_new: usize, vocab: usize) -> Vec<Request> {
+pub fn synthetic_workload(
+    n: usize,
+    prompt_len: usize,
+    max_new: usize,
+    vocab: usize,
+) -> Vec<Request> {
     let mut rng = crate::util::Rng::new(0xBEEF);
     (0..n)
         .map(|i| Request {
@@ -269,6 +292,8 @@ mod tests {
         assert_eq!(rep.ttft.len(), 3);
         assert_eq!(rep.token_latency.len(), 3 * 4, "max_new-1 timed steps per request");
         assert!(rep.serving.is_none());
+        assert_eq!(rep.threads, 2, "FCFS report records the dense engine's threads");
+        assert!(rep.render().contains("threads=2"));
     }
 
     #[test]
@@ -292,9 +317,11 @@ mod tests {
                 block_size: 4,
                 num_blocks: 32,
                 max_batch: 3,
+                threads: 2,
             }),
         );
         assert_eq!(rep.requests, 3);
+        assert_eq!(rep.threads, 2, "report must record the effective worker count");
         assert_eq!(rep.generated_tokens, 15);
         assert_eq!(rep.outputs.len(), 3);
         let m = rep.serving.as_ref().expect("continuous metrics");

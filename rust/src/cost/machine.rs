@@ -76,6 +76,17 @@ impl MachineSpec {
         (self.mem_capacity_bytes as u64).saturating_sub(reserved_bytes) / block_bytes
     }
 
+    /// Worker-thread count for the SPMD batched decode path: one worker
+    /// per core, capped at the batch width. Workers own whole batch
+    /// rows/sequences, so threads beyond `max_batch` would only spin on
+    /// barriers — and decode is bandwidth-bound, so past the DRAM
+    /// saturation point extra cores buy little anyway (the "memory wall"
+    /// of Figure 10); the batch cap keeps the default honest on small
+    /// workloads. See docs/serving.md for the full sizing discussion.
+    pub fn decode_threads(&self, max_batch: usize) -> usize {
+        self.cores.min(max_batch.max(1)).max(1)
+    }
+
     /// The evaluation platform of §4: AMD Ryzen 9 5900X, 12 cores, AVX2,
     /// 128 GB DDR4-3600 (dual channel).
     pub fn ryzen_5900x() -> Self {
@@ -86,9 +97,24 @@ impl MachineSpec {
             fma_units: 2,
             freq_ghz: 4.5,
             caches: vec![
-                CacheLevel { name: "L1d".into(), size_bytes: 32 << 10, bw_gbps: 900.0, shared: false },
-                CacheLevel { name: "L2".into(), size_bytes: 512 << 10, bw_gbps: 450.0, shared: false },
-                CacheLevel { name: "L3".into(), size_bytes: 64 << 20, bw_gbps: 300.0, shared: true },
+                CacheLevel {
+                    name: "L1d".into(),
+                    size_bytes: 32 << 10,
+                    bw_gbps: 900.0,
+                    shared: false,
+                },
+                CacheLevel {
+                    name: "L2".into(),
+                    size_bytes: 512 << 10,
+                    bw_gbps: 450.0,
+                    shared: false,
+                },
+                CacheLevel {
+                    name: "L3".into(),
+                    size_bytes: 64 << 20,
+                    bw_gbps: 300.0,
+                    shared: true,
+                },
             ],
             // DDR4-3600 dual channel: 57.6 GB/s theoretical; a single Zen3
             // core sustains ~24 GB/s, the socket ~42 GB/s in practice.
@@ -132,8 +158,18 @@ impl MachineSpec {
             fma_units: 2,
             freq_ghz: 3.0,
             caches: vec![
-                CacheLevel { name: "L1d".into(), size_bytes: 32 << 10, bw_gbps: 600.0, shared: false },
-                CacheLevel { name: "L2".into(), size_bytes: 256 << 10, bw_gbps: 300.0, shared: false },
+                CacheLevel {
+                    name: "L1d".into(),
+                    size_bytes: 32 << 10,
+                    bw_gbps: 600.0,
+                    shared: false,
+                },
+                CacheLevel {
+                    name: "L2".into(),
+                    size_bytes: 256 << 10,
+                    bw_gbps: 300.0,
+                    shared: false,
+                },
             ],
             dram_bw_core_gbps: 10.0,
             dram_bw_total_gbps: 25.0,
@@ -177,6 +213,14 @@ mod tests {
         // Over-reservation and degenerate block size are safe.
         assert_eq!(m.kv_block_budget(u64::MAX, block), 0);
         assert_eq!(m.kv_block_budget(0, 0), 0);
+    }
+
+    #[test]
+    fn decode_threads_cap_at_cores_and_batch() {
+        let m = MachineSpec::ryzen_5900x(); // 12 cores
+        assert_eq!(m.decode_threads(4), 4, "batch narrower than the socket");
+        assert_eq!(m.decode_threads(64), 12, "cores bind on wide batches");
+        assert_eq!(m.decode_threads(0), 1, "degenerate batch still gets a worker");
     }
 
     #[test]

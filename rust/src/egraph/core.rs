@@ -99,7 +99,8 @@ impl EGraph {
 
     /// Infer the type an enode would have, from its children's types.
     pub fn node_type(&self, node: &ENode) -> Result<TensorType, crate::ir::InferError> {
-        let tys: Vec<TensorType> = node.children.iter().map(|&c| self.class(c).ty.clone()).collect();
+        let tys: Vec<TensorType> =
+            node.children.iter().map(|&c| self.class(c).ty.clone()).collect();
         let refs: Vec<&TensorType> = tys.iter().collect();
         infer_type(&node.op, &refs)
     }

@@ -32,9 +32,9 @@ fn node_cost(eg: &EGraph, node: &ENode, cost: &CostFn) -> u64 {
     // Output type: the class type of the node's own class is what the
     // extractor uses; for cost purposes infer from the node itself when
     // possible, falling back to the first child's type for leaves.
-    let out = eg
-        .node_type(node)
-        .unwrap_or_else(|_| tys.first().cloned().unwrap_or(TensorType::of(&[], crate::ir::DType::F32)));
+    let out = eg.node_type(node).unwrap_or_else(|_| {
+        tys.first().cloned().unwrap_or(TensorType::of(&[], crate::ir::DType::F32))
+    });
     cost(node, &refs, &out)
 }
 
@@ -116,7 +116,11 @@ pub fn extract_wpmaxsat(eg: &EGraph, roots: &[ClassId], cost: &CostFn) -> Extrac
     for &cid in &class_ids {
         for node in &eg.class(cid).nodes {
             let idx = node_vars.len();
-            node_vars.push(NodeVar { class: cid, node: node.clone(), cost: node_cost(eg, node, cost) });
+            node_vars.push(NodeVar {
+                class: cid,
+                node: node.clone(),
+                cost: node_cost(eg, node, cost),
+            });
             class_nodes[class_index[&cid]].push(idx);
         }
     }
@@ -246,7 +250,9 @@ pub fn extract_wpmaxsat(eg: &EGraph, roots: &[ClassId], cost: &CostFn) -> Extrac
 }
 
 /// Default cost: Roofline weight per node on `machine` (§3.1.1).
-pub fn roofline_cost_fn(machine: &crate::cost::MachineSpec) -> impl Fn(&ENode, &[&TensorType], &TensorType) -> u64 + '_ {
+pub fn roofline_cost_fn(
+    machine: &crate::cost::MachineSpec,
+) -> impl Fn(&ENode, &[&TensorType], &TensorType) -> u64 + '_ {
     move |node, ins, out| crate::cost::enode_cost(&node.op, ins, out, machine).ns
 }
 

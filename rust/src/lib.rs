@@ -30,6 +30,9 @@
 //! * [`runtime`] — PJRT (xla crate) artifact loading and execution.
 //! * [`coordinator`] — the serving layer: request batching, KV cache and
 //!   the multi-core "cores as distributed nodes" decode engine (§4.2).
+//! * [`parallel`] — SPMD execution primitives (spin barrier, static
+//!   partitioning, disjoint-range scratch, single-writer KV handoff)
+//!   shared by the dense and batched decode engines.
 //! * [`serving`] — the paged KV-cache block pool and continuous-batching
 //!   scheduler behind `ServePolicy::Continuous` (docs/serving.md).
 
@@ -41,6 +44,7 @@ pub mod egraph;
 pub mod ir;
 pub mod model;
 pub mod ntt;
+pub mod parallel;
 pub mod pipeline;
 pub mod rewrite;
 pub mod runtime;

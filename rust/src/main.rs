@@ -108,8 +108,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             }
         }
         "serve" => {
-            let threads: usize =
-                opt(&args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(4);
+            let threads_flag: Option<usize> = opt(&args, "--threads").and_then(|v| v.parse().ok());
+            let threads: usize = threads_flag.unwrap_or(4);
             let n_req: usize =
                 opt(&args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(8);
             let max_new: usize =
@@ -129,9 +129,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let max_batch: usize =
                 opt(&args, "--max-batch").and_then(|v| v.parse().ok()).unwrap_or(8);
             let policy = match opt(&args, "--policy").as_deref() {
-                Some("continuous") => ServePolicy::Continuous(
-                    ContinuousConfig::for_machine(&cfg, &machine, max_batch),
-                ),
+                Some("continuous") => {
+                    // Pool and worker count sized from the machine
+                    // memory/core model; an explicit --threads flag
+                    // overrides the machine-derived default (an absent
+                    // flag must not clobber it with the FCFS default).
+                    let mut ccfg = ContinuousConfig::for_machine(&cfg, &machine, max_batch);
+                    if let Some(t) = threads_flag {
+                        ccfg.threads = t;
+                    }
+                    ServePolicy::Continuous(ccfg)
+                }
                 _ => ServePolicy::Fcfs,
             };
             println!("policy: {policy:?}");

@@ -112,6 +112,25 @@ impl Qwen3Config {
         (2 * self.layers * self.kv_heads * self.head_dim) as u64
             * self.dtype.size_bytes() as u64
     }
+
+    /// Widest static partition the dense SPMD decode engine supports:
+    /// the minimum across every dimension `parallel::splits` shards
+    /// (columns of each projection, query heads, KV heads, intermediate
+    /// width, vocab). `kv_heads` binds in practice — every other split
+    /// dimension is a multiple of it. Worker counts beyond this width
+    /// would get empty shards, so engine constructors clamp here.
+    pub fn partition_width(&self) -> usize {
+        let qdim = self.heads * self.head_dim;
+        let kvdim = self.kv_heads * self.head_dim;
+        self.kv_heads
+            .min(self.heads)
+            .min(self.hidden)
+            .min(self.intermediate)
+            .min(self.vocab)
+            .min(qdim)
+            .min(kvdim)
+            .max(1)
+    }
 }
 
 /// Names of the per-layer weight tensors.
@@ -350,6 +369,14 @@ mod tests {
         );
         let tiny = Qwen3Config::tiny();
         assert!(tiny.param_count() < 30_000_000);
+    }
+
+    #[test]
+    fn partition_width_binds_at_kv_heads() {
+        let tiny = Qwen3Config::tiny();
+        assert_eq!(tiny.partition_width(), tiny.kv_heads);
+        let c06 = Qwen3Config::qwen3_0_6b(DType::F16);
+        assert_eq!(c06.partition_width(), 8);
     }
 
     #[test]

@@ -83,6 +83,7 @@ fn ukernel(apan: &[f32], bpan: &[f32], k: usize, c: &mut [f32; MR * NR]) {
 /// Blocked matmul over pre-packed panels, writing rows `[row_lo, row_hi)`
 /// of C. `row_lo`/`row_hi` let the coordinator statically partition the M
 /// dimension across cores ("cores as distributed nodes", §4.2).
+#[allow(clippy::too_many_arguments)]
 pub fn matmul_packed_range(
     apacked: &[f32],
     bpacked: &[f32],
@@ -222,10 +223,73 @@ pub fn matmul_prepacked_into(
     c: &mut [f32],
     scratch: &mut Vec<f32>,
 ) {
-    assert_eq!(x.len(), rows * w.k, "X shape mismatch");
-    assert_eq!(c.len(), rows * w.n, "C shape mismatch");
-    pack_a(x, rows, w.k, scratch);
-    matmul_packed_range(scratch, &w.panels, rows, w.k, w.n, 0, rows, c);
+    matmul_prepacked_rows(x, rows, w, 0, rows, c, scratch);
+}
+
+/// Rows `[row_lo, row_hi)` of `C = X @ W` over a pre-packed `W`, written
+/// into `c_rows` (length `(row_hi - row_lo) * w.n`, i.e. the caller's
+/// own disjoint slice of C) — the static M-partition of the SPMD batched
+/// decode path: each worker packs and computes only its own MR-row
+/// panels, so no shared A-pack pass (and no extra barrier) is needed.
+///
+/// `row_lo` must be MR-aligned (use [`crate::parallel::panel_splits`]);
+/// `row_hi` is either MR-aligned or equal to `rows`. Per-element
+/// arithmetic is the register μkernel over ascending `k`, bit-identical
+/// to [`matmul_prepacked`] for the covered rows at any partitioning.
+pub fn matmul_prepacked_rows(
+    x: &[f32],
+    rows: usize,
+    w: &PackedMat,
+    row_lo: usize,
+    row_hi: usize,
+    c_rows: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
+    let (k, n) = (w.k, w.n);
+    assert!(row_lo <= row_hi && row_hi <= rows, "bad row range");
+    assert_eq!(x.len(), rows * k, "X shape mismatch");
+    assert_eq!(c_rows.len(), (row_hi - row_lo) * n, "C shape mismatch");
+    if row_lo == row_hi {
+        // Empty shard (oversubscribed partition): nothing to compute —
+        // and `row_lo` need not be aligned in this case.
+        return;
+    }
+    assert_eq!(row_lo % MR, 0, "row_lo must be MR-aligned");
+    // Pack this shard's rows into MR-row panels: same layout and zero
+    // padding as the matching slice of `pack_a`'s output.
+    let panels = (row_hi - row_lo).div_ceil(MR);
+    scratch.clear();
+    scratch.reserve(panels * MR * k);
+    for ib in 0..panels {
+        for p in 0..k {
+            for i in 0..MR {
+                let row = row_lo + ib * MR + i;
+                scratch.push(if row < rows { x[row * k + p] } else { 0.0 });
+            }
+        }
+    }
+    let mut acc = [0.0f32; MR * NR];
+    for ib in 0..panels {
+        let apan = &scratch[ib * MR * k..(ib + 1) * MR * k];
+        for jb in 0..n.div_ceil(NR) {
+            let bpan = &w.panels[jb * NR * k..(jb + 1) * NR * k];
+            acc.fill(0.0);
+            ukernel(apan, bpan, k, &mut acc);
+            // Write back the tile (bounds-clipped to the shard).
+            for i in 0..MR {
+                let row = row_lo + ib * MR + i;
+                if row >= row_hi {
+                    break;
+                }
+                for j in 0..NR {
+                    let col = jb * NR + j;
+                    if col < n {
+                        c_rows[(row - row_lo) * n + col] = acc[i * NR + j];
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Physical row of logical position `pos` under a paged block table.
@@ -239,6 +303,7 @@ pub fn paged_row(table: &[u32], block_size: usize, pos: usize) -> usize {
 /// blocks of `block_size` positions) and computes
 /// `scores[p] = dot(q, K[row(p)][head_off..head_off+head_dim]) * scale`.
 /// Identical arithmetic order to the dense row-per-position path.
+#[allow(clippy::too_many_arguments)]
 pub fn attn_scores_paged(
     q: &[f32],
     kstore: &Tensor,
@@ -458,6 +523,38 @@ mod tests {
     }
 
     #[test]
+    fn prepacked_row_ranges_compose_bitwise() {
+        // Any MR-aligned partitioning of the M dimension must reproduce
+        // the full matmul bit-for-bit — the determinism contract of the
+        // multi-threaded batched decode path.
+        let mut rng = Rng::new(77);
+        for &(rows, k, n) in &[(16usize, 48, 40), (10, 33, 17), (3, 24, 96)] {
+            let x = Tensor::randn(&[rows, k], &mut rng, 1.0);
+            let w = Tensor::randn(&[k, n], &mut rng, 1.0);
+            let pm = PackedMat::pack(&w);
+            let mut want = vec![0.0f32; rows * n];
+            matmul_prepacked(&x.data, rows, &pm, &mut want);
+            for parts in [1usize, 2, 3, 5] {
+                let shards = crate::parallel::panel_splits(rows, MR, parts);
+                let mut got = vec![0.0f32; rows * n];
+                let mut scratch = Vec::new();
+                for &(lo, hi) in &shards {
+                    matmul_prepacked_rows(
+                        &x.data,
+                        rows,
+                        &pm,
+                        lo,
+                        hi,
+                        &mut got[lo * n..hi * n],
+                        &mut scratch,
+                    );
+                }
+                assert_eq!(got, want, "({rows},{k},{n}) x {parts} shards diverged");
+            }
+        }
+    }
+
+    #[test]
     fn paged_attention_matches_contiguous() {
         let mut rng = Rng::new(33);
         let (block_size, width, head_dim, head_off) = (4usize, 16usize, 8usize, 8usize);
@@ -479,7 +576,16 @@ mod tests {
             *s = dot(&q, &dense.row(p)[head_off..head_off + head_dim]) * scale;
         }
         let mut got_scores = vec![0.0f32; seq];
-        attn_scores_paged(&q, &paged, &table, block_size, head_off, head_dim, scale, &mut got_scores);
+        attn_scores_paged(
+            &q,
+            &paged,
+            &table,
+            block_size,
+            head_off,
+            head_dim,
+            scale,
+            &mut got_scores,
+        );
         assert_eq!(want_scores, got_scores);
 
         let mut want_ctx = vec![0.0f32; head_dim];
@@ -489,7 +595,15 @@ mod tests {
             }
         }
         let mut got_ctx = vec![0.0f32; head_dim];
-        attn_context_paged(&want_scores, &paged, &table, block_size, head_off, head_dim, &mut got_ctx);
+        attn_context_paged(
+            &want_scores,
+            &paged,
+            &table,
+            block_size,
+            head_off,
+            head_dim,
+            &mut got_ctx,
+        );
         assert_eq!(want_ctx, got_ctx);
     }
 

@@ -1,0 +1,440 @@
+//! SPMD execution primitives shared by the dense decode engine
+//! ([`crate::coordinator::engine`]) and the batched paged-attention
+//! engine ([`crate::serving::batch_engine`]).
+//!
+//! Both engines follow the paper's "multi-core as multi-node" design
+//! (§4.2): a *static* work partition decided at plan time, executed by
+//! persistent worker threads that move together through barrier-
+//! separated phases. No work stealing, no dynamic scheduling — which is
+//! exactly what makes the partition deterministic: every output element
+//! is computed by one statically-known worker with the same arithmetic
+//! (and the same accumulation order) as the single-threaded path, so
+//! thread count never changes results.
+//!
+//! The safety story is concentrated here instead of being scattered
+//! across raw `UnsafeCell` pokes:
+//!
+//! * [`SpinBarrier`] — sense-reversing spin barrier; its Release/Acquire
+//!   pair is the happens-before edge every phase transition relies on.
+//! * [`splits`] / [`panel_splits`] — the deterministic static partition.
+//! * [`SharedVec`] — scratch written by disjoint ranges between barriers.
+//! * [`SharedCell`] — a single value written only while every other
+//!   participant is parked at a barrier (work descriptors).
+//! * [`KvCell`] — single-writer commit window for KV-cache state, with
+//!   the barrier invariant turned into a deterministic `debug_assert`
+//!   panic instead of a silent data race.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Sense-reversing spin barrier: ~100 ns per wait vs several μs for the
+/// mutex/condvar `std::sync::Barrier` (§Perf L3 — a decode step passes
+/// tens of barriers per token, so this matters on small models).
+///
+/// The barrier is *poisonable*: a participant that panics mid-phase
+/// calls [`SpinBarrier::poison`] before unwinding, and every other
+/// participant's `wait` then panics instead of spinning forever on a
+/// straggler that will never arrive. Without this, one panicking worker
+/// turns the whole SPMD region into a silent deadlock (the scope join
+/// blocks on threads parked at the barrier) — with it, the panic
+/// cascades, every thread unwinds, and the original payload propagates.
+pub struct SpinBarrier {
+    n: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+    poisoned: AtomicBool,
+}
+
+impl SpinBarrier {
+    pub fn new(n: usize) -> Self {
+        SpinBarrier {
+            n,
+            count: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    /// Number of participants.
+    pub fn parties(&self) -> usize {
+        self.n
+    }
+
+    /// Mark the barrier dead. Call before unwinding out of an SPMD
+    /// region; all current and future `wait`s will panic.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
+    }
+
+    /// Wait for all participants. Panics if the barrier is (or becomes)
+    /// poisoned — a sibling participant panicked and will never arrive.
+    pub fn wait(&self) {
+        if self.n <= 1 {
+            return;
+        }
+        if self.is_poisoned() {
+            panic!("SpinBarrier poisoned: a sibling SPMD participant panicked");
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+            self.count.store(0, Ordering::Relaxed);
+            self.generation.store(gen.wrapping_add(1), Ordering::Release);
+        } else {
+            // Spin briefly, then yield: on oversubscribed machines (or a
+            // 1-CPU container) pure spinning burns whole scheduler quanta
+            // while the straggler cannot run.
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                if self.is_poisoned() {
+                    panic!("SpinBarrier poisoned: a sibling SPMD participant panicked");
+                }
+                spins += 1;
+                if spins < 512 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+/// Poisons a barrier if the owning scope unwinds: take one at the top of
+/// every SPMD worker body so a panic anywhere in the phased region kills
+/// the whole parallel section loudly (each sibling's next `wait` panics)
+/// instead of deadlocking it. A normal return drops the guard silently.
+pub struct PoisonGuard<'a>(&'a SpinBarrier);
+
+impl<'a> PoisonGuard<'a> {
+    pub fn new(barrier: &'a SpinBarrier) -> Self {
+        PoisonGuard(barrier)
+    }
+}
+
+impl Drop for PoisonGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.poison();
+        }
+    }
+}
+
+/// Contiguous ranges statically assigned to each worker: `n` items split
+/// into `parts` ranges whose sizes differ by at most one, in order. The
+/// partition depends only on `(n, parts)`, never on runtime state — the
+/// determinism contract of every SPMD phase. When `parts > n`, trailing
+/// ranges are empty (callers guard against that with an upper thread
+/// clamp; empty ranges are still safe no-ops).
+pub fn splits(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for p in 0..parts {
+        let sz = base + usize::from(p < rem);
+        out.push((lo, lo + sz));
+        lo += sz;
+    }
+    out
+}
+
+/// [`splits`] over `panel`-aligned groups: `n` rows are divided into
+/// `ceil(n / panel)` panels, the panels are split across `parts`, and
+/// each range is returned in row units (lo `panel`-aligned, hi clipped
+/// to `n`). This is the GEMM partition: register-tiled kernels own whole
+/// MR-row panels, so shard boundaries must not cut through a panel.
+pub fn panel_splits(n: usize, panel: usize, parts: usize) -> Vec<(usize, usize)> {
+    splits(n.div_ceil(panel), parts)
+        .into_iter()
+        .map(|(a, b)| ((a * panel).min(n), (b * panel).min(n)))
+        .collect()
+}
+
+/// Shared mutable scratch written by disjoint ranges from worker threads.
+///
+/// Contract: between two barriers, each element is written through at
+/// most one [`SharedVec::slice_mut`] range, and no element inside any
+/// live mutable range is read (readers use [`SharedVec::read`] on
+/// elements no writer currently owns). The barrier's Release/Acquire
+/// pair publishes one phase's writes to the next phase's readers.
+pub struct SharedVec(UnsafeCell<Vec<f32>>);
+
+// SAFETY: all aliasing is governed by the disjoint-range contract above;
+// the data is plain `f32`.
+unsafe impl Sync for SharedVec {}
+
+impl SharedVec {
+    pub fn new(n: usize) -> Self {
+        SharedVec(UnsafeCell::new(vec![0.0; n]))
+    }
+
+    /// Mutable view of `[lo, hi)`.
+    ///
+    /// # Safety
+    ///
+    /// Between two barriers, callers must hold mutable views of disjoint
+    /// ranges only, and no participant may read elements inside another
+    /// worker's live mutable range.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [f32] {
+        let v: &mut Vec<f32> = unsafe { &mut *self.0.get() };
+        &mut v[lo..hi]
+    }
+
+    /// Shared read of the whole buffer. Elements inside another worker's
+    /// live mutable range must not be touched (phase discipline).
+    pub fn read(&self) -> &[f32] {
+        unsafe { &*self.0.get() }
+    }
+
+    /// Serial overwrite of the whole buffer (single-writer phases only).
+    pub fn write_all(&self, src: &[f32]) {
+        unsafe { (*self.0.get()).copy_from_slice(src) }
+    }
+}
+
+/// A single shared value written only while every other participant is
+/// parked at a barrier — the work descriptor of a persistent-worker
+/// loop (the controller publishes the next step's inputs, then releases
+/// the workers through the barrier).
+pub struct SharedCell<T>(UnsafeCell<T>);
+
+// SAFETY: access is serialized by the caller's barrier protocol.
+unsafe impl<T: Send + Sync> Sync for SharedCell<T> {}
+
+impl<T> SharedCell<T> {
+    pub fn new(v: T) -> Self {
+        SharedCell(UnsafeCell::new(v))
+    }
+
+    /// Exclusive view.
+    ///
+    /// # Safety
+    ///
+    /// No other thread may be reading or writing — every other
+    /// participant must be parked at a barrier.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self) -> &mut T {
+        unsafe { &mut *self.0.get() }
+    }
+
+    /// Shared view.
+    ///
+    /// # Safety
+    ///
+    /// No concurrent writer; every write must be separated from this
+    /// read by a barrier.
+    pub unsafe fn read(&self) -> &T {
+        unsafe { &*self.0.get() }
+    }
+}
+
+/// Single-writer handoff cell for KV-cache commits.
+///
+/// Invariant (checked with `debug_assert!`s): only worker 0 calls
+/// [`KvCell::commit`], and every `commit` is separated from every
+/// [`KvCell::read`] by a barrier — commit-phase writes happen-before
+/// read-phase reads via the barrier's Release/Acquire pair. The
+/// `writers` counter turns a violated invariant into a deterministic
+/// debug panic instead of a silent data race; block tables in the paged
+/// serving path make the aliasing rules stricter, so the contract is
+/// enforced here rather than at each call site.
+pub struct KvCell<'a, T> {
+    kv: UnsafeCell<&'a mut T>,
+    writers: AtomicUsize,
+}
+
+// SAFETY: the single-writer/barrier protocol above serializes all access;
+// `T: Send + Sync` keeps the underlying data sound to touch from any of
+// the scoped worker threads.
+unsafe impl<T: Send + Sync> Sync for KvCell<'_, T> {}
+
+impl<'a, T> KvCell<'a, T> {
+    pub fn new(kv: &'a mut T) -> Self {
+        KvCell { kv: UnsafeCell::new(kv), writers: AtomicUsize::new(0) }
+    }
+
+    /// Exclusive commit window. SAFETY: caller must be the single writer
+    /// (worker 0) inside a barrier-separated phase.
+    pub fn commit(&self, worker: usize, f: impl FnOnce(&mut T)) {
+        debug_assert_eq!(worker, 0, "only worker 0 may commit the KV cache");
+        let prev = self.writers.fetch_add(1, Ordering::AcqRel);
+        debug_assert_eq!(prev, 0, "concurrent KV commit: barrier invariant violated");
+        let _ = prev;
+        // SAFETY: single writer by contract (debug-checked above); all
+        // readers are on the other side of a barrier.
+        f(unsafe { &mut **self.kv.get() });
+        self.writers.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Shared read. SAFETY: must be barrier-separated from any commit.
+    pub fn read(&self) -> &T {
+        debug_assert_eq!(
+            self.writers.load(Ordering::Acquire),
+            0,
+            "KV read overlapping a commit: barrier invariant violated"
+        );
+        // SAFETY: no writer is active (debug-checked above); the commit
+        // phase happened-before this read via the barrier.
+        unsafe { &**self.kv.get() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_cover_and_balance() {
+        for &(n, parts) in &[(10usize, 3usize), (7, 7), (16, 4), (5, 8), (0, 3), (100, 12)] {
+            let s = splits(n, parts);
+            assert_eq!(s.len(), parts);
+            assert_eq!(s[0].0, 0);
+            assert_eq!(s[parts - 1].1, n);
+            let mut total = 0;
+            for (i, &(lo, hi)) in s.iter().enumerate() {
+                assert!(lo <= hi);
+                total += hi - lo;
+                if i > 0 {
+                    assert_eq!(s[i - 1].1, lo, "ranges must be contiguous");
+                }
+            }
+            assert_eq!(total, n);
+            let max = s.iter().map(|(lo, hi)| hi - lo).max().unwrap();
+            let min = s.iter().map(|(lo, hi)| hi - lo).min().unwrap();
+            assert!(max - min <= 1, "shards must differ by at most one");
+        }
+    }
+
+    #[test]
+    fn splits_deterministic() {
+        assert_eq!(splits(10, 3), splits(10, 3));
+        assert_eq!(splits(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+    }
+
+    #[test]
+    fn panel_splits_align_and_cover() {
+        // 10 rows, panel 4 -> 3 panels; 2 parts -> panels [0,2) and [2,3).
+        assert_eq!(panel_splits(10, 4, 2), vec![(0, 8), (8, 10)]);
+        // Every lo is panel-aligned; the union covers [0, n).
+        for &(n, panel, parts) in &[(16usize, 4usize, 4usize), (17, 4, 3), (3, 4, 2), (0, 4, 2)] {
+            let s = panel_splits(n, panel, parts);
+            assert_eq!(s.len(), parts);
+            assert_eq!(s.last().unwrap().1, n);
+            for (i, &(lo, hi)) in s.iter().enumerate() {
+                assert!(lo <= hi && hi <= n);
+                assert!(lo == n || lo % panel == 0, "lo must be panel-aligned");
+                if i > 0 {
+                    assert_eq!(s[i - 1].1, lo);
+                }
+            }
+        }
+        // Oversubscribed: trailing shards are empty, never out of range.
+        let s = panel_splits(3, 4, 8);
+        assert_eq!(s[0], (0, 3));
+        assert!(s[1..].iter().all(|&(lo, hi)| lo == hi));
+    }
+
+    #[test]
+    fn barrier_separates_phases() {
+        // Each of 4 threads bumps a counter, waits, and checks that all
+        // bumps of the phase are visible — 50 rounds.
+        let t = 4usize;
+        let rounds = 50usize;
+        let barrier = SpinBarrier::new(t);
+        assert_eq!(barrier.parties(), t);
+        let counter = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..t {
+                s.spawn(|| {
+                    for r in 1..=rounds {
+                        counter.fetch_add(1, Ordering::AcqRel);
+                        barrier.wait();
+                        assert_eq!(counter.load(Ordering::Acquire), r * t);
+                        barrier.wait();
+                    }
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Acquire), rounds * t);
+    }
+
+    #[test]
+    fn shared_vec_disjoint_writes_compose() {
+        let n = 64usize;
+        let t = 4usize;
+        let v = SharedVec::new(n);
+        let barrier = SpinBarrier::new(t);
+        std::thread::scope(|s| {
+            for wi in 0..t {
+                let (v, barrier) = (&v, &barrier);
+                s.spawn(move || {
+                    let (lo, hi) = splits(n, t)[wi];
+                    // SAFETY: ranges from `splits` are disjoint.
+                    let seg = unsafe { v.slice_mut(lo, hi) };
+                    for (off, x) in seg.iter_mut().enumerate() {
+                        *x = (lo + off) as f32;
+                    }
+                    barrier.wait();
+                    // Post-barrier, every worker sees the full buffer.
+                    let all = v.read();
+                    for (i, &x) in all.iter().enumerate() {
+                        assert_eq!(x, i as f32);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn poisoned_barrier_panics_instead_of_hanging() {
+        let barrier = SpinBarrier::new(2);
+        std::thread::scope(|s| {
+            let waiter = s.spawn(|| {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| barrier.wait())).is_err()
+            });
+            // The sibling "panics" instead of arriving: poison.
+            barrier.poison();
+            assert!(waiter.join().unwrap(), "waiter must panic, not spin forever");
+        });
+        assert!(barrier.is_poisoned());
+        // Later waits die immediately too.
+        assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| barrier.wait())).is_err());
+    }
+
+    #[test]
+    fn poison_guard_poisons_on_unwind_only() {
+        let b = SpinBarrier::new(2);
+        {
+            let _g = PoisonGuard::new(&b);
+        }
+        assert!(!b.is_poisoned(), "clean drop must not poison");
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = PoisonGuard::new(&b);
+            panic!("boom");
+        }));
+        assert!(b.is_poisoned(), "unwinding past the guard must poison");
+    }
+
+    #[test]
+    fn kv_cell_commit_then_read() {
+        let mut state = vec![0usize; 4];
+        let cell = KvCell::new(&mut state);
+        cell.commit(0, |s| s[2] = 7);
+        assert_eq!(cell.read()[2], 7);
+    }
+
+    #[test]
+    fn shared_cell_roundtrip() {
+        let c = SharedCell::new(vec![1usize, 2]);
+        // SAFETY: single-threaded test, no concurrent access.
+        unsafe {
+            c.get_mut().push(3);
+            assert_eq!(c.read().as_slice(), &[1, 2, 3]);
+        }
+    }
+}

@@ -151,7 +151,8 @@ fn try_fold_two(nodes: &mut Vec<Node>, idx: usize, node: &Node) -> bool {
             let ty = nodes[src.index()].ty.clone();
             let mut out_ty = ty.clone();
             out_ty.shape = ty.shape.permute(&composed);
-            nodes[idx] = Node { op: Op::Transpose { perm: composed }, inputs: vec![src], ty: out_ty };
+            nodes[idx] =
+                Node { op: Op::Transpose { perm: composed }, inputs: vec![src], ty: out_ty };
             return true;
         }
     }
@@ -272,7 +273,8 @@ mod tests {
         let (rt, lt) = (count_transposes(&right), count_transposes(&left));
         assert!(
             rt > lt,
-            "right-first must leave more transposes (got right={rt}, left={lt})\nright:\n{}\nleft:\n{}",
+            "right-first must leave more transposes (got right={rt}, left={lt})\n\
+             right:\n{}\nleft:\n{}",
             right.dump(),
             left.dump()
         );

@@ -246,8 +246,11 @@ mod tests {
         )
         .add_to(&mut eg);
         let up = Tree::node(Op::Unpack { axes: vec![0, 1] }, vec![Tree::class(pa)]).add_to(&mut eg);
-        let pup = Tree::node(Op::Pack { lanes: vec![16, 16], axes: vec![0, 1] }, vec![Tree::class(up)])
-            .add_to(&mut eg);
+        let pup = Tree::node(
+            Op::Pack { lanes: vec![16, 16], axes: vec![0, 1] },
+            vec![Tree::class(up)],
+        )
+        .add_to(&mut eg);
         let rules = pack_rules(&PackOptions::default());
         let refs: Vec<&dyn Rewrite> = rules.iter().map(|r| r.as_ref()).collect();
         Runner::new(&mut eg).run(&refs);

@@ -129,8 +129,12 @@ mod tests {
                     solver.add_clause(&[Lit::neg(v)]);
                 }
             }
-            let sum: u64 =
-                weights.iter().enumerate().filter(|(i, _)| (forced >> i) & 1 == 1).map(|(_, &w)| w).sum();
+            let sum: u64 = weights
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| (forced >> i) & 1 == 1)
+                .map(|(_, &w)| w)
+                .sum();
             let expect_sat = sum <= bound;
             let got = solver.solve();
             assert_eq!(

@@ -222,9 +222,24 @@ pub fn subgraph_to_tileops(g: &Graph, nodes: &[NodeId]) -> Vec<TileOp> {
                     name: format!("matmul_{}", id.0),
                     loops,
                     buffers: vec![
-                        BufferAccess { buffer: bufname(a), write: false, dims: vec![m, k], elem_bytes: elem },
-                        BufferAccess { buffer: bufname(b), write: false, dims: vec![k, n], elem_bytes: elem },
-                        BufferAccess { buffer: bufname(id), write: true, dims: my_out.clone(), elem_bytes: elem },
+                        BufferAccess {
+                            buffer: bufname(a),
+                            write: false,
+                            dims: vec![m, k],
+                            elem_bytes: elem,
+                        },
+                        BufferAccess {
+                            buffer: bufname(b),
+                            write: false,
+                            dims: vec![k, n],
+                            elem_bytes: elem,
+                        },
+                        BufferAccess {
+                            buffer: bufname(id),
+                            write: true,
+                            dims: my_out.clone(),
+                            elem_bytes: elem,
+                        },
                     ],
                     flops_per_point: 2,
                 });

@@ -1,6 +1,7 @@
-//! Batched decode over paged KV storage.
+//! Batched decode over paged KV storage, executed SPMD by persistent
+//! worker threads.
 //!
-//! One [`BatchEngine::step`] advances *every* scheduled sequence by one
+//! One [`BatchStepper::step`] advances *every* scheduled sequence by one
 //! position — iteration-level batching. The win over per-request decode
 //! is in the weight stream: decode is memory-bound on weights, and the
 //! FCFS path re-reads every projection matrix once per sequence per
@@ -8,18 +9,36 @@
 //! over weights pre-packed at engine build ([`PackedMat`]), so the
 //! weight stream is paid once per iteration instead of `B` times.
 //!
+//! **Threading.** [`BatchEngine::run`] opens one `thread::scope` per
+//! serve run — not per step — and parks `threads - 1` persistent workers
+//! on the shared [`SpinBarrier`]. Each step, the controller publishes
+//! the slot list, releases the workers through the barrier, and joins
+//! them as worker 0. The step body is barrier-separated SPMD phases with
+//! a *static, deterministic* partition ([`crate::parallel::splits`] /
+//! [`panel_splits`]): per-sequence work (RMSNorm, RoPE, paged attention)
+//! shards by batch row, the packed GEMMs shard by MR-row panel
+//! ([`matmul_prepacked_rows`]), and the KV commit stays a single-writer
+//! phase behind [`KvCell`] exactly like the dense engine. Every output
+//! element is computed by one statically-known worker with the same
+//! accumulation order as the single-threaded path, so outputs are
+//! token-identical to the dense FCFS oracle at **any** thread count
+//! (`rust/tests/serving.rs` pins this down for 1, 2 and 4).
+//!
 //! K/V rows are gathered through per-sequence block tables
 //! ([`attn_scores_paged`] / [`attn_context_paged`]) instead of
-//! contiguous rows. Every kernel shares its accumulation order with the
-//! dense single-sequence engine, so a batched continuous run produces
-//! outputs identical to the FCFS oracle (the differential test in
-//! `rust/tests/serving.rs` pins this down).
+//! contiguous rows; every kernel shares its accumulation order with the
+//! dense single-sequence engine.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::coordinator::argmax;
-use crate::model::Qwen3Weights;
+use crate::model::{Qwen3Config, Qwen3Weights};
 use crate::ntt::{
-    add_inplace, attn_context_paged, attn_scores_paged, matmul_prepacked_into, mul_inplace,
-    paged_row, rmsnorm, rope_inplace, silu_inplace, softmax_inplace, PackedMat, Tensor,
+    add_inplace, attn_context_paged, attn_scores_paged, matmul_prepacked_rows, mul_inplace,
+    paged_row, rmsnorm, rope_inplace, silu_inplace, softmax_inplace, PackedMat, Tensor, MR,
+};
+use crate::parallel::{
+    panel_splits, splits, KvCell, PoisonGuard, SharedCell, SharedVec, SpinBarrier,
 };
 
 /// Paged KV arena: per layer, `num_blocks * block_size` rows of width
@@ -70,14 +89,360 @@ pub struct StepSlot<'t> {
     pub sample: bool,
 }
 
+/// Owned copy of a [`StepSlot`] (block table cloned), published to the
+/// persistent workers so they never borrow the scheduler's state.
+struct OwnedSlot {
+    token: usize,
+    pos: usize,
+    table: Vec<u32>,
+    sample: bool,
+}
+
+/// Shared per-run state of one SPMD serve run: the published work
+/// descriptor plus the activation buffers, all sized at `max_batch`
+/// capacity and written by disjoint row ranges between barriers.
+struct StepState {
+    slots: SharedCell<Vec<OwnedSlot>>,
+    x: SharedVec,
+    xn: SharedVec,
+    q: SharedVec,
+    kvec: SharedVec,
+    vvec: SharedVec,
+    ctx: SharedVec,
+    attn: SharedVec,
+    gate: SharedVec,
+    up: SharedVec,
+    down: SharedVec,
+    logits: SharedVec,
+}
+
+impl StepState {
+    fn new(cfg: &Qwen3Config, max_batch: usize) -> Self {
+        let (h, hd) = (cfg.hidden, cfg.head_dim);
+        let (qdim, kvdim) = (cfg.heads * hd, cfg.kv_heads * hd);
+        StepState {
+            slots: SharedCell::new(Vec::new()),
+            x: SharedVec::new(max_batch * h),
+            xn: SharedVec::new(max_batch * h),
+            q: SharedVec::new(max_batch * qdim),
+            kvec: SharedVec::new(max_batch * kvdim),
+            vvec: SharedVec::new(max_batch * kvdim),
+            ctx: SharedVec::new(max_batch * qdim),
+            attn: SharedVec::new(max_batch * h),
+            gate: SharedVec::new(max_batch * cfg.intermediate),
+            up: SharedVec::new(max_batch * cfg.intermediate),
+            down: SharedVec::new(max_batch * h),
+            logits: SharedVec::new(max_batch * cfg.vocab),
+        }
+    }
+}
+
+const CMD_STEP: usize = 0;
+const CMD_EXIT: usize = 1;
+
+/// One barrier-separated SPMD step, executed by all `t` participants
+/// (the controller as worker 0, plus the parked workers released into
+/// it). Per-sequence phases shard batch rows with `splits`; GEMM phases
+/// shard MR-row panels with `panel_splits`. Both partitions depend only
+/// on `(batch, t)`, and every element keeps the single-threaded
+/// accumulation order, so results are identical at any thread count.
+#[allow(clippy::too_many_arguments)]
+fn spmd_step(
+    wi: usize,
+    t: usize,
+    weights: &Qwen3Weights,
+    packed: &[PackedLayer],
+    packed_lm_head: &PackedMat,
+    kv_cell: &KvCell<'_, PagedKv>,
+    st: &StepState,
+    barrier: &SpinBarrier,
+    scratch: &mut Vec<f32>,
+) {
+    // SAFETY: the controller wrote this step's slots before releasing
+    // the workers through the barrier, and rewrites them only after the
+    // final barrier below has parked everyone again.
+    let slots: &[OwnedSlot] = unsafe { st.slots.read() };
+    let b = slots.len();
+    let cfg = &weights.cfg;
+    let h = cfg.hidden;
+    let hd = cfg.head_dim;
+    let heads = cfg.heads;
+    let kvh = cfg.kv_heads;
+    let qdim = heads * hd;
+    let kvdim = kvh * hd;
+    let inter = cfg.intermediate;
+    let vocab = cfg.vocab;
+    let group = heads / kvh;
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    let bs = kv_cell.read().block_size;
+    // This worker's static shards.
+    let (r0, r1) = splits(b, t)[wi];
+    let (p0, p1) = panel_splits(b, MR, t)[wi];
+
+    // Phase 0: embedding gather, per-sequence shard.
+    for i in r0..r1 {
+        unsafe { st.x.slice_mut(i * h, (i + 1) * h) }
+            .copy_from_slice(weights.embedding.row(slots[i].token % vocab));
+    }
+    barrier.wait();
+
+    for l in 0..cfg.layers {
+        let w = &weights.layers[l];
+        let pw = &packed[l];
+        // Phase 1: attention RMSNorm, per-sequence shard.
+        for i in r0..r1 {
+            unsafe {
+                rmsnorm(
+                    &st.x.read()[i * h..(i + 1) * h],
+                    &w.attn_norm.data,
+                    cfg.rms_eps,
+                    st.xn.slice_mut(i * h, (i + 1) * h),
+                );
+            }
+        }
+        barrier.wait();
+        // Phase 2: batched QKV projections, MR-panel shard — each worker
+        // streams the packed weights once for its rows of the batch.
+        unsafe {
+            let xn = &st.xn.read()[..b * h];
+            let qs = st.q.slice_mut(p0 * qdim, p1 * qdim);
+            matmul_prepacked_rows(xn, b, &pw.wq, p0, p1, qs, scratch);
+            let ks = st.kvec.slice_mut(p0 * kvdim, p1 * kvdim);
+            matmul_prepacked_rows(xn, b, &pw.wk, p0, p1, ks, scratch);
+            let vs = st.vvec.slice_mut(p0 * kvdim, p1 * kvdim);
+            matmul_prepacked_rows(xn, b, &pw.wv, p0, p1, vs, scratch);
+        }
+        barrier.wait();
+        // Phase 3: RoPE, per-sequence shard (positions differ per row).
+        for i in r0..r1 {
+            let pos = slots[i].pos;
+            for head in 0..heads {
+                let o = i * qdim + head * hd;
+                unsafe { rope_inplace(st.q.slice_mut(o, o + hd), pos, cfg.rope_theta) };
+            }
+            for head in 0..kvh {
+                let o = i * kvdim + head * hd;
+                unsafe { rope_inplace(st.kvec.slice_mut(o, o + hd), pos, cfg.rope_theta) };
+            }
+        }
+        barrier.wait();
+        // Phase 4 (serial): commit every slot's K/V row through its
+        // block table. Distinct slots never alias (a frontier position
+        // always lives in a privately-held tail block), but the commit
+        // stays a single-writer KvCell window so the invariant is
+        // enforced, not assumed.
+        if wi == 0 {
+            kv_cell.commit(wi, |kv| {
+                let kvec = st.kvec.read();
+                let vvec = st.vvec.read();
+                for (i, s) in slots.iter().enumerate() {
+                    let row = paged_row(&s.table, bs, s.pos);
+                    kv.k[l].row_mut(row).copy_from_slice(&kvec[i * kvdim..(i + 1) * kvdim]);
+                    kv.v[l].row_mut(row).copy_from_slice(&vvec[i * kvdim..(i + 1) * kvdim]);
+                }
+            });
+        }
+        barrier.wait();
+        // Phase 5: paged GQA attention, per-sequence shard.
+        let kv = kv_cell.read();
+        for i in r0..r1 {
+            let s = &slots[i];
+            let seq = s.pos + 1;
+            let q = st.q.read();
+            let ctx_row = unsafe { st.ctx.slice_mut(i * qdim, (i + 1) * qdim) };
+            let mut scores = vec![0.0f32; seq];
+            for head in 0..heads {
+                let kvhead = head / group;
+                let qo = i * qdim + head * hd;
+                attn_scores_paged(
+                    &q[qo..qo + hd],
+                    &kv.k[l],
+                    &s.table,
+                    bs,
+                    kvhead * hd,
+                    hd,
+                    inv_sqrt,
+                    &mut scores,
+                );
+                softmax_inplace(&mut scores);
+                attn_context_paged(
+                    &scores,
+                    &kv.v[l],
+                    &s.table,
+                    bs,
+                    kvhead * hd,
+                    hd,
+                    &mut ctx_row[head * hd..(head + 1) * hd],
+                );
+            }
+        }
+        barrier.wait();
+        // Phase 6: output projection, MR-panel shard.
+        unsafe {
+            let ctx = &st.ctx.read()[..b * qdim];
+            let os = st.attn.slice_mut(p0 * h, p1 * h);
+            matmul_prepacked_rows(ctx, b, &pw.wo, p0, p1, os, scratch);
+        }
+        barrier.wait();
+        // Phase 7: residual + MLP RMSNorm, per-sequence shard.
+        for i in r0..r1 {
+            unsafe {
+                add_inplace(
+                    st.x.slice_mut(i * h, (i + 1) * h),
+                    &st.attn.read()[i * h..(i + 1) * h],
+                );
+                rmsnorm(
+                    &st.x.read()[i * h..(i + 1) * h],
+                    &w.mlp_norm.data,
+                    cfg.rms_eps,
+                    st.xn.slice_mut(i * h, (i + 1) * h),
+                );
+            }
+        }
+        barrier.wait();
+        // Phase 8: SwiGLU gate/up, MR-panel shard (the elementwise tail
+        // runs on the same rows this worker just computed).
+        unsafe {
+            let xn = &st.xn.read()[..b * h];
+            let gs = st.gate.slice_mut(p0 * inter, p1 * inter);
+            matmul_prepacked_rows(xn, b, &pw.w_gate, p0, p1, gs, scratch);
+            let us = st.up.slice_mut(p0 * inter, p1 * inter);
+            matmul_prepacked_rows(xn, b, &pw.w_up, p0, p1, us, scratch);
+            let g = st.gate.slice_mut(p0 * inter, p1 * inter);
+            silu_inplace(g);
+            mul_inplace(g, &st.up.read()[p0 * inter..p1 * inter]);
+        }
+        barrier.wait();
+        // Phase 9: down projection, MR-panel shard.
+        unsafe {
+            let gate = &st.gate.read()[..b * inter];
+            let ds = st.down.slice_mut(p0 * h, p1 * h);
+            matmul_prepacked_rows(gate, b, &pw.w_down, p0, p1, ds, scratch);
+        }
+        barrier.wait();
+        // Phase 10: residual, per-sequence shard.
+        for i in r0..r1 {
+            unsafe {
+                add_inplace(
+                    st.x.slice_mut(i * h, (i + 1) * h),
+                    &st.down.read()[i * h..(i + 1) * h],
+                );
+            }
+        }
+        barrier.wait();
+    }
+    // Final norm (per-sequence shard) + LM head (MR-panel shard).
+    for i in r0..r1 {
+        unsafe {
+            rmsnorm(
+                &st.x.read()[i * h..(i + 1) * h],
+                &weights.final_norm.data,
+                cfg.rms_eps,
+                st.xn.slice_mut(i * h, (i + 1) * h),
+            );
+        }
+    }
+    barrier.wait();
+    unsafe {
+        let xn = &st.xn.read()[..b * h];
+        let ls = st.logits.slice_mut(p0 * vocab, p1 * vocab);
+        matmul_prepacked_rows(xn, b, packed_lm_head, p0, p1, ls, scratch);
+    }
+    // Final barrier: publishes every logits shard to the controller and
+    // parks the workers for the next step.
+    barrier.wait();
+}
+
 /// The batched paged-attention decode engine.
 pub struct BatchEngine<'w> {
     pub weights: &'w Qwen3Weights,
     packed: Vec<PackedLayer>,
     packed_lm_head: PackedMat,
     pub kv: PagedKv,
-    /// Reused A-pack scratch for the per-iteration GEMMs.
+}
+
+/// Controller handle of a live SPMD serve run (see [`BatchEngine::run`]):
+/// issues steps to the parked persistent workers and participates as
+/// worker 0.
+pub struct BatchStepper<'a, 'kv> {
+    weights: &'a Qwen3Weights,
+    packed: &'a [PackedLayer],
+    packed_lm_head: &'a PackedMat,
+    kv_cell: &'a KvCell<'kv, PagedKv>,
+    st: &'a StepState,
+    barrier: &'a SpinBarrier,
+    threads: usize,
+    max_batch: usize,
     scratch: Vec<f32>,
+}
+
+impl BatchStepper<'_, '_> {
+    /// Effective worker count of this run (after the batch-width clamp).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Advance every slot one position; returns the argmax token for
+    /// slots with `sample = true`.
+    pub fn step(&mut self, slots: &[StepSlot]) -> Vec<Option<usize>> {
+        self.step_logits(slots, false).0
+    }
+
+    /// As [`BatchStepper::step`]; with `keep_logits` the `[B * vocab]`
+    /// logits buffer of the iteration is returned too (white-box tests).
+    pub fn step_logits(
+        &mut self,
+        slots: &[StepSlot],
+        keep_logits: bool,
+    ) -> (Vec<Option<usize>>, Vec<f32>) {
+        let b = slots.len();
+        assert!(b <= self.max_batch, "batch {b} exceeds run capacity {}", self.max_batch);
+        if b == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        debug_assert!(
+            {
+                let bs = self.kv_cell.read().block_size;
+                slots.iter().all(|s| s.table.len() * bs > s.pos)
+            },
+            "a slot's block table does not cover its position"
+        );
+        // Publish this step's work descriptor. SAFETY: every worker is
+        // parked at the start barrier; the release below hands them a
+        // happens-before view of these writes.
+        unsafe {
+            let owned = self.st.slots.get_mut();
+            owned.clear();
+            owned.extend(slots.iter().map(|s| OwnedSlot {
+                token: s.token,
+                pos: s.pos,
+                table: s.table.to_vec(),
+                sample: s.sample,
+            }));
+        }
+        // Release the workers into the step and join as worker 0. The
+        // final barrier inside `spmd_step` publishes all logits shards.
+        self.barrier.wait();
+        spmd_step(
+            0,
+            self.threads,
+            self.weights,
+            self.packed,
+            self.packed_lm_head,
+            self.kv_cell,
+            self.st,
+            self.barrier,
+            &mut self.scratch,
+        );
+        let vocab = self.weights.cfg.vocab;
+        let logits = self.st.logits.read();
+        let samples = slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s.sample.then(|| argmax(&logits[i * vocab..(i + 1) * vocab])))
+            .collect();
+        (samples, if keep_logits { logits[..b * vocab].to_vec() } else { Vec::new() })
+    }
 }
 
 impl<'w> BatchEngine<'w> {
@@ -102,16 +467,106 @@ impl<'w> BatchEngine<'w> {
             packed,
             packed_lm_head: PackedMat::pack(&weights.lm_head),
             kv,
-            scratch: Vec::new(),
         }
     }
 
+    /// Open one SPMD serve run: spawn `threads - 1` persistent workers
+    /// (one `thread::scope` for the whole run, not per step), hand the
+    /// driver a [`BatchStepper`], and shut the workers down when it
+    /// returns. `threads` is clamped to `[1, max_batch]` — workers own
+    /// whole batch rows, so counts beyond the batch capacity would only
+    /// produce empty shards (the same guard `Qwen3Engine::new` applies
+    /// at the model's partition width).
+    pub fn run<R>(
+        &mut self,
+        threads: usize,
+        max_batch: usize,
+        driver: impl FnOnce(&mut BatchStepper<'_, '_>) -> R,
+    ) -> R {
+        let max_batch = max_batch.max(1);
+        let t = threads.clamp(1, max_batch);
+        let st = StepState::new(&self.weights.cfg, max_batch);
+        let barrier = SpinBarrier::new(t);
+        let cmd = AtomicUsize::new(CMD_STEP);
+        let weights = self.weights;
+        let packed: &[PackedLayer] = &self.packed;
+        let packed_lm_head = &self.packed_lm_head;
+        let kv_cell = KvCell::new(&mut self.kv);
+        std::thread::scope(|s| {
+            for wi in 1..t {
+                let (st, barrier, cmd, kv_cell) = (&st, &barrier, &cmd, &kv_cell);
+                s.spawn(move || {
+                    // A panicking worker poisons the barrier so the
+                    // controller and its sibling workers unwind instead
+                    // of spinning forever (see SpinBarrier).
+                    let _poison = PoisonGuard::new(barrier);
+                    let mut scratch = Vec::new();
+                    loop {
+                        // Park until the controller publishes the next
+                        // step (or shutdown).
+                        barrier.wait();
+                        if cmd.load(Ordering::Acquire) == CMD_EXIT {
+                            break;
+                        }
+                        spmd_step(
+                            wi,
+                            t,
+                            weights,
+                            packed,
+                            packed_lm_head,
+                            kv_cell,
+                            st,
+                            barrier,
+                            &mut scratch,
+                        );
+                    }
+                });
+            }
+            let mut stepper = BatchStepper {
+                weights,
+                packed,
+                packed_lm_head,
+                kv_cell: &kv_cell,
+                st: &st,
+                barrier: &barrier,
+                threads: t,
+                max_batch,
+                scratch: Vec::new(),
+            };
+            // Workers stay parked between steps; if the driver unwinds
+            // (scheduler panics, test assertions, a panic inside the
+            // controller's own share of a step) they must still be made
+            // to exit, or `thread::scope`'s implicit join would block
+            // forever on parked/stuck workers.
+            let result =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| driver(&mut stepper)));
+            cmd.store(CMD_EXIT, Ordering::Release);
+            match result {
+                Ok(r) => {
+                    // Clean shutdown: release the parked workers so they
+                    // observe CMD_EXIT and break.
+                    barrier.wait();
+                    r
+                }
+                Err(payload) => {
+                    // The driver unwound — workers may be parked at the
+                    // start barrier or stuck at a phase barrier mid-step.
+                    // Poisoning makes every wait panic, so all of them
+                    // unwind instead of deadlocking the scope join; the
+                    // original payload then takes precedence.
+                    barrier.poison();
+                    std::panic::resume_unwind(payload)
+                }
+            }
+        })
+    }
+
     /// Advance every slot one position; returns the argmax token for
-    /// slots with `sample = true`. Also returns the full logits rows
-    /// via `step_logits` for white-box tests.
+    /// slots with `sample = true`. One-shot single-threaded convenience
+    /// wrapper over [`BatchEngine::run`] — serving drives `run` directly
+    /// so the workers persist across steps.
     pub fn step(&mut self, slots: &[StepSlot]) -> Vec<Option<usize>> {
-        let (samples, _) = self.step_logits(slots, false);
-        samples
+        self.step_logits(slots, false).0
     }
 
     /// As [`BatchEngine::step`]; with `keep_logits` the `[B * vocab]`
@@ -121,154 +576,8 @@ impl<'w> BatchEngine<'w> {
         slots: &[StepSlot],
         keep_logits: bool,
     ) -> (Vec<Option<usize>>, Vec<f32>) {
-        let b = slots.len();
-        if b == 0 {
-            return (Vec::new(), Vec::new());
-        }
-        let cfg = self.weights.cfg.clone();
-        let (h, hd, heads, kvh) = (cfg.hidden, cfg.head_dim, cfg.heads, cfg.kv_heads);
-        let (qdim, kvdim, inter, vocab) = (heads * hd, kvh * hd, cfg.intermediate, cfg.vocab);
-        let bs = self.kv.block_size;
-        let group = heads / kvh;
-        let inv_sqrt = 1.0 / (hd as f32).sqrt();
-
-        for s in slots {
-            debug_assert!(
-                s.table.len() * bs > s.pos,
-                "block table does not cover position {}",
-                s.pos
-            );
-        }
-
-        // Residual stream and scratch, one row per sequence.
-        let mut x = vec![0.0f32; b * h];
-        for (i, s) in slots.iter().enumerate() {
-            x[i * h..(i + 1) * h]
-                .copy_from_slice(self.weights.embedding.row(s.token % vocab));
-        }
-        let mut xn = vec![0.0f32; b * h];
-        let mut q = vec![0.0f32; b * qdim];
-        let mut kvec = vec![0.0f32; b * kvdim];
-        let mut vvec = vec![0.0f32; b * kvdim];
-        let mut ctx = vec![0.0f32; b * qdim];
-        let mut attn = vec![0.0f32; b * h];
-        let mut gate = vec![0.0f32; b * inter];
-        let mut up = vec![0.0f32; b * inter];
-        let mut down = vec![0.0f32; b * h];
-        let mut logits = vec![0.0f32; b * vocab];
-
-        for l in 0..cfg.layers {
-            let w = &self.weights.layers[l];
-            let pw = &self.packed[l];
-            // Attention RMSNorm, per row.
-            for i in 0..b {
-                rmsnorm(
-                    &x[i * h..(i + 1) * h],
-                    &w.attn_norm.data,
-                    cfg.rms_eps,
-                    &mut xn[i * h..(i + 1) * h],
-                );
-            }
-            // Batched QKV projections: the weight stream is read once
-            // for the whole batch.
-            matmul_prepacked_into(&xn, b, &pw.wq, &mut q, &mut self.scratch);
-            matmul_prepacked_into(&xn, b, &pw.wk, &mut kvec, &mut self.scratch);
-            matmul_prepacked_into(&xn, b, &pw.wv, &mut vvec, &mut self.scratch);
-            // RoPE, per row with that row's position.
-            for (i, s) in slots.iter().enumerate() {
-                for head in 0..heads {
-                    let o = i * qdim + head * hd;
-                    rope_inplace(&mut q[o..o + hd], s.pos, cfg.rope_theta);
-                }
-                for head in 0..kvh {
-                    let o = i * kvdim + head * hd;
-                    rope_inplace(&mut kvec[o..o + hd], s.pos, cfg.rope_theta);
-                }
-            }
-            // Commit this position's K/V through the block table.
-            for (i, s) in slots.iter().enumerate() {
-                let row = paged_row(s.table, bs, s.pos);
-                self.kv.k[l].row_mut(row).copy_from_slice(&kvec[i * kvdim..(i + 1) * kvdim]);
-                self.kv.v[l].row_mut(row).copy_from_slice(&vvec[i * kvdim..(i + 1) * kvdim]);
-            }
-            // Paged GQA attention, per sequence per query head.
-            for (i, s) in slots.iter().enumerate() {
-                let seq = s.pos + 1;
-                let mut scores = vec![0.0f32; seq];
-                for head in 0..heads {
-                    let kvhead = head / group;
-                    let qo = i * qdim + head * hd;
-                    attn_scores_paged(
-                        &q[qo..qo + hd],
-                        &self.kv.k[l],
-                        s.table,
-                        bs,
-                        kvhead * hd,
-                        hd,
-                        inv_sqrt,
-                        &mut scores,
-                    );
-                    softmax_inplace(&mut scores);
-                    attn_context_paged(
-                        &scores,
-                        &self.kv.v[l],
-                        s.table,
-                        bs,
-                        kvhead * hd,
-                        hd,
-                        &mut ctx[qo..qo + hd],
-                    );
-                }
-            }
-            // Output projection + residual.
-            matmul_prepacked_into(&ctx, b, &pw.wo, &mut attn, &mut self.scratch);
-            for i in 0..b {
-                add_inplace(&mut x[i * h..(i + 1) * h], &attn[i * h..(i + 1) * h]);
-            }
-            // MLP (SwiGLU), batched.
-            for i in 0..b {
-                rmsnorm(
-                    &x[i * h..(i + 1) * h],
-                    &w.mlp_norm.data,
-                    cfg.rms_eps,
-                    &mut xn[i * h..(i + 1) * h],
-                );
-            }
-            matmul_prepacked_into(&xn, b, &pw.w_gate, &mut gate, &mut self.scratch);
-            matmul_prepacked_into(&xn, b, &pw.w_up, &mut up, &mut self.scratch);
-            for i in 0..b {
-                let g = &mut gate[i * inter..(i + 1) * inter];
-                silu_inplace(g);
-                mul_inplace(g, &up[i * inter..(i + 1) * inter]);
-            }
-            matmul_prepacked_into(&gate, b, &pw.w_down, &mut down, &mut self.scratch);
-            for i in 0..b {
-                add_inplace(&mut x[i * h..(i + 1) * h], &down[i * h..(i + 1) * h]);
-            }
-        }
-        // Final norm + LM head.
-        for i in 0..b {
-            rmsnorm(
-                &x[i * h..(i + 1) * h],
-                &self.weights.final_norm.data,
-                cfg.rms_eps,
-                &mut xn[i * h..(i + 1) * h],
-            );
-        }
-        matmul_prepacked_into(&xn, b, &self.packed_lm_head, &mut logits, &mut self.scratch);
-
-        let samples = slots
-            .iter()
-            .enumerate()
-            .map(|(i, s)| {
-                if s.sample {
-                    Some(argmax(&logits[i * vocab..(i + 1) * vocab]))
-                } else {
-                    None
-                }
-            })
-            .collect();
-        (samples, if keep_logits { logits } else { Vec::new() })
+        let cap = slots.len().max(1);
+        self.run(1, cap, |stepper| stepper.step_logits(slots, keep_logits))
     }
 }
 
@@ -342,10 +651,106 @@ mod tests {
     }
 
     #[test]
+    fn threaded_run_is_bit_identical_to_single_thread() {
+        // The tentpole contract: the persistent-worker SPMD step must
+        // reproduce the single-threaded batched step bit for bit at any
+        // worker count, because the static partition never changes an
+        // element's accumulation order.
+        let cfg = Qwen3Config::tiny();
+        let w1 = Qwen3Weights::random(&cfg, 321);
+        let w2 = Qwen3Weights::random(&cfg, 321);
+        let nseq = 6usize;
+        let steps = 5usize;
+        let tables: Vec<Vec<u32>> =
+            (0..nseq).map(|i| vec![2 * i as u32, 2 * i as u32 + 1]).collect();
+        let run_with = |w: &Qwen3Weights, threads: usize| -> Vec<Vec<f32>> {
+            let mut be = BatchEngine::new(w, 16, 4);
+            be.run(threads, nseq, |stepper| {
+                (0..steps)
+                    .map(|pos| {
+                        let slots: Vec<StepSlot> = (0..nseq)
+                            .map(|i| StepSlot {
+                                token: (i * 31 + pos * 7) % cfg.vocab,
+                                pos,
+                                table: &tables[i],
+                                sample: true,
+                            })
+                            .collect();
+                        stepper.step_logits(&slots, true).1
+                    })
+                    .collect()
+            })
+        };
+        let want = run_with(&w1, 1);
+        for t in [2usize, 4, 6] {
+            let got = run_with(&w2, t);
+            assert_eq!(want, got, "thread count {t} changed batched logits");
+        }
+    }
+
+    #[test]
+    fn persistent_workers_survive_varying_batches() {
+        // One run, four steps with batch sizes 1 -> 2 -> 2 -> 1, driven
+        // with an oversubscribed thread request (clamped to max_batch).
+        let cfg = Qwen3Config::tiny();
+        let w_ref = Qwen3Weights::random(&cfg, 9);
+        let w_thr = Qwen3Weights::random(&cfg, 9);
+        let t1: Vec<u32> = vec![0, 1];
+        let t2: Vec<u32> = vec![2, 3];
+        let script: Vec<Vec<(usize, usize, &[u32])>> = vec![
+            vec![(11, 0, &t1)],
+            vec![(22, 1, &t1), (500, 0, &t2)],
+            vec![(33, 2, &t1), (600, 1, &t2)],
+            vec![(700, 2, &t2)],
+        ];
+        let mut reference = BatchEngine::new(&w_ref, 8, 4);
+        let mut want = Vec::new();
+        for step in &script {
+            let slots: Vec<StepSlot> = step
+                .iter()
+                .map(|&(token, pos, table)| StepSlot { token, pos, table, sample: true })
+                .collect();
+            want.push(reference.step_logits(&slots, true).1);
+        }
+        let mut threaded = BatchEngine::new(&w_thr, 8, 4);
+        let got = threaded.run(64, 2, |stepper| {
+            assert_eq!(stepper.threads(), 2, "threads must clamp at max_batch");
+            script
+                .iter()
+                .map(|step| {
+                    let slots: Vec<StepSlot> = step
+                        .iter()
+                        .map(|&(token, pos, table)| StepSlot { token, pos, table, sample: true })
+                        .collect();
+                    stepper.step_logits(&slots, true).1
+                })
+                .collect::<Vec<_>>()
+        });
+        assert_eq!(want, got, "persistent-worker run diverged from one-shot steps");
+    }
+
+    #[test]
+    fn driver_panic_releases_parked_workers() {
+        // A panic inside the driver must propagate out of run() — the
+        // parked persistent workers are poisoned awake and the scope
+        // join completes instead of deadlocking.
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 3);
+        let mut be = BatchEngine::new(&w, 4, 4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            be.run(2, 2, |_stepper| panic!("driver exploded mid-run"));
+        }));
+        assert!(result.is_err(), "panic must propagate, not hang the scope join");
+    }
+
+    #[test]
     fn empty_batch_is_a_noop() {
         let cfg = Qwen3Config::tiny();
         let w = Qwen3Weights::random(&cfg, 1);
         let mut be = BatchEngine::new(&w, 2, 4);
         assert!(be.step(&[]).is_empty());
+        be.run(2, 4, |stepper| {
+            assert!(stepper.step(&[]).is_empty());
+        });
     }
 }

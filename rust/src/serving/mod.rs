@@ -15,7 +15,9 @@
 //!   queue when the pool is exhausted.
 //! * [`batch_engine`] — the batched decode path: one GEMM per projection
 //!   over pre-packed weights for the whole batch, attention gathered
-//!   through block tables.
+//!   through block tables, executed SPMD by persistent worker threads
+//!   (one `thread::scope` per serve run) with a deterministic static
+//!   partition — thread count never changes outputs.
 //! * [`metrics`] — TTFT/TPOT, queue depth, pool occupancy, preemption
 //!   counters ([`crate::coordinator::ServeReport`] extension).
 //!
@@ -27,7 +29,7 @@ pub mod blocks;
 pub mod metrics;
 pub mod scheduler;
 
-pub use batch_engine::{BatchEngine, PagedKv, StepSlot};
+pub use batch_engine::{BatchEngine, BatchStepper, PagedKv, StepSlot};
 pub use blocks::{BlockPool, BlockTable, KvBlockManager};
 pub use metrics::ServingMetrics;
 pub use scheduler::{ContinuousConfig, ContinuousScheduler, SeqState, Sequence};

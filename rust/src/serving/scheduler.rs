@@ -72,11 +72,16 @@ pub struct ContinuousConfig {
     pub num_blocks: usize,
     /// Maximum sequences batched per iteration.
     pub max_batch: usize,
+    /// SPMD worker threads of the batched decode engine. The engine
+    /// clamps to `[1, max_batch]` (workers own whole batch rows); the
+    /// static partition keeps outputs token-identical at any value.
+    /// Pick from the machine with [`crate::cost::MachineSpec::decode_threads`].
+    pub threads: usize,
 }
 
 impl Default for ContinuousConfig {
     fn default() -> Self {
-        ContinuousConfig { block_size: 16, num_blocks: 512, max_batch: 8 }
+        ContinuousConfig { block_size: 16, num_blocks: 512, max_batch: 8, threads: 1 }
     }
 }
 
@@ -100,6 +105,7 @@ impl ContinuousConfig {
             block_size,
             num_blocks: budget.min(workload_cap).max(1) as usize,
             max_batch,
+            threads: machine.decode_threads(max_batch),
         }
     }
 }
@@ -269,7 +275,8 @@ impl ContinuousScheduler {
             reserved += needed;
             seq.table = shared;
             seq.pos = covered;
-            seq.state = if covered >= seq.prompt_len { SeqState::Decode } else { SeqState::Prefill };
+            seq.state =
+                if covered >= seq.prompt_len { SeqState::Decode } else { SeqState::Prefill };
             seq.admitted_iter = self.iter;
             self.running.push(seq);
         }
@@ -330,6 +337,7 @@ mod tests {
             block_size: 4,
             num_blocks: 8,
             max_batch: 4,
+            threads: 1,
         });
         s.submit(&req(0, vec![1, 2, 3], 2));
         assert!(!s.is_done());
@@ -363,6 +371,7 @@ mod tests {
             block_size: 4,
             num_blocks: 4,
             max_batch: 2,
+            threads: 1,
         });
         for i in 0..3 {
             s.submit(&req(i, vec![i as usize; 5], 4));
@@ -393,6 +402,7 @@ mod tests {
             block_size: 4,
             num_blocks: 2,
             max_batch: 2,
+            threads: 1,
         });
         s.submit(&req(0, vec![1; 20], 4));
         s.schedule();

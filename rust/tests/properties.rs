@@ -121,14 +121,16 @@ fn prop_reshard_cost_properties() {
     for _ in 0..50 {
         let p = Placement::line(2 + rng.below(7));
         let bytes = 1u64 << (10 + rng.below(16));
-        let sbps = [NdSbp::split1(0), NdSbp::split1(1), NdSbp::broadcast(1), NdSbp(vec![Sbp::Partial])];
+        let sbps =
+            [NdSbp::split1(0), NdSbp::split1(1), NdSbp::broadcast(1), NdSbp(vec![Sbp::Partial])];
         for s in &sbps {
             assert_eq!(reshard_cost_bytes(s, s, bytes, &p, &ab), 0.0, "identity not free");
             for t in &sbps {
                 assert!(reshard_cost_bytes(s, t, bytes, &p, &ab) >= 0.0);
             }
         }
-        let p2b = reshard_cost_bytes(&NdSbp(vec![Sbp::Partial]), &NdSbp::broadcast(1), bytes, &p, &ab);
+        let p2b =
+            reshard_cost_bytes(&NdSbp(vec![Sbp::Partial]), &NdSbp::broadcast(1), bytes, &p, &ab);
         let s2b = reshard_cost_bytes(&NdSbp::split1(0), &NdSbp::broadcast(1), bytes, &p, &ab);
         assert!(p2b >= s2b, "all-reduce must dominate all-gather");
     }

@@ -1,9 +1,16 @@
 //! Serving-equivalence tests: the continuous-batching path must be an
 //! invisible optimization — token-identical outputs to the FCFS oracle —
-//! while actually exercising batching, prefix sharing and preemption.
+//! while actually exercising batching, prefix sharing, preemption **and
+//! multi-threaded SPMD decode**.
+//!
+//! Thread counts: every differential test runs the batched engine at the
+//! counts returned by [`thread_counts`] — `{1, 2, 4}` by default, or the
+//! single count pinned by the `PALLAS_TEST_THREADS` env var (the CI
+//! matrix runs the suite once per count, so the determinism guarantee is
+//! enforced on every push at every matrix point).
 
 use nncase_repro::coordinator::{
-    synthetic_workload, Coordinator, Qwen3Engine, Request, ServePolicy,
+    synthetic_workload, Coordinator, Qwen3Engine, Request, ServePolicy, ServeReport,
 };
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
 use nncase_repro::serving::ContinuousConfig;
@@ -14,26 +21,74 @@ fn coordinator(seed: u64, threads: usize) -> (Qwen3Config, Coordinator) {
     (cfg.clone(), Coordinator::new(Qwen3Engine::new(w, threads, 128)))
 }
 
+/// Batched-engine worker counts under test: `PALLAS_TEST_THREADS` pins a
+/// single count (the CI matrix), default is the {1, 2, 4} sweep.
+fn thread_counts() -> Vec<usize> {
+    match std::env::var("PALLAS_TEST_THREADS") {
+        Ok(v) => {
+            let t: usize = v
+                .trim()
+                .parse()
+                .expect("PALLAS_TEST_THREADS must be a positive integer");
+            assert!(t >= 1, "PALLAS_TEST_THREADS must be >= 1");
+            vec![t]
+        }
+        Err(_) => vec![1, 2, 4],
+    }
+}
+
+fn serve_continuous(
+    seed: u64,
+    reqs: &[Request],
+    mut cfg: ContinuousConfig,
+    threads: usize,
+) -> ServeReport {
+    let (_, mut c) = coordinator(seed, 1);
+    cfg.threads = threads;
+    c.serve_with_policy(reqs, ServePolicy::Continuous(cfg))
+}
+
 /// Continuous batching produces byte-identical output token ids to the
-/// FCFS oracle on the synthetic workload.
+/// FCFS oracle on the synthetic workload — at every worker count.
 #[test]
 fn continuous_matches_fcfs_oracle() {
     let (cfg, mut oracle) = coordinator(11, 1);
-    let (_, mut cont) = coordinator(11, 1);
     let reqs = synthetic_workload(6, 5, 8, cfg.vocab);
     let want = oracle.serve(&reqs);
-    let got = cont.serve_with_policy(
-        &reqs,
-        ServePolicy::Continuous(ContinuousConfig {
-            block_size: 4,
-            num_blocks: 64,
-            max_batch: 4,
-        }),
-    );
-    assert_eq!(want.outputs, got.outputs, "continuous batching changed outputs");
-    assert_eq!(got.generated_tokens, 6 * 8);
-    let m = got.serving.expect("continuous metrics");
-    assert!(m.batch_size.max() >= 2.0, "the workload must actually batch");
+    for threads in thread_counts() {
+        let got = serve_continuous(
+            11,
+            &reqs,
+            ContinuousConfig { block_size: 4, num_blocks: 64, max_batch: 4, threads: 1 },
+            threads,
+        );
+        assert_eq!(
+            want.outputs, got.outputs,
+            "continuous batching changed outputs at {threads} threads"
+        );
+        assert_eq!(got.generated_tokens, 6 * 8);
+        assert_eq!(got.threads, threads.min(4), "report records the clamped worker count");
+        let m = got.serving.expect("continuous metrics");
+        assert!(m.batch_size.max() >= 2.0, "the workload must actually batch");
+    }
+}
+
+/// The SPMD static partition is deterministic: every worker count yields
+/// the same token stream, not merely the same as the oracle — pinned by
+/// comparing all counts of this run against each other.
+#[test]
+fn thread_count_never_changes_tokens() {
+    let (cfg, _) = coordinator(16, 1);
+    let reqs = synthetic_workload(5, 6, 10, cfg.vocab);
+    let mut reference: Option<Vec<(u64, Vec<usize>)>> = None;
+    for threads in thread_counts() {
+        let got = serve_continuous(16, &reqs, ContinuousConfig::default(), threads);
+        if let Some(want) = &reference {
+            assert_eq!(want, &got.outputs, "worker count {threads} changed the token stream");
+        } else {
+            reference = Some(got.outputs);
+        }
+    }
 }
 
 /// Equivalence holds across the multi-threaded FCFS engine too (the
@@ -41,36 +96,40 @@ fn continuous_matches_fcfs_oracle() {
 #[test]
 fn continuous_matches_multithreaded_oracle() {
     let (cfg, mut oracle) = coordinator(12, 4);
-    let (_, mut cont) = coordinator(12, 1);
     let reqs = synthetic_workload(3, 6, 6, cfg.vocab);
     let want = oracle.serve(&reqs);
-    let got = cont
-        .serve_with_policy(&reqs, ServePolicy::Continuous(ContinuousConfig::default()));
-    assert_eq!(want.outputs, got.outputs);
+    for threads in thread_counts() {
+        let got = serve_continuous(12, &reqs, ContinuousConfig::default(), threads);
+        assert_eq!(want.outputs, got.outputs);
+    }
 }
 
 /// A pool sized below the working set forces preemption-to-queue; the
-/// recomputation must still reproduce the oracle's tokens exactly.
+/// recomputation must still reproduce the oracle's tokens exactly —
+/// including when the recompute runs on the multi-threaded batch engine
+/// (preempt → recompute and SPMD decode must compose).
 #[test]
 fn preemption_is_invisible_in_outputs() {
     let (cfg, mut oracle) = coordinator(13, 1);
-    let (_, mut cont) = coordinator(13, 1);
     // Two requests, each needing 4 blocks over its lifetime
     // (4 prompt + 12 generated tokens, block_size 4); a 5-block pool
     // cannot host both, so the later one is preempted mid-flight.
     let reqs = synthetic_workload(2, 4, 12, cfg.vocab);
     let want = oracle.serve(&reqs);
-    let got = cont.serve_with_policy(
-        &reqs,
-        ServePolicy::Continuous(ContinuousConfig {
-            block_size: 4,
-            num_blocks: 5,
-            max_batch: 2,
-        }),
-    );
-    assert_eq!(want.outputs, got.outputs, "preemption/recompute changed outputs");
-    let m = got.serving.expect("continuous metrics");
-    assert!(m.preemptions > 0, "the tiny pool must trigger preemption");
+    for threads in thread_counts() {
+        let got = serve_continuous(
+            13,
+            &reqs,
+            ContinuousConfig { block_size: 4, num_blocks: 5, max_batch: 2, threads: 1 },
+            threads,
+        );
+        assert_eq!(
+            want.outputs, got.outputs,
+            "preemption/recompute changed outputs at {threads} threads"
+        );
+        let m = got.serving.expect("continuous metrics");
+        assert!(m.preemptions > 0, "the tiny pool must trigger preemption");
+    }
 }
 
 /// Two requests sharing a long prompt prefix consume fewer pool blocks
@@ -102,14 +161,11 @@ fn prefix_sharing_reduces_block_pressure() {
     // after the first has filled (and published) its prompt blocks, so
     // the lookup actually hits the prefix cache.
     let run = |reqs: &[Request]| {
-        let (_, mut c) = coordinator(14, 1);
-        c.serve_with_policy(
+        serve_continuous(
+            14,
             reqs,
-            ServePolicy::Continuous(ContinuousConfig {
-                block_size,
-                num_blocks: 32,
-                max_batch: 1,
-            }),
+            ContinuousConfig { block_size, num_blocks: 32, max_batch: 1, threads: 1 },
+            1,
         )
     };
     let shared = run(&shared_reqs);

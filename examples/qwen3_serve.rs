@@ -11,13 +11,20 @@
 //!   multi-core scaling story of Figure 10 on real execution.
 //!
 //! Run: `cargo run --release --example qwen3_serve`
+//! (add `-- --kv-cold-blocks 96 [--kv-quant int8|f32]` for the tiered
+//! KV-storage demo over a deliberately small hot pool).
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
 use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServePolicy};
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
-use nncase_repro::serving::ContinuousConfig;
+use nncase_repro::serving::{ContinuousConfig, KvQuant, TierConfig};
+
+fn opt(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
     let cfg = Qwen3Config::tiny();
     let weights_path = std::path::Path::new("artifacts/weights.bin");
     let load = |()| -> Qwen3Weights {
@@ -71,6 +78,7 @@ fn main() {
                 num_blocks: 64,
                 max_batch: requests.len(),
                 threads,
+                tiering: None,
             }),
         );
         println!("continuous ({} workers): {}", report.threads, report.render());
@@ -79,6 +87,55 @@ fn main() {
             &report.outputs,
             "continuous batching changed outputs!"
         );
+    }
+
+    // Tiered KV storage (`--kv-cold-blocks N [--kv-quant int8|f32]`):
+    // re-run continuous over a deliberately small hot pool backed by the
+    // cold tier, so swap-based preemption actually fires. The f32 tier
+    // is lossless — outputs must still match; int8 may diverge after a
+    // spilled block is re-read (the report's swap metrics say when).
+    if let Some(cold_blocks) = opt(&args, "--kv-cold-blocks").and_then(|v| v.parse().ok()) {
+        let quant = match opt(&args, "--kv-quant") {
+            Some(q) => KvQuant::parse(&q).unwrap_or_else(|| panic!("bad --kv-quant {q:?}")),
+            None => KvQuant::Int8,
+        };
+        let tier = TierConfig { quant, ..TierConfig::new(cold_blocks) };
+        let engine = Qwen3Engine::new(load(()), 1, 512);
+        let mut coord = Coordinator::new(engine);
+        let report = coord.serve_with_policy(
+            &requests,
+            ServePolicy::Continuous(ContinuousConfig {
+                block_size: 4,
+                // Well under the 8-sequence working set (8 x 11 blocks)
+                // but enough for one full sequence plus headroom.
+                num_blocks: 14,
+                max_batch: requests.len(),
+                threads: 1,
+                tiering: Some(tier),
+            }),
+        );
+        println!("tiered continuous: {}", report.render());
+        let m = report.serving.as_ref().expect("continuous metrics");
+        assert!(m.preemptions > 0, "the small hot pool must force preemption");
+        if m.recompute_preemptions > 0 {
+            // A cold tier too small for the swap sets degrades to
+            // recompute (possibly for every preemption) — report it
+            // rather than panicking on a valid, if unhelpful, flag.
+            println!(
+                "note: cold tier of {cold_blocks} blocks overflowed; {} of {} preemptions \
+                 fell back to recompute",
+                m.recompute_preemptions, m.preemptions
+            );
+        }
+        // Recompute and f32 swap are both exact, so f32 runs must match
+        // regardless of how preemptions were resolved.
+        if quant == KvQuant::F32 {
+            assert_eq!(
+                last_output.as_ref().unwrap(),
+                &report.outputs,
+                "lossless (f32) swap changed outputs!"
+            );
+        }
     }
 
     let sample = &last_output.unwrap()[0].1;

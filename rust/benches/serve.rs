@@ -13,7 +13,11 @@
 //! * continuous (1T) >= 2x FCFS decode throughput at 16 concurrent;
 //! * continuous 4T > continuous 1T decode throughput at batch 16
 //!   (skipped with a warning when the host has < 4 usable cores —
-//!   a 1-core CI container cannot demonstrate a parallel speedup).
+//!   a 1-core CI container cannot demonstrate a parallel speedup);
+//! * memory-pressure scenario (hot pool ~ half the working set):
+//!   swap-based preemption through the int8 cold tier beats
+//!   recompute-based preemption on decode throughput (recompute pays
+//!   for replayed positions inside decode time; swap does not).
 //!
 //! Env knobs (the CI bench-smoke job sets both):
 //! * `PALLAS_BENCH_QUICK=1` — reduced workload for a fast smoke signal;
@@ -30,9 +34,12 @@ use std::fmt::Write as _;
 use bench_util::row;
 use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServePolicy};
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
-use nncase_repro::serving::ContinuousConfig;
+use nncase_repro::serving::{ContinuousConfig, TierConfig};
 
 struct Sample {
+    /// Scenario the sample belongs to: "sweep" (FCFS-vs-continuous),
+    /// "pressure-recompute" or "pressure-swap" (the tiered scenario).
+    mode: &'static str,
     pressure: usize,
     threads: usize,
     decode_tok_s: f64,
@@ -47,9 +54,9 @@ fn json_report(samples: &[Sample], quick: bool) -> String {
     for (i, s) in samples.iter().enumerate() {
         let _ = write!(
             out,
-            "    {{\"pressure\": {}, \"threads\": {}, \"decode_tok_s\": {:.3}, \
-             \"wall_s\": {:.4}, \"speedup_vs_fcfs\": {:.3}}}",
-            s.pressure, s.threads, s.decode_tok_s, s.wall_s, s.speedup_vs_fcfs
+            "    {{\"mode\": \"{}\", \"pressure\": {}, \"threads\": {}, \
+             \"decode_tok_s\": {:.3}, \"wall_s\": {:.4}, \"speedup_vs_fcfs\": {:.3}}}",
+            s.mode, s.pressure, s.threads, s.decode_tok_s, s.wall_s, s.speedup_vs_fcfs
         );
         out.push_str(if i + 1 < samples.len() { ",\n" } else { "\n" });
     }
@@ -97,6 +104,7 @@ fn main() {
                 num_blocks: 4 * pressure + 8,
                 max_batch: pressure,
                 threads,
+                tiering: None,
             };
             let cont_rep = cont.serve_with_policy(&reqs, ServePolicy::Continuous(ccfg));
 
@@ -132,6 +140,7 @@ fn main() {
                 row("  continuous metrics", m.render());
             }
             samples.push(Sample {
+                mode: "sweep",
                 pressure,
                 threads: cont_rep.threads,
                 decode_tok_s: cont_rep.decode_tokens_per_s,
@@ -139,6 +148,89 @@ fn main() {
                 speedup_vs_fcfs: speedup,
             });
         }
+    }
+
+    // == Memory-pressure scenario: swap-based vs recompute-based
+    // preemption, hot pool sized to ~half the working set. ==
+    // 8 concurrent requests over small (4-position) blocks so even the
+    // quick workload spans several blocks per sequence; the pool gets
+    // half the peak working set, so requests are preempted repeatedly.
+    // Recompute replays already-sampled positions (charged to decode
+    // time, producing nothing new); swap spills/fetches the int8 cold
+    // tier and resumes in place.
+    let pressure = 8usize;
+    let pressure_bs = 4usize;
+    let reqs = synthetic_workload(pressure, prompt_len, max_new, cfg.vocab);
+    let working_set = pressure * (prompt_len + max_new + 1).div_ceil(pressure_bs);
+    let pool = working_set / 2 + 1;
+    let run_pressure = |tiering: Option<TierConfig>| {
+        let mut c = Coordinator::new(Qwen3Engine::new(
+            Qwen3Weights::random(&cfg, 42),
+            1,
+            prompt_len + max_new + 1,
+        ));
+        c.serve_with_policy(
+            &reqs,
+            ServePolicy::Continuous(ContinuousConfig {
+                block_size: pressure_bs,
+                num_blocks: pool,
+                max_batch: pressure,
+                threads: 1,
+                tiering,
+            }),
+        )
+    };
+    let recompute_rep = run_pressure(None);
+    let swap_rep = run_pressure(Some(TierConfig::new(working_set + 4)));
+    let rm = recompute_rep.serving.as_ref().expect("metrics");
+    let sm = swap_rep.serving.as_ref().expect("metrics");
+    assert!(rm.recompute_preemptions > 0, "the half-size pool must force recompute");
+    assert!(sm.swap_preemptions > 0 && sm.recompute_preemptions == 0, "tiered run must swap");
+    assert_eq!(
+        recompute_rep.generated_tokens, swap_rep.generated_tokens,
+        "both preemption modes must finish the full workload"
+    );
+    let swap_speedup = if recompute_rep.decode_tokens_per_s > 0.0 {
+        swap_rep.decode_tokens_per_s / recompute_rep.decode_tokens_per_s
+    } else {
+        0.0
+    };
+    row(
+        &format!("pressure pool={pool}/{working_set}"),
+        format!(
+            "recompute {:>8.2} tok/s (replay {}) | swap {:>8.2} tok/s ({}) | {:>5.2}x",
+            recompute_rep.decode_tokens_per_s,
+            rm.replay_steps,
+            swap_rep.decode_tokens_per_s,
+            swap_rep.tier.as_deref().unwrap_or("-"),
+            swap_speedup,
+        ),
+    );
+    row("  swap metrics", sm.render());
+    for (mode, rep) in [("pressure-recompute", &recompute_rep), ("pressure-swap", &swap_rep)] {
+        samples.push(Sample {
+            mode,
+            pressure,
+            threads: 1,
+            decode_tok_s: rep.decode_tokens_per_s,
+            wall_s: rep.wall_s,
+            speedup_vs_fcfs: 0.0,
+        });
+    }
+    if quick {
+        if swap_speedup <= 1.0 {
+            println!(
+                "WARN: swap <= recompute under pressure ({swap_speedup:.2}x) — not gating (quick)"
+            );
+        }
+    } else {
+        assert!(
+            swap_speedup > 1.0,
+            "swap-based preemption must beat recompute on decode throughput under \
+             memory pressure (got {:.2} vs {:.2} tok/s, {swap_speedup:.2}x)",
+            swap_rep.decode_tokens_per_s,
+            recompute_rep.decode_tokens_per_s,
+        );
     }
 
     if let Ok(path) = std::env::var("PALLAS_BENCH_JSON") {

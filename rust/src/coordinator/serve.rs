@@ -60,6 +60,9 @@ pub struct ServeReport {
     pub request_latency: Stats,
     /// Generated token ids per request.
     pub outputs: Vec<(u64, Vec<usize>)>,
+    /// Tier configuration of the run (`TierConfig::describe`); `None`
+    /// for FCFS and for the flat (untiered) continuous path.
+    pub tier: Option<String>,
     /// Extended metrics of the continuous-batching path (None for FCFS).
     pub serving: Option<ServingMetrics>,
 }
@@ -80,6 +83,9 @@ impl ServeReport {
             self.token_latency.percentile(99.0) * 1e3,
             self.request_latency.mean(),
         );
+        if let Some(t) = &self.tier {
+            s.push_str(&format!(" tier[{t}]"));
+        }
         if let Some(m) = &self.serving {
             s.push_str(&format!(" | {}", m.render()));
         }
@@ -176,6 +182,7 @@ impl Coordinator {
             ttft,
             request_latency,
             outputs,
+            tier: None,
             serving: None,
         }
     }
@@ -186,8 +193,14 @@ impl Coordinator {
         // Effective worker count (the engine applies the same clamp;
         // computed here so the report records what actually ran).
         let threads = cfg.threads.clamp(1, max_batch);
+        let tier_desc = cfg.tiering.as_ref().map(|t| t.describe());
         let mut sched = ContinuousScheduler::new(cfg.clone());
         let mut be = BatchEngine::new(&self.engine.weights, cfg.num_blocks, cfg.block_size);
+        if let Some(t) = &cfg.tiering {
+            let model = &self.engine.weights.cfg;
+            sched.set_tier_geometry(model.layers, model.kv_heads * model.head_dim);
+            be.enable_tier(t.cold_blocks, t.quant);
+        }
         for r in requests {
             sched.submit(r);
         }
@@ -203,6 +216,11 @@ impl Coordinator {
                 // return with work left cannot happen.
                 let _scheduled = sched.schedule();
                 debug_assert!(_scheduled > 0, "scheduler yielded no work while not done");
+                // Tier traffic first: spills/fetches move KV across the
+                // storage boundary before the step reads or overwrites
+                // the affected blocks.
+                let ops = sched.take_tier_ops();
+                stepper.tier_ops(&ops);
                 let t_iter = Instant::now();
                 let slots: Vec<StepSlot> = sched
                     .running()
@@ -211,6 +229,7 @@ impl Coordinator {
                         token: s.tokens[s.pos],
                         pos: s.pos,
                         table: &s.table.blocks,
+                        cold: &s.cold,
                         sample: s.at_frontier(),
                     })
                     .collect();
@@ -246,6 +265,7 @@ impl Coordinator {
             ttft: metrics.ttft.clone(),
             request_latency,
             outputs,
+            tier: tier_desc,
             serving: Some(metrics),
         }
     }
@@ -318,6 +338,7 @@ mod tests {
                 num_blocks: 32,
                 max_batch: 3,
                 threads: 2,
+                tiering: None,
             }),
         );
         assert_eq!(rep.requests, 3);
@@ -328,6 +349,34 @@ mod tests {
         assert!(m.iterations > 0);
         assert!(m.batch_size.max() >= 2.0, "requests must actually batch");
         assert!(rep.render().contains("batch mean"));
+        assert!(rep.tier.is_none(), "flat pool runs carry no tier descriptor");
+        assert!(!rep.render().contains("tier["));
+    }
+
+    #[test]
+    fn tiered_run_is_recorded_in_report() {
+        use crate::serving::TierConfig;
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
+        let reqs = synthetic_workload(3, 4, 5, cfg.vocab);
+        let rep = c.serve_with_policy(
+            &reqs,
+            ServePolicy::Continuous(ContinuousConfig {
+                block_size: 4,
+                num_blocks: 32,
+                max_batch: 3,
+                threads: 1,
+                tiering: Some(TierConfig::new(8)),
+            }),
+        );
+        assert_eq!(rep.generated_tokens, 15);
+        assert_eq!(rep.tier.as_deref(), Some("cold=8xint8 swap=always"));
+        assert!(rep.render().contains("tier[cold=8xint8 swap=always]"), "{}", rep.render());
+        let m = rep.serving.expect("continuous metrics");
+        assert!(m.tiered);
+        // A roomy pool never spills: the tier is configured but idle.
+        assert_eq!(m.swap_preemptions, 0);
     }
 
     #[test]

@@ -43,6 +43,11 @@ pub struct MachineSpec {
     /// Total memory capacity in bytes (hard constraint for Auto
     /// Distribution, Observation 2).
     pub mem_capacity_bytes: usize,
+    /// Sustained bandwidth to the cold KV storage tier (the CXL/NVMe
+    /// class device of the paper's heterogeneous-storage story), GB/s.
+    pub cold_bw_gbps: f64,
+    /// Per-transfer latency of the cold tier, seconds.
+    pub cold_alpha_s: f64,
 }
 
 impl MachineSpec {
@@ -123,6 +128,10 @@ impl MachineSpec {
             sync_alpha_s: 2.0e-6,
             intercore_bw_gbps: 60.0,
             mem_capacity_bytes: 128 << 30,
+            // Cold KV tier: PCIe 4.0 NVMe class — ~8 GB/s streaming,
+            // tens of microseconds per transfer.
+            cold_bw_gbps: 8.0,
+            cold_alpha_s: 25.0e-6,
         }
     }
 
@@ -146,6 +155,8 @@ impl MachineSpec {
             sync_alpha_s: 1.0e-6,
             intercore_bw_gbps: 100.0,
             mem_capacity_bytes: 32 << 30,
+            cold_bw_gbps: 16.0,
+            cold_alpha_s: 10.0e-6,
         }
     }
 
@@ -176,6 +187,8 @@ impl MachineSpec {
             sync_alpha_s: 2.0e-6,
             intercore_bw_gbps: 30.0,
             mem_capacity_bytes: 8 << 30,
+            cold_bw_gbps: 4.0,
+            cold_alpha_s: 20.0e-6,
         }
     }
 }
@@ -227,5 +240,25 @@ mod tests {
     fn f16_doubles_lanes() {
         let m = MachineSpec::ryzen_5900x();
         assert_eq!(m.peak_flops(1, 2), 2.0 * m.peak_flops(1, 4));
+    }
+
+    #[test]
+    fn cold_tier_is_slower_than_dram_everywhere() {
+        // The tier ordering the swap cost model relies on: the cold
+        // store must sit below DRAM in bandwidth and above it in
+        // latency on every preset.
+        for m in [
+            MachineSpec::ryzen_5900x(),
+            MachineSpec::tpu_like(),
+            MachineSpec::test_numa(),
+        ] {
+            assert!(m.cold_bw_gbps > 0.0, "{}: cold tier must exist", m.name);
+            assert!(
+                m.cold_bw_gbps < m.dram_bw_core_gbps,
+                "{}: cold tier must be slower than a single core's DRAM stream",
+                m.name
+            );
+            assert!(m.cold_alpha_s > m.sync_alpha_s, "{}: cold latency above sync", m.name);
+        }
     }
 }

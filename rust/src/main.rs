@@ -14,7 +14,7 @@ use nncase_repro::ir::DType;
 use nncase_repro::model::{decode_graph, Qwen3Config, Qwen3Weights};
 use nncase_repro::pipeline::{CompileOptions, Compiler};
 use nncase_repro::runtime::{Manifest, PjrtRuntime};
-use nncase_repro::serving::ContinuousConfig;
+use nncase_repro::serving::{ContinuousConfig, KvQuant, TierConfig};
 use nncase_repro::sim::figures;
 
 fn flag(args: &[String], name: &str) -> bool {
@@ -32,7 +32,7 @@ fn usage() -> ! {
          compile   [--model tiny|0.6b|1.7b] [--devices N] [--schedule] [--greedy]\n\
          inspect   [--emit-cpp] [--model tiny]\n\
          serve     [--threads N] [--requests N] [--max-new N] [--policy fcfs|continuous]\n\
-         \x20          [--max-batch N]\n\
+         \x20          [--max-batch N] [--kv-cold-blocks N] [--kv-quant int8|f32]\n\
          sweep     [--figure 9|10]\n\
          artifacts [--dir artifacts]"
     );
@@ -137,6 +137,26 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     let mut ccfg = ContinuousConfig::for_machine(&cfg, &machine, max_batch);
                     if let Some(t) = threads_flag {
                         ccfg.threads = t;
+                    }
+                    // Tiered cold KV storage: --kv-cold-blocks enables a
+                    // cold tier of N blocks, --kv-quant picks the format
+                    // (int8 default; f32 = lossless swap). The swap
+                    // policy is the machine-derived cost model.
+                    let cold_blocks =
+                        opt(&args, "--kv-cold-blocks").and_then(|v| v.parse::<usize>().ok());
+                    if let Some(n) = cold_blocks {
+                        let quant = match opt(&args, "--kv-quant") {
+                            Some(q) => KvQuant::parse(&q)
+                                .unwrap_or_else(|| panic!("bad --kv-quant {q:?}")),
+                            None => KvQuant::Int8,
+                        };
+                        ccfg.tiering = Some(TierConfig::for_machine(
+                            n,
+                            quant,
+                            &machine,
+                            &cfg,
+                            ccfg.threads,
+                        ));
                     }
                     ServePolicy::Continuous(ccfg)
                 }

@@ -336,11 +336,130 @@ pub fn attn_context_paged(
 ) {
     debug_assert_eq!(out.len(), head_dim);
     out.fill(0.0);
+    attn_context_paged_accum(scores, vstore, table, block_size, head_off, head_dim, out);
+}
+
+/// As [`attn_context_paged`] but accumulating into `out` without zeroing
+/// it first — the hot-suffix half of the tiered hybrid attention path,
+/// where the cold-prefix contribution is already in `out`.
+pub fn attn_context_paged_accum(
+    scores: &[f32],
+    vstore: &Tensor,
+    table: &[u32],
+    block_size: usize,
+    head_off: usize,
+    head_dim: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), head_dim);
     for (p, &sc) in scores.iter().enumerate() {
         let row = paged_row(table, block_size, p);
         let vrow = &vstore.row(row)[head_off..head_off + head_dim];
         for (o, &vv) in out.iter_mut().zip(vrow) {
             *o += sc * vv;
+        }
+    }
+}
+
+/// Per-block affine int8 quantization of the cold KV tier: `q[i]` codes
+/// `src[i]` as `round((src[i] - zero) / scale) - 128`, with `zero` the
+/// block minimum and `scale = (max - min) / 255`. Returns
+/// `(scale, zero)`. Properties (pinned by `rust/tests/properties.rs`):
+/// every element round-trips within `scale / 2`, and a constant block
+/// (scale 0) round-trips exactly.
+pub fn quantize_block_i8(src: &[f32], dst: &mut [i8]) -> (f32, f32) {
+    assert_eq!(src.len(), dst.len());
+    if src.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in src {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let scale = (hi - lo) / 255.0;
+    if scale == 0.0 {
+        // Constant block: store the value in the zero-point, exactly.
+        dst.fill(-128);
+        return (0.0, lo);
+    }
+    let inv = 1.0 / scale;
+    for (q, &v) in dst.iter_mut().zip(src) {
+        let code = ((v - lo) * inv).round().clamp(0.0, 255.0);
+        *q = (code as i32 - 128) as i8;
+    }
+    (scale, lo)
+}
+
+/// Decode one int8 code of [`quantize_block_i8`].
+#[inline]
+pub fn dequant_i8(q: i8, scale: f32, zero: f32) -> f32 {
+    zero + (q as f32 + 128.0) * scale
+}
+
+/// Dequantize a whole quantized block back to f32 (the cold-tier fetch
+/// path: cold bytes -> hot fp32 rows).
+pub fn dequantize_block_i8(q: &[i8], scale: f32, zero: f32, out: &mut [f32]) {
+    assert_eq!(q.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(q) {
+        *o = dequant_i8(c, scale, zero);
+    }
+}
+
+/// Attention scores over one *quantized* cold KV block read in place
+/// (dequant-gather): for each of `rows` positions,
+/// `scores[r] = dot(q, dq(K_q[r][head_off..head_off+head_dim])) * scale`
+/// with per-element dequantization — no fp32 materialization of the
+/// block. Used when a sequence is mostly cold and fetching it into the
+/// hot tier would not pay.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_scores_quant_i8(
+    q: &[f32],
+    kq: &[i8],
+    qscale: f32,
+    qzero: f32,
+    rows: usize,
+    width: usize,
+    head_off: usize,
+    head_dim: usize,
+    scale: f32,
+    scores: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), head_dim);
+    debug_assert!(rows * width <= kq.len());
+    debug_assert_eq!(scores.len(), rows);
+    for (r, s) in scores.iter_mut().enumerate() {
+        let krow = &kq[r * width + head_off..r * width + head_off + head_dim];
+        let mut acc = 0.0f32;
+        for (x, &c) in q.iter().zip(krow) {
+            acc += x * dequant_i8(c, qscale, qzero);
+        }
+        *s = acc * scale;
+    }
+}
+
+/// Context accumulation over one quantized cold V block (dequant-gather):
+/// `out += Σ_r scores[r] * dq(V_q[r][head_off..])`, ascending position
+/// order. Accumulates — the caller zeroes `out` before the first cold
+/// block and chains the hot suffix with [`attn_context_paged_accum`].
+#[allow(clippy::too_many_arguments)]
+pub fn attn_context_quant_i8(
+    scores: &[f32],
+    vq: &[i8],
+    qscale: f32,
+    qzero: f32,
+    width: usize,
+    head_off: usize,
+    head_dim: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), head_dim);
+    debug_assert!(scores.len() * width <= vq.len());
+    for (r, &sc) in scores.iter().enumerate() {
+        let vrow = &vq[r * width + head_off..r * width + head_off + head_dim];
+        for (o, &c) in out.iter_mut().zip(vrow) {
+            *o += sc * dequant_i8(c, qscale, qzero);
         }
     }
 }
@@ -605,6 +724,75 @@ mod tests {
             &mut got_ctx,
         );
         assert_eq!(want_ctx, got_ctx);
+    }
+
+    #[test]
+    fn quant_roundtrip_and_constant_blocks() {
+        let mut rng = Rng::new(71);
+        let src: Vec<f32> = (0..256).map(|_| rng.normal() * 3.0).collect();
+        let mut q = vec![0i8; src.len()];
+        let (scale, zero) = quantize_block_i8(&src, &mut q);
+        let mut back = vec![0.0f32; src.len()];
+        dequantize_block_i8(&q, scale, zero, &mut back);
+        for (a, b) in src.iter().zip(&back) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-6, "err {} > scale/2 {}", a - b, scale);
+        }
+        // Constant block: exact round trip via the zero-point.
+        let cst = vec![4.25f32; 64];
+        let mut qc = vec![0i8; 64];
+        let (s, z) = quantize_block_i8(&cst, &mut qc);
+        assert_eq!(s, 0.0);
+        let mut out = vec![0.0f32; 64];
+        dequantize_block_i8(&qc, s, z, &mut out);
+        assert_eq!(out, cst);
+    }
+
+    #[test]
+    fn quant_attention_matches_dequantized_reference() {
+        // The dequant-gather kernels must agree with "dequantize the
+        // block, then run the paged fp32 kernels" — the direct cold read
+        // is an I/O optimization, not a different computation.
+        let mut rng = Rng::new(44);
+        let (bs, width, hd, off) = (4usize, 16usize, 8usize, 8usize);
+        let block = Tensor::randn(&[bs, width], &mut rng, 1.0);
+        let mut kq = vec![0i8; bs * width];
+        let (scale, zero) = quantize_block_i8(&block.data, &mut kq);
+        let mut deq = Tensor::zeros(&[bs, width]);
+        dequantize_block_i8(&kq, scale, zero, &mut deq.data);
+
+        let q: Vec<f32> = (0..hd).map(|_| rng.normal()).collect();
+        let table = [0u32];
+        let mut want = vec![0.0f32; bs];
+        attn_scores_paged(&q, &deq, &table, bs, off, hd, 0.5, &mut want);
+        let mut got = vec![0.0f32; bs];
+        attn_scores_quant_i8(&q, &kq, scale, zero, bs, width, off, hd, 0.5, &mut got);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-5, "scores diverged: {a} vs {b}");
+        }
+
+        let mut want_ctx = vec![0.0f32; hd];
+        attn_context_paged(&want, &deq, &table, bs, off, hd, &mut want_ctx);
+        let mut got_ctx = vec![0.0f32; hd];
+        attn_context_quant_i8(&want, &kq, scale, zero, width, off, hd, &mut got_ctx);
+        for (a, b) in want_ctx.iter().zip(&got_ctx) {
+            assert!((a - b).abs() < 1e-5, "context diverged: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn context_accum_composes_with_zeroing_variant() {
+        let mut rng = Rng::new(45);
+        let (bs, width, hd) = (4usize, 8usize, 8usize);
+        let v = Tensor::randn(&[2 * bs, width], &mut rng, 1.0);
+        let scores: Vec<f32> = (0..2 * bs).map(|_| rng.normal()).collect();
+        let table = [0u32, 1];
+        let mut want = vec![0.0f32; hd];
+        attn_context_paged(&scores, &v, &table, bs, 0, hd, &mut want);
+        // Split: first block via the zeroing variant, second accumulated.
+        let mut got = vec![0.0f32; hd];
+        attn_context_paged(&scores[..bs], &v, &table[..1], bs, 0, hd, &mut got);
+        attn_context_paged_accum(&scores[bs..], &v, &table[1..], bs, 0, hd, &mut got);
+        assert_eq!(want, got, "piecewise accumulation must be bit-identical");
     }
 
     #[test]

@@ -31,11 +31,13 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use super::tiered::{ColdKv, KvQuant, TierOp};
 use crate::coordinator::argmax;
 use crate::model::{Qwen3Config, Qwen3Weights};
 use crate::ntt::{
-    add_inplace, attn_context_paged, attn_scores_paged, matmul_prepacked_rows, mul_inplace,
-    paged_row, rmsnorm, rope_inplace, silu_inplace, softmax_inplace, PackedMat, Tensor, MR,
+    add_inplace, attn_context_paged, attn_context_paged_accum, attn_context_quant_i8,
+    attn_scores_paged, attn_scores_quant_i8, matmul_prepacked_rows, mul_inplace, paged_row,
+    rmsnorm, rope_inplace, silu_inplace, softmax_inplace, PackedMat, Tensor, MR,
 };
 use crate::parallel::{
     panel_splits, splits, KvCell, PoisonGuard, SharedCell, SharedVec, SpinBarrier,
@@ -82,19 +84,32 @@ pub struct StepSlot<'t> {
     pub token: usize,
     /// Logical position of `token` in the sequence.
     pub pos: usize,
-    /// The sequence's block table; must cover `pos`.
+    /// The sequence's *hot* block table, covering logical blocks after
+    /// the cold prefix; together with `cold` it must cover `pos`.
     pub table: &'t [u32],
+    /// Cold-tier slots of the sequence's leading logical blocks (direct
+    /// dequant-gather reads). Empty on the untiered path — attention
+    /// then takes the exact pre-tiering code path.
+    pub cold: &'t [u32],
     /// Sample an output token from this row's logits (the sequence is
     /// at its frontier: last prompt token or a decode step).
     pub sample: bool,
 }
 
-/// Owned copy of a [`StepSlot`] (block table cloned), published to the
+impl<'t> StepSlot<'t> {
+    /// A slot with no cold prefix (the flat-pool path).
+    pub fn hot(token: usize, pos: usize, table: &'t [u32], sample: bool) -> Self {
+        StepSlot { token, pos, table, cold: &[], sample }
+    }
+}
+
+/// Owned copy of a [`StepSlot`] (block tables cloned), published to the
 /// persistent workers so they never borrow the scheduler's state.
 struct OwnedSlot {
     token: usize,
     pos: usize,
     table: Vec<u32>,
+    cold: Vec<u32>,
     sample: bool,
 }
 
@@ -154,6 +169,7 @@ fn spmd_step(
     packed: &[PackedLayer],
     packed_lm_head: &PackedMat,
     kv_cell: &KvCell<'_, PagedKv>,
+    cold_cell: Option<&KvCell<'_, ColdKv>>,
     st: &StepState,
     barrier: &SpinBarrier,
     scratch: &mut Vec<f32>,
@@ -236,44 +252,112 @@ fn spmd_step(
                 let kvec = st.kvec.read();
                 let vvec = st.vvec.read();
                 for (i, s) in slots.iter().enumerate() {
-                    let row = paged_row(&s.table, bs, s.pos);
+                    // The hot table starts after the cold prefix; the
+                    // frontier row always lives in a hot block.
+                    let row = paged_row(&s.table, bs, s.pos - s.cold.len() * bs);
                     kv.k[l].row_mut(row).copy_from_slice(&kvec[i * kvdim..(i + 1) * kvdim]);
                     kv.v[l].row_mut(row).copy_from_slice(&vvec[i * kvdim..(i + 1) * kvdim]);
                 }
             });
         }
         barrier.wait();
-        // Phase 5: paged GQA attention, per-sequence shard.
+        // Phase 5: paged GQA attention, per-sequence shard. Slots with a
+        // cold prefix take the hybrid path: the leading full blocks are
+        // read *in place* from the quantized cold tier (dequant-gather
+        // kernels), the hot suffix through the block table — positions
+        // stay in ascending order, so softmax and the context
+        // accumulation see the same sequence order as the dense path.
+        // Slots without one take the exact pre-tiering code path.
         let kv = kv_cell.read();
         for i in r0..r1 {
             let s = &slots[i];
             let seq = s.pos + 1;
+            let cold_toks = s.cold.len() * bs;
+            let cstore = (cold_toks > 0).then(|| {
+                cold_cell
+                    .expect("slot has a cold prefix but the engine has no cold tier")
+                    .read()
+            });
             let q = st.q.read();
             let ctx_row = unsafe { st.ctx.slice_mut(i * qdim, (i + 1) * qdim) };
             let mut scores = vec![0.0f32; seq];
             for head in 0..heads {
                 let kvhead = head / group;
                 let qo = i * qdim + head * hd;
-                attn_scores_paged(
-                    &q[qo..qo + hd],
-                    &kv.k[l],
-                    &s.table,
-                    bs,
-                    kvhead * hd,
-                    hd,
-                    inv_sqrt,
-                    &mut scores,
-                );
-                softmax_inplace(&mut scores);
-                attn_context_paged(
-                    &scores,
-                    &kv.v[l],
-                    &s.table,
-                    bs,
-                    kvhead * hd,
-                    hd,
-                    &mut ctx_row[head * hd..(head + 1) * hd],
-                );
+                if cold_toks == 0 {
+                    attn_scores_paged(
+                        &q[qo..qo + hd],
+                        &kv.k[l],
+                        &s.table,
+                        bs,
+                        kvhead * hd,
+                        hd,
+                        inv_sqrt,
+                        &mut scores,
+                    );
+                    softmax_inplace(&mut scores);
+                    attn_context_paged(
+                        &scores,
+                        &kv.v[l],
+                        &s.table,
+                        bs,
+                        kvhead * hd,
+                        hd,
+                        &mut ctx_row[head * hd..(head + 1) * hd],
+                    );
+                } else {
+                    let cold = cstore.expect("Some whenever cold_toks > 0");
+                    for (bi, &slot) in s.cold.iter().enumerate() {
+                        let (kq, sc, zp) = cold.k_block(slot, l);
+                        attn_scores_quant_i8(
+                            &q[qo..qo + hd],
+                            kq,
+                            sc,
+                            zp,
+                            bs,
+                            kvdim,
+                            kvhead * hd,
+                            hd,
+                            inv_sqrt,
+                            &mut scores[bi * bs..(bi + 1) * bs],
+                        );
+                    }
+                    attn_scores_paged(
+                        &q[qo..qo + hd],
+                        &kv.k[l],
+                        &s.table,
+                        bs,
+                        kvhead * hd,
+                        hd,
+                        inv_sqrt,
+                        &mut scores[cold_toks..],
+                    );
+                    softmax_inplace(&mut scores);
+                    let out = &mut ctx_row[head * hd..(head + 1) * hd];
+                    out.fill(0.0);
+                    for (bi, &slot) in s.cold.iter().enumerate() {
+                        let (vq, sc, zp) = cold.v_block(slot, l);
+                        attn_context_quant_i8(
+                            &scores[bi * bs..(bi + 1) * bs],
+                            vq,
+                            sc,
+                            zp,
+                            kvdim,
+                            kvhead * hd,
+                            hd,
+                            out,
+                        );
+                    }
+                    attn_context_paged_accum(
+                        &scores[cold_toks..],
+                        &kv.v[l],
+                        &s.table,
+                        bs,
+                        kvhead * hd,
+                        hd,
+                        out,
+                    );
+                }
             }
         }
         barrier.wait();
@@ -359,6 +443,8 @@ pub struct BatchEngine<'w> {
     packed: Vec<PackedLayer>,
     packed_lm_head: PackedMat,
     pub kv: PagedKv,
+    /// Cold-tier arena (`Some` after [`BatchEngine::enable_tier`]).
+    pub cold: Option<ColdKv>,
 }
 
 /// Controller handle of a live SPMD serve run (see [`BatchEngine::run`]):
@@ -369,6 +455,7 @@ pub struct BatchStepper<'a, 'kv> {
     packed: &'a [PackedLayer],
     packed_lm_head: &'a PackedMat,
     kv_cell: &'a KvCell<'kv, PagedKv>,
+    cold_cell: Option<&'a KvCell<'kv, ColdKv>>,
     st: &'a StepState,
     barrier: &'a SpinBarrier,
     threads: usize,
@@ -380,6 +467,32 @@ impl BatchStepper<'_, '_> {
     /// Effective worker count of this run (after the batch-width clamp).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Execute the scheduler's tier ops for this iteration: all spills,
+    /// then all fetches (a fetch may target a hot block a spill vacated
+    /// in the same iteration, so the spill must read first). Runs on the
+    /// controller while every worker is parked at the start barrier —
+    /// the barrier release publishes the moved rows to the step.
+    pub fn tier_ops(&mut self, ops: &[TierOp]) {
+        if ops.is_empty() {
+            return;
+        }
+        let cold_cell = self.cold_cell.expect("tier ops on an engine without a cold tier");
+        cold_cell.commit(0, |cold| {
+            self.kv_cell.commit(0, |kv| {
+                for op in ops {
+                    if let TierOp::Spill { hot, cold: slot, filled } = *op {
+                        cold.spill(slot, kv, hot, filled);
+                    }
+                }
+                for op in ops {
+                    if let TierOp::Fetch { cold: slot, hot, .. } = *op {
+                        cold.fetch(slot, kv, hot);
+                    }
+                }
+            });
+        });
     }
 
     /// Advance every slot one position; returns the argmax token for
@@ -403,9 +516,9 @@ impl BatchStepper<'_, '_> {
         debug_assert!(
             {
                 let bs = self.kv_cell.read().block_size;
-                slots.iter().all(|s| s.table.len() * bs > s.pos)
+                slots.iter().all(|s| (s.cold.len() + s.table.len()) * bs > s.pos)
             },
-            "a slot's block table does not cover its position"
+            "a slot's block tables do not cover its position"
         );
         // Publish this step's work descriptor. SAFETY: every worker is
         // parked at the start barrier; the release below hands them a
@@ -417,6 +530,7 @@ impl BatchStepper<'_, '_> {
                 token: s.token,
                 pos: s.pos,
                 table: s.table.to_vec(),
+                cold: s.cold.to_vec(),
                 sample: s.sample,
             }));
         }
@@ -430,6 +544,7 @@ impl BatchStepper<'_, '_> {
             self.packed,
             self.packed_lm_head,
             self.kv_cell,
+            self.cold_cell,
             self.st,
             self.barrier,
             &mut self.scratch,
@@ -467,7 +582,22 @@ impl<'w> BatchEngine<'w> {
             packed,
             packed_lm_head: PackedMat::pack(&weights.lm_head),
             kv,
+            cold: None,
         }
+    }
+
+    /// Attach a cold-tier arena of `cold_blocks` slots (call before
+    /// [`BatchEngine::run`]; the serving coordinator does this when
+    /// `ContinuousConfig::tiering` is set).
+    pub fn enable_tier(&mut self, cold_blocks: usize, quant: KvQuant) {
+        let cfg = &self.weights.cfg;
+        self.cold = Some(ColdKv::new(
+            cold_blocks,
+            self.kv.block_size,
+            cfg.layers,
+            cfg.kv_heads * cfg.head_dim,
+            quant,
+        ));
     }
 
     /// Open one SPMD serve run: spawn `threads - 1` persistent workers
@@ -492,9 +622,11 @@ impl<'w> BatchEngine<'w> {
         let packed: &[PackedLayer] = &self.packed;
         let packed_lm_head = &self.packed_lm_head;
         let kv_cell = KvCell::new(&mut self.kv);
+        let cold_cell = self.cold.as_mut().map(KvCell::new);
         std::thread::scope(|s| {
             for wi in 1..t {
                 let (st, barrier, cmd, kv_cell) = (&st, &barrier, &cmd, &kv_cell);
+                let cold_cell = cold_cell.as_ref();
                 s.spawn(move || {
                     // A panicking worker poisons the barrier so the
                     // controller and its sibling workers unwind instead
@@ -515,6 +647,7 @@ impl<'w> BatchEngine<'w> {
                             packed,
                             packed_lm_head,
                             kv_cell,
+                            cold_cell,
                             st,
                             barrier,
                             &mut scratch,
@@ -527,6 +660,7 @@ impl<'w> BatchEngine<'w> {
                 packed,
                 packed_lm_head,
                 kv_cell: &kv_cell,
+                cold_cell: cold_cell.as_ref(),
                 st: &st,
                 barrier: &barrier,
                 threads: t,
@@ -603,7 +737,7 @@ mod tests {
         let tokens = [7usize, 300, 5, 42, 9, 1000];
         for (pos, &tok) in tokens.iter().enumerate() {
             let dense_logits = dense.decode_step(tok, pos);
-            let slot = StepSlot { token: tok, pos, table: &table, sample: true };
+            let slot = StepSlot::hot(tok, pos, &table, true);
             let (samples, paged_logits) = be.step_logits(&[slot], true);
             let diff = max_abs_diff(&dense_logits, &paged_logits);
             assert!(diff < 1e-6, "pos {pos}: paged vs dense logits differ by {diff}");
@@ -629,18 +763,15 @@ mod tests {
         // Solo: run seq1 alone.
         let mut solo_logits = Vec::new();
         for (pos, &tok) in seq1.iter().enumerate() {
-            let (_, l) = solo.step_logits(
-                &[StepSlot { token: tok, pos, table: &t1, sample: true }],
-                true,
-            );
+            let (_, l) = solo.step_logits(&[StepSlot::hot(tok, pos, &t1, true)], true);
             solo_logits = l;
         }
         // Duo: run seq1 batched with an unrelated seq2.
         let mut duo_logits = Vec::new();
         for pos in 0..seq1.len() {
             let slots = [
-                StepSlot { token: seq1[pos], pos, table: &t1, sample: true },
-                StepSlot { token: seq2[pos], pos, table: &t2, sample: true },
+                StepSlot::hot(seq1[pos], pos, &t1, true),
+                StepSlot::hot(seq2[pos], pos, &t2, true),
             ];
             let (_, l) = duo.step_logits(&slots, true);
             duo_logits = l;
@@ -669,11 +800,8 @@ mod tests {
                 (0..steps)
                     .map(|pos| {
                         let slots: Vec<StepSlot> = (0..nseq)
-                            .map(|i| StepSlot {
-                                token: (i * 31 + pos * 7) % cfg.vocab,
-                                pos,
-                                table: &tables[i],
-                                sample: true,
+                            .map(|i| {
+                                StepSlot::hot((i * 31 + pos * 7) % cfg.vocab, pos, &tables[i], true)
                             })
                             .collect();
                         stepper.step_logits(&slots, true).1
@@ -708,7 +836,7 @@ mod tests {
         for step in &script {
             let slots: Vec<StepSlot> = step
                 .iter()
-                .map(|&(token, pos, table)| StepSlot { token, pos, table, sample: true })
+                .map(|&(token, pos, table)| StepSlot::hot(token, pos, table, true))
                 .collect();
             want.push(reference.step_logits(&slots, true).1);
         }
@@ -720,7 +848,7 @@ mod tests {
                 .map(|step| {
                     let slots: Vec<StepSlot> = step
                         .iter()
-                        .map(|&(token, pos, table)| StepSlot { token, pos, table, sample: true })
+                        .map(|&(token, pos, table)| StepSlot::hot(token, pos, table, true))
                         .collect();
                     stepper.step_logits(&slots, true).1
                 })
@@ -752,5 +880,106 @@ mod tests {
         be.run(2, 4, |stepper| {
             assert!(stepper.step(&[]).is_empty());
         });
+    }
+
+    #[test]
+    fn f32_tier_swap_roundtrip_is_bit_identical() {
+        // Decode a sequence, spill its blocks to an f32 cold tier,
+        // clobber + refetch through stepper.tier_ops, and keep decoding:
+        // logits must match an uninterrupted run bit for bit.
+        let cfg = Qwen3Config::tiny();
+        let w_ref = Qwen3Weights::random(&cfg, 27);
+        let w_tier = Qwen3Weights::random(&cfg, 27);
+        let table: Vec<u32> = vec![1, 3];
+        let tokens = [9usize, 42, 300, 7, 15, 88];
+        let mut reference = BatchEngine::new(&w_ref, 8, 4);
+        let mut want = Vec::new();
+        for (pos, &tok) in tokens.iter().enumerate() {
+            want.push(reference.step_logits(&[StepSlot::hot(tok, pos, &table, true)], true).1);
+        }
+        let mut be = BatchEngine::new(&w_tier, 8, 4);
+        be.enable_tier(4, KvQuant::F32);
+        let got = be.run(1, 1, |stepper| {
+            let mut out = Vec::new();
+            for (pos, &tok) in tokens.iter().enumerate() {
+                if pos == 5 {
+                    // Swap out both blocks (block 1 holds 4 rows, block
+                    // 3 holds one), then swap them back into *different*
+                    // hot blocks — the paged indirection must not care.
+                    stepper.tier_ops(&[
+                        TierOp::Spill { hot: 1, cold: 0, filled: 4 },
+                        TierOp::Spill { hot: 3, cold: 2, filled: 1 },
+                    ]);
+                    stepper.tier_ops(&[
+                        TierOp::Fetch { cold: 0, hot: 6, seq: 0 },
+                        TierOp::Fetch { cold: 2, hot: 0, seq: 0 },
+                    ]);
+                    let new_table: Vec<u32> = vec![6, 0];
+                    let slot = StepSlot::hot(tok, pos, &new_table, true);
+                    out.push(stepper.step_logits(&[slot], true).1);
+                } else {
+                    let slot = StepSlot::hot(tok, pos, &table, true);
+                    out.push(stepper.step_logits(&[slot], true).1);
+                }
+            }
+            out
+        });
+        assert_eq!(want, got, "f32 swap round trip changed logits");
+    }
+
+    #[test]
+    fn direct_cold_read_matches_fetched_dequant() {
+        // The hybrid attention path (leading blocks read in place from
+        // the int8 tier) must produce exactly what a full fetch +
+        // dequantize into hot blocks produces: same quantized values,
+        // two different read paths.
+        let cfg = Qwen3Config::tiny();
+        let w_a = Qwen3Weights::random(&cfg, 63);
+        let w_b = Qwen3Weights::random(&cfg, 63);
+        let bs = 4usize;
+        let prefix = [3usize, 19, 250, 40]; // one full block
+        let tail = [77usize, 501];
+
+        // Run A: fill block 0, spill+fetch it (quantize round trip into
+        // hot), continue on the hot path.
+        let mut fetched = BatchEngine::new(&w_a, 8, bs);
+        fetched.enable_tier(2, KvQuant::Int8);
+        let want = fetched.run(1, 1, |stepper| {
+            let table: Vec<u32> = vec![0, 1];
+            for (pos, &tok) in prefix.iter().enumerate() {
+                stepper.step(&[StepSlot::hot(tok, pos, &table, false)]);
+            }
+            stepper.tier_ops(&[TierOp::Spill { hot: 0, cold: 1, filled: bs }]);
+            stepper.tier_ops(&[TierOp::Fetch { cold: 1, hot: 0, seq: 0 }]);
+            let mut out = Vec::new();
+            for (i, &tok) in tail.iter().enumerate() {
+                let pos = prefix.len() + i;
+                out.push(stepper.step_logits(&[StepSlot::hot(tok, pos, &table, true)], true).1);
+            }
+            out
+        });
+
+        // Run B: same prefix, spill block 0 and keep it cold — the tail
+        // steps read it through the dequant-gather kernels.
+        let mut direct = BatchEngine::new(&w_b, 8, bs);
+        direct.enable_tier(2, KvQuant::Int8);
+        let got = direct.run(1, 1, |stepper| {
+            let table: Vec<u32> = vec![0, 1];
+            for (pos, &tok) in prefix.iter().enumerate() {
+                stepper.step(&[StepSlot::hot(tok, pos, &table, false)]);
+            }
+            stepper.tier_ops(&[TierOp::Spill { hot: 0, cold: 1, filled: bs }]);
+            let cold: Vec<u32> = vec![1];
+            let hot_tail: Vec<u32> = vec![1];
+            let mut out = Vec::new();
+            for (i, &tok) in tail.iter().enumerate() {
+                let pos = prefix.len() + i;
+                let slot =
+                    StepSlot { token: tok, pos, table: &hot_tail, cold: &cold, sample: true };
+                out.push(stepper.step_logits(&[slot], true).1);
+            }
+            out
+        });
+        assert_eq!(want, got, "direct cold reads diverged from fetch+dequantize");
     }
 }

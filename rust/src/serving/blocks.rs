@@ -108,6 +108,15 @@ impl BlockTable {
     }
 }
 
+/// One prefix-cache entry: the physical block plus its LRU stamp.
+#[derive(Debug, Clone, Copy)]
+struct PrefixEntry {
+    block: u32,
+    /// Monotone insertion/last-hit tick: eviction runs in ascending
+    /// order of this stamp (deterministic LRU), never in HashMap order.
+    last_touch: u64,
+}
+
 /// The block pool plus the prefix cache: the KV allocator the
 /// continuous-batching scheduler talks to.
 #[derive(Debug)]
@@ -117,7 +126,9 @@ pub struct KvBlockManager {
     /// token prefix covered by the block (see module docs). The cache
     /// holds its own reference on each entry so a cached block survives
     /// its originating sequence.
-    prefix: HashMap<Vec<usize>, u32>,
+    prefix: HashMap<Vec<usize>, PrefixEntry>,
+    /// LRU clock: bumped on every insert and every cache hit.
+    clock: u64,
     /// Entry cap: key storage is O(prefix length) per entry, so an
     /// unbounded map would grow with every request served. At the cap,
     /// unreferenced entries are evicted; if everything is live, new
@@ -133,6 +144,7 @@ impl KvBlockManager {
         KvBlockManager {
             pool: BlockPool::new(num_blocks, block_size),
             prefix: HashMap::new(),
+            clock: 0,
             // One entry per pool block is the most that can ever be
             // simultaneously useful.
             max_entries: num_blocks,
@@ -154,8 +166,11 @@ impl KvBlockManager {
         let mut covered = 0usize;
         while covered + bs < prompt.len() {
             let key = &prompt[..covered + bs];
-            match self.prefix.get(key) {
-                Some(&b) => {
+            self.clock += 1;
+            match self.prefix.get_mut(key) {
+                Some(e) => {
+                    e.last_touch = self.clock;
+                    let b = e.block;
                     self.pool.retain(b);
                     table.blocks.push(b);
                     covered += bs;
@@ -198,7 +213,8 @@ impl KvBlockManager {
             return;
         }
         self.pool.retain(block);
-        self.prefix.insert(prefix.to_vec(), block);
+        self.clock += 1;
+        self.prefix.insert(prefix.to_vec(), PrefixEntry { block, last_touch: self.clock });
     }
 
     /// Release every block of a finished or preempted sequence.
@@ -209,20 +225,30 @@ impl KvBlockManager {
     }
 
     /// Under memory pressure: drop cache entries whose block no live
-    /// sequence references (refcount 1 = cache only). Returns how many
-    /// blocks were freed.
+    /// sequence references (refcount 1 = cache only), in deterministic
+    /// LRU order — least recently inserted/hit first. The order decides
+    /// the free-list push order (and therefore every later allocation),
+    /// so iterating the HashMap directly would make runs irreproducible.
+    /// Returns how many blocks were freed.
     pub fn evict_unused_cached(&mut self) -> usize {
-        let pool = &mut self.pool;
-        let before = pool.free_blocks();
-        self.prefix.retain(|_, &mut b| {
-            if pool.refcount(b) == 1 {
-                pool.release(b);
-                false
-            } else {
-                true
-            }
-        });
-        pool.free_blocks() - before
+        let mut victims: Vec<(u64, u32)> = self
+            .prefix
+            .values()
+            .filter(|e| self.pool.refcount(e.block) == 1)
+            .map(|e| (e.last_touch, e.block))
+            .collect();
+        if victims.is_empty() {
+            return 0;
+        }
+        victims.sort_unstable();
+        for &(_, b) in &victims {
+            self.pool.release(b);
+        }
+        // Released entries are now refcount 0; drop them from the map
+        // (no key clones — the O(prefix-length) keys never leave it).
+        let pool = &self.pool;
+        self.prefix.retain(|_, e| pool.refcount(e.block) > 0);
+        victims.len()
     }
 
     pub fn cached_blocks(&self) -> usize {
@@ -312,6 +338,34 @@ mod tests {
         m.register_full_block(&prompt[..8], t1.blocks[1]);
         let (_, covered) = m.lookup_prefix(&prompt);
         assert_eq!(covered, 4, "the final prompt token must stay computable");
+    }
+
+    #[test]
+    fn cache_eviction_is_deterministic_lru() {
+        // Three cached, unreferenced blocks with distinct last-hit times:
+        // eviction must release them least-recently-touched first, so the
+        // free-list order (and every later allocation) is reproducible.
+        let mut m = KvBlockManager::new(8, 2);
+        let prompts: Vec<Vec<usize>> = (0..3).map(|i| vec![100 + i, 200 + i, 300 + i]).collect();
+        let mut blocks = Vec::new();
+        for p in &prompts {
+            let mut t = BlockTable::default();
+            assert!(m.ensure_slot(&mut t, 1));
+            m.register_full_block(&p[..2], t.blocks[0]);
+            blocks.push(t.blocks[0]);
+            m.release_table(&mut t);
+        }
+        // Touch the *first* entry so it becomes most-recently-used.
+        let (mut t0, covered) = m.lookup_prefix(&prompts[0]);
+        assert_eq!(covered, 2);
+        m.release_table(&mut t0);
+        assert_eq!(m.evict_unused_cached(), 3);
+        // LRU order: entries 1 and 2 (insertion order) first, then the
+        // re-touched entry 0. Free list is a stack, so allocation pops in
+        // reverse: blocks[0], blocks[2], blocks[1].
+        assert_eq!(m.pool.try_alloc(), Some(blocks[0]));
+        assert_eq!(m.pool.try_alloc(), Some(blocks[2]));
+        assert_eq!(m.pool.try_alloc(), Some(blocks[1]));
     }
 
     #[test]

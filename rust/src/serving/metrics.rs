@@ -26,10 +26,47 @@ pub struct ServingMetrics {
     pub peak_blocks_in_use: usize,
     /// Scheduler iterations executed.
     pub iterations: usize,
-    /// Total seconds spent in iterations attributed to decode tokens.
+    /// Total seconds spent in iterations attributed to decode tokens —
+    /// including time spent *replaying* already-sampled tokens after a
+    /// recompute-preemption, so recompute waste shows up as lower decode
+    /// throughput instead of hiding in wall time.
     pub decode_s: f64,
-    /// Decode tokens covered by `decode_s`.
+    /// Distinct decode tokens covered by `decode_s` (frontier samples;
+    /// replayed positions are counted in `replay_steps` instead).
     pub decode_steps: usize,
+    /// Already-sampled tokens recomputed after recompute-preemptions.
+    pub replay_steps: usize,
+    /// True when the run had a cold tier configured (`tiering: Some`).
+    pub tiered: bool,
+    /// Preemptions resolved by swapping the victim to the cold tier.
+    pub swap_preemptions: usize,
+    /// Preemptions resolved by discarding KV and recomputing (the only
+    /// kind that exists when tiering is off).
+    pub recompute_preemptions: usize,
+    /// Blocks spilled hot -> cold.
+    pub spills: usize,
+    /// Blocks fetched cold -> hot.
+    pub fetches: usize,
+    /// Payload bytes moved hot -> cold.
+    pub spill_bytes: u64,
+    /// Payload bytes moved cold -> hot.
+    pub fetch_bytes: u64,
+    /// Swap-ins that kept full blocks cold for direct dequant-gather
+    /// reads instead of fetching them.
+    pub cold_direct_reads: usize,
+    /// Cold-tier occupancy (fraction of slots in use) per iteration.
+    pub cold_occupancy: Stats,
+    /// High-water mark of cold slots in use.
+    pub peak_cold_in_use: usize,
+    /// Simulated seconds of tier traffic under the cost model
+    /// (bandwidth + latency of the machine's cold tier); advisory —
+    /// never added to wall time.
+    pub tier_sim_s: f64,
+    /// `(request id, generated-token index)` of each sequence's first
+    /// resume over lossy (quantized) KV: output tokens before the index
+    /// are exact; divergence from the oracle is possible only at or
+    /// after it. Empty for lossless (f32) tiers.
+    pub swap_points: Vec<(u64, usize)>,
 }
 
 impl ServingMetrics {
@@ -45,7 +82,7 @@ impl ServingMetrics {
     }
 
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "ttft p50={:.2}ms tpot p50={:.2}ms batch mean={:.1} queue mean={:.1} \
              pool peak={} blocks preempt={} prefix_hits={} iters={}",
             self.ttft.percentile(50.0) * 1e3,
@@ -56,7 +93,24 @@ impl ServingMetrics {
             self.preemptions,
             self.prefix_hits,
             self.iterations,
-        )
+        );
+        if self.tiered {
+            s.push_str(&format!(
+                " | tier swap={} recompute={} spill={}B/{} fetch={}B/{} direct={} \
+                 cold peak={} sim={:.2}ms replay={}",
+                self.swap_preemptions,
+                self.recompute_preemptions,
+                self.spill_bytes,
+                self.spills,
+                self.fetch_bytes,
+                self.fetches,
+                self.cold_direct_reads,
+                self.peak_cold_in_use,
+                self.tier_sim_s * 1e3,
+                self.replay_steps,
+            ));
+        }
+        s
     }
 }
 
@@ -76,5 +130,23 @@ mod tests {
     fn decode_throughput_from_accumulated_seconds() {
         let m = ServingMetrics { decode_s: 2.0, decode_steps: 100, ..Default::default() };
         assert_eq!(m.decode_tokens_per_s(), 50.0);
+    }
+
+    #[test]
+    fn tier_counters_render_only_when_tiered() {
+        let flat = ServingMetrics::default();
+        assert!(!flat.render().contains("tier"), "flat pools must not render tier counters");
+        let m = ServingMetrics {
+            tiered: true,
+            swap_preemptions: 3,
+            spills: 7,
+            spill_bytes: 1024,
+            fetches: 7,
+            fetch_bytes: 1024,
+            ..Default::default()
+        };
+        let s = m.render();
+        assert!(s.contains("tier swap=3"), "{s}");
+        assert!(s.contains("spill=1024B/7"), "{s}");
     }
 }

@@ -19,17 +19,25 @@
 //!   (one `thread::scope` per serve run) with a deterministic static
 //!   partition — thread count never changes outputs.
 //! * [`metrics`] — TTFT/TPOT, queue depth, pool occupancy, preemption
-//!   counters ([`crate::coordinator::ServeReport`] extension).
+//!   and tier-traffic counters ([`crate::coordinator::ServeReport`]
+//!   extension).
+//! * [`tiered`] — the quantized cold storage tier: per-block int8 (or
+//!   lossless f32) spill targets, the swap-vs-recompute cost model, and
+//!   the scheduler-side cold-slot control plane. Swap-based preemption
+//!   moves KV across the tier boundary instead of recomputing it.
 //!
 //! Selected via [`crate::coordinator::ServePolicy`]; outputs are
-//! token-identical to the FCFS oracle (`rust/tests/serving.rs`).
+//! token-identical to the FCFS oracle (`rust/tests/serving.rs`) whenever
+//! tiering is off or the cold tier is lossless.
 
 pub mod batch_engine;
 pub mod blocks;
 pub mod metrics;
 pub mod scheduler;
+pub mod tiered;
 
 pub use batch_engine::{BatchEngine, BatchStepper, PagedKv, StepSlot};
 pub use blocks::{BlockPool, BlockTable, KvBlockManager};
 pub use metrics::ServingMetrics;
 pub use scheduler::{ContinuousConfig, ContinuousScheduler, SeqState, Sequence};
+pub use tiered::{ColdKv, KvQuant, SwapPolicy, TierConfig, TierCostModel, TierOp, TierState};

@@ -11,18 +11,27 @@
 //! sequence's slot is refilled on the very next iteration instead of at
 //! batch boundaries.
 //!
-//! Preemption recomputes: the victim's blocks are released (its full
-//! blocks may survive in the prefix cache and be re-attached for free)
-//! and the sequence re-enters the queue front; greedy decode is
-//! deterministic, so recomputation reproduces the same tokens and
-//! preemption is invisible in the output stream — the differential test
-//! against the FCFS oracle exercises exactly this.
+//! Preemption has two modes. *Recompute* (the only mode when tiering is
+//! off): the victim's blocks are released (its full blocks may survive
+//! in the prefix cache and be re-attached for free) and the sequence
+//! re-enters the queue front; greedy decode is deterministic, so
+//! recomputation reproduces the same tokens and preemption is invisible
+//! in the output stream — the differential test against the FCFS oracle
+//! exercises exactly this. *Swap* (`ContinuousConfig::tiering`): the
+//! victim's blocks are spilled to the quantized cold tier
+//! ([`crate::serving::tiered`]) and fetched back on re-admission with
+//! position and sampled tokens intact — no replay — governed by the
+//! swap-vs-recompute cost model. The int8 tier is lossy: a swapped-back
+//! sequence is *tainted* (its blocks never enter the prefix cache) and
+//! its first resume point is recorded in `ServingMetrics::swap_points`,
+//! bounding where divergence from the oracle may start.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use super::blocks::{BlockTable, KvBlockManager};
 use super::metrics::ServingMetrics;
+use super::tiered::{SwapPolicy, TierConfig, TierOp, TierState};
 use crate::coordinator::Request;
 
 /// Scheduler state of one sequence.
@@ -32,6 +41,9 @@ pub enum SeqState {
     Prefill,
     Decode,
     Preempted,
+    /// Preempted with KV resident in the cold tier (swap-based
+    /// preemption): re-admission fetches instead of recomputing.
+    Swapped,
     Done,
 }
 
@@ -53,6 +65,25 @@ pub struct Sequence {
     /// (preemption victims are chosen by recency of admission, so the
     /// oldest work is protected).
     pub admitted_iter: u64,
+    /// Cold-tier slots of the sequence's *leading* logical blocks, in
+    /// logical order. While running this is the direct-read prefix (the
+    /// engine's hybrid attention reads these slots in place); while
+    /// `Swapped` it covers every block the sequence had.
+    pub cold: Vec<u32>,
+    /// Set once the sequence has attended over quantized (lossy) KV:
+    /// its blocks are no longer a pure function of their token prefix
+    /// and must never enter the prefix cache.
+    pub tainted: bool,
+    /// Generated-token index of the first lossy resume (`None` until a
+    /// quantized swap-in): earlier outputs are exact.
+    pub swap_in_at: Option<usize>,
+    /// Lossy swap-in admitted this iteration, not yet stepped — becomes
+    /// `tainted` at the next commit (a same-iteration revert clears it).
+    resume_lossy: bool,
+    /// The pending lossy swap-in kept full blocks cold (direct read);
+    /// counted into `cold_direct_reads` when the resume actually steps,
+    /// so a same-iteration revert + retry is not double-counted.
+    resume_direct: bool,
     submitted: Instant,
 }
 
@@ -60,6 +91,11 @@ impl Sequence {
     /// True when `pos` is the last fed token: sample logits here.
     pub fn at_frontier(&self) -> bool {
         self.pos + 1 == self.tokens.len()
+    }
+
+    /// Token positions held by the cold prefix.
+    pub fn cold_tokens(&self, block_size: usize) -> usize {
+        self.cold.len() * block_size
     }
 }
 
@@ -77,11 +113,21 @@ pub struct ContinuousConfig {
     /// static partition keeps outputs token-identical at any value.
     /// Pick from the machine with [`crate::cost::MachineSpec::decode_threads`].
     pub threads: usize,
+    /// Tiered KV storage (`None` = flat fp32 pool; the scheduler is then
+    /// bitwise-identical to the pre-tiering behaviour, which the FCFS
+    /// differential oracle enforces).
+    pub tiering: Option<TierConfig>,
 }
 
 impl Default for ContinuousConfig {
     fn default() -> Self {
-        ContinuousConfig { block_size: 16, num_blocks: 512, max_batch: 8, threads: 1 }
+        ContinuousConfig {
+            block_size: 16,
+            num_blocks: 512,
+            max_batch: 8,
+            threads: 1,
+            tiering: None,
+        }
     }
 }
 
@@ -106,6 +152,7 @@ impl ContinuousConfig {
             num_blocks: budget.min(workload_cap).max(1) as usize,
             max_batch,
             threads: machine.decode_threads(max_batch),
+            tiering: None,
         }
     }
 }
@@ -116,6 +163,8 @@ pub struct ContinuousScheduler {
     queue: VecDeque<Sequence>,
     running: Vec<Sequence>,
     pub kv: KvBlockManager,
+    /// Cold-tier control plane (`Some` iff `config.tiering` is).
+    pub tier: Option<TierState>,
     pub metrics: ServingMetrics,
     iter: u64,
     finished: Vec<Sequence>,
@@ -124,15 +173,63 @@ pub struct ContinuousScheduler {
 impl ContinuousScheduler {
     pub fn new(config: ContinuousConfig) -> Self {
         let kv = KvBlockManager::new(config.num_blocks, config.block_size);
+        let tier = config.tiering.clone().map(TierState::new);
+        let metrics = ServingMetrics { tiered: tier.is_some(), ..Default::default() };
         ContinuousScheduler {
             config,
             queue: VecDeque::new(),
             running: Vec::new(),
             kv,
-            metrics: ServingMetrics::default(),
+            tier,
+            metrics,
             iter: 0,
             finished: Vec::new(),
         }
+    }
+
+    /// Wire the model geometry into the tier's byte accounting (called
+    /// by the serving coordinator; safe no-op without tiering).
+    pub fn set_tier_geometry(&mut self, layers: usize, width: usize) {
+        if let Some(t) = self.tier.as_mut() {
+            t.set_geometry(layers, width);
+        }
+    }
+
+    /// Drain the data-movement ops of the last `schedule()` call for the
+    /// engine (`BatchStepper::tier_ops`), accounting byte counters and
+    /// the simulated transfer cost. Must run before the step executes.
+    pub fn take_tier_ops(&mut self) -> Vec<TierOp> {
+        let Some(tier) = self.tier.as_mut() else { return Vec::new() };
+        let ops = std::mem::take(&mut tier.pending);
+        let (mut spill_bytes, mut fetch_bytes) = (0u64, 0u64);
+        for op in &ops {
+            match *op {
+                TierOp::Spill { filled, .. } => {
+                    self.metrics.spills += 1;
+                    spill_bytes += tier.payload_bytes(filled);
+                }
+                TierOp::Fetch { cold, .. } => {
+                    self.metrics.fetches += 1;
+                    fetch_bytes += tier.payload_bytes(tier.filled(cold));
+                }
+            }
+        }
+        self.metrics.spill_bytes += spill_bytes;
+        self.metrics.fetch_bytes += fetch_bytes;
+        // One simulated transfer per direction per iteration (the ops of
+        // a direction batch into one DMA), matching the cost model's
+        // one-alpha-per-direction rule in `should_swap` — not one alpha
+        // per block, which would overstate the latency the decision
+        // model was charged.
+        if let SwapPolicy::Cost(m) = &tier.config.policy {
+            if spill_bytes > 0 {
+                self.metrics.tier_sim_s += m.transfer_s(spill_bytes);
+            }
+            if fetch_bytes > 0 {
+                self.metrics.tier_sim_s += m.transfer_s(fetch_bytes);
+            }
+        }
+        ops
     }
 
     /// Enqueue a request (arrival time = now, for TTFT accounting).
@@ -147,6 +244,11 @@ impl ContinuousScheduler {
             generated: Vec::new(),
             state: SeqState::Queued,
             admitted_iter: 0,
+            cold: Vec::new(),
+            tainted: false,
+            swap_in_at: None,
+            resume_lossy: false,
+            resume_direct: false,
             submitted: Instant::now(),
         };
         if req.prompt.is_empty() || req.max_new_tokens == 0 {
@@ -195,6 +297,12 @@ impl ContinuousScheduler {
         self.metrics
             .pool_occupancy
             .push(pool.blocks_in_use() as f64 / pool.num_blocks().max(1) as f64);
+        if let Some(tier) = &self.tier {
+            self.metrics
+                .cold_occupancy
+                .push(tier.in_use() as f64 / tier.slots().max(1) as f64);
+            self.metrics.peak_cold_in_use = tier.max_in_use;
+        }
         self.running.len()
     }
 
@@ -208,14 +316,42 @@ impl ContinuousScheduler {
         for (seq, sample) in self.running.iter_mut().zip(samples) {
             let pos = seq.pos;
             let is_decode = pos >= seq.prompt_len;
+            // First step after a lossy swap-in: the sequence has now
+            // attended over quantized KV. Taint it (its blocks are no
+            // longer pure functions of their token prefix) and record
+            // the first index at which outputs may diverge.
+            if seq.resume_lossy {
+                seq.resume_lossy = false;
+                seq.tainted = true;
+                if seq.resume_direct {
+                    seq.resume_direct = false;
+                    self.metrics.cold_direct_reads += 1;
+                }
+                if seq.swap_in_at.is_none() {
+                    seq.swap_in_at = Some(seq.generated.len());
+                    self.metrics.swap_points.push((seq.id, seq.generated.len()));
+                }
+            }
             if is_decode {
-                self.metrics.tpot.push(per_token_s);
+                // Replayed positions (recompute-preemption redoing
+                // already-sampled tokens) are charged to decode time but
+                // produce no new token — recompute waste shows up as
+                // decode throughput, not hidden wall time.
                 self.metrics.decode_s += per_token_s;
-                self.metrics.decode_steps += 1;
+                if seq.at_frontier() {
+                    self.metrics.tpot.push(per_token_s);
+                    self.metrics.decode_steps += 1;
+                } else {
+                    self.metrics.replay_steps += 1;
+                }
             }
             // The block holding `pos` just became full: publish it for
             // prefix sharing (keyed by the entire covered token prefix).
-            if (pos + 1) % bs == 0 {
+            // Tainted sequences never publish — their KV depends on
+            // quantization error, not just the tokens. A cold prefix
+            // implies tainted (direct reads are int8-only), so the hot
+            // index below never underflows.
+            if (pos + 1) % bs == 0 && !seq.tainted && seq.cold.is_empty() {
                 let block = seq.table.blocks[pos / bs];
                 self.kv.register_full_block(&seq.tokens[..pos + 1], block);
             }
@@ -235,16 +371,26 @@ impl ContinuousScheduler {
                 seq.state = SeqState::Decode;
             }
         }
-        // Retire finished sequences and free their blocks.
+        // Retire finished sequences and free their blocks (both tiers).
         let mut i = 0;
         while i < self.running.len() {
             if self.running[i].state == SeqState::Done {
                 let mut seq = self.running.remove(i);
                 self.kv.release_table(&mut seq.table);
+                if let Some(tier) = self.tier.as_mut() {
+                    for slot in seq.cold.drain(..) {
+                        tier.release(slot);
+                    }
+                }
                 self.finished.push(seq);
             } else {
                 i += 1;
             }
+        }
+        // This iteration's fetch ops have executed by now: their source
+        // slots can finally be reused.
+        if let Some(tier) = self.tier.as_mut() {
+            tier.flush_releases();
         }
         self.metrics.prefix_hits = self.kv.prefix_hits;
         self.metrics.peak_blocks_in_use = self.kv.pool.max_in_use();
@@ -257,6 +403,19 @@ impl ContinuousScheduler {
         // admits could immediately preempt each other.
         let mut reserved = 0usize;
         while self.running.len() < self.config.max_batch && !self.queue.is_empty() {
+            // Swapped sequences re-enter through the cold tier: fetch
+            // (or keep cold for direct reads), never recompute. A
+            // Swapped sequence with an *empty* cold set (preempted at
+            // pos 0, nothing spilled) lost no KV: it takes the fresh
+            // path below — full admission control, prefix-cache lookup,
+            // and no lossy-resume bookkeeping.
+            let front = self.queue.front().unwrap();
+            if front.state == SeqState::Swapped && !front.cold.is_empty() {
+                if !self.admit_swapped(&mut reserved) {
+                    break;
+                }
+                continue;
+            }
             let mut seq = self.queue.pop_front().unwrap();
             let bs = self.config.block_size;
             let (mut shared, covered) = self.kv.lookup_prefix(&seq.tokens);
@@ -282,13 +441,68 @@ impl ContinuousScheduler {
         }
     }
 
+    /// Swap the cold queue head back in: allocate hot blocks, emit fetch
+    /// ops for the engine, and resume at the preserved position (no
+    /// replay). When the tier allows direct reads and enough of the
+    /// sequence is full+cold, the full blocks stay cold and only the
+    /// partial tail is fetched. Returns false when the pool cannot host
+    /// it yet (it stays at the queue front).
+    fn admit_swapped(&mut self, reserved: &mut usize) -> bool {
+        let bs = self.config.block_size;
+        let (total, full) = {
+            let seq = self.queue.front().unwrap();
+            (seq.cold.len(), seq.pos / bs)
+        };
+        let tier_cfg = &self.tier.as_ref().expect("swapped sequence without a tier").config;
+        let frac_met = |frac: f64| full > 0 && full as f64 >= frac * total as f64;
+        let keep = match tier_cfg.direct_read_min_frac {
+            Some(frac) if tier_cfg.quant.lossy() && frac_met(frac) => full.min(total),
+            _ => 0,
+        };
+        let lossy = tier_cfg.quant.lossy();
+        let fetch_count = total - keep;
+        // +1 headroom: the next position's block, so the admission can
+        // not immediately preempt itself (same rule as the fresh path).
+        let needed = fetch_count + 1;
+        if self.kv.pool.free_blocks() < *reserved + needed {
+            self.kv.evict_unused_cached();
+        }
+        if self.kv.pool.free_blocks() < *reserved + needed {
+            return false;
+        }
+        // Unlike the lazy fresh path, the fetch targets are allocated
+        // right below (they leave the free list immediately), so only
+        // the +1 headroom stays reserved for later admissions.
+        *reserved += 1;
+        let mut seq = self.queue.pop_front().unwrap();
+        let tier = self.tier.as_mut().unwrap();
+        for j in keep..total {
+            let slot = seq.cold[j];
+            let hot = self.kv.pool.try_alloc().expect("free blocks counted above");
+            seq.table.blocks.push(hot);
+            tier.pending.push(TierOp::Fetch { cold: slot, hot, seq: seq.id });
+            // The slot's data must survive until the engine runs the
+            // fetch; it returns to the free list after the step.
+            tier.release_after_ops(slot);
+        }
+        seq.cold.truncate(keep);
+        seq.resume_lossy = lossy;
+        seq.resume_direct = keep > 0;
+        seq.state = if seq.pos >= seq.prompt_len { SeqState::Decode } else { SeqState::Prefill };
+        seq.admitted_iter = self.iter;
+        self.running.push(seq);
+        true
+    }
+
     fn ensure_all_slots(&mut self) {
+        let bs = self.config.block_size;
         let mut idx = 0;
         while idx < self.running.len() {
-            let pos = self.running[idx].pos;
+            // The hot table covers logical blocks after the cold prefix.
+            let hot_pos = self.running[idx].pos - self.running[idx].cold_tokens(bs);
             // Split borrows: table is a field of the sequence.
             let seq_table = &mut self.running[idx].table;
-            if self.kv.ensure_slot(seq_table, pos) {
+            if self.kv.ensure_slot(seq_table, hot_pos) {
                 idx += 1;
                 continue;
             }
@@ -314,12 +528,162 @@ impl ContinuousScheduler {
     }
 
     fn preempt(&mut self, i: usize) {
+        self.metrics.preemptions += 1;
+        // A sequence swapped in *this same iteration* still has fetch
+        // ops pending and its hot blocks unwritten: revert the fetches
+        // (it goes back to the queue still swapped) instead of spilling
+        // garbage.
+        if self.revert_pending_fetches(i) {
+            return;
+        }
+        // Swap-based preemption: spill to the cold tier and resume later
+        // with position and sampled tokens intact.
+        if self.should_swap(i) && self.swap_out(i) {
+            return;
+        }
+        // Recompute: discard KV, replay from position 0 on re-admission.
+        self.metrics.recompute_preemptions += 1;
         let mut seq = self.running.remove(i);
         self.kv.release_table(&mut seq.table);
+        if !seq.cold.is_empty() {
+            // A direct-read cold prefix dies with the recompute decision.
+            let tier = self.tier.as_mut().expect("cold prefix without a tier");
+            for slot in seq.cold.drain(..) {
+                tier.release(slot);
+            }
+        }
         seq.state = SeqState::Preempted;
         seq.pos = 0;
-        self.metrics.preemptions += 1;
         self.queue.push_front(seq);
+    }
+
+    /// Undo the fetches of a sequence admitted from the cold tier this
+    /// iteration (the engine has not executed them yet). Its hot blocks
+    /// are unwritten — release them, restore the cold table, and requeue
+    /// it still swapped. Returns false when the sequence has no pending
+    /// fetches (the normal preemption paths apply).
+    fn revert_pending_fetches(&mut self, i: usize) -> bool {
+        let id = self.running[i].id;
+        let Some(tier) = self.tier.as_mut() else { return false };
+        let mut slots = Vec::new();
+        tier.pending.retain(|op| match *op {
+            TierOp::Fetch { cold, seq, .. } if seq == id => {
+                slots.push(cold);
+                false
+            }
+            _ => true,
+        });
+        if slots.is_empty() {
+            return false;
+        }
+        for &s in &slots {
+            tier.cancel_release(s);
+        }
+        let mut seq = self.running.remove(i);
+        // Fetch targets (and any extra tail block `ensure_slot` added
+        // before failing) were never written: plain frees.
+        self.kv.release_table(&mut seq.table);
+        // `slots` is in pending order == logical order of the fetched
+        // suffix, so appending restores the cold table exactly.
+        seq.cold.extend(slots);
+        seq.resume_lossy = false;
+        seq.resume_direct = false;
+        // `pos` stays where it was: the sequence is still fully swapped.
+        // The event resolves through the cold tier (no KV lost, nothing
+        // to recompute), so it lands in the swap bucket — the split
+        // always sums to `preemptions`.
+        seq.state = SeqState::Swapped;
+        self.metrics.swap_preemptions += 1;
+        self.queue.push_front(seq);
+        true
+    }
+
+    /// The swap-vs-recompute decision for `running[i]`.
+    fn should_swap(&self, i: usize) -> bool {
+        let Some(tier) = &self.tier else { return false };
+        match &tier.config.policy {
+            SwapPolicy::Always => true,
+            SwapPolicy::Never => false,
+            SwapPolicy::Cost(m) => {
+                let bs = self.config.block_size;
+                let seq = &self.running[i];
+                let cold0 = seq.cold.len();
+                let bytes: u64 = (0..seq.table.blocks.len())
+                    .map(|j| {
+                        let filled = seq.pos.saturating_sub((cold0 + j) * bs).min(bs);
+                        tier.payload_bytes(filled)
+                    })
+                    .sum();
+                m.should_swap(bytes, bytes, seq.pos)
+            }
+        }
+    }
+
+    /// Spill `running[i]`'s hot blocks to the cold tier and requeue it
+    /// swapped. Returns false when the cold tier cannot host it even
+    /// after LRU-evicting queued swap sets (caller falls back to
+    /// recompute).
+    fn swap_out(&mut self, i: usize) -> bool {
+        let bs = self.config.block_size;
+        let (id, pos, cold0, n_hot) = {
+            let s = &self.running[i];
+            (s.id, s.pos, s.cold.len(), s.table.blocks.len())
+        };
+        // Blocks with no filled rows (a freshly allocated tail) are just
+        // released, not spilled.
+        let need = (0..n_hot).filter(|&j| pos.saturating_sub((cold0 + j) * bs) > 0).count();
+        // LRU spill policy at the cold tier: when it is full, evict the
+        // least-recently-touched swap set of a *queued* sequence (it
+        // falls back to recompute); running sequences' cold prefixes are
+        // never evictable.
+        while self.tier.as_ref().unwrap().free_slots() < need {
+            let candidates: Vec<u64> = self
+                .queue
+                .iter()
+                .filter(|s| s.state == SeqState::Swapped && s.id != id)
+                .map(|s| s.id)
+                .collect();
+            let Some(owner) = self.tier.as_ref().unwrap().lru_owner(&candidates) else {
+                return false;
+            };
+            self.evict_cold_owner(owner);
+        }
+        let mut seq = self.running.remove(i);
+        let tier = self.tier.as_mut().unwrap();
+        for (j, &hot) in seq.table.blocks.iter().enumerate() {
+            let filled = pos.saturating_sub((cold0 + j) * bs).min(bs);
+            if filled == 0 {
+                // Logical order: everything after this block is empty too.
+                break;
+            }
+            let slot = tier.alloc(seq.id, filled).expect("free slots ensured above");
+            tier.pending.push(TierOp::Spill { hot, cold: slot, filled });
+            seq.cold.push(slot);
+        }
+        // The spill ops read the hot arena before any block allocated
+        // this iteration is written (ops run ahead of the SPMD step), so
+        // releasing the table now is safe.
+        self.kv.release_table(&mut seq.table);
+        seq.state = SeqState::Swapped;
+        self.metrics.swap_preemptions += 1;
+        self.queue.push_front(seq);
+        true
+    }
+
+    /// Drop a queued sequence's cold swap set (LRU eviction): it loses
+    /// its KV and will recompute from scratch on re-admission. The
+    /// original preemption event was counted as a swap; eviction
+    /// *reclassifies* that same event as a recompute, keeping
+    /// `swap_preemptions + recompute_preemptions == preemptions`.
+    fn evict_cold_owner(&mut self, id: u64) {
+        self.tier.as_mut().expect("cold eviction without a tier").release_owned(id);
+        if let Some(s) = self.queue.iter_mut().find(|s| s.id == id) {
+            s.cold.clear();
+            s.pos = 0;
+            s.state = SeqState::Preempted;
+            self.metrics.swap_preemptions = self.metrics.swap_preemptions.saturating_sub(1);
+            self.metrics.recompute_preemptions += 1;
+        }
     }
 }
 
@@ -338,6 +702,7 @@ mod tests {
             num_blocks: 8,
             max_batch: 4,
             threads: 1,
+            tiering: None,
         });
         s.submit(&req(0, vec![1, 2, 3], 2));
         assert!(!s.is_done());
@@ -372,6 +737,7 @@ mod tests {
             num_blocks: 4,
             max_batch: 2,
             threads: 1,
+            tiering: None,
         });
         for i in 0..3 {
             s.submit(&req(i, vec![i as usize; 5], 4));
@@ -403,8 +769,134 @@ mod tests {
             num_blocks: 2,
             max_batch: 2,
             threads: 1,
+            tiering: None,
         });
         s.submit(&req(0, vec![1; 20], 4));
         s.schedule();
+    }
+
+    fn tiered_config(num_blocks: usize, cold_blocks: usize) -> ContinuousConfig {
+        ContinuousConfig {
+            block_size: 4,
+            num_blocks,
+            max_batch: 2,
+            threads: 1,
+            tiering: Some(TierConfig::new(cold_blocks)),
+        }
+    }
+
+    /// Drive the scheduler without an engine: every scheduled slot
+    /// "samples" a fixed token at its frontier.
+    fn drive(s: &mut ContinuousScheduler, iters: usize) -> Vec<TierOp> {
+        // Engineless tests still want real byte accounting.
+        s.set_tier_geometry(2, 8);
+        let mut all_ops = Vec::new();
+        for _ in 0..iters {
+            if s.is_done() {
+                break;
+            }
+            s.schedule();
+            all_ops.extend(s.take_tier_ops());
+            let samples: Vec<Option<usize>> =
+                s.running().iter().map(|q| q.at_frontier().then_some(7)).collect();
+            s.commit(&samples, 0.0);
+        }
+        all_ops
+    }
+
+    #[test]
+    fn pressure_swaps_instead_of_recomputing() {
+        // Two sequences needing 4 blocks each over their lifetime, pool
+        // of 5: the old scheduler recompute-preempted here; with a cold
+        // tier it must swap, finish both, and never replay a position.
+        let mut s = ContinuousScheduler::new(tiered_config(5, 8));
+        s.submit(&req(0, vec![1, 2, 3, 4], 12));
+        s.submit(&req(1, vec![5, 6, 7, 8], 12));
+        let ops = drive(&mut s, 200);
+        assert!(s.is_done(), "both requests must finish");
+        let fin = s.take_finished();
+        assert!(fin.iter().all(|f| f.generated.len() == 12));
+        assert!(s.metrics.swap_preemptions > 0, "the tiny pool must force swaps");
+        assert_eq!(s.metrics.recompute_preemptions, 0, "swap must replace recompute");
+        assert_eq!(s.metrics.replay_steps, 0, "swapped sequences never replay");
+        let spills = ops.iter().filter(|o| matches!(o, TierOp::Spill { .. })).count();
+        let fetches = ops.iter().filter(|o| matches!(o, TierOp::Fetch { .. })).count();
+        assert!(spills > 0 && fetches > 0);
+        assert_eq!(s.metrics.spills, spills);
+        assert_eq!(s.metrics.fetches, fetches);
+        assert!(s.metrics.spill_bytes > 0 && s.metrics.fetch_bytes > 0);
+        // Swapped-back int8 sequences are tainted and carry a resume point.
+        assert!(!s.metrics.swap_points.is_empty());
+        for f in &fin {
+            if f.swap_in_at.is_some() {
+                assert!(f.tainted);
+            }
+        }
+        // All tiers drain at the end.
+        assert_eq!(s.tier.as_ref().unwrap().in_use(), 0, "cold slots must be released");
+    }
+
+    #[test]
+    fn swap_policy_never_falls_back_to_recompute() {
+        let mut cfg = tiered_config(5, 8);
+        if let Some(t) = cfg.tiering.as_mut() {
+            t.policy = SwapPolicy::Never;
+        }
+        let mut s = ContinuousScheduler::new(cfg);
+        s.submit(&req(0, vec![1, 2, 3, 4], 12));
+        s.submit(&req(1, vec![5, 6, 7, 8], 12));
+        let ops = drive(&mut s, 300);
+        assert!(s.is_done());
+        assert!(s.metrics.recompute_preemptions > 0);
+        assert_eq!(s.metrics.swap_preemptions, 0);
+        assert!(ops.is_empty(), "Never policy must move no bytes");
+        assert!(s.metrics.replay_steps > 0, "recompute replays already-sampled tokens");
+    }
+
+    #[test]
+    fn cold_tier_overflow_falls_back_to_recompute() {
+        // Cold tier of 1 block cannot hold a 2-block swap set: swap_out
+        // fails (no queued LRU victim to evict) and the victim
+        // recomputes instead of deadlocking.
+        let mut s = ContinuousScheduler::new(tiered_config(5, 1));
+        s.submit(&req(0, vec![1, 2, 3, 4], 12));
+        s.submit(&req(1, vec![5, 6, 7, 8], 12));
+        drive(&mut s, 300);
+        assert!(s.is_done(), "overflow must degrade to recompute, not hang");
+        assert!(s.metrics.recompute_preemptions > 0);
+    }
+
+    #[test]
+    fn f32_tier_is_not_lossy_flagged() {
+        let mut cfg = tiered_config(5, 8);
+        if let Some(t) = cfg.tiering.as_mut() {
+            t.quant = super::super::tiered::KvQuant::F32;
+        }
+        let mut s = ContinuousScheduler::new(cfg);
+        s.submit(&req(0, vec![1, 2, 3, 4], 12));
+        s.submit(&req(1, vec![5, 6, 7, 8], 12));
+        drive(&mut s, 300);
+        assert!(s.is_done());
+        assert!(s.metrics.swap_preemptions > 0);
+        assert!(s.metrics.swap_points.is_empty(), "f32 swap is lossless: no divergence points");
+        assert!(s.take_finished().iter().all(|f| !f.tainted && f.swap_in_at.is_none()));
+    }
+
+    #[test]
+    fn direct_read_keeps_full_blocks_cold() {
+        let mut cfg = tiered_config(5, 8);
+        if let Some(t) = cfg.tiering.as_mut() {
+            t.direct_read_min_frac = Some(0.0);
+        }
+        let mut s = ContinuousScheduler::new(cfg);
+        s.submit(&req(0, vec![1, 2, 3, 4], 12));
+        s.submit(&req(1, vec![5, 6, 7, 8], 12));
+        let ops = drive(&mut s, 300);
+        assert!(s.is_done());
+        assert!(s.metrics.cold_direct_reads > 0, "swap-ins must keep full blocks cold");
+        let spills = ops.iter().filter(|o| matches!(o, TierOp::Spill { .. })).count();
+        let fetches = ops.iter().filter(|o| matches!(o, TierOp::Fetch { .. })).count();
+        assert!(fetches < spills, "direct reads must fetch less than was spilled");
+        assert_eq!(s.tier.as_ref().unwrap().in_use(), 0, "cold prefix freed at finish");
     }
 }

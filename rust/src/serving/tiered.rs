@@ -1,0 +1,652 @@
+//! Tiered KV-cache storage: a quantized cold tier behind the hot fp32
+//! block pool, with swap-based preemption.
+//!
+//! The paper's headline is efficient LLM deployment on *heterogeneous
+//! storage architectures*; PR 1's serving stack still treated KV storage
+//! as one flat fp32 pool, and under pressure the scheduler preempted by
+//! throwing KV away and recomputing. This module adds the second tier:
+//!
+//! * [`ColdKv`] — the engine-side data plane: `cold_blocks` slots, each
+//!   holding one block's K and V rows for every layer, stored either as
+//!   per-block affine **int8** (per-`(block, layer, K/V)` scale and
+//!   zero-point, `ntt::quantize_block_i8`) or as raw **f32** (lossless
+//!   swap, 4x the bytes). Spill quantizes hot rows into a slot; fetch
+//!   dequantizes a slot back into hot rows.
+//! * [`TierState`] — the scheduler-side control plane: cold-slot
+//!   allocation with per-slot owner + last-touch LRU bookkeeping, the
+//!   pending [`TierOp`] list the driver hands to the engine each
+//!   iteration, and byte/simulated-cost accounting.
+//! * [`TierCostModel`] — the swap-vs-recompute rule: spill + fetch bytes
+//!   over the cold tier's bandwidth/latency ([`crate::cost::MachineSpec`]
+//!   `cold_bw_gbps` / `cold_alpha_s`) against the FLOPs of recomputing
+//!   the victim's positions from scratch. [`SwapPolicy::Always`] /
+//!   [`SwapPolicy::Never`] force either arm (tests, ablations).
+//!
+//! The tier boundary is the repo's first lossy/lossless storage
+//! boundary: int8 swap may change a sequence's tokens *after* a spilled
+//! block is re-read (never before, and never for other sequences — the
+//! scheduler taints swapped-in sequences so their blocks stay out of the
+//! prefix cache), while f32 swap is bitwise invisible. Tiering is off by
+//! default (`ContinuousConfig::tiering = None`), and the disabled path
+//! is bitwise-identical to the pre-tiering scheduler — the FCFS
+//! differential oracle in `rust/tests/serving.rs` pins both properties.
+
+use super::batch_engine::PagedKv;
+use crate::cost::MachineSpec;
+use crate::model::Qwen3Config;
+use crate::ntt::{dequantize_block_i8, quantize_block_i8};
+
+/// Storage format of the cold tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvQuant {
+    /// Per-block affine int8 (1 byte/value + per-layer scale/zero).
+    /// Lossy: a swapped-back sequence may diverge from the oracle.
+    Int8,
+    /// Raw f32 (4 bytes/value). Lossless: swap is bitwise invisible.
+    F32,
+}
+
+impl KvQuant {
+    pub fn bytes_per_value(&self) -> usize {
+        match self {
+            KvQuant::Int8 => 1,
+            KvQuant::F32 => 4,
+        }
+    }
+
+    /// True when a cold round trip can change values.
+    pub fn lossy(&self) -> bool {
+        matches!(self, KvQuant::Int8)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvQuant::Int8 => "int8",
+            KvQuant::F32 => "f32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KvQuant> {
+        match s {
+            "int8" | "i8" => Some(KvQuant::Int8),
+            "f32" | "fp32" => Some(KvQuant::F32),
+            _ => None,
+        }
+    }
+}
+
+/// The swap-vs-recompute cost model (simulated seconds; the tier's
+/// bandwidth/latency come from the machine description, matching how
+/// every other cost in `crate::cost` is modeled).
+#[derive(Debug, Clone)]
+pub struct TierCostModel {
+    /// Sustained cold-tier bandwidth, bytes/s.
+    pub cold_bw_bytes_per_s: f64,
+    /// Per-transfer latency of the cold tier, seconds.
+    pub cold_alpha_s: f64,
+    /// Sustained recompute rate, FLOP/s.
+    pub recompute_flops_per_s: f64,
+    /// Forward FLOPs per recomputed token (~2 x params).
+    pub flops_per_token: f64,
+}
+
+impl TierCostModel {
+    pub fn for_machine(machine: &MachineSpec, model: &Qwen3Config, threads: usize) -> Self {
+        TierCostModel {
+            cold_bw_bytes_per_s: machine.cold_bw_gbps * 1e9,
+            cold_alpha_s: machine.cold_alpha_s,
+            recompute_flops_per_s: machine.peak_flops(threads, 4),
+            flops_per_token: 2.0 * model.param_count() as f64,
+        }
+    }
+
+    /// Seconds to move `bytes` across the tier boundary (one transfer).
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        self.cold_alpha_s + bytes as f64 / self.cold_bw_bytes_per_s.max(1.0)
+    }
+
+    /// Seconds to replay `tokens` positions from scratch.
+    pub fn recompute_s(&self, tokens: usize) -> f64 {
+        tokens as f64 * self.flops_per_token / self.recompute_flops_per_s.max(1.0)
+    }
+
+    /// The swap-vs-recompute rule: spill now + fetch later vs replaying
+    /// the victim's `tokens` positions on re-admission.
+    pub fn should_swap(&self, spill_bytes: u64, fetch_bytes: u64, tokens: usize) -> bool {
+        self.transfer_s(spill_bytes) + self.transfer_s(fetch_bytes) < self.recompute_s(tokens)
+    }
+}
+
+/// How preemption victims are handled when tiering is on.
+#[derive(Debug, Clone)]
+pub enum SwapPolicy {
+    /// Always swap to the cold tier (tests / benches: deterministic).
+    Always,
+    /// Never swap — tiering machinery on, recompute semantics (ablation
+    /// baseline).
+    Never,
+    /// Swap iff the cost model says moving bytes beats redoing FLOPs.
+    Cost(TierCostModel),
+}
+
+/// Configuration of the tiered KV store
+/// (`ContinuousConfig::tiering: Option<TierConfig>`; `None` keeps the
+/// flat fp32 pool, bitwise-identical to the pre-tiering scheduler).
+#[derive(Debug, Clone)]
+pub struct TierConfig {
+    /// Cold-tier capacity in blocks.
+    pub cold_blocks: usize,
+    pub quant: KvQuant,
+    pub policy: SwapPolicy,
+    /// Direct cold reads: when a swapped sequence re-enters with at
+    /// least this fraction of its blocks full, the full blocks stay cold
+    /// and attention reads them in place through the dequant-gather
+    /// kernels instead of fetching them into hot blocks. `None` always
+    /// fetches. Int8 only (the f32 tier always fetches).
+    pub direct_read_min_frac: Option<f64>,
+}
+
+impl TierConfig {
+    /// Int8 cold tier of `cold_blocks` blocks, always-swap policy.
+    pub fn new(cold_blocks: usize) -> Self {
+        TierConfig {
+            cold_blocks,
+            quant: KvQuant::Int8,
+            policy: SwapPolicy::Always,
+            direct_read_min_frac: None,
+        }
+    }
+
+    /// Cost-model policy derived from the machine + model descriptions.
+    pub fn for_machine(
+        cold_blocks: usize,
+        quant: KvQuant,
+        machine: &MachineSpec,
+        model: &Qwen3Config,
+        threads: usize,
+    ) -> Self {
+        TierConfig {
+            cold_blocks,
+            quant,
+            policy: SwapPolicy::Cost(TierCostModel::for_machine(machine, model, threads)),
+            direct_read_min_frac: None,
+        }
+    }
+
+    /// One-line description for `ServeReport::render`.
+    pub fn describe(&self) -> String {
+        let policy = match &self.policy {
+            SwapPolicy::Always => "always",
+            SwapPolicy::Never => "never",
+            SwapPolicy::Cost(_) => "cost",
+        };
+        let direct = match self.direct_read_min_frac {
+            Some(f) => format!(" direct>={f:.2}"),
+            None => String::new(),
+        };
+        format!("cold={}x{} swap={policy}{direct}", self.cold_blocks, self.quant.name())
+    }
+}
+
+/// One data-movement command for the engine, produced by the scheduler
+/// and executed by the controller while the SPMD workers are parked
+/// (`BatchStepper::tier_ops`). All spills of an iteration execute before
+/// all fetches: a fetch may target a hot block vacated by a spill in the
+/// same iteration, and the spill must read the old contents first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierOp {
+    /// Quantize rows `[0, filled)` of hot block `hot` (every layer) into
+    /// cold slot `cold`.
+    Spill { hot: u32, cold: u32, filled: usize },
+    /// Dequantize cold slot `cold` back into hot block `hot`. `seq` is
+    /// the owning sequence (same-iteration preemption of a just-admitted
+    /// sequence reverts its fetches instead of spilling unwritten
+    /// blocks).
+    Fetch { cold: u32, hot: u32, seq: u64 },
+}
+
+/// Engine-side cold-tier arena: the quantized (or raw-f32) twin of
+/// [`PagedKv`]. Slot `s` holds one block's K and V rows for every layer;
+/// per-`(slot, layer)` scale/zero pairs cover K and V separately.
+pub struct ColdKv {
+    pub quant: KvQuant,
+    pub block_size: usize,
+    pub width: usize,
+    pub layers: usize,
+    /// Int8 payloads, `[slot][layer][block_size * width]`.
+    qk: Vec<i8>,
+    qv: Vec<i8>,
+    /// F32 payloads (same layout) when `quant == F32`.
+    fk: Vec<f32>,
+    fv: Vec<f32>,
+    /// Per-(slot, layer) quantization parameters.
+    k_scale: Vec<f32>,
+    k_zero: Vec<f32>,
+    v_scale: Vec<f32>,
+    v_zero: Vec<f32>,
+    /// Rows holding real data per slot (partial tail blocks).
+    filled: Vec<usize>,
+}
+
+impl ColdKv {
+    pub fn new(
+        cold_blocks: usize,
+        block_size: usize,
+        layers: usize,
+        width: usize,
+        quant: KvQuant,
+    ) -> Self {
+        let vals = cold_blocks * layers * block_size * width;
+        let params = cold_blocks * layers;
+        let (qn, fnn) = match quant {
+            KvQuant::Int8 => (vals, 0),
+            KvQuant::F32 => (0, vals),
+        };
+        ColdKv {
+            quant,
+            block_size,
+            width,
+            layers,
+            qk: vec![0; qn],
+            qv: vec![0; qn],
+            fk: vec![0.0; fnn],
+            fv: vec![0.0; fnn],
+            k_scale: vec![0.0; params],
+            k_zero: vec![0.0; params],
+            v_scale: vec![0.0; params],
+            v_zero: vec![0.0; params],
+            filled: vec![0; cold_blocks],
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.filled.len()
+    }
+
+    /// Payload bytes of one fully-filled slot (both K and V, all layers,
+    /// plus the per-layer scale/zero pairs) — the unit of the byte
+    /// counters and the simulated transfer cost.
+    pub fn slot_bytes(&self) -> u64 {
+        slot_payload_bytes(self.layers, self.width, self.quant, self.block_size)
+    }
+
+    #[inline]
+    fn base(&self, slot: u32, layer: usize) -> usize {
+        (slot as usize * self.layers + layer) * self.block_size * self.width
+    }
+
+    #[inline]
+    fn pidx(&self, slot: u32, layer: usize) -> usize {
+        slot as usize * self.layers + layer
+    }
+
+    pub fn filled(&self, slot: u32) -> usize {
+        self.filled[slot as usize]
+    }
+
+    /// Quantized K payload + scale/zero of `(slot, layer)` (Int8 only).
+    pub fn k_block(&self, slot: u32, layer: usize) -> (&[i8], f32, f32) {
+        debug_assert_eq!(self.quant, KvQuant::Int8, "direct cold reads are int8-only");
+        let b = self.base(slot, layer);
+        let p = self.pidx(slot, layer);
+        (&self.qk[b..b + self.block_size * self.width], self.k_scale[p], self.k_zero[p])
+    }
+
+    /// Quantized V payload + scale/zero of `(slot, layer)` (Int8 only).
+    pub fn v_block(&self, slot: u32, layer: usize) -> (&[i8], f32, f32) {
+        debug_assert_eq!(self.quant, KvQuant::Int8, "direct cold reads are int8-only");
+        let b = self.base(slot, layer);
+        let p = self.pidx(slot, layer);
+        (&self.qv[b..b + self.block_size * self.width], self.v_scale[p], self.v_zero[p])
+    }
+
+    /// Spill rows `[0, filled)` of hot block `hot_block` (every layer)
+    /// into `slot`. Reads the hot arena, writes only the cold arena.
+    pub fn spill(&mut self, slot: u32, hot: &PagedKv, hot_block: u32, filled: usize) {
+        debug_assert!(filled <= self.block_size);
+        let bs = self.block_size;
+        let w = self.width;
+        let row0 = hot_block as usize * bs;
+        self.filled[slot as usize] = filled;
+        for l in 0..self.layers {
+            let k_src = &hot.k[l].data[row0 * w..(row0 + filled) * w];
+            let v_src = &hot.v[l].data[row0 * w..(row0 + filled) * w];
+            let b = self.base(slot, l);
+            let p = self.pidx(slot, l);
+            match self.quant {
+                KvQuant::Int8 => {
+                    let (s, z) = quantize_block_i8(k_src, &mut self.qk[b..b + filled * w]);
+                    self.k_scale[p] = s;
+                    self.k_zero[p] = z;
+                    let (s, z) = quantize_block_i8(v_src, &mut self.qv[b..b + filled * w]);
+                    self.v_scale[p] = s;
+                    self.v_zero[p] = z;
+                }
+                KvQuant::F32 => {
+                    self.fk[b..b + filled * w].copy_from_slice(k_src);
+                    self.fv[b..b + filled * w].copy_from_slice(v_src);
+                }
+            }
+        }
+    }
+
+    /// Fetch `slot` back into hot block `hot_block` (every layer),
+    /// dequantizing in the Int8 tier. Returns the restored row count.
+    pub fn fetch(&self, slot: u32, hot: &mut PagedKv, hot_block: u32) -> usize {
+        let filled = self.filled[slot as usize];
+        let bs = self.block_size;
+        let w = self.width;
+        let row0 = hot_block as usize * bs;
+        for l in 0..self.layers {
+            let b = self.base(slot, l);
+            let p = self.pidx(slot, l);
+            let k_dst = &mut hot.k[l].data[row0 * w..(row0 + filled) * w];
+            let v_dst = &mut hot.v[l].data[row0 * w..(row0 + filled) * w];
+            match self.quant {
+                KvQuant::Int8 => {
+                    dequantize_block_i8(
+                        &self.qk[b..b + filled * w],
+                        self.k_scale[p],
+                        self.k_zero[p],
+                        k_dst,
+                    );
+                    dequantize_block_i8(
+                        &self.qv[b..b + filled * w],
+                        self.v_scale[p],
+                        self.v_zero[p],
+                        v_dst,
+                    );
+                }
+                KvQuant::F32 => {
+                    k_dst.copy_from_slice(&self.fk[b..b + filled * w]);
+                    v_dst.copy_from_slice(&self.fv[b..b + filled * w]);
+                }
+            }
+        }
+        filled
+    }
+}
+
+/// Payload bytes of `filled` rows of one cold block: K + V across all
+/// layers, plus 16 bytes of scale/zero per layer in the int8 tier.
+fn slot_payload_bytes(layers: usize, width: usize, quant: KvQuant, filled: usize) -> u64 {
+    let payload = (2 * layers * filled * width * quant.bytes_per_value()) as u64;
+    let params = if quant.lossy() { (16 * layers) as u64 } else { 0 };
+    payload + params
+}
+
+/// Scheduler-side control plane of the cold tier: slot allocation with
+/// owner + last-touch LRU bookkeeping and the pending op list.
+pub struct TierState {
+    pub config: TierConfig,
+    /// Geometry for byte accounting (0 until `set_geometry`; unit tests
+    /// that never talk to an engine can skip it).
+    layers: usize,
+    width: usize,
+    free: Vec<u32>,
+    owner: Vec<Option<u64>>,
+    touch: Vec<u64>,
+    filled: Vec<usize>,
+    clock: u64,
+    /// Ops for the engine, drained once per iteration by
+    /// `ContinuousScheduler::take_tier_ops`.
+    pub pending: Vec<TierOp>,
+    /// Cold slots consumed by fetches this iteration: their data must
+    /// stay intact until the engine has executed the op, so they are
+    /// returned to the free list only after the step (`flush_releases`).
+    pending_release: Vec<u32>,
+    /// High-water mark of slots in use.
+    pub max_in_use: usize,
+}
+
+impl TierState {
+    pub fn new(config: TierConfig) -> Self {
+        let n = config.cold_blocks;
+        TierState {
+            config,
+            layers: 0,
+            width: 0,
+            free: (0..n as u32).rev().collect(),
+            owner: vec![None; n],
+            touch: vec![0; n],
+            filled: vec![0; n],
+            clock: 0,
+            pending: Vec::new(),
+            pending_release: Vec::new(),
+            max_in_use: 0,
+        }
+    }
+
+    /// Wire in the model geometry so byte counters and the cost model
+    /// see real sizes (called by the serving coordinator).
+    pub fn set_geometry(&mut self, layers: usize, width: usize) {
+        self.layers = layers;
+        self.width = width;
+    }
+
+    pub fn slots(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.owner.len() - self.free.len()
+    }
+
+    /// Bytes of `filled` rows of one slot under the configured format.
+    pub fn payload_bytes(&self, filled: usize) -> u64 {
+        slot_payload_bytes(self.layers, self.width, self.config.quant, filled)
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Allocate a slot for `owner` (LRU-stamped now).
+    pub fn alloc(&mut self, owner: u64, filled: usize) -> Option<u32> {
+        let s = self.free.pop()?;
+        debug_assert!(self.owner[s as usize].is_none());
+        self.owner[s as usize] = Some(owner);
+        self.filled[s as usize] = filled;
+        self.touch[s as usize] = self.tick();
+        self.max_in_use = self.max_in_use.max(self.in_use());
+        Some(s)
+    }
+
+    pub fn filled(&self, slot: u32) -> usize {
+        self.filled[slot as usize]
+    }
+
+    /// Return a slot to the free list immediately (owner finished or was
+    /// evicted — its cold data is dead).
+    pub fn release(&mut self, slot: u32) {
+        debug_assert!(self.owner[slot as usize].is_some(), "release of a free cold slot");
+        self.owner[slot as usize] = None;
+        self.free.push(slot);
+    }
+
+    /// Mark a fetched slot for release after the engine executes this
+    /// iteration's ops (the fetch still has to read it).
+    pub fn release_after_ops(&mut self, slot: u32) {
+        self.pending_release.push(slot);
+    }
+
+    /// Un-mark slots queued by [`TierState::release_after_ops`] (fetch
+    /// reverted by a same-iteration preemption).
+    pub fn cancel_release(&mut self, slot: u32) {
+        if let Some(i) = self.pending_release.iter().position(|&s| s == slot) {
+            self.pending_release.swap_remove(i);
+        }
+    }
+
+    /// Free every slot whose fetch op has now executed.
+    pub fn flush_releases(&mut self) {
+        let slots: Vec<u32> = self.pending_release.drain(..).collect();
+        for s in slots {
+            self.release(s);
+        }
+    }
+
+    /// Release all slots owned by `owner`; returns how many were freed.
+    pub fn release_owned(&mut self, owner: u64) -> usize {
+        let mut n = 0;
+        for s in 0..self.owner.len() as u32 {
+            if self.owner[s as usize] == Some(owner) {
+                self.release(s);
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Least-recently-touched owner among `candidates` (queued swapped
+    /// sequences — a running sequence's cold prefix is never evictable).
+    pub fn lru_owner(&self, candidates: &[u64]) -> Option<u64> {
+        self.owner
+            .iter()
+            .zip(&self.touch)
+            .filter_map(|(&o, &t)| o.filter(|id| candidates.contains(id)).map(|id| (t, id)))
+            .min()
+            .map(|(_, id)| id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_model_rule() {
+        let m = TierCostModel {
+            cold_bw_bytes_per_s: 1e9,
+            cold_alpha_s: 1e-6,
+            recompute_flops_per_s: 1e11,
+            flops_per_token: 1e9, // 10 ms of recompute per token
+        };
+        // Moving 1 MB both ways (~2 ms) beats recomputing 1 token (10 ms).
+        assert!(m.should_swap(1 << 20, 1 << 20, 1));
+        // Recomputing nothing is free; any transfer loses.
+        assert!(!m.should_swap(1 << 20, 1 << 20, 0));
+    }
+
+    #[test]
+    fn cold_roundtrip_f32_is_exact() {
+        let (bs, layers, width) = (4usize, 2usize, 6usize);
+        let mut hot = PagedKv::new(layers, 4, bs, width);
+        for l in 0..layers {
+            for (i, v) in hot.k[l].data.iter_mut().enumerate() {
+                *v = (l * 1000 + i) as f32 * 0.25;
+            }
+            for (i, v) in hot.v[l].data.iter_mut().enumerate() {
+                *v = -((l * 1000 + i) as f32) * 0.5;
+            }
+        }
+        let snapshot_k: Vec<Vec<f32>> = hot.k.iter().map(|t| t.data.clone()).collect();
+        let mut cold = ColdKv::new(2, bs, layers, width, KvQuant::F32);
+        cold.spill(1, &hot, 2, bs);
+        // Clobber the hot block, then fetch it back.
+        for l in 0..layers {
+            for v in &mut hot.k[l].data[2 * bs * width..3 * bs * width] {
+                *v = f32::NAN;
+            }
+        }
+        assert_eq!(cold.fetch(1, &mut hot, 2), bs);
+        for l in 0..layers {
+            assert_eq!(hot.k[l].data, snapshot_k[l], "f32 tier must round-trip exactly");
+        }
+    }
+
+    #[test]
+    fn cold_roundtrip_i8_is_bounded_and_partial_blocks_skip_garbage() {
+        let (bs, layers, width) = (4usize, 2usize, 8usize);
+        let mut hot = PagedKv::new(layers, 2, bs, width);
+        // Fill 3 of 4 rows of block 0 with signal; row 3 holds a huge
+        // garbage value that must NOT skew the quantization scale.
+        for l in 0..layers {
+            for r in 0..bs {
+                for c in 0..width {
+                    hot.k[l].data[r * width + c] =
+                        if r < 3 { (r * width + c) as f32 * 0.1 - 1.0 } else { 1e9 };
+                    hot.v[l].data[r * width + c] =
+                        if r < 3 { -((r * width + c) as f32) * 0.2 } else { -1e9 };
+                }
+            }
+        }
+        let want_k = hot.k[0].data[..3 * width].to_vec();
+        let mut cold = ColdKv::new(1, bs, layers, width, KvQuant::Int8);
+        cold.spill(0, &hot, 0, 3);
+        assert_eq!(cold.filled(0), 3);
+        for l in 0..layers {
+            hot.k[l].data.fill(0.0);
+            hot.v[l].data.fill(0.0);
+        }
+        assert_eq!(cold.fetch(0, &mut hot, 0), 3);
+        // Bounded error: the garbage row was excluded, so the scale is
+        // small and the signal rows survive tightly.
+        let range = want_k.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+            - want_k.iter().cloned().fold(f32::INFINITY, f32::min);
+        let bound = range / 255.0 * 0.5 + 1e-6;
+        for (a, b) in want_k.iter().zip(&hot.k[0].data[..3 * width]) {
+            assert!((a - b).abs() <= bound, "{a} vs {b} exceeds {bound}");
+        }
+        // The unfilled row stays untouched by the fetch.
+        assert!(hot.k[0].data[3 * width..4 * width].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn tier_state_alloc_release_lru() {
+        let mut t = TierState::new(TierConfig::new(3));
+        t.set_geometry(2, 8);
+        assert_eq!(t.free_slots(), 3);
+        let a = t.alloc(10, 4).unwrap();
+        let b = t.alloc(11, 4).unwrap();
+        let c = t.alloc(12, 2).unwrap();
+        assert!(t.alloc(13, 4).is_none(), "capacity is 3");
+        assert_eq!(t.in_use(), 3);
+        assert_eq!(t.max_in_use, 3);
+        assert_eq!(t.filled(c), 2);
+        // LRU: slot `a` was touched first.
+        assert_eq!(t.lru_owner(&[10, 11, 12]), Some(10));
+        assert_eq!(t.lru_owner(&[11, 12]), Some(11), "candidates filter applies");
+        assert_eq!(t.lru_owner(&[99]), None);
+        assert_eq!(t.release_owned(10), 1);
+        assert_eq!(t.free_slots(), 1);
+        // Deferred release: slot stays allocated until the flush.
+        t.release_after_ops(b);
+        assert_eq!(t.in_use(), 2);
+        t.flush_releases();
+        assert_eq!(t.in_use(), 1);
+        let _ = a;
+    }
+
+    #[test]
+    fn payload_bytes_by_format() {
+        let mut t = TierState::new(TierConfig::new(1));
+        t.set_geometry(3, 8); // 3 layers, width 8
+        // Int8: 2 (K,V) * 3 layers * filled * 8 B + 16 B scale/zero per layer.
+        assert_eq!(t.payload_bytes(4), (2 * 3 * 4 * 8 + 16 * 3) as u64);
+        let mut f = TierState::new(TierConfig { quant: KvQuant::F32, ..TierConfig::new(1) });
+        f.set_geometry(3, 8);
+        assert_eq!(f.payload_bytes(4), (2 * 3 * 4 * 8 * 4) as u64);
+    }
+
+    #[test]
+    fn config_parse_and_describe() {
+        assert_eq!(KvQuant::parse("int8"), Some(KvQuant::Int8));
+        assert_eq!(KvQuant::parse("f32"), Some(KvQuant::F32));
+        assert_eq!(KvQuant::parse("q4"), None);
+        let c = TierConfig::new(64);
+        assert_eq!(c.describe(), "cold=64xint8 swap=always");
+        let d = TierConfig {
+            direct_read_min_frac: Some(0.75),
+            quant: KvQuant::F32,
+            policy: SwapPolicy::Never,
+            ..TierConfig::new(8)
+        };
+        assert_eq!(d.describe(), "cold=8xf32 swap=never direct>=0.75");
+    }
+}

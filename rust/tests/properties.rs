@@ -8,7 +8,9 @@ use nncase_repro::dist::{reshard_cost_bytes, NdSbp, Placement, Sbp};
 use nncase_repro::egraph::{extract_greedy, EGraph, Runner, RunnerLimits};
 use nncase_repro::ir::{BinaryKind, DType, Graph, NodeId, UnaryKind};
 use nncase_repro::model::Qwen3Config;
-use nncase_repro::ntt::{matmul_blocked, matmul_naive, Tensor};
+use nncase_repro::ntt::{
+    dequantize_block_i8, matmul_blocked, matmul_naive, quantize_block_i8, Tensor,
+};
 use nncase_repro::rewrite::transpose_rules;
 use nncase_repro::sim::{simulate_decode, Framework};
 use nncase_repro::util::Rng;
@@ -187,6 +189,47 @@ fn prop_simulator_monotonicity() {
         } else {
             assert!(tput(&c06_f16, 1) > 0.85 * tput(&c06_f32, 1));
         }
+    }
+}
+
+/// Cold-tier quantization invariants: for random blocks of random sizes
+/// and scales, the int8 per-block round trip is bounded by `scale / 2`
+/// per element (affine rounding), and degenerate blocks — constant
+/// values, where `scale == 0` — round-trip exactly through the
+/// zero-point.
+#[test]
+fn prop_kv_quant_roundtrip_bounded() {
+    let mut rng = Rng::new(0xC01D);
+    for round in 0..50 {
+        let n = 1 + rng.below(512);
+        // Sweep magnitudes across several orders so the bound is
+        // exercised on tiny and huge dynamic ranges alike.
+        let mag = 10f32.powi(rng.below(7) as i32 - 3);
+        let offset = (rng.normal()) * mag;
+        let src: Vec<f32> = (0..n).map(|_| rng.normal() * mag + offset).collect();
+        let mut q = vec![0i8; n];
+        let (scale, zero) = quantize_block_i8(&src, &mut q);
+        assert!(scale >= 0.0, "round {round}: negative scale");
+        let mut back = vec![0.0f32; n];
+        dequantize_block_i8(&q, scale, zero, &mut back);
+        // scale/2 from round-to-nearest, plus a whisker of f32 slack on
+        // the reconstruction arithmetic itself.
+        let bound = scale * 0.5 + (zero.abs() + 256.0 * scale) * 1e-6;
+        for (i, (a, b)) in src.iter().zip(&back).enumerate() {
+            assert!(
+                (a - b).abs() <= bound,
+                "round {round} elem {i}: |{a} - {b}| > {bound} (scale {scale})"
+            );
+        }
+        // Constant block of the same magnitude: exact.
+        let c = rng.normal() * mag;
+        let cst = vec![c; n];
+        let mut qc = vec![0i8; n];
+        let (s, z) = quantize_block_i8(&cst, &mut qc);
+        assert_eq!(s, 0.0, "round {round}: constant block must have scale 0");
+        let mut out = vec![0.0f32; n];
+        dequantize_block_i8(&qc, s, z, &mut out);
+        assert_eq!(out, cst, "round {round}: constant block must round-trip exactly");
     }
 }
 

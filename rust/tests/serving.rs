@@ -13,7 +13,7 @@ use nncase_repro::coordinator::{
     synthetic_workload, Coordinator, Qwen3Engine, Request, ServePolicy, ServeReport,
 };
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
-use nncase_repro::serving::ContinuousConfig;
+use nncase_repro::serving::{ContinuousConfig, KvQuant, TierConfig};
 
 fn coordinator(seed: u64, threads: usize) -> (Qwen3Config, Coordinator) {
     let cfg = Qwen3Config::tiny();
@@ -59,7 +59,13 @@ fn continuous_matches_fcfs_oracle() {
         let got = serve_continuous(
             11,
             &reqs,
-            ContinuousConfig { block_size: 4, num_blocks: 64, max_batch: 4, threads: 1 },
+            ContinuousConfig {
+                block_size: 4,
+                num_blocks: 64,
+                max_batch: 4,
+                threads: 1,
+                tiering: None,
+            },
             threads,
         );
         assert_eq!(
@@ -120,7 +126,13 @@ fn preemption_is_invisible_in_outputs() {
         let got = serve_continuous(
             13,
             &reqs,
-            ContinuousConfig { block_size: 4, num_blocks: 5, max_batch: 2, threads: 1 },
+            ContinuousConfig {
+                block_size: 4,
+                num_blocks: 5,
+                max_batch: 2,
+                threads: 1,
+                tiering: None,
+            },
             threads,
         );
         assert_eq!(
@@ -164,7 +176,13 @@ fn prefix_sharing_reduces_block_pressure() {
         serve_continuous(
             14,
             reqs,
-            ContinuousConfig { block_size, num_blocks: 32, max_batch: 1, threads: 1 },
+            ContinuousConfig {
+                block_size,
+                num_blocks: 32,
+                max_batch: 1,
+                threads: 1,
+                tiering: None,
+            },
             1,
         )
     };
@@ -183,6 +201,129 @@ fn prefix_sharing_reduces_block_pressure() {
     let (_, mut oracle) = coordinator(14, 1);
     let want = oracle.serve(&shared_reqs);
     assert_eq!(want.outputs, shared.outputs);
+}
+
+/// A pool sized below the working set with tiering present-but-disabled
+/// (`tiering: None` is the default — asserted here explicitly) stays
+/// bitwise-identical to the FCFS oracle at every worker count: the
+/// tiered subsystem must be invisible until it is switched on.
+#[test]
+fn tiering_disabled_is_bitwise_identical_under_pressure() {
+    let (cfg, mut oracle) = coordinator(21, 1);
+    let reqs = synthetic_workload(3, 4, 12, cfg.vocab);
+    let want = oracle.serve(&reqs);
+    for threads in thread_counts() {
+        let got = serve_continuous(
+            21,
+            &reqs,
+            ContinuousConfig {
+                block_size: 4,
+                num_blocks: 7,
+                max_batch: 3,
+                threads: 1,
+                tiering: None,
+            },
+            threads,
+        );
+        assert_eq!(
+            want.outputs, got.outputs,
+            "disabled tiering changed outputs at {threads} threads"
+        );
+        let m = got.serving.expect("continuous metrics");
+        assert!(m.preemptions > 0, "the tiny pool must still preempt");
+        assert_eq!(m.swap_preemptions, 0);
+        assert!(!m.tiered);
+    }
+}
+
+/// The lossless tier: f32 swap-based preemption under forced pool
+/// pressure is *bitwise* identical to the FCFS oracle while replacing
+/// every recompute with a swap — the strongest differential evidence
+/// that the spill/fetch plumbing moves KV without corrupting it.
+#[test]
+fn tiered_f32_swap_is_bitwise_identical_to_oracle() {
+    let (cfg, mut oracle) = coordinator(22, 1);
+    let reqs = synthetic_workload(3, 4, 12, cfg.vocab);
+    let want = oracle.serve(&reqs);
+    for threads in thread_counts() {
+        let got = serve_continuous(
+            22,
+            &reqs,
+            ContinuousConfig {
+                block_size: 4,
+                num_blocks: 7,
+                max_batch: 3,
+                threads: 1,
+                tiering: Some(TierConfig { quant: KvQuant::F32, ..TierConfig::new(16) }),
+            },
+            threads,
+        );
+        assert_eq!(
+            want.outputs, got.outputs,
+            "lossless swap changed outputs at {threads} threads"
+        );
+        let m = got.serving.expect("continuous metrics");
+        assert!(m.swap_preemptions > 0, "forced pressure must swap");
+        assert_eq!(m.recompute_preemptions, 0, "swap must fully replace recompute");
+        assert_eq!(m.replay_steps, 0, "swapped sequences resume, never replay");
+        assert!(m.swap_points.is_empty(), "f32 is lossless: no divergence points");
+    }
+}
+
+/// The lossy tier: int8 swap under forced pressure finishes every
+/// request with zero recompute-preemptions, and each sequence's output
+/// may diverge from the oracle only *at or after* its first resume over
+/// quantized KV (`swap_points`); sequences never swapped stay exact.
+#[test]
+fn tiered_int8_swap_diverges_only_after_reread() {
+    let (cfg, mut oracle) = coordinator(23, 1);
+    let reqs = synthetic_workload(3, 4, 12, cfg.vocab);
+    let want = oracle.serve(&reqs);
+    // Both the fetch path and the direct-read path must honor the bound.
+    let tiers = [
+        TierConfig::new(16),
+        TierConfig { direct_read_min_frac: Some(0.5), ..TierConfig::new(16) },
+    ];
+    for tier in tiers {
+        let direct = tier.direct_read_min_frac.is_some();
+        for threads in thread_counts() {
+            let got = serve_continuous(
+                23,
+                &reqs,
+                ContinuousConfig {
+                    block_size: 4,
+                    num_blocks: 7,
+                    max_batch: 3,
+                    threads: 1,
+                    tiering: Some(tier.clone()),
+                },
+                threads,
+            );
+            let m = got.serving.as_ref().expect("continuous metrics");
+            assert!(m.swap_preemptions > 0, "forced pressure must swap");
+            assert_eq!(m.recompute_preemptions, 0, "swap must fully replace recompute");
+            assert_eq!(m.replay_steps, 0);
+            if direct {
+                assert!(m.cold_direct_reads > 0, "direct-read swap-ins must occur");
+            }
+            for (id, toks) in &got.outputs {
+                let oracle_toks =
+                    &want.outputs.iter().find(|(i, _)| i == id).expect("same request set").1;
+                assert_eq!(toks.len(), 12, "request {id} must finish all tokens");
+                match m.swap_points.iter().find(|(i, _)| i == id) {
+                    None => assert_eq!(
+                        &toks, &oracle_toks,
+                        "request {id} never resumed over quantized KV; must stay exact"
+                    ),
+                    Some(&(_, at)) => assert_eq!(
+                        toks[..at],
+                        oracle_toks[..at],
+                        "request {id} diverged before its first quantized re-read at {at}"
+                    ),
+                }
+            }
+        }
+    }
 }
 
 /// The engine's own generate() agrees with serve() outputs (the report

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Compare two serve-bench JSON reports and warn on decode-throughput
+regressions.
+
+Seeds the perf-regression tracker ROADMAP asks for: the CI bench-smoke
+job downloads the previous successful run's `serve-bench.json` artifact
+and diffs it against the fresh one. Samples are matched on
+(mode, pressure, threads); any decode_tok_s drop beyond --warn-pct
+emits a GitHub `::warning::` annotation. Exit code is always 0 — quick
+bench-smoke runs on shared runners are too noisy to gate merges on, so
+this warns and records rather than fails (flip --strict once a few runs
+have accumulated and the noise floor is known).
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench-compare: cannot read {path}: {e}")
+        return None
+
+
+def key(sample):
+    # Older reports predate the "mode" field; default keeps them comparable.
+    return (sample.get("mode", "sweep"), sample["pressure"], sample["threads"])
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--prev", required=True, help="previous run's serve-bench.json")
+    ap.add_argument("--cur", required=True, help="this run's serve-bench.json")
+    ap.add_argument("--warn-pct", type=float, default=10.0,
+                    help="decode-throughput drop (percent) that triggers a warning")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when a regression is found")
+    args = ap.parse_args()
+
+    if not Path(args.prev).exists():
+        print(f"bench-compare: no previous report at {args.prev} (first run?) — skipping")
+        return 0
+    prev, cur = load(args.prev), load(args.cur)
+    if prev is None or cur is None:
+        return 0
+    if prev.get("quick") != cur.get("quick"):
+        print("bench-compare: quick-mode mismatch between runs — skipping (not comparable)")
+        return 0
+
+    prev_by_key = {key(s): s for s in prev.get("samples", [])}
+    regressions = []
+    for s in cur.get("samples", []):
+        p = prev_by_key.get(key(s))
+        if p is None or p["decode_tok_s"] <= 0.0:
+            continue
+        delta_pct = 100.0 * (s["decode_tok_s"] - p["decode_tok_s"]) / p["decode_tok_s"]
+        tag = ""
+        if delta_pct < -args.warn_pct:
+            tag = "  <-- REGRESSION"
+            regressions.append((key(s), delta_pct))
+        print(f"  {key(s)}: {p['decode_tok_s']:.2f} -> {s['decode_tok_s']:.2f} tok/s "
+              f"({delta_pct:+.1f}%){tag}")
+
+    if regressions:
+        for k, pct in regressions:
+            print(f"::warning title=decode-throughput regression::"
+                  f"{k}: {pct:+.1f}% vs previous run (threshold -{args.warn_pct:.0f}%)")
+        if args.strict:
+            return 1
+    else:
+        print(f"bench-compare: no decode-throughput regression beyond {args.warn_pct:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,11 +12,16 @@
 //!
 //! Run: `cargo run --release --example qwen3_serve`
 //! (add `-- --kv-cold-blocks 96 [--kv-quant int8|f32]` for the tiered
-//! KV-storage demo over a deliberately small hot pool).
+//! KV-storage demo over a deliberately small hot pool, and
+//! `--weight-quant int8|int4` to store the GEMM weight plane as
+//! group-wise codes streamed through the fused dequant-GEMM kernels —
+//! the FCFS engine then runs the fake-quantized oracle weights, so the
+//! cross-engine equality asserts below still hold bitwise).
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
 use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServePolicy};
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
+use nncase_repro::ntt::WeightQuant;
 use nncase_repro::serving::{ContinuousConfig, KvQuant, TierConfig};
 
 fn opt(args: &[String], name: &str) -> Option<String> {
@@ -25,7 +30,13 @@ fn opt(args: &[String], name: &str) -> Option<String> {
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let cfg = Qwen3Config::tiny();
+    let wq = match opt(&args, "--weight-quant") {
+        Some(q) => {
+            WeightQuant::parse(&q).unwrap_or_else(|| panic!("bad --weight-quant {q:?}"))
+        }
+        None => WeightQuant::F32,
+    };
+    let cfg = Qwen3Config::tiny().with_weight_quant(wq);
     let weights_path = std::path::Path::new("artifacts/weights.bin");
     let load = |()| -> Qwen3Weights {
         if weights_path.exists() {
@@ -37,10 +48,11 @@ fn main() {
         }
     };
     println!(
-        "model: {} — {} params, {} weight bytes, vocab {}",
+        "model: {} — {} params, {} weight bytes [{}], vocab {}",
         cfg.name,
         cfg.param_count(),
         nncase_repro::util::human_bytes(cfg.weight_bytes() as usize),
+        cfg.weight_quant.name(),
         cfg.vocab
     );
 

@@ -17,15 +17,24 @@
 //! * memory-pressure scenario (hot pool ~ half the working set):
 //!   swap-based preemption through the int8 cold tier beats
 //!   recompute-based preemption on decode throughput (recompute pays
-//!   for replayed positions inside decode time; swap does not).
+//!   for replayed positions inside decode time; swap does not);
+//! * weight-quant scenario: group-wise int8 weights (fused
+//!   dequant-GEMM, ~¼ of the f32 weight stream) beat f32 decode
+//!   throughput at batch 1 and batch 16.
 //!
 //! Env knobs (the CI bench-smoke job sets both):
 //! * `PALLAS_BENCH_QUICK=1` — reduced workload for a fast smoke signal;
-//!   the thread-speedup assert becomes a warning (short quick-mode runs
-//!   on shared runners are too noisy to gate CI on).
+//!   the thread-speedup, swap and weight-quant throughput asserts
+//!   become warnings (short quick-mode runs on shared runners are too
+//!   noisy to gate CI on).
 //! * `PALLAS_BENCH_JSON=path` — write the sweep as a JSON report.
 //!
-//! Run: `cargo bench --bench serve`
+//! Args: `--weight-quant f32|int8|int4` stores the *sweep* scenarios'
+//! weight plane in that format (CI runs the quick bench once more with
+//! int8, so the FCFS-vs-continuous token-identity assert and the
+//! regression tracker also cover the fused dequant-GEMM path).
+//!
+//! Run: `cargo bench --bench serve [-- --weight-quant int8]`
 
 mod bench_util;
 
@@ -34,12 +43,18 @@ use std::fmt::Write as _;
 use bench_util::row;
 use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServePolicy};
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
+use nncase_repro::ntt::WeightQuant;
 use nncase_repro::serving::{ContinuousConfig, TierConfig};
 
 struct Sample {
     /// Scenario the sample belongs to: "sweep" (FCFS-vs-continuous),
-    /// "pressure-recompute" or "pressure-swap" (the tiered scenario).
+    /// "pressure-recompute" / "pressure-swap" (the tiered scenario), or
+    /// "wquant" (f32-vs-int8 weight storage).
     mode: &'static str,
+    /// Weight-plane storage of the run ("f32" / "int8" / "int4").
+    weight_quant: &'static str,
+    /// Model weight footprint in that format, bytes.
+    weight_bytes: u64,
     pressure: usize,
     threads: usize,
     decode_tok_s: f64,
@@ -54,9 +69,17 @@ fn json_report(samples: &[Sample], quick: bool) -> String {
     for (i, s) in samples.iter().enumerate() {
         let _ = write!(
             out,
-            "    {{\"mode\": \"{}\", \"pressure\": {}, \"threads\": {}, \
+            "    {{\"mode\": \"{}\", \"weight_quant\": \"{}\", \"weight_bytes\": {}, \
+             \"pressure\": {}, \"threads\": {}, \
              \"decode_tok_s\": {:.3}, \"wall_s\": {:.4}, \"speedup_vs_fcfs\": {:.3}}}",
-            s.mode, s.pressure, s.threads, s.decode_tok_s, s.wall_s, s.speedup_vs_fcfs
+            s.mode,
+            s.weight_quant,
+            s.weight_bytes,
+            s.pressure,
+            s.threads,
+            s.decode_tok_s,
+            s.wall_s,
+            s.speedup_vs_fcfs
         );
         out.push_str(if i + 1 < samples.len() { ",\n" } else { "\n" });
     }
@@ -66,17 +89,29 @@ fn json_report(samples: &[Sample], quick: bool) -> String {
 
 fn main() {
     let quick = std::env::var("PALLAS_BENCH_QUICK").is_ok();
-    let cfg = Qwen3Config::tiny();
+    // `--weight-quant f32|int8|int4` stores the sweep scenarios' weight
+    // plane in that format (the CI bench-smoke job runs the quick bench
+    // once more with int8).
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sweep_wq = args
+        .iter()
+        .position(|a| a == "--weight-quant")
+        .and_then(|i| args.get(i + 1))
+        .map(|q| WeightQuant::parse(q).unwrap_or_else(|| panic!("bad --weight-quant {q:?}")))
+        .unwrap_or(WeightQuant::F32);
+    let cfg = Qwen3Config::tiny().with_weight_quant(sweep_wq);
     // Quick mode: fewer generated tokens and pressures — a smoke signal
     // for CI, not a measurement.
     let (prompt_len, max_new) = if quick { (4usize, 10usize) } else { (8, 32) };
     let pressures: &[usize] = if quick { &[1, 16] } else { &[1, 4, 16] };
     let thread_counts = [1usize, 4];
     println!(
-        "== serving: FCFS vs continuous batching x threads ({}, {}+{} tokens/request{}) ==",
+        "== serving: FCFS vs continuous batching x threads ({}, {}+{} tokens/request, \
+         weights {}{}) ==",
         cfg.name,
         prompt_len,
         max_new,
+        sweep_wq.name(),
         if quick { ", quick" } else { "" }
     );
 
@@ -141,6 +176,8 @@ fn main() {
             }
             samples.push(Sample {
                 mode: "sweep",
+                weight_quant: sweep_wq.name(),
+                weight_bytes: cfg.weight_bytes(),
                 pressure,
                 threads: cont_rep.threads,
                 decode_tok_s: cont_rep.decode_tokens_per_s,
@@ -210,6 +247,8 @@ fn main() {
     for (mode, rep) in [("pressure-recompute", &recompute_rep), ("pressure-swap", &swap_rep)] {
         samples.push(Sample {
             mode,
+            weight_quant: sweep_wq.name(),
+            weight_bytes: cfg.weight_bytes(),
             pressure,
             threads: 1,
             decode_tok_s: rep.decode_tokens_per_s,
@@ -231,6 +270,74 @@ fn main() {
             swap_rep.decode_tokens_per_s,
             recompute_rep.decode_tokens_per_s,
         );
+    }
+
+    // == Weight-quant scenario: f32 vs group-wise int8 weight storage,
+    // continuous decode at batch 1 and batch 16. ==
+    // Decode streams the full weight plane every iteration; int8 codes
+    // cut that stream to ~¼ (the fused dequant-GEMM kernels expand one
+    // 2 KB panel group at a time in L1), so int8 decode throughput must
+    // beat f32 at both batch widths on a memory-bound host. Always run
+    // from the base config so the comparison is canonical even when
+    // `--weight-quant` re-pointed the sweep above.
+    let mut wq_tok_s = Vec::new(); // (pressure, f32 tok/s, int8 tok/s)
+    for &pressure in &[1usize, 16] {
+        let reqs = synthetic_workload(pressure, prompt_len, max_new, cfg.vocab);
+        let mut per_mode = [0.0f64; 2];
+        for (mi, mode) in [WeightQuant::F32, WeightQuant::Int8].into_iter().enumerate() {
+            let qcfg = Qwen3Config::tiny().with_weight_quant(mode);
+            let mut c = Coordinator::new(Qwen3Engine::new(
+                Qwen3Weights::random(&qcfg, 42),
+                1,
+                prompt_len + max_new + 1,
+            ));
+            let rep = c.serve_with_policy(
+                &reqs,
+                ServePolicy::Continuous(ContinuousConfig {
+                    block_size: 16,
+                    num_blocks: 4 * pressure + 8,
+                    max_batch: pressure,
+                    threads: 1,
+                    tiering: None,
+                }),
+            );
+            per_mode[mi] = rep.decode_tokens_per_s;
+            samples.push(Sample {
+                mode: "wquant",
+                weight_quant: mode.name(),
+                weight_bytes: qcfg.weight_bytes(),
+                pressure,
+                threads: 1,
+                decode_tok_s: rep.decode_tokens_per_s,
+                wall_s: rep.wall_s,
+                speedup_vs_fcfs: 0.0,
+            });
+        }
+        let ratio = if per_mode[0] > 0.0 { per_mode[1] / per_mode[0] } else { 0.0 };
+        row(
+            &format!("wquant batch {pressure:>2}"),
+            format!(
+                "f32 {:>8.2} tok/s | int8 {:>8.2} tok/s | {ratio:>5.2}x",
+                per_mode[0], per_mode[1]
+            ),
+        );
+        wq_tok_s.push((pressure, per_mode[0], per_mode[1]));
+    }
+    for &(pressure, f32_tok_s, i8_tok_s) in &wq_tok_s {
+        if quick {
+            if i8_tok_s <= f32_tok_s {
+                println!(
+                    "WARN: int8 <= f32 weight decode at batch {pressure} \
+                     ({i8_tok_s:.2} vs {f32_tok_s:.2} tok/s) — not gating (quick)"
+                );
+            }
+        } else {
+            assert!(
+                i8_tok_s > f32_tok_s,
+                "int8-weight decode must beat f32 at batch {pressure} \
+                 (got {i8_tok_s:.2} vs {f32_tok_s:.2} tok/s)"
+            );
+        }
     }
 
     if let Ok(path) = std::env::var("PALLAS_BENCH_JSON") {

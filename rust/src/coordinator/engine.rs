@@ -28,7 +28,20 @@ impl KvCache {
 
 /// The decode engine.
 pub struct Qwen3Engine {
+    /// Pristine model weights (the batched engine quantizes its packed
+    /// plane from these when `cfg.weight_quant` is quantized).
     pub weights: Qwen3Weights,
+    /// Fake-quantized twin used by [`Qwen3Engine::decode_step`] when
+    /// `cfg.weight_quant` is quantized: the GEMM matrices round-tripped
+    /// through their `QuantMat`, i.e. the exact f32 values the fused
+    /// dequant-GEMM kernels FMA. The dense engine has no fused kernels
+    /// of its own, but running on these keeps it the *bit-exact*
+    /// differential oracle for the quantized batched path. Built
+    /// lazily on the first dense decode step — a continuous-only serve
+    /// never reads it, and eagerly holding a second full f32 copy of
+    /// the model would double the resident weights for nothing. Always
+    /// `None` on the F32 path (zero cost, bitwise the seed behaviour).
+    fq: Option<Qwen3Weights>,
     pub kv: Vec<KvCache>,
     pub threads: usize,
     max_seq: usize,
@@ -45,7 +58,7 @@ impl Qwen3Engine {
         let width = cfg.kv_heads * cfg.head_dim;
         let kv = (0..cfg.layers).map(|_| KvCache::new(max_seq, width)).collect();
         let threads = threads.clamp(1, cfg.partition_width());
-        Qwen3Engine { weights, kv, threads, max_seq }
+        Qwen3Engine { weights, fq: None, kv, threads, max_seq }
     }
 
     pub fn cfg(&self) -> &Qwen3Config {
@@ -68,6 +81,11 @@ impl Qwen3Engine {
     /// decode slower than 1T on small models (see EXPERIMENTS.md §Perf).
     pub fn decode_step(&mut self, token: usize, pos: usize) -> Vec<f32> {
         assert!(pos < self.max_seq, "KV cache overflow");
+        // Lazily materialize the fake-quantized twin on the first dense
+        // step under a quantized weight plane (see the field doc).
+        if self.weights.cfg.weight_quant.is_quantized() && self.fq.is_none() {
+            self.fq = Some(self.weights.fake_quantized(self.weights.cfg.weight_quant));
+        }
         let cfg = self.weights.cfg.clone();
         let h = cfg.hidden;
         let hd = cfg.head_dim;
@@ -97,7 +115,10 @@ impl Qwen3Engine {
         // for the checked invariant).
         let kv_cell = KvCell::new(&mut self.kv);
 
-        let weights = &self.weights;
+        // Compute over the fake-quantized twin when the config asks for
+        // a quantized weight plane (field borrows stay disjoint from
+        // the `&mut self.kv` held by `kv_cell` above).
+        let weights = self.fq.as_ref().unwrap_or(&self.weights);
         let barrier = SpinBarrier::new(t);
         std::thread::scope(|s| {
             for wi in 0..t {

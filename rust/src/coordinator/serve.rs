@@ -40,6 +40,17 @@ pub struct ServeReport {
     /// for continuous) — outputs are identical at any value, so this is
     /// a performance annotation, not a result descriptor.
     pub threads: usize,
+    /// Weight-plane storage mode of the run (`Qwen3Config::weight_quant`
+    /// — unlike `threads`, a quantized mode *is* a result descriptor:
+    /// int8/int4 runs may diverge from the f32 oracle within the
+    /// documented error bound).
+    pub weight_quant: crate::ntt::WeightQuant,
+    /// Resident model weight footprint in the `weight_quant` format
+    /// (`Qwen3Config::weight_bytes`, embedding included): what
+    /// `kv_block_budget` callers reserve out of machine memory. For the
+    /// per-token weight *traffic* (embedding excluded — it is gathered,
+    /// not streamed) see `Qwen3Config::decode_stream_bytes`.
+    pub weight_bytes: u64,
     pub wall_s: f64,
     /// Decode throughput over the decode-timed tokens only, computed
     /// from directly accumulated decode seconds (never `mean * count`).
@@ -70,12 +81,15 @@ pub struct ServeReport {
 impl ServeReport {
     pub fn render(&self) -> String {
         let mut s = format!(
-            "requests={} prompt_toks={} gen_toks={} threads={} wall={:.2}s decode={:.2} tok/s \
-             ttft p50={:.2}ms tok_lat p50={:.2}ms p99={:.2}ms req_lat mean={:.2}s",
+            "requests={} prompt_toks={} gen_toks={} threads={} weights={}/{} wall={:.2}s \
+             decode={:.2} tok/s ttft p50={:.2}ms tok_lat p50={:.2}ms p99={:.2}ms \
+             req_lat mean={:.2}s",
             self.requests,
             self.prompt_tokens,
             self.generated_tokens,
             self.threads,
+            crate::util::human_bytes(self.weight_bytes as usize),
+            self.weight_quant.name(),
             self.wall_s,
             self.decode_tokens_per_s,
             self.ttft.percentile(50.0) * 1e3,
@@ -176,6 +190,8 @@ impl Coordinator {
             prompt_tokens,
             generated_tokens: generated,
             threads: self.engine.threads,
+            weight_quant: self.engine.cfg().weight_quant,
+            weight_bytes: self.engine.cfg().weight_bytes(),
             wall_s,
             decode_tokens_per_s: if decode_s > 0.0 { decode_steps as f64 / decode_s } else { 0.0 },
             token_latency,
@@ -259,6 +275,8 @@ impl Coordinator {
             prompt_tokens: requests.iter().map(|r| r.prompt.len()).sum(),
             generated_tokens: outputs.iter().map(|(_, t)| t.len()).sum(),
             threads,
+            weight_quant: self.engine.cfg().weight_quant,
+            weight_bytes: self.engine.cfg().weight_bytes(),
             wall_s: wall.elapsed().as_secs_f64(),
             decode_tokens_per_s: metrics.decode_tokens_per_s(),
             token_latency: metrics.tpot.clone(),
@@ -314,6 +332,30 @@ mod tests {
         assert!(rep.serving.is_none());
         assert_eq!(rep.threads, 2, "FCFS report records the dense engine's threads");
         assert!(rep.render().contains("threads=2"));
+        // Weight footprint + quant mode are surfaced in the report.
+        assert_eq!(rep.weight_quant, crate::ntt::WeightQuant::F32);
+        assert_eq!(rep.weight_bytes, cfg.weight_bytes());
+        assert!(rep.render().contains("weights="), "{}", rep.render());
+        assert!(rep.render().contains("/f32"), "{}", rep.render());
+    }
+
+    #[test]
+    fn quantized_run_is_recorded_in_report() {
+        use crate::ntt::WeightQuant;
+        let cfg = Qwen3Config::tiny().with_weight_quant(WeightQuant::Int8);
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
+        let reqs = synthetic_workload(2, 4, 3, cfg.vocab);
+        for policy in [
+            ServePolicy::Fcfs,
+            ServePolicy::Continuous(ContinuousConfig::default()),
+        ] {
+            let rep = c.serve_with_policy(&reqs, policy);
+            assert_eq!(rep.weight_quant, WeightQuant::Int8);
+            assert_eq!(rep.weight_bytes, cfg.weight_bytes());
+            assert!(rep.render().contains("/int8"), "{}", rep.render());
+            assert_eq!(rep.generated_tokens, 6, "quantized runs must still finish");
+        }
     }
 
     #[test]

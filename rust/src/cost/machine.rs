@@ -73,7 +73,10 @@ impl MachineSpec {
     /// blocks of `block_bytes` fit after reserving `reserved_bytes`
     /// (weights + activations) out of `mem_capacity_bytes`. This is the
     /// same hard memory constraint Auto Distribution enforces per device
-    /// (Observation 2), applied to the serving-side KV pool.
+    /// (Observation 2), applied to the serving-side KV pool. Callers
+    /// reserve `Qwen3Config::weight_bytes()`, which prices the GEMM
+    /// plane at the config's `weight_quant` — quantized weights free
+    /// budget for more KV blocks, the second half of the low-bit win.
     pub fn kv_block_budget(&self, reserved_bytes: u64, block_bytes: u64) -> u64 {
         if block_bytes == 0 {
             return 0;

@@ -31,6 +31,26 @@ pub fn roofline_time_s(
     t_comp.max(t_mem)
 }
 
+/// Weight-stream floor of one decode step, seconds: every decode token
+/// streams the GEMM weight plane + norms once (the embedding table is
+/// *not* streamed — decode gathers one row per token), so the
+/// memory-bound decode throughput ceiling is
+/// `1 / decode_weight_stream_s`. Priced from
+/// [`crate::model::Qwen3Config::decode_stream_bytes`], which accounts
+/// the GEMM matrices in the config's `weight_quant` format — group-wise
+/// int8 weights cut the streamed bytes to ~¼ of f32 (int4 to ~⅛), which
+/// is exactly the lever the fused dequant-GEMM kernels turn into decode
+/// throughput (the llama.cpp/MNN-LLM low-bit-decode story). Compute
+/// overlaps with the stream under the roofline, so this is a floor,
+/// not an estimate.
+pub fn decode_weight_stream_s(
+    cfg: &crate::model::Qwen3Config,
+    machine: &MachineSpec,
+    threads: usize,
+) -> f64 {
+    cfg.decode_stream_bytes() as f64 / machine.dram_bw(threads)
+}
+
 /// Roofline weight of a single e-node. Packed (blocked-layout) compute
 /// ops run at higher efficiency — the tensor-unit saturation the paper's
 /// MetaPackOperation trades against layout-conversion cost. Pack/Unpack
@@ -97,6 +117,29 @@ mod tests {
             flat.ns
         );
         assert_eq!(packed.flops, flat.flops);
+    }
+
+    #[test]
+    fn quantized_weight_stream_lifts_the_decode_ceiling() {
+        use crate::model::Qwen3Config;
+        use crate::ntt::WeightQuant;
+        let m = MachineSpec::ryzen_5900x();
+        let f32c = Qwen3Config::qwen3_0_6b(crate::ir::DType::F32);
+        let i8c = f32c.clone().with_weight_quant(WeightQuant::Int8);
+        let i4c = f32c.clone().with_weight_quant(WeightQuant::Int4);
+        let t_f32 = decode_weight_stream_s(&f32c, &m, 1);
+        let t_i8 = decode_weight_stream_s(&i8c, &m, 1);
+        let t_i4 = decode_weight_stream_s(&i4c, &m, 1);
+        // The streamed plane is essentially all GEMM matrices (the
+        // embedding is gathered, not streamed, and norms are tiny), so
+        // int8 cuts the floor to ~1.25/4 ≈ 0.31 of f32.
+        assert!(t_i8 < t_f32 / 3.0, "int8 stream floor {t_i8} vs f32 {t_f32}");
+        assert!(t_i4 < t_i8, "int4 must stream less than int8");
+        // Sanity: the floor prices streamed bytes, not the resident
+        // footprint (which includes the embedding table).
+        let want = f32c.decode_stream_bytes() as f64 / m.dram_bw(1);
+        assert!((t_f32 - want).abs() < 1e-12);
+        assert!(f32c.decode_stream_bytes() < f32c.weight_bytes());
     }
 
     #[test]

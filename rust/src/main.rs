@@ -12,6 +12,7 @@ use nncase_repro::coordinator::{Coordinator, Qwen3Engine, ServePolicy};
 use nncase_repro::cost::MachineSpec;
 use nncase_repro::ir::DType;
 use nncase_repro::model::{decode_graph, Qwen3Config, Qwen3Weights};
+use nncase_repro::ntt::WeightQuant;
 use nncase_repro::pipeline::{CompileOptions, Compiler};
 use nncase_repro::runtime::{Manifest, PjrtRuntime};
 use nncase_repro::serving::{ContinuousConfig, KvQuant, TierConfig};
@@ -33,6 +34,7 @@ fn usage() -> ! {
          inspect   [--emit-cpp] [--model tiny]\n\
          serve     [--threads N] [--requests N] [--max-new N] [--policy fcfs|continuous]\n\
          \x20          [--max-batch N] [--kv-cold-blocks N] [--kv-quant int8|f32]\n\
+         \x20          [--weight-quant f32|int8|int4]\n\
          sweep     [--figure 9|10]\n\
          artifacts [--dir artifacts]"
     );
@@ -114,11 +116,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 opt(&args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(8);
             let max_new: usize =
                 opt(&args, "--max-new").and_then(|v| v.parse().ok()).unwrap_or(32);
-            let cfg = Qwen3Config::tiny();
+            // Weight-plane storage: f32 (seed), or group-wise int8/int4
+            // streamed through the fused dequant-GEMM kernels. Applies
+            // to both policies (the FCFS engine runs the fake-quantized
+            // oracle weights, so the two stay differentially testable).
+            let wq = match opt(&args, "--weight-quant") {
+                Some(q) => WeightQuant::parse(&q)
+                    .unwrap_or_else(|| panic!("bad --weight-quant {q:?}")),
+                None => WeightQuant::F32,
+            };
+            let cfg = Qwen3Config::tiny().with_weight_quant(wq);
             println!(
-                "serving {} ({} params, {} threads)",
+                "serving {} ({} params, {} weights [{}], {} threads)",
                 cfg.name,
                 cfg.param_count(),
+                nncase_repro::util::human_bytes(cfg.weight_bytes() as usize),
+                cfg.weight_quant.name(),
                 threads
             );
             let w = Qwen3Weights::random(&cfg, 42);

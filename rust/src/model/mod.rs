@@ -10,7 +10,7 @@
 //!   execution backend.
 
 use crate::ir::{BinaryKind, DType, Graph, NodeId, Op, UnaryKind};
-use crate::ntt::Tensor;
+use crate::ntt::{QuantMat, Tensor, WeightQuant};
 use crate::util::Rng;
 
 /// Qwen3 architecture hyper-parameters.
@@ -28,6 +28,13 @@ pub struct Qwen3Config {
     /// RoPE base.
     pub rope_theta: f32,
     pub rms_eps: f32,
+    /// Storage format of the GEMM weight plane (projections + LM head):
+    /// `F32` is the unquantized seed path; `Int8`/`Int4` store
+    /// group-wise affine codes that the engines stream through fused
+    /// dequant-GEMM kernels (embedding and norm vectors always stay in
+    /// `dtype`). Threaded through engine build (`Qwen3Engine`,
+    /// `BatchEngine`) and priced by [`Qwen3Config::weight_bytes`].
+    pub weight_quant: WeightQuant,
 }
 
 impl Qwen3Config {
@@ -45,6 +52,7 @@ impl Qwen3Config {
             dtype,
             rope_theta: 1.0e6,
             rms_eps: 1e-6,
+            weight_quant: WeightQuant::F32,
         }
     }
 
@@ -62,6 +70,7 @@ impl Qwen3Config {
             dtype,
             rope_theta: 1.0e6,
             rms_eps: 1e-6,
+            weight_quant: WeightQuant::F32,
         }
     }
 
@@ -80,6 +89,7 @@ impl Qwen3Config {
             dtype: DType::F32,
             rope_theta: 1.0e4,
             rms_eps: 1e-6,
+            weight_quant: WeightQuant::F32,
         }
     }
 
@@ -102,9 +112,78 @@ impl Qwen3Config {
             + h * self.vocab as u64 // lm head
     }
 
-    /// Bytes of all weights in this config's dtype.
+    /// Builder: the same architecture with the GEMM weight plane stored
+    /// as `quant` (see [`WeightQuant`]).
+    pub fn with_weight_quant(mut self, quant: WeightQuant) -> Self {
+        self.weight_quant = quant;
+        self
+    }
+
+    /// `(k, n)` shapes of the quantizable GEMM matrices as the engines
+    /// pack them: the 7 per-layer projections plus the LM head.
+    /// Embedding and norm vectors are not GEMM operands and stay in
+    /// `dtype`.
+    fn matrix_shapes(&self) -> Vec<(usize, usize)> {
+        let h = self.hidden;
+        let qd = self.heads * self.head_dim;
+        let kvd = self.kv_heads * self.head_dim;
+        let inter = self.intermediate;
+        let mut shapes = Vec::with_capacity(self.layers * 7 + 1);
+        for _ in 0..self.layers {
+            shapes.extend_from_slice(&[
+                (h, qd),    // wq
+                (h, kvd),   // wk
+                (h, kvd),   // wv
+                (qd, h),    // wo
+                (h, inter), // w_gate
+                (h, inter), // w_up
+                (inter, h), // w_down
+            ]);
+        }
+        shapes.push((h, self.vocab)); // lm_head
+        shapes
+    }
+
+    /// Parameters of the quantizable GEMM weight plane (the matrices
+    /// `weight_quant` applies to).
+    pub fn matrix_param_count(&self) -> u64 {
+        self.matrix_shapes().iter().map(|&(k, n)| (k * n) as u64).sum()
+    }
+
+    /// Bytes of the GEMM weight plane in the `weight_quant` format
+    /// (payload + group scale/zero overhead, exact per-matrix group
+    /// accounting — see [`WeightQuant::matrix_bytes`]).
+    pub fn matrix_weight_bytes(&self) -> u64 {
+        let nb = self.dtype.size_bytes();
+        self.matrix_shapes()
+            .iter()
+            .map(|&(k, n)| self.weight_quant.matrix_bytes(k, n, nb))
+            .sum()
+    }
+
+    /// Bytes of all weights as the engines store them (the *resident*
+    /// footprint): the GEMM matrices in the `weight_quant` format,
+    /// everything else (embedding, norms) in `dtype`. The pre-quant
+    /// version priced every parameter at `dtype` width; once the weight
+    /// plane is quantized that assumption is dead — it overstated the
+    /// reservation `MachineSpec::kv_block_budget` callers subtract from
+    /// machine memory. For the per-token weight *traffic* see
+    /// [`Qwen3Config::decode_stream_bytes`].
     pub fn weight_bytes(&self) -> u64 {
-        self.param_count() * self.dtype.size_bytes() as u64
+        let rest = self.param_count() - self.matrix_param_count();
+        self.matrix_weight_bytes() + rest * self.dtype.size_bytes() as u64
+    }
+
+    /// Bytes one decode step actually *streams*: the GEMM plane in the
+    /// `weight_quant` format plus the norm vectors. The embedding table
+    /// is excluded — decode gathers one embedding row per token, not
+    /// the table — so this is the per-token weight-traffic floor
+    /// (`cost::decode_weight_stream_s`), distinct from the resident
+    /// footprint [`Qwen3Config::weight_bytes`].
+    pub fn decode_stream_bytes(&self) -> u64 {
+        let embedding = (self.vocab * self.hidden) as u64;
+        let rest = self.param_count() - self.matrix_param_count() - embedding;
+        self.matrix_weight_bytes() + rest * self.dtype.size_bytes() as u64
     }
 
     /// Per-token KV cache bytes.
@@ -263,6 +342,44 @@ impl Qwen3Weights {
             lm_head: Tensor::randn(&[h, cfg.vocab], &mut rng, s),
         }
     }
+
+    /// The weight values a `quant`-mode engine actually multiplies by:
+    /// every GEMM matrix round-tripped through its [`QuantMat`]
+    /// (embedding and norms untouched; `F32` is a plain clone). The
+    /// dense FCFS engine runs on these when `cfg.weight_quant` is
+    /// quantized, so it stays the *bit-exact* differential oracle for
+    /// the fused dequant-GEMM path — same f32 values (`QuantMat`
+    /// decodes with the same expressions), same accumulation order.
+    pub fn fake_quantized(&self, quant: WeightQuant) -> Qwen3Weights {
+        let fq = |t: &Tensor| -> Tensor {
+            if quant.is_quantized() {
+                QuantMat::quantize(t, quant).dequantize()
+            } else {
+                t.clone()
+            }
+        };
+        Qwen3Weights {
+            cfg: self.cfg.clone(),
+            embedding: self.embedding.clone(),
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerWeights {
+                    attn_norm: l.attn_norm.clone(),
+                    wq: fq(&l.wq),
+                    wk: fq(&l.wk),
+                    wv: fq(&l.wv),
+                    wo: fq(&l.wo),
+                    mlp_norm: l.mlp_norm.clone(),
+                    w_gate: fq(&l.w_gate),
+                    w_up: fq(&l.w_up),
+                    w_down: fq(&l.w_down),
+                })
+                .collect(),
+            final_norm: self.final_norm.clone(),
+            lm_head: fq(&self.lm_head),
+        }
+    }
 }
 
 impl Qwen3Weights {
@@ -384,6 +501,50 @@ mod tests {
         let f32c = Qwen3Config::qwen3_0_6b(DType::F32);
         let f16c = Qwen3Config::qwen3_0_6b(DType::F16);
         assert_eq!(f32c.weight_bytes(), 2 * f16c.weight_bytes());
+    }
+
+    #[test]
+    fn quantized_weight_bytes_shrink_the_footprint() {
+        // F32 weight-quant must reproduce the seed accounting exactly
+        // (the formula refactor is invisible until quantization is on).
+        let f32c = Qwen3Config::tiny();
+        assert_eq!(f32c.weight_bytes(), f32c.param_count() * 4);
+        let i8c = Qwen3Config::tiny().with_weight_quant(WeightQuant::Int8);
+        let i4c = Qwen3Config::tiny().with_weight_quant(WeightQuant::Int4);
+        assert!(
+            i8c.weight_bytes() < f32c.weight_bytes() / 2,
+            "int8 must at least halve the footprint: {} vs {}",
+            i8c.weight_bytes(),
+            f32c.weight_bytes()
+        );
+        assert!(i4c.weight_bytes() < i8c.weight_bytes(), "int4 under int8");
+        // Only the GEMM plane shrinks: embedding/norm bytes are shared.
+        let rest = f32c.weight_bytes() - f32c.matrix_weight_bytes();
+        assert_eq!(i8c.weight_bytes() - i8c.matrix_weight_bytes(), rest);
+        // The matrix plane covers most of a real model's parameters.
+        assert!(f32c.matrix_param_count() * 2 > f32c.param_count());
+    }
+
+    #[test]
+    fn fake_quantized_perturbs_matrices_only() {
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 8);
+        let fq = w.fake_quantized(WeightQuant::Int8);
+        assert_eq!(fq.embedding.data, w.embedding.data, "embedding must stay exact");
+        assert_eq!(fq.layers[0].attn_norm.data, w.layers[0].attn_norm.data);
+        assert_ne!(fq.layers[0].wq.data, w.layers[0].wq.data, "wq must be perturbed");
+        // ...but only within the per-group affine bound (loose check).
+        let maxd = fq.layers[0]
+            .wq
+            .data
+            .iter()
+            .zip(&w.layers[0].wq.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(maxd < 1e-2, "int8 weight perturbation too large: {maxd}");
+        // F32 is the identity.
+        let id = w.fake_quantized(WeightQuant::F32);
+        assert_eq!(id.layers[0].wq.data, w.layers[0].wq.data);
     }
 
     #[test]

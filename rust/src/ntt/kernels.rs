@@ -255,19 +255,8 @@ pub fn matmul_prepacked_rows(
         return;
     }
     assert_eq!(row_lo % MR, 0, "row_lo must be MR-aligned");
-    // Pack this shard's rows into MR-row panels: same layout and zero
-    // padding as the matching slice of `pack_a`'s output.
     let panels = (row_hi - row_lo).div_ceil(MR);
-    scratch.clear();
-    scratch.reserve(panels * MR * k);
-    for ib in 0..panels {
-        for p in 0..k {
-            for i in 0..MR {
-                let row = row_lo + ib * MR + i;
-                scratch.push(if row < rows { x[row * k + p] } else { 0.0 });
-            }
-        }
-    }
+    pack_a_shard(x, rows, k, row_lo, panels, scratch);
     let mut acc = [0.0f32; MR * NR];
     for ib in 0..panels {
         let apan = &scratch[ib * MR * k..(ib + 1) * MR * k];
@@ -287,6 +276,389 @@ pub fn matmul_prepacked_rows(
                         c_rows[(row - row_lo) * n + col] = acc[i * NR + j];
                     }
                 }
+            }
+        }
+    }
+}
+
+/// Group length (along K) of the group-wise affine weight quantization:
+/// one scale/zero pair per `QGROUP` consecutive K elements of a column.
+/// 32 matches the llama.cpp/MNN-LLM ballpark — small enough that one
+/// outlier cannot blow up a whole column's scale, large enough that the
+/// scale/zero overhead stays at 8 bytes per 32 (int8) or 16 (int4)
+/// payload bytes.
+pub const QGROUP: usize = 32;
+
+/// Storage format of the engine's packed weight plane (the GEMM
+/// matrices: per-layer projections + LM head). Threaded from
+/// `Qwen3Config::weight_quant` through engine build; `F32` is the
+/// unquantized seed path (`PackedMat`), the quantized modes store
+/// group-wise affine codes (`QuantMat`) that the fused dequant-GEMM
+/// kernels expand one panel group at a time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightQuant {
+    /// Unquantized native-dtype weights (the seed behaviour, bitwise).
+    F32,
+    /// Group-wise affine int8: 1 byte/element + scale/zero per group.
+    Int8,
+    /// Group-wise affine int4: 2 elements/byte + scale/zero per group.
+    Int4,
+}
+
+impl WeightQuant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightQuant::F32 => "f32",
+            WeightQuant::Int8 => "int8",
+            WeightQuant::Int4 => "int4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WeightQuant> {
+        match s {
+            "f32" | "fp32" | "none" => Some(WeightQuant::F32),
+            "int8" | "i8" => Some(WeightQuant::Int8),
+            "int4" | "i4" => Some(WeightQuant::Int4),
+            _ => None,
+        }
+    }
+
+    /// True for the lossy (quantized) modes.
+    pub fn is_quantized(&self) -> bool {
+        !matches!(self, WeightQuant::F32)
+    }
+
+    /// Stored bytes of a `[k, n]` weight matrix in this format
+    /// (payload + per-`(column, QGROUP-group)` scale/zero overhead;
+    /// excludes panel padding). `native_bytes` prices the `F32`
+    /// (unquantized) mode, so F16-dtype *models* keep their 2-byte
+    /// accounting.
+    pub fn matrix_bytes(&self, k: usize, n: usize, native_bytes: usize) -> u64 {
+        let elems = (k * n) as u64;
+        let group_overhead = (k.div_ceil(QGROUP) * n * 2 * 4) as u64;
+        match self {
+            WeightQuant::F32 => elems * native_bytes as u64,
+            WeightQuant::Int8 => elems + group_overhead,
+            WeightQuant::Int4 => elems.div_ceil(2) + group_overhead,
+        }
+    }
+}
+
+/// Group-wise affine quantized weight matrix, stored in the same
+/// NR-column panel layout as [`PackedMat`]: panel `jb` covers columns
+/// `[jb*NR, (jb+1)*NR)`, and within a panel row `p` (a K index) holds
+/// the NR codes of that K row. Quantization is per `(column, K-group)`
+/// — group `g` covers K rows `[g*QGROUP, (g+1)*QGROUP)` — with the same
+/// affine convention as the KV cold tier (`quantize_block_i8`): int8
+/// codes decode as `zero + (code + 128) * scale`, int4 codes (two per
+/// byte, low nibble = even panel column) as `zero + code * scale`.
+/// Columns padding the last panel quantize as constant zeros (scale 0),
+/// so they decode to exactly 0.0 and the writeback clip discards them.
+#[derive(Debug, Clone)]
+pub struct QuantMat {
+    pub k: usize,
+    pub n: usize,
+    /// Group length along K (== [`QGROUP`]; last group may be shorter).
+    pub group: usize,
+    codes: QuantCodes,
+    /// Per `(panel, group, panel column)` scale, index
+    /// `(jb * groups + g) * NR + j`.
+    scales: Vec<f32>,
+    /// Zero-points, same layout as `scales`.
+    zeros: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+enum QuantCodes {
+    /// One i8 per element, `(jb * k + p) * NR + j`.
+    I8(Vec<i8>),
+    /// Two 4-bit codes per byte packed along the panel column axis:
+    /// byte `(jb * k + p) * NR/2 + j/2` holds columns `2*(j/2)` (low
+    /// nibble) and `2*(j/2) + 1` (high nibble).
+    I4(Vec<u8>),
+}
+
+impl QuantMat {
+    /// Quantize a `[k, n]` weight tensor. `mode` must be a quantized
+    /// variant (`F32` weights stay in [`PackedMat`]; see [`WeightMat`]).
+    pub fn quantize(w: &Tensor, mode: WeightQuant) -> Self {
+        let (k, n) = (w.dim(0), w.dim(1));
+        let group = QGROUP;
+        let groups = k.div_ceil(group);
+        let npan = n.div_ceil(NR);
+        let mut scales = vec![0.0f32; npan * groups * NR];
+        let mut zeros = vec![0.0f32; npan * groups * NR];
+        let mut strip = [0.0f32; QGROUP];
+        let mut codes = match mode {
+            WeightQuant::Int8 => QuantCodes::I8(vec![0i8; npan * k * NR]),
+            WeightQuant::Int4 => QuantCodes::I4(vec![0u8; npan * k * (NR / 2)]),
+            WeightQuant::F32 => panic!("QuantMat::quantize needs a quantized mode"),
+        };
+        for jb in 0..npan {
+            for jj in 0..NR {
+                let col = jb * NR + jj;
+                for g in 0..groups {
+                    let k0 = g * group;
+                    let glen = (k - k0).min(group);
+                    if col < n {
+                        for (p, s) in strip[..glen].iter_mut().enumerate() {
+                            *s = w.data[(k0 + p) * n + col];
+                        }
+                    } else {
+                        strip[..glen].fill(0.0);
+                    }
+                    let si = (jb * groups + g) * NR + jj;
+                    match &mut codes {
+                        QuantCodes::I8(c) => {
+                            let mut cbuf = [0i8; QGROUP];
+                            let (s, z) = quantize_block_i8(&strip[..glen], &mut cbuf[..glen]);
+                            scales[si] = s;
+                            zeros[si] = z;
+                            for p in 0..glen {
+                                c[(jb * k + k0 + p) * NR + jj] = cbuf[p];
+                            }
+                        }
+                        QuantCodes::I4(c) => {
+                            let mut cbuf = [0u8; QGROUP];
+                            let (s, z) = quantize_block_i4(&strip[..glen], &mut cbuf[..glen]);
+                            scales[si] = s;
+                            zeros[si] = z;
+                            let shift = (jj % 2) * 4;
+                            for p in 0..glen {
+                                c[(jb * k + k0 + p) * (NR / 2) + jj / 2] |= cbuf[p] << shift;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        QuantMat { k, n, group, codes, scales, zeros }
+    }
+
+    /// Number of K groups.
+    pub fn groups(&self) -> usize {
+        self.k.div_ceil(self.group)
+    }
+
+    /// Stored bytes (codes + scales + zeros).
+    pub fn bytes(&self) -> usize {
+        let payload = match &self.codes {
+            QuantCodes::I8(c) => c.len(),
+            QuantCodes::I4(c) => c.len(),
+        };
+        payload + (self.scales.len() + self.zeros.len()) * 4
+    }
+
+    /// Dequantize panel `jb`'s K group `g` into `wbuf` (row `p` of the
+    /// group at `wbuf[p*NR..]`, same layout as a [`PackedMat`] panel
+    /// slice). Returns the group's row count. This is the *only* f32
+    /// materialization of quantized weights on the GEMM path, and it is
+    /// one panel group (≤ `QGROUP * NR` floats, 2 KB) at a time.
+    #[inline]
+    fn dequant_panel_group(&self, jb: usize, g: usize, wbuf: &mut [f32; QGROUP * NR]) -> usize {
+        let k0 = g * self.group;
+        let glen = (self.k - k0).min(self.group);
+        let sbase = (jb * self.groups() + g) * NR;
+        let scales = &self.scales[sbase..sbase + NR];
+        let zeros = &self.zeros[sbase..sbase + NR];
+        match &self.codes {
+            QuantCodes::I8(c) => {
+                for p in 0..glen {
+                    let row = &c[(jb * self.k + k0 + p) * NR..][..NR];
+                    let out = &mut wbuf[p * NR..(p + 1) * NR];
+                    for (j, o) in out.iter_mut().enumerate() {
+                        *o = dequant_i8(row[j], scales[j], zeros[j]);
+                    }
+                }
+            }
+            QuantCodes::I4(c) => {
+                for p in 0..glen {
+                    let row = &c[(jb * self.k + k0 + p) * (NR / 2)..][..NR / 2];
+                    let out = &mut wbuf[p * NR..(p + 1) * NR];
+                    for (b, &byte) in row.iter().enumerate() {
+                        out[2 * b] = dequant_i4(byte & 0x0F, scales[2 * b], zeros[2 * b]);
+                        out[2 * b + 1] =
+                            dequant_i4(byte >> 4, scales[2 * b + 1], zeros[2 * b + 1]);
+                    }
+                }
+            }
+        }
+        glen
+    }
+
+    /// Decode the whole matrix back to a `[k, n]` f32 tensor — exactly
+    /// the values the fused kernel FMAs (same `dequant_*` expressions),
+    /// which makes a dense engine over this tensor a *bit-exact* oracle
+    /// for [`matmul_quant_rows`] (`Qwen3Weights::fake_quantized`).
+    pub fn dequantize(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.k, self.n]);
+        let mut wbuf = [0.0f32; QGROUP * NR];
+        for jb in 0..self.n.div_ceil(NR) {
+            for g in 0..self.groups() {
+                let glen = self.dequant_panel_group(jb, g, &mut wbuf);
+                let k0 = g * self.group;
+                for p in 0..glen {
+                    for j in 0..NR {
+                        let col = jb * NR + j;
+                        if col < self.n {
+                            t.data[(k0 + p) * self.n + col] = wbuf[p * NR + j];
+                        }
+                    }
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Rows `[row_lo, row_hi)` of `C = X @ dq(Wq)` over a group-quantized
+/// weight matrix — the fused dequant-GEMM mirror of
+/// [`matmul_prepacked_rows`] (same shard contract: MR-aligned `row_lo`,
+/// caller-owned disjoint `c_rows`, shared `scratch`).
+///
+/// Per `(column panel, K group)` the codes are dequantized **once**
+/// into a 2 KB stack buffer and FMAd into the accumulator tiles of
+/// every MR-row panel of the shard, so the weight stream is the
+/// quantized bytes (¼ / ⅛ of f32) and no full f32 weight matrix ever
+/// exists. Accumulation stays ascending-k per output element (groups
+/// ascending, rows ascending within a group), so the result is
+/// bit-identical to [`matmul_prepacked_rows`] over
+/// `PackedMat::pack(&wq.dequantize())` at any shard partitioning.
+pub fn matmul_quant_rows(
+    x: &[f32],
+    rows: usize,
+    w: &QuantMat,
+    row_lo: usize,
+    row_hi: usize,
+    c_rows: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
+    let (k, n) = (w.k, w.n);
+    assert!(row_lo <= row_hi && row_hi <= rows, "bad row range");
+    assert_eq!(x.len(), rows * k, "X shape mismatch");
+    assert_eq!(c_rows.len(), (row_hi - row_lo) * n, "C shape mismatch");
+    if row_lo == row_hi {
+        return;
+    }
+    assert_eq!(row_lo % MR, 0, "row_lo must be MR-aligned");
+    let panels = (row_hi - row_lo).div_ceil(MR);
+    // scratch = the shard's A panels (same `pack_a_shard` layout as
+    // `matmul_prepacked_rows`) followed by one accumulator tile per
+    // A panel for the current column panel.
+    pack_a_shard(x, rows, k, row_lo, panels, scratch);
+    scratch.resize(panels * MR * k + panels * MR * NR, 0.0);
+    let (apack, accs) = scratch.split_at_mut(panels * MR * k);
+    let mut wbuf = [0.0f32; QGROUP * NR];
+    for jb in 0..n.div_ceil(NR) {
+        accs.fill(0.0);
+        for g in 0..w.groups() {
+            let glen = w.dequant_panel_group(jb, g, &mut wbuf);
+            let k0 = g * w.group;
+            for ib in 0..panels {
+                let apan = &apack[(ib * k + k0) * MR..(ib * k + k0 + glen) * MR];
+                let acc: &mut [f32; MR * NR] =
+                    (&mut accs[ib * MR * NR..(ib + 1) * MR * NR]).try_into().unwrap();
+                ukernel(apan, &wbuf[..glen * NR], glen, acc);
+            }
+        }
+        // Write back this column panel's tiles (bounds-clipped).
+        for ib in 0..panels {
+            for i in 0..MR {
+                let row = row_lo + ib * MR + i;
+                if row >= row_hi {
+                    break;
+                }
+                for j in 0..NR {
+                    let col = jb * NR + j;
+                    if col < n {
+                        c_rows[(row - row_lo) * n + col] = accs[ib * MR * NR + i * NR + j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The engine weight plane: an unquantized [`PackedMat`] or a
+/// group-quantized [`QuantMat`] behind one dispatch, so the batched
+/// engine shards its GEMMs identically in every `WeightQuant` mode
+/// (same row-shard contract, same accumulation order per element).
+#[derive(Debug, Clone)]
+pub enum WeightMat {
+    F32(PackedMat),
+    Quant(QuantMat),
+}
+
+impl WeightMat {
+    /// Pack (or quantize) a `[k, n]` weight tensor for `mode`.
+    pub fn prepare(w: &Tensor, mode: WeightQuant) -> Self {
+        match mode {
+            WeightQuant::F32 => WeightMat::F32(PackedMat::pack(w)),
+            _ => WeightMat::Quant(QuantMat::quantize(w, mode)),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            WeightMat::F32(m) => m.n,
+            WeightMat::Quant(m) => m.n,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            WeightMat::F32(m) => m.k,
+            WeightMat::Quant(m) => m.k,
+        }
+    }
+
+    /// Stored bytes of the packed/quantized panels.
+    pub fn bytes(&self) -> usize {
+        match self {
+            WeightMat::F32(m) => m.bytes(),
+            WeightMat::Quant(m) => m.bytes(),
+        }
+    }
+
+    /// Row-shard matmul: [`matmul_prepacked_rows`] or
+    /// [`matmul_quant_rows`] (identical shard + determinism contract).
+    pub fn matmul_rows(
+        &self,
+        x: &[f32],
+        rows: usize,
+        row_lo: usize,
+        row_hi: usize,
+        c_rows: &mut [f32],
+        scratch: &mut Vec<f32>,
+    ) {
+        match self {
+            WeightMat::F32(m) => matmul_prepacked_rows(x, rows, m, row_lo, row_hi, c_rows, scratch),
+            WeightMat::Quant(m) => matmul_quant_rows(x, rows, m, row_lo, row_hi, c_rows, scratch),
+        }
+    }
+}
+
+/// Pack rows `[row_lo, row_lo + panels*MR)` of X (row-major
+/// `[rows, k]`) into MR-row A panels: same layout and zero padding as
+/// the matching slice of [`pack_a`]'s output. Shared by
+/// [`matmul_prepacked_rows`] and [`matmul_quant_rows`] — both kernels'
+/// bitwise shard-composition contract depends on this exact layout, so
+/// it must not fork.
+fn pack_a_shard(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    row_lo: usize,
+    panels: usize,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(panels * MR * k);
+    for ib in 0..panels {
+        for p in 0..k {
+            for i in 0..MR {
+                let row = row_lo + ib * MR + i;
+                out.push(if row < rows { x[row * k + p] } else { 0.0 });
             }
         }
     }
@@ -404,6 +776,170 @@ pub fn dequantize_block_i8(q: &[i8], scale: f32, zero: f32, out: &mut [f32]) {
     assert_eq!(q.len(), out.len());
     for (o, &c) in out.iter_mut().zip(q) {
         *o = dequant_i8(c, scale, zero);
+    }
+}
+
+/// Group-wise affine int8 over a flat slice: chunks of `group` elements
+/// quantized independently through [`quantize_block_i8`] (last chunk
+/// may be shorter). `scales`/`zeros` hold one pair per group
+/// (`src.len().div_ceil(group)` groups). Properties (pinned by
+/// `rust/tests/properties.rs`): per-group round trip within
+/// `scales[g] / 2`, constant groups exact.
+pub fn quantize_groups_i8(
+    src: &[f32],
+    group: usize,
+    codes: &mut [i8],
+    scales: &mut [f32],
+    zeros: &mut [f32],
+) {
+    assert!(group > 0, "group must be positive");
+    let groups = src.len().div_ceil(group);
+    assert_eq!(codes.len(), src.len());
+    assert_eq!(scales.len(), groups);
+    assert_eq!(zeros.len(), groups);
+    for g in 0..groups {
+        let lo = g * group;
+        let hi = (lo + group).min(src.len());
+        let (s, z) = quantize_block_i8(&src[lo..hi], &mut codes[lo..hi]);
+        scales[g] = s;
+        zeros[g] = z;
+    }
+}
+
+/// Inverse of [`quantize_groups_i8`].
+pub fn dequantize_groups_i8(
+    codes: &[i8],
+    group: usize,
+    scales: &[f32],
+    zeros: &[f32],
+    out: &mut [f32],
+) {
+    assert!(group > 0, "group must be positive");
+    assert_eq!(codes.len(), out.len());
+    let groups = codes.len().div_ceil(group);
+    assert_eq!(scales.len(), groups);
+    assert_eq!(zeros.len(), groups);
+    for g in 0..groups {
+        let lo = g * group;
+        let hi = (lo + group).min(codes.len());
+        dequantize_block_i8(&codes[lo..hi], scales[g], zeros[g], &mut out[lo..hi]);
+    }
+}
+
+/// Affine int4 quantization of one block: codes `0..=15` (one per `dst`
+/// byte, *unpacked* — see [`pack_i4`]), `zero` = block minimum,
+/// `scale = (max - min) / 15`, value decodes as `zero + code * scale`.
+/// Same contract as [`quantize_block_i8`]: round trip within
+/// `scale / 2`, constant blocks (scale 0) exact via the zero-point.
+pub fn quantize_block_i4(src: &[f32], dst: &mut [u8]) -> (f32, f32) {
+    assert_eq!(src.len(), dst.len());
+    if src.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in src {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let scale = (hi - lo) / 15.0;
+    if scale == 0.0 {
+        dst.fill(0);
+        return (0.0, lo);
+    }
+    let inv = 1.0 / scale;
+    for (q, &v) in dst.iter_mut().zip(src) {
+        *q = ((v - lo) * inv).round().clamp(0.0, 15.0) as u8;
+    }
+    (scale, lo)
+}
+
+/// Decode one int4 code of [`quantize_block_i4`].
+#[inline]
+pub fn dequant_i4(q: u8, scale: f32, zero: f32) -> f32 {
+    zero + q as f32 * scale
+}
+
+/// Dequantize a whole block of unpacked int4 codes back to f32.
+pub fn dequantize_block_i4(q: &[u8], scale: f32, zero: f32, out: &mut [f32]) {
+    assert_eq!(q.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(q) {
+        *o = dequant_i4(c, scale, zero);
+    }
+}
+
+/// Pack unpacked int4 codes (`0..=15`, one per byte) two per byte:
+/// `out[b] = codes[2b] | codes[2b+1] << 4` (odd tail leaves the high
+/// nibble 0). `out.len() == codes.len().div_ceil(2)`. [`unpack_i4`]
+/// inverts this exactly (pinned by `rust/tests/properties.rs`).
+pub fn pack_i4(codes: &[u8], out: &mut [u8]) {
+    assert_eq!(out.len(), codes.len().div_ceil(2));
+    for (b, o) in out.iter_mut().enumerate() {
+        debug_assert!(codes[2 * b] < 16, "int4 code out of range");
+        let hi = if 2 * b + 1 < codes.len() { codes[2 * b + 1] } else { 0 };
+        debug_assert!(hi < 16, "int4 code out of range");
+        *o = codes[2 * b] | (hi << 4);
+    }
+}
+
+/// Unpack `n` int4 codes packed by [`pack_i4`] back to one byte each.
+pub fn unpack_i4(packed: &[u8], n: usize, out: &mut [u8]) {
+    assert_eq!(packed.len(), n.div_ceil(2));
+    assert_eq!(out.len(), n);
+    for (i, o) in out.iter_mut().enumerate() {
+        let byte = packed[i / 2];
+        *o = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+    }
+}
+
+/// Group-wise affine int4 over a flat slice, packed two codes per byte
+/// per group ([`pack_i4`] per group, so groups stay independently
+/// addressable). `group` must be even so group payloads stay
+/// byte-aligned; `packed.len() == src.len().div_ceil(2)`.
+pub fn quantize_groups_i4(
+    src: &[f32],
+    group: usize,
+    packed: &mut [u8],
+    scales: &mut [f32],
+    zeros: &mut [f32],
+) {
+    assert!(group > 0 && group % 2 == 0, "group must be positive and even");
+    let groups = src.len().div_ceil(group);
+    assert_eq!(packed.len(), src.len().div_ceil(2));
+    assert_eq!(scales.len(), groups);
+    assert_eq!(zeros.len(), groups);
+    let mut cbuf = vec![0u8; group];
+    for g in 0..groups {
+        let lo = g * group;
+        let hi = (lo + group).min(src.len());
+        let (s, z) = quantize_block_i4(&src[lo..hi], &mut cbuf[..hi - lo]);
+        scales[g] = s;
+        zeros[g] = z;
+        pack_i4(&cbuf[..hi - lo], &mut packed[lo / 2..lo / 2 + (hi - lo).div_ceil(2)]);
+    }
+}
+
+/// Inverse of [`quantize_groups_i4`].
+pub fn dequantize_groups_i4(
+    packed: &[u8],
+    n: usize,
+    group: usize,
+    scales: &[f32],
+    zeros: &[f32],
+    out: &mut [f32],
+) {
+    assert!(group > 0 && group % 2 == 0, "group must be positive and even");
+    assert_eq!(packed.len(), n.div_ceil(2));
+    assert_eq!(out.len(), n);
+    let groups = n.div_ceil(group);
+    assert_eq!(scales.len(), groups);
+    assert_eq!(zeros.len(), groups);
+    let mut cbuf = vec![0u8; group];
+    for g in 0..groups {
+        let lo = g * group;
+        let hi = (lo + group).min(n);
+        unpack_i4(&packed[lo / 2..lo / 2 + (hi - lo).div_ceil(2)], hi - lo, &mut cbuf[..hi - lo]);
+        dequantize_block_i4(&cbuf[..hi - lo], scales[g], zeros[g], &mut out[lo..hi]);
     }
 }
 
@@ -724,6 +1260,115 @@ mod tests {
             &mut got_ctx,
         );
         assert_eq!(want_ctx, got_ctx);
+    }
+
+    #[test]
+    fn quant_matmul_is_bitwise_identical_to_dequant_oracle() {
+        // The fused dequant-GEMM contract: matmul over a QuantMat must
+        // equal matmul_prepacked over PackedMat::pack(dequantize()) bit
+        // for bit — the quantized path changes the weight *bytes
+        // streamed*, never the arithmetic — and any MR-aligned row
+        // partition must compose bitwise (the SPMD shard contract).
+        let mut rng = Rng::new(91);
+        for mode in [WeightQuant::Int8, WeightQuant::Int4] {
+            for &(rows, k, n) in &[(1usize, 48, 40), (5, 33, 17), (16, 64, 96), (10, 100, 24)] {
+                let x = Tensor::randn(&[rows, k], &mut rng, 1.0);
+                let w = Tensor::randn(&[k, n], &mut rng, 0.05);
+                let qm = QuantMat::quantize(&w, mode);
+                let pm = PackedMat::pack(&qm.dequantize());
+                let mut want = vec![0.0f32; rows * n];
+                matmul_prepacked(&x.data, rows, &pm, &mut want);
+                let mut scratch = Vec::new();
+                let mut got = vec![0.0f32; rows * n];
+                matmul_quant_rows(&x.data, rows, &qm, 0, rows, &mut got, &mut scratch);
+                assert_eq!(got, want, "{mode:?} ({rows},{k},{n}) fused != dequant oracle");
+                for parts in [2usize, 3] {
+                    let shards = crate::parallel::panel_splits(rows, MR, parts);
+                    let mut sharded = vec![0.0f32; rows * n];
+                    for &(lo, hi) in &shards {
+                        matmul_quant_rows(
+                            &x.data,
+                            rows,
+                            &qm,
+                            lo,
+                            hi,
+                            &mut sharded[lo * n..hi * n],
+                            &mut scratch,
+                        );
+                    }
+                    assert_eq!(sharded, want, "{mode:?} {parts}-way shard diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_mat_bytes_shrink_with_mode() {
+        let mut rng = Rng::new(92);
+        let w = Tensor::randn(&[128, 96], &mut rng, 0.05);
+        let f32b = WeightMat::prepare(&w, WeightQuant::F32).bytes();
+        let i8b = WeightMat::prepare(&w, WeightQuant::Int8).bytes();
+        let i4b = WeightMat::prepare(&w, WeightQuant::Int4).bytes();
+        assert!(i8b * 3 < f32b, "int8 panels must be well under a third of f32: {i8b}/{f32b}");
+        assert!(i4b < i8b, "int4 panels must be under int8: {i4b}/{i8b}");
+        // The config-level accounting agrees on the ordering too.
+        let m8 = WeightQuant::Int8.matrix_bytes(128, 96, 4);
+        let m4 = WeightQuant::Int4.matrix_bytes(128, 96, 4);
+        assert_eq!(WeightQuant::F32.matrix_bytes(128, 96, 4), 128 * 96 * 4);
+        assert!(m4 < m8 && m8 * 3 < 128 * 96 * 4);
+    }
+
+    #[test]
+    fn int4_pack_unpack_identity_and_roundtrip() {
+        let mut rng = Rng::new(93);
+        for n in [1usize, 2, 7, 32, 63] {
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+            let mut packed = vec![0u8; n.div_ceil(2)];
+            pack_i4(&codes, &mut packed);
+            let mut back = vec![0u8; n];
+            unpack_i4(&packed, n, &mut back);
+            assert_eq!(codes, back, "pack/unpack must be the identity at n={n}");
+        }
+        // Affine round trip within scale/2; constant block exact.
+        let src: Vec<f32> = (0..96).map(|_| rng.normal() * 0.5).collect();
+        let mut q = vec![0u8; src.len()];
+        let (scale, zero) = quantize_block_i4(&src, &mut q);
+        let mut out = vec![0.0f32; src.len()];
+        dequantize_block_i4(&q, scale, zero, &mut out);
+        for (a, b) in src.iter().zip(&out) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-6, "err {} > scale/2 {scale}", a - b);
+        }
+        let cst = vec![-1.5f32; 10];
+        let mut qc = vec![0u8; 10];
+        let (s, z) = quantize_block_i4(&cst, &mut qc);
+        assert_eq!(s, 0.0);
+        let mut back = vec![0.0f32; 10];
+        dequantize_block_i4(&qc, s, z, &mut back);
+        assert_eq!(back, cst);
+    }
+
+    #[test]
+    fn group_quant_helpers_roundtrip() {
+        let mut rng = Rng::new(94);
+        let src: Vec<f32> = (0..100).map(|_| rng.normal() * 2.0).collect();
+        let groups = src.len().div_ceil(QGROUP);
+        let (mut scales, mut zeros) = (vec![0.0f32; groups], vec![0.0f32; groups]);
+        let mut codes = vec![0i8; src.len()];
+        quantize_groups_i8(&src, QGROUP, &mut codes, &mut scales, &mut zeros);
+        let mut back = vec![0.0f32; src.len()];
+        dequantize_groups_i8(&codes, QGROUP, &scales, &zeros, &mut back);
+        for (g, (a, b)) in src.iter().zip(&back).enumerate() {
+            let bound = scales[g / QGROUP] * 0.5 + 1e-5;
+            assert!((a - b).abs() <= bound, "elem {g}: |{a}-{b}| > {bound}");
+        }
+        let mut packed = vec![0u8; src.len().div_ceil(2)];
+        quantize_groups_i4(&src, QGROUP, &mut packed, &mut scales, &mut zeros);
+        let mut back4 = vec![0.0f32; src.len()];
+        dequantize_groups_i4(&packed, src.len(), QGROUP, &scales, &zeros, &mut back4);
+        for (g, (a, b)) in src.iter().zip(&back4).enumerate() {
+            let bound = scales[g / QGROUP] * 0.5 + 1e-5;
+            assert!((a - b).abs() <= bound, "int4 elem {g}: |{a}-{b}| > {bound}");
+        }
     }
 
     #[test]

@@ -6,8 +6,11 @@
 //! is in the weight stream: decode is memory-bound on weights, and the
 //! FCFS path re-reads every projection matrix once per sequence per
 //! token. Here the projections of all `B` batched rows run as one GEMM
-//! over weights pre-packed at engine build ([`PackedMat`]), so the
-//! weight stream is paid once per iteration instead of `B` times.
+//! over weights pre-packed at engine build ([`WeightMat`]: f32 NR
+//! panels, or group-quantized int8/int4 codes streamed through the
+//! fused dequant-GEMM kernels when `Qwen3Config::weight_quant` asks for
+//! them — ¼/⅛ of the f32 weight bytes per iteration), so the weight
+//! stream is paid once per iteration instead of `B` times.
 //!
 //! **Threading.** [`BatchEngine::run`] opens one `thread::scope` per
 //! serve run — not per step — and parks `threads - 1` persistent workers
@@ -36,8 +39,8 @@ use crate::coordinator::argmax;
 use crate::model::{Qwen3Config, Qwen3Weights};
 use crate::ntt::{
     add_inplace, attn_context_paged, attn_context_paged_accum, attn_context_quant_i8,
-    attn_scores_paged, attn_scores_quant_i8, matmul_prepacked_rows, mul_inplace, paged_row,
-    rmsnorm, rope_inplace, silu_inplace, softmax_inplace, PackedMat, Tensor, MR,
+    attn_scores_paged, attn_scores_quant_i8, mul_inplace, paged_row, rmsnorm, rope_inplace,
+    silu_inplace, softmax_inplace, Tensor, WeightMat, MR,
 };
 use crate::parallel::{
     panel_splits, splits, KvCell, PoisonGuard, SharedCell, SharedVec, SpinBarrier,
@@ -68,14 +71,19 @@ impl PagedKv {
     }
 }
 
+/// One layer's packed weight plane. Each matrix is a [`WeightMat`]:
+/// f32 NR panels or group-quantized codes per `Qwen3Config::weight_quant`
+/// — the GEMM phases shard and accumulate identically in either mode,
+/// so quantization never touches the SPMD partition, the bitwise
+/// thread-count determinism, or the `KvCell` commit protocol.
 struct PackedLayer {
-    wq: PackedMat,
-    wk: PackedMat,
-    wv: PackedMat,
-    wo: PackedMat,
-    w_gate: PackedMat,
-    w_up: PackedMat,
-    w_down: PackedMat,
+    wq: WeightMat,
+    wk: WeightMat,
+    wv: WeightMat,
+    wo: WeightMat,
+    w_gate: WeightMat,
+    w_up: WeightMat,
+    w_down: WeightMat,
 }
 
 /// One sequence's slot in a batched iteration.
@@ -167,7 +175,7 @@ fn spmd_step(
     t: usize,
     weights: &Qwen3Weights,
     packed: &[PackedLayer],
-    packed_lm_head: &PackedMat,
+    packed_lm_head: &WeightMat,
     kv_cell: &KvCell<'_, PagedKv>,
     cold_cell: Option<&KvCell<'_, ColdKv>>,
     st: &StepState,
@@ -222,11 +230,11 @@ fn spmd_step(
         unsafe {
             let xn = &st.xn.read()[..b * h];
             let qs = st.q.slice_mut(p0 * qdim, p1 * qdim);
-            matmul_prepacked_rows(xn, b, &pw.wq, p0, p1, qs, scratch);
+            pw.wq.matmul_rows(xn, b, p0, p1, qs, scratch);
             let ks = st.kvec.slice_mut(p0 * kvdim, p1 * kvdim);
-            matmul_prepacked_rows(xn, b, &pw.wk, p0, p1, ks, scratch);
+            pw.wk.matmul_rows(xn, b, p0, p1, ks, scratch);
             let vs = st.vvec.slice_mut(p0 * kvdim, p1 * kvdim);
-            matmul_prepacked_rows(xn, b, &pw.wv, p0, p1, vs, scratch);
+            pw.wv.matmul_rows(xn, b, p0, p1, vs, scratch);
         }
         barrier.wait();
         // Phase 3: RoPE, per-sequence shard (positions differ per row).
@@ -365,7 +373,7 @@ fn spmd_step(
         unsafe {
             let ctx = &st.ctx.read()[..b * qdim];
             let os = st.attn.slice_mut(p0 * h, p1 * h);
-            matmul_prepacked_rows(ctx, b, &pw.wo, p0, p1, os, scratch);
+            pw.wo.matmul_rows(ctx, b, p0, p1, os, scratch);
         }
         barrier.wait();
         // Phase 7: residual + MLP RMSNorm, per-sequence shard.
@@ -389,9 +397,9 @@ fn spmd_step(
         unsafe {
             let xn = &st.xn.read()[..b * h];
             let gs = st.gate.slice_mut(p0 * inter, p1 * inter);
-            matmul_prepacked_rows(xn, b, &pw.w_gate, p0, p1, gs, scratch);
+            pw.w_gate.matmul_rows(xn, b, p0, p1, gs, scratch);
             let us = st.up.slice_mut(p0 * inter, p1 * inter);
-            matmul_prepacked_rows(xn, b, &pw.w_up, p0, p1, us, scratch);
+            pw.w_up.matmul_rows(xn, b, p0, p1, us, scratch);
             let g = st.gate.slice_mut(p0 * inter, p1 * inter);
             silu_inplace(g);
             mul_inplace(g, &st.up.read()[p0 * inter..p1 * inter]);
@@ -401,7 +409,7 @@ fn spmd_step(
         unsafe {
             let gate = &st.gate.read()[..b * inter];
             let ds = st.down.slice_mut(p0 * h, p1 * h);
-            matmul_prepacked_rows(gate, b, &pw.w_down, p0, p1, ds, scratch);
+            pw.w_down.matmul_rows(gate, b, p0, p1, ds, scratch);
         }
         barrier.wait();
         // Phase 10: residual, per-sequence shard.
@@ -430,7 +438,7 @@ fn spmd_step(
     unsafe {
         let xn = &st.xn.read()[..b * h];
         let ls = st.logits.slice_mut(p0 * vocab, p1 * vocab);
-        matmul_prepacked_rows(xn, b, packed_lm_head, p0, p1, ls, scratch);
+        packed_lm_head.matmul_rows(xn, b, p0, p1, ls, scratch);
     }
     // Final barrier: publishes every logits shard to the controller and
     // parks the workers for the next step.
@@ -441,7 +449,7 @@ fn spmd_step(
 pub struct BatchEngine<'w> {
     pub weights: &'w Qwen3Weights,
     packed: Vec<PackedLayer>,
-    packed_lm_head: PackedMat,
+    packed_lm_head: WeightMat,
     pub kv: PagedKv,
     /// Cold-tier arena (`Some` after [`BatchEngine::enable_tier`]).
     pub cold: Option<ColdKv>,
@@ -453,7 +461,7 @@ pub struct BatchEngine<'w> {
 pub struct BatchStepper<'a, 'kv> {
     weights: &'a Qwen3Weights,
     packed: &'a [PackedLayer],
-    packed_lm_head: &'a PackedMat,
+    packed_lm_head: &'a WeightMat,
     kv_cell: &'a KvCell<'kv, PagedKv>,
     cold_cell: Option<&'a KvCell<'kv, ColdKv>>,
     st: &'a StepState,
@@ -563,27 +571,49 @@ impl BatchStepper<'_, '_> {
 impl<'w> BatchEngine<'w> {
     pub fn new(weights: &'w Qwen3Weights, num_blocks: usize, block_size: usize) -> Self {
         let cfg = &weights.cfg;
+        // Pack (or group-quantize) the weight plane once at engine
+        // build, per the model's `weight_quant` mode.
+        let mode = cfg.weight_quant;
         let packed = weights
             .layers
             .iter()
             .map(|l| PackedLayer {
-                wq: PackedMat::pack(&l.wq),
-                wk: PackedMat::pack(&l.wk),
-                wv: PackedMat::pack(&l.wv),
-                wo: PackedMat::pack(&l.wo),
-                w_gate: PackedMat::pack(&l.w_gate),
-                w_up: PackedMat::pack(&l.w_up),
-                w_down: PackedMat::pack(&l.w_down),
+                wq: WeightMat::prepare(&l.wq, mode),
+                wk: WeightMat::prepare(&l.wk, mode),
+                wv: WeightMat::prepare(&l.wv, mode),
+                wo: WeightMat::prepare(&l.wo, mode),
+                w_gate: WeightMat::prepare(&l.w_gate, mode),
+                w_up: WeightMat::prepare(&l.w_up, mode),
+                w_down: WeightMat::prepare(&l.w_down, mode),
             })
             .collect();
         let kv = PagedKv::new(cfg.layers, num_blocks, block_size, cfg.kv_heads * cfg.head_dim);
         BatchEngine {
             weights,
             packed,
-            packed_lm_head: PackedMat::pack(&weights.lm_head),
+            packed_lm_head: WeightMat::prepare(&weights.lm_head, mode),
             kv,
             cold: None,
         }
+    }
+
+    /// Stored bytes of the packed/quantized weight plane (all layers +
+    /// LM head) — what one batched decode iteration streams.
+    pub fn weight_bytes(&self) -> usize {
+        let per_layer: usize = self
+            .packed
+            .iter()
+            .map(|p| {
+                p.wq.bytes()
+                    + p.wk.bytes()
+                    + p.wv.bytes()
+                    + p.wo.bytes()
+                    + p.w_gate.bytes()
+                    + p.w_up.bytes()
+                    + p.w_down.bytes()
+            })
+            .sum();
+        per_layer + self.packed_lm_head.bytes()
     }
 
     /// Attach a cold-tier arena of `cold_blocks` slots (call before
@@ -880,6 +910,61 @@ mod tests {
         be.run(2, 4, |stepper| {
             assert!(stepper.step(&[]).is_empty());
         });
+    }
+
+    #[test]
+    fn quantized_weights_match_fake_quant_oracle_bitwise() {
+        // The weight-quant contract: a batched engine over group-wise
+        // quantized weights (fused dequant-GEMM kernels) must produce
+        // exactly the logits of a plain f32 batched engine running over
+        // the *fake-quantized* weights (quantize→dequantize round trip)
+        // — the quantized path changes the bytes streamed, never the
+        // values FMAd or their accumulation order — at any worker count.
+        use crate::ntt::WeightQuant;
+        for mode in [WeightQuant::Int8, WeightQuant::Int4] {
+            let cfg_q = Qwen3Config::tiny().with_weight_quant(mode);
+            let w_q = Qwen3Weights::random(&cfg_q, 77);
+            // Same seed, f32 config, matrices round-tripped by hand.
+            let w_f = Qwen3Weights::random(&Qwen3Config::tiny(), 77).fake_quantized(mode);
+            let tables: Vec<Vec<u32>> = vec![vec![0, 1], vec![2, 3]];
+            let script: Vec<Vec<usize>> = vec![vec![7, 500], vec![42, 600], vec![9, 700]];
+            let run = |w: &Qwen3Weights, threads: usize| -> Vec<Vec<f32>> {
+                let mut be = BatchEngine::new(w, 8, 4);
+                be.run(threads, 2, |stepper| {
+                    script
+                        .iter()
+                        .enumerate()
+                        .map(|(pos, toks)| {
+                            let slots: Vec<StepSlot> = toks
+                                .iter()
+                                .enumerate()
+                                .map(|(i, &t)| StepSlot::hot(t, pos, &tables[i], true))
+                                .collect();
+                            stepper.step_logits(&slots, true).1
+                        })
+                        .collect()
+                })
+            };
+            let want = run(&w_f, 1);
+            for threads in [1usize, 2] {
+                let got = run(&w_q, threads);
+                assert_eq!(want, got, "{mode:?} fused path diverged at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_engine_streams_fewer_weight_bytes() {
+        use crate::ntt::WeightQuant;
+        let cfg = Qwen3Config::tiny();
+        let w_f = Qwen3Weights::random(&cfg, 5);
+        let w_8 = Qwen3Weights::random(&cfg.clone().with_weight_quant(WeightQuant::Int8), 5);
+        let w_4 = Qwen3Weights::random(&cfg.clone().with_weight_quant(WeightQuant::Int4), 5);
+        let f = BatchEngine::new(&w_f, 2, 4).weight_bytes();
+        let q8 = BatchEngine::new(&w_8, 2, 4).weight_bytes();
+        let q4 = BatchEngine::new(&w_4, 2, 4).weight_bytes();
+        assert!(q8 * 3 < f, "int8 plane must be well under a third of f32: {q8}/{f}");
+        assert!(q4 < q8, "int4 plane must be under int8: {q4}/{q8}");
     }
 
     #[test]

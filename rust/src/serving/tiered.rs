@@ -95,7 +95,10 @@ impl TierCostModel {
         TierCostModel {
             cold_bw_bytes_per_s: machine.cold_bw_gbps * 1e9,
             cold_alpha_s: machine.cold_alpha_s,
-            recompute_flops_per_s: machine.peak_flops(threads, 4),
+            // Peak at the model's dtype width (the old hard-coded `4`
+            // was dtype-blind: F16 models recompute with twice the
+            // lanes, which tilts the rule toward recompute).
+            recompute_flops_per_s: machine.peak_flops(threads, model.dtype.size_bytes()),
             flops_per_token: 2.0 * model.param_count() as f64,
         }
     }

@@ -9,7 +9,10 @@ use nncase_repro::egraph::{extract_greedy, EGraph, Runner, RunnerLimits};
 use nncase_repro::ir::{BinaryKind, DType, Graph, NodeId, UnaryKind};
 use nncase_repro::model::Qwen3Config;
 use nncase_repro::ntt::{
-    dequantize_block_i8, matmul_blocked, matmul_naive, quantize_block_i8, Tensor,
+    dequantize_block_i4, dequantize_block_i8, dequantize_groups_i4, dequantize_groups_i8,
+    matmul_blocked, matmul_naive, matmul_prepacked, matmul_quant_rows, pack_i4, quantize_block_i4,
+    quantize_block_i8, quantize_groups_i4, quantize_groups_i8, unpack_i4, PackedMat, QuantMat,
+    Tensor, WeightQuant,
 };
 use nncase_repro::rewrite::transpose_rules;
 use nncase_repro::sim::{simulate_decode, Framework};
@@ -230,6 +233,116 @@ fn prop_kv_quant_roundtrip_bounded() {
         let mut out = vec![0.0f32; n];
         dequantize_block_i8(&qc, s, z, &mut out);
         assert_eq!(out, cst, "round {round}: constant block must round-trip exactly");
+    }
+}
+
+/// Group-wise weight-quantization invariants, int8 and int4, over
+/// random lengths/magnitudes/group sizes: every element round-trips
+/// within its *group's* `scale / 2` (plus f32 reconstruction slack),
+/// constant groups round-trip exactly through the zero-point, and the
+/// int4 nibble pack/unpack is the identity on codes.
+#[test]
+fn prop_weight_group_quant_roundtrip_bounded() {
+    let mut rng = Rng::new(0x6A0);
+    for round in 0..40 {
+        let n = 1 + rng.below(400);
+        let group = [8usize, 32, 64][rng.below(3)];
+        let mag = 10f32.powi(rng.below(5) as i32 - 2);
+        let offset = rng.normal() * mag;
+        let src: Vec<f32> = (0..n).map(|_| rng.normal() * mag + offset).collect();
+        let groups = n.div_ceil(group);
+        let (mut scales, mut zeros) = (vec![0.0f32; groups], vec![0.0f32; groups]);
+
+        let mut codes = vec![0i8; n];
+        quantize_groups_i8(&src, group, &mut codes, &mut scales, &mut zeros);
+        let mut back = vec![0.0f32; n];
+        dequantize_groups_i8(&codes, group, &scales, &zeros, &mut back);
+        for (i, (a, b)) in src.iter().zip(&back).enumerate() {
+            let g = i / group;
+            let bound = scales[g] * 0.5 + (zeros[g].abs() + 256.0 * scales[g]) * 1e-6;
+            assert!(
+                (a - b).abs() <= bound,
+                "round {round} i8 elem {i}: |{a} - {b}| > {bound} (group {g})"
+            );
+        }
+
+        let mut packed = vec![0u8; n.div_ceil(2)];
+        quantize_groups_i4(&src, group, &mut packed, &mut scales, &mut zeros);
+        let mut back4 = vec![0.0f32; n];
+        dequantize_groups_i4(&packed, n, group, &scales, &zeros, &mut back4);
+        for (i, (a, b)) in src.iter().zip(&back4).enumerate() {
+            let g = i / group;
+            let bound = scales[g] * 0.5 + (zeros[g].abs() + 16.0 * scales[g]) * 1e-6;
+            assert!(
+                (a - b).abs() <= bound,
+                "round {round} i4 elem {i}: |{a} - {b}| > {bound} (group {g})"
+            );
+        }
+
+        // Constant input: both widths exact via the zero-point.
+        let c = rng.normal() * mag;
+        let cst = vec![c; n];
+        let mut qc = vec![0i8; n];
+        quantize_groups_i8(&cst, group, &mut qc, &mut scales, &mut zeros);
+        assert!(scales.iter().all(|&s| s == 0.0), "round {round}: constant scale");
+        let mut out = vec![0.0f32; n];
+        dequantize_groups_i8(&qc, group, &scales, &zeros, &mut out);
+        assert_eq!(out, cst, "round {round}: constant i8 round trip");
+        let mut qc4 = vec![0u8; n];
+        let (s4, z4) = quantize_block_i4(&cst, &mut qc4);
+        assert_eq!(s4, 0.0);
+        dequantize_block_i4(&qc4, s4, z4, &mut out);
+        assert_eq!(out, cst, "round {round}: constant i4 round trip");
+
+        // pack/unpack identity on random nibble codes.
+        let raw: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+        let mut pk = vec![0u8; n.div_ceil(2)];
+        pack_i4(&raw, &mut pk);
+        let mut un = vec![0u8; n];
+        unpack_i4(&pk, n, &mut un);
+        assert_eq!(raw, un, "round {round}: pack_i4/unpack_i4 identity");
+    }
+}
+
+/// The fused dequant-GEMM contract over random shapes: matmul over a
+/// `QuantMat` (int8 and int4) is *bit-identical* to `matmul_prepacked`
+/// over the dequantized weights — the quantized path changes the bytes
+/// streamed, never the arithmetic — and MR-aligned row shards compose
+/// bitwise (the SPMD partition contract of the batched engine).
+#[test]
+fn prop_quant_matmul_bitwise_matches_dequant_oracle() {
+    let mut rng = Rng::new(0x6A1);
+    for round in 0..15 {
+        let rows = 1 + rng.below(20);
+        let k = 1 + rng.below(90);
+        let n = 1 + rng.below(90);
+        let x = Tensor::randn(&[rows, k], &mut rng, 1.0);
+        let w = Tensor::randn(&[k, n], &mut rng, 0.05);
+        for mode in [WeightQuant::Int8, WeightQuant::Int4] {
+            let qm = QuantMat::quantize(&w, mode);
+            let pm = PackedMat::pack(&qm.dequantize());
+            let mut want = vec![0.0f32; rows * n];
+            matmul_prepacked(&x.data, rows, &pm, &mut want);
+            let mut scratch = Vec::new();
+            let mut got = vec![0.0f32; rows * n];
+            matmul_quant_rows(&x.data, rows, &qm, 0, rows, &mut got, &mut scratch);
+            assert_eq!(got, want, "round {round} {mode:?} ({rows},{k},{n})");
+            let parts = 1 + rng.below(4);
+            let shards = nncase_repro::parallel::panel_splits(rows, nncase_repro::ntt::MR, parts);
+            let mut sharded = vec![0.0f32; rows * n];
+            for &(lo, hi) in &shards {
+                matmul_quant_rows(
+                    &x.data,
+                    rows,
+                    &qm,
+                    lo,
+                    hi,
+                    &mut sharded[lo * n..hi * n],
+                    &mut scratch,
+                );
+            }
+            assert_eq!(sharded, want, "round {round} {mode:?} {parts}-way shard");
+        }
     }
 }
 

@@ -10,10 +10,11 @@
 //! enforced on every push at every matrix point).
 
 use nncase_repro::coordinator::{
-    synthetic_workload, Coordinator, Qwen3Engine, Request, ServePolicy, ServeReport,
+    argmax, synthetic_workload, Coordinator, Qwen3Engine, Request, ServePolicy, ServeReport,
 };
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
-use nncase_repro::serving::{ContinuousConfig, KvQuant, TierConfig};
+use nncase_repro::ntt::WeightQuant;
+use nncase_repro::serving::{BatchEngine, ContinuousConfig, KvQuant, StepSlot, TierConfig};
 
 fn coordinator(seed: u64, threads: usize) -> (Qwen3Config, Coordinator) {
     let cfg = Qwen3Config::tiny();
@@ -323,6 +324,116 @@ fn tiered_int8_swap_diverges_only_after_reread() {
                 }
             }
         }
+    }
+}
+
+/// Group-wise quantized weights (`Qwen3Config::weight_quant`): the
+/// continuous path over fused dequant-GEMM kernels must be
+/// token-identical to *its own* FCFS oracle — the dense engine running
+/// the fake-quantized (quantize→dequantize) weights, which are the
+/// exact f32 values the fused kernels FMA — at every worker count. And
+/// the explicit `WeightQuant::F32` mode must stay bitwise the seed
+/// path (same outputs as a default-config run).
+#[test]
+fn quantized_weight_serve_matches_its_fcfs_oracle() {
+    let reqs = synthetic_workload(5, 4, 8, Qwen3Config::tiny().vocab);
+    let serve_cont = |cfg: &Qwen3Config, threads: usize| -> ServeReport {
+        let w = Qwen3Weights::random(cfg, 31);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 128));
+        c.serve_with_policy(
+            &reqs,
+            ServePolicy::Continuous(ContinuousConfig {
+                block_size: 4,
+                num_blocks: 64,
+                max_batch: 4,
+                threads,
+                tiering: None,
+            }),
+        )
+    };
+    // F32 weight-quant is the seed path, bitwise: same outputs as the
+    // default config (which *is* WeightQuant::F32) and as the oracle.
+    let f32_cfg = Qwen3Config::tiny().with_weight_quant(WeightQuant::F32);
+    let seed = serve_cont(&Qwen3Config::tiny(), 1);
+    assert_eq!(seed.outputs, serve_cont(&f32_cfg, 1).outputs);
+    for mode in [WeightQuant::Int8, WeightQuant::Int4] {
+        let cfg = Qwen3Config::tiny().with_weight_quant(mode);
+        let w = Qwen3Weights::random(&cfg, 31);
+        let mut oracle = Coordinator::new(Qwen3Engine::new(w, 1, 128));
+        let want = oracle.serve(&reqs);
+        for threads in thread_counts() {
+            let got = serve_cont(&cfg, threads);
+            assert_eq!(
+                want.outputs, got.outputs,
+                "{mode:?} fused path diverged from its oracle at {threads} threads"
+            );
+            assert_eq!(got.generated_tokens, 5 * 8, "quantized runs must finish");
+            assert_eq!(got.weight_quant, mode, "report must record the quant mode");
+            assert!(
+                got.weight_bytes < seed.weight_bytes / 2,
+                "quantized footprint must shrink: {} vs {}",
+                got.weight_bytes,
+                seed.weight_bytes
+            );
+        }
+    }
+}
+
+/// The lossy half of the weight-quant contract: an int8-weight run,
+/// teacher-forced along the f32 oracle's token stream, keeps every
+/// step's logits within a stated max-abs-diff bound of the f32 oracle
+/// — at every worker count.
+///
+/// Bound: per weight the group-affine error is ≤ scale/2 ≈ 1.7e-4 at
+/// the tiny model's 0.02-σ init (range of 32 normals ≈ 4.4σ, /255/2).
+/// Through a 256-wide projection that is ~0.03 absolute per activation,
+/// and KV drift compounds it over 4 layers × 12 positions to roughly
+/// 0.05–0.3 on the logits. The random tiny model's logits spread about
+/// ±1.1 (N(0, 0.32) over a 4096 vocab), so 0.75 separates "quantization
+/// noise" from "wrong computation" with margin on both sides.
+#[test]
+fn int8_weight_logits_stay_within_bound_of_f32_oracle() {
+    const BOUND: f32 = 0.75;
+    let cfg_f = Qwen3Config::tiny();
+    let cfg_q = Qwen3Config::tiny().with_weight_quant(WeightQuant::Int8);
+    let w_q = Qwen3Weights::random(&cfg_q, 41);
+    let mut oracle = Qwen3Engine::new(Qwen3Weights::random(&cfg_f, 41), 1, 64);
+    // Teacher stream: the f32 oracle's own greedy decode.
+    let prompt = [5usize, 999, 42, 7];
+    let total = prompt.len() + 8;
+    let mut stream: Vec<usize> = prompt.to_vec();
+    let mut oracle_logits: Vec<Vec<f32>> = Vec::new();
+    for pos in 0..total {
+        if pos >= stream.len() {
+            stream.push(argmax(oracle_logits.last().expect("previous step")));
+        }
+        oracle_logits.push(oracle.decode_step(stream[pos], pos));
+    }
+    let max_abs = |a: &[f32], b: &[f32]| {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+    };
+    let bs = 4usize;
+    let table: Vec<u32> = (0..total.div_ceil(bs) as u32).collect();
+    for threads in thread_counts() {
+        let mut be = BatchEngine::new(&w_q, table.len() + 2, bs);
+        let diffs: Vec<f32> = be.run(threads, 1, |stepper| {
+            stream
+                .iter()
+                .enumerate()
+                .map(|(pos, &tok)| {
+                    let slot = StepSlot::hot(tok, pos, &table, true);
+                    let (_, l) = stepper.step_logits(&[slot], true);
+                    max_abs(&l, &oracle_logits[pos])
+                })
+                .collect()
+        });
+        let worst = diffs.iter().copied().fold(0.0f32, f32::max);
+        assert!(worst > 0.0, "int8 weights must actually perturb the logits");
+        assert!(
+            worst < BOUND,
+            "int8-weight logits drifted {worst} > {BOUND} from the f32 oracle \
+             (diffs per step: {diffs:?}) at {threads} threads"
+        );
     }
 }
 

@@ -28,8 +28,13 @@ def load(path):
 
 
 def key(sample):
-    # Older reports predate the "mode" field; default keeps them comparable.
-    return (sample.get("mode", "sweep"), sample["pressure"], sample["threads"])
+    # Older reports predate the "mode" / "weight_quant" fields; the
+    # defaults keep them comparable. Keying on (mode, weight_quant)
+    # means an f32 sweep sample is never diffed against an int8 one —
+    # the two run different kernels and byte volumes, so collapsing
+    # them would report a quant-vs-f32 ratio as a "regression".
+    return (sample.get("mode", "sweep"), sample.get("weight_quant", "f32"),
+            sample["pressure"], sample["threads"])
 
 
 def main():

@@ -12,7 +12,8 @@
 //!
 //! Run: `cargo run --release --example qwen3_serve`
 //! (add `-- --kv-cold-blocks 96 [--kv-quant int8|f32]` for the tiered
-//! KV-storage demo over a deliberately small hot pool, and
+//! KV-storage demo over a deliberately small hot pool,
+//! `--prefill-chunk N` to change the chunked-prefill span width, and
 //! `--weight-quant int8|int4` to store the GEMM weight plane as
 //! group-wise codes streamed through the fused dequant-GEMM kernels —
 //! the FCFS engine then runs the fake-quantized oracle weights, so the
@@ -90,7 +91,7 @@ fn main() {
                 num_blocks: 64,
                 max_batch: requests.len(),
                 threads,
-                tiering: None,
+                ..ContinuousConfig::default()
             }),
         );
         println!("continuous ({} workers): {}", report.threads, report.render());
@@ -98,6 +99,34 @@ fn main() {
             last_output.as_ref().unwrap(),
             &report.outputs,
             "continuous batching changed outputs!"
+        );
+    }
+
+    // Chunked prefill (`--prefill-chunk N`, default 16 here): prompt
+    // ingestion runs as multi-token spans — tall GEMMs instead of
+    // batch-of-one steps — and must stay token-identical to chunk 1
+    // (only TTFT and iteration counts change).
+    let chunk: usize =
+        opt(&args, "--prefill-chunk").and_then(|v| v.parse().ok()).unwrap_or(16);
+    {
+        let engine = Qwen3Engine::new(load(()), 1, 512);
+        let mut coord = Coordinator::new(engine);
+        let report = coord.serve_with_policy(
+            &requests,
+            ServePolicy::Continuous(ContinuousConfig {
+                block_size: 16,
+                num_blocks: 64,
+                max_batch: requests.len(),
+                threads: 1,
+                prefill_chunk: chunk,
+                ..ContinuousConfig::default()
+            }),
+        );
+        println!("chunked prefill (chunk {chunk}): {}", report.render());
+        assert_eq!(
+            last_output.as_ref().unwrap(),
+            &report.outputs,
+            "chunked prefill changed outputs!"
         );
     }
 
@@ -124,6 +153,7 @@ fn main() {
                 max_batch: requests.len(),
                 threads: 1,
                 tiering: Some(tier),
+                ..ContinuousConfig::default()
             }),
         );
         println!("tiered continuous: {}", report.render());

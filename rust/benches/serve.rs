@@ -20,21 +20,28 @@
 //!   for replayed positions inside decode time; swap does not);
 //! * weight-quant scenario: group-wise int8 weights (fused
 //!   dequant-GEMM, ~¼ of the f32 weight stream) beat f32 decode
-//!   throughput at batch 1 and batch 16.
+//!   throughput at batch 1 and batch 16;
+//! * prefill scenario (long prompts, prompt_len >= 512): chunked
+//!   prefill (`prefill_chunk = 64`) beats chunk-1 TTFT — prompt
+//!   ingestion as tall GEMMs instead of batch-of-one steps — with
+//!   token-identical outputs.
 //!
 //! Env knobs (the CI bench-smoke job sets both):
 //! * `PALLAS_BENCH_QUICK=1` — reduced workload for a fast smoke signal;
-//!   the thread-speedup, swap and weight-quant throughput asserts
+//!   the thread-speedup, swap, weight-quant and prefill-TTFT asserts
 //!   become warnings (short quick-mode runs on shared runners are too
 //!   noisy to gate CI on).
 //! * `PALLAS_BENCH_JSON=path` — write the sweep as a JSON report.
 //!
 //! Args: `--weight-quant f32|int8|int4` stores the *sweep* scenarios'
-//! weight plane in that format (CI runs the quick bench once more with
-//! int8, so the FCFS-vs-continuous token-identity assert and the
-//! regression tracker also cover the fused dequant-GEMM path).
+//! weight plane in that format; `--prefill-chunk N` runs the sweep
+//! scenarios with chunked prefill (CI runs the quick bench again with
+//! int8 weights and a third time with `--prefill-chunk 64`, so the
+//! FCFS-vs-continuous token-identity assert and the regression tracker
+//! cover the fused dequant-GEMM path and the span-packed step path).
 //!
-//! Run: `cargo bench --bench serve [-- --weight-quant int8]`
+//! Run: `cargo bench --bench serve [-- --weight-quant int8]
+//! [-- --prefill-chunk 64]`
 
 mod bench_util;
 
@@ -48,16 +55,24 @@ use nncase_repro::serving::{ContinuousConfig, TierConfig};
 
 struct Sample {
     /// Scenario the sample belongs to: "sweep" (FCFS-vs-continuous),
-    /// "pressure-recompute" / "pressure-swap" (the tiered scenario), or
-    /// "wquant" (f32-vs-int8 weight storage).
+    /// "pressure-recompute" / "pressure-swap" (the tiered scenario),
+    /// "wquant" (f32-vs-int8 weight storage), or "prefill" (long-prompt
+    /// chunked-vs-chunk-1 TTFT).
     mode: &'static str,
     /// Weight-plane storage of the run ("f32" / "int8" / "int4").
     weight_quant: &'static str,
     /// Model weight footprint in that format, bytes.
     weight_bytes: u64,
+    /// Prefill chunk of the run (1 = the one-token-per-slot seed).
+    prefill_chunk: usize,
     pressure: usize,
     threads: usize,
     decode_tok_s: f64,
+    /// Prompt positions per second (0.0 where the scenario's prompts
+    /// are too short for the number to mean anything).
+    prefill_tok_s: f64,
+    /// TTFT p50 seconds (the prefill scenario's gating metric).
+    ttft_p50_s: f64,
     wall_s: f64,
     speedup_vs_fcfs: f64,
 }
@@ -70,14 +85,18 @@ fn json_report(samples: &[Sample], quick: bool) -> String {
         let _ = write!(
             out,
             "    {{\"mode\": \"{}\", \"weight_quant\": \"{}\", \"weight_bytes\": {}, \
-             \"pressure\": {}, \"threads\": {}, \
-             \"decode_tok_s\": {:.3}, \"wall_s\": {:.4}, \"speedup_vs_fcfs\": {:.3}}}",
+             \"prefill_chunk\": {}, \"pressure\": {}, \"threads\": {}, \
+             \"decode_tok_s\": {:.3}, \"prefill_tok_s\": {:.3}, \"ttft_p50_s\": {:.6}, \
+             \"wall_s\": {:.4}, \"speedup_vs_fcfs\": {:.3}}}",
             s.mode,
             s.weight_quant,
             s.weight_bytes,
+            s.prefill_chunk,
             s.pressure,
             s.threads,
             s.decode_tok_s,
+            s.prefill_tok_s,
+            s.ttft_p50_s,
             s.wall_s,
             s.speedup_vs_fcfs
         );
@@ -99,6 +118,15 @@ fn main() {
         .and_then(|i| args.get(i + 1))
         .map(|q| WeightQuant::parse(q).unwrap_or_else(|| panic!("bad --weight-quant {q:?}")))
         .unwrap_or(WeightQuant::F32);
+    // `--prefill-chunk N` runs the sweep scenarios with span-packed
+    // chunked prefill (the token-identity assert then covers the
+    // multi-token step path end to end).
+    let sweep_chunk: usize = args
+        .iter()
+        .position(|a| a == "--prefill-chunk")
+        .and_then(|i| args.get(i + 1))
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --prefill-chunk {v:?}")))
+        .unwrap_or(1);
     let cfg = Qwen3Config::tiny().with_weight_quant(sweep_wq);
     // Quick mode: fewer generated tokens and pressures — a smoke signal
     // for CI, not a measurement.
@@ -139,7 +167,8 @@ fn main() {
                 num_blocks: 4 * pressure + 8,
                 max_batch: pressure,
                 threads,
-                tiering: None,
+                prefill_chunk: sweep_chunk,
+                ..ContinuousConfig::default()
             };
             let cont_rep = cont.serve_with_policy(&reqs, ServePolicy::Continuous(ccfg));
 
@@ -178,9 +207,12 @@ fn main() {
                 mode: "sweep",
                 weight_quant: sweep_wq.name(),
                 weight_bytes: cfg.weight_bytes(),
+                prefill_chunk: sweep_chunk,
                 pressure,
                 threads: cont_rep.threads,
                 decode_tok_s: cont_rep.decode_tokens_per_s,
+                prefill_tok_s: cont_rep.prefill_tok_s,
+                ttft_p50_s: cont_rep.ttft.percentile(50.0),
                 wall_s: cont_rep.wall_s,
                 speedup_vs_fcfs: speedup,
             });
@@ -214,6 +246,7 @@ fn main() {
                 max_batch: pressure,
                 threads: 1,
                 tiering,
+                ..ContinuousConfig::default()
             }),
         )
     };
@@ -249,9 +282,12 @@ fn main() {
             mode,
             weight_quant: sweep_wq.name(),
             weight_bytes: cfg.weight_bytes(),
+            prefill_chunk: 1,
             pressure,
             threads: 1,
             decode_tok_s: rep.decode_tokens_per_s,
+            prefill_tok_s: rep.prefill_tok_s,
+            ttft_p50_s: rep.ttft.percentile(50.0),
             wall_s: rep.wall_s,
             speedup_vs_fcfs: 0.0,
         });
@@ -298,7 +334,7 @@ fn main() {
                     num_blocks: 4 * pressure + 8,
                     max_batch: pressure,
                     threads: 1,
-                    tiering: None,
+                    ..ContinuousConfig::default()
                 }),
             );
             per_mode[mi] = rep.decode_tokens_per_s;
@@ -306,9 +342,12 @@ fn main() {
                 mode: "wquant",
                 weight_quant: mode.name(),
                 weight_bytes: qcfg.weight_bytes(),
+                prefill_chunk: 1,
                 pressure,
                 threads: 1,
                 decode_tok_s: rep.decode_tokens_per_s,
+                prefill_tok_s: rep.prefill_tok_s,
+                ttft_p50_s: rep.ttft.percentile(50.0),
                 wall_s: rep.wall_s,
                 speedup_vs_fcfs: 0.0,
             });
@@ -338,6 +377,91 @@ fn main() {
                  (got {i8_tok_s:.2} vs {f32_tok_s:.2} tok/s)"
             );
         }
+    }
+
+    // == Prefill scenario: long prompts, chunked vs chunk-1 TTFT. ==
+    // At prompt_len 512, chunk-1 prefill is 512 batch-of-few
+    // GEMV-shaped iterations per prompt (memory-bound on the weight
+    // stream); chunk 64 packs the same positions into 64-row spans —
+    // tall GEMMs against the compute roof (`cost::prefill_flops_s`) —
+    // so time-to-first-token must drop while outputs stay
+    // token-identical.
+    let prefill_len = 512usize;
+    let prefill_new = 4usize;
+    let prefill_reqs_n = if quick { 2usize } else { 4 };
+    let prefill_reqs = synthetic_workload(prefill_reqs_n, prefill_len, prefill_new, cfg.vocab);
+    let prefill_blocks =
+        prefill_reqs_n * (prefill_len + prefill_new + 1).div_ceil(16) + 8;
+    let run_prefill = |chunk: usize| {
+        let mut c = Coordinator::new(Qwen3Engine::new(
+            Qwen3Weights::random(&cfg, 42),
+            1,
+            prefill_len + prefill_new + 1,
+        ));
+        c.serve_with_policy(
+            &prefill_reqs,
+            ServePolicy::Continuous(ContinuousConfig {
+                block_size: 16,
+                num_blocks: prefill_blocks,
+                max_batch: prefill_reqs_n,
+                threads: 1,
+                prefill_chunk: chunk,
+                ..ContinuousConfig::default()
+            }),
+        )
+    };
+    let chunk1_rep = run_prefill(1);
+    let chunked_rep = run_prefill(64);
+    assert_eq!(
+        chunk1_rep.outputs, chunked_rep.outputs,
+        "chunked prefill must be token-identical to chunk 1"
+    );
+    let ttft1 = chunk1_rep.ttft.percentile(50.0);
+    let ttft64 = chunked_rep.ttft.percentile(50.0);
+    let ttft_speedup = if ttft64 > 0.0 { ttft1 / ttft64 } else { 0.0 };
+    row(
+        &format!("prefill len={prefill_len} x{prefill_reqs_n}"),
+        format!(
+            "chunk 1: ttft p50 {:>8.2}ms, {:>8.2} tok/s | chunk 64: ttft p50 {:>8.2}ms, \
+             {:>8.2} tok/s | {ttft_speedup:>5.2}x ttft",
+            ttft1 * 1e3,
+            chunk1_rep.prefill_tok_s,
+            ttft64 * 1e3,
+            chunked_rep.prefill_tok_s,
+        ),
+    );
+    for (chunk, rep) in [(1usize, &chunk1_rep), (64, &chunked_rep)] {
+        samples.push(Sample {
+            mode: "prefill",
+            weight_quant: sweep_wq.name(),
+            weight_bytes: cfg.weight_bytes(),
+            prefill_chunk: chunk,
+            pressure: prefill_reqs_n,
+            threads: 1,
+            decode_tok_s: rep.decode_tokens_per_s,
+            prefill_tok_s: rep.prefill_tok_s,
+            ttft_p50_s: rep.ttft.percentile(50.0),
+            wall_s: rep.wall_s,
+            speedup_vs_fcfs: 0.0,
+        });
+    }
+    if quick {
+        if ttft64 >= ttft1 {
+            println!(
+                "WARN: chunked prefill TTFT >= chunk-1 at prompt_len {prefill_len} \
+                 ({:.2}ms vs {:.2}ms) — not gating (quick)",
+                ttft64 * 1e3,
+                ttft1 * 1e3
+            );
+        }
+    } else {
+        assert!(
+            ttft64 < ttft1,
+            "chunked prefill must beat chunk-1 TTFT at prompt_len {prefill_len} \
+             (got {:.2}ms vs {:.2}ms)",
+            ttft64 * 1e3,
+            ttft1 * 1e3
+        );
     }
 
     if let Ok(path) = std::env::var("PALLAS_BENCH_JSON") {

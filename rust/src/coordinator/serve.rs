@@ -55,6 +55,12 @@ pub struct ServeReport {
     /// Decode throughput over the decode-timed tokens only, computed
     /// from directly accumulated decode seconds (never `mean * count`).
     pub decode_tokens_per_s: f64,
+    /// Prefill throughput (prompt positions per second) over directly
+    /// accumulated prefill seconds. Chunked prefill
+    /// (`ContinuousConfig::prefill_chunk`) moves this toward the
+    /// compute roofline (`cost::prefill_flops_s`); FCFS measures its
+    /// per-request prompt loops.
+    pub prefill_tok_s: f64,
     /// Per-token decode latency stats (seconds).
     pub token_latency: Stats,
     /// Time-to-first-token per request, seconds, measured from
@@ -82,8 +88,8 @@ impl ServeReport {
     pub fn render(&self) -> String {
         let mut s = format!(
             "requests={} prompt_toks={} gen_toks={} threads={} weights={}/{} wall={:.2}s \
-             decode={:.2} tok/s ttft p50={:.2}ms tok_lat p50={:.2}ms p99={:.2}ms \
-             req_lat mean={:.2}s",
+             decode={:.2} tok/s prefill={:.2} tok/s ttft p50={:.2}ms p99={:.2}ms \
+             tok_lat p50={:.2}ms p99={:.2}ms req_lat mean={:.2}s",
             self.requests,
             self.prompt_tokens,
             self.generated_tokens,
@@ -92,7 +98,9 @@ impl ServeReport {
             self.weight_quant.name(),
             self.wall_s,
             self.decode_tokens_per_s,
+            self.prefill_tok_s,
             self.ttft.percentile(50.0) * 1e3,
+            self.ttft.percentile(99.0) * 1e3,
             self.token_latency.percentile(50.0) * 1e3,
             self.token_latency.percentile(99.0) * 1e3,
             self.request_latency.mean(),
@@ -143,14 +151,20 @@ impl Coordinator {
         // latency outside any timing window).
         let mut decode_s = 0.0f64;
         let mut decode_steps = 0usize;
+        // Prefill seconds accumulated directly around each request's
+        // prompt loop (FCFS ingests prompts one token at a time — the
+        // bandwidth-bound baseline the chunked continuous path beats).
+        let mut prefill_s = 0.0f64;
         for req in requests {
             self.engine.reset();
             let mut pos = 0usize;
             let mut logits = Vec::new();
+            let t_prefill = Instant::now();
             for &tok in &req.prompt {
                 logits = self.engine.decode_step(tok, pos);
                 pos += 1;
             }
+            prefill_s += t_prefill.elapsed().as_secs_f64();
             prompt_tokens += req.prompt.len();
             let mut toks = Vec::with_capacity(req.max_new_tokens);
             if req.max_new_tokens > 0 && !req.prompt.is_empty() {
@@ -194,6 +208,7 @@ impl Coordinator {
             weight_bytes: self.engine.cfg().weight_bytes(),
             wall_s,
             decode_tokens_per_s: if decode_s > 0.0 { decode_steps as f64 / decode_s } else { 0.0 },
+            prefill_tok_s: if prefill_s > 0.0 { prompt_tokens as f64 / prefill_s } else { 0.0 },
             token_latency,
             ttft,
             request_latency,
@@ -205,10 +220,13 @@ impl Coordinator {
 
     fn serve_continuous(&mut self, requests: &[Request], cfg: ContinuousConfig) -> ServeReport {
         let wall = Instant::now();
-        let max_batch = cfg.max_batch.max(1);
+        // Step capacity in token rows: the scheduler's per-iteration
+        // budget (== max_batch when prefill_chunk is 1, so the seed
+        // behaviour is byte-identical).
+        let max_rows = cfg.row_capacity();
         // Effective worker count (the engine applies the same clamp;
         // computed here so the report records what actually ran).
-        let threads = cfg.threads.clamp(1, max_batch);
+        let threads = cfg.threads.clamp(1, max_rows);
         let tier_desc = cfg.tiering.as_ref().map(|t| t.describe());
         let mut sched = ContinuousScheduler::new(cfg.clone());
         let mut be = BatchEngine::new(&self.engine.weights, cfg.num_blocks, cfg.block_size);
@@ -225,7 +243,7 @@ impl Coordinator {
         // One SPMD run for the whole serve: the workers are spawned once
         // and parked between iterations, so the per-step cost is one
         // barrier release instead of a spawn/join per step.
-        be.run(threads, max_batch, |stepper| {
+        be.run(threads, max_rows, |stepper| {
             while !sched.is_done() {
                 // schedule() either yields at least one runnable sequence
                 // or panics (pool too small for the queue head) — a 0
@@ -242,11 +260,11 @@ impl Coordinator {
                     .running()
                     .iter()
                     .map(|s| StepSlot {
-                        token: s.tokens[s.pos],
+                        tokens: &s.tokens[s.pos..s.pos + s.span],
                         pos: s.pos,
                         table: &s.table.blocks,
                         cold: &s.cold,
-                        sample: s.at_frontier(),
+                        sample: s.span_reaches_frontier(),
                     })
                     .collect();
                 let samples = stepper.step(&slots);
@@ -279,6 +297,7 @@ impl Coordinator {
             weight_bytes: self.engine.cfg().weight_bytes(),
             wall_s: wall.elapsed().as_secs_f64(),
             decode_tokens_per_s: metrics.decode_tokens_per_s(),
+            prefill_tok_s: metrics.prefill_tokens_per_s(),
             token_latency: metrics.tpot.clone(),
             ttft: metrics.ttft.clone(),
             request_latency,
@@ -323,8 +342,12 @@ mod tests {
         assert_eq!(rep.generated_tokens, 15);
         assert_eq!(rep.prompt_tokens, 12);
         assert!(rep.decode_tokens_per_s > 0.0);
+        assert!(rep.prefill_tok_s > 0.0, "FCFS must time its prompt loops");
         assert_eq!(rep.outputs.len(), 3);
         assert!(rep.render().contains("tok/s"));
+        assert!(rep.render().contains("prefill="), "{}", rep.render());
+        assert!(rep.render().contains("ttft p50="), "{}", rep.render());
+        assert!(rep.render().contains("p99="), "{}", rep.render());
         // Satellite fix: first-token latency is captured (TTFT window)
         // and decode seconds come from direct accumulation.
         assert_eq!(rep.ttft.len(), 3);
@@ -380,7 +403,7 @@ mod tests {
                 num_blocks: 32,
                 max_batch: 3,
                 threads: 2,
-                tiering: None,
+                ..ContinuousConfig::default()
             }),
         );
         assert_eq!(rep.requests, 3);
@@ -410,6 +433,7 @@ mod tests {
                 max_batch: 3,
                 threads: 1,
                 tiering: Some(TierConfig::new(8)),
+                ..ContinuousConfig::default()
             }),
         );
         assert_eq!(rep.generated_tokens, 15);
@@ -419,6 +443,46 @@ mod tests {
         assert!(m.tiered);
         // A roomy pool never spills: the tier is configured but idle.
         assert_eq!(m.swap_preemptions, 0);
+    }
+
+    #[test]
+    fn chunked_prefill_policy_matches_chunk_one() {
+        // Chunked prefill changes only when prompt positions are
+        // computed, never their values: outputs are token-identical to
+        // the chunk-1 run, in fewer iterations.
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
+        let reqs = synthetic_workload(3, 9, 4, cfg.vocab);
+        let run = |c: &mut Coordinator, chunk: usize| {
+            c.serve_with_policy(
+                &reqs,
+                ServePolicy::Continuous(ContinuousConfig {
+                    block_size: 4,
+                    num_blocks: 64,
+                    max_batch: 3,
+                    prefill_chunk: chunk,
+                    ..ContinuousConfig::default()
+                }),
+            )
+        };
+        let base = run(&mut c, 1);
+        let chunked = run(&mut c, 6);
+        assert_eq!(base.outputs, chunked.outputs, "chunking must not change tokens");
+        let mb = base.serving.as_ref().unwrap();
+        let mc = chunked.serving.as_ref().unwrap();
+        assert!(
+            mc.iterations < mb.iterations,
+            "chunked prefill must take fewer iterations: {} vs {}",
+            mc.iterations,
+            mb.iterations
+        );
+        assert!(mc.chunk_size.max() >= 6.0, "the 6-token chunk must actually pack");
+        assert_eq!(mb.chunk_size.max(), 1.0, "chunk 1 packs single-token spans");
+        assert_eq!(
+            mc.decode_steps, mb.decode_steps,
+            "chunking touches prefill only, never decode"
+        );
     }
 
     #[test]

@@ -51,6 +51,24 @@ pub fn decode_weight_stream_s(
     cfg.decode_stream_bytes() as f64 / machine.dram_bw(threads)
 }
 
+/// Compute floor of one *prefill* token, seconds: a prompt position
+/// costs ~`2 × params` FLOPs, and chunked prefill batches many
+/// positions into one weight stream, so the prompt side is bound by
+/// the FLOP roof, not the byte roof — the prefill/decode asymmetry the
+/// span-based step API exploits. At `prefill_chunk = 1` prompt
+/// ingestion degenerates to GEMV-shaped steps and pays
+/// [`decode_weight_stream_s`] per position instead (memory-bound, and
+/// on every preset a much higher floor — see the test below); the gap
+/// between the two floors is the TTFT headroom chunking buys.
+pub fn prefill_flops_s(
+    cfg: &crate::model::Qwen3Config,
+    machine: &MachineSpec,
+    threads: usize,
+) -> f64 {
+    let flops_per_token = 2.0 * cfg.param_count() as f64;
+    flops_per_token / machine.peak_flops(threads, cfg.dtype.size_bytes())
+}
+
 /// Roofline weight of a single e-node. Packed (blocked-layout) compute
 /// ops run at higher efficiency — the tensor-unit saturation the paper's
 /// MetaPackOperation trades against layout-conversion cost. Pack/Unpack
@@ -140,6 +158,29 @@ mod tests {
         let want = f32c.decode_stream_bytes() as f64 / m.dram_bw(1);
         assert!((t_f32 - want).abs() < 1e-12);
         assert!(f32c.decode_stream_bytes() < f32c.weight_bytes());
+    }
+
+    #[test]
+    fn chunked_prefill_compute_floor_is_below_the_decode_stream_floor() {
+        use crate::model::Qwen3Config;
+        let m = MachineSpec::ryzen_5900x();
+        for cfg in [
+            Qwen3Config::qwen3_0_6b(crate::ir::DType::F32),
+            Qwen3Config::qwen3_1_7b(crate::ir::DType::F16),
+            Qwen3Config::tiny(),
+        ] {
+            let compute = prefill_flops_s(&cfg, &m, 1);
+            let stream = decode_weight_stream_s(&cfg, &m, 1);
+            assert!(
+                compute < stream,
+                "{}: prefill compute floor {compute} must sit below the per-token weight \
+                 stream {stream} — otherwise chunking buys nothing",
+                cfg.name
+            );
+        }
+        // More threads raise the FLOP roof (until the core count caps).
+        let cfg = Qwen3Config::qwen3_0_6b(crate::ir::DType::F32);
+        assert!(prefill_flops_s(&cfg, &m, 4) < prefill_flops_s(&cfg, &m, 1));
     }
 
     #[test]

@@ -33,8 +33,8 @@ fn usage() -> ! {
          compile   [--model tiny|0.6b|1.7b] [--devices N] [--schedule] [--greedy]\n\
          inspect   [--emit-cpp] [--model tiny]\n\
          serve     [--threads N] [--requests N] [--max-new N] [--policy fcfs|continuous]\n\
-         \x20          [--max-batch N] [--kv-cold-blocks N] [--kv-quant int8|f32]\n\
-         \x20          [--weight-quant f32|int8|int4]\n\
+         \x20          [--max-batch N] [--prefill-chunk N] [--kv-cold-blocks N]\n\
+         \x20          [--kv-quant int8|f32] [--weight-quant f32|int8|int4]\n\
          sweep     [--figure 9|10]\n\
          artifacts [--dir artifacts]"
     );
@@ -150,6 +150,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     let mut ccfg = ContinuousConfig::for_machine(&cfg, &machine, max_batch);
                     if let Some(t) = threads_flag {
                         ccfg.threads = t;
+                    }
+                    // Chunked prefill: feed up to N prompt tokens per
+                    // sequence per iteration (1 = the default
+                    // one-token-per-slot behaviour; outputs are
+                    // token-identical at any value, TTFT is not).
+                    if let Some(chunk) =
+                        opt(&args, "--prefill-chunk").and_then(|v| v.parse::<usize>().ok())
+                    {
+                        ccfg.prefill_chunk = chunk;
                     }
                     // Tiered cold KV storage: --kv-cold-blocks enables a
                     // cold tier of N blocks, --kv-quant picks the format

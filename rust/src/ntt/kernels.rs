@@ -733,6 +733,43 @@ pub fn attn_context_paged_accum(
     }
 }
 
+/// Fused single-row paged attention over the **causal window**
+/// `[0, scores.len())` — the in-chunk hot path of chunked prefill. One
+/// step may commit a whole span of a sequence's rows to the paged store
+/// before attention runs (phase order: commit, then attend), so the
+/// store can hold positions *beyond* a given row's own; causality is
+/// enforced structurally by sizing `scores` to the row's window
+/// (`pos + 1` positions) — later rows of the chunk are never gathered,
+/// because the kernel walks exactly `scores.len()` positions.
+///
+/// Arithmetic is `attn_scores_paged` → `softmax_inplace` →
+/// `attn_context_paged`, each accumulating in ascending position /
+/// ascending `k` order — so one chunked row is **bitwise identical** to
+/// the same position computed by a sequential single-token step
+/// (`rust/tests/properties.rs` pins both the equality and the
+/// beyond-window blindness).
+#[allow(clippy::too_many_arguments)]
+pub fn attn_row_causal_paged(
+    q: &[f32],
+    kstore: &Tensor,
+    vstore: &Tensor,
+    table: &[u32],
+    block_size: usize,
+    head_off: usize,
+    head_dim: usize,
+    scale: f32,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    debug_assert!(
+        !scores.is_empty() && scores.len() <= table.len() * block_size,
+        "causal window must be non-empty and inside the block table"
+    );
+    attn_scores_paged(q, kstore, table, block_size, head_off, head_dim, scale, scores);
+    softmax_inplace(scores);
+    attn_context_paged(scores, vstore, table, block_size, head_off, head_dim, out);
+}
+
 /// Per-block affine int8 quantization of the cold KV tier: `q[i]` codes
 /// `src[i]` as `round((src[i] - zero) / scale) - 128`, with `zero` the
 /// block minimum and `scale = (max - min) / 255`. Returns
@@ -1438,6 +1475,57 @@ mod tests {
         attn_context_paged(&scores[..bs], &v, &table[..1], bs, 0, hd, &mut got);
         attn_context_paged_accum(&scores[bs..], &v, &table[1..], bs, 0, hd, &mut got);
         assert_eq!(want, got, "piecewise accumulation must be bit-identical");
+    }
+
+    #[test]
+    fn causal_row_kernel_is_blind_beyond_its_window() {
+        // Chunked prefill commits a whole span before attention runs, so
+        // the paged store holds positions past a given row's own. The
+        // fused causal row kernel must (a) equal the scores → softmax →
+        // context composition bitwise, and (b) produce the same result
+        // whether or not the store holds data beyond the window.
+        let mut rng = Rng::new(55);
+        let (bs, width, hd, off) = (4usize, 16usize, 8usize, 8usize);
+        let table = [2u32, 0, 3];
+        let chunk_end = 10usize; // positions 0..10 are "committed"
+        let mut store_k = Tensor::zeros(&[4 * bs, width]);
+        let mut store_v = Tensor::zeros(&[4 * bs, width]);
+        for p in 0..chunk_end {
+            let row = paged_row(&table, bs, p);
+            for c in 0..width {
+                store_k.row_mut(row)[c] = rng.normal();
+                store_v.row_mut(row)[c] = rng.normal();
+            }
+        }
+        let q: Vec<f32> = (0..hd).map(|_| rng.normal()).collect();
+        for seq in 1..=chunk_end {
+            let mut scores = vec![0.0f32; seq];
+            let mut out = vec![0.0f32; hd];
+            attn_row_causal_paged(
+                &q, &store_k, &store_v, &table, bs, off, hd, 0.5, &mut scores, &mut out,
+            );
+            // (a) bitwise equal to the composed sequential-step path.
+            let mut want_scores = vec![0.0f32; seq];
+            attn_scores_paged(&q, &store_k, &table, bs, off, hd, 0.5, &mut want_scores);
+            softmax_inplace(&mut want_scores);
+            let mut want_out = vec![0.0f32; hd];
+            attn_context_paged(&want_scores, &store_v, &table, bs, off, hd, &mut want_out);
+            assert_eq!(out, want_out, "fused causal row != composition at seq {seq}");
+            // (b) clobbering every position >= seq changes nothing: the
+            // window, not the store contents, bounds the gather.
+            let (mut k2, mut v2) = (store_k.clone(), store_v.clone());
+            for p in seq..table.len() * bs {
+                let row = paged_row(&table, bs, p);
+                k2.row_mut(row).fill(f32::MAX);
+                v2.row_mut(row).fill(f32::MAX);
+            }
+            let mut scores2 = vec![0.0f32; seq];
+            let mut out2 = vec![0.0f32; hd];
+            attn_row_causal_paged(
+                &q, &k2, &v2, &table, bs, off, hd, 0.5, &mut scores2, &mut out2,
+            );
+            assert_eq!(out, out2, "future positions leaked into the causal window at {seq}");
+        }
     }
 
     #[test]

@@ -1,36 +1,51 @@
-//! Batched decode over paged KV storage, executed SPMD by persistent
-//! worker threads.
+//! Batched decode + chunked prefill over paged KV storage, executed
+//! SPMD by persistent worker threads.
 //!
-//! One [`BatchStepper::step`] advances *every* scheduled sequence by one
-//! position — iteration-level batching. The win over per-request decode
-//! is in the weight stream: decode is memory-bound on weights, and the
-//! FCFS path re-reads every projection matrix once per sequence per
-//! token. Here the projections of all `B` batched rows run as one GEMM
-//! over weights pre-packed at engine build ([`WeightMat`]: f32 NR
-//! panels, or group-quantized int8/int4 codes streamed through the
-//! fused dequant-GEMM kernels when `Qwen3Config::weight_quant` asks for
-//! them — ¼/⅛ of the f32 weight bytes per iteration), so the weight
-//! stream is paid once per iteration instead of `B` times.
+//! One [`BatchStepper::step`] advances every scheduled sequence by a
+//! **token span** — decode sequences contribute one row, prefilling
+//! sequences contribute up to `prefill_chunk` prompt rows — so prompt
+//! ingestion runs as genuinely tall GEMMs (`M` = total step tokens)
+//! instead of thousands of batch-of-one GEMV-shaped steps. Decode stays
+//! memory-bound on the weight stream (paid once per iteration instead
+//! of once per sequence per token); chunked prefill pushes the prompt
+//! side toward the *compute* roof (`cost::prefill_flops_s`), which is
+//! the prefill/decode asymmetry the step-span API exists to exploit.
+//!
+//! **Ragged row map.** A step's work is the concatenation of every
+//! slot's span: row `r` maps to `(slot, offset)`; its token is
+//! `slot.tokens[offset]` at logical position `slot.pos + offset`. The
+//! controller publishes the map with the slot list, and all SPMD phases
+//! shard by **token row** (per-row work: RMSNorm, RoPE, attention,
+//! residuals) or by **MR-row panel over all rows** (the GEMMs via
+//! [`WeightMat::matmul_rows`] with `M` = total rows). Every row's
+//! arithmetic is independent of its step companions (GEMM rows
+//! accumulate over their own A row only), so a span is **bitwise
+//! identical** to feeding the same tokens one step at a time — chunked
+//! prefill at any chunk size and any thread count reproduces the
+//! `chunk = 1` seed behaviour token for token.
+//!
+//! **In-chunk causality.** The KV commit (phase 4) writes the whole
+//! span to the paged store — single-writer, ascending position order,
+//! behind [`KvCell`] — *before* attention runs, so a chunk row's
+//! attention window `[0, pos]` is fully committed: earlier chunk rows
+//! of the same sequence are read back through the block table exactly
+//! like previously-committed positions. Causality is structural: the
+//! fused row kernel ([`attn_row_causal_paged`]) walks exactly
+//! `pos + 1` positions, so later rows of the chunk (already in the
+//! store) are never gathered. The cold/int8 hybrid path composes the
+//! same way — cold prefix blocks sit strictly below any chunk, so only
+//! the hot-suffix window length changes.
 //!
 //! **Threading.** [`BatchEngine::run`] opens one `thread::scope` per
-//! serve run — not per step — and parks `threads - 1` persistent workers
-//! on the shared [`SpinBarrier`]. Each step, the controller publishes
-//! the slot list, releases the workers through the barrier, and joins
-//! them as worker 0. The step body is barrier-separated SPMD phases with
-//! a *static, deterministic* partition ([`crate::parallel::splits`] /
-//! [`panel_splits`]): per-sequence work (RMSNorm, RoPE, paged attention)
-//! shards by batch row, the packed GEMMs shard by MR-row panel
-//! ([`matmul_prepacked_rows`]), and the KV commit stays a single-writer
-//! phase behind [`KvCell`] exactly like the dense engine. Every output
-//! element is computed by one statically-known worker with the same
-//! accumulation order as the single-threaded path, so outputs are
-//! token-identical to the dense FCFS oracle at **any** thread count
-//! (`rust/tests/serving.rs` pins this down for 1, 2 and 4).
-//!
-//! K/V rows are gathered through per-sequence block tables
-//! ([`attn_scores_paged`] / [`attn_context_paged`]) instead of
-//! contiguous rows; every kernel shares its accumulation order with the
-//! dense single-sequence engine.
+//! serve run — not per step — and parks `threads - 1` persistent
+//! workers on the shared [`SpinBarrier`]. Each step, the controller
+//! publishes the slot list + row map, releases the workers through the
+//! barrier, and joins them as worker 0. The static partition
+//! ([`crate::parallel::splits`] / [`panel_splits`]) depends only on
+//! `(rows, threads)` and every output element keeps the
+//! single-threaded accumulation order, so outputs are token-identical
+//! to the dense FCFS oracle at **any** thread count
+//! (`rust/tests/serving.rs` pins the full chunk × thread matrix).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -38,7 +53,7 @@ use super::tiered::{ColdKv, KvQuant, TierOp};
 use crate::coordinator::argmax;
 use crate::model::{Qwen3Config, Qwen3Weights};
 use crate::ntt::{
-    add_inplace, attn_context_paged, attn_context_paged_accum, attn_context_quant_i8,
+    add_inplace, attn_context_paged_accum, attn_context_quant_i8, attn_row_causal_paged,
     attn_scores_paged, attn_scores_quant_i8, mul_inplace, paged_row, rmsnorm, rope_inplace,
     silu_inplace, softmax_inplace, Tensor, WeightMat, MR,
 };
@@ -86,46 +101,55 @@ struct PackedLayer {
     w_down: WeightMat,
 }
 
-/// One sequence's slot in a batched iteration.
+/// One sequence's slot in a batched iteration: a **token span**, not a
+/// single token. `tokens[i]` is fed at logical position `pos + i`.
 pub struct StepSlot<'t> {
-    /// Token to feed at `pos`.
-    pub token: usize,
-    /// Logical position of `token` in the sequence.
+    /// The span to feed this step (non-empty; ragged across the batch).
+    /// Decode slots carry one token, chunked prefill up to the
+    /// scheduler's `prefill_chunk`.
+    pub tokens: &'t [usize],
+    /// Logical position of `tokens[0]` in the sequence.
     pub pos: usize,
     /// The sequence's *hot* block table, covering logical blocks after
-    /// the cold prefix; together with `cold` it must cover `pos`.
+    /// the cold prefix; together with `cold` it must cover the span's
+    /// final position `pos + tokens.len() - 1`.
     pub table: &'t [u32],
     /// Cold-tier slots of the sequence's leading logical blocks (direct
     /// dequant-gather reads). Empty on the untiered path — attention
     /// then takes the exact pre-tiering code path.
     pub cold: &'t [u32],
-    /// Sample an output token from this row's logits (the sequence is
-    /// at its frontier: last prompt token or a decode step).
+    /// Sample an output token from the span's **final** row's logits
+    /// (the span reaches the sequence frontier: last prompt token or a
+    /// decode step).
     pub sample: bool,
 }
 
 impl<'t> StepSlot<'t> {
     /// A slot with no cold prefix (the flat-pool path).
-    pub fn hot(token: usize, pos: usize, table: &'t [u32], sample: bool) -> Self {
-        StepSlot { token, pos, table, cold: &[], sample }
+    pub fn hot(tokens: &'t [usize], pos: usize, table: &'t [u32], sample: bool) -> Self {
+        StepSlot { tokens, pos, table, cold: &[], sample }
     }
 }
 
-/// Owned copy of a [`StepSlot`] (block tables cloned), published to the
-/// persistent workers so they never borrow the scheduler's state.
+/// Owned copy of a [`StepSlot`] (spans and block tables cloned),
+/// published to the persistent workers so they never borrow the
+/// scheduler's state. `sample` stays controller-side: workers compute
+/// every row's logits, and the controller argmaxes the sampling rows.
 struct OwnedSlot {
-    token: usize,
+    tokens: Vec<usize>,
     pos: usize,
     table: Vec<u32>,
     cold: Vec<u32>,
-    sample: bool,
 }
 
 /// Shared per-run state of one SPMD serve run: the published work
-/// descriptor plus the activation buffers, all sized at `max_batch`
-/// capacity and written by disjoint row ranges between barriers.
+/// descriptor (slot list + ragged row map) plus the activation buffers,
+/// all sized at `max_rows` token-row capacity and written by disjoint
+/// row ranges between barriers.
 struct StepState {
     slots: SharedCell<Vec<OwnedSlot>>,
+    /// Row `r` of the step -> `(slot index, offset into its span)`.
+    rows: SharedCell<Vec<(u32, u32)>>,
     x: SharedVec,
     xn: SharedVec,
     q: SharedVec,
@@ -140,22 +164,23 @@ struct StepState {
 }
 
 impl StepState {
-    fn new(cfg: &Qwen3Config, max_batch: usize) -> Self {
+    fn new(cfg: &Qwen3Config, max_rows: usize) -> Self {
         let (h, hd) = (cfg.hidden, cfg.head_dim);
         let (qdim, kvdim) = (cfg.heads * hd, cfg.kv_heads * hd);
         StepState {
             slots: SharedCell::new(Vec::new()),
-            x: SharedVec::new(max_batch * h),
-            xn: SharedVec::new(max_batch * h),
-            q: SharedVec::new(max_batch * qdim),
-            kvec: SharedVec::new(max_batch * kvdim),
-            vvec: SharedVec::new(max_batch * kvdim),
-            ctx: SharedVec::new(max_batch * qdim),
-            attn: SharedVec::new(max_batch * h),
-            gate: SharedVec::new(max_batch * cfg.intermediate),
-            up: SharedVec::new(max_batch * cfg.intermediate),
-            down: SharedVec::new(max_batch * h),
-            logits: SharedVec::new(max_batch * cfg.vocab),
+            rows: SharedCell::new(Vec::new()),
+            x: SharedVec::new(max_rows * h),
+            xn: SharedVec::new(max_rows * h),
+            q: SharedVec::new(max_rows * qdim),
+            kvec: SharedVec::new(max_rows * kvdim),
+            vvec: SharedVec::new(max_rows * kvdim),
+            ctx: SharedVec::new(max_rows * qdim),
+            attn: SharedVec::new(max_rows * h),
+            gate: SharedVec::new(max_rows * cfg.intermediate),
+            up: SharedVec::new(max_rows * cfg.intermediate),
+            down: SharedVec::new(max_rows * h),
+            logits: SharedVec::new(max_rows * cfg.vocab),
         }
     }
 }
@@ -165,10 +190,12 @@ const CMD_EXIT: usize = 1;
 
 /// One barrier-separated SPMD step, executed by all `t` participants
 /// (the controller as worker 0, plus the parked workers released into
-/// it). Per-sequence phases shard batch rows with `splits`; GEMM phases
+/// it). Per-row phases shard token rows with `splits`; GEMM phases
 /// shard MR-row panels with `panel_splits`. Both partitions depend only
-/// on `(batch, t)`, and every element keeps the single-threaded
-/// accumulation order, so results are identical at any thread count.
+/// on `(rows, t)`, and every element keeps the single-threaded
+/// accumulation order, so results are identical at any thread count —
+/// and every row's arithmetic is independent of its step companions, so
+/// results are also identical at any span packing (chunked == chunk-1).
 #[allow(clippy::too_many_arguments)]
 fn spmd_step(
     wi: usize,
@@ -182,11 +209,12 @@ fn spmd_step(
     barrier: &SpinBarrier,
     scratch: &mut Vec<f32>,
 ) {
-    // SAFETY: the controller wrote this step's slots before releasing
-    // the workers through the barrier, and rewrites them only after the
-    // final barrier below has parked everyone again.
+    // SAFETY: the controller wrote this step's slots + row map before
+    // releasing the workers through the barrier, and rewrites them only
+    // after the final barrier below has parked everyone again.
     let slots: &[OwnedSlot] = unsafe { st.slots.read() };
-    let b = slots.len();
+    let rows: &[(u32, u32)] = unsafe { st.rows.read() };
+    let n = rows.len();
     let cfg = &weights.cfg;
     let h = cfg.hidden;
     let hd = cfg.head_dim;
@@ -199,87 +227,101 @@ fn spmd_step(
     let group = heads / kvh;
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
     let bs = kv_cell.read().block_size;
-    // This worker's static shards.
-    let (r0, r1) = splits(b, t)[wi];
-    let (p0, p1) = panel_splits(b, MR, t)[wi];
+    // This worker's static shards (token rows / MR panels of rows).
+    let (r0, r1) = splits(n, t)[wi];
+    let (p0, p1) = panel_splits(n, MR, t)[wi];
 
-    // Phase 0: embedding gather, per-sequence shard.
-    for i in r0..r1 {
-        unsafe { st.x.slice_mut(i * h, (i + 1) * h) }
-            .copy_from_slice(weights.embedding.row(slots[i].token % vocab));
+    // Phase 0: embedding gather, per-row shard.
+    for r in r0..r1 {
+        let (si, off) = rows[r];
+        let token = slots[si as usize].tokens[off as usize];
+        unsafe { st.x.slice_mut(r * h, (r + 1) * h) }
+            .copy_from_slice(weights.embedding.row(token % vocab));
     }
     barrier.wait();
 
     for l in 0..cfg.layers {
         let w = &weights.layers[l];
         let pw = &packed[l];
-        // Phase 1: attention RMSNorm, per-sequence shard.
-        for i in r0..r1 {
+        // Phase 1: attention RMSNorm, per-row shard.
+        for r in r0..r1 {
             unsafe {
                 rmsnorm(
-                    &st.x.read()[i * h..(i + 1) * h],
+                    &st.x.read()[r * h..(r + 1) * h],
                     &w.attn_norm.data,
                     cfg.rms_eps,
-                    st.xn.slice_mut(i * h, (i + 1) * h),
+                    st.xn.slice_mut(r * h, (r + 1) * h),
                 );
             }
         }
         barrier.wait();
-        // Phase 2: batched QKV projections, MR-panel shard — each worker
-        // streams the packed weights once for its rows of the batch.
+        // Phase 2: batched QKV projections, MR-panel shard over ALL
+        // token rows — with chunked prefill this is a genuinely tall
+        // GEMM (M = total step tokens), each worker streaming the
+        // packed weights once for its row panels.
         unsafe {
-            let xn = &st.xn.read()[..b * h];
+            let xn = &st.xn.read()[..n * h];
             let qs = st.q.slice_mut(p0 * qdim, p1 * qdim);
-            pw.wq.matmul_rows(xn, b, p0, p1, qs, scratch);
+            pw.wq.matmul_rows(xn, n, p0, p1, qs, scratch);
             let ks = st.kvec.slice_mut(p0 * kvdim, p1 * kvdim);
-            pw.wk.matmul_rows(xn, b, p0, p1, ks, scratch);
+            pw.wk.matmul_rows(xn, n, p0, p1, ks, scratch);
             let vs = st.vvec.slice_mut(p0 * kvdim, p1 * kvdim);
-            pw.wv.matmul_rows(xn, b, p0, p1, vs, scratch);
+            pw.wv.matmul_rows(xn, n, p0, p1, vs, scratch);
         }
         barrier.wait();
-        // Phase 3: RoPE, per-sequence shard (positions differ per row).
-        for i in r0..r1 {
-            let pos = slots[i].pos;
+        // Phase 3: RoPE, per-row shard (positions differ per row).
+        for r in r0..r1 {
+            let (si, off) = rows[r];
+            let pos = slots[si as usize].pos + off as usize;
             for head in 0..heads {
-                let o = i * qdim + head * hd;
+                let o = r * qdim + head * hd;
                 unsafe { rope_inplace(st.q.slice_mut(o, o + hd), pos, cfg.rope_theta) };
             }
             for head in 0..kvh {
-                let o = i * kvdim + head * hd;
+                let o = r * kvdim + head * hd;
                 unsafe { rope_inplace(st.kvec.slice_mut(o, o + hd), pos, cfg.rope_theta) };
             }
         }
         barrier.wait();
-        // Phase 4 (serial): commit every slot's K/V row through its
-        // block table. Distinct slots never alias (a frontier position
-        // always lives in a privately-held tail block), but the commit
-        // stays a single-writer KvCell window so the invariant is
-        // enforced, not assumed.
+        // Phase 4 (serial): commit every row's K/V through its slot's
+        // block table, in ascending row order — which is ascending
+        // position order within each slot (the row map is span-major).
+        // Distinct rows never alias (each (sequence, position) pair is
+        // unique and span/tail blocks are privately held), but the
+        // commit stays a single-writer KvCell window so the invariant
+        // is enforced, not assumed. Committing the WHOLE span before
+        // attention is what makes in-chunk causal attention a plain
+        // windowed read.
         if wi == 0 {
             kv_cell.commit(wi, |kv| {
                 let kvec = st.kvec.read();
                 let vvec = st.vvec.read();
-                for (i, s) in slots.iter().enumerate() {
-                    // The hot table starts after the cold prefix; the
-                    // frontier row always lives in a hot block.
-                    let row = paged_row(&s.table, bs, s.pos - s.cold.len() * bs);
-                    kv.k[l].row_mut(row).copy_from_slice(&kvec[i * kvdim..(i + 1) * kvdim]);
-                    kv.v[l].row_mut(row).copy_from_slice(&vvec[i * kvdim..(i + 1) * kvdim]);
+                for (r, &(si, off)) in rows.iter().enumerate() {
+                    let s = &slots[si as usize];
+                    // The hot table starts after the cold prefix; span
+                    // rows always live in hot blocks.
+                    let row =
+                        paged_row(&s.table, bs, s.pos + off as usize - s.cold.len() * bs);
+                    kv.k[l].row_mut(row).copy_from_slice(&kvec[r * kvdim..(r + 1) * kvdim]);
+                    kv.v[l].row_mut(row).copy_from_slice(&vvec[r * kvdim..(r + 1) * kvdim]);
                 }
             });
         }
         barrier.wait();
-        // Phase 5: paged GQA attention, per-sequence shard. Slots with a
-        // cold prefix take the hybrid path: the leading full blocks are
-        // read *in place* from the quantized cold tier (dequant-gather
-        // kernels), the hot suffix through the block table — positions
-        // stay in ascending order, so softmax and the context
-        // accumulation see the same sequence order as the dense path.
-        // Slots without one take the exact pre-tiering code path.
+        // Phase 5: paged GQA attention, per-row shard, causal window
+        // `[0, pos]` per row. Rows with a cold prefix take the hybrid
+        // path: the leading full blocks are read *in place* from the
+        // quantized cold tier (dequant-gather kernels), the hot suffix
+        // through the block table — positions stay in ascending order,
+        // so softmax and the context accumulation see the same sequence
+        // order as the dense path. Rows without one take the fused
+        // causal row kernel (the exact pre-tiering arithmetic).
         let kv = kv_cell.read();
-        for i in r0..r1 {
-            let s = &slots[i];
-            let seq = s.pos + 1;
+        for r in r0..r1 {
+            let (si, off) = rows[r];
+            let s = &slots[si as usize];
+            let pos = s.pos + off as usize;
+            let seq = pos + 1;
             let cold_toks = s.cold.len() * bs;
             let cstore = (cold_toks > 0).then(|| {
                 cold_cell
@@ -287,30 +329,22 @@ fn spmd_step(
                     .read()
             });
             let q = st.q.read();
-            let ctx_row = unsafe { st.ctx.slice_mut(i * qdim, (i + 1) * qdim) };
+            let ctx_row = unsafe { st.ctx.slice_mut(r * qdim, (r + 1) * qdim) };
             let mut scores = vec![0.0f32; seq];
             for head in 0..heads {
                 let kvhead = head / group;
-                let qo = i * qdim + head * hd;
+                let qo = r * qdim + head * hd;
                 if cold_toks == 0 {
-                    attn_scores_paged(
+                    attn_row_causal_paged(
                         &q[qo..qo + hd],
                         &kv.k[l],
+                        &kv.v[l],
                         &s.table,
                         bs,
                         kvhead * hd,
                         hd,
                         inv_sqrt,
                         &mut scores,
-                    );
-                    softmax_inplace(&mut scores);
-                    attn_context_paged(
-                        &scores,
-                        &kv.v[l],
-                        &s.table,
-                        bs,
-                        kvhead * hd,
-                        hd,
                         &mut ctx_row[head * hd..(head + 1) * hd],
                     );
                 } else {
@@ -371,23 +405,23 @@ fn spmd_step(
         barrier.wait();
         // Phase 6: output projection, MR-panel shard.
         unsafe {
-            let ctx = &st.ctx.read()[..b * qdim];
+            let ctx = &st.ctx.read()[..n * qdim];
             let os = st.attn.slice_mut(p0 * h, p1 * h);
-            pw.wo.matmul_rows(ctx, b, p0, p1, os, scratch);
+            pw.wo.matmul_rows(ctx, n, p0, p1, os, scratch);
         }
         barrier.wait();
-        // Phase 7: residual + MLP RMSNorm, per-sequence shard.
-        for i in r0..r1 {
+        // Phase 7: residual + MLP RMSNorm, per-row shard.
+        for r in r0..r1 {
             unsafe {
                 add_inplace(
-                    st.x.slice_mut(i * h, (i + 1) * h),
-                    &st.attn.read()[i * h..(i + 1) * h],
+                    st.x.slice_mut(r * h, (r + 1) * h),
+                    &st.attn.read()[r * h..(r + 1) * h],
                 );
                 rmsnorm(
-                    &st.x.read()[i * h..(i + 1) * h],
+                    &st.x.read()[r * h..(r + 1) * h],
                     &w.mlp_norm.data,
                     cfg.rms_eps,
-                    st.xn.slice_mut(i * h, (i + 1) * h),
+                    st.xn.slice_mut(r * h, (r + 1) * h),
                 );
             }
         }
@@ -395,11 +429,11 @@ fn spmd_step(
         // Phase 8: SwiGLU gate/up, MR-panel shard (the elementwise tail
         // runs on the same rows this worker just computed).
         unsafe {
-            let xn = &st.xn.read()[..b * h];
+            let xn = &st.xn.read()[..n * h];
             let gs = st.gate.slice_mut(p0 * inter, p1 * inter);
-            pw.w_gate.matmul_rows(xn, b, p0, p1, gs, scratch);
+            pw.w_gate.matmul_rows(xn, n, p0, p1, gs, scratch);
             let us = st.up.slice_mut(p0 * inter, p1 * inter);
-            pw.w_up.matmul_rows(xn, b, p0, p1, us, scratch);
+            pw.w_up.matmul_rows(xn, n, p0, p1, us, scratch);
             let g = st.gate.slice_mut(p0 * inter, p1 * inter);
             silu_inplace(g);
             mul_inplace(g, &st.up.read()[p0 * inter..p1 * inter]);
@@ -407,38 +441,38 @@ fn spmd_step(
         barrier.wait();
         // Phase 9: down projection, MR-panel shard.
         unsafe {
-            let gate = &st.gate.read()[..b * inter];
+            let gate = &st.gate.read()[..n * inter];
             let ds = st.down.slice_mut(p0 * h, p1 * h);
-            pw.w_down.matmul_rows(gate, b, p0, p1, ds, scratch);
+            pw.w_down.matmul_rows(gate, n, p0, p1, ds, scratch);
         }
         barrier.wait();
-        // Phase 10: residual, per-sequence shard.
-        for i in r0..r1 {
+        // Phase 10: residual, per-row shard.
+        for r in r0..r1 {
             unsafe {
                 add_inplace(
-                    st.x.slice_mut(i * h, (i + 1) * h),
-                    &st.down.read()[i * h..(i + 1) * h],
+                    st.x.slice_mut(r * h, (r + 1) * h),
+                    &st.down.read()[r * h..(r + 1) * h],
                 );
             }
         }
         barrier.wait();
     }
-    // Final norm (per-sequence shard) + LM head (MR-panel shard).
-    for i in r0..r1 {
+    // Final norm (per-row shard) + LM head (MR-panel shard).
+    for r in r0..r1 {
         unsafe {
             rmsnorm(
-                &st.x.read()[i * h..(i + 1) * h],
+                &st.x.read()[r * h..(r + 1) * h],
                 &weights.final_norm.data,
                 cfg.rms_eps,
-                st.xn.slice_mut(i * h, (i + 1) * h),
+                st.xn.slice_mut(r * h, (r + 1) * h),
             );
         }
     }
     barrier.wait();
     unsafe {
-        let xn = &st.xn.read()[..b * h];
+        let xn = &st.xn.read()[..n * h];
         let ls = st.logits.slice_mut(p0 * vocab, p1 * vocab);
-        packed_lm_head.matmul_rows(xn, b, p0, p1, ls, scratch);
+        packed_lm_head.matmul_rows(xn, n, p0, p1, ls, scratch);
     }
     // Final barrier: publishes every logits shard to the controller and
     // parks the workers for the next step.
@@ -467,12 +501,12 @@ pub struct BatchStepper<'a, 'kv> {
     st: &'a StepState,
     barrier: &'a SpinBarrier,
     threads: usize,
-    max_batch: usize,
+    max_rows: usize,
     scratch: Vec<f32>,
 }
 
 impl BatchStepper<'_, '_> {
-    /// Effective worker count of this run (after the batch-width clamp).
+    /// Effective worker count of this run (after the row-capacity clamp).
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -503,30 +537,46 @@ impl BatchStepper<'_, '_> {
         });
     }
 
-    /// Advance every slot one position; returns the argmax token for
-    /// slots with `sample = true`.
+    /// Advance every slot by its span; returns the argmax token of the
+    /// span's final row for slots with `sample = true`.
     pub fn step(&mut self, slots: &[StepSlot]) -> Vec<Option<usize>> {
         self.step_logits(slots, false).0
     }
 
-    /// As [`BatchStepper::step`]; with `keep_logits` the `[B * vocab]`
-    /// logits buffer of the iteration is returned too (white-box tests).
+    /// As [`BatchStepper::step`]; with `keep_logits` the
+    /// `[total_rows * vocab]` logits buffer of the iteration (one row
+    /// per span token, span-major) is returned too (white-box tests).
     pub fn step_logits(
         &mut self,
         slots: &[StepSlot],
         keep_logits: bool,
     ) -> (Vec<Option<usize>>, Vec<f32>) {
         let b = slots.len();
-        assert!(b <= self.max_batch, "batch {b} exceeds run capacity {}", self.max_batch);
         if b == 0 {
             return (Vec::new(), Vec::new());
         }
+        let rows_total: usize = slots.iter().map(|s| s.tokens.len()).sum();
+        assert!(
+            rows_total <= self.max_rows,
+            "step of {rows_total} token rows exceeds run capacity {}",
+            self.max_rows
+        );
+        // Degenerate-span hardening: a zero-token slot has no frontier
+        // row to sample and would silently shift every later slot's row
+        // base; a span past its block tables would commit KV through
+        // unreserved (possibly foreign) blocks.
+        debug_assert!(
+            slots.iter().all(|s| !s.tokens.is_empty()),
+            "zero-token slot span scheduled"
+        );
         debug_assert!(
             {
                 let bs = self.kv_cell.read().block_size;
-                slots.iter().all(|s| (s.cold.len() + s.table.len()) * bs > s.pos)
+                slots
+                    .iter()
+                    .all(|s| (s.cold.len() + s.table.len()) * bs >= s.pos + s.tokens.len())
             },
-            "a slot's block tables do not cover its position"
+            "a slot's block tables do not cover its span"
         );
         // Publish this step's work descriptor. SAFETY: every worker is
         // parked at the start barrier; the release below hands them a
@@ -535,12 +585,18 @@ impl BatchStepper<'_, '_> {
             let owned = self.st.slots.get_mut();
             owned.clear();
             owned.extend(slots.iter().map(|s| OwnedSlot {
-                token: s.token,
+                tokens: s.tokens.to_vec(),
                 pos: s.pos,
                 table: s.table.to_vec(),
                 cold: s.cold.to_vec(),
-                sample: s.sample,
             }));
+            let rows = self.st.rows.get_mut();
+            rows.clear();
+            for (si, s) in slots.iter().enumerate() {
+                for off in 0..s.tokens.len() {
+                    rows.push((si as u32, off as u32));
+                }
+            }
         }
         // Release the workers into the step and join as worker 0. The
         // final barrier inside `spmd_step` publishes all logits shards.
@@ -559,12 +615,16 @@ impl BatchStepper<'_, '_> {
         );
         let vocab = self.weights.cfg.vocab;
         let logits = self.st.logits.read();
+        let mut row_base = 0usize;
         let samples = slots
             .iter()
-            .enumerate()
-            .map(|(i, s)| s.sample.then(|| argmax(&logits[i * vocab..(i + 1) * vocab])))
+            .map(|s| {
+                let last = row_base + s.tokens.len() - 1;
+                row_base += s.tokens.len();
+                s.sample.then(|| argmax(&logits[last * vocab..(last + 1) * vocab]))
+            })
             .collect();
-        (samples, if keep_logits { logits[..b * vocab].to_vec() } else { Vec::new() })
+        (samples, if keep_logits { logits[..rows_total * vocab].to_vec() } else { Vec::new() })
     }
 }
 
@@ -633,19 +693,22 @@ impl<'w> BatchEngine<'w> {
     /// Open one SPMD serve run: spawn `threads - 1` persistent workers
     /// (one `thread::scope` for the whole run, not per step), hand the
     /// driver a [`BatchStepper`], and shut the workers down when it
-    /// returns. `threads` is clamped to `[1, max_batch]` — workers own
-    /// whole batch rows, so counts beyond the batch capacity would only
-    /// produce empty shards (the same guard `Qwen3Engine::new` applies
-    /// at the model's partition width).
+    /// returns. `max_rows` is the step capacity in **token rows** (the
+    /// scheduler's per-iteration token budget — equal to `max_batch`
+    /// when `prefill_chunk` is 1); every buffer is sized to it and
+    /// `threads` is clamped to `[1, max_rows]` — workers own token
+    /// rows, so counts beyond the row capacity would only produce empty
+    /// shards (the same guard `Qwen3Engine::new` applies at the model's
+    /// partition width).
     pub fn run<R>(
         &mut self,
         threads: usize,
-        max_batch: usize,
+        max_rows: usize,
         driver: impl FnOnce(&mut BatchStepper<'_, '_>) -> R,
     ) -> R {
-        let max_batch = max_batch.max(1);
-        let t = threads.clamp(1, max_batch);
-        let st = StepState::new(&self.weights.cfg, max_batch);
+        let max_rows = max_rows.max(1);
+        let t = threads.clamp(1, max_rows);
+        let st = StepState::new(&self.weights.cfg, max_rows);
         let barrier = SpinBarrier::new(t);
         let cmd = AtomicUsize::new(CMD_STEP);
         let weights = self.weights;
@@ -694,7 +757,7 @@ impl<'w> BatchEngine<'w> {
                 st: &st,
                 barrier: &barrier,
                 threads: t,
-                max_batch,
+                max_rows,
                 scratch: Vec::new(),
             };
             // Workers stay parked between steps; if the driver unwinds
@@ -725,22 +788,24 @@ impl<'w> BatchEngine<'w> {
         })
     }
 
-    /// Advance every slot one position; returns the argmax token for
-    /// slots with `sample = true`. One-shot single-threaded convenience
-    /// wrapper over [`BatchEngine::run`] — serving drives `run` directly
-    /// so the workers persist across steps.
+    /// Advance every slot by its span; returns the argmax token of the
+    /// span's final row for slots with `sample = true`. One-shot
+    /// single-threaded convenience wrapper over [`BatchEngine::run`] —
+    /// serving drives `run` directly so the workers persist across
+    /// steps.
     pub fn step(&mut self, slots: &[StepSlot]) -> Vec<Option<usize>> {
         self.step_logits(slots, false).0
     }
 
-    /// As [`BatchEngine::step`]; with `keep_logits` the `[B * vocab]`
-    /// logits buffer of the iteration is returned too.
+    /// As [`BatchEngine::step`]; with `keep_logits` the
+    /// `[total_rows * vocab]` logits buffer of the iteration is
+    /// returned too.
     pub fn step_logits(
         &mut self,
         slots: &[StepSlot],
         keep_logits: bool,
     ) -> (Vec<Option<usize>>, Vec<f32>) {
-        let cap = slots.len().max(1);
+        let cap = slots.iter().map(|s| s.tokens.len()).sum::<usize>().max(1);
         self.run(1, cap, |stepper| stepper.step_logits(slots, keep_logits))
     }
 }
@@ -765,9 +830,9 @@ mod tests {
         // Non-contiguous table: 3 blocks out of order.
         let table: Vec<u32> = vec![3, 0, 6];
         let tokens = [7usize, 300, 5, 42, 9, 1000];
-        for (pos, &tok) in tokens.iter().enumerate() {
-            let dense_logits = dense.decode_step(tok, pos);
-            let slot = StepSlot::hot(tok, pos, &table, true);
+        for (pos, tok) in tokens.iter().enumerate() {
+            let dense_logits = dense.decode_step(*tok, pos);
+            let slot = StepSlot::hot(std::slice::from_ref(tok), pos, &table, true);
             let (samples, paged_logits) = be.step_logits(&[slot], true);
             let diff = max_abs_diff(&dense_logits, &paged_logits);
             assert!(diff < 1e-6, "pos {pos}: paged vs dense logits differ by {diff}");
@@ -777,6 +842,81 @@ mod tests {
                 "pos {pos}: sampled token diverged"
             );
         }
+    }
+
+    #[test]
+    fn chunked_span_is_bitwise_identical_to_single_token_steps() {
+        // The tentpole contract: feeding a prompt as multi-token spans
+        // (commit the whole span, then causal windowed attention) must
+        // reproduce sequential single-token steps bit for bit at every
+        // position and any worker count — including a chunk size that
+        // is NOT a divisor of the block size, so spans straddle block
+        // boundaries.
+        let cfg = Qwen3Config::tiny();
+        let w_seq = Qwen3Weights::random(&cfg, 202);
+        let w_chunk = Qwen3Weights::random(&cfg, 202);
+        let bs = 4usize;
+        let tokens = [7usize, 300, 5, 42, 9, 1000, 77, 13, 501, 88, 2, 61];
+        let table: Vec<u32> = vec![5, 1, 3];
+        let mut seq_engine = BatchEngine::new(&w_seq, 8, bs);
+        let mut want = Vec::new();
+        for (pos, tok) in tokens.iter().enumerate() {
+            let slot = StepSlot::hot(std::slice::from_ref(tok), pos, &table, true);
+            want.extend(seq_engine.step_logits(&[slot], true).1);
+        }
+        for threads in [1usize, 2, 4] {
+            for chunk in [3usize, 5, 12] {
+                let mut be = BatchEngine::new(&w_chunk, 8, bs);
+                let got = be.run(threads, tokens.len(), |stepper| {
+                    let mut out = Vec::new();
+                    let mut pos = 0usize;
+                    while pos < tokens.len() {
+                        let span = chunk.min(tokens.len() - pos);
+                        let slot = StepSlot::hot(&tokens[pos..pos + span], pos, &table, true);
+                        out.extend(stepper.step_logits(&[slot], true).1);
+                        pos += span;
+                    }
+                    out
+                });
+                assert_eq!(
+                    want, got,
+                    "chunk {chunk} diverged from sequential steps at {threads} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_batch_mixes_spans_and_single_tokens() {
+        // One step may batch a prefill span with a single-token decode
+        // row; every row's logits must equal its solo run bit for bit
+        // (rows are arithmetic-independent under the ragged row map).
+        let cfg = Qwen3Config::tiny();
+        let w_a = Qwen3Weights::random(&cfg, 71);
+        let w_b = Qwen3Weights::random(&cfg, 71);
+        let vocab = cfg.vocab;
+        let t1: Vec<u32> = vec![0, 1];
+        let t2: Vec<u32> = vec![2, 3];
+        let span = [11usize, 22, 33, 44];
+        let lone = [500usize];
+        // Solo runs.
+        let mut solo = BatchEngine::new(&w_a, 16, 4);
+        let (_, span_solo) = solo.step_logits(&[StepSlot::hot(&span, 0, &t1, true)], true);
+        let mut solo2 = BatchEngine::new(&w_a, 16, 4);
+        let (_, lone_solo) = solo2.step_logits(&[StepSlot::hot(&lone, 0, &t2, true)], true);
+        // Ragged batch: the span and the single token share one step.
+        let mut duo = BatchEngine::new(&w_b, 16, 4);
+        let slots =
+            [StepSlot::hot(&span, 0, &t1, true), StepSlot::hot(&lone, 0, &t2, true)];
+        let (samples, ragged) = duo.step_logits(&slots, true);
+        assert_eq!(&ragged[..span.len() * vocab], &span_solo[..]);
+        assert_eq!(&ragged[span.len() * vocab..], &lone_solo[..]);
+        // Sampling reads the span's FINAL row, not row 0.
+        assert_eq!(
+            samples[0].unwrap(),
+            crate::coordinator::argmax(&span_solo[(span.len() - 1) * vocab..]),
+        );
+        assert_eq!(samples[1].unwrap(), crate::coordinator::argmax(&lone_solo));
     }
 
     #[test]
@@ -792,16 +932,17 @@ mod tests {
         let seq2 = [500usize, 600, 700];
         // Solo: run seq1 alone.
         let mut solo_logits = Vec::new();
-        for (pos, &tok) in seq1.iter().enumerate() {
-            let (_, l) = solo.step_logits(&[StepSlot::hot(tok, pos, &t1, true)], true);
+        for (pos, tok) in seq1.iter().enumerate() {
+            let (_, l) =
+                solo.step_logits(&[StepSlot::hot(std::slice::from_ref(tok), pos, &t1, true)], true);
             solo_logits = l;
         }
         // Duo: run seq1 batched with an unrelated seq2.
         let mut duo_logits = Vec::new();
         for pos in 0..seq1.len() {
             let slots = [
-                StepSlot::hot(seq1[pos], pos, &t1, true),
-                StepSlot::hot(seq2[pos], pos, &t2, true),
+                StepSlot::hot(std::slice::from_ref(&seq1[pos]), pos, &t1, true),
+                StepSlot::hot(std::slice::from_ref(&seq2[pos]), pos, &t2, true),
             ];
             let (_, l) = duo.step_logits(&slots, true);
             duo_logits = l;
@@ -813,10 +954,10 @@ mod tests {
 
     #[test]
     fn threaded_run_is_bit_identical_to_single_thread() {
-        // The tentpole contract: the persistent-worker SPMD step must
-        // reproduce the single-threaded batched step bit for bit at any
-        // worker count, because the static partition never changes an
-        // element's accumulation order.
+        // The persistent-worker SPMD step must reproduce the
+        // single-threaded batched step bit for bit at any worker count,
+        // because the static partition never changes an element's
+        // accumulation order.
         let cfg = Qwen3Config::tiny();
         let w1 = Qwen3Weights::random(&cfg, 321);
         let w2 = Qwen3Weights::random(&cfg, 321);
@@ -829,9 +970,16 @@ mod tests {
             be.run(threads, nseq, |stepper| {
                 (0..steps)
                     .map(|pos| {
+                        let toks: Vec<usize> =
+                            (0..nseq).map(|i| (i * 31 + pos * 7) % cfg.vocab).collect();
                         let slots: Vec<StepSlot> = (0..nseq)
                             .map(|i| {
-                                StepSlot::hot((i * 31 + pos * 7) % cfg.vocab, pos, &tables[i], true)
+                                StepSlot::hot(
+                                    std::slice::from_ref(&toks[i]),
+                                    pos,
+                                    &tables[i],
+                                    true,
+                                )
                             })
                             .collect();
                         stepper.step_logits(&slots, true).1
@@ -849,7 +997,8 @@ mod tests {
     #[test]
     fn persistent_workers_survive_varying_batches() {
         // One run, four steps with batch sizes 1 -> 2 -> 2 -> 1, driven
-        // with an oversubscribed thread request (clamped to max_batch).
+        // with an oversubscribed thread request (clamped to the row
+        // capacity).
         let cfg = Qwen3Config::tiny();
         let w_ref = Qwen3Weights::random(&cfg, 9);
         let w_thr = Qwen3Weights::random(&cfg, 9);
@@ -866,19 +1015,23 @@ mod tests {
         for step in &script {
             let slots: Vec<StepSlot> = step
                 .iter()
-                .map(|&(token, pos, table)| StepSlot::hot(token, pos, table, true))
+                .map(|(token, pos, table)| {
+                    StepSlot::hot(std::slice::from_ref(token), *pos, table, true)
+                })
                 .collect();
             want.push(reference.step_logits(&slots, true).1);
         }
         let mut threaded = BatchEngine::new(&w_thr, 8, 4);
         let got = threaded.run(64, 2, |stepper| {
-            assert_eq!(stepper.threads(), 2, "threads must clamp at max_batch");
+            assert_eq!(stepper.threads(), 2, "threads must clamp at the row capacity");
             script
                 .iter()
                 .map(|step| {
                     let slots: Vec<StepSlot> = step
                         .iter()
-                        .map(|&(token, pos, table)| StepSlot::hot(token, pos, table, true))
+                        .map(|(token, pos, table)| {
+                            StepSlot::hot(std::slice::from_ref(token), *pos, table, true)
+                        })
                         .collect();
                     stepper.step_logits(&slots, true).1
                 })
@@ -913,6 +1066,29 @@ mod tests {
     }
 
     #[test]
+    #[cfg(debug_assertions)]
+    fn degenerate_spans_are_rejected() {
+        // Zero-token spans and spans past the reserved block tables are
+        // scheduler bugs; the engine turns them into deterministic
+        // debug panics instead of silent row-base corruption / foreign
+        // block writes.
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 2);
+        let table: Vec<u32> = vec![0];
+        let empty = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut be = BatchEngine::new(&w, 2, 4);
+            be.step(&[StepSlot::hot(&[], 0, &table, false)]);
+        }));
+        assert!(empty.is_err(), "empty span must be rejected");
+        let overrun = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut be = BatchEngine::new(&w, 2, 4);
+            // Span [3, 5) needs position 4; a 1-block table covers 0..4.
+            be.step(&[StepSlot::hot(&[1, 2], 3, &table, false)]);
+        }));
+        assert!(overrun.is_err(), "span past the block table must be rejected");
+    }
+
+    #[test]
     fn quantized_weights_match_fake_quant_oracle_bitwise() {
         // The weight-quant contract: a batched engine over group-wise
         // quantized weights (fused dequant-GEMM kernels) must produce
@@ -938,7 +1114,14 @@ mod tests {
                             let slots: Vec<StepSlot> = toks
                                 .iter()
                                 .enumerate()
-                                .map(|(i, &t)| StepSlot::hot(t, pos, &tables[i], true))
+                                .map(|(i, t)| {
+                                    StepSlot::hot(
+                                        std::slice::from_ref(t),
+                                        pos,
+                                        &tables[i],
+                                        true,
+                                    )
+                                })
                                 .collect();
                             stepper.step_logits(&slots, true).1
                         })
@@ -979,14 +1162,15 @@ mod tests {
         let tokens = [9usize, 42, 300, 7, 15, 88];
         let mut reference = BatchEngine::new(&w_ref, 8, 4);
         let mut want = Vec::new();
-        for (pos, &tok) in tokens.iter().enumerate() {
-            want.push(reference.step_logits(&[StepSlot::hot(tok, pos, &table, true)], true).1);
+        for (pos, tok) in tokens.iter().enumerate() {
+            let slot = StepSlot::hot(std::slice::from_ref(tok), pos, &table, true);
+            want.push(reference.step_logits(&[slot], true).1);
         }
         let mut be = BatchEngine::new(&w_tier, 8, 4);
         be.enable_tier(4, KvQuant::F32);
         let got = be.run(1, 1, |stepper| {
             let mut out = Vec::new();
-            for (pos, &tok) in tokens.iter().enumerate() {
+            for (pos, tok) in tokens.iter().enumerate() {
                 if pos == 5 {
                     // Swap out both blocks (block 1 holds 4 rows, block
                     // 3 holds one), then swap them back into *different*
@@ -1000,10 +1184,10 @@ mod tests {
                         TierOp::Fetch { cold: 2, hot: 0, seq: 0 },
                     ]);
                     let new_table: Vec<u32> = vec![6, 0];
-                    let slot = StepSlot::hot(tok, pos, &new_table, true);
+                    let slot = StepSlot::hot(std::slice::from_ref(tok), pos, &new_table, true);
                     out.push(stepper.step_logits(&[slot], true).1);
                 } else {
-                    let slot = StepSlot::hot(tok, pos, &table, true);
+                    let slot = StepSlot::hot(std::slice::from_ref(tok), pos, &table, true);
                     out.push(stepper.step_logits(&[slot], true).1);
                 }
             }
@@ -1031,15 +1215,22 @@ mod tests {
         fetched.enable_tier(2, KvQuant::Int8);
         let want = fetched.run(1, 1, |stepper| {
             let table: Vec<u32> = vec![0, 1];
-            for (pos, &tok) in prefix.iter().enumerate() {
-                stepper.step(&[StepSlot::hot(tok, pos, &table, false)]);
+            for (pos, tok) in prefix.iter().enumerate() {
+                stepper.step(&[StepSlot::hot(std::slice::from_ref(tok), pos, &table, false)]);
             }
             stepper.tier_ops(&[TierOp::Spill { hot: 0, cold: 1, filled: bs }]);
             stepper.tier_ops(&[TierOp::Fetch { cold: 1, hot: 0, seq: 0 }]);
             let mut out = Vec::new();
-            for (i, &tok) in tail.iter().enumerate() {
+            for (i, tok) in tail.iter().enumerate() {
                 let pos = prefix.len() + i;
-                out.push(stepper.step_logits(&[StepSlot::hot(tok, pos, &table, true)], true).1);
+                out.push(
+                    stepper
+                        .step_logits(
+                            &[StepSlot::hot(std::slice::from_ref(tok), pos, &table, true)],
+                            true,
+                        )
+                        .1,
+                );
             }
             out
         });
@@ -1050,17 +1241,22 @@ mod tests {
         direct.enable_tier(2, KvQuant::Int8);
         let got = direct.run(1, 1, |stepper| {
             let table: Vec<u32> = vec![0, 1];
-            for (pos, &tok) in prefix.iter().enumerate() {
-                stepper.step(&[StepSlot::hot(tok, pos, &table, false)]);
+            for (pos, tok) in prefix.iter().enumerate() {
+                stepper.step(&[StepSlot::hot(std::slice::from_ref(tok), pos, &table, false)]);
             }
             stepper.tier_ops(&[TierOp::Spill { hot: 0, cold: 1, filled: bs }]);
             let cold: Vec<u32> = vec![1];
             let hot_tail: Vec<u32> = vec![1];
             let mut out = Vec::new();
-            for (i, &tok) in tail.iter().enumerate() {
+            for (i, tok) in tail.iter().enumerate() {
                 let pos = prefix.len() + i;
-                let slot =
-                    StepSlot { token: tok, pos, table: &hot_tail, cold: &cold, sample: true };
+                let slot = StepSlot {
+                    tokens: std::slice::from_ref(tok),
+                    pos,
+                    table: &hot_tail,
+                    cold: &cold,
+                    sample: true,
+                };
                 out.push(stepper.step_logits(&[slot], true).1);
             }
             out

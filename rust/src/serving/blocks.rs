@@ -182,6 +182,22 @@ impl KvBlockManager {
         (table, covered)
     }
 
+    /// Re-attach a single cached full block: `prefix` is the entire
+    /// token prefix the block covers (the cache key). On a hit the
+    /// block is retained (the caller now holds a reference), its LRU
+    /// stamp is bumped, and the hit counter advances — the swap-in
+    /// re-attach path (`ContinuousScheduler::admit_swapped`) uses this
+    /// to adopt exact fp32 originals instead of fetching int8 copies.
+    pub fn lookup_block(&mut self, prefix: &[usize]) -> Option<u32> {
+        self.clock += 1;
+        let e = self.prefix.get_mut(prefix)?;
+        e.last_touch = self.clock;
+        let b = e.block;
+        self.pool.retain(b);
+        self.prefix_hits += 1;
+        Some(b)
+    }
+
     /// Ensure `table` addresses position `pos`, allocating the next
     /// block if needed. Returns false when the pool is dry (caller
     /// preempts someone and retries).
@@ -366,6 +382,27 @@ mod tests {
         assert_eq!(m.pool.try_alloc(), Some(blocks[0]));
         assert_eq!(m.pool.try_alloc(), Some(blocks[2]));
         assert_eq!(m.pool.try_alloc(), Some(blocks[1]));
+    }
+
+    #[test]
+    fn lookup_block_reattaches_single_blocks() {
+        let mut m = KvBlockManager::new(8, 4);
+        let prompt: Vec<usize> = (0..8).collect();
+        let (mut t1, _) = m.lookup_prefix(&prompt);
+        assert!(m.ensure_slot(&mut t1, 7));
+        m.register_full_block(&prompt[..4], t1.blocks[0]);
+        m.register_full_block(&prompt[..8], t1.blocks[1]);
+        let b1 = t1.blocks[1];
+        m.release_table(&mut t1);
+        // Second (non-leading) block re-attaches on its own: the key is
+        // the whole covered prefix, not a position.
+        assert_eq!(m.lookup_block(&prompt[..8]), Some(b1));
+        assert_eq!(m.pool.refcount(b1), 2, "re-attach must retain");
+        assert_eq!(m.prefix_hits, 1);
+        assert_eq!(m.lookup_block(&prompt[..5]), None, "non-boundary prefix misses");
+        // A re-attached block survives eviction (it is referenced).
+        assert_eq!(m.evict_unused_cached(), 1, "only the unreferenced first block frees");
+        assert_eq!(m.lookup_block(&prompt[..8]), Some(b1), "still cached while referenced");
     }
 
     #[test]

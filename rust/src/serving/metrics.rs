@@ -36,6 +36,20 @@ pub struct ServingMetrics {
     pub decode_steps: usize,
     /// Already-sampled tokens recomputed after recompute-preemptions.
     pub replay_steps: usize,
+    /// Total seconds spent in iterations attributed to prompt (prefill)
+    /// rows — chunked prefill's win shows up here as higher prefill
+    /// throughput, not hidden wall time.
+    pub prefill_s: f64,
+    /// Prompt positions computed (one per prefill row; replayed prompt
+    /// positions after a recompute-preemption count again — they cost
+    /// again).
+    pub prefill_steps: usize,
+    /// Span length of every prefilling sequence per iteration (chunked
+    /// prefill's actual packing; all-1 at `prefill_chunk = 1`).
+    pub chunk_size: Stats,
+    /// Cold blocks re-attached from the prefix cache on swap-in instead
+    /// of being fetched (exact fp32, zero bytes moved).
+    pub swap_reattached: usize,
     /// True when the run had a cold tier configured (`tiering: Some`).
     pub tiered: bool,
     /// Preemptions resolved by swapping the victim to the cold tier.
@@ -81,6 +95,17 @@ impl ServingMetrics {
         }
     }
 
+    /// Prefill throughput over the directly-accumulated prefill seconds
+    /// (prompt rows per second; 0.0 when nothing prefilled or timing
+    /// was too coarse to register).
+    pub fn prefill_tokens_per_s(&self) -> f64 {
+        if self.prefill_s > 0.0 {
+            self.prefill_steps as f64 / self.prefill_s
+        } else {
+            0.0
+        }
+    }
+
     pub fn render(&self) -> String {
         let mut s = format!(
             "ttft p50={:.2}ms tpot p50={:.2}ms batch mean={:.1} queue mean={:.1} \
@@ -94,9 +119,17 @@ impl ServingMetrics {
             self.prefix_hits,
             self.iterations,
         );
+        if self.prefill_steps > 0 {
+            s.push_str(&format!(
+                " prefill={:.2} tok/s chunk mean={:.1} max={:.0}",
+                self.prefill_tokens_per_s(),
+                self.chunk_size.mean(),
+                self.chunk_size.max(),
+            ));
+        }
         if self.tiered {
             s.push_str(&format!(
-                " | tier swap={} recompute={} spill={}B/{} fetch={}B/{} direct={} \
+                " | tier swap={} recompute={} spill={}B/{} fetch={}B/{} reattach={} direct={} \
                  cold peak={} sim={:.2}ms replay={}",
                 self.swap_preemptions,
                 self.recompute_preemptions,
@@ -104,6 +137,7 @@ impl ServingMetrics {
                 self.spills,
                 self.fetch_bytes,
                 self.fetches,
+                self.swap_reattached,
                 self.cold_direct_reads,
                 self.peak_cold_in_use,
                 self.tier_sim_s * 1e3,
@@ -130,6 +164,21 @@ mod tests {
     fn decode_throughput_from_accumulated_seconds() {
         let m = ServingMetrics { decode_s: 2.0, decode_steps: 100, ..Default::default() };
         assert_eq!(m.decode_tokens_per_s(), 50.0);
+    }
+
+    #[test]
+    fn prefill_throughput_from_accumulated_seconds() {
+        let mut m =
+            ServingMetrics { prefill_s: 0.5, prefill_steps: 200, ..Default::default() };
+        m.chunk_size.push(4.0);
+        assert_eq!(m.prefill_tokens_per_s(), 400.0);
+        let s = m.render();
+        assert!(s.contains("prefill=400.00 tok/s"), "{s}");
+        assert!(s.contains("chunk mean=4.0"), "{s}");
+        // No prefill rows -> the segment stays out of the render.
+        let idle = ServingMetrics::default();
+        assert_eq!(idle.prefill_tokens_per_s(), 0.0);
+        assert!(!idle.render().contains("prefill="));
     }
 
     #[test]

@@ -1,15 +1,19 @@
 //! Continuous-batching scheduler: admission control, iteration-level
-//! batching of prefill + decode, and recency-based preemption-to-queue
-//! when the block pool is exhausted.
+//! batching of chunked prefill + decode, and recency-based
+//! preemption-to-queue when the block pool is exhausted.
 //!
 //! Sequence lifecycle: `Queued -> Prefill -> Decode -> Done`, with
 //! `-> Preempted -> (queue front) -> Prefill` under memory pressure.
-//! Every scheduler iteration advances each running sequence by exactly
-//! one position — a prompt token while prefilling (chunked prefill with
-//! chunk 1), the last sampled token while decoding — so prefill and
-//! decode tokens share the same batched forward pass and a finished
-//! sequence's slot is refilled on the very next iteration instead of at
-//! batch boundaries.
+//! Every scheduler iteration advances each running sequence by a
+//! **token span** packed under a per-iteration token budget
+//! ([`ContinuousConfig::step_token_budget`]): decode sequences get
+//! exactly one position (their last sampled token), prefilling
+//! sequences get up to [`ContinuousConfig::prefill_chunk`] prompt
+//! positions. With the default `prefill_chunk = 1` every span is one
+//! token and the scheduler is bitwise-identical to the pre-span
+//! behaviour; larger chunks change only *when* positions are computed,
+//! never their values, so outputs stay token-identical at any chunk
+//! size (the FCFS differential oracle pins both).
 //!
 //! Preemption has two modes. *Recompute* (the only mode when tiering is
 //! off): the victim's blocks are released (its full blocks may survive
@@ -21,10 +25,14 @@
 //! victim's blocks are spilled to the quantized cold tier
 //! ([`crate::serving::tiered`]) and fetched back on re-admission with
 //! position and sampled tokens intact — no replay — governed by the
-//! swap-vs-recompute cost model. The int8 tier is lossy: a swapped-back
-//! sequence is *tainted* (its blocks never enter the prefix cache) and
-//! its first resume point is recorded in `ServingMetrics::swap_points`,
-//! bounding where divergence from the oracle may start.
+//! swap-vs-recompute cost model. On re-admission, full blocks whose
+//! exact fp32 originals are still prefix-cache-resident are
+//! **re-attached** instead of fetched (no bytes moved, no quantization
+//! error re-read). The int8 tier is lossy: a sequence that actually
+//! attends over quantized KV is *tainted* (its blocks never enter the
+//! prefix cache) and its first resume point is recorded in
+//! `ServingMetrics::swap_points`, bounding where divergence from the
+//! oracle may start; a fully re-attached resume stays exact.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -59,6 +67,9 @@ pub struct Sequence {
     pub table: BlockTable,
     /// Next position to compute.
     pub pos: usize,
+    /// Token span planned for this iteration (`[pos, pos + span)`),
+    /// set by `schedule()`; 1 for decode / chunk-1 sequences.
+    pub span: usize,
     pub generated: Vec<usize>,
     pub state: SeqState,
     /// Iteration at which the sequence last entered the running set
@@ -84,6 +95,13 @@ pub struct Sequence {
     /// counted into `cold_direct_reads` when the resume actually steps,
     /// so a same-iteration revert + retry is not double-counted.
     resume_direct: bool,
+    /// Cold slots whose blocks were re-attached from the prefix cache
+    /// at this iteration's swap-in. Their releases are deferred until
+    /// the step runs, so a same-iteration revert can restore them to
+    /// the cold table intact (the cache copies may be evicted before
+    /// the sequence is re-admitted; the cold copies are the durable
+    /// ones).
+    reattached_cold: Vec<u32>,
     submitted: Instant,
 }
 
@@ -91,6 +109,12 @@ impl Sequence {
     /// True when `pos` is the last fed token: sample logits here.
     pub fn at_frontier(&self) -> bool {
         self.pos + 1 == self.tokens.len()
+    }
+
+    /// True when this iteration's span reaches the sequence frontier —
+    /// the engine samples from the span's final row.
+    pub fn span_reaches_frontier(&self) -> bool {
+        self.pos + self.span == self.tokens.len()
     }
 
     /// Token positions held by the cold prefix.
@@ -109,10 +133,22 @@ pub struct ContinuousConfig {
     /// Maximum sequences batched per iteration.
     pub max_batch: usize,
     /// SPMD worker threads of the batched decode engine. The engine
-    /// clamps to `[1, max_batch]` (workers own whole batch rows); the
-    /// static partition keeps outputs token-identical at any value.
-    /// Pick from the machine with [`crate::cost::MachineSpec::decode_threads`].
+    /// clamps to `[1, row_capacity]` (workers own token rows; the row
+    /// capacity equals `max_batch` at `prefill_chunk = 1`); the static
+    /// partition keeps outputs token-identical at any value. Pick from
+    /// the machine with [`crate::cost::MachineSpec::decode_threads`].
     pub threads: usize,
+    /// Max prompt positions a prefilling sequence advances per
+    /// iteration. 1 (the default) is the seed one-token-per-slot
+    /// behaviour, bitwise; larger values turn prompt ingestion into
+    /// tall compute-bound GEMMs (chunked prefill). 0 is treated as 1.
+    pub prefill_chunk: usize,
+    /// Total token rows per iteration across the batch. 0 (the
+    /// default) means auto: `max_batch * prefill_chunk`, i.e. every
+    /// sequence can take a full chunk. The effective budget is never
+    /// below the running-set size, so every running sequence always
+    /// advances by at least one position.
+    pub step_token_budget: usize,
     /// Tiered KV storage (`None` = flat fp32 pool; the scheduler is then
     /// bitwise-identical to the pre-tiering behaviour, which the FCFS
     /// differential oracle enforces).
@@ -126,12 +162,37 @@ impl Default for ContinuousConfig {
             num_blocks: 512,
             max_batch: 8,
             threads: 1,
+            prefill_chunk: 1,
+            step_token_budget: 0,
             tiering: None,
         }
     }
 }
 
 impl ContinuousConfig {
+    /// Effective prefill chunk (0 is hardened to 1 so no plan can emit
+    /// a zero-token span).
+    pub fn chunk(&self) -> usize {
+        self.prefill_chunk.max(1)
+    }
+
+    /// Effective per-iteration token budget (see `step_token_budget`).
+    pub fn token_budget(&self) -> usize {
+        if self.step_token_budget == 0 {
+            self.max_batch.max(1) * self.chunk()
+        } else {
+            self.step_token_budget.max(1)
+        }
+    }
+
+    /// Engine row capacity for a serve run: the most token rows one
+    /// iteration can carry (`BatchEngine::run`'s `max_rows`).
+    pub fn row_capacity(&self) -> usize {
+        // The budget is clamped up to the running-set size each
+        // iteration, and the running set is capped at max_batch.
+        self.token_budget().max(self.max_batch.max(1))
+    }
+
     /// Size the pool from a machine's memory model: KV blocks get what
     /// is left after the weights ([`crate::cost::MachineSpec::kv_block_budget`]),
     /// further capped in proportion to the batch (64 blocks — 1024
@@ -152,6 +213,8 @@ impl ContinuousConfig {
             num_blocks: budget.min(workload_cap).max(1) as usize,
             max_batch,
             threads: machine.decode_threads(max_batch),
+            prefill_chunk: 1,
+            step_token_budget: 0,
             tiering: None,
         }
     }
@@ -241,6 +304,7 @@ impl ContinuousScheduler {
             max_new: req.max_new_tokens,
             table: BlockTable::default(),
             pos: 0,
+            span: 1,
             generated: Vec::new(),
             state: SeqState::Queued,
             admitted_iter: 0,
@@ -249,6 +313,7 @@ impl ContinuousScheduler {
             swap_in_at: None,
             resume_lossy: false,
             resume_direct: false,
+            reattached_cold: Vec::new(),
             submitted: Instant::now(),
         };
         if req.prompt.is_empty() || req.max_new_tokens == 0 {
@@ -272,13 +337,15 @@ impl ContinuousScheduler {
         std::mem::take(&mut self.finished)
     }
 
-    /// Plan one iteration: admit from the queue, guarantee every running
-    /// sequence a KV slot for its next position (preempting the most
-    /// recently admitted sequences if the pool runs dry), and sample the
+    /// Plan one iteration: admit from the queue, pack token spans under
+    /// the budget, guarantee every running sequence KV slots for its
+    /// span (shrinking spans, then preempting the most recently
+    /// admitted sequences if the pool runs dry), and sample the
     /// occupancy metrics. Returns the number of runnable sequences.
     pub fn schedule(&mut self) -> usize {
         self.iter += 1;
         self.admit();
+        self.plan_spans();
         self.ensure_all_slots();
         if self.running.is_empty() && !self.queue.is_empty() {
             let head = self.queue.front().unwrap();
@@ -293,6 +360,12 @@ impl ContinuousScheduler {
         self.metrics.iterations += 1;
         self.metrics.queue_depth.push(self.queue.len() as f64);
         self.metrics.batch_size.push(self.running.len() as f64);
+        for seq in &self.running {
+            debug_assert!(seq.span >= 1 && seq.pos + seq.span <= seq.tokens.len());
+            if seq.pos < seq.prompt_len {
+                self.metrics.chunk_size.push(seq.span as f64);
+            }
+        }
         let pool = &self.kv.pool;
         self.metrics
             .pool_occupancy
@@ -306,16 +379,45 @@ impl ContinuousScheduler {
         self.running.len()
     }
 
+    /// Pack this iteration's token spans under the budget: every
+    /// running sequence gets at least one position; leftover budget
+    /// extends sequences toward their frontier, up to `prefill_chunk`,
+    /// in running (admission) order — a deterministic packing, so the
+    /// step shape is a pure function of scheduler state.
+    fn plan_spans(&mut self) {
+        let chunk = self.config.chunk();
+        let budget = self.config.token_budget().max(self.running.len());
+        let mut extra = budget - self.running.len();
+        for seq in &mut self.running {
+            // Spans never cross the frontier: the frontier row samples,
+            // and the sampled token is not known until the step runs.
+            let to_frontier = seq.tokens.len() - seq.pos;
+            let want = to_frontier.min(chunk);
+            let ext = (want - 1).min(extra);
+            seq.span = 1 + ext;
+            extra -= ext;
+        }
+    }
+
     /// Record the outcome of one batched step: `samples[i]` corresponds
-    /// to `running()[i]`. `iter_s` is the wall time of the step, split
-    /// evenly across slots for TPOT / decode-throughput accounting.
+    /// to `running()[i]` (the argmax of its span's final row when the
+    /// span reached the frontier). `iter_s` is the wall time of the
+    /// step, split evenly across all token rows for TPOT / throughput
+    /// accounting.
     pub fn commit(&mut self, samples: &[Option<usize>], iter_s: f64) {
         debug_assert_eq!(samples.len(), self.running.len());
         let bs = self.config.block_size;
-        let per_token_s = if samples.is_empty() { 0.0 } else { iter_s / samples.len() as f64 };
+        let total_rows: usize = self.running.iter().map(|s| s.span).sum();
+        let per_token_s = if total_rows == 0 { 0.0 } else { iter_s / total_rows as f64 };
         for (seq, sample) in self.running.iter_mut().zip(samples) {
-            let pos = seq.pos;
-            let is_decode = pos >= seq.prompt_len;
+            // The re-attach bookkeeping of this iteration's swap-in is
+            // consumed: the blocks were actually read by the step that
+            // just ran, so they count NOW (a same-iteration revert never
+            // reaches here — like fetches, reverted re-attaches are
+            // never counted), and the deferred cold releases flush
+            // below.
+            self.metrics.swap_reattached += seq.reattached_cold.len();
+            seq.reattached_cold.clear();
             // First step after a lossy swap-in: the sequence has now
             // attended over quantized KV. Taint it (its blocks are no
             // longer pure functions of their token prefix) and record
@@ -332,30 +434,39 @@ impl ContinuousScheduler {
                     self.metrics.swap_points.push((seq.id, seq.generated.len()));
                 }
             }
-            if is_decode {
-                // Replayed positions (recompute-preemption redoing
-                // already-sampled tokens) are charged to decode time but
-                // produce no new token — recompute waste shows up as
-                // decode throughput, not hidden wall time.
-                self.metrics.decode_s += per_token_s;
-                if seq.at_frontier() {
-                    self.metrics.tpot.push(per_token_s);
-                    self.metrics.decode_steps += 1;
+            let span = seq.span;
+            for off in 0..span {
+                let pos = seq.pos + off;
+                if pos >= seq.prompt_len {
+                    // Replayed positions (recompute-preemption redoing
+                    // already-sampled tokens) are charged to decode time
+                    // but produce no new token — recompute waste shows up
+                    // as decode throughput, not hidden wall time.
+                    self.metrics.decode_s += per_token_s;
+                    if pos + 1 == seq.tokens.len() {
+                        self.metrics.tpot.push(per_token_s);
+                        self.metrics.decode_steps += 1;
+                    } else {
+                        self.metrics.replay_steps += 1;
+                    }
                 } else {
-                    self.metrics.replay_steps += 1;
+                    self.metrics.prefill_s += per_token_s;
+                    self.metrics.prefill_steps += 1;
+                }
+                // The block holding `pos` just became full: publish it
+                // for prefix sharing (keyed by the entire covered token
+                // prefix) — chunk boundaries need not align to block
+                // boundaries, so every boundary inside the span
+                // registers. Tainted sequences never publish — their KV
+                // depends on quantization error, not just the tokens. A
+                // cold prefix implies tainted (direct reads are
+                // int8-only), so the hot index below never underflows.
+                if (pos + 1) % bs == 0 && !seq.tainted && seq.cold.is_empty() {
+                    let block = seq.table.blocks[pos / bs];
+                    self.kv.register_full_block(&seq.tokens[..pos + 1], block);
                 }
             }
-            // The block holding `pos` just became full: publish it for
-            // prefix sharing (keyed by the entire covered token prefix).
-            // Tainted sequences never publish — their KV depends on
-            // quantization error, not just the tokens. A cold prefix
-            // implies tainted (direct reads are int8-only), so the hot
-            // index below never underflows.
-            if (pos + 1) % bs == 0 && !seq.tainted && seq.cold.is_empty() {
-                let block = seq.table.blocks[pos / bs];
-                self.kv.register_full_block(&seq.tokens[..pos + 1], block);
-            }
-            seq.pos += 1;
+            seq.pos += span;
             if let Some(tok) = *sample {
                 if seq.generated.is_empty() {
                     self.metrics.ttft.push(seq.submitted.elapsed().as_secs_f64());
@@ -387,8 +498,8 @@ impl ContinuousScheduler {
                 i += 1;
             }
         }
-        // This iteration's fetch ops have executed by now: their source
-        // slots can finally be reused.
+        // This iteration's fetch and re-attach ops have executed by now:
+        // their source slots can finally be reused.
         if let Some(tier) = self.tier.as_mut() {
             tier.flush_releases();
         }
@@ -403,12 +514,12 @@ impl ContinuousScheduler {
         // admits could immediately preempt each other.
         let mut reserved = 0usize;
         while self.running.len() < self.config.max_batch && !self.queue.is_empty() {
-            // Swapped sequences re-enter through the cold tier: fetch
-            // (or keep cold for direct reads), never recompute. A
-            // Swapped sequence with an *empty* cold set (preempted at
-            // pos 0, nothing spilled) lost no KV: it takes the fresh
-            // path below — full admission control, prefix-cache lookup,
-            // and no lossy-resume bookkeeping.
+            // Swapped sequences re-enter through the cold tier: fetch,
+            // re-attach, or keep cold for direct reads — never
+            // recompute. A Swapped sequence with an *empty* cold set
+            // (preempted at pos 0, nothing spilled) lost no KV: it takes
+            // the fresh path below — full admission control,
+            // prefix-cache lookup, and no lossy-resume bookkeeping.
             let front = self.queue.front().unwrap();
             if front.state == SeqState::Swapped && !front.cold.is_empty() {
                 if !self.admit_swapped(&mut reserved) {
@@ -441,26 +552,49 @@ impl ContinuousScheduler {
         }
     }
 
-    /// Swap the cold queue head back in: allocate hot blocks, emit fetch
-    /// ops for the engine, and resume at the preserved position (no
-    /// replay). When the tier allows direct reads and enough of the
-    /// sequence is full+cold, the full blocks stay cold and only the
-    /// partial tail is fetched. Returns false when the pool cannot host
-    /// it yet (it stays at the queue front).
+    /// Swap the cold queue head back in. In order of preference per
+    /// block: **re-attach** the exact fp32 original still resident in
+    /// the prefix cache (no bytes moved, no quantization error —
+    /// untainted sequences only, since a tainted sequence's KV is not
+    /// the pure function of its tokens that the cache stores); keep the
+    /// block **cold** for direct dequant-gather reads (when the tier
+    /// allows it and nothing re-attached — the engine needs the cold
+    /// list to be the leading logical blocks); or **fetch** it into a
+    /// fresh hot block. Resumes at the preserved position — no replay.
+    /// Returns false when the pool cannot host it yet (it stays at the
+    /// queue front).
     fn admit_swapped(&mut self, reserved: &mut usize) -> bool {
         let bs = self.config.block_size;
-        let (total, full) = {
+        let (total, full, tainted) = {
             let seq = self.queue.front().unwrap();
-            (seq.cold.len(), seq.pos / bs)
+            (seq.cold.len(), seq.pos / bs, seq.tainted)
         };
+        // Re-attach probe: leading full blocks whose prefix keys are
+        // still cached. The probe retains each hit, so a concurrent
+        // eviction pass cannot free them out from under the admission.
+        let mut reattach: Vec<u32> = Vec::new();
+        if !tainted {
+            let seq = self.queue.front().unwrap();
+            for j in 0..full.min(total) {
+                match self.kv.lookup_block(&seq.tokens[..(j + 1) * bs]) {
+                    Some(b) => reattach.push(b),
+                    None => break,
+                }
+            }
+        }
+        let r = reattach.len();
         let tier_cfg = &self.tier.as_ref().expect("swapped sequence without a tier").config;
         let frac_met = |frac: f64| full > 0 && full as f64 >= frac * total as f64;
+        // Direct cold reads only when nothing re-attached: the engine
+        // requires the cold list to cover the sequence's *leading*
+        // logical blocks, and re-attached hot blocks now precede any
+        // still-cold one.
         let keep = match tier_cfg.direct_read_min_frac {
-            Some(frac) if tier_cfg.quant.lossy() && frac_met(frac) => full.min(total),
+            Some(frac) if r == 0 && tier_cfg.quant.lossy() && frac_met(frac) => full.min(total),
             _ => 0,
         };
         let lossy = tier_cfg.quant.lossy();
-        let fetch_count = total - keep;
+        let fetch_count = total - r - keep;
         // +1 headroom: the next position's block, so the admission can
         // not immediately preempt itself (same rule as the fresh path).
         let needed = fetch_count + 1;
@@ -468,15 +602,34 @@ impl ContinuousScheduler {
             self.kv.evict_unused_cached();
         }
         if self.kv.pool.free_blocks() < *reserved + needed {
+            // Undo the probe: drop the extra references (the cache still
+            // holds its own) and the hit counts of an admission that
+            // never happened.
+            for &b in &reattach {
+                self.kv.pool.release(b);
+            }
+            self.kv.prefix_hits -= r;
             return false;
         }
         // Unlike the lazy fresh path, the fetch targets are allocated
         // right below (they leave the free list immediately), so only
         // the +1 headroom stays reserved for later admissions.
+        // (`swap_reattached` is counted at commit time, once the step
+        // has actually read the blocks — a same-iteration revert must
+        // not leave phantom counts.)
         *reserved += 1;
         let mut seq = self.queue.pop_front().unwrap();
         let tier = self.tier.as_mut().unwrap();
-        for j in keep..total {
+        // Re-attached blocks join the hot table in logical order. Their
+        // cold copies stay allocated until the step has run (deferred
+        // release), so a same-iteration revert can restore them.
+        for (j, &b) in reattach.iter().enumerate() {
+            seq.table.blocks.push(b);
+            let slot = seq.cold[j];
+            tier.release_after_ops(slot);
+            seq.reattached_cold.push(slot);
+        }
+        for j in (r + keep)..total {
             let slot = seq.cold[j];
             let hot = self.kv.pool.try_alloc().expect("free blocks counted above");
             seq.table.blocks.push(hot);
@@ -485,8 +638,11 @@ impl ContinuousScheduler {
             // fetch; it returns to the free list after the step.
             tier.release_after_ops(slot);
         }
+        seq.cold.drain(..r);
         seq.cold.truncate(keep);
-        seq.resume_lossy = lossy;
+        // A resume that re-attached everything read no quantized bytes:
+        // it stays exact (no taint, no divergence point).
+        seq.resume_lossy = lossy && (fetch_count > 0 || keep > 0);
         seq.resume_direct = keep > 0;
         seq.state = if seq.pos >= seq.prompt_len { SeqState::Decode } else { SeqState::Prefill };
         seq.admitted_iter = self.iter;
@@ -498,15 +654,30 @@ impl ContinuousScheduler {
         let bs = self.config.block_size;
         let mut idx = 0;
         while idx < self.running.len() {
-            // The hot table covers logical blocks after the cold prefix.
-            let hot_pos = self.running[idx].pos - self.running[idx].cold_tokens(bs);
+            // The hot table covers logical blocks after the cold prefix;
+            // the span's final position decides the reservation.
+            let (pos, span, cold_toks) = {
+                let s = &self.running[idx];
+                (s.pos, s.span, s.cold_tokens(bs))
+            };
             // Split borrows: table is a field of the sequence.
             let seq_table = &mut self.running[idx].table;
-            if self.kv.ensure_slot(seq_table, hot_pos) {
+            if self.kv.ensure_slot(seq_table, pos + span - 1 - cold_toks) {
                 idx += 1;
                 continue;
             }
             if self.kv.evict_unused_cached() > 0 {
+                continue;
+            }
+            // The pool cannot cover the full span even after eviction:
+            // shrink it to what the partially-extended table already
+            // covers — chunked prefill degrades gracefully before
+            // anyone is preempted. (At chunk 1 this never fires: a
+            // failed 1-token ensure means even `pos` is uncovered.)
+            let covered = self.running[idx].table.capacity_tokens(bs) + cold_toks;
+            if covered > pos {
+                self.running[idx].span = span.min(covered - pos);
+                idx += 1;
                 continue;
             }
             // Preempt the most recently admitted sequence (oldest work
@@ -523,17 +694,20 @@ impl ContinuousScheduler {
                 idx -= 1;
             }
             // If victim == idx the current sequence itself was removed;
-            // the loop retries whatever now occupies `idx`.
+            // the loop retries whatever now occupies `idx`. Budget freed
+            // by the victim's spans is not redistributed this iteration
+            // (the packing stays a pure function of the pre-preemption
+            // state).
         }
     }
 
     fn preempt(&mut self, i: usize) {
         self.metrics.preemptions += 1;
         // A sequence swapped in *this same iteration* still has fetch
-        // ops pending and its hot blocks unwritten: revert the fetches
-        // (it goes back to the queue still swapped) instead of spilling
-        // garbage.
-        if self.revert_pending_fetches(i) {
+        // ops pending (and/or re-attached blocks unread): revert the
+        // admission (it goes back to the queue still swapped) instead
+        // of spilling unwritten blocks.
+        if self.revert_pending_swap_in(i) {
             return;
         }
         // Swap-based preemption: spill to the cold tier and resume later
@@ -557,14 +731,21 @@ impl ContinuousScheduler {
         self.queue.push_front(seq);
     }
 
-    /// Undo the fetches of a sequence admitted from the cold tier this
-    /// iteration (the engine has not executed them yet). Its hot blocks
-    /// are unwritten — release them, restore the cold table, and requeue
-    /// it still swapped. Returns false when the sequence has no pending
-    /// fetches (the normal preemption paths apply).
-    fn revert_pending_fetches(&mut self, i: usize) -> bool {
+    /// Undo the swap-in of a sequence admitted from the cold tier this
+    /// iteration (the engine has not executed its fetches, and its
+    /// re-attached blocks have not been read). Fetch-target hot blocks
+    /// are unwritten — release them, restore the cold table (re-attached
+    /// slots first, then kept direct-read slots, then the fetched
+    /// suffix, which is logical order), and requeue it still swapped.
+    /// Returns false when the sequence has no pending swap-in (the
+    /// normal preemption paths apply).
+    fn revert_pending_swap_in(&mut self, i: usize) -> bool {
         let id = self.running[i].id;
-        let Some(tier) = self.tier.as_mut() else { return false };
+        if self.tier.is_none() {
+            return false;
+        }
+        let reattached = std::mem::take(&mut self.running[i].reattached_cold);
+        let tier = self.tier.as_mut().unwrap();
         let mut slots = Vec::new();
         tier.pending.retain(|op| match *op {
             TierOp::Fetch { cold, seq, .. } if seq == id => {
@@ -573,19 +754,29 @@ impl ContinuousScheduler {
             }
             _ => true,
         });
-        if slots.is_empty() {
+        if slots.is_empty() && reattached.is_empty() {
             return false;
         }
-        for &s in &slots {
+        for &s in slots.iter().chain(&reattached) {
             tier.cancel_release(s);
         }
+        // The re-attached blocks were never read: undo their hit counts
+        // (same rule as the pool-full probe undo in `admit_swapped`;
+        // `swap_reattached` needs no undo — it only counts at commit).
+        self.kv.prefix_hits -= reattached.len();
         let mut seq = self.running.remove(i);
         // Fetch targets (and any extra tail block `ensure_slot` added
-        // before failing) were never written: plain frees.
+        // before failing) were never written; re-attached blocks are
+        // still cache-backed. All of them leave the table with plain
+        // releases.
         self.kv.release_table(&mut seq.table);
-        // `slots` is in pending order == logical order of the fetched
-        // suffix, so appending restores the cold table exactly.
-        seq.cold.extend(slots);
+        // Logical order: re-attached prefix, kept direct-read slots
+        // (only possible when nothing re-attached), fetched suffix
+        // (pending order == logical order).
+        let mut cold = reattached;
+        cold.extend(seq.cold.drain(..));
+        cold.extend(slots);
+        seq.cold = cold;
         seq.resume_lossy = false;
         seq.resume_direct = false;
         // `pos` stays where it was: the sequence is still fully swapped.
@@ -695,15 +886,20 @@ mod tests {
         Request { id, prompt, max_new_tokens: max_new }
     }
 
-    #[test]
-    fn lifecycle_queued_prefill_decode_done() {
-        let mut s = ContinuousScheduler::new(ContinuousConfig {
-            block_size: 4,
-            num_blocks: 8,
-            max_batch: 4,
+    fn flat_config(block_size: usize, num_blocks: usize, max_batch: usize) -> ContinuousConfig {
+        ContinuousConfig {
+            block_size,
+            num_blocks,
+            max_batch,
             threads: 1,
             tiering: None,
-        });
+            ..ContinuousConfig::default()
+        }
+    }
+
+    #[test]
+    fn lifecycle_queued_prefill_decode_done() {
+        let mut s = ContinuousScheduler::new(flat_config(4, 8, 4));
         s.submit(&req(0, vec![1, 2, 3], 2));
         assert!(!s.is_done());
         assert_eq!(s.schedule(), 1);
@@ -714,6 +910,7 @@ mod tests {
         s.commit(&[None], 0.0);
         s.schedule();
         assert!(s.running()[0].at_frontier());
+        assert!(s.running()[0].span_reaches_frontier());
         s.commit(&[Some(42)], 0.0);
         assert_eq!(s.running()[0].state, SeqState::Decode);
         assert_eq!(s.running()[0].tokens.last(), Some(&42));
@@ -731,14 +928,110 @@ mod tests {
     }
 
     #[test]
-    fn admission_respects_max_batch_and_pool() {
+    fn chunked_prefill_packs_spans_under_budget() {
+        // Chunk 4, budget 6, two 9-token prompts: the packing gives
+        // every sequence one row first, then extends in running order.
         let mut s = ContinuousScheduler::new(ContinuousConfig {
-            block_size: 4,
-            num_blocks: 4,
-            max_batch: 2,
-            threads: 1,
-            tiering: None,
+            prefill_chunk: 4,
+            step_token_budget: 6,
+            ..flat_config(4, 32, 4)
         });
+        s.submit(&req(0, (0..9).collect(), 2));
+        s.submit(&req(1, (100..109).collect(), 2));
+        assert_eq!(s.schedule(), 2);
+        // seq0: 1 + min(3, extra=4) = 4; seq1: 1 + min(3, extra=1) = 2.
+        assert_eq!(s.running()[0].span, 4);
+        assert_eq!(s.running()[1].span, 2);
+        // Commit advances by the spans; block boundaries inside a span
+        // register for prefix sharing (9-token prompt, block 4: the
+        // first full block completes mid-span).
+        s.commit(&[None, None], 0.0);
+        assert_eq!(s.running()[0].pos, 4);
+        assert_eq!(s.running()[1].pos, 2);
+        assert!(s.kv.cached_blocks() >= 1, "in-span block boundary must register");
+        // Spans never cross the frontier: at pos 8 of a 9-token prompt
+        // the span is exactly 1 and it samples.
+        s.schedule();
+        s.commit(&[None, None], 0.0);
+        s.schedule();
+        assert_eq!(s.running()[0].pos, 8);
+        assert_eq!(s.running()[0].span, 1);
+        assert!(s.running()[0].span_reaches_frontier());
+        let m = &s.metrics;
+        assert!(m.chunk_size.max() >= 4.0, "chunk stats must record the packed spans");
+        assert!(m.prefill_steps > 0, "prompt rows must be counted as prefill");
+    }
+
+    #[test]
+    fn zero_chunk_and_budget_harden_to_seed_behaviour() {
+        // prefill_chunk 0 and step_token_budget 0 must not emit
+        // zero-token spans: both degrade to the chunk-1 seed packing.
+        let mut s = ContinuousScheduler::new(ContinuousConfig {
+            prefill_chunk: 0,
+            step_token_budget: 0,
+            ..flat_config(4, 16, 2)
+        });
+        s.submit(&req(0, vec![1, 2, 3, 4, 5], 2));
+        while !s.is_done() {
+            s.schedule();
+            for seq in s.running() {
+                assert_eq!(seq.span, 1, "chunk 0 must harden to 1");
+            }
+            let samples: Vec<Option<usize>> =
+                s.running().iter().map(|q| q.span_reaches_frontier().then_some(9)).collect();
+            s.commit(&samples, 0.0);
+        }
+        assert_eq!(s.take_finished()[0].generated, vec![9, 9]);
+    }
+
+    #[test]
+    fn span_shrinks_to_covered_prefix_instead_of_preempting() {
+        // When a multi-block span can only get some of its blocks, the
+        // span must shrink to the covered prefix rather than preempt —
+        // chunked prefill degrades gracefully under pool pressure.
+        // Admission control's whole-prompt headroom makes this state
+        // unreachable through `submit` alone, so the sequence is placed
+        // directly (the branch still matters: generated-token growth in
+        // multi-sequence runs drains the pool behind the reservation).
+        let mut s = ContinuousScheduler::new(ContinuousConfig {
+            prefill_chunk: 8,
+            ..flat_config(4, 1, 2)
+        });
+        s.iter = 1;
+        s.running.push(Sequence {
+            id: 0,
+            tokens: (0..12).collect(),
+            prompt_len: 12,
+            max_new: 4,
+            table: BlockTable::default(),
+            pos: 0,
+            span: 1,
+            generated: Vec::new(),
+            state: SeqState::Prefill,
+            admitted_iter: 1,
+            cold: Vec::new(),
+            tainted: false,
+            swap_in_at: None,
+            resume_lossy: false,
+            resume_direct: false,
+            reattached_cold: Vec::new(),
+            submitted: Instant::now(),
+        });
+        s.plan_spans();
+        assert_eq!(s.running[0].span, 8, "the plan wants a full chunk");
+        s.ensure_all_slots();
+        // The 1-block pool covers positions 0..4 of the 8-token span:
+        // shrink to 4, keep the sequence running, preempt nobody.
+        assert_eq!(s.running.len(), 1);
+        assert_eq!(s.running[0].span, 4, "span must shrink to the covered prefix");
+        assert_eq!(s.metrics.preemptions, 0, "shrinking must not preempt");
+        s.commit(&[None], 0.0);
+        assert_eq!(s.running[0].pos, 4, "the shrunken span still advances");
+    }
+
+    #[test]
+    fn admission_respects_max_batch_and_pool() {
+        let mut s = ContinuousScheduler::new(flat_config(4, 4, 2));
         for i in 0..3 {
             s.submit(&req(i, vec![i as usize; 5], 4));
         }
@@ -764,13 +1057,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "KV block pool too small")]
     fn oversized_request_panics_clearly() {
-        let mut s = ContinuousScheduler::new(ContinuousConfig {
-            block_size: 4,
-            num_blocks: 2,
-            max_batch: 2,
-            threads: 1,
-            tiering: None,
-        });
+        let mut s = ContinuousScheduler::new(flat_config(4, 2, 2));
         s.submit(&req(0, vec![1; 20], 4));
         s.schedule();
     }
@@ -782,11 +1069,12 @@ mod tests {
             max_batch: 2,
             threads: 1,
             tiering: Some(TierConfig::new(cold_blocks)),
+            ..ContinuousConfig::default()
         }
     }
 
     /// Drive the scheduler without an engine: every scheduled slot
-    /// "samples" a fixed token at its frontier.
+    /// "samples" a fixed token when its span reaches the frontier.
     fn drive(s: &mut ContinuousScheduler, iters: usize) -> Vec<TierOp> {
         // Engineless tests still want real byte accounting.
         s.set_tier_geometry(2, 8);
@@ -798,7 +1086,7 @@ mod tests {
             s.schedule();
             all_ops.extend(s.take_tier_ops());
             let samples: Vec<Option<usize>> =
-                s.running().iter().map(|q| q.at_frontier().then_some(7)).collect();
+                s.running().iter().map(|q| q.span_reaches_frontier().then_some(7)).collect();
             s.commit(&samples, 0.0);
         }
         all_ops
@@ -825,7 +1113,9 @@ mod tests {
         assert_eq!(s.metrics.spills, spills);
         assert_eq!(s.metrics.fetches, fetches);
         assert!(s.metrics.spill_bytes > 0 && s.metrics.fetch_bytes > 0);
-        // Swapped-back int8 sequences are tainted and carry a resume point.
+        // Swapped-back int8 sequences are tainted and carry a resume
+        // point (this pool is so tight the prefix-cache copies are
+        // evicted before any re-admission could re-attach them).
         assert!(!s.metrics.swap_points.is_empty());
         for f in &fin {
             if f.swap_in_at.is_some() {
@@ -834,6 +1124,35 @@ mod tests {
         }
         // All tiers drain at the end.
         assert_eq!(s.tier.as_ref().unwrap().in_use(), 0, "cold slots must be released");
+    }
+
+    #[test]
+    fn swap_in_reattaches_cache_resident_blocks() {
+        // With max_new 8 the survivor finishes within 3 blocks, so the
+        // victim's registered prefix blocks stay cache-resident across
+        // its swap-out (nothing ever evicts them): re-admission must
+        // re-attach them (zero fetches, zero quantization error) and
+        // the sequence must finish EXACT — no taint, no swap point —
+        // even though the tier is lossy int8.
+        let mut s = ContinuousScheduler::new(tiered_config(5, 8));
+        s.submit(&req(0, vec![1, 2, 3, 4], 8));
+        s.submit(&req(1, vec![5, 6, 7, 8], 8));
+        let ops = drive(&mut s, 200);
+        assert!(s.is_done(), "both requests must finish");
+        let fin = s.take_finished();
+        assert!(fin.iter().all(|f| f.generated.len() == 8));
+        assert!(s.metrics.swap_preemptions > 0, "the pool must still force a swap");
+        assert_eq!(s.metrics.recompute_preemptions, 0);
+        assert_eq!(s.metrics.swap_reattached, 2, "both full blocks must re-attach");
+        let fetches = ops.iter().filter(|o| matches!(o, TierOp::Fetch { .. })).count();
+        assert_eq!(fetches, 0, "re-attach must replace every fetch");
+        assert_eq!(s.metrics.fetch_bytes, 0);
+        assert!(
+            s.metrics.swap_points.is_empty(),
+            "a fully re-attached resume reads no quantized bytes: it stays exact"
+        );
+        assert!(fin.iter().all(|f| !f.tainted && f.swap_in_at.is_none()));
+        assert_eq!(s.tier.as_ref().unwrap().in_use(), 0, "re-attached slots must drain");
     }
 
     #[test]

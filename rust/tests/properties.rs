@@ -346,6 +346,91 @@ fn prop_quant_matmul_bitwise_matches_dequant_oracle() {
     }
 }
 
+/// The in-chunk causal attention contract over random geometries:
+/// committing a whole token span to the paged store and then running
+/// the fused causal row kernel with window `[0, pos]` per row is
+/// **bitwise identical** to sequential single-token steps, where each
+/// position's row is computed against a store that only *contains*
+/// positions `<= pos`. This is the kernel-level half of the chunked
+/// prefill bitwise-identity guarantee (the engine-level half lives in
+/// `rust/src/serving/batch_engine.rs` and `tests/serving.rs`).
+#[test]
+fn prop_causal_span_attention_equals_sequential_steps() {
+    use nncase_repro::ntt::{
+        attn_context_paged, attn_row_causal_paged, attn_scores_paged, paged_row,
+        softmax_inplace,
+    };
+    let mut rng = Rng::new(0xCA5);
+    for round in 0..10 {
+        let bs = 2 + rng.below(6);
+        let head_dim = 4 + 4 * rng.below(3);
+        let width = head_dim * (1 + rng.below(2));
+        let head_off = width - head_dim;
+        let nblocks = 2 + rng.below(3);
+        let span = 1 + rng.below(nblocks * bs);
+        let scale = 1.0 / (head_dim as f32).sqrt();
+        // Scattered, non-contiguous block table over a larger arena.
+        let arena_blocks = nblocks + 3;
+        let mut table: Vec<u32> = (0..arena_blocks as u32).collect();
+        for i in (1..table.len()).rev() {
+            table.swap(i, rng.below(i + 1));
+        }
+        table.truncate(nblocks);
+        // Per-position K/V rows and queries.
+        let kv_rows: Vec<(Vec<f32>, Vec<f32>)> = (0..span)
+            .map(|_| {
+                ((0..width).map(|_| rng.normal()).collect(),
+                 (0..width).map(|_| rng.normal()).collect())
+            })
+            .collect();
+        let queries: Vec<Vec<f32>> =
+            (0..span).map(|_| (0..head_dim).map(|_| rng.normal()).collect()).collect();
+
+        // Sequential oracle: the store grows one position at a time, so
+        // row `p` physically cannot see beyond itself.
+        let mut seq_k = Tensor::zeros(&[arena_blocks * bs, width]);
+        let mut seq_v = Tensor::zeros(&[arena_blocks * bs, width]);
+        let mut want = Vec::new();
+        for p in 0..span {
+            let row = paged_row(&table, bs, p);
+            seq_k.row_mut(row).copy_from_slice(&kv_rows[p].0);
+            seq_v.row_mut(row).copy_from_slice(&kv_rows[p].1);
+            let mut scores = vec![0.0f32; p + 1];
+            attn_scores_paged(
+                &queries[p], &seq_k, &table, bs, head_off, head_dim, scale, &mut scores,
+            );
+            softmax_inplace(&mut scores);
+            let mut out = vec![0.0f32; head_dim];
+            attn_context_paged(&scores, &seq_v, &table, bs, head_off, head_dim, &mut out);
+            want.push(out);
+        }
+
+        // Chunked: the WHOLE span is committed first (the engine's
+        // phase-4-before-phase-5 order), then every row attends through
+        // its causal window.
+        let mut chunk_k = Tensor::zeros(&[arena_blocks * bs, width]);
+        let mut chunk_v = Tensor::zeros(&[arena_blocks * bs, width]);
+        for p in 0..span {
+            let row = paged_row(&table, bs, p);
+            chunk_k.row_mut(row).copy_from_slice(&kv_rows[p].0);
+            chunk_v.row_mut(row).copy_from_slice(&kv_rows[p].1);
+        }
+        for p in 0..span {
+            let mut scores = vec![0.0f32; p + 1];
+            let mut out = vec![0.0f32; head_dim];
+            attn_row_causal_paged(
+                &queries[p], &chunk_k, &chunk_v, &table, bs, head_off, head_dim, scale,
+                &mut scores, &mut out,
+            );
+            assert_eq!(
+                out, want[p],
+                "round {round}: chunked row {p}/{span} (bs {bs}) diverged from its \
+                 sequential step"
+            );
+        }
+    }
+}
+
 /// KV-cache accounting: the config-level bytes-per-token formula matches
 /// the engine's actual cache allocation.
 #[test]

@@ -65,7 +65,7 @@ fn continuous_matches_fcfs_oracle() {
                 num_blocks: 64,
                 max_batch: 4,
                 threads: 1,
-                tiering: None,
+                ..ContinuousConfig::default()
             },
             threads,
         );
@@ -132,7 +132,7 @@ fn preemption_is_invisible_in_outputs() {
                 num_blocks: 5,
                 max_batch: 2,
                 threads: 1,
-                tiering: None,
+                ..ContinuousConfig::default()
             },
             threads,
         );
@@ -182,7 +182,7 @@ fn prefix_sharing_reduces_block_pressure() {
                 num_blocks: 32,
                 max_batch: 1,
                 threads: 1,
-                tiering: None,
+                ..ContinuousConfig::default()
             },
             1,
         )
@@ -222,7 +222,7 @@ fn tiering_disabled_is_bitwise_identical_under_pressure() {
                 num_blocks: 7,
                 max_batch: 3,
                 threads: 1,
-                tiering: None,
+                ..ContinuousConfig::default()
             },
             threads,
         );
@@ -256,6 +256,7 @@ fn tiered_f32_swap_is_bitwise_identical_to_oracle() {
                 max_batch: 3,
                 threads: 1,
                 tiering: Some(TierConfig { quant: KvQuant::F32, ..TierConfig::new(16) }),
+                ..ContinuousConfig::default()
             },
             threads,
         );
@@ -297,6 +298,7 @@ fn tiered_int8_swap_diverges_only_after_reread() {
                     max_batch: 3,
                     threads: 1,
                     tiering: Some(tier.clone()),
+                    ..ContinuousConfig::default()
                 },
                 threads,
             );
@@ -347,7 +349,7 @@ fn quantized_weight_serve_matches_its_fcfs_oracle() {
                 num_blocks: 64,
                 max_batch: 4,
                 threads,
-                tiering: None,
+                ..ContinuousConfig::default()
             }),
         )
     };
@@ -420,8 +422,8 @@ fn int8_weight_logits_stay_within_bound_of_f32_oracle() {
             stream
                 .iter()
                 .enumerate()
-                .map(|(pos, &tok)| {
-                    let slot = StepSlot::hot(tok, pos, &table, true);
+                .map(|(pos, tok)| {
+                    let slot = StepSlot::hot(std::slice::from_ref(tok), pos, &table, true);
                     let (_, l) = stepper.step_logits(&[slot], true);
                     max_abs(&l, &oracle_logits[pos])
                 })
@@ -433,6 +435,126 @@ fn int8_weight_logits_stay_within_bound_of_f32_oracle() {
             worst < BOUND,
             "int8-weight logits drifted {worst} > {BOUND} from the f32 oracle \
              (diffs per step: {diffs:?}) at {threads} threads"
+        );
+    }
+}
+
+/// The chunked-prefill differential matrix: continuous serving at every
+/// chunk size — 1 (the seed), 3 (NOT a divisor of the block size, so
+/// spans straddle block boundaries), block_size, and 4 × block_size
+/// (whole prompts in one span) — must be token-identical to the FCFS
+/// oracle at every worker count. Chunking changes when prompt positions
+/// are computed, never their values.
+#[test]
+fn chunked_prefill_matches_fcfs_oracle() {
+    let (cfg, mut oracle) = coordinator(31, 1);
+    // 9-token prompts: chunk 3 packs 3+3+3, chunk 4 packs 4+4+1, chunk
+    // 16 swallows whole prompts; all cross block boundaries (bs = 4).
+    let reqs = synthetic_workload(5, 9, 6, cfg.vocab);
+    let want = oracle.serve(&reqs);
+    let block_size = 4usize;
+    for chunk in [1usize, 3, block_size, 4 * block_size] {
+        for threads in thread_counts() {
+            let got = serve_continuous(
+                31,
+                &reqs,
+                ContinuousConfig {
+                    block_size,
+                    num_blocks: 64,
+                    max_batch: 4,
+                    threads: 1,
+                    prefill_chunk: chunk,
+                    ..ContinuousConfig::default()
+                },
+                threads,
+            );
+            assert_eq!(
+                want.outputs, got.outputs,
+                "chunk {chunk} changed outputs at {threads} threads"
+            );
+            let m = got.serving.expect("continuous metrics");
+            if chunk > 1 {
+                assert!(
+                    m.chunk_size.max() > 1.0,
+                    "chunk {chunk} must actually pack multi-token spans"
+                );
+            } else {
+                assert_eq!(m.chunk_size.max(), 1.0, "chunk 1 must stay one-token spans");
+            }
+            assert!(m.prefill_steps >= 5 * 9, "every prompt position must be counted");
+        }
+    }
+}
+
+/// Chunked prefill composed with memory pressure: recompute-preemption
+/// (tiering off) replays spans and must stay token-identical; the
+/// lossless f32 tier must stay token-identical while swapping spans'
+/// blocks across the storage boundary.
+#[test]
+fn chunked_prefill_survives_preemption_and_tiering() {
+    let (cfg, mut oracle) = coordinator(32, 1);
+    let reqs = synthetic_workload(3, 8, 10, cfg.vocab);
+    let want = oracle.serve(&reqs);
+    let tiers: [Option<TierConfig>; 2] =
+        [None, Some(TierConfig { quant: KvQuant::F32, ..TierConfig::new(16) })];
+    for tiering in tiers {
+        for threads in thread_counts() {
+            let got = serve_continuous(
+                32,
+                &reqs,
+                ContinuousConfig {
+                    block_size: 4,
+                    num_blocks: 8,
+                    max_batch: 3,
+                    threads: 1,
+                    prefill_chunk: 3,
+                    tiering: tiering.clone(),
+                    ..ContinuousConfig::default()
+                },
+                threads,
+            );
+            assert_eq!(
+                want.outputs, got.outputs,
+                "chunked prefill under pressure (tier {:?}) changed outputs at {threads} \
+                 threads",
+                tiering.is_some()
+            );
+            let m = got.serving.expect("continuous metrics");
+            assert!(m.preemptions > 0, "the tiny pool must preempt");
+            if tiering.is_some() {
+                assert!(m.swap_preemptions > 0, "the f32 tier must swap");
+            }
+        }
+    }
+}
+
+/// Chunked prefill over group-wise quantized weights: the multi-token
+/// span path drives the fused dequant-GEMM kernels with tall A panels,
+/// and must stay token-identical to its own fake-quantized FCFS oracle.
+#[test]
+fn chunked_prefill_quantized_weights_match_oracle() {
+    let reqs = synthetic_workload(4, 9, 6, Qwen3Config::tiny().vocab);
+    let cfg = Qwen3Config::tiny().with_weight_quant(WeightQuant::Int8);
+    let w = Qwen3Weights::random(&cfg, 33);
+    let mut oracle = Coordinator::new(Qwen3Engine::new(w, 1, 128));
+    let want = oracle.serve(&reqs);
+    for threads in thread_counts() {
+        let w = Qwen3Weights::random(&cfg, 33);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 128));
+        let got = c.serve_with_policy(
+            &reqs,
+            ServePolicy::Continuous(ContinuousConfig {
+                block_size: 4,
+                num_blocks: 64,
+                max_batch: 4,
+                threads,
+                prefill_chunk: 3,
+                ..ContinuousConfig::default()
+            }),
+        );
+        assert_eq!(
+            want.outputs, got.outputs,
+            "chunked int8-weight serving diverged from its oracle at {threads} threads"
         );
     }
 }

@@ -18,6 +18,9 @@
 //! group-wise codes streamed through the fused dequant-GEMM kernels —
 //! the FCFS engine then runs the fake-quantized oracle weights, so the
 //! cross-engine equality asserts below still hold bitwise).
+//! An autotuned continuous run (every knob from the serve-time
+//! planner, `ContinuousConfig::autotuned`) always executes and must
+//! match the same outputs — serve plans are semantics-free.
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
 use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServePolicy};
@@ -127,6 +130,33 @@ fn main() {
             last_output.as_ref().unwrap(),
             &report.outputs,
             "chunked prefill changed outputs!"
+        );
+    }
+
+    // Serve-time autotune: every knob (chunk, budget, threads, panel
+    // granularity, pool sizing) from the planner — schedule::tile
+    // candidates scored by the cost rooflines for this
+    // (model, machine, quant) triple — instead of the constants above.
+    // The plan is a pure perf artifact, so outputs must stay identical
+    // to every run above.
+    {
+        let machine = nncase_repro::cost::MachineSpec::ryzen_5900x();
+        let ccfg = ContinuousConfig::autotuned(&cfg, &machine, requests.len());
+        let plan = ccfg.plan.clone().expect("autotuned config carries its plan");
+        println!("autotune plan: {}", plan.render());
+        let engine = Qwen3Engine::new(load(()), 1, 512);
+        let mut coord = Coordinator::new(engine);
+        let report = coord.serve_with_policy(&requests, ServePolicy::Continuous(ccfg));
+        println!("autotuned continuous: {}", report.render());
+        assert_eq!(
+            last_output.as_ref().unwrap(),
+            &report.outputs,
+            "the serve plan changed outputs — plans must be semantics-free!"
+        );
+        assert_eq!(
+            report.plan.as_ref().map(|p| p.plan_hash()),
+            Some(plan.plan_hash()),
+            "the report must record the plan that served"
         );
     }
 

@@ -24,24 +24,30 @@
 //! * prefill scenario (long prompts, prompt_len >= 512): chunked
 //!   prefill (`prefill_chunk = 64`) beats chunk-1 TTFT — prompt
 //!   ingestion as tall GEMMs instead of batch-of-one steps — with
-//!   token-identical outputs.
+//!   token-identical outputs;
+//! * autotune scenario (always on): a planner-derived
+//!   `ContinuousConfig::autotuned` serve is token-identical to the FCFS
+//!   oracle, and the chosen `ServePlan` hash is recorded so the
+//!   regression tracker keys plan changes as new series.
 //!
 //! Env knobs (the CI bench-smoke job sets both):
 //! * `PALLAS_BENCH_QUICK=1` — reduced workload for a fast smoke signal;
-//!   the thread-speedup, swap, weight-quant and prefill-TTFT asserts
-//!   become warnings (short quick-mode runs on shared runners are too
-//!   noisy to gate CI on).
+//!   every perf gate (see `gate`) becomes a warning (short quick-mode
+//!   runs on shared runners are too noisy to gate CI on).
 //! * `PALLAS_BENCH_JSON=path` — write the sweep as a JSON report.
 //!
 //! Args: `--weight-quant f32|int8|int4` stores the *sweep* scenarios'
 //! weight plane in that format; `--prefill-chunk N` runs the sweep
-//! scenarios with chunked prefill (CI runs the quick bench again with
-//! int8 weights and a third time with `--prefill-chunk 64`, so the
-//! FCFS-vs-continuous token-identity assert and the regression tracker
-//! cover the fused dequant-GEMM path and the span-packed step path).
+//! scenarios with chunked prefill; `--autotune` replaces the sweep's
+//! hand-picked continuous configs with planner-derived ones (explicit
+//! thread/chunk knobs still override, mirroring the CLI) — CI runs the
+//! quick bench again with int8 weights, with `--prefill-chunk 64`, and
+//! with `--autotune`, so the FCFS-vs-continuous token-identity assert
+//! and the regression tracker cover the fused dequant-GEMM path, the
+//! span-packed step path, and the serve-time planner.
 //!
 //! Run: `cargo bench --bench serve [-- --weight-quant int8]
-//! [-- --prefill-chunk 64]`
+//! [-- --prefill-chunk 64] [-- --autotune]`
 
 mod bench_util;
 
@@ -49,6 +55,7 @@ use std::fmt::Write as _;
 
 use bench_util::row;
 use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServePolicy};
+use nncase_repro::cost::MachineSpec;
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
 use nncase_repro::ntt::WeightQuant;
 use nncase_repro::serving::{ContinuousConfig, TierConfig};
@@ -56,9 +63,15 @@ use nncase_repro::serving::{ContinuousConfig, TierConfig};
 struct Sample {
     /// Scenario the sample belongs to: "sweep" (FCFS-vs-continuous),
     /// "pressure-recompute" / "pressure-swap" (the tiered scenario),
-    /// "wquant" (f32-vs-int8 weight storage), or "prefill" (long-prompt
-    /// chunked-vs-chunk-1 TTFT).
+    /// "wquant" (f32-vs-int8 weight storage), "prefill" (long-prompt
+    /// chunked-vs-chunk-1 TTFT), or "autotune" (planner-derived config
+    /// vs the FCFS oracle).
     mode: &'static str,
+    /// `ServePlan` hash of the run (`{:016x}`), empty when the config
+    /// was hand-picked rather than planner-derived. The regression
+    /// tracker keys on it, so a plan change starts a new series instead
+    /// of reading as a same-config regression.
+    plan: String,
     /// Weight-plane storage of the run ("f32" / "int8" / "int4").
     weight_quant: &'static str,
     /// Model weight footprint in that format, bytes.
@@ -84,11 +97,13 @@ fn json_report(samples: &[Sample], quick: bool) -> String {
     for (i, s) in samples.iter().enumerate() {
         let _ = write!(
             out,
-            "    {{\"mode\": \"{}\", \"weight_quant\": \"{}\", \"weight_bytes\": {}, \
+            "    {{\"mode\": \"{}\", \"plan\": \"{}\", \"weight_quant\": \"{}\", \
+             \"weight_bytes\": {}, \
              \"prefill_chunk\": {}, \"pressure\": {}, \"threads\": {}, \
              \"decode_tok_s\": {:.3}, \"prefill_tok_s\": {:.3}, \"ttft_p50_s\": {:.6}, \
              \"wall_s\": {:.4}, \"speedup_vs_fcfs\": {:.3}}}",
             s.mode,
+            s.plan,
             s.weight_quant,
             s.weight_bytes,
             s.prefill_chunk,
@@ -106,6 +121,19 @@ fn json_report(samples: &[Sample], quick: bool) -> String {
     out
 }
 
+/// One policy for every perf gate. When `gating` holds and the claim
+/// fails, panic; when it fails on a non-gating run (quick mode on a
+/// shared runner, or a host without enough cores to show a parallel
+/// speedup), print a WARN line instead — short noisy runs report, full
+/// runs enforce.
+fn gate(gating: bool, name: &str, ok: bool, detail: String) {
+    if ok {
+        return;
+    }
+    assert!(!gating, "{name} ({detail})");
+    println!("WARN: {name} failed — {detail} — not gating");
+}
+
 fn main() {
     let quick = std::env::var("PALLAS_BENCH_QUICK").is_ok();
     // `--weight-quant f32|int8|int4` stores the sweep scenarios' weight
@@ -121,12 +149,18 @@ fn main() {
     // `--prefill-chunk N` runs the sweep scenarios with span-packed
     // chunked prefill (the token-identity assert then covers the
     // multi-token step path end to end).
-    let sweep_chunk: usize = args
+    let chunk_flag: Option<usize> = args
         .iter()
         .position(|a| a == "--prefill-chunk")
         .and_then(|i| args.get(i + 1))
-        .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --prefill-chunk {v:?}")))
-        .unwrap_or(1);
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --prefill-chunk {v:?}")));
+    let sweep_chunk: usize = chunk_flag.unwrap_or(1);
+    // `--autotune` swaps the sweep's hand-picked continuous configs for
+    // planner-derived ones; the thread axis and an explicit
+    // --prefill-chunk still override the plan's knobs (mirroring the
+    // CLI, where explicit flags win over the planner).
+    let autotune = args.iter().any(|a| a == "--autotune");
+    let machine = MachineSpec::ryzen_5900x();
     let cfg = Qwen3Config::tiny().with_weight_quant(sweep_wq);
     // Quick mode: fewer generated tokens and pressures — a smoke signal
     // for CI, not a measurement.
@@ -162,14 +196,29 @@ fn main() {
                 1,
                 prompt_len + max_new + 1,
             ));
-            let ccfg = ContinuousConfig {
-                block_size: 16,
-                num_blocks: 4 * pressure + 8,
-                max_batch: pressure,
-                threads,
-                prefill_chunk: sweep_chunk,
-                ..ContinuousConfig::default()
+            let ccfg = if autotune {
+                let mut c = ContinuousConfig::autotuned(&cfg, &machine, pressure);
+                c.threads = threads;
+                if let Some(chunk) = chunk_flag {
+                    c.prefill_chunk = chunk;
+                }
+                c
+            } else {
+                ContinuousConfig {
+                    block_size: 16,
+                    num_blocks: 4 * pressure + 8,
+                    max_batch: pressure,
+                    threads,
+                    prefill_chunk: sweep_chunk,
+                    ..ContinuousConfig::default()
+                }
             };
+            let sample_chunk = ccfg.prefill_chunk;
+            let sample_plan = ccfg
+                .plan
+                .as_ref()
+                .map(|p| format!("{:016x}", p.plan_hash()))
+                .unwrap_or_default();
             let cont_rep = cont.serve_with_policy(&reqs, ServePolicy::Continuous(ccfg));
 
             assert_eq!(
@@ -205,9 +254,10 @@ fn main() {
             }
             samples.push(Sample {
                 mode: "sweep",
+                plan: sample_plan,
                 weight_quant: sweep_wq.name(),
                 weight_bytes: cfg.weight_bytes(),
-                prefill_chunk: sweep_chunk,
+                prefill_chunk: sample_chunk,
                 pressure,
                 threads: cont_rep.threads,
                 decode_tok_s: cont_rep.decode_tokens_per_s,
@@ -280,6 +330,7 @@ fn main() {
     for (mode, rep) in [("pressure-recompute", &recompute_rep), ("pressure-swap", &swap_rep)] {
         samples.push(Sample {
             mode,
+            plan: String::new(),
             weight_quant: sweep_wq.name(),
             weight_bytes: cfg.weight_bytes(),
             prefill_chunk: 1,
@@ -292,21 +343,15 @@ fn main() {
             speedup_vs_fcfs: 0.0,
         });
     }
-    if quick {
-        if swap_speedup <= 1.0 {
-            println!(
-                "WARN: swap <= recompute under pressure ({swap_speedup:.2}x) — not gating (quick)"
-            );
-        }
-    } else {
-        assert!(
-            swap_speedup > 1.0,
-            "swap-based preemption must beat recompute on decode throughput under \
-             memory pressure (got {:.2} vs {:.2} tok/s, {swap_speedup:.2}x)",
-            swap_rep.decode_tokens_per_s,
-            recompute_rep.decode_tokens_per_s,
-        );
-    }
+    gate(
+        !quick,
+        "swap-based preemption must beat recompute on decode throughput under memory pressure",
+        swap_speedup > 1.0,
+        format!(
+            "swap {:.2} vs recompute {:.2} tok/s, {swap_speedup:.2}x",
+            swap_rep.decode_tokens_per_s, recompute_rep.decode_tokens_per_s,
+        ),
+    );
 
     // == Weight-quant scenario: f32 vs group-wise int8 weight storage,
     // continuous decode at batch 1 and batch 16. ==
@@ -340,6 +385,7 @@ fn main() {
             per_mode[mi] = rep.decode_tokens_per_s;
             samples.push(Sample {
                 mode: "wquant",
+                plan: String::new(),
                 weight_quant: mode.name(),
                 weight_bytes: qcfg.weight_bytes(),
                 prefill_chunk: 1,
@@ -363,20 +409,12 @@ fn main() {
         wq_tok_s.push((pressure, per_mode[0], per_mode[1]));
     }
     for &(pressure, f32_tok_s, i8_tok_s) in &wq_tok_s {
-        if quick {
-            if i8_tok_s <= f32_tok_s {
-                println!(
-                    "WARN: int8 <= f32 weight decode at batch {pressure} \
-                     ({i8_tok_s:.2} vs {f32_tok_s:.2} tok/s) — not gating (quick)"
-                );
-            }
-        } else {
-            assert!(
-                i8_tok_s > f32_tok_s,
-                "int8-weight decode must beat f32 at batch {pressure} \
-                 (got {i8_tok_s:.2} vs {f32_tok_s:.2} tok/s)"
-            );
-        }
+        gate(
+            !quick,
+            &format!("int8-weight decode must beat f32 at batch {pressure}"),
+            i8_tok_s > f32_tok_s,
+            format!("int8 {i8_tok_s:.2} vs f32 {f32_tok_s:.2} tok/s"),
+        );
     }
 
     // == Prefill scenario: long prompts, chunked vs chunk-1 TTFT. ==
@@ -433,6 +471,7 @@ fn main() {
     for (chunk, rep) in [(1usize, &chunk1_rep), (64, &chunked_rep)] {
         samples.push(Sample {
             mode: "prefill",
+            plan: String::new(),
             weight_quant: sweep_wq.name(),
             weight_bytes: cfg.weight_bytes(),
             prefill_chunk: chunk,
@@ -445,66 +484,96 @@ fn main() {
             speedup_vs_fcfs: 0.0,
         });
     }
-    if quick {
-        if ttft64 >= ttft1 {
-            println!(
-                "WARN: chunked prefill TTFT >= chunk-1 at prompt_len {prefill_len} \
-                 ({:.2}ms vs {:.2}ms) — not gating (quick)",
-                ttft64 * 1e3,
-                ttft1 * 1e3
-            );
-        }
-    } else {
-        assert!(
-            ttft64 < ttft1,
-            "chunked prefill must beat chunk-1 TTFT at prompt_len {prefill_len} \
-             (got {:.2}ms vs {:.2}ms)",
-            ttft64 * 1e3,
-            ttft1 * 1e3
-        );
-    }
+    gate(
+        !quick,
+        &format!("chunked prefill must beat chunk-1 TTFT at prompt_len {prefill_len}"),
+        ttft64 < ttft1,
+        format!("chunk 64 {:.2}ms vs chunk 1 {:.2}ms", ttft64 * 1e3, ttft1 * 1e3),
+    );
+
+    // == Autotune scenario: planner-derived config vs the FCFS oracle. ==
+    // `ContinuousConfig::autotuned` derives chunk / budget / threads /
+    // panel granularity / pool sizing from the serve-time planner
+    // (schedule::tile candidates scored by the cost rooflines). The
+    // plan is a pure perf annotation, so the run must stay
+    // token-identical to FCFS; the plan hash goes into the sample so
+    // the regression tracker treats a plan change as a new series.
+    let at_pressure = 8usize;
+    let at_reqs = synthetic_workload(at_pressure, prompt_len, max_new, cfg.vocab);
+    let mut at_fcfs = Coordinator::new(Qwen3Engine::new(
+        Qwen3Weights::random(&cfg, 42),
+        1,
+        prompt_len + max_new + 1,
+    ));
+    let at_fcfs_rep = at_fcfs.serve(&at_reqs);
+    let accfg = ContinuousConfig::autotuned(&cfg, &machine, at_pressure);
+    let at_plan = accfg.plan.clone().expect("autotuned config carries its plan");
+    let mut at_cont = Coordinator::new(Qwen3Engine::new(
+        Qwen3Weights::random(&cfg, 42),
+        1,
+        prompt_len + max_new + 1,
+    ));
+    let at_rep = at_cont.serve_with_policy(&at_reqs, ServePolicy::Continuous(accfg));
+    assert_eq!(
+        at_fcfs_rep.outputs, at_rep.outputs,
+        "the autotuned serve must be token-identical to the FCFS oracle \
+         (plans are semantics-free)"
+    );
+    row(
+        &format!("autotune batch {at_pressure}"),
+        format!(
+            "fcfs {:>8.2} tok/s | autotuned {:>8.2} tok/s | plan {}",
+            at_fcfs_rep.decode_tokens_per_s,
+            at_rep.decode_tokens_per_s,
+            at_plan.render(),
+        ),
+    );
+    samples.push(Sample {
+        mode: "autotune",
+        plan: format!("{:016x}", at_plan.plan_hash()),
+        weight_quant: sweep_wq.name(),
+        weight_bytes: cfg.weight_bytes(),
+        prefill_chunk: at_plan.prefill_chunk,
+        pressure: at_pressure,
+        threads: at_rep.threads,
+        decode_tok_s: at_rep.decode_tokens_per_s,
+        prefill_tok_s: at_rep.prefill_tok_s,
+        ttft_p50_s: at_rep.ttft.percentile(50.0),
+        wall_s: at_rep.wall_s,
+        speedup_vs_fcfs: if at_fcfs_rep.decode_tokens_per_s > 0.0 {
+            at_rep.decode_tokens_per_s / at_fcfs_rep.decode_tokens_per_s
+        } else {
+            0.0
+        },
+    });
 
     if let Ok(path) = std::env::var("PALLAS_BENCH_JSON") {
         std::fs::write(&path, json_report(&samples, quick)).expect("write bench JSON");
         println!("json report -> {path}");
     }
 
-    // Quick mode is a smoke signal on a shared runner with a tiny timed
-    // window — report, don't gate (same reasoning as the thread gate
-    // below); full mode enforces the 2x batching claim.
-    if quick {
-        if speedup_at_16 < 2.0 {
-            println!(
-                "WARN: continuous < 2x FCFS at 16 ({speedup_at_16:.2}x) — not gating (quick)"
-            );
-        }
-    } else {
-        assert!(
-            speedup_at_16 >= 2.0,
-            "continuous batching must be >= 2x FCFS decode throughput at 16 \
-             concurrent requests (got {speedup_at_16:.2}x)"
-        );
-    }
+    gate(
+        !quick,
+        "continuous batching must be >= 2x FCFS decode throughput at 16 concurrent requests",
+        speedup_at_16 >= 2.0,
+        format!("{speedup_at_16:.2}x"),
+    );
 
     // Threaded decode must beat single-thread at batch 16 — the SPMD
     // partition is only worth shipping if it actually buys throughput.
+    // A < 4-core host cannot demonstrate the speedup, so it never gates
+    // there regardless of mode.
     let thread_speedup = if tok_s_16[0] > 0.0 { tok_s_16[1] / tok_s_16[0] } else { 0.0 };
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let can_gate = cores >= 4 && !quick;
-    if can_gate {
-        assert!(
-            thread_speedup > 1.0,
-            "4T continuous decode must beat 1T at batch 16 \
-             (got {:.2} vs {:.2} tok/s, {thread_speedup:.2}x)",
-            tok_s_16[1],
-            tok_s_16[0],
-        );
-    } else if thread_speedup <= 1.0 {
-        println!(
-            "WARN: 4T <= 1T at batch 16 ({thread_speedup:.2}x) — not gating \
-             ({cores} cores, quick={quick})"
-        );
-    }
+    gate(
+        !quick && cores >= 4,
+        "4T continuous decode must beat 1T at batch 16",
+        thread_speedup > 1.0,
+        format!(
+            "{:.2} vs {:.2} tok/s, {thread_speedup:.2}x ({cores} cores, quick={quick})",
+            tok_s_16[1], tok_s_16[0],
+        ),
+    );
     println!(
         "\nserve OK ({speedup_at_16:.2}x batching at 16 concurrent, \
          {thread_speedup:.2}x from 4 workers)"

@@ -80,6 +80,12 @@ pub struct ServeReport {
     /// Tier configuration of the run (`TierConfig::describe`); `None`
     /// for FCFS and for the flat (untiered) continuous path.
     pub tier: Option<String>,
+    /// The serve plan of an autotuned continuous run
+    /// (`ContinuousConfig::autotuned`): plan hash + chosen knobs.
+    /// `None` for FCFS and manually-configured runs. Like `threads`, a
+    /// pure performance annotation — outputs are identical with or
+    /// without a plan.
+    pub plan: Option<crate::serving::ServePlan>,
     /// Extended metrics of the continuous-batching path (None for FCFS).
     pub serving: Option<ServingMetrics>,
 }
@@ -107,6 +113,9 @@ impl ServeReport {
         );
         if let Some(t) = &self.tier {
             s.push_str(&format!(" tier[{t}]"));
+        }
+        if let Some(p) = &self.plan {
+            s.push_str(&format!(" plan[{}]", p.render()));
         }
         if let Some(m) = &self.serving {
             s.push_str(&format!(" | {}", m.render()));
@@ -214,6 +223,7 @@ impl Coordinator {
             request_latency,
             outputs,
             tier: None,
+            plan: None,
             serving: None,
         }
     }
@@ -230,6 +240,11 @@ impl Coordinator {
         let tier_desc = cfg.tiering.as_ref().map(|t| t.describe());
         let mut sched = ContinuousScheduler::new(cfg.clone());
         let mut be = BatchEngine::new(&self.engine.weights, cfg.num_blocks, cfg.block_size);
+        if let Some(p) = &cfg.plan {
+            // The one plan knob the config fields cannot carry: the
+            // GEMM shard granularity (bitwise-neutral, MR-grid).
+            be.set_panel_rows(p.panel_rows);
+        }
         if let Some(t) = &cfg.tiering {
             let model = &self.engine.weights.cfg;
             sched.set_tier_geometry(model.layers, model.kv_heads * model.head_dim);
@@ -303,6 +318,7 @@ impl Coordinator {
             request_latency,
             outputs,
             tier: tier_desc,
+            plan: cfg.plan.clone(),
             serving: Some(metrics),
         }
     }
@@ -416,6 +432,27 @@ mod tests {
         assert!(rep.render().contains("batch mean"));
         assert!(rep.tier.is_none(), "flat pool runs carry no tier descriptor");
         assert!(!rep.render().contains("tier["));
+        assert!(rep.plan.is_none(), "manual configs carry no plan");
+        assert!(!rep.render().contains("plan["));
+    }
+
+    #[test]
+    fn autotuned_run_records_its_plan() {
+        let cfg = Qwen3Config::tiny();
+        let machine = crate::cost::MachineSpec::ryzen_5900x();
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
+        let reqs = synthetic_workload(3, 4, 5, cfg.vocab);
+        let ccfg = ContinuousConfig::autotuned(&cfg, &machine, 3);
+        let plan = ccfg.plan.clone().expect("autotuned config carries its plan");
+        let rep = c.serve_with_policy(&reqs, ServePolicy::Continuous(ccfg));
+        assert_eq!(rep.generated_tokens, 15, "autotuned serve must still finish");
+        let got = rep.plan.as_ref().expect("report must record the plan");
+        assert_eq!(got, &plan);
+        let r = rep.render();
+        assert!(r.contains("plan["), "{r}");
+        assert!(r.contains(&format!("{:#018x}", plan.plan_hash())), "{r}");
+        assert!(r.contains(&format!("chunk={}", plan.prefill_chunk)), "{r}");
     }
 
     #[test]

@@ -9,4 +9,6 @@ mod roofline;
 pub use comm::{collective_time_s, AlphaBeta, Collective};
 pub use machine::{CacheLevel, MachineSpec};
 pub use opcost::{op_bytes, op_flops};
-pub use roofline::{decode_weight_stream_s, enode_cost, roofline_time_s, RooflineCost};
+pub use roofline::{
+    decode_weight_stream_s, enode_cost, prefill_flops_s, roofline_time_s, RooflineCost,
+};

@@ -34,7 +34,10 @@ fn usage() -> ! {
          inspect   [--emit-cpp] [--model tiny]\n\
          serve     [--threads N] [--requests N] [--max-new N] [--policy fcfs|continuous]\n\
          \x20          [--max-batch N] [--prefill-chunk N] [--kv-cold-blocks N]\n\
-         \x20          [--kv-quant int8|f32] [--weight-quant f32|int8|int4]\n\
+         \x20          [--kv-quant int8|f32] [--weight-quant f32|int8|int4] [--autotune]\n\
+         \x20          (--autotune derives chunk/budget/threads/panel/pool from the\n\
+         \x20           serve-time planner; explicit flags override its knobs;\n\
+         \x20           outputs are token-identical either way)\n\
          sweep     [--figure 9|10]\n\
          artifacts [--dir artifacts]"
     );
@@ -143,11 +146,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 opt(&args, "--max-batch").and_then(|v| v.parse().ok()).unwrap_or(8);
             let policy = match opt(&args, "--policy").as_deref() {
                 Some("continuous") => {
-                    // Pool and worker count sized from the machine
-                    // memory/core model; an explicit --threads flag
-                    // overrides the machine-derived default (an absent
-                    // flag must not clobber it with the FCFS default).
-                    let mut ccfg = ContinuousConfig::for_machine(&cfg, &machine, max_batch);
+                    // --autotune: every knob from the serve-time planner
+                    // (schedule::tile candidates scored by the cost
+                    // rooflines, cached per model/machine/quant/batch).
+                    // Otherwise the machine memory/core fallback. An
+                    // explicit --threads flag overrides either default
+                    // (an absent flag must not clobber it with the FCFS
+                    // default).
+                    let mut ccfg = if flag(&args, "--autotune") {
+                        let c = ContinuousConfig::autotuned(&cfg, &machine, max_batch);
+                        if let Some(p) = &c.plan {
+                            println!("autotune plan: {}", p.render());
+                        }
+                        c
+                    } else {
+                        ContinuousConfig::for_machine(&cfg, &machine, max_batch)
+                    };
                     if let Some(t) = threads_flag {
                         ccfg.threads = t;
                     }

@@ -1,0 +1,103 @@
+//! In-process plan cache: one search per
+//! `(Qwen3Config, MachineSpec, WeightQuant, max_batch)` key.
+//!
+//! Neither `Qwen3Config` nor `MachineSpec` implements `Eq`/`Hash`
+//! (both carry floats), so the key is a canonical formatted string of
+//! every field the search reads — two configs that render the same key
+//! are planned identically by construction, because the search is a
+//! pure function of exactly these fields. The search itself is
+//! deterministic, so a racing double-insert is harmless: both threads
+//! computed the same plan.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::cost::MachineSpec;
+use crate::model::Qwen3Config;
+
+use super::plan::ServePlan;
+use super::search::search_plan;
+
+static CACHE: OnceLock<Mutex<HashMap<String, ServePlan>>> = OnceLock::new();
+
+/// Canonical cache key: every model / machine / workload field the
+/// search consumes (the planning triple plus the batch cap).
+pub fn plan_key(model: &Qwen3Config, machine: &MachineSpec, max_batch: usize) -> String {
+    format!(
+        "{name}|h{h}l{l}q{q}kv{kv}hd{hd}i{i}v{v}|{dt:?}|{wq}|\
+         {mname}|c{c}vb{vb}fu{fu}f{f}bwc{bwc}bwt{bwt}sa{sa}mem{mem}cbw{cbw}ca{ca}|b{b}",
+        name = model.name,
+        h = model.hidden,
+        l = model.layers,
+        q = model.heads,
+        kv = model.kv_heads,
+        hd = model.head_dim,
+        i = model.intermediate,
+        v = model.vocab,
+        dt = model.dtype,
+        wq = model.weight_quant.name(),
+        mname = machine.name,
+        c = machine.cores,
+        vb = machine.vector_bits,
+        fu = machine.fma_units,
+        f = machine.freq_ghz,
+        bwc = machine.dram_bw_core_gbps,
+        bwt = machine.dram_bw_total_gbps,
+        sa = machine.sync_alpha_s,
+        mem = machine.mem_capacity_bytes,
+        cbw = machine.cold_bw_gbps,
+        ca = machine.cold_alpha_s,
+        b = max_batch,
+    )
+}
+
+/// The planner's front door: return the cached plan for the triple, or
+/// run [`search_plan`] once and cache its winner.
+pub fn plan_for(model: &Qwen3Config, machine: &MachineSpec, max_batch: usize) -> ServePlan {
+    let key = plan_key(model, machine, max_batch);
+    let cache = CACHE.get_or_init(Default::default);
+    if let Some(p) = cache.lock().unwrap().get(&key) {
+        return p.clone();
+    }
+    // Search outside the lock: it is pure and deterministic, so a
+    // concurrent duplicate computes the identical plan.
+    let plan = search_plan(model, machine, max_batch).chosen;
+    cache.lock().unwrap().entry(key).or_insert(plan).clone()
+}
+
+/// Number of distinct triples planned so far (test hook).
+pub fn cached_plan_count() -> usize {
+    CACHE.get().map_or(0, |c| c.lock().unwrap().len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_round_trip_is_stable() {
+        let model = Qwen3Config::tiny();
+        let machine = MachineSpec::ryzen_5900x();
+        let a = plan_for(&model, &machine, 8);
+        let n = cached_plan_count();
+        let b = plan_for(&model, &machine, 8);
+        assert_eq!(a, b, "cache hit must return the identical plan");
+        assert_eq!(cached_plan_count(), n, "second call must not re-insert");
+        assert_eq!(a, search_plan(&model, &machine, 8).chosen, "cache is transparent");
+    }
+
+    #[test]
+    fn key_separates_the_triple() {
+        let model = Qwen3Config::tiny();
+        let machine = MachineSpec::ryzen_5900x();
+        let base = plan_key(&model, &machine, 8);
+        assert_ne!(base, plan_key(&model, &machine, 4), "batch cap is part of the key");
+        let quant = model.clone().with_weight_quant(crate::ntt::WeightQuant::Int8);
+        assert_ne!(base, plan_key(&quant, &machine, 8), "weight quant is part of the key");
+        assert_ne!(
+            base,
+            plan_key(&model, &MachineSpec::test_numa(), 8),
+            "machine is part of the key"
+        );
+    }
+}

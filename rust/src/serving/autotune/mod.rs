@@ -1,0 +1,38 @@
+//! Serve-time autotune: the bridge that lets the compile-side
+//! schedule/cost machinery drive the serving kernels (see
+//! `docs/serving.md` § "Serve-time autotune").
+//!
+//! The compile pipeline (`rust/src/{schedule,cost}`) can rank tilings
+//! and data-movement strategies per [`crate::cost::MachineSpec`], yet
+//! the serving hot path historically ran on hand-picked constants
+//! (`ContinuousConfig::for_machine`). This subsystem closes that loop:
+//!
+//! * [`plan`] — the [`ServePlan`] artifact: GEMM panel granularity (a
+//!   multiple of the μkernel height `MR`, fed to
+//!   [`crate::parallel::panel_splits`]), prefill chunk + step token
+//!   budget, decode thread count, KV-pool sizing, and the tier
+//!   swap-vs-recompute break-even; plus the plan hash
+//!   `bench_compare` keys on.
+//! * [`search`] — deterministic enumeration of candidates from
+//!   `schedule::tile` legal tilings, scored with the existing
+//!   rooflines (`cost::{prefill_flops_s, decode_weight_stream_s,
+//!   roofline_time_s}`) and the serving
+//!   [`crate::serving::TierCostModel`].
+//! * [`cache`] — one search per `(model, machine, quant, batch)`
+//!   triple, in-process.
+//!
+//! **Bitwise guarantee.** A plan changes only scheduling — which rows
+//! run together, how GEMMs shard, how many workers spin — never
+//! arithmetic: panel granularity stays on the MR grid so packed-tile
+//! accumulation order is unchanged, and chunk/budget/threads are
+//! exactly the knobs the FCFS differential oracle already pins. Any
+//! plan, good or bad, serves token-identical output; `--autotune` is
+//! pure performance.
+
+pub mod cache;
+pub mod plan;
+pub mod search;
+
+pub use cache::{cached_plan_count, plan_for, plan_key};
+pub use plan::{pool_sizing, ServePlan};
+pub use search::{search_plan, SearchResult};

@@ -1,0 +1,251 @@
+//! The [`ServePlan`] artifact: every serving knob the planner derives,
+//! plus the shared pool-sizing heuristic and the plan's identity hash.
+//!
+//! A plan is a **pure perf artifact**: every knob it carries (panel
+//! granularity, chunk, budget, threads, pool sizing, swap threshold)
+//! changes only *when* and *where* token positions are computed, never
+//! their values — the same contract the SPMD engine and the chunked
+//! scheduler already honor, pinned by the FCFS differential oracle in
+//! `rust/tests/serving.rs`. Any plan, including a pessimal one, serves
+//! token-identical output.
+
+use crate::cost::MachineSpec;
+use crate::model::Qwen3Config;
+use crate::ntt::{WeightQuant, MR};
+
+/// The knobs the serve-time autotune pass picks once per
+/// `(Qwen3Config, MachineSpec, WeightQuant)` triple (plus the
+/// workload's batch cap). Built by [`super::search::search_plan`],
+/// cached by [`super::cache::plan_for`], installed via
+/// [`crate::serving::ContinuousConfig::autotuned`] and recorded in
+/// [`crate::coordinator::ServeReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServePlan {
+    /// Model the plan was derived for (`Qwen3Config::name`).
+    pub model: String,
+    /// Machine the plan was derived for (`MachineSpec::name`).
+    pub machine: String,
+    /// Weight-plane storage mode the cost model priced.
+    pub weight_quant: WeightQuant,
+    /// Batch cap the plan was sized for (workload input, clamped ≥ 1).
+    pub max_batch: usize,
+    /// Token positions per KV block (pool sizing, [`pool_sizing`]).
+    pub block_size: usize,
+    /// Physical KV blocks in the pool (pool sizing, [`pool_sizing`]).
+    pub num_blocks: usize,
+    /// SPMD worker threads (legal bound: `1 ..= partition_width`,
+    /// further capped at the machine's core count).
+    pub decode_threads: usize,
+    /// Prompt positions per prefilling sequence per iteration (≥ 1).
+    pub prefill_chunk: usize,
+    /// Token rows per iteration across the batch
+    /// (≥ `max(max_batch, prefill_chunk)` so every running sequence
+    /// always advances).
+    pub step_token_budget: usize,
+    /// GEMM shard granularity in token rows, fed to
+    /// [`crate::parallel::panel_splits`]. Always a multiple of the
+    /// μkernel height [`MR`], so worker shard boundaries stay on the MR
+    /// grid and the packed-tile arithmetic — hence every output bit —
+    /// is unchanged at any value.
+    pub panel_rows: usize,
+    /// Smallest preemption-victim length (tokens) at which spilling to
+    /// the cold tier beats recomputing, under the machine's
+    /// [`crate::serving::TierCostModel`]. `None`: recompute always wins
+    /// (swap never pays on this triple).
+    pub swap_break_even_tokens: Option<usize>,
+    /// Level-1 loop order of the winning `schedule::tile` tiling the
+    /// panel granularity was derived from (Eq. 3 notation fragment).
+    pub tiling: String,
+    /// Roofline-predicted seconds of one decode iteration under this
+    /// plan (diagnostic; floors from `cost::decode_weight_stream_s`).
+    pub predicted_decode_iter_s: f64,
+    /// Roofline-predicted seconds of one prefill iteration under this
+    /// plan (diagnostic; floors from `cost::prefill_flops_s`).
+    pub predicted_prefill_iter_s: f64,
+    /// Total predicted cost of the nominal serving episode the search
+    /// minimized — comparable only across candidates of one search.
+    pub predicted_cost_s: f64,
+}
+
+impl ServePlan {
+    /// Stable identity of the plan's *decision* (knobs + the triple it
+    /// was derived for; predicted costs are diagnostics and excluded).
+    /// FNV-1a over the canonical knob string — two runs served under
+    /// the same hash ran the same configuration, which is what
+    /// `tools/bench_compare.py` keys on.
+    pub fn plan_hash(&self) -> u64 {
+        let s = format!(
+            "{}|{}|{}|b{}|bs{}|nb{}|t{}|c{}|tb{}|p{}|s{}|{}",
+            self.model,
+            self.machine,
+            self.weight_quant.name(),
+            self.max_batch,
+            self.block_size,
+            self.num_blocks,
+            self.decode_threads,
+            self.prefill_chunk,
+            self.step_token_budget,
+            self.panel_rows,
+            self.swap_break_even_tokens.map_or(-1i64, |t| t as i64),
+            self.tiling,
+        );
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in s.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// One-line description for `ServeReport::render` and the CLI.
+    pub fn render(&self) -> String {
+        let swap = match self.swap_break_even_tokens {
+            Some(t) => format!("swap>={t}tok"),
+            None => "swap=never".into(),
+        };
+        format!(
+            "{:#018x} threads={} chunk={} budget={} panel={}r pool={}x{} batch={} {} \
+             pred(decode={:.3}ms prefill={:.3}ms)",
+            self.plan_hash(),
+            self.decode_threads,
+            self.prefill_chunk,
+            self.step_token_budget,
+            self.panel_rows,
+            self.num_blocks,
+            self.block_size,
+            self.max_batch,
+            swap,
+            self.predicted_decode_iter_s * 1e3,
+            self.predicted_prefill_iter_s * 1e3,
+        )
+    }
+
+    /// Legality bounds every emitted plan must satisfy (asserted by the
+    /// search and by the planner property test in
+    /// `rust/tests/properties.rs`).
+    pub fn check_legal(&self, model: &Qwen3Config) -> Result<(), String> {
+        let pw = model.partition_width();
+        if self.decode_threads == 0 || self.decode_threads > pw {
+            return Err(format!(
+                "threads {} outside [1, partition_width {pw}]",
+                self.decode_threads
+            ));
+        }
+        if self.prefill_chunk == 0 {
+            return Err("prefill_chunk must be >= 1".into());
+        }
+        let max_row = self.max_batch.max(self.prefill_chunk);
+        if self.step_token_budget < max_row {
+            return Err(format!(
+                "budget {} below max row need {max_row}",
+                self.step_token_budget
+            ));
+        }
+        if self.panel_rows < MR || self.panel_rows % MR != 0 {
+            return Err(format!("panel_rows {} not a positive multiple of MR={MR}", self.panel_rows));
+        }
+        if self.block_size == 0 || self.num_blocks == 0 {
+            return Err("degenerate KV pool".into());
+        }
+        Ok(())
+    }
+}
+
+/// KV-pool sizing from the machine's memory model — the single source
+/// of truth shared by the planner and the `--autotune`-off fallback
+/// [`crate::serving::ContinuousConfig::for_machine`]: blocks get what
+/// is left after the resident weights
+/// ([`MachineSpec::kv_block_budget`]), capped in proportion to the
+/// batch (64 blocks — 1024 positions at the default block size — per
+/// concurrent sequence) so a small demo on a big machine does not zero
+/// a multi-hundred-megabyte arena it will never touch. Returns
+/// `(block_size, num_blocks)`.
+pub fn pool_sizing(
+    model: &Qwen3Config,
+    machine: &MachineSpec,
+    max_batch: usize,
+) -> (usize, usize) {
+    let block_size = 16usize;
+    let block_bytes = model.kv_bytes_per_token() * block_size as u64;
+    let budget = machine.kv_block_budget(model.weight_bytes(), block_bytes);
+    let workload_cap = (max_batch.max(1) * 64) as u64;
+    (block_size, budget.min(workload_cap).max(1) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_plan() -> ServePlan {
+        ServePlan {
+            model: "m".into(),
+            machine: "M".into(),
+            weight_quant: WeightQuant::F32,
+            max_batch: 8,
+            block_size: 16,
+            num_blocks: 512,
+            decode_threads: 2,
+            prefill_chunk: 32,
+            step_token_budget: 256,
+            panel_rows: MR,
+            swap_break_even_tokens: Some(64),
+            tiling: "i,j,k".into(),
+            predicted_decode_iter_s: 1e-3,
+            predicted_prefill_iter_s: 2e-3,
+            predicted_cost_s: 0.5,
+        }
+    }
+
+    #[test]
+    fn hash_ignores_diagnostics_but_not_knobs() {
+        let a = demo_plan();
+        let mut b = a.clone();
+        b.predicted_cost_s = 99.0;
+        b.predicted_decode_iter_s = 99.0;
+        assert_eq!(a.plan_hash(), b.plan_hash(), "costs are diagnostics");
+        let mut c = a.clone();
+        c.prefill_chunk = 1;
+        assert_ne!(a.plan_hash(), c.plan_hash(), "knobs are identity");
+    }
+
+    #[test]
+    fn render_carries_the_knobs() {
+        let r = demo_plan().render();
+        assert!(r.contains("threads=2"), "{r}");
+        assert!(r.contains("chunk=32"), "{r}");
+        assert!(r.contains("panel=4r"), "{r}");
+        assert!(r.contains("swap>=64tok"), "{r}");
+        assert!(r.starts_with("0x"), "{r}");
+    }
+
+    #[test]
+    fn legality_bounds_reject_bad_plans() {
+        let model = Qwen3Config::tiny(); // partition_width = 2
+        assert!(demo_plan().check_legal(&model).is_ok());
+        let mut p = demo_plan();
+        p.decode_threads = 3;
+        assert!(p.check_legal(&model).is_err(), "threads above partition width");
+        let mut p = demo_plan();
+        p.prefill_chunk = 0;
+        assert!(p.check_legal(&model).is_err());
+        let mut p = demo_plan();
+        p.step_token_budget = 4;
+        assert!(p.check_legal(&model).is_err(), "budget below batch");
+        let mut p = demo_plan();
+        p.panel_rows = MR + 1;
+        assert!(p.check_legal(&model).is_err(), "panel off the MR grid");
+    }
+
+    #[test]
+    fn pool_sizing_matches_the_for_machine_fallback() {
+        // Satellite: one source of truth — the fallback delegates here,
+        // and the values are the pre-planner ones.
+        let model = Qwen3Config::tiny();
+        let machine = MachineSpec::ryzen_5900x();
+        let (bs, nb) = pool_sizing(&model, &machine, 8);
+        assert_eq!(bs, 16);
+        assert_eq!(nb, 512, "8 seqs x 64 blocks, memory-rich machine");
+        let cfg = crate::serving::ContinuousConfig::for_machine(&model, &machine, 8);
+        assert_eq!((cfg.block_size, cfg.num_blocks), (bs, nb));
+    }
+}

@@ -1,0 +1,368 @@
+//! The planner's search: enumerate candidate plans from
+//! `schedule::tile` legal tilings, score each with the existing
+//! rooflines (`cost::{prefill_flops_s, decode_weight_stream_s,
+//! roofline_time_s}`) plus the [`TierCostModel`], pick the cheapest.
+//!
+//! Everything here is pure arithmetic over the
+//! `(Qwen3Config, MachineSpec, max_batch)` inputs — no clocks, no
+//! randomness, no measurement — so the chosen plan is deterministic
+//! across calls and processes, which is what lets the differential
+//! tests pin `--autotune` output against the untuned oracle.
+//!
+//! ## Search space
+//!
+//! * **Panel granularity** — derived from the level-1 (cache-panel)
+//!   loop orders reachable in the [`TiledState`] of the serving step's
+//!   projection GEMM: the further the token-row dim `m` is hoisted out
+//!   of the panel loop nest, the taller the row panel each SPMD shard
+//!   owns (`MR` × 2^hoist). All values stay on the MR grid, so
+//!   [`crate::parallel::panel_splits`] keeps shard boundaries on packed
+//!   μkernel tiles and outputs are bitwise unchanged.
+//! * **Threads** — `1 ..= min(cores, partition_width)` (powers of two
+//!   plus the cap itself).
+//! * **Prefill chunk** — `{1, 8, 16, 32, 64}`.
+//! * **Step token budget** — full (`max_batch × chunk`) and a halved
+//!   decode-priority variant, both ≥ every legal row need.
+//!
+//! ## Scoring
+//!
+//! A nominal serving episode (`max_batch` sequences × 512 prompt + 128
+//! decode tokens) priced per iteration: the roofline over the step's
+//! FLOPs and streamed weight bytes, derated for panel-quantized load
+//! imbalance, plus a barrier-sync term (`sync_alpha_s × threads` per
+//! barrier — barrier entry costs time even solo, so every iteration
+//! carries a fixed dispatch floor) and a per-panel-unit setup term.
+//! The terms pull against the roofline: more threads raise the
+//! FLOP/bandwidth roofs but pay more sync; taller panels amortize
+//! setup but idle workers when the step has fewer row-panels than
+//! threads; and the dispatch floor makes fewer, fuller iterations win
+//! where the roofline alone would tie.
+
+use crate::cost::{
+    decode_weight_stream_s, prefill_flops_s, roofline_time_s, MachineSpec,
+};
+use crate::ir::{Graph, UnaryKind};
+use crate::model::Qwen3Config;
+use crate::ntt::MR;
+use crate::schedule::{subgraph_to_tileops, Action, TiledState};
+use crate::serving::tiered::TierCostModel;
+
+use super::plan::{pool_sizing, ServePlan};
+
+/// Prompt/decode lengths of the nominal episode the search prices.
+/// Arbitrary but fixed: only the *ordering* of candidate costs matters,
+/// and it is stable over a wide range of episode shapes.
+const NOMINAL_PROMPT: usize = 512;
+const NOMINAL_DECODE: usize = 128;
+/// Packed-GEMM efficiency, matching `cost::enode_cost`'s packed matmul.
+const GEMM_EFF: f64 = 0.85;
+
+/// Outcome of one planner search: the winner plus every scored loser
+/// (the property test asserts `chosen.predicted_cost_s` ≤ each of
+/// them).
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub chosen: ServePlan,
+    pub rejected: Vec<ServePlan>,
+}
+
+/// The serving step's GEMM + element-wise tail as [`TileOp`]s
+/// (`schedule::tile`): token rows × hidden through one projection
+/// matrix, activation fused behind it — the loop nest every
+/// `matmul_rows` phase of `spmd_step` executes.
+fn step_tileops(model: &Qwen3Config, rows: usize) -> Vec<crate::schedule::TileOp> {
+    let mut g = Graph::new();
+    let x = g.input("X", &[rows.max(1), model.hidden], model.dtype);
+    let w = g.input("W", &[model.hidden, model.intermediate], model.dtype);
+    let proj = g.matmul(x, w);
+    let act = g.unary(UnaryKind::Exp, proj); // the SwiGLU activation tail
+    g.mark_output(act);
+    let nodes = g.live_nodes();
+    subgraph_to_tileops(&g, &nodes)
+}
+
+/// Panel-granularity candidates from the legal tilings of the step
+/// GEMM: breadth-first over `TiledState::legal_actions` reorders of the
+/// GEMM's level-1 loop order (depth 2 reaches every position of the
+/// row dim `m`). Returns `(panel_rows, level-1 order)` pairs, deduped,
+/// panel ascending.
+fn panel_candidates(model: &Qwen3Config) -> Vec<(usize, String)> {
+    let ops = step_tileops(model, NOMINAL_PROMPT);
+    let init = TiledState::initial(ops, 2);
+    // The GEMM is op 0 and its row dim is the first loop char of its
+    // natural order (subgraph_to_tileops names it `i`).
+    let m_dim = init.order[1][0][0];
+    let mut frontier = vec![init];
+    let mut out: Vec<(usize, String)> = Vec::new();
+    for _depth in 0..=2 {
+        let mut next = Vec::new();
+        for st in &frontier {
+            let ord = &st.order[1][0];
+            let inner_dist = ord.len() - 1 - ord.iter().position(|&c| c == m_dim).unwrap();
+            let panel = MR << inner_dist.min(2);
+            if !out.iter().any(|(p, _)| *p == panel) {
+                let order_s: String =
+                    ord.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",");
+                out.push((panel, order_s));
+            }
+            for a in st.legal_actions() {
+                if matches!(a, Action::Reorder { op: 0, level: 1, .. }) {
+                    next.push(st.apply(&a));
+                }
+            }
+        }
+        frontier = next;
+    }
+    out.sort_by_key(|(p, _)| *p);
+    out
+}
+
+/// Thread-count candidates: powers of two up to the legal cap
+/// (`min(cores, partition_width)`), plus the cap itself.
+fn thread_candidates(model: &Qwen3Config, machine: &MachineSpec) -> Vec<usize> {
+    let cap = machine.cores.min(model.partition_width()).max(1);
+    let mut out: Vec<usize> = [1usize, 2, 4, 8, 16, 32]
+        .iter()
+        .copied()
+        .filter(|&t| t <= cap)
+        .collect();
+    if !out.contains(&cap) {
+        out.push(cap);
+    }
+    out
+}
+
+/// Predicted seconds of one engine iteration carrying `rows` token
+/// rows: roofline over the step's FLOPs and its streamed weight plane,
+/// with panel-quantized load balance, barrier sync and per-panel setup.
+fn iter_time_s(
+    model: &Qwen3Config,
+    machine: &MachineSpec,
+    threads: usize,
+    panel_rows: usize,
+    rows: usize,
+) -> f64 {
+    let rows = rows.max(1);
+    // Panel-quantized parallelism: workers own whole row panels, so a
+    // step with fewer panels than threads leaves workers idle through
+    // the GEMM phases.
+    let units = rows.div_ceil(panel_rows);
+    let eff_threads = threads.min(units).max(1);
+    let flops = rows as u64 * 2 * model.param_count();
+    let bytes = model.decode_stream_bytes();
+    let roof = roofline_time_s(
+        flops,
+        bytes,
+        machine,
+        eff_threads,
+        model.dtype.size_bytes(),
+        GEMM_EFF,
+    );
+    // Barrier sync: ~8 phase barriers per layer plus embedding / final
+    // norm / LM head, each costing alpha per participant — entering a
+    // barrier (and the scheduler pass around the step) costs time even
+    // solo, so every iteration carries a fixed dispatch floor. That
+    // floor is what makes fewer-iteration plans strictly cheaper on
+    // machines where the roofline alone would tie (pure compute-bound
+    // prefill is linear in rows, so chunk 1 and chunk 64 move identical
+    // FLOPs).
+    let barriers = (model.layers * 8 + 3) as f64;
+    let sync = barriers * machine.sync_alpha_s * threads as f64;
+    // Per-panel-unit setup (A-panel pack + loop prologue) across the 7
+    // projections per layer + LM head, divided over the workers.
+    let gemms = (model.layers * 7 + 1) as f64;
+    let setup = gemms * units.div_ceil(threads.max(1)) as f64 * machine.sync_alpha_s;
+    roof + sync + setup
+}
+
+/// Smallest preemption-victim length (tokens) at which spill + fetch
+/// beats recompute under the machine's [`TierCostModel`] (int8 cold
+/// payload, scale overhead ignored). Closed form of
+/// `TierCostModel::should_swap` with both transfers ~= the victim's KV
+/// bytes: swap pays iff
+/// `2α + 2·t·b/bw < t·f/F  ⇔  t > 2α / (f/F − 2b/bw)`.
+fn swap_break_even_tokens(
+    model: &Qwen3Config,
+    machine: &MachineSpec,
+    threads: usize,
+) -> Option<usize> {
+    let tcm = TierCostModel::for_machine(machine, model, threads);
+    // Int8 cold payload: one byte per stored KV value.
+    let bytes_per_token = (2 * model.layers * model.kv_heads * model.head_dim) as f64;
+    let recompute_per_token = tcm.flops_per_token / tcm.recompute_flops_per_s.max(1.0);
+    let transfer_per_token = 2.0 * bytes_per_token / tcm.cold_bw_bytes_per_s.max(1.0);
+    let gain = recompute_per_token - transfer_per_token;
+    if gain <= 0.0 {
+        return None; // moving bytes never beats redoing FLOPs here
+    }
+    Some(((2.0 * tcm.cold_alpha_s / gain).ceil() as usize).max(1))
+}
+
+/// Enumerate and score every candidate, returning the cheapest plan
+/// plus the scored rejects. Ties break deterministically: lower
+/// predicted cost first (`f64::total_cmp`), then fewer threads, smaller
+/// chunk, smaller panel, smaller budget.
+pub fn search_plan(
+    model: &Qwen3Config,
+    machine: &MachineSpec,
+    max_batch: usize,
+) -> SearchResult {
+    let batch = max_batch.max(1);
+    let (block_size, num_blocks) = pool_sizing(model, machine, max_batch);
+    let panels = panel_candidates(model);
+    let threads = thread_candidates(model, machine);
+    let chunks = [1usize, 8, 16, 32, 64];
+
+    let mut candidates: Vec<ServePlan> = Vec::new();
+    for &(panel_rows, ref tiling) in &panels {
+        for &t in &threads {
+            for &chunk in &chunks {
+                let full = batch * chunk;
+                let half = (full / 2).max(batch).max(chunk);
+                let mut budgets = vec![full];
+                if half != full {
+                    budgets.push(half);
+                }
+                for budget in budgets {
+                    let prefill_iter = iter_time_s(model, machine, t, panel_rows, budget);
+                    let decode_iter = iter_time_s(model, machine, t, panel_rows, batch);
+                    // Episode cost: every prompt token through prefill
+                    // iterations of `budget` rows, then lockstep decode.
+                    let prefill_iters = (NOMINAL_PROMPT * batch).div_ceil(budget);
+                    let cost = prefill_iters as f64 * prefill_iter
+                        + NOMINAL_DECODE as f64 * decode_iter;
+                    candidates.push(ServePlan {
+                        model: model.name.clone(),
+                        machine: machine.name.clone(),
+                        weight_quant: model.weight_quant,
+                        max_batch: batch,
+                        block_size,
+                        num_blocks,
+                        decode_threads: t,
+                        prefill_chunk: chunk,
+                        step_token_budget: budget,
+                        panel_rows,
+                        swap_break_even_tokens: swap_break_even_tokens(model, machine, t),
+                        tiling: tiling.clone(),
+                        predicted_decode_iter_s: decode_iter,
+                        predicted_prefill_iter_s: prefill_iter,
+                        predicted_cost_s: cost,
+                    });
+                }
+            }
+        }
+    }
+
+    candidates.sort_by(|a, b| {
+        a.predicted_cost_s
+            .total_cmp(&b.predicted_cost_s)
+            .then(a.decode_threads.cmp(&b.decode_threads))
+            .then(a.prefill_chunk.cmp(&b.prefill_chunk))
+            .then(a.panel_rows.cmp(&b.panel_rows))
+            .then(a.step_token_budget.cmp(&b.step_token_budget))
+    });
+    let chosen = candidates.remove(0);
+    debug_assert!(chosen.check_legal(model).is_ok(), "planner emitted an illegal plan");
+    SearchResult { chosen, rejected: candidates }
+}
+
+/// Consistency handles the docs and tests lean on: the floors the
+/// score is built from, re-exported per plan for diagnostics.
+pub fn plan_floors(
+    model: &Qwen3Config,
+    machine: &MachineSpec,
+    plan: &ServePlan,
+) -> (f64, f64) {
+    (
+        prefill_flops_s(model, machine, plan.decode_threads),
+        decode_weight_stream_s(model, machine, plan.decode_threads),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panel_candidates_cover_the_mr_grid() {
+        let model = Qwen3Config::tiny();
+        let panels = panel_candidates(&model);
+        let values: Vec<usize> = panels.iter().map(|(p, _)| *p).collect();
+        assert_eq!(values, vec![MR, 2 * MR, 4 * MR], "depth-2 reorders reach all m positions");
+        for (_, order) in &panels {
+            assert!(order.contains('i'), "order must name the row dim: {order}");
+        }
+    }
+
+    #[test]
+    fn search_is_deterministic_and_minimal() {
+        let model = Qwen3Config::tiny();
+        let machine = MachineSpec::ryzen_5900x();
+        let a = search_plan(&model, &machine, 8);
+        let b = search_plan(&model, &machine, 8);
+        assert_eq!(a.chosen, b.chosen);
+        for r in &a.rejected {
+            assert!(
+                a.chosen.predicted_cost_s <= r.predicted_cost_s,
+                "chosen {} beaten by rejected {}",
+                a.chosen.predicted_cost_s,
+                r.predicted_cost_s
+            );
+        }
+        assert!(!a.rejected.is_empty(), "a one-candidate search proves nothing");
+    }
+
+    #[test]
+    fn chunked_prefill_wins_on_compute_rich_machines() {
+        // On every preset the prefill compute floor sits below the
+        // weight-stream floor (cost::roofline tests), so the planner
+        // must never keep GEMV-shaped prefill.
+        for machine in
+            [MachineSpec::ryzen_5900x(), MachineSpec::tpu_like(), MachineSpec::test_numa()]
+        {
+            let plan = search_plan(&Qwen3Config::tiny(), &machine, 8).chosen;
+            assert!(plan.prefill_chunk > 1, "{}: chunk {}", machine.name, plan.prefill_chunk);
+        }
+    }
+
+    #[test]
+    fn threads_respect_the_partition_width() {
+        let model = Qwen3Config::tiny(); // partition_width = 2
+        let plan = search_plan(&model, &MachineSpec::ryzen_5900x(), 8).chosen;
+        assert!(plan.decode_threads <= model.partition_width());
+        assert!(plan.decode_threads >= 1);
+    }
+
+    #[test]
+    fn floors_bound_the_iteration_predictions() {
+        let model = Qwen3Config::tiny();
+        let machine = MachineSpec::ryzen_5900x();
+        let plan = search_plan(&model, &machine, 8).chosen;
+        let (prefill_floor, decode_floor) = plan_floors(&model, &machine, &plan);
+        // One decode iteration streams the weight plane at least once.
+        assert!(plan.predicted_decode_iter_s >= decode_floor * 0.99);
+        // A prefill iteration of `budget` rows costs at least the
+        // compute floor of those rows at full efficiency.
+        assert!(
+            plan.predicted_prefill_iter_s
+                >= prefill_floor * plan.step_token_budget as f64 * 0.5
+        );
+    }
+
+    #[test]
+    fn swap_break_even_is_finite_where_recompute_is_slow() {
+        let model = Qwen3Config::tiny();
+        let machine = MachineSpec::ryzen_5900x();
+        let be = swap_break_even_tokens(&model, &machine, 1);
+        // Tiny recompute is cheap but the closed form must still agree
+        // with TierCostModel::should_swap around its own threshold.
+        if let Some(t) = be {
+            let tcm = TierCostModel::for_machine(&machine, &model, 1);
+            let bpt = (2 * model.layers * model.kv_heads * model.head_dim) as u64;
+            assert!(
+                tcm.should_swap(4 * t as u64 * bpt, 4 * t as u64 * bpt, 4 * t),
+                "well past break-even ({t} tokens) swap must pay"
+            );
+        }
+    }
+}

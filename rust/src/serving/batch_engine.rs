@@ -191,15 +191,20 @@ const CMD_EXIT: usize = 1;
 /// One barrier-separated SPMD step, executed by all `t` participants
 /// (the controller as worker 0, plus the parked workers released into
 /// it). Per-row phases shard token rows with `splits`; GEMM phases
-/// shard MR-row panels with `panel_splits`. Both partitions depend only
-/// on `(rows, t)`, and every element keeps the single-threaded
-/// accumulation order, so results are identical at any thread count —
-/// and every row's arithmetic is independent of its step companions, so
-/// results are also identical at any span packing (chunked == chunk-1).
+/// shard `panel`-row panels with `panel_splits` (`panel` is a multiple
+/// of the μkernel height [`MR`], default `MR`, chosen by the serve
+/// plan — any multiple keeps shard boundaries on the MR grid, so the
+/// packed-tile arithmetic is unchanged). Both partitions depend only
+/// on `(rows, panel, t)`, fixed for the whole run, and every element
+/// keeps the single-threaded accumulation order, so results are
+/// identical at any thread count and any panel granularity — and every
+/// row's arithmetic is independent of its step companions, so results
+/// are also identical at any span packing (chunked == chunk-1).
 #[allow(clippy::too_many_arguments)]
 fn spmd_step(
     wi: usize,
     t: usize,
+    panel: usize,
     weights: &Qwen3Weights,
     packed: &[PackedLayer],
     packed_lm_head: &WeightMat,
@@ -227,9 +232,9 @@ fn spmd_step(
     let group = heads / kvh;
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
     let bs = kv_cell.read().block_size;
-    // This worker's static shards (token rows / MR panels of rows).
+    // This worker's static shards (token rows / panel-rows of rows).
     let (r0, r1) = splits(n, t)[wi];
-    let (p0, p1) = panel_splits(n, MR, t)[wi];
+    let (p0, p1) = panel_splits(n, panel, t)[wi];
 
     // Phase 0: embedding gather, per-row shard.
     for r in r0..r1 {
@@ -487,6 +492,11 @@ pub struct BatchEngine<'w> {
     pub kv: PagedKv,
     /// Cold-tier arena (`Some` after [`BatchEngine::enable_tier`]).
     pub cold: Option<ColdKv>,
+    /// GEMM shard granularity in token rows (multiple of [`MR`];
+    /// default `MR`). Set from `ServePlan::panel_rows` via
+    /// [`BatchEngine::set_panel_rows`] — performance only, outputs are
+    /// bitwise identical at any value.
+    panel_rows: usize,
 }
 
 /// Controller handle of a live SPMD serve run (see [`BatchEngine::run`]):
@@ -501,6 +511,7 @@ pub struct BatchStepper<'a, 'kv> {
     st: &'a StepState,
     barrier: &'a SpinBarrier,
     threads: usize,
+    panel: usize,
     max_rows: usize,
     scratch: Vec<f32>,
 }
@@ -604,6 +615,7 @@ impl BatchStepper<'_, '_> {
         spmd_step(
             0,
             self.threads,
+            self.panel,
             self.weights,
             self.packed,
             self.packed_lm_head,
@@ -654,7 +666,23 @@ impl<'w> BatchEngine<'w> {
             packed_lm_head: WeightMat::prepare(&weights.lm_head, mode),
             kv,
             cold: None,
+            panel_rows: MR,
         }
+    }
+
+    /// Set the GEMM shard granularity (token rows per panel) the SPMD
+    /// phases hand to [`panel_splits`]. Rounded up to the nearest
+    /// multiple of [`MR`] so shard boundaries stay on packed μkernel
+    /// tiles — which is why any value is bitwise-neutral. Call before
+    /// [`BatchEngine::run`]; the serving coordinator does this when the
+    /// config carries a `ServePlan`.
+    pub fn set_panel_rows(&mut self, panel_rows: usize) {
+        self.panel_rows = panel_rows.max(1).div_ceil(MR) * MR;
+    }
+
+    /// Current GEMM shard granularity in token rows.
+    pub fn panel_rows(&self) -> usize {
+        self.panel_rows
     }
 
     /// Stored bytes of the packed/quantized weight plane (all layers +
@@ -708,6 +736,7 @@ impl<'w> BatchEngine<'w> {
     ) -> R {
         let max_rows = max_rows.max(1);
         let t = threads.clamp(1, max_rows);
+        let panel = self.panel_rows.max(MR);
         let st = StepState::new(&self.weights.cfg, max_rows);
         let barrier = SpinBarrier::new(t);
         let cmd = AtomicUsize::new(CMD_STEP);
@@ -736,6 +765,7 @@ impl<'w> BatchEngine<'w> {
                         spmd_step(
                             wi,
                             t,
+                            panel,
                             weights,
                             packed,
                             packed_lm_head,
@@ -757,6 +787,7 @@ impl<'w> BatchEngine<'w> {
                 st: &st,
                 barrier: &barrier,
                 threads: t,
+                panel,
                 max_rows,
                 scratch: Vec::new(),
             };

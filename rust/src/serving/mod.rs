@@ -21,6 +21,12 @@
 //! * [`metrics`] — TTFT/TPOT, queue depth, pool occupancy, preemption
 //!   and tier-traffic counters ([`crate::coordinator::ServeReport`]
 //!   extension).
+//! * [`autotune`] — the serve-time planner: derives a [`ServePlan`]
+//!   (panel granularity, chunk, budget, threads, pool sizing, swap
+//!   threshold) per `(model, machine, quant)` triple from
+//!   `schedule::tile` tilings scored by the `cost` rooflines, instead
+//!   of hand-picked constants. Plans are pure perf artifacts — any
+//!   plan serves token-identical output.
 //! * [`tiered`] — the quantized cold storage tier: per-block int8 (or
 //!   lossless f32) spill targets, the swap-vs-recompute cost model, and
 //!   the scheduler-side cold-slot control plane. Swap-based preemption
@@ -30,12 +36,14 @@
 //! token-identical to the FCFS oracle (`rust/tests/serving.rs`) whenever
 //! tiering is off or the cold tier is lossless.
 
+pub mod autotune;
 pub mod batch_engine;
 pub mod blocks;
 pub mod metrics;
 pub mod scheduler;
 pub mod tiered;
 
+pub use autotune::ServePlan;
 pub use batch_engine::{BatchEngine, BatchStepper, PagedKv, StepSlot};
 pub use blocks::{BlockPool, BlockTable, KvBlockManager};
 pub use metrics::ServingMetrics;

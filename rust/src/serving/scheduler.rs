@@ -153,6 +153,13 @@ pub struct ContinuousConfig {
     /// bitwise-identical to the pre-tiering behaviour, which the FCFS
     /// differential oracle enforces).
     pub tiering: Option<TierConfig>,
+    /// The serve plan this config was derived from (`Some` iff built by
+    /// [`ContinuousConfig::autotuned`]). Pure annotation plus one knob
+    /// the other fields cannot carry: the engine's GEMM panel
+    /// granularity (`ServePlan::panel_rows`), wired by the coordinator
+    /// into [`crate::serving::BatchEngine::set_panel_rows`]. Recorded
+    /// in `ServeReport::plan`.
+    pub plan: Option<crate::serving::autotune::ServePlan>,
 }
 
 impl Default for ContinuousConfig {
@@ -165,6 +172,7 @@ impl Default for ContinuousConfig {
             prefill_chunk: 1,
             step_token_budget: 0,
             tiering: None,
+            plan: None,
         }
     }
 }
@@ -193,29 +201,53 @@ impl ContinuousConfig {
         self.token_budget().max(self.max_batch.max(1))
     }
 
-    /// Size the pool from a machine's memory model: KV blocks get what
-    /// is left after the weights ([`crate::cost::MachineSpec::kv_block_budget`]),
-    /// further capped in proportion to the batch (64 blocks — 1024
-    /// token positions at the default block size — per concurrent
-    /// sequence) so a small demo on a big machine does not zero a
-    /// multi-hundred-megabyte arena it will never touch.
+    /// Size the config from a machine's memory model without running
+    /// the planner — the `--autotune`-off fallback. Pool sizing goes
+    /// through the planner's single source of truth
+    /// ([`crate::serving::autotune::pool_sizing`]); threads keep the
+    /// conservative [`crate::cost::MachineSpec::decode_threads`] clamp
+    /// and prefill stays at the bitwise-seed chunk 1. Values are
+    /// unchanged from the pre-planner heuristics.
     pub fn for_machine(
         model: &crate::model::Qwen3Config,
         machine: &crate::cost::MachineSpec,
         max_batch: usize,
     ) -> Self {
-        let block_size = 16usize;
-        let block_bytes = model.kv_bytes_per_token() * block_size as u64;
-        let budget = machine.kv_block_budget(model.weight_bytes(), block_bytes);
-        let workload_cap = (max_batch.max(1) * 64) as u64;
+        let (block_size, num_blocks) =
+            crate::serving::autotune::pool_sizing(model, machine, max_batch);
         ContinuousConfig {
             block_size,
-            num_blocks: budget.min(workload_cap).max(1) as usize,
+            num_blocks,
             max_batch,
             threads: machine.decode_threads(max_batch),
             prefill_chunk: 1,
             step_token_budget: 0,
             tiering: None,
+            plan: None,
+        }
+    }
+
+    /// Derive the config from the serve-time autotune planner
+    /// ([`crate::serving::autotune::plan_for`]): panel split, chunk,
+    /// budget, threads and pool sizing all come from the roofline-scored
+    /// plan for this `(model, machine, quant, batch)` triple, and the
+    /// plan itself rides along for the report. Token-identical to any
+    /// other config — the plan is pure performance.
+    pub fn autotuned(
+        model: &crate::model::Qwen3Config,
+        machine: &crate::cost::MachineSpec,
+        max_batch: usize,
+    ) -> Self {
+        let plan = crate::serving::autotune::plan_for(model, machine, max_batch);
+        ContinuousConfig {
+            block_size: plan.block_size,
+            num_blocks: plan.num_blocks,
+            max_batch: plan.max_batch,
+            threads: plan.decode_threads,
+            prefill_chunk: plan.prefill_chunk,
+            step_token_budget: plan.step_token_budget,
+            tiering: None,
+            plan: Some(plan),
         }
     }
 }

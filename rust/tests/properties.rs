@@ -443,3 +443,60 @@ fn prop_kv_accounting_matches_engine() {
         (2 * cfg.layers * max_seq * cfg.kv_heads * cfg.head_dim * 4) as u64;
     assert_eq!(per_token * max_seq as u64, engine_bytes);
 }
+
+/// Serve-time autotune: across every machine preset × weight-quant
+/// mode, the planner is (a) deterministic — two searches of the same
+/// triple return the same plan, (b) legal — every bound of
+/// `ServePlan::check_legal` holds, and (c) minimal — the chosen plan's
+/// predicted cost is <= every rejected candidate's, so the search
+/// really returns the argmin of its own cost model.
+#[test]
+fn prop_autotune_plan_is_deterministic_legal_and_minimal() {
+    use nncase_repro::serving::autotune::{plan_for, search_plan};
+
+    let machines =
+        [MachineSpec::ryzen_5900x(), MachineSpec::tpu_like(), MachineSpec::test_numa()];
+    for machine in &machines {
+        for wq in [WeightQuant::F32, WeightQuant::Int8, WeightQuant::Int4] {
+            let model = Qwen3Config::tiny().with_weight_quant(wq);
+            for max_batch in [1usize, 8] {
+                let a = search_plan(&model, machine, max_batch);
+                let b = search_plan(&model, machine, max_batch);
+                assert_eq!(
+                    a.chosen, b.chosen,
+                    "search must be deterministic on {}/{}/b{max_batch}",
+                    machine.name,
+                    wq.name()
+                );
+                a.chosen.check_legal(&model).unwrap_or_else(|e| {
+                    panic!(
+                        "illegal plan on {}/{}/b{max_batch}: {e}",
+                        machine.name,
+                        wq.name()
+                    )
+                });
+                assert!(
+                    !a.rejected.is_empty(),
+                    "the search must actually weigh alternatives ({}/{})",
+                    machine.name,
+                    wq.name()
+                );
+                for r in &a.rejected {
+                    assert!(
+                        a.chosen.predicted_cost_s <= r.predicted_cost_s,
+                        "{}/{}/b{max_batch}: chosen {:.6}s loses to rejected {:.6}s ({})",
+                        machine.name,
+                        wq.name(),
+                        a.chosen.predicted_cost_s,
+                        r.predicted_cost_s,
+                        r.render()
+                    );
+                }
+                // The in-process cache must hand back the same decision
+                // the raw search makes.
+                let cached = plan_for(&model, machine, max_batch);
+                assert_eq!(cached.plan_hash(), a.chosen.plan_hash());
+            }
+        }
+    }
+}

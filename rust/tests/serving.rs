@@ -12,6 +12,7 @@
 use nncase_repro::coordinator::{
     argmax, synthetic_workload, Coordinator, Qwen3Engine, Request, ServePolicy, ServeReport,
 };
+use nncase_repro::cost::MachineSpec;
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
 use nncase_repro::ntt::WeightQuant;
 use nncase_repro::serving::{BatchEngine, ContinuousConfig, KvQuant, StepSlot, TierConfig};
@@ -555,6 +556,40 @@ fn chunked_prefill_quantized_weights_match_oracle() {
         assert_eq!(
             want.outputs, got.outputs,
             "chunked int8-weight serving diverged from its oracle at {threads} threads"
+        );
+    }
+}
+
+/// Serve-time autotune is semantics-free: a planner-derived config —
+/// chunk, step budget, panel granularity and pool sizing all chosen by
+/// the cost model rather than by hand — serves token-identical output
+/// to the default-config FCFS oracle at every worker count, and the
+/// report records the plan that served.
+#[test]
+fn autotuned_serve_matches_fcfs_oracle() {
+    let (cfg, mut oracle) = coordinator(21, 1);
+    let reqs = synthetic_workload(6, 5, 8, cfg.vocab);
+    let want = oracle.serve(&reqs);
+    let machine = MachineSpec::ryzen_5900x();
+    let acfg = ContinuousConfig::autotuned(&cfg, &machine, 4);
+    let plan = acfg.plan.clone().expect("autotuned config carries its plan");
+    for threads in thread_counts() {
+        // serve_continuous overrides cfg.threads per matrix point — the
+        // rest of the plan (including its panel_rows knob) still drives
+        // the batched engine, so this exercises planner panels at every
+        // worker count.
+        let got = serve_continuous(21, &reqs, acfg.clone(), threads);
+        assert_eq!(
+            want.outputs, got.outputs,
+            "the serve plan changed outputs at {threads} threads — plans must be \
+             semantics-free"
+        );
+        assert_eq!(got.generated_tokens, 6 * 8);
+        let got_plan = got.plan.expect("an autotuned run must record its plan");
+        assert_eq!(
+            got_plan.plan_hash(),
+            plan.plan_hash(),
+            "the report must carry the plan that actually served"
         );
     }
 }

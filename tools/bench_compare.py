@@ -5,15 +5,20 @@ regressions.
 Seeds the perf-regression tracker ROADMAP asks for: the CI bench-smoke
 job downloads the previous successful run's `serve-bench.json` artifact
 and diffs it against the fresh one. Samples are matched on
-(mode, weight_quant, prefill_chunk, pressure, threads); any drop in the
-scenario's gating metric (prefill tok/s for the "prefill" scenario,
-decode tok/s otherwise) beyond --warn-pct emits a GitHub `::warning::`
-annotation. A per-scenario noise summary (mean/max |delta| across the
-compared keys) is printed at the end so the noise floor across runs can
-be judged against the threshold. Exit code is always 0 — quick
-bench-smoke runs on shared runners are too noisy to gate merges on, so
-this warns and records rather than fails (flip --strict once the noise
-summaries over a few runs sit comfortably under the threshold).
+(mode, plan, weight_quant, prefill_chunk, pressure, threads) — `plan`
+is the ServePlan hash of autotuned runs (empty for hand-picked
+configs), so a planner change starts a new series instead of reading
+as a same-config regression. Any drop in the scenario's gating metric
+(prefill tok/s for the "prefill" scenario, decode tok/s otherwise)
+beyond --warn-pct emits a GitHub `::warning::` annotation. A
+per-scenario noise summary (mean/max |delta| across the compared keys)
+is printed at the end so the noise floor across runs can be judged
+against the threshold. By default exit code is 0 — quick bench-smoke
+runs on shared runners are too noisy to gate merges on, so this warns
+and records rather than fails. `--strict` gates on every regression;
+`--strict-modes sweep,wquant` gates only on regressions in the named
+scenarios (flip a scenario in once its noise summaries over a few runs
+sit comfortably under the threshold, leave the rest advisory).
 """
 
 import argparse
@@ -33,13 +38,16 @@ def load(path):
 
 
 def key(sample):
-    # Older reports predate the "mode" / "weight_quant" /
+    # Older reports predate the "mode" / "plan" / "weight_quant" /
     # "prefill_chunk" fields; the defaults keep them comparable. Keying
     # on all of them means an f32 chunk-1 sweep sample is never diffed
     # against an int8 or chunked one — those run different kernels,
     # byte volumes and step shapes, so collapsing them would report a
-    # configuration ratio as a "regression".
-    return (sample.get("mode", "sweep"), sample.get("weight_quant", "f32"),
+    # configuration ratio as a "regression". The plan hash does the
+    # same for autotuned runs: a deliberate planner change re-keys the
+    # series rather than tripping the regression warning.
+    return (sample.get("mode", "sweep"), sample.get("plan", ""),
+            sample.get("weight_quant", "f32"),
             sample.get("prefill_chunk", 1), sample["pressure"], sample["threads"])
 
 
@@ -60,7 +68,12 @@ def main():
                     help="throughput drop (percent) that triggers a warning")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero when a regression is found")
+    ap.add_argument("--strict-modes", default="",
+                    help="comma-separated scenario names (e.g. sweep,wquant) whose "
+                         "regressions exit non-zero even without --strict; other "
+                         "scenarios stay advisory")
     args = ap.parse_args()
+    strict_modes = {m.strip() for m in args.strict_modes.split(",") if m.strip()}
 
     if not Path(args.prev).exists():
         print(f"bench-compare: no previous report at {args.prev} (first run?) — skipping")
@@ -112,11 +125,19 @@ def main():
             print(f"  {mode:<20} mean {sum(ds) / len(ds):5.1f}%  "
                   f"max {max(ds):5.1f}%  (n={len(ds)})")
         verdict = "under" if worst < args.warn_pct else "OVER"
+        gating = "gating all scenarios" if args.strict else (
+            f"gating {sorted(strict_modes)}" if strict_modes
+            else "advisory; --strict not set")
         print(f"  worst scenario noise {worst:.1f}% is {verdict} the "
-              f"{args.warn_pct:.0f}% threshold"
-              + ("" if args.strict else " (advisory; --strict not set)"))
+              f"{args.warn_pct:.0f}% threshold ({gating})")
 
-    if regressions and args.strict:
+    gating_regressions = [
+        (k, pct) for k, pct in regressions
+        if args.strict or k[0] in strict_modes
+    ]
+    if gating_regressions:
+        for k, pct in gating_regressions:
+            print(f"bench-compare: gating regression {k}: {pct:+.1f}%")
         return 1
     return 0
 

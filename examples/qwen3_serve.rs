@@ -13,7 +13,9 @@
 //! Run: `cargo run --release --example qwen3_serve`
 //! (add `-- --kv-cold-blocks 96 [--kv-quant int8|f32]` for the tiered
 //! KV-storage demo over a deliberately small hot pool,
-//! `--prefill-chunk N` to change the chunked-prefill span width, and
+//! `--prefill-chunk N` to change the chunked-prefill span width,
+//! `--shards N` to pick the worker-group count of the dist-sharded
+//! run, and
 //! `--weight-quant int8|int4` to store the GEMM weight plane as
 //! group-wise codes streamed through the fused dequant-GEMM kernels —
 //! the FCFS engine then runs the fake-quantized oracle weights, so the
@@ -23,7 +25,7 @@
 //! match the same outputs — serve plans are semantics-free.
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
-use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServePolicy};
+use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServeOptions};
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
 use nncase_repro::ntt::WeightQuant;
 use nncase_repro::serving::{ContinuousConfig, KvQuant, TierConfig};
@@ -70,7 +72,7 @@ fn main() {
     for threads in [1usize, 2, 4] {
         let engine = Qwen3Engine::new(load(()), threads, 512);
         let mut coord = Coordinator::new(engine);
-        let report = coord.serve(&requests);
+        let report = coord.serve(&requests, &ServeOptions::fcfs());
         println!("threads={threads}: {}", report.render());
         // Decode output must be identical across thread counts (static
         // partitioning preserves numerics).
@@ -87,16 +89,12 @@ fn main() {
     for threads in [1usize, 4] {
         let engine = Qwen3Engine::new(load(()), 1, 512);
         let mut coord = Coordinator::new(engine);
-        let report = coord.serve_with_policy(
-            &requests,
-            ServePolicy::Continuous(ContinuousConfig {
-                block_size: 16,
-                num_blocks: 64,
-                max_batch: requests.len(),
-                threads,
-                ..ContinuousConfig::default()
-            }),
-        );
+        let ccfg = ContinuousConfig::builder()
+            .block_size(16)
+            .num_blocks(64)
+            .max_batch(requests.len())
+            .build();
+        let report = coord.serve(&requests, &ServeOptions::continuous(ccfg).threads(threads));
         println!("continuous ({} workers): {}", report.threads, report.render());
         assert_eq!(
             last_output.as_ref().unwrap(),
@@ -114,17 +112,13 @@ fn main() {
     {
         let engine = Qwen3Engine::new(load(()), 1, 512);
         let mut coord = Coordinator::new(engine);
-        let report = coord.serve_with_policy(
-            &requests,
-            ServePolicy::Continuous(ContinuousConfig {
-                block_size: 16,
-                num_blocks: 64,
-                max_batch: requests.len(),
-                threads: 1,
-                prefill_chunk: chunk,
-                ..ContinuousConfig::default()
-            }),
-        );
+        let ccfg = ContinuousConfig::builder()
+            .block_size(16)
+            .num_blocks(64)
+            .max_batch(requests.len())
+            .prefill_chunk(chunk)
+            .build();
+        let report = coord.serve(&requests, &ServeOptions::continuous(ccfg));
         println!("chunked prefill (chunk {chunk}): {}", report.render());
         assert_eq!(
             last_output.as_ref().unwrap(),
@@ -146,7 +140,7 @@ fn main() {
         println!("autotune plan: {}", plan.render());
         let engine = Qwen3Engine::new(load(()), 1, 512);
         let mut coord = Coordinator::new(engine);
-        let report = coord.serve_with_policy(&requests, ServePolicy::Continuous(ccfg));
+        let report = coord.serve(&requests, &ServeOptions::continuous(ccfg));
         println!("autotuned continuous: {}", report.render());
         assert_eq!(
             last_output.as_ref().unwrap(),
@@ -157,6 +151,37 @@ fn main() {
             report.plan.as_ref().map(|p| p.plan_hash()),
             Some(plan.plan_hash()),
             "the report must record the plan that served"
+        );
+    }
+
+    // Dist-sharded serving (`--shards N`, default 2): each projection
+    // GEMM is partitioned across N cooperating worker groups, with the
+    // split-vs-broadcast layout chosen per weight matrix by the dist
+    // cost model (`dist::extract_dist` + reshard pricing). The
+    // cross-shard combine is disjoint column placement — never a
+    // floating-point reduction — so outputs stay bitwise identical to
+    // every run above at any (threads x shards).
+    {
+        let shards: usize = opt(&args, "--shards").and_then(|v| v.parse().ok()).unwrap_or(2);
+        let machine = nncase_repro::cost::MachineSpec::test_numa();
+        let engine = Qwen3Engine::new(load(()), 1, 512);
+        let mut coord = Coordinator::new(engine);
+        let ccfg = ContinuousConfig::builder()
+            .block_size(16)
+            .num_blocks(64)
+            .max_batch(requests.len())
+            .build();
+        let opts =
+            ServeOptions::continuous(ccfg).threads(2).shards(shards).machine(machine);
+        let report = coord.serve(&requests, &opts);
+        println!("sharded continuous ({shards} shard groups): {}", report.render());
+        if let Some(sig) = &report.sbp_sig {
+            println!("dist-chosen layouts: {sig}");
+        }
+        assert_eq!(
+            last_output.as_ref().unwrap(),
+            &report.outputs,
+            "sharded serving changed outputs!"
         );
     }
 
@@ -173,19 +198,15 @@ fn main() {
         let tier = TierConfig { quant, ..TierConfig::new(cold_blocks) };
         let engine = Qwen3Engine::new(load(()), 1, 512);
         let mut coord = Coordinator::new(engine);
-        let report = coord.serve_with_policy(
-            &requests,
-            ServePolicy::Continuous(ContinuousConfig {
-                block_size: 4,
-                // Well under the 8-sequence working set (8 x 11 blocks)
-                // but enough for one full sequence plus headroom.
-                num_blocks: 14,
-                max_batch: requests.len(),
-                threads: 1,
-                tiering: Some(tier),
-                ..ContinuousConfig::default()
-            }),
-        );
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            // Well under the 8-sequence working set (8 x 11 blocks)
+            // but enough for one full sequence plus headroom.
+            .num_blocks(14)
+            .max_batch(requests.len())
+            .tiering(tier)
+            .build();
+        let report = coord.serve(&requests, &ServeOptions::continuous(ccfg));
         println!("tiered continuous: {}", report.render());
         let m = report.serving.as_ref().expect("continuous metrics");
         assert!(m.preemptions > 0, "the small hot pool must force preemption");

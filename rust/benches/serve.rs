@@ -40,21 +40,23 @@
 //! weight plane in that format; `--prefill-chunk N` runs the sweep
 //! scenarios with chunked prefill; `--autotune` replaces the sweep's
 //! hand-picked continuous configs with planner-derived ones (explicit
-//! thread/chunk knobs still override, mirroring the CLI) — CI runs the
-//! quick bench again with int8 weights, with `--prefill-chunk 64`, and
-//! with `--autotune`, so the FCFS-vs-continuous token-identity assert
-//! and the regression tracker cover the fused dequant-GEMM path, the
-//! span-packed step path, and the serve-time planner.
+//! thread/chunk knobs still override, mirroring the CLI); `--shards N`
+//! pins the shard scenario to one worker-group count instead of the
+//! {1, 2, 4} sweep — CI runs the quick bench again with int8 weights,
+//! with `--prefill-chunk 64`, and with `--autotune`, so the
+//! FCFS-vs-continuous token-identity assert and the regression tracker
+//! cover the fused dequant-GEMM path, the span-packed step path, and
+//! the serve-time planner.
 //!
 //! Run: `cargo bench --bench serve [-- --weight-quant int8]
-//! [-- --prefill-chunk 64] [-- --autotune]`
+//! [-- --prefill-chunk 64] [-- --autotune] [-- --shards 2]`
 
 mod bench_util;
 
 use std::fmt::Write as _;
 
 use bench_util::row;
-use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServePolicy};
+use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServeOptions};
 use nncase_repro::cost::MachineSpec;
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
 use nncase_repro::ntt::WeightQuant;
@@ -72,6 +74,8 @@ struct Sample {
     /// tracker keys on it, so a plan change starts a new series instead
     /// of reading as a same-config regression.
     plan: String,
+    /// Worker shard groups of the run (1 = unsharded).
+    shards: usize,
     /// Weight-plane storage of the run ("f32" / "int8" / "int4").
     weight_quant: &'static str,
     /// Model weight footprint in that format, bytes.
@@ -97,13 +101,15 @@ fn json_report(samples: &[Sample], quick: bool) -> String {
     for (i, s) in samples.iter().enumerate() {
         let _ = write!(
             out,
-            "    {{\"mode\": \"{}\", \"plan\": \"{}\", \"weight_quant\": \"{}\", \
+            "    {{\"mode\": \"{}\", \"plan\": \"{}\", \"shards\": {}, \
+             \"weight_quant\": \"{}\", \
              \"weight_bytes\": {}, \
              \"prefill_chunk\": {}, \"pressure\": {}, \"threads\": {}, \
              \"decode_tok_s\": {:.3}, \"prefill_tok_s\": {:.3}, \"ttft_p50_s\": {:.6}, \
              \"wall_s\": {:.4}, \"speedup_vs_fcfs\": {:.3}}}",
             s.mode,
             s.plan,
+            s.shards,
             s.weight_quant,
             s.weight_bytes,
             s.prefill_chunk,
@@ -188,7 +194,7 @@ fn main() {
             1,
             prompt_len + max_new + 1,
         ));
-        let fcfs_rep = fcfs.serve(&reqs);
+        let fcfs_rep = fcfs.serve(&reqs, &ServeOptions::fcfs());
 
         for (ti, &threads) in thread_counts.iter().enumerate() {
             let mut cont = Coordinator::new(Qwen3Engine::new(
@@ -196,30 +202,35 @@ fn main() {
                 1,
                 prompt_len + max_new + 1,
             ));
-            let ccfg = if autotune {
-                let mut c = ContinuousConfig::autotuned(&cfg, &machine, pressure);
-                c.threads = threads;
-                if let Some(chunk) = chunk_flag {
-                    c.prefill_chunk = chunk;
-                }
-                c
+            let mut opts = if autotune {
+                ServeOptions::autotuned(pressure).machine(machine.clone())
             } else {
-                ContinuousConfig {
-                    block_size: 16,
-                    num_blocks: 4 * pressure + 8,
-                    max_batch: pressure,
-                    threads,
-                    prefill_chunk: sweep_chunk,
-                    ..ContinuousConfig::default()
-                }
+                ServeOptions::continuous(
+                    ContinuousConfig::builder()
+                        .block_size(16)
+                        .num_blocks(4 * pressure + 8)
+                        .max_batch(pressure)
+                        .prefill_chunk(sweep_chunk)
+                        .build(),
+                )
             };
-            let sample_chunk = ccfg.prefill_chunk;
-            let sample_plan = ccfg
+            opts = opts.threads(threads);
+            if let Some(chunk) = chunk_flag {
+                opts = opts.prefill_chunk(chunk);
+            }
+            let cont_rep = cont.serve(&reqs, &opts);
+            let sample_plan = cont_rep
                 .plan
                 .as_ref()
                 .map(|p| format!("{:016x}", p.plan_hash()))
                 .unwrap_or_default();
-            let cont_rep = cont.serve_with_policy(&reqs, ServePolicy::Continuous(ccfg));
+            let sample_chunk = chunk_flag.unwrap_or_else(|| {
+                if autotune {
+                    cont_rep.plan.as_ref().map(|p| p.prefill_chunk).unwrap_or(1)
+                } else {
+                    sweep_chunk
+                }
+            });
 
             assert_eq!(
                 fcfs_rep.outputs, cont_rep.outputs,
@@ -255,6 +266,7 @@ fn main() {
             samples.push(Sample {
                 mode: "sweep",
                 plan: sample_plan,
+                shards: 1,
                 weight_quant: sweep_wq.name(),
                 weight_bytes: cfg.weight_bytes(),
                 prefill_chunk: sample_chunk,
@@ -288,17 +300,13 @@ fn main() {
             1,
             prompt_len + max_new + 1,
         ));
-        c.serve_with_policy(
-            &reqs,
-            ServePolicy::Continuous(ContinuousConfig {
-                block_size: pressure_bs,
-                num_blocks: pool,
-                max_batch: pressure,
-                threads: 1,
-                tiering,
-                ..ContinuousConfig::default()
-            }),
-        )
+        let mut ccfg = ContinuousConfig::builder()
+            .block_size(pressure_bs)
+            .num_blocks(pool)
+            .max_batch(pressure)
+            .build();
+        ccfg.tiering = tiering;
+        c.serve(&reqs, &ServeOptions::continuous(ccfg))
     };
     let recompute_rep = run_pressure(None);
     let swap_rep = run_pressure(Some(TierConfig::new(working_set + 4)));
@@ -331,6 +339,7 @@ fn main() {
         samples.push(Sample {
             mode,
             plan: String::new(),
+            shards: 1,
             weight_quant: sweep_wq.name(),
             weight_bytes: cfg.weight_bytes(),
             prefill_chunk: 1,
@@ -372,20 +381,17 @@ fn main() {
                 1,
                 prompt_len + max_new + 1,
             ));
-            let rep = c.serve_with_policy(
-                &reqs,
-                ServePolicy::Continuous(ContinuousConfig {
-                    block_size: 16,
-                    num_blocks: 4 * pressure + 8,
-                    max_batch: pressure,
-                    threads: 1,
-                    ..ContinuousConfig::default()
-                }),
-            );
+            let ccfg = ContinuousConfig::builder()
+                .block_size(16)
+                .num_blocks(4 * pressure + 8)
+                .max_batch(pressure)
+                .build();
+            let rep = c.serve(&reqs, &ServeOptions::continuous(ccfg));
             per_mode[mi] = rep.decode_tokens_per_s;
             samples.push(Sample {
                 mode: "wquant",
                 plan: String::new(),
+                shards: 1,
                 weight_quant: mode.name(),
                 weight_bytes: qcfg.weight_bytes(),
                 prefill_chunk: 1,
@@ -436,17 +442,13 @@ fn main() {
             1,
             prefill_len + prefill_new + 1,
         ));
-        c.serve_with_policy(
-            &prefill_reqs,
-            ServePolicy::Continuous(ContinuousConfig {
-                block_size: 16,
-                num_blocks: prefill_blocks,
-                max_batch: prefill_reqs_n,
-                threads: 1,
-                prefill_chunk: chunk,
-                ..ContinuousConfig::default()
-            }),
-        )
+        let ccfg = ContinuousConfig::builder()
+            .block_size(16)
+            .num_blocks(prefill_blocks)
+            .max_batch(prefill_reqs_n)
+            .prefill_chunk(chunk)
+            .build();
+        c.serve(&prefill_reqs, &ServeOptions::continuous(ccfg))
     };
     let chunk1_rep = run_prefill(1);
     let chunked_rep = run_prefill(64);
@@ -472,6 +474,7 @@ fn main() {
         samples.push(Sample {
             mode: "prefill",
             plan: String::new(),
+            shards: 1,
             weight_quant: sweep_wq.name(),
             weight_bytes: cfg.weight_bytes(),
             prefill_chunk: chunk,
@@ -505,15 +508,15 @@ fn main() {
         1,
         prompt_len + max_new + 1,
     ));
-    let at_fcfs_rep = at_fcfs.serve(&at_reqs);
-    let accfg = ContinuousConfig::autotuned(&cfg, &machine, at_pressure);
-    let at_plan = accfg.plan.clone().expect("autotuned config carries its plan");
+    let at_fcfs_rep = at_fcfs.serve(&at_reqs, &ServeOptions::fcfs());
     let mut at_cont = Coordinator::new(Qwen3Engine::new(
         Qwen3Weights::random(&cfg, 42),
         1,
         prompt_len + max_new + 1,
     ));
-    let at_rep = at_cont.serve_with_policy(&at_reqs, ServePolicy::Continuous(accfg));
+    let at_rep = at_cont
+        .serve(&at_reqs, &ServeOptions::autotuned(at_pressure).machine(machine.clone()));
+    let at_plan = at_rep.plan.clone().expect("an autotuned run records its plan");
     assert_eq!(
         at_fcfs_rep.outputs, at_rep.outputs,
         "the autotuned serve must be token-identical to the FCFS oracle \
@@ -531,6 +534,7 @@ fn main() {
     samples.push(Sample {
         mode: "autotune",
         plan: format!("{:016x}", at_plan.plan_hash()),
+        shards: 1,
         weight_quant: sweep_wq.name(),
         weight_bytes: cfg.weight_bytes(),
         prefill_chunk: at_plan.prefill_chunk,
@@ -546,6 +550,75 @@ fn main() {
             0.0
         },
     });
+
+    // == Shard scenario: dist-sharded continuous decode vs unsharded. ==
+    // `--shards N` pins one worker-group count; default sweeps {1, 2, 4}.
+    // The projection GEMMs are partitioned across the groups with the
+    // split-vs-broadcast layout chosen per weight matrix by the dist
+    // cost model; the cross-shard combine is disjoint column placement
+    // (never a floating-point reduction), so every count must stay
+    // token-identical — asserted against the count-1 run — while each
+    // group streams only its share of the sharded weight columns.
+    let shard_flag: Option<usize> = args
+        .iter()
+        .position(|a| a == "--shards")
+        .and_then(|i| args.get(i + 1))
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --shards {v:?}")));
+    let shard_counts: Vec<usize> = match shard_flag {
+        Some(s) => vec![s],
+        None => vec![1, 2, 4],
+    };
+    let shard_pressure = 8usize;
+    let shard_reqs = synthetic_workload(shard_pressure, prompt_len, max_new, cfg.vocab);
+    let shard_machine = MachineSpec::test_numa();
+    let mut shard_base: Option<Vec<(u64, Vec<usize>)>> = None;
+    for &shards in &shard_counts {
+        let mut c = Coordinator::new(Qwen3Engine::new(
+            Qwen3Weights::random(&cfg, 42),
+            1,
+            prompt_len + max_new + 1,
+        ));
+        let ccfg = ContinuousConfig::builder()
+            .block_size(16)
+            .num_blocks(4 * shard_pressure + 8)
+            .max_batch(shard_pressure)
+            .build();
+        let opts = ServeOptions::continuous(ccfg)
+            .threads(1)
+            .shards(shards)
+            .machine(shard_machine.clone());
+        let rep = c.serve(&shard_reqs, &opts);
+        match &shard_base {
+            Some(want) => assert_eq!(
+                want, &rep.outputs,
+                "sharded serving ({shards} groups) must be token-identical to unsharded"
+            ),
+            None => shard_base = Some(rep.outputs.clone()),
+        }
+        row(
+            &format!("shards {shards} x 1T"),
+            format!(
+                "{:>8.2} tok/s | sbp [{}]",
+                rep.decode_tokens_per_s,
+                rep.sbp_sig.as_deref().unwrap_or("-"),
+            ),
+        );
+        samples.push(Sample {
+            mode: "shard",
+            plan: String::new(),
+            shards,
+            weight_quant: sweep_wq.name(),
+            weight_bytes: cfg.weight_bytes(),
+            prefill_chunk: 1,
+            pressure: shard_pressure,
+            threads: 1,
+            decode_tok_s: rep.decode_tokens_per_s,
+            prefill_tok_s: rep.prefill_tok_s,
+            ttft_p50_s: rep.ttft.percentile(50.0),
+            wall_s: rep.wall_s,
+            speedup_vs_fcfs: 0.0,
+        });
+    }
 
     if let Ok(path) = std::env::var("PALLAS_BENCH_JSON") {
         std::fs::write(&path, json_report(&samples, quick)).expect("write bench JSON");

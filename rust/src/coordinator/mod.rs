@@ -7,7 +7,7 @@
 //!   time (the Auto Distribution S(1) strategy for column-parallel
 //!   GEMV), synchronized with lightweight barriers — no fork-join work
 //!   stealing, no dynamic scheduling.
-//! * [`serve`] — the request loop behind [`ServePolicy`]: the FCFS
+//! * [`serve`] — the request loop behind [`ServeOptions`]: the FCFS
 //!   oracle (batch 1, dense KV) and the continuous-batching path over
 //!   the paged KV pool of [`crate::serving`], with token throughput and
 //!   latency metrics (the E2E driver of examples/qwen3_serve.rs).
@@ -16,4 +16,4 @@ pub mod engine;
 pub mod serve;
 
 pub use engine::{argmax, KvCache, Qwen3Engine};
-pub use serve::{synthetic_workload, Coordinator, Request, ServePolicy, ServeReport};
+pub use serve::{synthetic_workload, Coordinator, Request, ServeOptions, ServePolicy, ServeReport};

@@ -1,11 +1,16 @@
 //! Request serving: the FCFS oracle path and the continuous-batching
-//! path over the paged KV pool, behind [`ServePolicy`].
+//! path over the paged KV pool, behind one front door —
+//! [`Coordinator::serve`] with [`ServeOptions`].
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use super::Qwen3Engine;
-use crate::serving::{BatchEngine, ContinuousConfig, ContinuousScheduler, ServingMetrics, StepSlot};
+use crate::cost::MachineSpec;
+use crate::dist::ShardSpec;
+use crate::serving::{
+    BatchEngine, ContinuousConfig, ContinuousScheduler, ServingMetrics, StepSlot, TierConfig,
+};
 use crate::util::Stats;
 
 /// One generation request.
@@ -16,7 +21,9 @@ pub struct Request {
     pub max_new_tokens: usize,
 }
 
-/// How the coordinator schedules requests.
+/// How the coordinator schedules requests. Retained for the
+/// deprecated [`Coordinator::serve_with_policy`] shim; new code passes
+/// [`ServeOptions`] to [`Coordinator::serve`].
 #[derive(Debug, Clone)]
 pub enum ServePolicy {
     /// One request at a time over the dense per-request KV cache
@@ -27,6 +34,184 @@ pub enum ServePolicy {
     /// (`crate::serving`): iteration-level prefill+decode batching,
     /// prefix sharing, preemption-to-queue.
     Continuous(ContinuousConfig),
+}
+
+/// The scheduling mode of a [`ServeOptions`].
+#[derive(Debug, Clone, Default)]
+enum ServeMode {
+    /// The FCFS differential oracle (batch-of-one dense engine).
+    #[default]
+    Fcfs,
+    /// Continuous batching under an explicit config.
+    Continuous(ContinuousConfig),
+    /// Continuous batching under the serve-time autotune planner
+    /// ([`ContinuousConfig::autotuned`]), resolved against the
+    /// options' machine at serve time.
+    Autotuned { max_batch: usize },
+}
+
+/// Everything [`Coordinator::serve`] needs to know about *how* to
+/// serve: the scheduling mode plus cross-cutting overrides, validated
+/// as a set. This is the single entry through which every serving knob
+/// — including the `shards` knob of the sharded engine — lands once,
+/// instead of being re-plumbed at each call site.
+///
+/// ```ignore
+/// let rep = coordinator.serve(
+///     &requests,
+///     &ServeOptions::autotuned(8).threads(4).shards(2),
+/// );
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptions {
+    mode: ServeMode,
+    threads: Option<usize>,
+    prefill_chunk: Option<usize>,
+    tiering: Option<TierConfig>,
+    shards: Option<usize>,
+    machine: Option<MachineSpec>,
+}
+
+impl ServeOptions {
+    /// Serve FCFS (the oracle path). Takes no overrides — the dense
+    /// engine's shape is fixed at [`Qwen3Engine::new`].
+    pub fn fcfs() -> Self {
+        ServeOptions::default()
+    }
+
+    /// Continuous batching under an explicit [`ContinuousConfig`]
+    /// (build one with [`ContinuousConfig::builder`]).
+    pub fn continuous(cfg: ContinuousConfig) -> Self {
+        ServeOptions { mode: ServeMode::Continuous(cfg), ..ServeOptions::default() }
+    }
+
+    /// Continuous batching under the serve-time autotune planner: the
+    /// config is derived from the options' machine (default
+    /// [`MachineSpec::ryzen_5900x`]) at serve time, and the chosen plan
+    /// rides into the report.
+    pub fn autotuned(max_batch: usize) -> Self {
+        ServeOptions { mode: ServeMode::Autotuned { max_batch }, ..ServeOptions::default() }
+    }
+
+    /// Override the engine worker-thread count (continuous modes only).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Override the prefill chunk (continuous modes only).
+    pub fn prefill_chunk(mut self, prefill_chunk: usize) -> Self {
+        self.prefill_chunk = Some(prefill_chunk);
+        self
+    }
+
+    /// Attach a tiered KV store (continuous modes only).
+    pub fn tiering(mut self, tiering: TierConfig) -> Self {
+        self.tiering = Some(tiering);
+        self
+    }
+
+    /// Shard the engine across `shards` cooperating worker groups
+    /// (continuous modes only; 1 = explicitly unsharded). The
+    /// per-matrix split-vs-broadcast layout is extracted from the dist
+    /// cost model against the options' machine
+    /// ([`ShardSpec::derive`]), recorded in the report's `sbp_sig`,
+    /// and folded into an autotuned plan's hash. Outputs stay
+    /// token-identical to FCFS at any value.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = Some(shards);
+        self
+    }
+
+    /// The machine model used to resolve autotuned configs and shard
+    /// layouts (default [`MachineSpec::ryzen_5900x`]).
+    pub fn machine(mut self, machine: MachineSpec) -> Self {
+        self.machine = Some(machine);
+        self
+    }
+
+    /// Check the option set; `Err` names the first violated rule.
+    /// [`Coordinator::serve`] calls this (then the resolved config's
+    /// own [`ContinuousConfig::validate`]) before any work runs.
+    pub fn validate(&self) -> Result<(), String> {
+        if matches!(self.mode, ServeMode::Fcfs) {
+            if self.threads.is_some()
+                || self.prefill_chunk.is_some()
+                || self.tiering.is_some()
+                || self.shards.is_some()
+                || self.machine.is_some()
+            {
+                return Err(
+                    "FCFS takes no overrides (threads/prefill_chunk/tiering/shards/machine \
+                     apply to the continuous modes; the dense engine's shape is fixed at \
+                     Qwen3Engine::new)"
+                        .into(),
+                );
+            }
+        }
+        if let ServeMode::Autotuned { max_batch } = self.mode {
+            if max_batch == 0 {
+                return Err("autotuned max_batch must be > 0".into());
+            }
+        }
+        if self.threads == Some(0) {
+            return Err("threads override must be >= 1".into());
+        }
+        if self.shards == Some(0) {
+            return Err("shards must be >= 1 (1 = unsharded)".into());
+        }
+        Ok(())
+    }
+
+    fn machine_or_default(&self) -> MachineSpec {
+        self.machine.clone().unwrap_or_else(MachineSpec::ryzen_5900x)
+    }
+
+    /// Validate and resolve into the continuous config to run
+    /// (`None` = FCFS): mode, then overrides, then the dist-extracted
+    /// shard layout, then the resolved config's own invariants.
+    fn resolve(&self, model: &crate::model::Qwen3Config) -> Result<Option<ContinuousConfig>, String> {
+        self.validate()?;
+        let mut cfg = match &self.mode {
+            ServeMode::Fcfs => return Ok(None),
+            ServeMode::Continuous(cfg) => cfg.clone(),
+            ServeMode::Autotuned { max_batch } => {
+                ContinuousConfig::autotuned(model, &self.machine_or_default(), *max_batch)
+            }
+        };
+        if let Some(t) = self.threads {
+            cfg.threads = t;
+        }
+        if let Some(c) = self.prefill_chunk {
+            cfg.prefill_chunk = c;
+        }
+        if let Some(t) = &self.tiering {
+            cfg.tiering = Some(t.clone());
+        }
+        match self.shards {
+            Some(s) if s > 1 => {
+                cfg.sharding = Some(ShardSpec::derive(model, &self.machine_or_default(), s));
+            }
+            Some(_) => cfg.sharding = None,
+            None => {}
+        }
+        // A plan's hash must pin the layout the run executes, so two
+        // runs under one hash served the same SBP signatures.
+        if let Some(plan) = cfg.plan.as_mut() {
+            match &cfg.sharding {
+                Some(s) => {
+                    plan.shards = s.shards;
+                    plan.sbp_sig = s.sig();
+                }
+                None => {
+                    plan.shards = 1;
+                    plan.sbp_sig = "-".into();
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(Some(cfg))
+    }
 }
 
 /// Aggregate serving metrics.
@@ -86,6 +271,16 @@ pub struct ServeReport {
     /// pure performance annotation — outputs are identical with or
     /// without a plan.
     pub plan: Option<crate::serving::ServePlan>,
+    /// Shard groups of the engine run (1 = unsharded / FCFS). Like
+    /// `threads`, a pure performance annotation: outputs are bitwise
+    /// identical at any value.
+    pub shards: usize,
+    /// The dist-extracted per-matrix SBP signature of a sharded run
+    /// (`ShardSpec::sig`, e.g. `"wq=S(1),...,lm_head=B"`) — recorded
+    /// verbatim so a report proves *which* layout the cost model chose,
+    /// not just that sharding was on. `None` for FCFS and unsharded
+    /// runs.
+    pub sbp_sig: Option<String>,
     /// Extended metrics of the continuous-batching path (None for FCFS).
     pub serving: Option<ServingMetrics>,
 }
@@ -111,6 +306,13 @@ impl ServeReport {
             self.token_latency.percentile(99.0) * 1e3,
             self.request_latency.mean(),
         );
+        if self.shards > 1 {
+            s.push_str(&format!(
+                " shards={} sbp[{}]",
+                self.shards,
+                self.sbp_sig.as_deref().unwrap_or("-")
+            ));
+        }
         if let Some(t) = &self.tier {
             s.push_str(&format!(" tier[{t}]"));
         }
@@ -134,16 +336,29 @@ impl Coordinator {
         Coordinator { engine }
     }
 
-    /// Serve a list of requests to completion, FCFS (the oracle path).
-    pub fn serve(&mut self, requests: &[Request]) -> ServeReport {
-        self.serve_with_policy(requests, ServePolicy::Fcfs)
+    /// Serve a list of requests to completion — the single serving
+    /// entry. `opts` picks the mode (FCFS oracle, explicit continuous
+    /// config, or autotuned) and carries every cross-cutting override
+    /// (threads, chunk, tiering, shards, machine); it is validated as a
+    /// set before any work runs, and an invalid combination panics with
+    /// the violated rule (serve setup should fail loudly, not steps
+    /// later).
+    pub fn serve(&mut self, requests: &[Request], opts: &ServeOptions) -> ServeReport {
+        let resolved = opts
+            .resolve(self.engine.cfg())
+            .unwrap_or_else(|e| panic!("invalid ServeOptions: {e}"));
+        match resolved {
+            None => self.serve_fcfs(requests),
+            Some(cfg) => self.serve_continuous(requests, cfg),
+        }
     }
 
     /// Serve a list of requests under `policy`.
+    #[deprecated(note = "use Coordinator::serve with ServeOptions")]
     pub fn serve_with_policy(&mut self, requests: &[Request], policy: ServePolicy) -> ServeReport {
         match policy {
-            ServePolicy::Fcfs => self.serve_fcfs(requests),
-            ServePolicy::Continuous(cfg) => self.serve_continuous(requests, cfg),
+            ServePolicy::Fcfs => self.serve(requests, &ServeOptions::fcfs()),
+            ServePolicy::Continuous(cfg) => self.serve(requests, &ServeOptions::continuous(cfg)),
         }
     }
 
@@ -224,6 +439,8 @@ impl Coordinator {
             outputs,
             tier: None,
             plan: None,
+            shards: 1,
+            sbp_sig: None,
             serving: None,
         }
     }
@@ -245,6 +462,16 @@ impl Coordinator {
             // GEMM shard granularity (bitwise-neutral, MR-grid).
             be.set_panel_rows(p.panel_rows);
         }
+        // The dist-extracted shard layout: the run then spawns
+        // `shards × threads` workers (bitwise-neutral, see the engine
+        // module docs).
+        let (shards, sbp_sig) = match &cfg.sharding {
+            Some(s) if s.is_sharded() => {
+                be.set_sharding(*s);
+                (s.shards, Some(s.sig()))
+            }
+            _ => (1, None),
+        };
         if let Some(t) = &cfg.tiering {
             let model = &self.engine.weights.cfg;
             sched.set_tier_geometry(model.layers, model.kv_heads * model.head_dim);
@@ -319,6 +546,8 @@ impl Coordinator {
             outputs,
             tier: tier_desc,
             plan: cfg.plan.clone(),
+            shards,
+            sbp_sig,
             serving: Some(metrics),
         }
     }
@@ -353,7 +582,7 @@ mod tests {
         let w = Qwen3Weights::random(&cfg, 7);
         let mut c = Coordinator::new(Qwen3Engine::new(w, 2, 64));
         let reqs = synthetic_workload(3, 4, 5, cfg.vocab);
-        let rep = c.serve(&reqs);
+        let rep = c.serve(&reqs, &ServeOptions::fcfs());
         assert_eq!(rep.requests, 3);
         assert_eq!(rep.generated_tokens, 15);
         assert_eq!(rep.prompt_tokens, 12);
@@ -385,11 +614,11 @@ mod tests {
         let w = Qwen3Weights::random(&cfg, 7);
         let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
         let reqs = synthetic_workload(2, 4, 3, cfg.vocab);
-        for policy in [
-            ServePolicy::Fcfs,
-            ServePolicy::Continuous(ContinuousConfig::default()),
+        for opts in [
+            ServeOptions::fcfs(),
+            ServeOptions::continuous(ContinuousConfig::default()),
         ] {
-            let rep = c.serve_with_policy(&reqs, policy);
+            let rep = c.serve(&reqs, &opts);
             assert_eq!(rep.weight_quant, WeightQuant::Int8);
             assert_eq!(rep.weight_bytes, cfg.weight_bytes());
             assert!(rep.render().contains("/int8"), "{}", rep.render());
@@ -412,16 +641,13 @@ mod tests {
         let w = Qwen3Weights::random(&cfg, 7);
         let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
         let reqs = synthetic_workload(3, 4, 5, cfg.vocab);
-        let rep = c.serve_with_policy(
-            &reqs,
-            ServePolicy::Continuous(ContinuousConfig {
-                block_size: 4,
-                num_blocks: 32,
-                max_batch: 3,
-                threads: 2,
-                ..ContinuousConfig::default()
-            }),
-        );
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(32)
+            .max_batch(3)
+            .threads(2)
+            .build();
+        let rep = c.serve(&reqs, &ServeOptions::continuous(ccfg));
         assert_eq!(rep.requests, 3);
         assert_eq!(rep.threads, 2, "report must record the effective worker count");
         assert_eq!(rep.generated_tokens, 15);
@@ -434,6 +660,9 @@ mod tests {
         assert!(!rep.render().contains("tier["));
         assert!(rep.plan.is_none(), "manual configs carry no plan");
         assert!(!rep.render().contains("plan["));
+        assert_eq!(rep.shards, 1, "unsharded runs report one group");
+        assert!(rep.sbp_sig.is_none());
+        assert!(!rep.render().contains("sbp["));
     }
 
     #[test]
@@ -445,7 +674,7 @@ mod tests {
         let reqs = synthetic_workload(3, 4, 5, cfg.vocab);
         let ccfg = ContinuousConfig::autotuned(&cfg, &machine, 3);
         let plan = ccfg.plan.clone().expect("autotuned config carries its plan");
-        let rep = c.serve_with_policy(&reqs, ServePolicy::Continuous(ccfg));
+        let rep = c.serve(&reqs, &ServeOptions::autotuned(3).machine(machine));
         assert_eq!(rep.generated_tokens, 15, "autotuned serve must still finish");
         let got = rep.plan.as_ref().expect("report must record the plan");
         assert_eq!(got, &plan);
@@ -462,17 +691,14 @@ mod tests {
         let w = Qwen3Weights::random(&cfg, 7);
         let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
         let reqs = synthetic_workload(3, 4, 5, cfg.vocab);
-        let rep = c.serve_with_policy(
-            &reqs,
-            ServePolicy::Continuous(ContinuousConfig {
-                block_size: 4,
-                num_blocks: 32,
-                max_batch: 3,
-                threads: 1,
-                tiering: Some(TierConfig::new(8)),
-                ..ContinuousConfig::default()
-            }),
-        );
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(32)
+            .max_batch(3)
+            .threads(1)
+            .tiering(TierConfig::new(8))
+            .build();
+        let rep = c.serve(&reqs, &ServeOptions::continuous(ccfg));
         assert_eq!(rep.generated_tokens, 15);
         assert_eq!(rep.tier.as_deref(), Some("cold=8xint8 swap=always"));
         assert!(rep.render().contains("tier[cold=8xint8 swap=always]"), "{}", rep.render());
@@ -492,16 +718,13 @@ mod tests {
         let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
         let reqs = synthetic_workload(3, 9, 4, cfg.vocab);
         let run = |c: &mut Coordinator, chunk: usize| {
-            c.serve_with_policy(
-                &reqs,
-                ServePolicy::Continuous(ContinuousConfig {
-                    block_size: 4,
-                    num_blocks: 64,
-                    max_batch: 3,
-                    prefill_chunk: chunk,
-                    ..ContinuousConfig::default()
-                }),
-            )
+            let ccfg = ContinuousConfig::builder()
+                .block_size(4)
+                .num_blocks(64)
+                .max_batch(3)
+                .prefill_chunk(chunk)
+                .build();
+            c.serve(&reqs, &ServeOptions::continuous(ccfg))
         };
         let base = run(&mut c, 1);
         let chunked = run(&mut c, 6);
@@ -531,13 +754,115 @@ mod tests {
             Request { id: 5, prompt: vec![], max_new_tokens: 3 },
             Request { id: 9, prompt: vec![1, 2], max_new_tokens: 0 },
         ];
-        for policy in [
-            ServePolicy::Fcfs,
-            ServePolicy::Continuous(ContinuousConfig::default()),
+        for opts in [
+            ServeOptions::fcfs(),
+            ServeOptions::continuous(ContinuousConfig::default()),
         ] {
-            let rep = c.serve_with_policy(&reqs, policy);
+            let rep = c.serve(&reqs, &opts);
             assert_eq!(rep.generated_tokens, 0);
             assert_eq!(rep.outputs, vec![(5, vec![]), (9, vec![])]);
         }
+    }
+
+    #[test]
+    fn serve_options_are_validated_as_a_set() {
+        // FCFS takes no overrides — the knobs would silently do nothing.
+        assert!(ServeOptions::fcfs().validate().is_ok());
+        assert!(ServeOptions::fcfs().threads(2).validate().is_err());
+        assert!(ServeOptions::fcfs().shards(2).validate().is_err());
+        // Degenerate values are named, not clamped into surprises.
+        let cfg = ContinuousConfig::default();
+        assert!(ServeOptions::continuous(cfg.clone()).shards(0).validate().is_err());
+        assert!(ServeOptions::continuous(cfg.clone()).threads(0).validate().is_err());
+        assert!(ServeOptions::autotuned(0).validate().is_err());
+        assert!(ServeOptions::continuous(cfg).shards(2).threads(2).validate().is_ok());
+        // The config builder rejects inconsistent knob sets.
+        assert!(ContinuousConfig::builder().block_size(0).try_build().is_err());
+        assert!(ContinuousConfig::builder().num_blocks(4).max_batch(8).try_build().is_err());
+        assert!(ContinuousConfig::builder()
+            .max_batch(4)
+            .prefill_chunk(8)
+            .step_token_budget(6)
+            .try_build()
+            .is_err());
+        assert!(ContinuousConfig::builder()
+            .max_batch(4)
+            .prefill_chunk(8)
+            .step_token_budget(8)
+            .try_build()
+            .is_ok());
+    }
+
+    #[test]
+    fn sharded_serve_records_the_dist_layout_and_matches_unsharded() {
+        // The end-to-end sharding contract at the coordinator level:
+        // identical tokens, and a report that proves the dist cost
+        // model (not a hardcoded layout) picked the per-matrix SBP.
+        let cfg = Qwen3Config::tiny();
+        let machine = crate::cost::MachineSpec::test_numa();
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
+        let reqs = synthetic_workload(3, 6, 5, cfg.vocab);
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(32)
+            .max_batch(3)
+            .threads(2)
+            .build();
+        let base = c.serve(&reqs, &ServeOptions::continuous(ccfg.clone()));
+        let sharded = c.serve(
+            &reqs,
+            &ServeOptions::continuous(ccfg).shards(2).machine(machine.clone()),
+        );
+        assert_eq!(base.outputs, sharded.outputs, "sharding must not change tokens");
+        assert_eq!(sharded.shards, 2);
+        let sig = sharded.sbp_sig.as_deref().expect("sharded runs record their layout");
+        let want = crate::dist::ShardSpec::derive(&cfg, &machine, 2).sig();
+        assert_eq!(sig, want, "the recorded signature is the dist-extracted one");
+        assert!(sig.contains("S(1)"), "dist chose nothing to shard: {sig}");
+        assert!(sharded.render().contains("shards=2 sbp["), "{}", sharded.render());
+        // shards(1) is an explicit no-op, not an error.
+        let one = c.serve(
+            &reqs,
+            &ServeOptions::autotuned(3).machine(machine).shards(1),
+        );
+        assert_eq!(one.shards, 1);
+        assert_eq!(one.plan.as_ref().unwrap().sbp_sig, "-");
+    }
+
+    #[test]
+    fn autotuned_sharded_plan_hash_pins_the_sbp_signature() {
+        // An autotuned sharded run must fold the dist-chosen layout
+        // into the plan hash: same knobs, different shard layout ->
+        // different identity.
+        let cfg = Qwen3Config::tiny();
+        let machine = crate::cost::MachineSpec::test_numa();
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
+        let reqs = synthetic_workload(2, 4, 3, cfg.vocab);
+        let base = c.serve(&reqs, &ServeOptions::autotuned(2).machine(machine.clone()));
+        let sharded =
+            c.serve(&reqs, &ServeOptions::autotuned(2).machine(machine).shards(2));
+        assert_eq!(base.outputs, sharded.outputs, "plans are pure perf artifacts");
+        let (bp, sp) = (base.plan.unwrap(), sharded.plan.unwrap());
+        assert_eq!(sp.shards, 2);
+        assert!(sp.sbp_sig.contains("wq="), "{}", sp.sbp_sig);
+        assert_ne!(bp.plan_hash(), sp.plan_hash(), "layout must be plan identity");
+        assert!(sp.render().contains("sbp["), "{}", sp.render());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_policy_shim_still_serves() {
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
+        let reqs = synthetic_workload(2, 4, 3, cfg.vocab);
+        let a = c.serve_with_policy(&reqs, ServePolicy::Fcfs);
+        let b = c.serve_with_policy(
+            &reqs,
+            ServePolicy::Continuous(ContinuousConfig::default()),
+        );
+        assert_eq!(a.outputs, b.outputs, "the shim routes through the same engine");
     }
 }

@@ -26,6 +26,9 @@ use crate::cost::{collective_time_s, enode_cost, AlphaBeta, Collective, MachineS
 use crate::egraph::{ClassId, EGraph, ENode};
 use crate::ir::{Graph, NodeId, Op, TensorType};
 
+pub mod serve;
+pub use serve::{MatShard, ShardSpec};
+
 /// One axis of an SBP signature.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Sbp {
@@ -116,7 +119,8 @@ impl Placement {
 
 /// Time (seconds) to convert a tensor of `bytes` logical bytes from
 /// signature `from` to `to` on `p`, under the alpha-beta link `ab`.
-/// This is the cost of the [`Op::Boxing`] node the conversion lowers to:
+/// This is the cost of the [`Op::Boxing`] node the conversion lowers to.
+/// Per mesh axis:
 ///
 /// * identity — free
 /// * `P -> B` — ring all-reduce
@@ -124,6 +128,16 @@ impl Placement {
 /// * `P -> S` — reduce-scatter
 /// * `S(i) -> S(j)` — all-to-all
 /// * `B -> S` / `B -> P` / `S -> P` — local slice / reinterpret, free
+///
+/// Multi-dimensional meshes compose axis-sequentially (the standard
+/// boxing lowering): axis `i`'s collective runs within lines of
+/// `p.dims[i]` devices over the tensor fraction a line holds, which is
+/// `bytes` divided by the extent of every *other* axis that currently
+/// splits the tensor (Partial axes hold full-shape terms, so they do
+/// not shrink the footprint). Axes are converted in ascending order,
+/// so axes `< i` are already in their target state when axis `i` runs.
+/// Signatures shorter than the mesh rank are padded with Broadcast;
+/// longer signatures are a caller bug (`debug_assert`).
 pub fn reshard_cost_bytes(
     from: &NdSbp,
     to: &NdSbp,
@@ -134,22 +148,46 @@ pub fn reshard_cost_bytes(
     if from == to {
         return 0.0;
     }
-    let devs = p.num_devices();
-    let f = from.0.first().copied().unwrap_or(Sbp::Broadcast);
-    let t = to.0.first().copied().unwrap_or(Sbp::Broadcast);
-    let coll = match (f, t) {
-        (a, b) if a == b => Collective::Identity,
-        (Sbp::Partial, Sbp::Broadcast) => Collective::AllReduce,
-        (Sbp::Split(_), Sbp::Broadcast) => Collective::AllGather,
-        (Sbp::Partial, Sbp::Split(_)) => Collective::ReduceScatter,
-        (Sbp::Split(_), Sbp::Split(_)) => Collective::AllToAll,
-        // A replica can be sliced locally, and a shard (or replica) can
-        // be reinterpreted as one term of a partial sum with zero fill.
-        // (Equal-variant pairs are caught by the first arm at runtime;
-        // this arm keeps the match exhaustive without guards.)
-        (Sbp::Broadcast, _) | (_, Sbp::Partial) => Collective::Identity,
-    };
-    collective_time_s(coll, bytes, devs, ab)
+    let rank = p.dims.len();
+    debug_assert!(
+        from.0.len() <= rank && to.0.len() <= rank,
+        "SBP signature wider than the {rank}-D mesh: {from} -> {to}"
+    );
+    let axis = |s: &NdSbp, i: usize| s.0.get(i).copied().unwrap_or(Sbp::Broadcast);
+    // Rolling per-axis state: target form for converted axes, source
+    // form for the rest — determines the live footprint at each step.
+    let mut cur: Vec<Sbp> = (0..rank).map(|i| axis(from, i)).collect();
+    let mut total = 0.0f64;
+    for i in 0..rank {
+        let (f, t) = (cur[i], axis(to, i));
+        if f == t {
+            continue;
+        }
+        let coll = match (f, t) {
+            (a, b) if a == b => Collective::Identity,
+            (Sbp::Partial, Sbp::Broadcast) => Collective::AllReduce,
+            (Sbp::Split(_), Sbp::Broadcast) => Collective::AllGather,
+            (Sbp::Partial, Sbp::Split(_)) => Collective::ReduceScatter,
+            (Sbp::Split(_), Sbp::Split(_)) => Collective::AllToAll,
+            // A replica can be sliced locally, and a shard (or replica)
+            // can be reinterpreted as one term of a partial sum with
+            // zero fill. (Equal-variant pairs are caught by the first
+            // arm at runtime; this arm keeps the match exhaustive
+            // without guards.)
+            (Sbp::Broadcast, _) | (_, Sbp::Partial) => Collective::Identity,
+        };
+        // Bytes a line of `dims[i]` devices collectively holds: the
+        // other Split axes partition the tensor across lines.
+        let mut line_bytes = bytes as f64;
+        for (j, s) in cur.iter().enumerate() {
+            if j != i && matches!(s, Sbp::Split(_)) {
+                line_bytes /= p.dims[j].max(1) as f64;
+            }
+        }
+        total += collective_time_s(coll, line_bytes.ceil() as u64, p.dims[i], ab);
+        cur[i] = t;
+    }
+    total
 }
 
 /// One candidate strategy of a logical node: the output signature and
@@ -212,12 +250,32 @@ pub struct DistGraph {
     pub strategies: Vec<Vec<Strategy>>,
 }
 
+/// Options restricting the strategy space of [`build_dist_egraph_opts`].
+#[derive(Debug, Clone, Copy)]
+pub struct DistOptions {
+    /// Admit inner-split (`P`-output) matmul strategies. The offline
+    /// compiler prices them; the *serving* lowering excludes them: a
+    /// Partial output needs a cross-device sum, which changes the
+    /// floating-point accumulation order and can never be bitwise
+    /// identical to the single-device FCFS oracle. With Partial off,
+    /// every extracted strategy keeps each output element's full-K
+    /// accumulation on one worker, which the sharded engine executes
+    /// bit-exactly ([`serve::ShardSpec`]).
+    pub allow_partial: bool,
+}
+
+impl Default for DistOptions {
+    fn default() -> Self {
+        DistOptions { allow_partial: true }
+    }
+}
+
 /// Legal SBP strategies of `id` on a 1-D mesh of `p` devices. Split
 /// requires the split axis to be divisible by `p` (shards stay uniform
 /// and boxing stays a pure collective). A Broadcast strategy is always
 /// included, so every node has at least one candidate and an all-B
 /// solution always exists.
-fn candidates(g: &Graph, id: NodeId, p: usize) -> Vec<Strategy> {
+fn candidates(g: &Graph, id: NodeId, p: usize, opts: DistOptions) -> Vec<Strategy> {
     let node = g.node(id);
     let dims = node.ty.shape.dims().to_vec();
     let rank = dims.len();
@@ -258,7 +316,7 @@ fn candidates(g: &Graph, id: NodeId, p: usize) -> Vec<Strategy> {
                     });
                 }
                 // Inner split: both operands sharded on k, partial output.
-                if k >= p && k % p == 0 {
+                if opts.allow_partial && k >= p && k % p == 0 {
                     out.push(Strategy {
                         out: NdSbp::partial1(),
                         ins: vec![NdSbp::split1(1), NdSbp::split1(0)],
@@ -360,8 +418,15 @@ fn candidates(g: &Graph, id: NodeId, p: usize) -> Vec<Strategy> {
 
 /// Build the distributed e-graph of Fig. 5: one e-cluster per live
 /// logical node with an e-class per legal SBP signature, bridged by
-/// [`Op::Boxing`] e-nodes.
+/// [`Op::Boxing`] e-nodes. Full strategy space ([`DistOptions`]
+/// defaults); the serving path uses [`build_dist_egraph_opts`] with
+/// `allow_partial = false`.
 pub fn build_dist_egraph(g: &Graph, placement: &Placement) -> DistGraph {
+    build_dist_egraph_opts(g, placement, DistOptions::default())
+}
+
+/// [`build_dist_egraph`] with an explicitly restricted strategy space.
+pub fn build_dist_egraph_opts(g: &Graph, placement: &Placement, opts: DistOptions) -> DistGraph {
     let p = placement.num_devices();
     let mut eg = EGraph::new();
     let mut clusters: Vec<HashMap<NdSbp, ClassId>> = vec![HashMap::new(); g.len()];
@@ -369,7 +434,7 @@ pub fn build_dist_egraph(g: &Graph, placement: &Placement) -> DistGraph {
 
     for id in g.live_nodes() {
         let node = g.node(id);
-        let cands = candidates(g, id, p);
+        let cands = candidates(g, id, p, opts);
         let mut cluster: HashMap<NdSbp, ClassId> = HashMap::new();
         let mut kept: Vec<Strategy> = Vec::new();
 
@@ -674,6 +739,70 @@ mod tests {
         assert!(p2b >= s2b && s2b > 0.0);
         // Local slice is free.
         assert_eq!(reshard_cost_bytes(&NdSbp::broadcast(1), &s0, n, &p, &ab), 0.0);
+    }
+
+    #[test]
+    fn reshard_composes_per_mesh_axis() {
+        // Satellite fix: a 2-D signature used to be silently priced as
+        // its first axis only. Now each mesh axis contributes its own
+        // collective over the bytes its device lines actually hold.
+        let ab = AlphaBeta { alpha_s: 1e-6, beta_bytes_per_s: 20e9 };
+        let mesh = Placement { dims: vec![2, 4] };
+        let n = 1u64 << 20;
+        let b2 = NdSbp(vec![Sbp::Broadcast, Sbp::Broadcast]);
+        let p2 = NdSbp(vec![Sbp::Partial, Sbp::Partial]);
+        // Two all-reduces, one per axis — strictly more than pricing
+        // only axis 0 (the old behaviour).
+        let both = reshard_cost_bytes(&p2, &b2, n, &mesh, &ab);
+        let axis0_only = reshard_cost_bytes(
+            &NdSbp(vec![Sbp::Partial, Sbp::Broadcast]),
+            &b2,
+            n,
+            &mesh,
+            &ab,
+        );
+        assert!(both > axis0_only && axis0_only > 0.0);
+        // An axis whose signature does not change is free; the changing
+        // axis-1 all-gather runs over halved bytes (axis 0 still splits
+        // the tensor across its lines).
+        let s0s1 = NdSbp(vec![Sbp::Split(0), Sbp::Split(1)]);
+        let s0b = NdSbp(vec![Sbp::Split(0), Sbp::Broadcast]);
+        let half = reshard_cost_bytes(&s0s1, &s0b, n, &mesh, &ab);
+        let full = reshard_cost_bytes(
+            &NdSbp(vec![Sbp::Broadcast, Sbp::Split(1)]),
+            &b2,
+            n,
+            &mesh,
+            &ab,
+        );
+        assert!(half > 0.0 && half < full, "split axis 0 must halve axis 1's bytes");
+        // Short signatures pad with B: on a 1-D mesh nothing changed.
+        assert_eq!(
+            reshard_cost_bytes(&NdSbp::split1(0), &NdSbp::split1(0), n, &Placement::line(4), &ab),
+            0.0
+        );
+    }
+
+    #[test]
+    fn partial_free_egraph_has_no_partial_strategies() {
+        let g = mlp(8, 64, 128);
+        let d = build_dist_egraph_opts(
+            &g,
+            &Placement::line(2),
+            DistOptions { allow_partial: false },
+        );
+        for sts in &d.strategies {
+            for st in sts {
+                assert!(
+                    !st.out.0.contains(&Sbp::Partial),
+                    "serve-side strategy space must stay bitwise-executable"
+                );
+            }
+        }
+        // Extraction still succeeds (B always present, splits still on).
+        let m = MachineSpec::ryzen_5900x();
+        let sol = extract_dist(&d, &m, u64::MAX / 4, true).unwrap();
+        assert_eq!(sol.choices.len(), g.live_nodes().len());
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Serve-side Auto Distribution: pick an *executable* per-weight-matrix
+//! SBP layout for the sharded continuous-batching engine.
+//!
+//! The serving engine shards each transformer layer's projection GEMMs
+//! across cooperating worker groups ("cores as distributed nodes",
+//! §4.2 — one group per NUMA node on real machines). Unlike the
+//! offline compiler, the serving path owes the FCFS oracle **bitwise**
+//! identical tokens at every `(threads × shards)`, which restricts the
+//! strategy space to signatures whose execution keeps every output
+//! element's full-K accumulation on a single worker:
+//!
+//! * `B` — the matrix is replicated; token rows split across all
+//!   workers (the seed engine's layout).
+//! * `S(1)` — Megatron column-parallel: each shard group owns a
+//!   contiguous range of NR-column panels; rows split across the
+//!   group's lanes. Every `(row, column)` output element is still
+//!   computed whole, in the same k-ascending order, by exactly one
+//!   worker — the "combine" is a disjoint fixed-position writeback
+//!   ([`crate::parallel`]'s SharedVec contract), not a sum.
+//!
+//! Inner-split (`P`) strategies need a cross-shard reduction that
+//! reorders floating-point accumulation, so [`ShardSpec::derive`]
+//! builds the distributed e-graph with
+//! [`DistOptions::allow_partial`]` = false` and lets
+//! [`extract_dist`] choose split-vs-broadcast per weight matrix under
+//! the machine's alpha-beta reshard costs — the layout is cost-driven,
+//! not hardcoded, and the chosen signature is recorded verbatim in the
+//! serve plan hash and `ServeReport`.
+
+use std::collections::HashMap;
+
+use super::{build_dist_egraph_opts, extract_dist, DistOptions, Placement, Sbp};
+use crate::cost::MachineSpec;
+use crate::ir::Op;
+use crate::model::{decode_graph, Qwen3Config};
+
+/// Executable layout of one weight matrix under the serving engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatShard {
+    /// Full replica in every shard group (`B`): token rows split across
+    /// all workers, all columns on each.
+    Replicated,
+    /// Column-parallel (`S(1)`): each group owns a contiguous range of
+    /// NR-column panels; rows split across the group's lanes.
+    ColumnShard,
+}
+
+impl MatShard {
+    /// The SBP signature this layout executes.
+    pub fn sbp_str(self) -> &'static str {
+        match self {
+            MatShard::Replicated => "B",
+            MatShard::ColumnShard => "S(1)",
+        }
+    }
+}
+
+/// The dist-extracted per-matrix layout of a sharded serve run.
+/// Strategies replicate across identical layers, so one decision per
+/// matrix name covers every layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Cooperating worker groups (1 = the seed unsharded engine).
+    pub shards: usize,
+    pub wq: MatShard,
+    pub wk: MatShard,
+    pub wv: MatShard,
+    pub wo: MatShard,
+    pub w_gate: MatShard,
+    pub w_up: MatShard,
+    pub w_down: MatShard,
+    pub lm_head: MatShard,
+}
+
+impl ShardSpec {
+    /// The unsharded layout: one group, every matrix replicated.
+    /// `BatchEngine` under this spec is the seed engine, bit for bit.
+    pub fn single() -> Self {
+        ShardSpec {
+            shards: 1,
+            wq: MatShard::Replicated,
+            wk: MatShard::Replicated,
+            wv: MatShard::Replicated,
+            wo: MatShard::Replicated,
+            w_gate: MatShard::Replicated,
+            w_up: MatShard::Replicated,
+            w_down: MatShard::Replicated,
+            lm_head: MatShard::Replicated,
+        }
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        self.shards > 1
+    }
+
+    /// `(name, layout)` in engine phase order.
+    pub fn matrices(&self) -> [(&'static str, MatShard); 8] {
+        [
+            ("wq", self.wq),
+            ("wk", self.wk),
+            ("wv", self.wv),
+            ("wo", self.wo),
+            ("w_gate", self.w_gate),
+            ("w_up", self.w_up),
+            ("w_down", self.w_down),
+            ("lm_head", self.lm_head),
+        ]
+    }
+
+    /// Canonical per-matrix SBP signature string, e.g.
+    /// `"wq=S(1),wk=S(1),...,lm_head=B"`. Folded into the serve plan
+    /// hash so two runs under one hash served the same layout; `"-"`
+    /// for the unsharded spec.
+    pub fn sig(&self) -> String {
+        if !self.is_sharded() {
+            return "-".into();
+        }
+        self.matrices()
+            .iter()
+            .map(|(n, m)| format!("{n}={}", m.sbp_str()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Let the dist cost model pick the layout: build the partial-free
+    /// distributed e-graph of one decode step (one layer — strategies
+    /// replicate across identical layers) on a 1-D line of `shards`
+    /// device groups, extract under the machine's memory capacity and
+    /// alpha-beta link, and read back the SBP form demanded of each
+    /// weight constant. Deterministic for a given
+    /// `(model, machine, shards)` triple.
+    pub fn derive(model: &Qwen3Config, machine: &MachineSpec, shards: usize) -> Self {
+        let shards = shards.max(1);
+        if shards == 1 {
+            return ShardSpec::single();
+        }
+        let g = decode_graph(model, 7, Some(1));
+        let placement = Placement::line(shards);
+        let d = build_dist_egraph_opts(&g, &placement, DistOptions { allow_partial: false });
+        let sol = extract_dist(&d, machine, machine.mem_capacity_bytes as u64, true)
+            .or_else(|_| extract_dist(&d, machine, u64::MAX / 4, true))
+            .expect("an all-Broadcast solution always exists");
+        let mut by_name: HashMap<String, MatShard> = HashMap::new();
+        for c in &sol.choices {
+            if let Op::Const(name) = &d.graph.node(c.node).op {
+                let short = name.strip_prefix("l0.").unwrap_or(name);
+                let layout = match c.sbp.0.first() {
+                    Some(Sbp::Split(1)) => MatShard::ColumnShard,
+                    _ => MatShard::Replicated,
+                };
+                by_name.insert(short.to_string(), layout);
+            }
+        }
+        let get = |k: &str| by_name.get(k).copied().unwrap_or(MatShard::Replicated);
+        ShardSpec {
+            shards,
+            wq: get("wq"),
+            wk: get("wk"),
+            wv: get("wv"),
+            wo: get("wo"),
+            w_gate: get("w_gate"),
+            w_up: get("w_up"),
+            w_down: get("w_down"),
+            lm_head: get("lm_head"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_spec_is_fully_replicated() {
+        let s = ShardSpec::single();
+        assert!(!s.is_sharded());
+        assert_eq!(s.sig(), "-");
+        assert!(s.matrices().iter().all(|(_, m)| *m == MatShard::Replicated));
+    }
+
+    #[test]
+    fn derive_is_cost_driven_and_deterministic() {
+        let model = Qwen3Config::tiny();
+        let machine = MachineSpec::test_numa();
+        for shards in [2usize, 4] {
+            let a = ShardSpec::derive(&model, &machine, shards);
+            let b = ShardSpec::derive(&model, &machine, shards);
+            assert_eq!(a, b, "extraction must be deterministic");
+            assert_eq!(a.shards, shards);
+            // The extractor must actually shard something: every
+            // projection axis of the tiny model divides 2 and 4, and a
+            // 1/p compute share beats a full replica under the
+            // alpha-beta model, so an all-Replicated answer would mean
+            // the cost model never ran.
+            assert!(
+                a.matrices().iter().any(|(_, m)| *m == MatShard::ColumnShard),
+                "dist chose nothing to shard: {}",
+                a.sig()
+            );
+            let sig = a.sig();
+            assert!(sig.contains("wq="), "{sig}");
+            assert!(sig.contains("lm_head="), "{sig}");
+        }
+    }
+
+    #[test]
+    fn derive_clamps_degenerate_shard_counts() {
+        let model = Qwen3Config::tiny();
+        let machine = MachineSpec::test_numa();
+        assert_eq!(ShardSpec::derive(&model, &machine, 0), ShardSpec::single());
+        assert_eq!(ShardSpec::derive(&model, &machine, 1), ShardSpec::single());
+    }
+
+    #[test]
+    fn indivisible_axes_fall_back_to_replicas() {
+        // A shard count that divides no projection axis leaves only
+        // Broadcast strategies for the weight matmuls.
+        let model = Qwen3Config::tiny();
+        let machine = MachineSpec::test_numa();
+        let s = ShardSpec::derive(&model, &machine, 7);
+        assert_eq!(s.shards, 7);
+        assert!(s.matrices().iter().all(|(_, m)| *m == MatShard::Replicated), "{}", s.sig());
+    }
+}

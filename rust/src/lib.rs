@@ -34,7 +34,7 @@
 //!   partitioning, disjoint-range scratch, single-writer KV handoff)
 //!   shared by the dense and batched decode engines.
 //! * [`serving`] — the paged KV-cache block pool and continuous-batching
-//!   scheduler behind `ServePolicy::Continuous` (docs/serving.md).
+//!   scheduler behind `ServeOptions::continuous` (docs/serving.md).
 
 pub mod cost;
 pub mod codegen;

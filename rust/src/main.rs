@@ -8,7 +8,7 @@
 //! * `sweep`    — regenerate Figure 9 / Figure 10 tables on the simulator.
 //! * `artifacts`— smoke-test the PJRT runtime against `artifacts/`.
 
-use nncase_repro::coordinator::{Coordinator, Qwen3Engine, ServePolicy};
+use nncase_repro::coordinator::{Coordinator, Qwen3Engine, ServeOptions};
 use nncase_repro::cost::MachineSpec;
 use nncase_repro::ir::DType;
 use nncase_repro::model::{decode_graph, Qwen3Config, Qwen3Weights};
@@ -33,11 +33,12 @@ fn usage() -> ! {
          compile   [--model tiny|0.6b|1.7b] [--devices N] [--schedule] [--greedy]\n\
          inspect   [--emit-cpp] [--model tiny]\n\
          serve     [--threads N] [--requests N] [--max-new N] [--policy fcfs|continuous]\n\
-         \x20          [--max-batch N] [--prefill-chunk N] [--kv-cold-blocks N]\n\
+         \x20          [--max-batch N] [--prefill-chunk N] [--shards N] [--kv-cold-blocks N]\n\
          \x20          [--kv-quant int8|f32] [--weight-quant f32|int8|int4] [--autotune]\n\
          \x20          (--autotune derives chunk/budget/threads/panel/pool from the\n\
-         \x20           serve-time planner; explicit flags override its knobs;\n\
-         \x20           outputs are token-identical either way)\n\
+         \x20           serve-time planner; --shards partitions the projection GEMMs\n\
+         \x20           across dist-planned worker groups; explicit flags override\n\
+         \x20           planner knobs; outputs are token-identical either way)\n\
          sweep     [--figure 9|10]\n\
          artifacts [--dir artifacts]"
     );
@@ -144,62 +145,70 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             );
             let max_batch: usize =
                 opt(&args, "--max-batch").and_then(|v| v.parse().ok()).unwrap_or(8);
-            let policy = match opt(&args, "--policy").as_deref() {
-                Some("continuous") => {
-                    // --autotune: every knob from the serve-time planner
-                    // (schedule::tile candidates scored by the cost
-                    // rooflines, cached per model/machine/quant/batch).
-                    // Otherwise the machine memory/core fallback. An
-                    // explicit --threads flag overrides either default
-                    // (an absent flag must not clobber it with the FCFS
-                    // default).
-                    let mut ccfg = if flag(&args, "--autotune") {
-                        let c = ContinuousConfig::autotuned(&cfg, &machine, max_batch);
-                        if let Some(p) = &c.plan {
-                            println!("autotune plan: {}", p.render());
-                        }
-                        c
-                    } else {
-                        ContinuousConfig::for_machine(&cfg, &machine, max_batch)
-                    };
-                    if let Some(t) = threads_flag {
-                        ccfg.threads = t;
-                    }
-                    // Chunked prefill: feed up to N prompt tokens per
-                    // sequence per iteration (1 = the default
-                    // one-token-per-slot behaviour; outputs are
-                    // token-identical at any value, TTFT is not).
-                    if let Some(chunk) =
-                        opt(&args, "--prefill-chunk").and_then(|v| v.parse::<usize>().ok())
-                    {
-                        ccfg.prefill_chunk = chunk;
-                    }
-                    // Tiered cold KV storage: --kv-cold-blocks enables a
-                    // cold tier of N blocks, --kv-quant picks the format
-                    // (int8 default; f32 = lossless swap). The swap
-                    // policy is the machine-derived cost model.
-                    let cold_blocks =
-                        opt(&args, "--kv-cold-blocks").and_then(|v| v.parse::<usize>().ok());
-                    if let Some(n) = cold_blocks {
-                        let quant = match opt(&args, "--kv-quant") {
-                            Some(q) => KvQuant::parse(&q)
-                                .unwrap_or_else(|| panic!("bad --kv-quant {q:?}")),
-                            None => KvQuant::Int8,
-                        };
-                        ccfg.tiering = Some(TierConfig::for_machine(
-                            n,
-                            quant,
-                            &machine,
-                            &cfg,
-                            ccfg.threads,
-                        ));
-                    }
-                    ServePolicy::Continuous(ccfg)
+            let rep = if opt(&args, "--policy").as_deref() == Some("continuous") {
+                // --autotune: every knob from the serve-time planner
+                // (schedule::tile candidates scored by the cost
+                // rooflines, cached per model/machine/quant/batch).
+                // Otherwise the machine memory/core fallback. Explicit
+                // flags become ServeOptions overrides, applied on top of
+                // whichever base config the mode resolves to.
+                let mut opts = if flag(&args, "--autotune") {
+                    ServeOptions::autotuned(max_batch)
+                } else {
+                    ServeOptions::continuous(ContinuousConfig::for_machine(
+                        &cfg, &machine, max_batch,
+                    ))
                 }
-                _ => ServePolicy::Fcfs,
+                .machine(machine.clone());
+                if let Some(t) = threads_flag {
+                    opts = opts.threads(t);
+                }
+                // Chunked prefill: feed up to N prompt tokens per
+                // sequence per iteration (1 = the default
+                // one-token-per-slot behaviour; outputs are
+                // token-identical at any value, TTFT is not).
+                if let Some(chunk) =
+                    opt(&args, "--prefill-chunk").and_then(|v| v.parse::<usize>().ok())
+                {
+                    opts = opts.prefill_chunk(chunk);
+                }
+                // Dist-sharded worker groups: the projection GEMMs are
+                // partitioned across N groups with split-vs-broadcast
+                // layouts chosen by the dist cost model. Token-identical
+                // at any count.
+                if let Some(s) = opt(&args, "--shards").and_then(|v| v.parse::<usize>().ok()) {
+                    opts = opts.shards(s);
+                }
+                // Tiered cold KV storage: --kv-cold-blocks enables a
+                // cold tier of N blocks, --kv-quant picks the format
+                // (int8 default; f32 = lossless swap). The swap
+                // policy is the machine-derived cost model.
+                let cold_blocks =
+                    opt(&args, "--kv-cold-blocks").and_then(|v| v.parse::<usize>().ok());
+                if let Some(n) = cold_blocks {
+                    let quant = match opt(&args, "--kv-quant") {
+                        Some(q) => KvQuant::parse(&q)
+                            .unwrap_or_else(|| panic!("bad --kv-quant {q:?}")),
+                        None => KvQuant::Int8,
+                    };
+                    opts = opts.tiering(TierConfig::for_machine(
+                        n,
+                        quant,
+                        &machine,
+                        &cfg,
+                        threads_flag.unwrap_or(threads),
+                    ));
+                }
+                println!("policy: continuous");
+                let rep = c.serve(&reqs, &opts);
+                if let Some(p) = &rep.plan {
+                    println!("autotune plan: {}", p.render());
+                }
+                rep
+            } else {
+                println!("policy: fcfs");
+                c.serve(&reqs, &ServeOptions::fcfs())
             };
-            println!("policy: {policy:?}");
-            let rep = c.serve_with_policy(&reqs, policy);
             println!("{}", rep.render());
         }
         "sweep" => {

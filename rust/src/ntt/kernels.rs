@@ -245,11 +245,42 @@ pub fn matmul_prepacked_rows(
     c_rows: &mut [f32],
     scratch: &mut Vec<f32>,
 ) {
+    matmul_prepacked_rows_cols(x, rows, w, row_lo, row_hi, 0, w.n.div_ceil(NR), c_rows, scratch)
+}
+
+/// Rows `[row_lo, row_hi)` × NR-column panels `[colpan_lo, colpan_hi)`
+/// of `C = X @ W` — the 2-D shard of the column-parallel (`S(1)`)
+/// serving layout: a shard group owns a contiguous column-panel range,
+/// its lanes split the rows. `c_rows` is the compact
+/// `(row_hi - row_lo) × ncols` local buffer (`ncols` = the covered
+/// columns, clipped to `w.n` on the last panel); the caller copies rows
+/// into the full-width shared buffer at fixed positions (a disjoint
+/// writeback, not a reduction). Column panels are independent in this
+/// kernel — each output element still accumulates over ascending `k` in
+/// full, so any panel range is bit-identical to the same columns of
+/// [`matmul_prepacked`]. The full-width entry points delegate here with
+/// the full panel range.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_prepacked_rows_cols(
+    x: &[f32],
+    rows: usize,
+    w: &PackedMat,
+    row_lo: usize,
+    row_hi: usize,
+    colpan_lo: usize,
+    colpan_hi: usize,
+    c_rows: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
     let (k, n) = (w.k, w.n);
+    let npan = n.div_ceil(NR);
     assert!(row_lo <= row_hi && row_hi <= rows, "bad row range");
+    assert!(colpan_lo <= colpan_hi && colpan_hi <= npan, "bad column-panel range");
     assert_eq!(x.len(), rows * k, "X shape mismatch");
-    assert_eq!(c_rows.len(), (row_hi - row_lo) * n, "C shape mismatch");
-    if row_lo == row_hi {
+    let col0 = colpan_lo * NR;
+    let ncols = (colpan_hi * NR).min(n).saturating_sub(col0);
+    assert_eq!(c_rows.len(), (row_hi - row_lo) * ncols, "C shape mismatch");
+    if row_lo == row_hi || ncols == 0 {
         // Empty shard (oversubscribed partition): nothing to compute —
         // and `row_lo` need not be aligned in this case.
         return;
@@ -260,7 +291,7 @@ pub fn matmul_prepacked_rows(
     let mut acc = [0.0f32; MR * NR];
     for ib in 0..panels {
         let apan = &scratch[ib * MR * k..(ib + 1) * MR * k];
-        for jb in 0..n.div_ceil(NR) {
+        for jb in colpan_lo..colpan_hi {
             let bpan = &w.panels[jb * NR * k..(jb + 1) * NR * k];
             acc.fill(0.0);
             ukernel(apan, bpan, k, &mut acc);
@@ -273,7 +304,7 @@ pub fn matmul_prepacked_rows(
                 for j in 0..NR {
                     let col = jb * NR + j;
                     if col < n {
-                        c_rows[(row - row_lo) * n + col] = acc[i * NR + j];
+                        c_rows[(row - row_lo) * ncols + (col - col0)] = acc[i * NR + j];
                     }
                 }
             }
@@ -533,11 +564,36 @@ pub fn matmul_quant_rows(
     c_rows: &mut [f32],
     scratch: &mut Vec<f32>,
 ) {
+    matmul_quant_rows_cols(x, rows, w, row_lo, row_hi, 0, w.n.div_ceil(NR), c_rows, scratch)
+}
+
+/// Rows × NR-column-panel shard of the fused dequant-GEMM — the
+/// quantized mirror of [`matmul_prepacked_rows_cols`] (same compact
+/// `c_rows` contract). Column panels are independent here too (each
+/// panel's groups dequantize and accumulate ascending-k regardless of
+/// which other panels run), so any panel range is bit-identical to the
+/// same columns of the full-width kernel, which delegates here.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_quant_rows_cols(
+    x: &[f32],
+    rows: usize,
+    w: &QuantMat,
+    row_lo: usize,
+    row_hi: usize,
+    colpan_lo: usize,
+    colpan_hi: usize,
+    c_rows: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
     let (k, n) = (w.k, w.n);
+    let npan = n.div_ceil(NR);
     assert!(row_lo <= row_hi && row_hi <= rows, "bad row range");
+    assert!(colpan_lo <= colpan_hi && colpan_hi <= npan, "bad column-panel range");
     assert_eq!(x.len(), rows * k, "X shape mismatch");
-    assert_eq!(c_rows.len(), (row_hi - row_lo) * n, "C shape mismatch");
-    if row_lo == row_hi {
+    let col0 = colpan_lo * NR;
+    let ncols = (colpan_hi * NR).min(n).saturating_sub(col0);
+    assert_eq!(c_rows.len(), (row_hi - row_lo) * ncols, "C shape mismatch");
+    if row_lo == row_hi || ncols == 0 {
         return;
     }
     assert_eq!(row_lo % MR, 0, "row_lo must be MR-aligned");
@@ -549,7 +605,7 @@ pub fn matmul_quant_rows(
     scratch.resize(panels * MR * k + panels * MR * NR, 0.0);
     let (apack, accs) = scratch.split_at_mut(panels * MR * k);
     let mut wbuf = [0.0f32; QGROUP * NR];
-    for jb in 0..n.div_ceil(NR) {
+    for jb in colpan_lo..colpan_hi {
         accs.fill(0.0);
         for g in 0..w.groups() {
             let glen = w.dequant_panel_group(jb, g, &mut wbuf);
@@ -571,7 +627,8 @@ pub fn matmul_quant_rows(
                 for j in 0..NR {
                     let col = jb * NR + j;
                     if col < n {
-                        c_rows[(row - row_lo) * n + col] = accs[ib * MR * NR + i * NR + j];
+                        c_rows[(row - row_lo) * ncols + (col - col0)] =
+                            accs[ib * MR * NR + i * NR + j];
                     }
                 }
             }
@@ -634,6 +691,37 @@ impl WeightMat {
         match self {
             WeightMat::F32(m) => matmul_prepacked_rows(x, rows, m, row_lo, row_hi, c_rows, scratch),
             WeightMat::Quant(m) => matmul_quant_rows(x, rows, m, row_lo, row_hi, c_rows, scratch),
+        }
+    }
+
+    /// Number of NR-column panels (the unit the column-parallel serving
+    /// layout shards: a `ShardSpec` group owns a contiguous panel range).
+    pub fn col_panels(&self) -> usize {
+        self.n().div_ceil(NR)
+    }
+
+    /// 2-D shard matmul: rows × NR-column-panel range into a compact
+    /// local buffer ([`matmul_prepacked_rows_cols`] /
+    /// [`matmul_quant_rows_cols`] — identical contract in both modes).
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_rows_cols(
+        &self,
+        x: &[f32],
+        rows: usize,
+        row_lo: usize,
+        row_hi: usize,
+        colpan_lo: usize,
+        colpan_hi: usize,
+        c_rows: &mut [f32],
+        scratch: &mut Vec<f32>,
+    ) {
+        match self {
+            WeightMat::F32(m) => matmul_prepacked_rows_cols(
+                x, rows, m, row_lo, row_hi, colpan_lo, colpan_hi, c_rows, scratch,
+            ),
+            WeightMat::Quant(m) => matmul_quant_rows_cols(
+                x, rows, m, row_lo, row_hi, colpan_lo, colpan_hi, c_rows, scratch,
+            ),
         }
     }
 }
@@ -1137,6 +1225,73 @@ pub fn mul_inplace(out: &mut [f32], x: &[f32]) {
 mod tests {
     use super::*;
     use crate::util::Rng;
+
+    #[test]
+    fn rows_cols_shard_is_bitwise_equal_to_full_width() {
+        // The column-parallel serving layout: any (row range × column-
+        // panel range) tiling must reassemble into exactly the bits of
+        // the full-width kernel, for both weight-plane modes.
+        let mut rng = Rng::new(21);
+        let (rows, k, n) = (9, 64, 72); // n = 4.5 NR panels: clipped tail
+        let x = Tensor::randn(&[rows, k], &mut rng, 1.0);
+        let wt = Tensor::randn(&[k, n], &mut rng, 1.0);
+        for mode in [WeightQuant::F32, WeightQuant::Int8] {
+            let w = WeightMat::prepare(&wt, mode);
+            let mut scratch = Vec::new();
+            let mut full = vec![0.0f32; rows * n];
+            w.matmul_rows(&x.data, rows, 0, rows, &mut full, &mut scratch);
+            let npan = w.col_panels();
+            for shards in [1usize, 2, 3, 4] {
+                for lanes in [1usize, 2] {
+                    let mut got = vec![f32::NAN; rows * n];
+                    for g in 0..shards {
+                        let (cp0, cp1) = crate::parallel::splits(npan, shards)[g];
+                        let col0 = cp0 * NR;
+                        let ncols = (cp1 * NR).min(n).saturating_sub(col0);
+                        for l in 0..lanes {
+                            let (r0, r1) = crate::parallel::panel_splits(rows, MR, lanes)[l];
+                            let mut local = vec![0.0f32; (r1 - r0) * ncols];
+                            w.matmul_rows_cols(
+                                &x.data,
+                                rows,
+                                r0,
+                                r1,
+                                cp0,
+                                cp1,
+                                &mut local,
+                                &mut scratch,
+                            );
+                            for r in r0..r1 {
+                                got[r * n + col0..r * n + col0 + ncols].copy_from_slice(
+                                    &local[(r - r0) * ncols..(r - r0 + 1) * ncols],
+                                );
+                            }
+                        }
+                    }
+                    assert!(
+                        got.iter().zip(&full).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "2-D shard diverged at shards={shards} lanes={lanes} mode={}",
+                        mode.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_cols_empty_ranges_are_noops() {
+        let mut rng = Rng::new(5);
+        let (rows, k, n) = (4, 16, 32);
+        let x = Tensor::randn(&[rows, k], &mut rng, 1.0);
+        let wt = Tensor::randn(&[k, n], &mut rng, 1.0);
+        let w = WeightMat::prepare(&wt, WeightQuant::F32);
+        let mut scratch = Vec::new();
+        let mut empty: Vec<f32> = Vec::new();
+        // Empty column-panel range; unaligned row_lo is legal when empty.
+        w.matmul_rows_cols(&x.data, rows, 1, 1, 1, 1, &mut empty, &mut scratch);
+        w.matmul_rows_cols(&x.data, rows, 0, rows, 2, 2, &mut empty, &mut scratch);
+        assert!(empty.is_empty());
+    }
 
     #[test]
     fn blocked_matches_naive() {

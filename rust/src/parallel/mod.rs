@@ -284,6 +284,39 @@ impl<'a, T> KvCell<'a, T> {
     }
 }
 
+/// Fixed-order cross-shard reduction: sum per-segment partial vectors
+/// into `out` in **ascending segment index**, regardless of which shard
+/// produced which segment.
+///
+/// This is the deterministic combine tree of the sharded serving
+/// engine's staged inner-split (`P`) lowering: partial outputs are
+/// produced at a *fixed* K-segment granularity (chosen once, never a
+/// function of the shard count), each shard computes some subset of
+/// segments, and the combiner adds them in segment order. Because both
+/// the segment boundaries and the summation order are shard-count-
+/// independent, the reduced bits are identical at any `(threads ×
+/// shards)` — the property test below pins this. (The current engine's
+/// executable layouts — `B` and column-parallel `S(1)` — need no
+/// reduction at all; this primitive is what makes a future `P` layout
+/// admissible under the same bitwise contract.)
+///
+/// `parts` entries are `(segment_index, partial)`; every partial must
+/// be `out.len()` long. Duplicate segment indices are a caller bug
+/// (`debug_assert`) — each segment contributes exactly once.
+pub fn combine_fixed_order(out: &mut [f32], parts: &mut Vec<(usize, Vec<f32>)>) {
+    parts.sort_by_key(|(seg, _)| *seg);
+    debug_assert!(
+        parts.windows(2).all(|w| w[0].0 != w[1].0),
+        "duplicate segment in fixed-order combine"
+    );
+    for (_, partial) in parts.iter() {
+        assert_eq!(partial.len(), out.len(), "partial length mismatch");
+        for (o, p) in out.iter_mut().zip(partial) {
+            *o += p;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -436,5 +469,80 @@ mod tests {
             c.get_mut().push(3);
             assert_eq!(c.read().as_slice(), &[1, 2, 3]);
         }
+    }
+
+    #[test]
+    fn fixed_order_combine_is_bitwise_shard_count_independent() {
+        // Property (ISSUE 7 satellite): partials produced at a fixed
+        // segment granularity reduce to the same bits no matter how the
+        // segments were distributed across shards. Magnitudes are
+        // spread over ~2^40 so float addition is maximally
+        // non-associative — any order dependence would show.
+        let mut rng = crate::util::Rng::new(0xD157);
+        let width = 33usize;
+        let segments = 16usize;
+        let mut parts_master: Vec<(usize, Vec<f32>)> = (0..segments)
+            .map(|s| {
+                let scale = 2.0f32.powi((s as i32 % 8) * 5 - 20);
+                (s, (0..width).map(|_| (rng.below(2000) as f32 - 1000.0) * scale).collect())
+            })
+            .collect();
+        // Element 0 is a crafted cancellation: ascending order gives
+        // (1 + 1e8) + (-1e8) = 0.0 (the 1 is absorbed), any order that
+        // sums -1e8 + 1e8 first gives 1.0 — so the control below is
+        // guaranteed, not probabilistic.
+        for (s, p) in parts_master.iter_mut() {
+            p[0] = match *s {
+                0 => 1.0,
+                1 => 1e8,
+                2 => -1e8,
+                _ => 0.0,
+            };
+        }
+        let reduce = |shards: usize| -> Vec<u32> {
+            // Shard s owns segments `splits(segments, shards)[s]`; each
+            // shard hands its segments to the combiner independently
+            // (simulating per-group production order).
+            let mut parts: Vec<(usize, Vec<f32>)> = Vec::new();
+            for (lo, hi) in splits(segments, shards) {
+                // Reverse within the shard: arrival order must not
+                // matter, only the fixed segment order.
+                for s in (lo..hi).rev() {
+                    parts.push(parts_master[s].clone());
+                }
+            }
+            let mut out = vec![0.0f32; width];
+            combine_fixed_order(&mut out, &mut parts);
+            out.iter().map(|v| v.to_bits()).collect()
+        };
+        let base = reduce(1);
+        for shards in [2usize, 3, 4, 7, 16] {
+            assert_eq!(reduce(shards), base, "combine diverged at {shards} shards");
+        }
+        // Control: summing at *shard* granularity (a per-shard running
+        // sum, then shard-order combine) is the layout this primitive
+        // exists to avoid — verify the fixed-segment order actually
+        // differs from at least one such variable-granularity order,
+        // i.e. the test would catch a wrong implementation.
+        let per_shard = |shards: usize| -> Vec<u32> {
+            let mut out = vec![0.0f32; width];
+            for (lo, hi) in splits(segments, shards) {
+                let mut acc = vec![0.0f32; width];
+                for s in (lo..hi).rev() {
+                    for (a, p) in acc.iter_mut().zip(&parts_master[s].1) {
+                        *a += p;
+                    }
+                }
+                for (o, a) in out.iter_mut().zip(&acc) {
+                    *o += a;
+                }
+            }
+            out.iter().map(|v| v.to_bits()).collect()
+        };
+        assert_ne!(
+            per_shard(3),
+            base,
+            "control failed: pick inputs where order dependence is visible"
+        );
     }
 }

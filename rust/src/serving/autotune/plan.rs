@@ -56,6 +56,13 @@ pub struct ServePlan {
     /// Level-1 loop order of the winning `schedule::tile` tiling the
     /// panel granularity was derived from (Eq. 3 notation fragment).
     pub tiling: String,
+    /// Shard groups the plan serves under (1 = unsharded; set by
+    /// `ServeOptions::shards` at resolve time, not by the search).
+    pub shards: usize,
+    /// The dist-extracted per-matrix SBP signature the sharded run
+    /// executes (`ShardSpec::sig`; `"-"` when unsharded). Part of the
+    /// plan's identity: two runs under one hash served the same layout.
+    pub sbp_sig: String,
     /// Roofline-predicted seconds of one decode iteration under this
     /// plan (diagnostic; floors from `cost::decode_weight_stream_s`).
     pub predicted_decode_iter_s: f64,
@@ -75,7 +82,7 @@ impl ServePlan {
     /// `tools/bench_compare.py` keys on.
     pub fn plan_hash(&self) -> u64 {
         let s = format!(
-            "{}|{}|{}|b{}|bs{}|nb{}|t{}|c{}|tb{}|p{}|s{}|{}",
+            "{}|{}|{}|b{}|bs{}|nb{}|t{}|c{}|tb{}|p{}|s{}|{}|sh{}|{}",
             self.model,
             self.machine,
             self.weight_quant.name(),
@@ -88,6 +95,8 @@ impl ServePlan {
             self.panel_rows,
             self.swap_break_even_tokens.map_or(-1i64, |t| t as i64),
             self.tiling,
+            self.shards.max(1),
+            self.sbp_sig,
         );
         let mut h: u64 = 0xcbf29ce484222325;
         for b in s.bytes() {
@@ -103,8 +112,13 @@ impl ServePlan {
             Some(t) => format!("swap>={t}tok"),
             None => "swap=never".into(),
         };
+        let sharded = if self.shards > 1 {
+            format!(" shards={} sbp[{}]", self.shards, self.sbp_sig)
+        } else {
+            String::new()
+        };
         format!(
-            "{:#018x} threads={} chunk={} budget={} panel={}r pool={}x{} batch={} {} \
+            "{:#018x} threads={} chunk={} budget={} panel={}r pool={}x{} batch={}{} {} \
              pred(decode={:.3}ms prefill={:.3}ms)",
             self.plan_hash(),
             self.decode_threads,
@@ -114,6 +128,7 @@ impl ServePlan {
             self.num_blocks,
             self.block_size,
             self.max_batch,
+            sharded,
             swap,
             self.predicted_decode_iter_s * 1e3,
             self.predicted_prefill_iter_s * 1e3,
@@ -146,6 +161,9 @@ impl ServePlan {
         }
         if self.block_size == 0 || self.num_blocks == 0 {
             return Err("degenerate KV pool".into());
+        }
+        if self.shards == 0 {
+            return Err("shards must be >= 1 (1 = unsharded)".into());
         }
         Ok(())
     }
@@ -190,6 +208,8 @@ mod tests {
             panel_rows: MR,
             swap_break_even_tokens: Some(64),
             tiling: "i,j,k".into(),
+            shards: 1,
+            sbp_sig: "-".into(),
             predicted_decode_iter_s: 1e-3,
             predicted_prefill_iter_s: 2e-3,
             predicted_cost_s: 0.5,
@@ -206,6 +226,15 @@ mod tests {
         let mut c = a.clone();
         c.prefill_chunk = 1;
         assert_ne!(a.plan_hash(), c.plan_hash(), "knobs are identity");
+        // The shard layout is identity too: a sharded run under a
+        // different dist-chosen SBP signature must hash differently.
+        let mut d = a.clone();
+        d.shards = 2;
+        d.sbp_sig = "wq=S(1),lm_head=B".into();
+        assert_ne!(a.plan_hash(), d.plan_hash(), "shard layout is identity");
+        let mut e = d.clone();
+        e.sbp_sig = "wq=B,lm_head=B".into();
+        assert_ne!(d.plan_hash(), e.plan_hash(), "sbp signature is identity");
     }
 
     #[test]

@@ -244,6 +244,11 @@ pub fn search_plan(
                         panel_rows,
                         swap_break_even_tokens: swap_break_even_tokens(model, machine, t),
                         tiling: tiling.clone(),
+                        // Sharding is a serve-options decision, not a
+                        // search axis: ServeOptions::resolve stamps the
+                        // dist-extracted layout in before the run.
+                        shards: 1,
+                        sbp_sig: "-".into(),
                         predicted_decode_iter_s: decode_iter,
                         predicted_prefill_iter_s: prefill_iter,
                         predicted_cost_s: cost,

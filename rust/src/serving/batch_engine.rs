@@ -46,16 +46,36 @@
 //! single-threaded accumulation order, so outputs are token-identical
 //! to the dense FCFS oracle at **any** thread count
 //! (`rust/tests/serving.rs` pins the full chunk × thread matrix).
+//!
+//! **Sharding.** With a [`ShardSpec`] installed
+//! ([`BatchEngine::set_sharding`]), the run spawns `shards × threads`
+//! workers organized as `shards` cooperating groups of `threads` lanes
+//! — per-NUMA-node weight shards or replicas on real machines. Each
+//! projection GEMM executes under the layout the dist cost model chose
+//! for its matrix ([`crate::dist::ShardSpec::derive`]): `Replicated`
+//! (`B`) partitions token rows across *all* workers exactly like the
+//! unsharded engine; `ColumnShard` (Megatron column-parallel `S(1)`)
+//! gives each group a contiguous range of NR-column panels with rows
+//! split across the group's lanes. Either way every output element's
+//! full-K accumulation runs whole on one statically-known worker, and
+//! the cross-shard "combine" is a disjoint fixed-position writeback
+//! into the shared activation buffer — never a floating-point
+//! reduction — so sharded outputs are **bitwise identical** to the
+//! unsharded engine (hence to the FCFS oracle) at any
+//! `(threads × shards)`. A `shards = 1` spec reduces to the seed
+//! engine exactly: same worker count, same partitions, same barriers
+//! per GEMM phase.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::tiered::{ColdKv, KvQuant, TierOp};
 use crate::coordinator::argmax;
+use crate::dist::{MatShard, ShardSpec};
 use crate::model::{Qwen3Config, Qwen3Weights};
 use crate::ntt::{
     add_inplace, attn_context_paged_accum, attn_context_quant_i8, attn_row_causal_paged,
     attn_scores_paged, attn_scores_quant_i8, mul_inplace, paged_row, rmsnorm, rope_inplace,
-    silu_inplace, softmax_inplace, Tensor, WeightMat, MR,
+    silu_inplace, softmax_inplace, Tensor, WeightMat, MR, NR,
 };
 use crate::parallel::{
     panel_splits, splits, KvCell, PoisonGuard, SharedCell, SharedVec, SpinBarrier,
@@ -188,6 +208,91 @@ impl StepState {
 const CMD_STEP: usize = 0;
 const CMD_EXIT: usize = 1;
 
+/// One worker's coordinates in the run's `shards × lanes` topology,
+/// plus the GEMM dispatch that executes a projection under the layout
+/// the dist cost model chose for its matrix. All fields derive
+/// statically from `(wi, lanes, shards)`, fixed for the whole run, so
+/// every partition below is deterministic.
+struct ShardCtx {
+    /// Total workers in the run (`lanes * shards`).
+    t: usize,
+    /// Lanes per shard group (the run's `threads` after the clamp).
+    lanes: usize,
+    /// Shard group count.
+    shards: usize,
+    /// This worker's global index (`group * lanes + lane`).
+    wi: usize,
+    /// `wi / lanes`: which shard group this worker belongs to.
+    group: usize,
+    /// `wi % lanes`: which lane within the group.
+    lane: usize,
+    /// GEMM row-panel granularity (multiple of [`MR`]).
+    panel: usize,
+}
+
+impl ShardCtx {
+    /// Execute this worker's share of one `[n, width]` projection GEMM
+    /// under `layout`, writing a disjoint region of `out`.
+    ///
+    /// `Replicated` (`B`): the matrix is whole in every group — token
+    /// rows shard as MR panels across **all** `t` workers at full
+    /// output width, exactly the unsharded engine's partition.
+    ///
+    /// `ColumnShard` (`S(1)`): this worker's group owns a contiguous
+    /// range of NR-column panels, and token rows shard across the
+    /// group's `lanes`. The kernel produces a compact `[rows, ncols]`
+    /// block in `colbuf`, which is then copied row-by-row into its
+    /// fixed position in the shared full-width buffer. That placement
+    /// **is** the deterministic cross-shard combine: every output
+    /// element was accumulated whole (full K, ascending) by exactly
+    /// one statically-known worker, and assembling the row is
+    /// disjoint writes, never a floating-point reduction — so the
+    /// result is bitwise independent of `(lanes, shards)`.
+    ///
+    /// # Safety
+    /// Caller must be inside a barrier-separated phase in which no
+    /// other worker touches this worker's `out` region (the
+    /// [`SharedVec`] contract); the partitions above guarantee
+    /// disjointness across workers.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn gemm(
+        &self,
+        wmat: &WeightMat,
+        layout: MatShard,
+        src: &[f32],
+        n: usize,
+        out: &SharedVec,
+        width: usize,
+        scratch: &mut Vec<f32>,
+        colbuf: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(width, wmat.n(), "output width must match the matrix");
+        match layout {
+            MatShard::Replicated => {
+                let (p0, p1) = panel_splits(n, self.panel, self.t)[self.wi];
+                let os = unsafe { out.slice_mut(p0 * width, p1 * width) };
+                wmat.matmul_rows(src, n, p0, p1, os, scratch);
+            }
+            MatShard::ColumnShard => {
+                let (p0, p1) = panel_splits(n, self.panel, self.lanes)[self.lane];
+                let (cp0, cp1) = splits(wmat.col_panels(), self.shards)[self.group];
+                let col0 = cp0 * NR;
+                let ncols = (cp1 * NR).min(width).saturating_sub(col0);
+                let rows = p1 - p0;
+                if rows == 0 || ncols == 0 {
+                    return;
+                }
+                colbuf.resize(rows * ncols, 0.0);
+                wmat.matmul_rows_cols(src, n, p0, p1, cp0, cp1, colbuf, scratch);
+                for (i, r) in (p0..p1).enumerate() {
+                    unsafe { out.slice_mut(r * width + col0, r * width + col0 + ncols) }
+                        .copy_from_slice(&colbuf[i * ncols..(i + 1) * ncols]);
+                }
+            }
+        }
+    }
+}
+
 /// One barrier-separated SPMD step, executed by all `t` participants
 /// (the controller as worker 0, plus the parked workers released into
 /// it). Per-row phases shard token rows with `splits`; GEMM phases
@@ -204,7 +309,9 @@ const CMD_EXIT: usize = 1;
 fn spmd_step(
     wi: usize,
     t: usize,
+    lanes: usize,
     panel: usize,
+    sharding: &ShardSpec,
     weights: &Qwen3Weights,
     packed: &[PackedLayer],
     packed_lm_head: &WeightMat,
@@ -213,6 +320,7 @@ fn spmd_step(
     st: &StepState,
     barrier: &SpinBarrier,
     scratch: &mut Vec<f32>,
+    colbuf: &mut Vec<f32>,
 ) {
     // SAFETY: the controller wrote this step's slots + row map before
     // releasing the workers through the barrier, and rewrites them only
@@ -232,9 +340,26 @@ fn spmd_step(
     let group = heads / kvh;
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
     let bs = kv_cell.read().block_size;
-    // This worker's static shards (token rows / panel-rows of rows).
+    // This worker's static shards (token rows / panel-rows of rows)
+    // and its coordinates in the `shards × lanes` GEMM topology.
     let (r0, r1) = splits(n, t)[wi];
     let (p0, p1) = panel_splits(n, panel, t)[wi];
+    let shard = ShardCtx {
+        t,
+        lanes,
+        shards: sharding.shards,
+        wi,
+        group: wi / lanes,
+        lane: wi % lanes,
+        panel,
+    };
+    // With both SwiGLU matrices replicated (always true unsharded),
+    // each worker can run the elementwise tail fused on the rows it
+    // just produced; column-sharded gate/up need the assembled
+    // full-width rows published first. Elementwise either way, so the
+    // choice is bitwise-neutral.
+    let fused_mlp =
+        sharding.w_gate == MatShard::Replicated && sharding.w_up == MatShard::Replicated;
 
     // Phase 0: embedding gather, per-row shard.
     for r in r0..r1 {
@@ -260,18 +385,15 @@ fn spmd_step(
             }
         }
         barrier.wait();
-        // Phase 2: batched QKV projections, MR-panel shard over ALL
-        // token rows — with chunked prefill this is a genuinely tall
-        // GEMM (M = total step tokens), each worker streaming the
-        // packed weights once for its row panels.
+        // Phase 2: batched QKV projections under each matrix's
+        // dist-chosen layout — with chunked prefill these are genuinely
+        // tall GEMMs (M = total step tokens), each worker streaming its
+        // weight share once for its row panels.
         unsafe {
             let xn = &st.xn.read()[..n * h];
-            let qs = st.q.slice_mut(p0 * qdim, p1 * qdim);
-            pw.wq.matmul_rows(xn, n, p0, p1, qs, scratch);
-            let ks = st.kvec.slice_mut(p0 * kvdim, p1 * kvdim);
-            pw.wk.matmul_rows(xn, n, p0, p1, ks, scratch);
-            let vs = st.vvec.slice_mut(p0 * kvdim, p1 * kvdim);
-            pw.wv.matmul_rows(xn, n, p0, p1, vs, scratch);
+            shard.gemm(&pw.wq, sharding.wq, xn, n, &st.q, qdim, scratch, colbuf);
+            shard.gemm(&pw.wk, sharding.wk, xn, n, &st.kvec, kvdim, scratch, colbuf);
+            shard.gemm(&pw.wv, sharding.wv, xn, n, &st.vvec, kvdim, scratch, colbuf);
         }
         barrier.wait();
         // Phase 3: RoPE, per-row shard (positions differ per row).
@@ -408,11 +530,10 @@ fn spmd_step(
             }
         }
         barrier.wait();
-        // Phase 6: output projection, MR-panel shard.
+        // Phase 6: output projection under its dist-chosen layout.
         unsafe {
             let ctx = &st.ctx.read()[..n * qdim];
-            let os = st.attn.slice_mut(p0 * h, p1 * h);
-            pw.wo.matmul_rows(ctx, n, p0, p1, os, scratch);
+            shard.gemm(&pw.wo, sharding.wo, ctx, n, &st.attn, h, scratch, colbuf);
         }
         barrier.wait();
         // Phase 7: residual + MLP RMSNorm, per-row shard.
@@ -431,24 +552,36 @@ fn spmd_step(
             }
         }
         barrier.wait();
-        // Phase 8: SwiGLU gate/up, MR-panel shard (the elementwise tail
-        // runs on the same rows this worker just computed).
+        // Phase 8: SwiGLU gate/up under their dist-chosen layouts. With
+        // both replicated (the seed path) the elementwise tail runs
+        // fused on the rows this worker just computed; column-sharded
+        // gate/up publish the assembled full-width rows through an
+        // extra barrier first, then the tail shards per token row.
         unsafe {
             let xn = &st.xn.read()[..n * h];
-            let gs = st.gate.slice_mut(p0 * inter, p1 * inter);
-            pw.w_gate.matmul_rows(xn, n, p0, p1, gs, scratch);
-            let us = st.up.slice_mut(p0 * inter, p1 * inter);
-            pw.w_up.matmul_rows(xn, n, p0, p1, us, scratch);
-            let g = st.gate.slice_mut(p0 * inter, p1 * inter);
-            silu_inplace(g);
-            mul_inplace(g, &st.up.read()[p0 * inter..p1 * inter]);
+            shard.gemm(&pw.w_gate, sharding.w_gate, xn, n, &st.gate, inter, scratch, colbuf);
+            shard.gemm(&pw.w_up, sharding.w_up, xn, n, &st.up, inter, scratch, colbuf);
+            if fused_mlp {
+                let g = st.gate.slice_mut(p0 * inter, p1 * inter);
+                silu_inplace(g);
+                mul_inplace(g, &st.up.read()[p0 * inter..p1 * inter]);
+            }
+        }
+        if !fused_mlp {
+            barrier.wait();
+            for r in r0..r1 {
+                unsafe {
+                    let g = st.gate.slice_mut(r * inter, (r + 1) * inter);
+                    silu_inplace(g);
+                    mul_inplace(g, &st.up.read()[r * inter..(r + 1) * inter]);
+                }
+            }
         }
         barrier.wait();
-        // Phase 9: down projection, MR-panel shard.
+        // Phase 9: down projection under its dist-chosen layout.
         unsafe {
             let gate = &st.gate.read()[..n * inter];
-            let ds = st.down.slice_mut(p0 * h, p1 * h);
-            pw.w_down.matmul_rows(gate, n, p0, p1, ds, scratch);
+            shard.gemm(&pw.w_down, sharding.w_down, gate, n, &st.down, h, scratch, colbuf);
         }
         barrier.wait();
         // Phase 10: residual, per-row shard.
@@ -476,8 +609,7 @@ fn spmd_step(
     barrier.wait();
     unsafe {
         let xn = &st.xn.read()[..n * h];
-        let ls = st.logits.slice_mut(p0 * vocab, p1 * vocab);
-        packed_lm_head.matmul_rows(xn, n, p0, p1, ls, scratch);
+        shard.gemm(packed_lm_head, sharding.lm_head, xn, n, &st.logits, vocab, scratch, colbuf);
     }
     // Final barrier: publishes every logits shard to the controller and
     // parks the workers for the next step.
@@ -497,6 +629,10 @@ pub struct BatchEngine<'w> {
     /// [`BatchEngine::set_panel_rows`] — performance only, outputs are
     /// bitwise identical at any value.
     panel_rows: usize,
+    /// The dist-chosen per-matrix shard layout
+    /// ([`BatchEngine::set_sharding`]; default [`ShardSpec::single`],
+    /// the unsharded seed engine).
+    sharding: ShardSpec,
 }
 
 /// Controller handle of a live SPMD serve run (see [`BatchEngine::run`]):
@@ -511,15 +647,25 @@ pub struct BatchStepper<'a, 'kv> {
     st: &'a StepState,
     barrier: &'a SpinBarrier,
     threads: usize,
+    workers: usize,
+    sharding: ShardSpec,
     panel: usize,
     max_rows: usize,
     scratch: Vec<f32>,
+    colbuf: Vec<f32>,
 }
 
 impl BatchStepper<'_, '_> {
-    /// Effective worker count of this run (after the row-capacity clamp).
+    /// Lanes per shard group (the run's `threads` after the
+    /// row-capacity clamp). Equals [`BatchStepper::workers`] when the
+    /// run is unsharded.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Total workers of this run (`threads × shards`).
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     /// Execute the scheduler's tier ops for this iteration: all spills,
@@ -614,8 +760,10 @@ impl BatchStepper<'_, '_> {
         self.barrier.wait();
         spmd_step(
             0,
+            self.workers,
             self.threads,
             self.panel,
+            &self.sharding,
             self.weights,
             self.packed,
             self.packed_lm_head,
@@ -624,6 +772,7 @@ impl BatchStepper<'_, '_> {
             self.st,
             self.barrier,
             &mut self.scratch,
+            &mut self.colbuf,
         );
         let vocab = self.weights.cfg.vocab;
         let logits = self.st.logits.read();
@@ -667,6 +816,7 @@ impl<'w> BatchEngine<'w> {
             kv,
             cold: None,
             panel_rows: MR,
+            sharding: ShardSpec::single(),
         }
     }
 
@@ -683,6 +833,22 @@ impl<'w> BatchEngine<'w> {
     /// Current GEMM shard granularity in token rows.
     pub fn panel_rows(&self) -> usize {
         self.panel_rows
+    }
+
+    /// Install the dist-extracted shard layout for subsequent runs
+    /// ([`ShardSpec::derive`]); [`ShardSpec::single`] restores the
+    /// unsharded seed engine. Call before [`BatchEngine::run`] — the
+    /// run then spawns `shards × threads` workers, with each
+    /// projection GEMM executing under its matrix's chosen layout.
+    /// Layout only: outputs stay bitwise identical to the unsharded
+    /// engine under any spec.
+    pub fn set_sharding(&mut self, sharding: ShardSpec) {
+        self.sharding = sharding;
+    }
+
+    /// The installed shard layout.
+    pub fn sharding(&self) -> &ShardSpec {
+        &self.sharding
     }
 
     /// Stored bytes of the packed/quantized weight plane (all layers +
@@ -718,16 +884,19 @@ impl<'w> BatchEngine<'w> {
         ));
     }
 
-    /// Open one SPMD serve run: spawn `threads - 1` persistent workers
-    /// (one `thread::scope` for the whole run, not per step), hand the
-    /// driver a [`BatchStepper`], and shut the workers down when it
-    /// returns. `max_rows` is the step capacity in **token rows** (the
-    /// scheduler's per-iteration token budget — equal to `max_batch`
-    /// when `prefill_chunk` is 1); every buffer is sized to it and
-    /// `threads` is clamped to `[1, max_rows]` — workers own token
+    /// Open one SPMD serve run: spawn `shards × threads - 1` persistent
+    /// workers (one `thread::scope` for the whole run, not per step),
+    /// hand the driver a [`BatchStepper`], and shut the workers down
+    /// when it returns. `max_rows` is the step capacity in **token
+    /// rows** (the scheduler's per-iteration token budget — equal to
+    /// `max_batch` when `prefill_chunk` is 1); every buffer is sized to
+    /// it and `threads` is clamped to `[1, max_rows]` — lanes own token
     /// rows, so counts beyond the row capacity would only produce empty
     /// shards (the same guard `Qwen3Engine::new` applies at the model's
-    /// partition width).
+    /// partition width). Under a sharded [`ShardSpec`] the clamped
+    /// `threads` becomes the lane count of each of `shards` worker
+    /// groups (see the module docs); with the default single-group spec
+    /// this is exactly the seed topology.
     pub fn run<R>(
         &mut self,
         threads: usize,
@@ -735,7 +904,10 @@ impl<'w> BatchEngine<'w> {
         driver: impl FnOnce(&mut BatchStepper<'_, '_>) -> R,
     ) -> R {
         let max_rows = max_rows.max(1);
-        let t = threads.clamp(1, max_rows);
+        let lanes = threads.clamp(1, max_rows);
+        let mut sharding = self.sharding;
+        sharding.shards = sharding.shards.max(1);
+        let t = lanes * sharding.shards;
         let panel = self.panel_rows.max(MR);
         let st = StepState::new(&self.weights.cfg, max_rows);
         let barrier = SpinBarrier::new(t);
@@ -755,6 +927,7 @@ impl<'w> BatchEngine<'w> {
                     // of spinning forever (see SpinBarrier).
                     let _poison = PoisonGuard::new(barrier);
                     let mut scratch = Vec::new();
+                    let mut colbuf = Vec::new();
                     loop {
                         // Park until the controller publishes the next
                         // step (or shutdown).
@@ -765,7 +938,9 @@ impl<'w> BatchEngine<'w> {
                         spmd_step(
                             wi,
                             t,
+                            lanes,
                             panel,
+                            &sharding,
                             weights,
                             packed,
                             packed_lm_head,
@@ -774,6 +949,7 @@ impl<'w> BatchEngine<'w> {
                             st,
                             barrier,
                             &mut scratch,
+                            &mut colbuf,
                         );
                     }
                 });
@@ -786,10 +962,13 @@ impl<'w> BatchEngine<'w> {
                 cold_cell: cold_cell.as_ref(),
                 st: &st,
                 barrier: &barrier,
-                threads: t,
+                threads: lanes,
+                workers: t,
+                sharding,
                 panel,
                 max_rows,
                 scratch: Vec::new(),
+                colbuf: Vec::new(),
             };
             // Workers stay parked between steps; if the driver unwinds
             // (scheduler panics, test assertions, a panic inside the
@@ -1022,6 +1201,115 @@ mod tests {
         for t in [2usize, 4, 6] {
             let got = run_with(&w2, t);
             assert_eq!(want, got, "thread count {t} changed batched logits");
+        }
+    }
+
+    #[test]
+    fn dist_sharded_run_is_bit_identical_to_unsharded() {
+        // The sharding tentpole contract: executing under a
+        // dist-EXTRACTED ShardSpec — shards × lanes workers,
+        // column-parallel GEMMs wherever the cost model chose S(1) —
+        // must reproduce the unsharded engine bit for bit at every
+        // (threads × shards), chunked prefill spans included.
+        let cfg = Qwen3Config::tiny();
+        let machine = crate::cost::MachineSpec::test_numa();
+        let w_base = Qwen3Weights::random(&cfg, 4242);
+        let w_shard = Qwen3Weights::random(&cfg, 4242);
+        let prompt = [7usize, 300, 5, 42, 9, 1000, 77, 13];
+        let table: Vec<u32> = vec![5, 1, 3];
+        let chunk = 3usize;
+        let run_with = |w: &Qwen3Weights, threads: usize, spec: ShardSpec| -> Vec<Vec<f32>> {
+            let mut be = BatchEngine::new(w, 8, 4);
+            be.set_sharding(spec);
+            be.run(threads, chunk, |stepper| {
+                assert_eq!(
+                    stepper.workers(),
+                    stepper.threads() * spec.shards,
+                    "a run must spawn shards x lanes workers"
+                );
+                prompt
+                    .chunks(chunk)
+                    .scan(0usize, |pos, span| {
+                        let p = *pos;
+                        *pos += span.len();
+                        Some(
+                            stepper
+                                .step_logits(&[StepSlot::hot(span, p, &table, true)], true)
+                                .1,
+                        )
+                    })
+                    .collect()
+            })
+        };
+        let want = run_with(&w_base, 1, ShardSpec::single());
+        for shards in [2usize, 4] {
+            let spec = ShardSpec::derive(&cfg, &machine, shards);
+            assert!(
+                spec.matrices().iter().any(|(_, m)| *m == MatShard::ColumnShard),
+                "dist must shard something at {shards} groups: {}",
+                spec.sig()
+            );
+            for threads in [1usize, 2, 3] {
+                let got = run_with(&w_shard, threads, spec);
+                let same = want
+                    .iter()
+                    .flatten()
+                    .map(|f| f.to_bits())
+                    .eq(got.iter().flatten().map(|f| f.to_bits()));
+                assert!(
+                    same,
+                    "shards={shards} threads={threads} diverged from the unsharded engine"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn column_sharded_quantized_run_matches_seed_bitwise() {
+        // Force EVERY projection onto the column-parallel path —
+        // including an uneven NR-panel split at shards = 3 — in both
+        // f32 and group-quantized weight modes: the compact-block
+        // writeback must leave each output element's full-K ascending
+        // accumulation untouched.
+        use crate::ntt::WeightQuant;
+        let all_cols = |shards: usize| ShardSpec {
+            shards,
+            wq: MatShard::ColumnShard,
+            wk: MatShard::ColumnShard,
+            wv: MatShard::ColumnShard,
+            wo: MatShard::ColumnShard,
+            w_gate: MatShard::ColumnShard,
+            w_up: MatShard::ColumnShard,
+            w_down: MatShard::ColumnShard,
+            lm_head: MatShard::ColumnShard,
+        };
+        for mode in [WeightQuant::F32, WeightQuant::Int8] {
+            let cfg = Qwen3Config::tiny().with_weight_quant(mode);
+            let w_base = Qwen3Weights::random(&cfg, 77);
+            let w_shard = Qwen3Weights::random(&cfg, 77);
+            let tokens = [3usize, 90, 512, 44, 17, 256];
+            let table: Vec<u32> = vec![4, 2];
+            let run_with = |w: &Qwen3Weights, threads: usize, spec: ShardSpec| -> Vec<f32> {
+                let mut be = BatchEngine::new(w, 8, 4);
+                be.set_sharding(spec);
+                be.run(threads, 2, |stepper| {
+                    let mut out = Vec::new();
+                    for (pos, tok) in tokens.iter().enumerate() {
+                        let slot = StepSlot::hot(std::slice::from_ref(tok), pos, &table, true);
+                        out.extend(stepper.step_logits(&[slot], true).1);
+                    }
+                    out
+                })
+            };
+            let want = run_with(&w_base, 1, ShardSpec::single());
+            for shards in [2usize, 3] {
+                for threads in [1usize, 2] {
+                    let got = run_with(&w_shard, threads, all_cols(shards));
+                    assert_eq!(want.len(), got.len());
+                    let same = want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "mode {mode:?} shards={shards} threads={threads} diverged");
+                }
+            }
         }
     }
 

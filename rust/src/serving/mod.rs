@@ -32,7 +32,7 @@
 //!   the scheduler-side cold-slot control plane. Swap-based preemption
 //!   moves KV across the tier boundary instead of recomputing it.
 //!
-//! Selected via [`crate::coordinator::ServePolicy`]; outputs are
+//! Selected via [`crate::coordinator::ServeOptions`]; outputs are
 //! token-identical to the FCFS oracle (`rust/tests/serving.rs`) whenever
 //! tiering is off or the cold tier is lossless.
 
@@ -47,5 +47,7 @@ pub use autotune::ServePlan;
 pub use batch_engine::{BatchEngine, BatchStepper, PagedKv, StepSlot};
 pub use blocks::{BlockPool, BlockTable, KvBlockManager};
 pub use metrics::ServingMetrics;
-pub use scheduler::{ContinuousConfig, ContinuousScheduler, SeqState, Sequence};
+pub use scheduler::{
+    ContinuousConfig, ContinuousConfigBuilder, ContinuousScheduler, SeqState, Sequence,
+};
 pub use tiered::{ColdKv, KvQuant, SwapPolicy, TierConfig, TierCostModel, TierOp, TierState};

@@ -160,6 +160,11 @@ pub struct ContinuousConfig {
     /// into [`crate::serving::BatchEngine::set_panel_rows`]. Recorded
     /// in `ServeReport::plan`.
     pub plan: Option<crate::serving::autotune::ServePlan>,
+    /// Shard the engine across cooperating worker groups under a
+    /// dist-extracted per-matrix layout ([`crate::dist::ShardSpec`]).
+    /// `None` = the unsharded seed engine. Layout only — outputs stay
+    /// token-identical to the FCFS oracle under any spec.
+    pub sharding: Option<crate::dist::ShardSpec>,
 }
 
 impl Default for ContinuousConfig {
@@ -173,11 +178,132 @@ impl Default for ContinuousConfig {
             step_token_budget: 0,
             tiering: None,
             plan: None,
+            sharding: None,
         }
     }
 }
 
+/// Builder for [`ContinuousConfig`] whose [`build`] validates the knob
+/// set — the one place serving-config invariants are cross-checked
+/// instead of at 30+ literal construction sites. Fields stay public on
+/// the config itself (a hand-rolled literal still works); the builder
+/// is the recommended front door.
+///
+/// [`build`]: ContinuousConfigBuilder::build
+#[derive(Debug, Clone, Default)]
+pub struct ContinuousConfigBuilder {
+    cfg: ContinuousConfig,
+}
+
+impl ContinuousConfigBuilder {
+    pub fn block_size(mut self, block_size: usize) -> Self {
+        self.cfg.block_size = block_size;
+        self
+    }
+
+    pub fn num_blocks(mut self, num_blocks: usize) -> Self {
+        self.cfg.num_blocks = num_blocks;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.cfg.max_batch = max_batch;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    pub fn prefill_chunk(mut self, prefill_chunk: usize) -> Self {
+        self.cfg.prefill_chunk = prefill_chunk;
+        self
+    }
+
+    pub fn step_token_budget(mut self, step_token_budget: usize) -> Self {
+        self.cfg.step_token_budget = step_token_budget;
+        self
+    }
+
+    pub fn tiering(mut self, tiering: TierConfig) -> Self {
+        self.cfg.tiering = Some(tiering);
+        self
+    }
+
+    pub fn plan(mut self, plan: crate::serving::autotune::ServePlan) -> Self {
+        self.cfg.plan = Some(plan);
+        self
+    }
+
+    pub fn sharding(mut self, sharding: crate::dist::ShardSpec) -> Self {
+        self.cfg.sharding = Some(sharding);
+        self
+    }
+
+    /// Validate and return the config; `Err` names the violated rule.
+    pub fn try_build(self) -> Result<ContinuousConfig, String> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+
+    /// Validate and return the config, panicking on an invalid knob set
+    /// (configs are built at serve setup, where misconfiguration should
+    /// fail loudly, not steps later as a scheduler stall).
+    pub fn build(self) -> ContinuousConfig {
+        self.try_build().unwrap_or_else(|e| panic!("invalid ContinuousConfig: {e}"))
+    }
+}
+
 impl ContinuousConfig {
+    /// Start building a validated config from the defaults.
+    pub fn builder() -> ContinuousConfigBuilder {
+        ContinuousConfigBuilder::default()
+    }
+
+    /// Re-open an existing config (e.g. [`ContinuousConfig::autotuned`])
+    /// as a builder to override knobs with validation on `build()`.
+    pub fn to_builder(&self) -> ContinuousConfigBuilder {
+        ContinuousConfigBuilder { cfg: self.clone() }
+    }
+
+    /// Check the knob invariants the scheduler and engine rely on;
+    /// `Err` names the first violated rule. [`ContinuousConfigBuilder`]
+    /// calls this on every `build()`; hand-rolled literals can call it
+    /// directly.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.block_size == 0 {
+            return Err("block_size must be > 0 (token positions per KV block)".into());
+        }
+        if self.max_batch == 0 {
+            return Err("max_batch must be > 0 (sequences per iteration)".into());
+        }
+        if self.num_blocks < self.max_batch {
+            return Err(format!(
+                "num_blocks ({}) must be >= max_batch ({}): every running sequence \
+                 needs at least one KV block or admission can never fill the batch",
+                self.num_blocks, self.max_batch
+            ));
+        }
+        if self.step_token_budget != 0 {
+            let need = self.max_batch.max(self.chunk());
+            if self.step_token_budget < need {
+                return Err(format!(
+                    "step_token_budget ({}) must be 0 (auto) or >= \
+                     max(max_batch, prefill_chunk) = {}: a smaller budget could \
+                     neither advance every running sequence nor fit one full chunk",
+                    self.step_token_budget, need
+                ));
+            }
+        }
+        if let Some(s) = &self.sharding {
+            if s.shards == 0 {
+                return Err("sharding.shards must be >= 1 (1 = unsharded)".into());
+            }
+        }
+        Ok(())
+    }
+
     /// Effective prefill chunk (0 is hardened to 1 so no plan can emit
     /// a zero-token span).
     pub fn chunk(&self) -> usize {
@@ -224,6 +350,7 @@ impl ContinuousConfig {
             step_token_budget: 0,
             tiering: None,
             plan: None,
+            sharding: None,
         }
     }
 
@@ -248,6 +375,7 @@ impl ContinuousConfig {
             step_token_budget: plan.step_token_budget,
             tiering: None,
             plan: Some(plan),
+            sharding: None,
         }
     }
 }
@@ -919,14 +1047,12 @@ mod tests {
     }
 
     fn flat_config(block_size: usize, num_blocks: usize, max_batch: usize) -> ContinuousConfig {
-        ContinuousConfig {
-            block_size,
-            num_blocks,
-            max_batch,
-            threads: 1,
-            tiering: None,
-            ..ContinuousConfig::default()
-        }
+        ContinuousConfig::builder()
+            .block_size(block_size)
+            .num_blocks(num_blocks)
+            .max_batch(max_batch)
+            .threads(1)
+            .build()
     }
 
     #[test]
@@ -1025,9 +1151,13 @@ mod tests {
         // unreachable through `submit` alone, so the sequence is placed
         // directly (the branch still matters: generated-token growth in
         // multi-sequence runs drains the pool behind the reservation).
+        // Deliberately below the builder's `num_blocks >= max_batch`
+        // invariant (a 1-block pool): fields stay public exactly so
+        // white-box tests can construct states admission would refuse.
         let mut s = ContinuousScheduler::new(ContinuousConfig {
             prefill_chunk: 8,
-            ..flat_config(4, 1, 2)
+            num_blocks: 1,
+            ..flat_config(4, 2, 2)
         });
         s.iter = 1;
         s.running.push(Sequence {
@@ -1095,14 +1225,13 @@ mod tests {
     }
 
     fn tiered_config(num_blocks: usize, cold_blocks: usize) -> ContinuousConfig {
-        ContinuousConfig {
-            block_size: 4,
-            num_blocks,
-            max_batch: 2,
-            threads: 1,
-            tiering: Some(TierConfig::new(cold_blocks)),
-            ..ContinuousConfig::default()
-        }
+        ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(num_blocks)
+            .max_batch(2)
+            .threads(1)
+            .tiering(TierConfig::new(cold_blocks))
+            .build()
     }
 
     /// Drive the scheduler without an engine: every scheduled slot

@@ -7,12 +7,14 @@
 //! counts returned by [`thread_counts`] — `{1, 2, 4}` by default, or the
 //! single count pinned by the `PALLAS_TEST_THREADS` env var (the CI
 //! matrix runs the suite once per count, so the determinism guarantee is
-//! enforced on every push at every matrix point).
+//! enforced on every push at every matrix point). Shard counts follow
+//! the same shape via [`shard_counts`] / `PALLAS_TEST_SHARDS`.
 
 use nncase_repro::coordinator::{
-    argmax, synthetic_workload, Coordinator, Qwen3Engine, Request, ServePolicy, ServeReport,
+    argmax, synthetic_workload, Coordinator, Qwen3Engine, Request, ServeOptions, ServeReport,
 };
 use nncase_repro::cost::MachineSpec;
+use nncase_repro::dist::ShardSpec;
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
 use nncase_repro::ntt::WeightQuant;
 use nncase_repro::serving::{BatchEngine, ContinuousConfig, KvQuant, StepSlot, TierConfig};
@@ -39,15 +41,30 @@ fn thread_counts() -> Vec<usize> {
     }
 }
 
+/// Shard-group counts under test: `PALLAS_TEST_SHARDS` pins a single
+/// count (the CI matrix), default is the {1, 2, 4} sweep.
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("PALLAS_TEST_SHARDS") {
+        Ok(v) => {
+            let s: usize = v
+                .trim()
+                .parse()
+                .expect("PALLAS_TEST_SHARDS must be a positive integer");
+            assert!(s >= 1, "PALLAS_TEST_SHARDS must be >= 1");
+            vec![s]
+        }
+        Err(_) => vec![1, 2, 4],
+    }
+}
+
 fn serve_continuous(
     seed: u64,
     reqs: &[Request],
-    mut cfg: ContinuousConfig,
+    cfg: ContinuousConfig,
     threads: usize,
 ) -> ServeReport {
     let (_, mut c) = coordinator(seed, 1);
-    cfg.threads = threads;
-    c.serve_with_policy(reqs, ServePolicy::Continuous(cfg))
+    c.serve(reqs, &ServeOptions::continuous(cfg).threads(threads))
 }
 
 /// Continuous batching produces byte-identical output token ids to the
@@ -56,18 +73,12 @@ fn serve_continuous(
 fn continuous_matches_fcfs_oracle() {
     let (cfg, mut oracle) = coordinator(11, 1);
     let reqs = synthetic_workload(6, 5, 8, cfg.vocab);
-    let want = oracle.serve(&reqs);
+    let want = oracle.serve(&reqs, &ServeOptions::fcfs());
     for threads in thread_counts() {
         let got = serve_continuous(
             11,
             &reqs,
-            ContinuousConfig {
-                block_size: 4,
-                num_blocks: 64,
-                max_batch: 4,
-                threads: 1,
-                ..ContinuousConfig::default()
-            },
+            ContinuousConfig::builder().block_size(4).num_blocks(64).max_batch(4).build(),
             threads,
         );
         assert_eq!(
@@ -105,7 +116,7 @@ fn thread_count_never_changes_tokens() {
 fn continuous_matches_multithreaded_oracle() {
     let (cfg, mut oracle) = coordinator(12, 4);
     let reqs = synthetic_workload(3, 6, 6, cfg.vocab);
-    let want = oracle.serve(&reqs);
+    let want = oracle.serve(&reqs, &ServeOptions::fcfs());
     for threads in thread_counts() {
         let got = serve_continuous(12, &reqs, ContinuousConfig::default(), threads);
         assert_eq!(want.outputs, got.outputs);
@@ -123,18 +134,12 @@ fn preemption_is_invisible_in_outputs() {
     // (4 prompt + 12 generated tokens, block_size 4); a 5-block pool
     // cannot host both, so the later one is preempted mid-flight.
     let reqs = synthetic_workload(2, 4, 12, cfg.vocab);
-    let want = oracle.serve(&reqs);
+    let want = oracle.serve(&reqs, &ServeOptions::fcfs());
     for threads in thread_counts() {
         let got = serve_continuous(
             13,
             &reqs,
-            ContinuousConfig {
-                block_size: 4,
-                num_blocks: 5,
-                max_batch: 2,
-                threads: 1,
-                ..ContinuousConfig::default()
-            },
+            ContinuousConfig::builder().block_size(4).num_blocks(5).max_batch(2).build(),
             threads,
         );
         assert_eq!(
@@ -178,13 +183,11 @@ fn prefix_sharing_reduces_block_pressure() {
         serve_continuous(
             14,
             reqs,
-            ContinuousConfig {
-                block_size,
-                num_blocks: 32,
-                max_batch: 1,
-                threads: 1,
-                ..ContinuousConfig::default()
-            },
+            ContinuousConfig::builder()
+                .block_size(block_size)
+                .num_blocks(32)
+                .max_batch(1)
+                .build(),
             1,
         )
     };
@@ -201,7 +204,7 @@ fn prefix_sharing_reduces_block_pressure() {
 
     // And sharing does not change the tokens: FCFS oracle agreement.
     let (_, mut oracle) = coordinator(14, 1);
-    let want = oracle.serve(&shared_reqs);
+    let want = oracle.serve(&shared_reqs, &ServeOptions::fcfs());
     assert_eq!(want.outputs, shared.outputs);
 }
 
@@ -213,18 +216,12 @@ fn prefix_sharing_reduces_block_pressure() {
 fn tiering_disabled_is_bitwise_identical_under_pressure() {
     let (cfg, mut oracle) = coordinator(21, 1);
     let reqs = synthetic_workload(3, 4, 12, cfg.vocab);
-    let want = oracle.serve(&reqs);
+    let want = oracle.serve(&reqs, &ServeOptions::fcfs());
     for threads in thread_counts() {
         let got = serve_continuous(
             21,
             &reqs,
-            ContinuousConfig {
-                block_size: 4,
-                num_blocks: 7,
-                max_batch: 3,
-                threads: 1,
-                ..ContinuousConfig::default()
-            },
+            ContinuousConfig::builder().block_size(4).num_blocks(7).max_batch(3).build(),
             threads,
         );
         assert_eq!(
@@ -246,19 +243,17 @@ fn tiering_disabled_is_bitwise_identical_under_pressure() {
 fn tiered_f32_swap_is_bitwise_identical_to_oracle() {
     let (cfg, mut oracle) = coordinator(22, 1);
     let reqs = synthetic_workload(3, 4, 12, cfg.vocab);
-    let want = oracle.serve(&reqs);
+    let want = oracle.serve(&reqs, &ServeOptions::fcfs());
     for threads in thread_counts() {
         let got = serve_continuous(
             22,
             &reqs,
-            ContinuousConfig {
-                block_size: 4,
-                num_blocks: 7,
-                max_batch: 3,
-                threads: 1,
-                tiering: Some(TierConfig { quant: KvQuant::F32, ..TierConfig::new(16) }),
-                ..ContinuousConfig::default()
-            },
+            ContinuousConfig::builder()
+                .block_size(4)
+                .num_blocks(7)
+                .max_batch(3)
+                .tiering(TierConfig { quant: KvQuant::F32, ..TierConfig::new(16) })
+                .build(),
             threads,
         );
         assert_eq!(
@@ -281,7 +276,7 @@ fn tiered_f32_swap_is_bitwise_identical_to_oracle() {
 fn tiered_int8_swap_diverges_only_after_reread() {
     let (cfg, mut oracle) = coordinator(23, 1);
     let reqs = synthetic_workload(3, 4, 12, cfg.vocab);
-    let want = oracle.serve(&reqs);
+    let want = oracle.serve(&reqs, &ServeOptions::fcfs());
     // Both the fetch path and the direct-read path must honor the bound.
     let tiers = [
         TierConfig::new(16),
@@ -293,14 +288,12 @@ fn tiered_int8_swap_diverges_only_after_reread() {
             let got = serve_continuous(
                 23,
                 &reqs,
-                ContinuousConfig {
-                    block_size: 4,
-                    num_blocks: 7,
-                    max_batch: 3,
-                    threads: 1,
-                    tiering: Some(tier.clone()),
-                    ..ContinuousConfig::default()
-                },
+                ContinuousConfig::builder()
+                    .block_size(4)
+                    .num_blocks(7)
+                    .max_batch(3)
+                    .tiering(tier.clone())
+                    .build(),
                 threads,
             );
             let m = got.serving.as_ref().expect("continuous metrics");
@@ -343,16 +336,8 @@ fn quantized_weight_serve_matches_its_fcfs_oracle() {
     let serve_cont = |cfg: &Qwen3Config, threads: usize| -> ServeReport {
         let w = Qwen3Weights::random(cfg, 31);
         let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 128));
-        c.serve_with_policy(
-            &reqs,
-            ServePolicy::Continuous(ContinuousConfig {
-                block_size: 4,
-                num_blocks: 64,
-                max_batch: 4,
-                threads,
-                ..ContinuousConfig::default()
-            }),
-        )
+        let ccfg = ContinuousConfig::builder().block_size(4).num_blocks(64).max_batch(4).build();
+        c.serve(&reqs, &ServeOptions::continuous(ccfg).threads(threads))
     };
     // F32 weight-quant is the seed path, bitwise: same outputs as the
     // default config (which *is* WeightQuant::F32) and as the oracle.
@@ -363,7 +348,7 @@ fn quantized_weight_serve_matches_its_fcfs_oracle() {
         let cfg = Qwen3Config::tiny().with_weight_quant(mode);
         let w = Qwen3Weights::random(&cfg, 31);
         let mut oracle = Coordinator::new(Qwen3Engine::new(w, 1, 128));
-        let want = oracle.serve(&reqs);
+        let want = oracle.serve(&reqs, &ServeOptions::fcfs());
         for threads in thread_counts() {
             let got = serve_cont(&cfg, threads);
             assert_eq!(
@@ -452,21 +437,19 @@ fn chunked_prefill_matches_fcfs_oracle() {
     // 9-token prompts: chunk 3 packs 3+3+3, chunk 4 packs 4+4+1, chunk
     // 16 swallows whole prompts; all cross block boundaries (bs = 4).
     let reqs = synthetic_workload(5, 9, 6, cfg.vocab);
-    let want = oracle.serve(&reqs);
+    let want = oracle.serve(&reqs, &ServeOptions::fcfs());
     let block_size = 4usize;
     for chunk in [1usize, 3, block_size, 4 * block_size] {
         for threads in thread_counts() {
             let got = serve_continuous(
                 31,
                 &reqs,
-                ContinuousConfig {
-                    block_size,
-                    num_blocks: 64,
-                    max_batch: 4,
-                    threads: 1,
-                    prefill_chunk: chunk,
-                    ..ContinuousConfig::default()
-                },
+                ContinuousConfig::builder()
+                    .block_size(block_size)
+                    .num_blocks(64)
+                    .max_batch(4)
+                    .prefill_chunk(chunk)
+                    .build(),
                 threads,
             );
             assert_eq!(
@@ -495,25 +478,19 @@ fn chunked_prefill_matches_fcfs_oracle() {
 fn chunked_prefill_survives_preemption_and_tiering() {
     let (cfg, mut oracle) = coordinator(32, 1);
     let reqs = synthetic_workload(3, 8, 10, cfg.vocab);
-    let want = oracle.serve(&reqs);
+    let want = oracle.serve(&reqs, &ServeOptions::fcfs());
     let tiers: [Option<TierConfig>; 2] =
         [None, Some(TierConfig { quant: KvQuant::F32, ..TierConfig::new(16) })];
     for tiering in tiers {
         for threads in thread_counts() {
-            let got = serve_continuous(
-                32,
-                &reqs,
-                ContinuousConfig {
-                    block_size: 4,
-                    num_blocks: 8,
-                    max_batch: 3,
-                    threads: 1,
-                    prefill_chunk: 3,
-                    tiering: tiering.clone(),
-                    ..ContinuousConfig::default()
-                },
-                threads,
-            );
+            let mut cfg = ContinuousConfig::builder()
+                .block_size(4)
+                .num_blocks(8)
+                .max_batch(3)
+                .prefill_chunk(3)
+                .build();
+            cfg.tiering = tiering.clone();
+            let got = serve_continuous(32, &reqs, cfg, threads);
             assert_eq!(
                 want.outputs, got.outputs,
                 "chunked prefill under pressure (tier {:?}) changed outputs at {threads} \
@@ -538,21 +515,17 @@ fn chunked_prefill_quantized_weights_match_oracle() {
     let cfg = Qwen3Config::tiny().with_weight_quant(WeightQuant::Int8);
     let w = Qwen3Weights::random(&cfg, 33);
     let mut oracle = Coordinator::new(Qwen3Engine::new(w, 1, 128));
-    let want = oracle.serve(&reqs);
+    let want = oracle.serve(&reqs, &ServeOptions::fcfs());
     for threads in thread_counts() {
         let w = Qwen3Weights::random(&cfg, 33);
         let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 128));
-        let got = c.serve_with_policy(
-            &reqs,
-            ServePolicy::Continuous(ContinuousConfig {
-                block_size: 4,
-                num_blocks: 64,
-                max_batch: 4,
-                threads,
-                prefill_chunk: 3,
-                ..ContinuousConfig::default()
-            }),
-        );
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(64)
+            .max_batch(4)
+            .prefill_chunk(3)
+            .build();
+        let got = c.serve(&reqs, &ServeOptions::continuous(ccfg).threads(threads));
         assert_eq!(
             want.outputs, got.outputs,
             "chunked int8-weight serving diverged from its oracle at {threads} threads"
@@ -569,7 +542,7 @@ fn chunked_prefill_quantized_weights_match_oracle() {
 fn autotuned_serve_matches_fcfs_oracle() {
     let (cfg, mut oracle) = coordinator(21, 1);
     let reqs = synthetic_workload(6, 5, 8, cfg.vocab);
-    let want = oracle.serve(&reqs);
+    let want = oracle.serve(&reqs, &ServeOptions::fcfs());
     let machine = MachineSpec::ryzen_5900x();
     let acfg = ContinuousConfig::autotuned(&cfg, &machine, 4);
     let plan = acfg.plan.clone().expect("autotuned config carries its plan");
@@ -594,13 +567,95 @@ fn autotuned_serve_matches_fcfs_oracle() {
     }
 }
 
+/// The tentpole differential: dist-sharded continuous serving must be
+/// token-identical to the FCFS oracle at every (threads × shards) point
+/// of the matrix. Sharding partitions each projection GEMM across
+/// cooperating worker groups with the layout chosen by
+/// `dist::extract_dist`; the combine is disjoint column placement, so
+/// outputs stay bitwise those of the seed engine. The report must record
+/// the shard count and the dist-chosen per-matrix SBP signature.
+#[test]
+fn sharded_serve_matches_fcfs_oracle_across_the_matrix() {
+    let (cfg, mut oracle) = coordinator(51, 1);
+    let reqs = synthetic_workload(5, 6, 8, cfg.vocab);
+    let want = oracle.serve(&reqs, &ServeOptions::fcfs());
+    let machine = MachineSpec::test_numa();
+    for shards in shard_counts() {
+        for threads in thread_counts() {
+            let (_, mut c) = coordinator(51, 1);
+            let ccfg =
+                ContinuousConfig::builder().block_size(4).num_blocks(64).max_batch(4).build();
+            let opts = ServeOptions::continuous(ccfg)
+                .threads(threads)
+                .shards(shards)
+                .machine(machine.clone());
+            let got = c.serve(&reqs, &opts);
+            assert_eq!(
+                want.outputs, got.outputs,
+                "sharded serving changed outputs at {threads} threads x {shards} shards"
+            );
+            assert_eq!(got.generated_tokens, 5 * 8);
+            if shards > 1 {
+                let spec = ShardSpec::derive(&cfg, &machine, shards);
+                assert_eq!(got.shards, shards, "the report must record the shard count");
+                assert_eq!(
+                    got.sbp_sig.as_deref(),
+                    Some(spec.sig().as_str()),
+                    "the report must record the dist-chosen SBP signature"
+                );
+            } else {
+                assert_eq!(got.shards, 1);
+                assert!(got.sbp_sig.is_none(), "unsharded runs carry no SBP signature");
+            }
+        }
+    }
+}
+
+///// Sharding composed with the rest of the serving machinery: chunked
+/// prefill, a pool small enough to preempt, and group-wise quantized
+/// weights — still token-identical to each mode's own FCFS oracle at
+/// every (threads × shards) matrix point.
+#[test]
+fn sharded_serve_composes_with_chunking_preemption_and_quant() {
+    let reqs = synthetic_workload(3, 8, 10, Qwen3Config::tiny().vocab);
+    for mode in [WeightQuant::F32, WeightQuant::Int8] {
+        let qcfg = Qwen3Config::tiny().with_weight_quant(mode);
+        let w = Qwen3Weights::random(&qcfg, 52);
+        let mut oracle = Coordinator::new(Qwen3Engine::new(w, 1, 128));
+        let want = oracle.serve(&reqs, &ServeOptions::fcfs());
+        for shards in shard_counts() {
+            for threads in thread_counts() {
+                let w = Qwen3Weights::random(&qcfg, 52);
+                let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 128));
+                let ccfg = ContinuousConfig::builder()
+                    .block_size(4)
+                    .num_blocks(8)
+                    .max_batch(3)
+                    .prefill_chunk(3)
+                    .build();
+                let opts = ServeOptions::continuous(ccfg)
+                    .threads(threads)
+                    .shards(shards)
+                    .machine(MachineSpec::test_numa());
+                let got = c.serve(&reqs, &opts);
+                assert_eq!(
+                    want.outputs, got.outputs,
+                    "sharded {mode:?} serving diverged at {threads} threads x {shards} shards"
+                );
+                let m = got.serving.expect("continuous metrics");
+                assert!(m.preemptions > 0, "the tiny pool must preempt");
+            }
+        }
+    }
+}
+
 /// The engine's own generate() agrees with serve() outputs (the report
 /// path adds no divergence).
 #[test]
 fn serve_agrees_with_generate() {
     let (cfg, mut c) = coordinator(15, 1);
     let reqs = synthetic_workload(2, 4, 6, cfg.vocab);
-    let rep = c.serve(&reqs);
+    let rep = c.serve(&reqs, &ServeOptions::fcfs());
     for req in &reqs {
         let toks = c.engine.generate(&req.prompt, req.max_new_tokens);
         let served = &rep.outputs.iter().find(|(id, _)| *id == req.id).unwrap().1;

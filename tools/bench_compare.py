@@ -5,10 +5,11 @@ regressions.
 Seeds the perf-regression tracker ROADMAP asks for: the CI bench-smoke
 job downloads the previous successful run's `serve-bench.json` artifact
 and diffs it against the fresh one. Samples are matched on
-(mode, plan, weight_quant, prefill_chunk, pressure, threads) — `plan`
-is the ServePlan hash of autotuned runs (empty for hand-picked
+(mode, plan, shards, weight_quant, prefill_chunk, pressure, threads) —
+`plan` is the ServePlan hash of autotuned runs (empty for hand-picked
 configs), so a planner change starts a new series instead of reading
-as a same-config regression. Any drop in the scenario's gating metric
+as a same-config regression; `shards` keys the dist-sharded scenario's
+worker-group counts apart (default 1 for pre-shard reports). Any drop in the scenario's gating metric
 (prefill tok/s for the "prefill" scenario, decode tok/s otherwise)
 beyond --warn-pct emits a GitHub `::warning::` annotation. A
 per-scenario noise summary (mean/max |delta| across the compared keys)
@@ -47,6 +48,7 @@ def key(sample):
     # same for autotuned runs: a deliberate planner change re-keys the
     # series rather than tripping the regression warning.
     return (sample.get("mode", "sweep"), sample.get("plan", ""),
+            sample.get("shards", 1),
             sample.get("weight_quant", "f32"),
             sample.get("prefill_chunk", 1), sample["pressure"], sample["threads"])
 

@@ -15,7 +15,8 @@
 //! KV-storage demo over a deliberately small hot pool,
 //! `--prefill-chunk N` to change the chunked-prefill span width,
 //! `--shards N` to pick the worker-group count of the dist-sharded
-//! run, and
+//! run, `--trace-out trace.json` to keep the traced run's per-worker
+//! timeline as Chrome-trace JSON for Perfetto, and
 //! `--weight-quant int8|int4` to store the GEMM weight plane as
 //! group-wise codes streamed through the fused dequant-GEMM kernels —
 //! the FCFS engine then runs the fake-quantized oracle weights, so the
@@ -151,6 +152,47 @@ fn main() {
             report.plan.as_ref().map(|p| p.plan_hash()),
             Some(plan.plan_hash()),
             "the report must record the plan that served"
+        );
+    }
+
+    // Serve-path tracing (`--trace-out trace.json` keeps the Chrome
+    // trace for Perfetto): the same continuous run with per-worker
+    // phase timelines recorded into pre-allocated rings. Tracing is
+    // observability only, so outputs must stay bitwise identical to
+    // the untraced runs above; the merged summary (phase breakdown,
+    // per-worker busy/wait) rides on the report.
+    {
+        let engine = Qwen3Engine::new(load(()), 1, 512);
+        let mut coord = Coordinator::new(engine);
+        let ccfg = ContinuousConfig::builder()
+            .block_size(16)
+            .num_blocks(64)
+            .max_batch(requests.len())
+            .build();
+        let trace_out = opt(&args, "--trace-out");
+        let mut opts = ServeOptions::continuous(ccfg).threads(2).trace();
+        if let Some(path) = &trace_out {
+            opts = opts.trace_out(path.clone());
+        }
+        let report = coord.serve(&requests, &opts);
+        println!("traced continuous: {}", report.render());
+        let t = report.trace.as_ref().expect("traced run carries a summary");
+        for w in &t.workers {
+            println!(
+                "  {:<22} busy {:>8.3} ms  wait {:>8.3} ms ({:>4.1}% waiting)",
+                w.name,
+                w.busy_s * 1e3,
+                w.wait_s * 1e3,
+                100.0 * w.wait_frac()
+            );
+        }
+        if let Some(path) = &trace_out {
+            println!("  trace -> {path} (open in https://ui.perfetto.dev)");
+        }
+        assert_eq!(
+            last_output.as_ref().unwrap(),
+            &report.outputs,
+            "tracing changed outputs — observability must be semantics-free!"
         );
     }
 

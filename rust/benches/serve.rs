@@ -92,6 +92,12 @@ struct Sample {
     ttft_p50_s: f64,
     wall_s: f64,
     speedup_vs_fcfs: f64,
+    /// The run's full machine-readable report
+    /// (`ServeReport::to_json()`, the `serve_report.v1` schema) nested
+    /// verbatim — one source of truth for every metric; the flat keys
+    /// above stay for `tools/bench_compare.py` backward compatibility
+    /// with committed pre-v1 reports.
+    report: String,
 }
 
 fn json_report(samples: &[Sample], quick: bool) -> String {
@@ -106,7 +112,7 @@ fn json_report(samples: &[Sample], quick: bool) -> String {
              \"weight_bytes\": {}, \
              \"prefill_chunk\": {}, \"pressure\": {}, \"threads\": {}, \
              \"decode_tok_s\": {:.3}, \"prefill_tok_s\": {:.3}, \"ttft_p50_s\": {:.6}, \
-             \"wall_s\": {:.4}, \"speedup_vs_fcfs\": {:.3}}}",
+             \"wall_s\": {:.4}, \"speedup_vs_fcfs\": {:.3}, \"report\": {}}}",
             s.mode,
             s.plan,
             s.shards,
@@ -119,7 +125,8 @@ fn json_report(samples: &[Sample], quick: bool) -> String {
             s.prefill_tok_s,
             s.ttft_p50_s,
             s.wall_s,
-            s.speedup_vs_fcfs
+            s.speedup_vs_fcfs,
+            s.report
         );
         out.push_str(if i + 1 < samples.len() { ",\n" } else { "\n" });
     }
@@ -277,6 +284,7 @@ fn main() {
                 ttft_p50_s: cont_rep.ttft.percentile(50.0),
                 wall_s: cont_rep.wall_s,
                 speedup_vs_fcfs: speedup,
+                report: cont_rep.to_json(),
             });
         }
     }
@@ -350,6 +358,7 @@ fn main() {
             ttft_p50_s: rep.ttft.percentile(50.0),
             wall_s: rep.wall_s,
             speedup_vs_fcfs: 0.0,
+            report: rep.to_json(),
         });
     }
     gate(
@@ -402,6 +411,7 @@ fn main() {
                 ttft_p50_s: rep.ttft.percentile(50.0),
                 wall_s: rep.wall_s,
                 speedup_vs_fcfs: 0.0,
+                report: rep.to_json(),
             });
         }
         let ratio = if per_mode[0] > 0.0 { per_mode[1] / per_mode[0] } else { 0.0 };
@@ -485,6 +495,7 @@ fn main() {
             ttft_p50_s: rep.ttft.percentile(50.0),
             wall_s: rep.wall_s,
             speedup_vs_fcfs: 0.0,
+            report: rep.to_json(),
         });
     }
     gate(
@@ -549,6 +560,7 @@ fn main() {
         } else {
             0.0
         },
+        report: at_rep.to_json(),
     });
 
     // == Shard scenario: dist-sharded continuous decode vs unsharded. ==
@@ -617,7 +629,39 @@ fn main() {
             ttft_p50_s: rep.ttft.percentile(50.0),
             wall_s: rep.wall_s,
             speedup_vs_fcfs: 0.0,
+            report: rep.to_json(),
         });
+    }
+
+    // == Per-scenario noise summary. ==
+    // How spread out each scenario's decode throughput samples are —
+    // the number to check before trusting any single gate ratio above,
+    // and the context bench_compare.py lacks when it flags a delta.
+    {
+        let mut modes: Vec<&'static str> = Vec::new();
+        for s in &samples {
+            if !modes.contains(&s.mode) {
+                modes.push(s.mode);
+            }
+        }
+        println!("\nnoise summary (decode tok/s per scenario):");
+        for mode in modes {
+            let mut st = nncase_repro::util::Stats::default();
+            for s in samples.iter().filter(|s| s.mode == mode) {
+                st.push(s.decode_tok_s);
+            }
+            row(
+                mode,
+                format!(
+                    "n={:>2} mean {:>9.2} p99 {:>9.2} stddev {:>8.2} ({:>5.1}% of mean)",
+                    st.len(),
+                    st.mean(),
+                    st.p99(),
+                    st.stddev(),
+                    if st.mean() > 0.0 { 100.0 * st.stddev() / st.mean() } else { 0.0 },
+                ),
+            );
+        }
     }
 
     if let Ok(path) = std::env::var("PALLAS_BENCH_JSON") {

@@ -8,10 +8,18 @@ use std::time::Instant;
 use super::Qwen3Engine;
 use crate::cost::MachineSpec;
 use crate::dist::ShardSpec;
+use crate::obs::{json_escape, json_f64, Ring, TraceSummary, WorkerTrace};
 use crate::serving::{
     BatchEngine, ContinuousConfig, ContinuousScheduler, ServingMetrics, StepSlot, TierConfig,
 };
 use crate::util::Stats;
+
+/// Default per-track event-ring capacity of a traced serve
+/// ([`ServeOptions::trace`]); override with the `PALLAS_TRACE_EVENTS`
+/// env var. Rings are pre-allocated once per run and overwrite their
+/// oldest events when full (`TraceSummary` reports the drop count), so
+/// a too-small value degrades coverage, never correctness.
+pub const DEFAULT_TRACE_EVENTS: usize = 65536;
 
 /// One generation request.
 #[derive(Debug, Clone)]
@@ -70,6 +78,8 @@ pub struct ServeOptions {
     tiering: Option<TierConfig>,
     shards: Option<usize>,
     machine: Option<MachineSpec>,
+    trace: bool,
+    trace_out: Option<String>,
 }
 
 impl ServeOptions {
@@ -130,6 +140,28 @@ impl ServeOptions {
         self
     }
 
+    /// Record a per-worker phase timeline of the run (continuous modes
+    /// only): every SPMD worker, the controller, and the scheduler log
+    /// span events into pre-allocated rings (capacity
+    /// [`DEFAULT_TRACE_EVENTS`] per track, `PALLAS_TRACE_EVENTS` env
+    /// override), summarized into `ServeReport::trace`. Tracing records
+    /// timestamps only — outputs are bitwise-identical to an untraced
+    /// run (pinned by the differential tests in
+    /// `rust/tests/serving.rs`); untraced runs pay one branch per hook.
+    pub fn trace(mut self) -> Self {
+        self.trace = true;
+        self
+    }
+
+    /// As [`ServeOptions::trace`], and additionally write the merged
+    /// timeline to `path` as Chrome-trace-event JSON — load it in
+    /// Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`.
+    pub fn trace_out(mut self, path: impl Into<String>) -> Self {
+        self.trace = true;
+        self.trace_out = Some(path.into());
+        self
+    }
+
     /// Check the option set; `Err` names the first violated rule.
     /// [`Coordinator::serve`] calls this (then the resolved config's
     /// own [`ContinuousConfig::validate`]) before any work runs.
@@ -140,11 +172,12 @@ impl ServeOptions {
                 || self.tiering.is_some()
                 || self.shards.is_some()
                 || self.machine.is_some()
+                || self.trace
             {
                 return Err(
-                    "FCFS takes no overrides (threads/prefill_chunk/tiering/shards/machine \
-                     apply to the continuous modes; the dense engine's shape is fixed at \
-                     Qwen3Engine::new)"
+                    "FCFS takes no overrides (threads/prefill_chunk/tiering/shards/machine/\
+                     trace apply to the continuous modes; the dense engine's shape is fixed \
+                     at Qwen3Engine::new)"
                         .into(),
                 );
             }
@@ -170,7 +203,10 @@ impl ServeOptions {
     /// Validate and resolve into the continuous config to run
     /// (`None` = FCFS): mode, then overrides, then the dist-extracted
     /// shard layout, then the resolved config's own invariants.
-    fn resolve(&self, model: &crate::model::Qwen3Config) -> Result<Option<ContinuousConfig>, String> {
+    fn resolve(
+        &self,
+        model: &crate::model::Qwen3Config,
+    ) -> Result<Option<ContinuousConfig>, String> {
         self.validate()?;
         let mut cfg = match &self.mode {
             ServeMode::Fcfs => return Ok(None),
@@ -283,6 +319,11 @@ pub struct ServeReport {
     pub sbp_sig: Option<String>,
     /// Extended metrics of the continuous-batching path (None for FCFS).
     pub serving: Option<ServingMetrics>,
+    /// Phase/utilization summary of a traced run
+    /// ([`ServeOptions::trace`]): per-phase time breakdown with
+    /// barrier-wait attribution and per-worker busy/wait split. `None`
+    /// when tracing is off (the default) and for FCFS.
+    pub trace: Option<TraceSummary>,
 }
 
 impl ServeReport {
@@ -319,10 +360,129 @@ impl ServeReport {
         if let Some(p) = &self.plan {
             s.push_str(&format!(" plan[{}]", p.render()));
         }
+        // Predicted-vs-measured: the plan's roofline per-iteration cost
+        // estimates against what the run actually measured (decode-only
+        // iterations are directly comparable to the decode roofline;
+        // prefill-carrying ones to the prefill roofline).
+        if let (Some(p), Some(m)) = (&self.plan, &self.serving) {
+            if m.decode_only_iters > 0 {
+                s.push_str(&format!(
+                    " pred/meas[decode {:.3}/{:.3}ms",
+                    p.predicted_decode_iter_s * 1e3,
+                    m.decode_iter_mean_s() * 1e3,
+                ));
+                if m.prefill_iters > 0 {
+                    s.push_str(&format!(
+                        " prefill {:.3}/{:.3}ms",
+                        p.predicted_prefill_iter_s * 1e3,
+                        m.prefill_iter_mean_s() * 1e3,
+                    ));
+                }
+                s.push(']');
+            }
+        }
         if let Some(m) = &self.serving {
             s.push_str(&format!(" | {}", m.render()));
         }
+        if let Some(t) = &self.trace {
+            s.push_str(&format!(" | trace[{}]", t.render()));
+        }
         s
+    }
+
+    /// The machine-readable report: stable-key-order JSON built by hand
+    /// (no serializer dependency) — the one schema `benches/serve.rs`,
+    /// `tools/bench_compare.py` and the CI bench-smoke job consume
+    /// (`repro serve --report-json`). Every number goes through
+    /// [`json_f64`] so the output is always valid JSON (non-finite
+    /// values degrade to 0.0); nullable sections (`sbp_sig`, `plan`,
+    /// `tier`, `serving`, `trace`) are emitted as JSON `null` so
+    /// readers see one shape regardless of mode.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        fn int(o: &mut String, k: &str, v: u64) {
+            let _ = write!(o, ",\"{k}\":{v}");
+        }
+        fn num(o: &mut String, k: &str, v: f64) {
+            let _ = write!(o, ",\"{k}\":{}", json_f64(v));
+        }
+        let mut o = String::from("{\"schema\":\"serve_report.v1\"");
+        int(&mut o, "requests", self.requests as u64);
+        int(&mut o, "prompt_tokens", self.prompt_tokens as u64);
+        int(&mut o, "generated_tokens", self.generated_tokens as u64);
+        int(&mut o, "threads", self.threads as u64);
+        int(&mut o, "shards", self.shards as u64);
+        let _ = write!(o, ",\"weight_quant\":\"{}\"", json_escape(self.weight_quant.name()));
+        int(&mut o, "weight_bytes", self.weight_bytes);
+        num(&mut o, "wall_s", self.wall_s);
+        num(&mut o, "decode_tok_s", self.decode_tokens_per_s);
+        num(&mut o, "prefill_tok_s", self.prefill_tok_s);
+        num(&mut o, "ttft_p50_s", self.ttft.percentile(50.0));
+        num(&mut o, "ttft_p99_s", self.ttft.p99());
+        num(&mut o, "tpot_p50_s", self.token_latency.percentile(50.0));
+        num(&mut o, "tpot_p99_s", self.token_latency.p99());
+        num(&mut o, "request_p50_s", self.request_latency.percentile(50.0));
+        num(&mut o, "request_p99_s", self.request_latency.p99());
+        match &self.sbp_sig {
+            Some(sig) => {
+                let _ = write!(o, ",\"sbp_sig\":\"{}\"", json_escape(sig));
+            }
+            None => o.push_str(",\"sbp_sig\":null"),
+        }
+        match &self.plan {
+            Some(p) => {
+                let _ = write!(o, ",\"plan\":{{\"hash\":\"{:016x}\"", p.plan_hash());
+                int(&mut o, "max_batch", p.max_batch as u64);
+                int(&mut o, "block_size", p.block_size as u64);
+                int(&mut o, "num_blocks", p.num_blocks as u64);
+                int(&mut o, "threads", p.decode_threads as u64);
+                int(&mut o, "prefill_chunk", p.prefill_chunk as u64);
+                int(&mut o, "step_token_budget", p.step_token_budget as u64);
+                int(&mut o, "panel_rows", p.panel_rows as u64);
+                num(&mut o, "predicted_decode_iter_s", p.predicted_decode_iter_s);
+                num(&mut o, "predicted_prefill_iter_s", p.predicted_prefill_iter_s);
+                o.push('}');
+            }
+            None => o.push_str(",\"plan\":null"),
+        }
+        match &self.tier {
+            Some(t) => {
+                let _ = write!(o, ",\"tier\":\"{}\"", json_escape(t));
+            }
+            None => o.push_str(",\"tier\":null"),
+        }
+        match &self.serving {
+            Some(m) => {
+                let _ = write!(o, ",\"serving\":{{\"iterations\":{}", m.iterations);
+                int(&mut o, "decode_steps", m.decode_steps as u64);
+                int(&mut o, "prefill_steps", m.prefill_steps as u64);
+                int(&mut o, "replay_steps", m.replay_steps as u64);
+                int(&mut o, "preemptions", m.preemptions as u64);
+                int(&mut o, "prefix_hits", m.prefix_hits as u64);
+                int(&mut o, "decode_only_iters", m.decode_only_iters as u64);
+                num(&mut o, "decode_iter_mean_s", m.decode_iter_mean_s());
+                int(&mut o, "prefill_iters", m.prefill_iters as u64);
+                num(&mut o, "prefill_iter_mean_s", m.prefill_iter_mean_s());
+                num(&mut o, "request_e2e_p50_s", m.request_e2e.percentile(50.0));
+                num(&mut o, "request_e2e_p99_s", m.request_e2e.p99());
+                int(&mut o, "swap_preemptions", m.swap_preemptions as u64);
+                int(&mut o, "recompute_preemptions", m.recompute_preemptions as u64);
+                int(&mut o, "spills", m.spills as u64);
+                int(&mut o, "fetches", m.fetches as u64);
+                int(&mut o, "spill_bytes", m.spill_bytes);
+                int(&mut o, "fetch_bytes", m.fetch_bytes);
+                o.push('}');
+            }
+            None => o.push_str(",\"serving\":null"),
+        }
+        match &self.trace {
+            Some(t) => {
+                let _ = write!(o, ",\"trace\":{}", t.to_json());
+            }
+            None => o.push_str(",\"trace\":null"),
+        }
+        o.push('}');
+        o
     }
 }
 
@@ -349,7 +509,7 @@ impl Coordinator {
             .unwrap_or_else(|e| panic!("invalid ServeOptions: {e}"));
         match resolved {
             None => self.serve_fcfs(requests),
-            Some(cfg) => self.serve_continuous(requests, cfg),
+            Some(cfg) => self.serve_continuous(requests, cfg, opts),
         }
     }
 
@@ -442,10 +602,16 @@ impl Coordinator {
             shards: 1,
             sbp_sig: None,
             serving: None,
+            trace: None,
         }
     }
 
-    fn serve_continuous(&mut self, requests: &[Request], cfg: ContinuousConfig) -> ServeReport {
+    fn serve_continuous(
+        &mut self,
+        requests: &[Request],
+        cfg: ContinuousConfig,
+        opts: &ServeOptions,
+    ) -> ServeReport {
         let wall = Instant::now();
         // Step capacity in token rows: the scheduler's per-iteration
         // budget (== max_batch when prefill_chunk is 1, so the seed
@@ -477,6 +643,20 @@ impl Coordinator {
             sched.set_tier_geometry(model.layers, model.kv_heads * model.head_dim);
             be.enable_tier(t.cold_blocks, t.quant);
         }
+        // Tracing: one shared epoch for every ring (the SPMD workers'
+        // and the scheduler's) so all timelines merge onto one time
+        // axis. Capacity is per track; the rings overwrite their oldest
+        // events when full, so the knob bounds memory, not run length.
+        let trace_cfg = opts.trace.then(|| {
+            let cap = std::env::var("PALLAS_TRACE_EVENTS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(DEFAULT_TRACE_EVENTS);
+            (Instant::now(), cap)
+        });
+        if let Some((epoch, cap)) = trace_cfg {
+            sched.set_trace(Ring::with_capacity(cap, epoch));
+        }
         for r in requests {
             sched.submit(r);
         }
@@ -485,7 +665,7 @@ impl Coordinator {
         // One SPMD run for the whole serve: the workers are spawned once
         // and parked between iterations, so the per-step cost is one
         // barrier release instead of a spawn/join per step.
-        be.run(threads, max_rows, |stepper| {
+        let ((), log) = be.run_traced(threads, max_rows, trace_cfg, |stepper| {
             while !sched.is_done() {
                 // schedule() either yields at least one runnable sequence
                 // or panics (pool too small for the queue head) — a 0
@@ -524,6 +704,24 @@ impl Coordinator {
             request_latency.push(wall.elapsed().as_secs_f64());
             done.insert(f.id, f.generated);
         }
+        // Merge the engine timelines with the scheduler's own track,
+        // export the Chrome trace if asked, and fold the whole log into
+        // the report's summary.
+        let trace = log.map(|mut log| {
+            if let Some(r) = sched.take_trace() {
+                log.workers.push(WorkerTrace {
+                    tid: log.workers.len() as u32,
+                    name: "scheduler".into(),
+                    events: r.events(),
+                    dropped: r.dropped(),
+                });
+            }
+            if let Some(path) = &opts.trace_out {
+                std::fs::write(path, log.to_chrome_json())
+                    .unwrap_or_else(|e| panic!("failed to write trace to {path}: {e}"));
+            }
+            TraceSummary::from_log(&log)
+        });
 
         let metrics = std::mem::take(&mut sched.metrics);
         let outputs: Vec<(u64, Vec<usize>)> = requests
@@ -549,6 +747,7 @@ impl Coordinator {
             shards,
             sbp_sig,
             serving: Some(metrics),
+            trace,
         }
     }
 }
@@ -682,6 +881,69 @@ mod tests {
         assert!(r.contains("plan["), "{r}");
         assert!(r.contains(&format!("{:#018x}", plan.plan_hash())), "{r}");
         assert!(r.contains(&format!("chunk={}", plan.prefill_chunk)), "{r}");
+        // Predicted-vs-measured: an autotuned run that ran decode-only
+        // iterations renders the plan's roofline estimate next to the
+        // measured mean.
+        let m = rep.serving.as_ref().unwrap();
+        assert!(m.decode_only_iters > 0, "workload must include pure-decode iterations");
+        assert!(r.contains("pred/meas[decode "), "{r}");
+    }
+
+    #[test]
+    fn traced_serve_summarizes_and_matches_untraced() {
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
+        let reqs = synthetic_workload(3, 4, 5, cfg.vocab);
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(32)
+            .max_batch(3)
+            .threads(2)
+            .build();
+        let plain = c.serve(&reqs, &ServeOptions::continuous(ccfg.clone()));
+        assert!(plain.trace.is_none(), "tracing is off by default");
+        assert!(!plain.render().contains("trace["));
+        let traced = c.serve(&reqs, &ServeOptions::continuous(ccfg).trace());
+        assert_eq!(plain.outputs, traced.outputs, "tracing must not change tokens");
+        let t = traced.trace.as_ref().expect("traced runs carry a summary");
+        assert!(t.events > 0, "a served workload must record events");
+        assert_eq!(t.dropped, 0, "default ring capacity must hold a tiny run");
+        // 2 worker tracks + the scheduler track.
+        assert_eq!(t.workers.len(), 3, "{t:?}");
+        assert_eq!(t.workers[2].name, "scheduler");
+        assert!(t.phases.iter().any(|p| p.name == "iterate"), "{t:?}");
+        assert!(t.phases.iter().any(|p| p.name == "lm_head"), "{t:?}");
+        assert!(traced.render().contains(" | trace["), "{}", traced.render());
+    }
+
+    #[test]
+    fn report_json_has_stable_shape() {
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
+        let reqs = synthetic_workload(2, 4, 3, cfg.vocab);
+        // FCFS: every nullable section reads as literal null.
+        let j = c.serve(&reqs, &ServeOptions::fcfs()).to_json();
+        assert!(j.starts_with("{\"schema\":\"serve_report.v1\",\"requests\":2,"), "{j}");
+        for key in ["\"plan\":null", "\"tier\":null", "\"serving\":null", "\"trace\":null"] {
+            assert!(j.contains(key), "{j}");
+        }
+        // Traced autotuned run: every section is an object.
+        let machine = crate::cost::MachineSpec::ryzen_5900x();
+        let rep = c.serve(&reqs, &ServeOptions::autotuned(2).machine(machine).trace());
+        let j = rep.to_json();
+        assert!(j.contains("\"plan\":{\"hash\":\""), "{j}");
+        assert!(j.contains("\"predicted_decode_iter_s\":"), "{j}");
+        assert!(j.contains("\"serving\":{\"iterations\":"), "{j}");
+        assert!(j.contains("\"decode_iter_mean_s\":"), "{j}");
+        assert!(j.contains("\"trace\":{\"events\":"), "{j}");
+        assert!(!j.contains("NaN") && !j.contains("inf"), "{j}");
+        // Braces and quotes balance — the cheap well-formedness check
+        // (tools/trace_summary.py and CI run a real JSON parse).
+        let depth = j.chars().fold(0i64, |d, c| d + (c == '{') as i64 - (c == '}') as i64);
+        assert_eq!(depth, 0, "{j}");
+        assert_eq!(j.matches('"').count() % 2, 0, "{j}");
     }
 
     #[test]
@@ -770,6 +1032,8 @@ mod tests {
         assert!(ServeOptions::fcfs().validate().is_ok());
         assert!(ServeOptions::fcfs().threads(2).validate().is_err());
         assert!(ServeOptions::fcfs().shards(2).validate().is_err());
+        assert!(ServeOptions::fcfs().trace().validate().is_err());
+        assert!(ServeOptions::fcfs().trace_out("t.json").validate().is_err());
         // Degenerate values are named, not clamped into surprises.
         let cfg = ContinuousConfig::default();
         assert!(ServeOptions::continuous(cfg.clone()).shards(0).validate().is_err());

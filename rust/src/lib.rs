@@ -35,6 +35,9 @@
 //!   shared by the dense and batched decode engines.
 //! * [`serving`] — the paged KV-cache block pool and continuous-batching
 //!   scheduler behind `ServeOptions::continuous` (docs/serving.md).
+//! * [`obs`] — serve-path tracing: per-worker event rings, Perfetto
+//!   (Chrome-trace) export and the phase/utilization summary in
+//!   `ServeReport`.
 
 pub mod cost;
 pub mod codegen;
@@ -44,6 +47,7 @@ pub mod egraph;
 pub mod ir;
 pub mod model;
 pub mod ntt;
+pub mod obs;
 pub mod parallel;
 pub mod pipeline;
 pub mod rewrite;

@@ -35,10 +35,14 @@ fn usage() -> ! {
          serve     [--threads N] [--requests N] [--max-new N] [--policy fcfs|continuous]\n\
          \x20          [--max-batch N] [--prefill-chunk N] [--shards N] [--kv-cold-blocks N]\n\
          \x20          [--kv-quant int8|f32] [--weight-quant f32|int8|int4] [--autotune]\n\
+         \x20          [--trace-out trace.json] [--report-json report.json]\n\
          \x20          (--autotune derives chunk/budget/threads/panel/pool from the\n\
          \x20           serve-time planner; --shards partitions the projection GEMMs\n\
          \x20           across dist-planned worker groups; explicit flags override\n\
-         \x20           planner knobs; outputs are token-identical either way)\n\
+         \x20           planner knobs; outputs are token-identical either way;\n\
+         \x20           --trace-out records per-worker phase timelines as Chrome-trace\n\
+         \x20           JSON for Perfetto [continuous only], --report-json writes the\n\
+         \x20           machine-readable ServeReport)\n\
          sweep     [--figure 9|10]\n\
          artifacts [--dir artifacts]"
     );
@@ -199,10 +203,21 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                         threads_flag.unwrap_or(threads),
                     ));
                 }
+                // Serve-path tracing: per-worker phase timelines into
+                // pre-allocated rings, exported as Chrome-trace JSON
+                // (open in Perfetto). Continuous only — validate()
+                // rejects it on FCFS.
+                let trace_out = opt(&args, "--trace-out");
+                if let Some(path) = &trace_out {
+                    opts = opts.trace_out(path.clone());
+                }
                 println!("policy: continuous");
                 let rep = c.serve(&reqs, &opts);
                 if let Some(p) = &rep.plan {
                     println!("autotune plan: {}", p.render());
+                }
+                if let Some(path) = &trace_out {
+                    println!("trace -> {path} (open in https://ui.perfetto.dev)");
                 }
                 rep
             } else {
@@ -210,6 +225,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 c.serve(&reqs, &ServeOptions::fcfs())
             };
             println!("{}", rep.render());
+            // The machine-readable report (ServeReport::to_json): the
+            // schema benches and tools/bench_compare.py consume.
+            if let Some(path) = opt(&args, "--report-json") {
+                std::fs::write(&path, rep.to_json())?;
+                println!("report json -> {path}");
+            }
         }
         "sweep" => {
             let fig = opt(&args, "--figure").unwrap_or_else(|| "9".into());

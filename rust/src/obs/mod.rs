@@ -1,0 +1,27 @@
+//! Serve-path observability: low-overhead tracing for the SPMD
+//! serving engine.
+//!
+//! Two halves:
+//!
+//! - [`ring`] — the hot path. Pre-allocated per-worker [`Ring`]s
+//!   record phase spans, barrier waits, tier ops, scheduler decisions,
+//!   and per-request lifecycle edges with no locks and no allocation;
+//!   the disabled path (`Option::None`) is a single branch.
+//! - [`trace`] — the cold path. Post-run merge of all rings into a
+//!   [`TraceLog`], Chrome-trace-event JSON export for Perfetto
+//!   (`repro serve --trace-out trace.json`), and the [`TraceSummary`]
+//!   (per-phase breakdown, barrier-wait fractions, per-worker
+//!   busy/wait split) recorded in `ServeReport`.
+//!
+//! Tracing never changes what the engine computes: rings record
+//! timestamps only, so a traced run is bitwise identical to an
+//! untraced one (pinned by differential tests in
+//! `rust/tests/serving.rs`).
+
+pub mod ring;
+pub mod trace;
+
+pub use ring::{instant, mark, span, Code, Event, Ring, CODE_COUNT};
+pub use trace::{
+    json_escape, json_f64, PhaseStat, TraceLog, TraceSummary, WorkerStat, WorkerTrace,
+};

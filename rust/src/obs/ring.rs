@@ -1,0 +1,344 @@
+//! The hot-path half of `obs`: fixed-size per-worker event rings.
+//!
+//! A [`Ring`] is pre-allocated once at serve setup (capacity via
+//! `PALLAS_TRACE_EVENTS`, default 65536 events per worker) and then
+//! records [`Event`]s with **no locks and no allocation**: a record is
+//! two monotonic-clock reads plus one slot write, wrapping over the
+//! oldest events when full (`dropped()` reports how many fell off).
+//! Every ring of a run shares one epoch `Instant`, so timestamps from
+//! different workers merge onto one timeline.
+//!
+//! The disabled path must cost nothing: every engine hook takes an
+//! `Option<&mut Ring>` and the free functions below ([`mark`],
+//! [`span`], [`instant`]) compile to a branch on `None` — no clock
+//! read, no allocation, nothing (pinned by the counting-allocator test
+//! in `rust/tests/obs.rs`).
+
+use std::time::Instant;
+
+/// What an event records. Duration codes are phases of the serving
+/// path (spans with `t0 < t1`); instant codes are per-request
+/// lifecycle edges (`t0 == t1`, `arg` = request id).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u16)]
+pub enum Code {
+    /// Embedding gather (SPMD phase 0).
+    Embed = 0,
+    /// RMSNorm / residual / elementwise per-row phases.
+    Norm = 1,
+    /// Batched Q/K/V projection GEMMs.
+    QkvGemm = 2,
+    /// RoPE rotation.
+    Rope = 3,
+    /// Single-writer KV span commit.
+    KvCommit = 4,
+    /// Paged (causal / hybrid-cold) attention.
+    Attn = 5,
+    /// Attention output projection GEMM.
+    OGemm = 6,
+    /// SwiGLU gate/up/down GEMMs.
+    MlpGemm = 7,
+    /// LM-head projection.
+    LmHead = 8,
+    /// Time spent waiting at a phase barrier; `arg` is the `Code` of
+    /// the phase the barrier closes (the load-imbalance signal).
+    Barrier = 9,
+    /// Worker parked between steps (controller is scheduling).
+    Park = 10,
+    /// Cold-tier spill batch (`arg` = op count).
+    TierSpill = 11,
+    /// Cold-tier fetch batch (`arg` = op count).
+    TierFetch = 12,
+    /// One whole scheduler iteration (`arg` = batch size).
+    Iterate = 13,
+    /// One `schedule()` call (`arg` = running-set size).
+    Schedule = 14,
+    /// Request entered the queue.
+    Enqueue = 15,
+    /// Request admitted to the running set.
+    Admit = 16,
+    /// Request sampled its first token.
+    FirstToken = 17,
+    /// Request preempted (recompute path).
+    Preempt = 18,
+    /// Request swapped out to the cold tier.
+    SwapOut = 19,
+    /// Swapped request re-admitted.
+    SwapIn = 20,
+    /// Request finished.
+    Finish = 21,
+}
+
+/// Number of distinct codes (`Code` discriminants are `0..COUNT`).
+pub const CODE_COUNT: usize = 22;
+
+impl Code {
+    pub fn name(self) -> &'static str {
+        match self {
+            Code::Embed => "embed",
+            Code::Norm => "norm",
+            Code::QkvGemm => "qkv_gemm",
+            Code::Rope => "rope",
+            Code::KvCommit => "kv_commit",
+            Code::Attn => "attn",
+            Code::OGemm => "o_gemm",
+            Code::MlpGemm => "mlp_gemm",
+            Code::LmHead => "lm_head",
+            Code::Barrier => "barrier",
+            Code::Park => "park",
+            Code::TierSpill => "tier_spill",
+            Code::TierFetch => "tier_fetch",
+            Code::Iterate => "iterate",
+            Code::Schedule => "schedule",
+            Code::Enqueue => "enqueue",
+            Code::Admit => "admit",
+            Code::FirstToken => "first_token",
+            Code::Preempt => "preempt",
+            Code::SwapOut => "swap_out",
+            Code::SwapIn => "swap_in",
+            Code::Finish => "finish",
+        }
+    }
+
+    /// Lifecycle edges are instants (`ph: "i"` in the Chrome trace);
+    /// everything else is a duration span (`B`/`E` pair).
+    pub fn is_instant(self) -> bool {
+        matches!(
+            self,
+            Code::Enqueue
+                | Code::Admit
+                | Code::FirstToken
+                | Code::Preempt
+                | Code::SwapOut
+                | Code::SwapIn
+                | Code::Finish
+        )
+    }
+
+    /// Wait-class spans (barrier + park) — counted as idle, not busy,
+    /// in the per-worker utilization split.
+    pub fn is_wait(self) -> bool {
+        matches!(self, Code::Barrier | Code::Park)
+    }
+
+    /// Inverse of `code as u16` (for `Barrier` events, whose `arg`
+    /// carries the closed phase's code).
+    pub fn from_u16(c: u16) -> Option<Code> {
+        Some(match c {
+            0 => Code::Embed,
+            1 => Code::Norm,
+            2 => Code::QkvGemm,
+            3 => Code::Rope,
+            4 => Code::KvCommit,
+            5 => Code::Attn,
+            6 => Code::OGemm,
+            7 => Code::MlpGemm,
+            8 => Code::LmHead,
+            9 => Code::Barrier,
+            10 => Code::Park,
+            11 => Code::TierSpill,
+            12 => Code::TierFetch,
+            13 => Code::Iterate,
+            14 => Code::Schedule,
+            15 => Code::Enqueue,
+            16 => Code::Admit,
+            17 => Code::FirstToken,
+            18 => Code::Preempt,
+            19 => Code::SwapOut,
+            20 => Code::SwapIn,
+            21 => Code::Finish,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded event: a span `[t0, t1]` (or an instant with
+/// `t0 == t1`) in nanoseconds since the run's epoch. `seq` is the
+/// ring-local record index, the tie-break that keeps merge ordering
+/// stable when timestamps collide at clock granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub t0: u64,
+    pub t1: u64,
+    pub code: Code,
+    pub arg: u32,
+    pub seq: u32,
+}
+
+/// Fixed-capacity event ring. All storage is allocated up front; a
+/// full ring overwrites its oldest events (newest always survive).
+pub struct Ring {
+    epoch: Instant,
+    buf: Vec<Event>,
+    written: u64,
+}
+
+impl Ring {
+    /// A ring holding up to `capacity` events, stamped against `epoch`
+    /// (share one epoch across every ring of a run so timelines merge).
+    pub fn with_capacity(capacity: usize, epoch: Instant) -> Self {
+        Ring { epoch, buf: Vec::with_capacity(capacity.max(1)), written: 0 }
+    }
+
+    /// Nanoseconds since the run epoch (monotonic).
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record a span (or instant when `t0 == t1`). No allocation: the
+    /// buffer was reserved at construction, and a full ring overwrites
+    /// its oldest slot.
+    #[inline]
+    pub fn record(&mut self, code: Code, t0: u64, t1: u64, arg: u32) {
+        let ev = Event { t0, t1, code, arg, seq: self.written as u32 };
+        let cap = self.buf.capacity();
+        if self.buf.len() < cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[(self.written % cap as u64) as usize] = ev;
+        }
+        self.written += 1;
+    }
+
+    /// Record a span that started at `t0` and ends now.
+    #[inline]
+    pub fn close(&mut self, code: Code, t0: u64, arg: u32) {
+        let t1 = self.now_ns();
+        self.record(code, t0, t1, arg);
+    }
+
+    /// Record an instant event stamped now.
+    #[inline]
+    pub fn instant(&mut self, code: Code, arg: u32) {
+        let t = self.now_ns();
+        self.record(code, t, t, arg);
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// Event slots available before wrap-around (the actual reserve —
+    /// at least the requested capacity).
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Events lost to wrap-around (oldest-first).
+    pub fn dropped(&self) -> u64 {
+        self.written.saturating_sub(self.buf.len() as u64)
+    }
+
+    /// The run epoch this ring stamps against.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Surviving events in record order (oldest surviving first) —
+    /// the post-run merge input.
+    pub fn events(&self) -> Vec<Event> {
+        let len = self.buf.len();
+        if self.written <= len as u64 {
+            return self.buf.clone();
+        }
+        let head = (self.written % self.buf.capacity() as u64) as usize;
+        let mut out = Vec::with_capacity(len);
+        out.extend_from_slice(&self.buf[head..]);
+        out.extend_from_slice(&self.buf[..head]);
+        out
+    }
+}
+
+/// Read the clock iff tracing is on. Returns 0 when `tr` is `None` —
+/// the disabled hook is exactly one branch.
+#[inline]
+pub fn mark(tr: &Option<&mut Ring>) -> u64 {
+    match tr {
+        Some(r) => r.now_ns(),
+        None => 0,
+    }
+}
+
+/// Close a span opened with [`mark`]. A no-op branch when disabled.
+#[inline]
+pub fn span(tr: &mut Option<&mut Ring>, code: Code, t0: u64, arg: u32) {
+    if let Some(r) = tr {
+        r.close(code, t0, arg);
+    }
+}
+
+/// Record an instant event. A no-op branch when disabled.
+#[inline]
+pub fn instant(tr: &mut Option<&mut Ring>, code: Code, arg: u32) {
+    if let Some(r) = tr {
+        r.instant(code, arg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_records_in_order_without_wrap() {
+        let mut r = Ring::with_capacity(8, Instant::now());
+        for i in 0..5u64 {
+            r.record(Code::Iterate, i * 10, i * 10 + 5, i as u32);
+        }
+        assert_eq!(r.written(), 5);
+        assert_eq!(r.dropped(), 0);
+        let evs = r.events();
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0].t0, 0);
+        assert_eq!(evs[4].t0, 40);
+        assert!(evs.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn ring_wrap_overwrites_oldest_and_counts_drops() {
+        let mut r = Ring::with_capacity(4, Instant::now());
+        let cap = r.capacity() as u64; // actual reserve may exceed the request
+        let n = cap + 3;
+        for i in 0..n {
+            r.record(Code::Attn, i, i + 1, 0);
+        }
+        assert_eq!(r.written(), n);
+        assert_eq!(r.dropped(), n - r.events().len() as u64);
+        let evs = r.events();
+        // Newest `capacity` events survive, oldest first.
+        assert_eq!(evs.last().unwrap().t0, n - 1);
+        assert!(evs.windows(2).all(|w| w[0].t0 + 1 == w[1].t0), "chronological after wrap");
+        assert!(evs[0].t0 > 0, "the oldest events were overwritten");
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let mut r = Ring::with_capacity(0, Instant::now());
+        r.instant(Code::Finish, 7);
+        assert_eq!(r.events().len(), 1);
+    }
+
+    #[test]
+    fn disabled_hooks_are_inert() {
+        let mut tr: Option<&mut Ring> = None;
+        let t0 = mark(&tr);
+        assert_eq!(t0, 0);
+        span(&mut tr, Code::Iterate, t0, 0);
+        instant(&mut tr, Code::Admit, 1);
+        // Nothing to observe — the point is that this compiles to
+        // branches and the counting-allocator integration test pins
+        // the zero-allocation claim.
+    }
+
+    #[test]
+    fn code_round_trips_through_u16() {
+        for c in 0..CODE_COUNT as u16 {
+            let code = Code::from_u16(c).expect("dense discriminants");
+            assert_eq!(code as u16, c);
+            assert!(!code.name().is_empty());
+        }
+        assert_eq!(Code::from_u16(CODE_COUNT as u16), None);
+    }
+}

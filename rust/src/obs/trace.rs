@@ -1,0 +1,491 @@
+//! The cold-path half of `obs`: merging per-worker rings into one
+//! timeline, exporting Chrome-trace-event JSON (Perfetto /
+//! `chrome://tracing`), and deriving the [`TraceSummary`] that lands
+//! in `ServeReport` — per-phase time breakdown, per-phase barrier-wait
+//! fraction (the load-imbalance signal), and per-worker busy/wait
+//! utilization.
+
+use super::ring::{Code, Event, CODE_COUNT};
+
+/// One worker's (or the scheduler track's) recorded timeline.
+pub struct WorkerTrace {
+    /// Chrome `tid` — engine workers are `0..t` (0 = controller), the
+    /// scheduler track comes after.
+    pub tid: u32,
+    pub name: String,
+    /// Events in record order (oldest surviving first).
+    pub events: Vec<Event>,
+    /// Events this ring lost to wrap-around.
+    pub dropped: u64,
+}
+
+/// All timelines of one serve run, merged post-run (the hot path never
+/// touches this).
+pub struct TraceLog {
+    pub workers: Vec<WorkerTrace>,
+}
+
+impl TraceLog {
+    /// Every event across all workers as `(tid, event)`, sorted by
+    /// `(t0, tid, seq)` — the stable global merge order.
+    pub fn merged(&self) -> Vec<(u32, Event)> {
+        let mut all: Vec<(u32, Event)> = self
+            .workers
+            .iter()
+            .flat_map(|w| w.events.iter().map(move |&e| (w.tid, e)))
+            .collect();
+        all.sort_by_key(|&(tid, e)| (e.t0, tid, e.seq));
+        all
+    }
+
+    /// Total surviving events.
+    pub fn events(&self) -> u64 {
+        self.workers.iter().map(|w| w.events.len() as u64).sum()
+    }
+
+    /// Total events lost to ring wrap-around.
+    pub fn dropped(&self) -> u64 {
+        self.workers.iter().map(|w| w.dropped).sum()
+    }
+
+    /// Render the run as Chrome trace event format JSON — the object
+    /// form (`{"traceEvents": [...]}`), loadable in Perfetto. Spans
+    /// become `B`/`E` pairs, lifecycle edges become thread-scoped `i`
+    /// instants, and each track gets a `thread_name` metadata record.
+    /// Within a track, points are ordered so nesting is always valid:
+    /// at equal timestamps an `E` precedes a `B` (close the finished
+    /// span before opening a sibling), ties between `B`s open the
+    /// longer span first, and ties between `E`s close the
+    /// later-started (inner) span first.
+    pub fn to_chrome_json(&self) -> String {
+        let mut out = String::with_capacity(256 + 96 * self.events() as usize);
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        let mut first = true;
+        let mut emit = |s: String, out: &mut String| {
+            if !std::mem::take(&mut first) {
+                out.push(',');
+            }
+            out.push_str(&s);
+        };
+        for w in &self.workers {
+            emit(
+                format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    w.tid,
+                    json_escape(&w.name)
+                ),
+                &mut out,
+            );
+        }
+        // Per-track point list: (ts, open-order, tie-break, seq, kind).
+        // kind 0 = E, 1 = B, 2 = instant.
+        for w in &self.workers {
+            let mut pts: Vec<(u64, u8, u64, u32, u8, &Event)> = Vec::new();
+            for ev in &w.events {
+                if ev.code.is_instant() {
+                    pts.push((ev.t0, 1, 0, ev.seq, 2, ev));
+                } else {
+                    pts.push((ev.t0, 1, u64::MAX - ev.t1, ev.seq, 1, ev));
+                    pts.push((ev.t1, 0, u64::MAX - ev.t0, ev.seq, 0, ev));
+                }
+            }
+            pts.sort_by_key(|&(ts, ord, tie, seq, _, _)| (ts, ord, tie, seq));
+            for (ts, _, _, _, kind, ev) in pts {
+                let rec = match kind {
+                    0 => {
+                        format!("{{\"ph\":\"E\",\"pid\":0,\"tid\":{},\"ts\":{}}}", w.tid, ts_us(ts))
+                    }
+                    1 => {
+                        let args = if ev.code == Code::Barrier {
+                            let closes = Code::from_u16(ev.arg as u16)
+                                .map(Code::name)
+                                .unwrap_or("unknown");
+                            format!(",\"args\":{{\"closes\":\"{closes}\"}}")
+                        } else {
+                            format!(",\"args\":{{\"arg\":{}}}", ev.arg)
+                        };
+                        format!(
+                            "{{\"name\":\"{}\",\"ph\":\"B\",\"pid\":0,\"tid\":{},\"ts\":{}{}}}",
+                            ev.code.name(),
+                            w.tid,
+                            ts_us(ts),
+                            args
+                        )
+                    }
+                    _ => format!(
+                        "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{},\
+                         \"ts\":{},\"args\":{{\"req\":{}}}}}",
+                        ev.code.name(),
+                        w.tid,
+                        ts_us(ts),
+                        ev.arg
+                    ),
+                };
+                emit(rec, &mut out);
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Chrome trace `ts` is microseconds; keep nanosecond precision as a
+/// 3-decimal fraction.
+fn ts_us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A finite JSON number for an `f64` (non-finite values collapse to
+/// 0.0 — JSON has no NaN/Infinity). Always carries a decimal point so
+/// readers keep the float type.
+pub fn json_f64(x: f64) -> String {
+    if !x.is_finite() {
+        return "0.0".to_string();
+    }
+    let s = format!("{x}");
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        s
+    } else {
+        format!("{s}.0")
+    }
+}
+
+/// Aggregate time in one phase across all workers.
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    pub name: &'static str,
+    /// Summed span seconds across workers.
+    pub total_s: f64,
+    pub count: u64,
+    /// Summed barrier-wait seconds attributed to this phase (barrier
+    /// events carry the closed phase in `arg`).
+    pub barrier_wait_s: f64,
+}
+
+impl PhaseStat {
+    /// Barrier wait as a fraction of the phase's wall contribution —
+    /// high values mean the phase's work is imbalanced across workers.
+    pub fn wait_frac(&self) -> f64 {
+        let denom = self.total_s + self.barrier_wait_s;
+        if denom <= 0.0 {
+            0.0
+        } else {
+            self.barrier_wait_s / denom
+        }
+    }
+}
+
+/// One worker's busy/wait utilization split.
+#[derive(Debug, Clone)]
+pub struct WorkerStat {
+    pub tid: u32,
+    pub name: String,
+    /// Seconds in work spans (phases, tier ops, scheduler spans).
+    pub busy_s: f64,
+    /// Seconds in wait spans (phase barriers + inter-step park).
+    pub wait_s: f64,
+}
+
+impl WorkerStat {
+    pub fn wait_frac(&self) -> f64 {
+        let denom = self.busy_s + self.wait_s;
+        if denom <= 0.0 {
+            0.0
+        } else {
+            self.wait_s / denom
+        }
+    }
+}
+
+/// What `ServeReport` keeps from a traced run: the per-phase
+/// breakdown, the per-worker utilization split, and the ring
+/// bookkeeping. Derived once post-run from the merged [`TraceLog`].
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    /// Phases with any recorded time, heaviest first.
+    pub phases: Vec<PhaseStat>,
+    /// Engine workers (and the scheduler track) in tid order.
+    pub workers: Vec<WorkerStat>,
+    /// Surviving events across all rings.
+    pub events: u64,
+    /// Events lost to ring wrap-around (0 unless the run outgrew
+    /// `PALLAS_TRACE_EVENTS`).
+    pub dropped: u64,
+}
+
+impl TraceSummary {
+    pub fn from_log(log: &TraceLog) -> Self {
+        let mut total = [0.0f64; CODE_COUNT];
+        let mut count = [0u64; CODE_COUNT];
+        let mut bwait = [0.0f64; CODE_COUNT];
+        let mut workers = Vec::with_capacity(log.workers.len());
+        for w in &log.workers {
+            let (mut busy, mut wait) = (0.0f64, 0.0f64);
+            for ev in &w.events {
+                if ev.code.is_instant() {
+                    continue;
+                }
+                let dur = ev.t1.saturating_sub(ev.t0) as f64 * 1e-9;
+                if ev.code.is_wait() {
+                    wait += dur;
+                    if ev.code == Code::Barrier {
+                        if let Some(phase) = Code::from_u16(ev.arg as u16) {
+                            bwait[phase as usize] += dur;
+                        }
+                    }
+                } else {
+                    busy += dur;
+                    total[ev.code as usize] += dur;
+                    count[ev.code as usize] += 1;
+                }
+            }
+            workers.push(WorkerStat {
+                tid: w.tid,
+                name: w.name.clone(),
+                busy_s: busy,
+                wait_s: wait,
+            });
+        }
+        let mut phases: Vec<PhaseStat> = (0..CODE_COUNT)
+            .filter(|&c| count[c] > 0)
+            .map(|c| PhaseStat {
+                name: Code::from_u16(c as u16).expect("dense discriminants").name(),
+                total_s: total[c],
+                count: count[c],
+                barrier_wait_s: bwait[c],
+            })
+            .collect();
+        phases.sort_by(|a, b| b.total_s.total_cmp(&a.total_s));
+        TraceSummary { phases, workers, events: log.events(), dropped: log.dropped() }
+    }
+
+    /// Aggregate barrier-wait fraction across the engine workers —
+    /// the one-number load-imbalance signal.
+    pub fn wait_frac(&self) -> f64 {
+        let busy: f64 = self.workers.iter().map(|w| w.busy_s).sum();
+        let wait: f64 = self.workers.iter().map(|w| w.wait_s).sum();
+        if busy + wait <= 0.0 {
+            0.0
+        } else {
+            wait / (busy + wait)
+        }
+    }
+
+    /// Compact single-line form for `ServeReport::render`: event
+    /// counts, the heaviest phases with their per-phase barrier-wait
+    /// fraction, and the aggregate wait fraction.
+    pub fn render(&self) -> String {
+        let mut s = format!("ev={}", self.events);
+        if self.dropped > 0 {
+            s.push_str(&format!(" drop={}", self.dropped));
+        }
+        for p in self.phases.iter().take(4) {
+            s.push_str(&format!(" {}={:.2}ms", p.name, p.total_s * 1e3));
+            if p.barrier_wait_s > 0.0 {
+                s.push_str(&format!("/w{:.0}%", p.wait_frac() * 100.0));
+            }
+        }
+        s.push_str(&format!(" wait={:.0}%", self.wait_frac() * 100.0));
+        s
+    }
+
+    /// The summary as a JSON object (stable key order, dependency-free
+    /// — the `trace` field of `ServeReport::to_json`).
+    pub fn to_json(&self) -> String {
+        let phases: Vec<String> = self
+            .phases
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"name\":\"{}\",\"total_s\":{},\"count\":{},\"barrier_wait_s\":{},\
+                     \"wait_frac\":{}}}",
+                    json_escape(p.name),
+                    json_f64(p.total_s),
+                    p.count,
+                    json_f64(p.barrier_wait_s),
+                    json_f64(p.wait_frac())
+                )
+            })
+            .collect();
+        let workers: Vec<String> = self
+            .workers
+            .iter()
+            .map(|w| {
+                format!(
+                    "{{\"tid\":{},\"name\":\"{}\",\"busy_s\":{},\"wait_s\":{}}}",
+                    w.tid,
+                    json_escape(&w.name),
+                    json_f64(w.busy_s),
+                    json_f64(w.wait_s)
+                )
+            })
+            .collect();
+        format!(
+            "{{\"events\":{},\"dropped\":{},\"wait_frac\":{},\"phases\":[{}],\"workers\":[{}]}}",
+            self.events,
+            self.dropped,
+            json_f64(self.wait_frac()),
+            phases.join(","),
+            workers.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ring::Ring;
+    use super::*;
+    use std::time::Instant;
+
+    fn log_of(events: Vec<Vec<Event>>) -> TraceLog {
+        TraceLog {
+            workers: events
+                .into_iter()
+                .enumerate()
+                .map(|(i, evs)| WorkerTrace {
+                    tid: i as u32,
+                    name: format!("worker {i}"),
+                    events: evs,
+                    dropped: 0,
+                })
+                .collect(),
+        }
+    }
+
+    fn ev(code: Code, t0: u64, t1: u64, arg: u32, seq: u32) -> Event {
+        Event { t0, t1, code, arg, seq }
+    }
+
+    #[test]
+    fn merge_orders_by_time_then_tid_then_seq() {
+        let log = log_of(vec![
+            vec![ev(Code::Attn, 50, 60, 0, 0), ev(Code::Attn, 100, 110, 0, 1)],
+            vec![ev(Code::Attn, 50, 55, 0, 0), ev(Code::Attn, 10, 20, 0, 1)],
+        ]);
+        let merged = log.merged();
+        let order: Vec<(u64, u32, u32)> =
+            merged.iter().map(|&(tid, e)| (e.t0, tid, e.seq)).collect();
+        assert_eq!(order, vec![(10, 1, 1), (50, 0, 0), (50, 1, 0), (100, 0, 1)]);
+    }
+
+    #[test]
+    fn chrome_json_balances_and_orders_be_pairs() {
+        // Outer span [0, 100] encloses inner [0, 40]; a sibling opens
+        // at 40 exactly when the inner closes. Valid nesting requires
+        // B(outer) before B(inner) at ts 0, and E(inner) before
+        // B(sibling) at ts 40.
+        let log = log_of(vec![vec![
+            ev(Code::Iterate, 0, 100, 0, 0),
+            ev(Code::QkvGemm, 0, 40, 0, 1),
+            ev(Code::Attn, 40, 100, 0, 2),
+        ]]);
+        let js = log.to_chrome_json();
+        assert!(js.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(js.ends_with("]}"));
+        let b_iter = js.find("\"name\":\"iterate\",\"ph\":\"B\"").unwrap();
+        let b_qkv = js.find("\"name\":\"qkv_gemm\",\"ph\":\"B\"").unwrap();
+        let b_attn = js.find("\"name\":\"attn\",\"ph\":\"B\"").unwrap();
+        assert!(b_iter < b_qkv, "outer span must open before the inner one");
+        // E at ts 40 (inner close) must precede B at ts 40 (sibling).
+        let e40 = js.find("\"ph\":\"E\",\"pid\":0,\"tid\":0,\"ts\":0.040").unwrap();
+        assert!(e40 < b_attn, "close must precede the sibling open at the same ts");
+        assert_eq!(js.matches("\"ph\":\"B\"").count(), js.matches("\"ph\":\"E\"").count());
+    }
+
+    #[test]
+    fn chrome_json_instants_and_barrier_args() {
+        let log = log_of(vec![vec![
+            ev(Code::Barrier, 10, 30, Code::QkvGemm as u32, 0),
+            ev(Code::Admit, 35, 35, 7, 1),
+        ]]);
+        let js = log.to_chrome_json();
+        assert!(js.contains("\"args\":{\"closes\":\"qkv_gemm\"}"));
+        assert!(js.contains("\"name\":\"admit\",\"ph\":\"i\",\"s\":\"t\""));
+        assert!(js.contains("\"args\":{\"req\":7}"));
+        assert!(js.contains("\"name\":\"thread_name\""));
+    }
+
+    #[test]
+    fn json_escape_covers_controls_and_quotes() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\n\t\r"), "x\\n\\t\\r");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn json_f64_is_finite_and_typed() {
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(2.0), "2.0");
+        assert_eq!(json_f64(0.0), "0.0");
+        assert_eq!(json_f64(f64::NAN), "0.0");
+        assert_eq!(json_f64(f64::INFINITY), "0.0");
+    }
+
+    #[test]
+    fn summary_splits_busy_wait_and_attributes_barrier_to_phase() {
+        let log = log_of(vec![vec![
+            ev(Code::QkvGemm, 0, 30_000_000, 0, 0),
+            ev(Code::Barrier, 30_000_000, 40_000_000, Code::QkvGemm as u32, 1),
+            ev(Code::Attn, 40_000_000, 50_000_000, 0, 2),
+            ev(Code::Finish, 50_000_000, 50_000_000, 1, 3),
+        ]]);
+        let sum = TraceSummary::from_log(&log);
+        assert_eq!(sum.events, 4);
+        assert_eq!(sum.dropped, 0);
+        let w = &sum.workers[0];
+        assert!((w.busy_s - 0.040).abs() < 1e-9, "busy {}", w.busy_s);
+        assert!((w.wait_s - 0.010).abs() < 1e-9, "wait {}", w.wait_s);
+        let qkv = sum.phases.iter().find(|p| p.name == "qkv_gemm").unwrap();
+        assert!((qkv.total_s - 0.030).abs() < 1e-9);
+        assert!((qkv.barrier_wait_s - 0.010).abs() < 1e-9);
+        assert!((qkv.wait_frac() - 0.25).abs() < 1e-9);
+        // The heaviest phase leads.
+        assert_eq!(sum.phases[0].name, "qkv_gemm");
+        let r = sum.render();
+        assert!(r.contains("ev=4"));
+        assert!(r.contains("qkv_gemm"));
+        let js = sum.to_json();
+        assert!(js.starts_with("{\"events\":4,\"dropped\":0,"));
+        assert!(js.contains("\"phases\":["));
+        assert!(js.contains("\"workers\":["));
+    }
+
+    #[test]
+    fn summary_survives_ring_wrap() {
+        let epoch = Instant::now();
+        let mut ring = Ring::with_capacity(4, epoch);
+        for i in 0..20u64 {
+            ring.record(Code::Attn, i * 10, i * 10 + 5, 0);
+        }
+        let log = TraceLog {
+            workers: vec![WorkerTrace {
+                tid: 0,
+                name: "worker 0".into(),
+                events: ring.events(),
+                dropped: ring.dropped(),
+            }],
+        };
+        let sum = TraceSummary::from_log(&log);
+        assert_eq!(sum.events + sum.dropped, 20);
+        assert!(sum.dropped > 0);
+    }
+}

@@ -67,11 +67,13 @@
 //! per GEMM phase.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
 
 use super::tiered::{ColdKv, KvQuant, TierOp};
 use crate::coordinator::argmax;
 use crate::dist::{MatShard, ShardSpec};
 use crate::model::{Qwen3Config, Qwen3Weights};
+use crate::obs::{self, Code, Ring, TraceLog, WorkerTrace};
 use crate::ntt::{
     add_inplace, attn_context_paged_accum, attn_context_quant_i8, attn_row_causal_paged,
     attn_scores_paged, attn_scores_quant_i8, mul_inplace, paged_row, rmsnorm, rope_inplace,
@@ -293,6 +295,23 @@ impl ShardCtx {
     }
 }
 
+/// Barrier wait with optional tracing: records a [`Code::Barrier`]
+/// span covering the wait, with `arg` naming the phase the barrier
+/// closes — per-phase barrier time is the load-imbalance signal the
+/// trace summary reports. The untraced arm is exactly
+/// `barrier.wait()`.
+#[inline]
+fn traced_wait(barrier: &SpinBarrier, tr: &mut Option<&mut Ring>, phase: Code) {
+    match tr {
+        None => barrier.wait(),
+        Some(r) => {
+            let t0 = r.now_ns();
+            barrier.wait();
+            r.close(Code::Barrier, t0, phase as u32);
+        }
+    }
+}
+
 /// One barrier-separated SPMD step, executed by all `t` participants
 /// (the controller as worker 0, plus the parked workers released into
 /// it). Per-row phases shard token rows with `splits`; GEMM phases
@@ -321,6 +340,7 @@ fn spmd_step(
     barrier: &SpinBarrier,
     scratch: &mut Vec<f32>,
     colbuf: &mut Vec<f32>,
+    tr: &mut Option<&mut Ring>,
 ) {
     // SAFETY: the controller wrote this step's slots + row map before
     // releasing the workers through the barrier, and rewrites them only
@@ -362,18 +382,21 @@ fn spmd_step(
         sharding.w_gate == MatShard::Replicated && sharding.w_up == MatShard::Replicated;
 
     // Phase 0: embedding gather, per-row shard.
+    let t_ph = obs::mark(tr);
     for r in r0..r1 {
         let (si, off) = rows[r];
         let token = slots[si as usize].tokens[off as usize];
         unsafe { st.x.slice_mut(r * h, (r + 1) * h) }
             .copy_from_slice(weights.embedding.row(token % vocab));
     }
-    barrier.wait();
+    obs::span(tr, Code::Embed, t_ph, 0);
+    traced_wait(barrier, tr, Code::Embed);
 
     for l in 0..cfg.layers {
         let w = &weights.layers[l];
         let pw = &packed[l];
         // Phase 1: attention RMSNorm, per-row shard.
+        let t_ph = obs::mark(tr);
         for r in r0..r1 {
             unsafe {
                 rmsnorm(
@@ -384,19 +407,23 @@ fn spmd_step(
                 );
             }
         }
-        barrier.wait();
+        obs::span(tr, Code::Norm, t_ph, 0);
+        traced_wait(barrier, tr, Code::Norm);
         // Phase 2: batched QKV projections under each matrix's
         // dist-chosen layout — with chunked prefill these are genuinely
         // tall GEMMs (M = total step tokens), each worker streaming its
         // weight share once for its row panels.
+        let t_ph = obs::mark(tr);
         unsafe {
             let xn = &st.xn.read()[..n * h];
             shard.gemm(&pw.wq, sharding.wq, xn, n, &st.q, qdim, scratch, colbuf);
             shard.gemm(&pw.wk, sharding.wk, xn, n, &st.kvec, kvdim, scratch, colbuf);
             shard.gemm(&pw.wv, sharding.wv, xn, n, &st.vvec, kvdim, scratch, colbuf);
         }
-        barrier.wait();
+        obs::span(tr, Code::QkvGemm, t_ph, 0);
+        traced_wait(barrier, tr, Code::QkvGemm);
         // Phase 3: RoPE, per-row shard (positions differ per row).
+        let t_ph = obs::mark(tr);
         for r in r0..r1 {
             let (si, off) = rows[r];
             let pos = slots[si as usize].pos + off as usize;
@@ -409,7 +436,8 @@ fn spmd_step(
                 unsafe { rope_inplace(st.kvec.slice_mut(o, o + hd), pos, cfg.rope_theta) };
             }
         }
-        barrier.wait();
+        obs::span(tr, Code::Rope, t_ph, 0);
+        traced_wait(barrier, tr, Code::Rope);
         // Phase 4 (serial): commit every row's K/V through its slot's
         // block table, in ascending row order — which is ascending
         // position order within each slot (the row map is span-major).
@@ -420,6 +448,7 @@ fn spmd_step(
         // attention is what makes in-chunk causal attention a plain
         // windowed read.
         if wi == 0 {
+            let t_ph = obs::mark(tr);
             kv_cell.commit(wi, |kv| {
                 let kvec = st.kvec.read();
                 let vvec = st.vvec.read();
@@ -433,8 +462,9 @@ fn spmd_step(
                     kv.v[l].row_mut(row).copy_from_slice(&vvec[r * kvdim..(r + 1) * kvdim]);
                 }
             });
+            obs::span(tr, Code::KvCommit, t_ph, 0);
         }
-        barrier.wait();
+        traced_wait(barrier, tr, Code::KvCommit);
         // Phase 5: paged GQA attention, per-row shard, causal window
         // `[0, pos]` per row. Rows with a cold prefix take the hybrid
         // path: the leading full blocks are read *in place* from the
@@ -444,6 +474,7 @@ fn spmd_step(
         // order as the dense path. Rows without one take the fused
         // causal row kernel (the exact pre-tiering arithmetic).
         let kv = kv_cell.read();
+        let t_ph = obs::mark(tr);
         for r in r0..r1 {
             let (si, off) = rows[r];
             let s = &slots[si as usize];
@@ -529,14 +560,18 @@ fn spmd_step(
                 }
             }
         }
-        barrier.wait();
+        obs::span(tr, Code::Attn, t_ph, 0);
+        traced_wait(barrier, tr, Code::Attn);
         // Phase 6: output projection under its dist-chosen layout.
+        let t_ph = obs::mark(tr);
         unsafe {
             let ctx = &st.ctx.read()[..n * qdim];
             shard.gemm(&pw.wo, sharding.wo, ctx, n, &st.attn, h, scratch, colbuf);
         }
-        barrier.wait();
+        obs::span(tr, Code::OGemm, t_ph, 0);
+        traced_wait(barrier, tr, Code::OGemm);
         // Phase 7: residual + MLP RMSNorm, per-row shard.
+        let t_ph = obs::mark(tr);
         for r in r0..r1 {
             unsafe {
                 add_inplace(
@@ -551,12 +586,14 @@ fn spmd_step(
                 );
             }
         }
-        barrier.wait();
+        obs::span(tr, Code::Norm, t_ph, 0);
+        traced_wait(barrier, tr, Code::Norm);
         // Phase 8: SwiGLU gate/up under their dist-chosen layouts. With
         // both replicated (the seed path) the elementwise tail runs
         // fused on the rows this worker just computed; column-sharded
         // gate/up publish the assembled full-width rows through an
         // extra barrier first, then the tail shards per token row.
+        let t_ph = obs::mark(tr);
         unsafe {
             let xn = &st.xn.read()[..n * h];
             shard.gemm(&pw.w_gate, sharding.w_gate, xn, n, &st.gate, inter, scratch, colbuf);
@@ -567,8 +604,10 @@ fn spmd_step(
                 mul_inplace(g, &st.up.read()[p0 * inter..p1 * inter]);
             }
         }
+        obs::span(tr, Code::MlpGemm, t_ph, 0);
         if !fused_mlp {
-            barrier.wait();
+            traced_wait(barrier, tr, Code::MlpGemm);
+            let t_tail = obs::mark(tr);
             for r in r0..r1 {
                 unsafe {
                     let g = st.gate.slice_mut(r * inter, (r + 1) * inter);
@@ -576,15 +615,19 @@ fn spmd_step(
                     mul_inplace(g, &st.up.read()[r * inter..(r + 1) * inter]);
                 }
             }
+            obs::span(tr, Code::MlpGemm, t_tail, 0);
         }
-        barrier.wait();
+        traced_wait(barrier, tr, Code::MlpGemm);
         // Phase 9: down projection under its dist-chosen layout.
+        let t_ph = obs::mark(tr);
         unsafe {
             let gate = &st.gate.read()[..n * inter];
             shard.gemm(&pw.w_down, sharding.w_down, gate, n, &st.down, h, scratch, colbuf);
         }
-        barrier.wait();
+        obs::span(tr, Code::MlpGemm, t_ph, 0);
+        traced_wait(barrier, tr, Code::MlpGemm);
         // Phase 10: residual, per-row shard.
+        let t_ph = obs::mark(tr);
         for r in r0..r1 {
             unsafe {
                 add_inplace(
@@ -593,9 +636,11 @@ fn spmd_step(
                 );
             }
         }
-        barrier.wait();
+        obs::span(tr, Code::Norm, t_ph, 0);
+        traced_wait(barrier, tr, Code::Norm);
     }
     // Final norm (per-row shard) + LM head (MR-panel shard).
+    let t_ph = obs::mark(tr);
     for r in r0..r1 {
         unsafe {
             rmsnorm(
@@ -606,14 +651,17 @@ fn spmd_step(
             );
         }
     }
-    barrier.wait();
+    obs::span(tr, Code::Norm, t_ph, 0);
+    traced_wait(barrier, tr, Code::Norm);
+    let t_ph = obs::mark(tr);
     unsafe {
         let xn = &st.xn.read()[..n * h];
         shard.gemm(packed_lm_head, sharding.lm_head, xn, n, &st.logits, vocab, scratch, colbuf);
     }
+    obs::span(tr, Code::LmHead, t_ph, 0);
     // Final barrier: publishes every logits shard to the controller and
     // parks the workers for the next step.
-    barrier.wait();
+    traced_wait(barrier, tr, Code::LmHead);
 }
 
 /// The batched paged-attention decode engine.
@@ -653,6 +701,10 @@ pub struct BatchStepper<'a, 'kv> {
     max_rows: usize,
     scratch: Vec<f32>,
     colbuf: Vec<f32>,
+    /// The controller's event ring when the run is traced
+    /// ([`BatchEngine::run_traced`]); `None` (one branch per hook, no
+    /// allocation) otherwise.
+    trace: Option<&'a mut Ring>,
 }
 
 impl BatchStepper<'_, '_> {
@@ -672,26 +724,42 @@ impl BatchStepper<'_, '_> {
     /// then all fetches (a fetch may target a hot block a spill vacated
     /// in the same iteration, so the spill must read first). Runs on the
     /// controller while every worker is parked at the start barrier —
-    /// the barrier release publishes the moved rows to the step.
+    /// the barrier release publishes the moved rows to the step. The
+    /// two directions run in separate commit windows so a traced run
+    /// attributes each its own span (`arg` = op count).
     pub fn tier_ops(&mut self, ops: &[TierOp]) {
         if ops.is_empty() {
             return;
         }
         let cold_cell = self.cold_cell.expect("tier ops on an engine without a cold tier");
-        cold_cell.commit(0, |cold| {
-            self.kv_cell.commit(0, |kv| {
-                for op in ops {
-                    if let TierOp::Spill { hot, cold: slot, filled } = *op {
-                        cold.spill(slot, kv, hot, filled);
+        let n_spill = ops.iter().filter(|o| matches!(o, TierOp::Spill { .. })).count() as u32;
+        let n_fetch = ops.len() as u32 - n_spill;
+        if n_spill > 0 {
+            let t0 = obs::mark(&self.trace);
+            cold_cell.commit(0, |cold| {
+                self.kv_cell.commit(0, |kv| {
+                    for op in ops {
+                        if let TierOp::Spill { hot, cold: slot, filled } = *op {
+                            cold.spill(slot, kv, hot, filled);
+                        }
                     }
-                }
-                for op in ops {
-                    if let TierOp::Fetch { cold: slot, hot, .. } = *op {
-                        cold.fetch(slot, kv, hot);
-                    }
-                }
+                });
             });
-        });
+            obs::span(&mut self.trace, Code::TierSpill, t0, n_spill);
+        }
+        if n_fetch > 0 {
+            let t0 = obs::mark(&self.trace);
+            cold_cell.commit(0, |cold| {
+                self.kv_cell.commit(0, |kv| {
+                    for op in ops {
+                        if let TierOp::Fetch { cold: slot, hot, .. } = *op {
+                            cold.fetch(slot, kv, hot);
+                        }
+                    }
+                });
+            });
+            obs::span(&mut self.trace, Code::TierFetch, t0, n_fetch);
+        }
     }
 
     /// Advance every slot by its span; returns the argmax token of the
@@ -773,6 +841,7 @@ impl BatchStepper<'_, '_> {
             self.barrier,
             &mut self.scratch,
             &mut self.colbuf,
+            &mut self.trace,
         );
         let vocab = self.weights.cfg.vocab;
         let logits = self.st.logits.read();
@@ -903,6 +972,26 @@ impl<'w> BatchEngine<'w> {
         max_rows: usize,
         driver: impl FnOnce(&mut BatchStepper<'_, '_>) -> R,
     ) -> R {
+        self.run_traced(threads, max_rows, None, driver).0
+    }
+
+    /// As [`BatchEngine::run`], optionally traced: with
+    /// `trace = Some((epoch, capacity))` every worker (the controller
+    /// included) records its phase, barrier-wait, and tier-op spans
+    /// into a pre-allocated [`Ring`] of `capacity` events stamped
+    /// against the shared `epoch`, and the per-worker timelines come
+    /// back as a [`TraceLog`]. Tracing records timestamps only — it
+    /// never touches the arithmetic, the partitions, or the barrier
+    /// protocol — so a traced run computes bitwise-identical outputs
+    /// (pinned by the differential tests in `rust/tests/serving.rs`).
+    /// `trace = None` is the zero-cost path: every hook is one branch.
+    pub fn run_traced<R>(
+        &mut self,
+        threads: usize,
+        max_rows: usize,
+        trace: Option<(Instant, usize)>,
+        driver: impl FnOnce(&mut BatchStepper<'_, '_>) -> R,
+    ) -> (R, Option<TraceLog>) {
         let max_rows = max_rows.max(1);
         let lanes = threads.clamp(1, max_rows);
         let mut sharding = self.sharding;
@@ -917,10 +1006,20 @@ impl<'w> BatchEngine<'w> {
         let packed_lm_head = &self.packed_lm_head;
         let kv_cell = KvCell::new(&mut self.kv);
         let cold_cell = self.cold.as_mut().map(KvCell::new);
-        std::thread::scope(|s| {
+        // Pre-allocate one ring per worker before the scope opens; the
+        // hot path only ever writes into its own ring through an
+        // `Option<&mut Ring>` (no locks, no allocation).
+        let mut rings: Vec<Ring> = match trace {
+            Some((epoch, cap)) => (0..t).map(|_| Ring::with_capacity(cap, epoch)).collect(),
+            None => Vec::new(),
+        };
+        let result = std::thread::scope(|s| {
+            let mut ring_slots: Vec<Option<&mut Ring>> = rings.iter_mut().map(Some).collect();
+            ring_slots.resize_with(t, || None);
             for wi in 1..t {
                 let (st, barrier, cmd, kv_cell) = (&st, &barrier, &cmd, &kv_cell);
                 let cold_cell = cold_cell.as_ref();
+                let mut ring = ring_slots[wi].take();
                 s.spawn(move || {
                     // A panicking worker poisons the barrier so the
                     // controller and its sibling workers unwind instead
@@ -930,11 +1029,14 @@ impl<'w> BatchEngine<'w> {
                     let mut colbuf = Vec::new();
                     loop {
                         // Park until the controller publishes the next
-                        // step (or shutdown).
+                        // step (or shutdown); traced, the park span is
+                        // this worker's between-steps idle time.
+                        let t0 = obs::mark(&ring);
                         barrier.wait();
                         if cmd.load(Ordering::Acquire) == CMD_EXIT {
                             break;
                         }
+                        obs::span(&mut ring, Code::Park, t0, 0);
                         spmd_step(
                             wi,
                             t,
@@ -950,6 +1052,7 @@ impl<'w> BatchEngine<'w> {
                             barrier,
                             &mut scratch,
                             &mut colbuf,
+                            &mut ring,
                         );
                     }
                 });
@@ -969,6 +1072,7 @@ impl<'w> BatchEngine<'w> {
                 max_rows,
                 scratch: Vec::new(),
                 colbuf: Vec::new(),
+                trace: ring_slots[0].take(),
             };
             // Workers stay parked between steps; if the driver unwinds
             // (scheduler panics, test assertions, a panic inside the
@@ -995,7 +1099,24 @@ impl<'w> BatchEngine<'w> {
                     std::panic::resume_unwind(payload)
                 }
             }
-        })
+        });
+        let log = (!rings.is_empty()).then(|| TraceLog {
+            workers: rings
+                .iter()
+                .enumerate()
+                .map(|(wi, r)| WorkerTrace {
+                    tid: wi as u32,
+                    name: if wi == 0 {
+                        "worker 0 (controller)".to_string()
+                    } else {
+                        format!("worker {wi}")
+                    },
+                    events: r.events(),
+                    dropped: r.dropped(),
+                })
+                .collect(),
+        });
+        (result, log)
     }
 
     /// Advance every slot by its span; returns the argmax token of the

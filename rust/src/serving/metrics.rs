@@ -12,6 +12,10 @@ pub struct ServingMetrics {
     pub ttft: Stats,
     /// Time-per-output-token across decode iterations, seconds.
     pub tpot: Stats,
+    /// End-to-end latency per request, seconds (submission -> finish).
+    /// TTFT bounds the head of a request; this is the whole-request
+    /// tail the SLO story needs.
+    pub request_e2e: Stats,
     /// Queue depth sampled once per scheduler iteration.
     pub queue_depth: Stats,
     /// Running batch size sampled once per scheduler iteration.
@@ -47,6 +51,16 @@ pub struct ServingMetrics {
     /// Span length of every prefilling sequence per iteration (chunked
     /// prefill's actual packing; all-1 at `prefill_chunk = 1`).
     pub chunk_size: Stats,
+    /// Iterations whose step carried no prompt rows (pure decode).
+    /// Their mean wall time is directly comparable to the serve plan's
+    /// per-iteration decode roofline prediction.
+    pub decode_only_iters: usize,
+    /// Wall seconds summed over the decode-only iterations.
+    pub decode_only_s: f64,
+    /// Iterations whose step carried at least one prompt row.
+    pub prefill_iters: usize,
+    /// Wall seconds summed over the prefill-carrying iterations.
+    pub prefill_iters_s: f64,
     /// Cold blocks re-attached from the prefix cache on swap-in instead
     /// of being fetched (exact fp32, zero bytes moved).
     pub swap_reattached: usize,
@@ -106,12 +120,36 @@ impl ServingMetrics {
         }
     }
 
+    /// Mean wall time of a decode-only iteration (seconds; 0.0 when
+    /// none ran) — the measured side of the predicted-vs-measured line
+    /// in `ServeReport` (the plan predicts per-iteration decode cost).
+    pub fn decode_iter_mean_s(&self) -> f64 {
+        if self.decode_only_iters > 0 {
+            self.decode_only_s / self.decode_only_iters as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean wall time of a prefill-carrying iteration (seconds; 0.0
+    /// when none ran).
+    pub fn prefill_iter_mean_s(&self) -> f64 {
+        if self.prefill_iters > 0 {
+            self.prefill_iters_s / self.prefill_iters as f64
+        } else {
+            0.0
+        }
+    }
+
     pub fn render(&self) -> String {
         let mut s = format!(
-            "ttft p50={:.2}ms tpot p50={:.2}ms batch mean={:.1} queue mean={:.1} \
+            "ttft p50={:.2}ms tpot p50={:.2}ms req e2e p50={:.2}ms p99={:.2}ms \
+             batch mean={:.1} queue mean={:.1} \
              pool peak={} blocks preempt={} prefix_hits={} iters={}",
             self.ttft.percentile(50.0) * 1e3,
             self.tpot.percentile(50.0) * 1e3,
+            self.request_e2e.percentile(50.0) * 1e3,
+            self.request_e2e.p99() * 1e3,
             self.batch_size.mean(),
             self.queue_depth.mean(),
             self.peak_blocks_in_use,
@@ -179,6 +217,31 @@ mod tests {
         let idle = ServingMetrics::default();
         assert_eq!(idle.prefill_tokens_per_s(), 0.0);
         assert!(!idle.render().contains("prefill="));
+    }
+
+    #[test]
+    fn request_e2e_renders_p50_and_p99() {
+        let mut m = ServingMetrics::default();
+        for i in 1..=100 {
+            m.request_e2e.push(i as f64 * 1e-3);
+        }
+        let s = m.render();
+        assert!(s.contains("req e2e p50=50.00ms"), "{s}");
+        assert!(s.contains("p99=99.00ms"), "{s}");
+    }
+
+    #[test]
+    fn iteration_mix_means() {
+        let m = ServingMetrics {
+            decode_only_iters: 4,
+            decode_only_s: 0.2,
+            prefill_iters: 2,
+            prefill_iters_s: 0.5,
+            ..Default::default()
+        };
+        assert!((m.decode_iter_mean_s() - 0.05).abs() < 1e-12);
+        assert!((m.prefill_iter_mean_s() - 0.25).abs() < 1e-12);
+        assert_eq!(ServingMetrics::default().decode_iter_mean_s(), 0.0);
     }
 
     #[test]

@@ -41,6 +41,7 @@ use super::blocks::{BlockTable, KvBlockManager};
 use super::metrics::ServingMetrics;
 use super::tiered::{SwapPolicy, TierConfig, TierOp, TierState};
 use crate::coordinator::Request;
+use crate::obs::{Code, Ring};
 
 /// Scheduler state of one sequence.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -391,6 +392,11 @@ pub struct ContinuousScheduler {
     pub metrics: ServingMetrics,
     iter: u64,
     finished: Vec<Sequence>,
+    /// Event ring of the scheduler track when the run is traced
+    /// ([`ContinuousScheduler::set_trace`]): `schedule()` spans,
+    /// whole-iteration spans, and per-request lifecycle instants.
+    /// `None` (the default) records nothing — every hook is one branch.
+    trace: Option<Ring>,
 }
 
 impl ContinuousScheduler {
@@ -407,7 +413,23 @@ impl ContinuousScheduler {
             metrics,
             iter: 0,
             finished: Vec::new(),
+            trace: None,
         }
+    }
+
+    /// Attach a pre-allocated event ring: the scheduler then records
+    /// its decision spans and request lifecycle edges (enqueue, admit,
+    /// first token, preempt, swap, finish) as the run's scheduler
+    /// track. Stamp the ring against the same epoch as the engine's
+    /// worker rings so the timelines merge.
+    pub fn set_trace(&mut self, ring: Ring) {
+        self.trace = Some(ring);
+    }
+
+    /// Detach the scheduler's event ring after the run (for the merged
+    /// [`crate::obs::TraceLog`]).
+    pub fn take_trace(&mut self) -> Option<Ring> {
+        self.trace.take()
     }
 
     /// Wire the model geometry into the tier's byte accounting (called
@@ -476,8 +498,15 @@ impl ContinuousScheduler {
             reattached_cold: Vec::new(),
             submitted: Instant::now(),
         };
+        if let Some(r) = self.trace.as_mut() {
+            r.instant(Code::Enqueue, req.id as u32);
+        }
         if req.prompt.is_empty() || req.max_new_tokens == 0 {
             seq.state = SeqState::Done;
+            self.metrics.request_e2e.push(seq.submitted.elapsed().as_secs_f64());
+            if let Some(r) = self.trace.as_mut() {
+                r.instant(Code::Finish, seq.id as u32);
+            }
             self.finished.push(seq);
             return;
         }
@@ -503,6 +532,7 @@ impl ContinuousScheduler {
     /// admitted sequences if the pool runs dry), and sample the
     /// occupancy metrics. Returns the number of runnable sequences.
     pub fn schedule(&mut self) -> usize {
+        let t0 = self.trace.as_ref().map(|r| r.now_ns());
         self.iter += 1;
         self.admit();
         self.plan_spans();
@@ -535,6 +565,9 @@ impl ContinuousScheduler {
                 .cold_occupancy
                 .push(tier.in_use() as f64 / tier.slots().max(1) as f64);
             self.metrics.peak_cold_in_use = tier.max_in_use;
+        }
+        if let (Some(r), Some(t0)) = (self.trace.as_mut(), t0) {
+            r.close(Code::Schedule, t0, self.running.len() as u32);
         }
         self.running.len()
     }
@@ -569,6 +602,32 @@ impl ContinuousScheduler {
         let bs = self.config.block_size;
         let total_rows: usize = self.running.iter().map(|s| s.span).sum();
         let per_token_s = if total_rows == 0 { 0.0 } else { iter_s / total_rows as f64 };
+        // Iteration-mix accounting: decode-only iterations (no prompt
+        // rows in the step) measure exactly what the serve plan's
+        // per-iteration decode roofline predicts, so their mean is the
+        // predicted-vs-measured comparison `ServeReport` renders.
+        let prefill_rows: usize = self
+            .running
+            .iter()
+            .map(|s| s.span.min(s.prompt_len.saturating_sub(s.pos)))
+            .sum();
+        if total_rows > 0 {
+            if prefill_rows == 0 {
+                self.metrics.decode_only_iters += 1;
+                self.metrics.decode_only_s += iter_s;
+            } else {
+                self.metrics.prefill_iters += 1;
+                self.metrics.prefill_iters_s += iter_s;
+            }
+        }
+        // The whole-iteration span, reconstructed backward from the
+        // measured wall time so the driver loop needs no hooks of its
+        // own (`arg` = token rows in the step).
+        if let Some(r) = self.trace.as_mut() {
+            let t1 = r.now_ns();
+            let t0 = t1.saturating_sub((iter_s * 1e9) as u64);
+            r.record(Code::Iterate, t0, t1, total_rows as u32);
+        }
         for (seq, sample) in self.running.iter_mut().zip(samples) {
             // The re-attach bookkeeping of this iteration's swap-in is
             // consumed: the blocks were actually read by the step that
@@ -630,6 +689,9 @@ impl ContinuousScheduler {
             if let Some(tok) = *sample {
                 if seq.generated.is_empty() {
                     self.metrics.ttft.push(seq.submitted.elapsed().as_secs_f64());
+                    if let Some(r) = self.trace.as_mut() {
+                        r.instant(Code::FirstToken, seq.id as u32);
+                    }
                 }
                 seq.generated.push(tok);
                 if seq.generated.len() < seq.max_new {
@@ -652,6 +714,10 @@ impl ContinuousScheduler {
                     for slot in seq.cold.drain(..) {
                         tier.release(slot);
                     }
+                }
+                self.metrics.request_e2e.push(seq.submitted.elapsed().as_secs_f64());
+                if let Some(r) = self.trace.as_mut() {
+                    r.instant(Code::Finish, seq.id as u32);
                 }
                 self.finished.push(seq);
             } else {
@@ -708,6 +774,9 @@ impl ContinuousScheduler {
             seq.state =
                 if covered >= seq.prompt_len { SeqState::Decode } else { SeqState::Prefill };
             seq.admitted_iter = self.iter;
+            if let Some(r) = self.trace.as_mut() {
+                r.instant(Code::Admit, seq.id as u32);
+            }
             self.running.push(seq);
         }
     }
@@ -806,6 +875,9 @@ impl ContinuousScheduler {
         seq.resume_direct = keep > 0;
         seq.state = if seq.pos >= seq.prompt_len { SeqState::Decode } else { SeqState::Prefill };
         seq.admitted_iter = self.iter;
+        if let Some(r) = self.trace.as_mut() {
+            r.instant(Code::SwapIn, seq.id as u32);
+        }
         self.running.push(seq);
         true
     }
@@ -863,6 +935,9 @@ impl ContinuousScheduler {
 
     fn preempt(&mut self, i: usize) {
         self.metrics.preemptions += 1;
+        if let Some(r) = self.trace.as_mut() {
+            r.instant(Code::Preempt, self.running[i].id as u32);
+        }
         // A sequence swapped in *this same iteration* still has fetch
         // ops pending (and/or re-attached blocks unread): revert the
         // admission (it goes back to the queue still swapped) instead
@@ -1017,6 +1092,9 @@ impl ContinuousScheduler {
         self.kv.release_table(&mut seq.table);
         seq.state = SeqState::Swapped;
         self.metrics.swap_preemptions += 1;
+        if let Some(r) = self.trace.as_mut() {
+            r.instant(Code::SwapOut, seq.id as u32);
+        }
         self.queue.push_front(seq);
         true
     }

@@ -147,6 +147,24 @@ impl Stats {
         let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
         s[idx.min(s.len() - 1)]
     }
+
+    /// 99th percentile — the tail-latency number SLO reporting keys on
+    /// (shorthand for `percentile(99.0)`; 0.0 on an empty set).
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Population standard deviation. 0.0 with fewer than two samples
+    /// (a single measurement has no spread to report).
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        let var = self.samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / self.samples.len() as f64;
+        var.sqrt()
+    }
 }
 
 /// Human-readable byte count (KiB/MiB/GiB).
@@ -236,6 +254,24 @@ mod tests {
         assert_eq!(s.percentile(-5.0), 1.0);
         assert_eq!(s.percentile(250.0), 10.0);
         assert_eq!(s.percentile(f64::NAN), s.percentile(50.0));
+    }
+
+    #[test]
+    fn p99_and_stddev() {
+        let mut s = Stats::default();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.p99(), s.percentile(99.0));
+        // Population stddev of 1..=100: sqrt((100^2 - 1) / 12).
+        let expect = ((100.0f64 * 100.0 - 1.0) / 12.0).sqrt();
+        assert!((s.stddev() - expect).abs() < 1e-9, "stddev {}", s.stddev());
+        // Degenerate sets report zero spread, never NaN.
+        assert_eq!(Stats::default().stddev(), 0.0);
+        let mut one = Stats::default();
+        one.push(5.0);
+        assert_eq!(one.stddev(), 0.0);
+        assert_eq!(one.p99(), 5.0);
     }
 
     #[test]

@@ -649,6 +649,156 @@ fn sharded_serve_composes_with_chunking_preemption_and_quant() {
     }
 }
 
+/// The observability tentpole differential: tracing is timestamps only
+/// — a traced serve is bitwise token-identical to the untraced run at
+/// every (threads × shards) matrix point, across the plain pool, the
+/// lossless tiered pool under forced swap pressure, and chunked
+/// prefill. The traced report must additionally carry a non-empty
+/// phase/utilization summary with one track per engine worker plus the
+/// scheduler's.
+#[test]
+fn traced_serve_is_bitwise_identical_across_the_matrix() {
+    let reqs = synthetic_workload(3, 8, 10, Qwen3Config::tiny().vocab);
+    let machine = MachineSpec::test_numa();
+    let max_batch = 3usize;
+    let configs: [(&str, ContinuousConfig); 3] = [
+        (
+            "plain",
+            ContinuousConfig::builder()
+                .block_size(4)
+                .num_blocks(64)
+                .max_batch(max_batch)
+                .build(),
+        ),
+        (
+            "tiered-f32",
+            ContinuousConfig::builder()
+                .block_size(4)
+                .num_blocks(7)
+                .max_batch(max_batch)
+                .tiering(TierConfig { quant: KvQuant::F32, ..TierConfig::new(16) })
+                .build(),
+        ),
+        (
+            "chunked",
+            ContinuousConfig::builder()
+                .block_size(4)
+                .num_blocks(64)
+                .max_batch(max_batch)
+                .prefill_chunk(3)
+                .build(),
+        ),
+    ];
+    for (name, ccfg) in &configs {
+        let max_rows = ccfg.row_capacity();
+        for shards in shard_counts() {
+            for threads in thread_counts() {
+                let mut run = |trace: bool| {
+                    let (_, mut c) = coordinator(61, 1);
+                    let mut opts = ServeOptions::continuous(ccfg.clone())
+                        .threads(threads)
+                        .shards(shards)
+                        .machine(machine.clone());
+                    if trace {
+                        opts = opts.trace();
+                    }
+                    c.serve(&reqs, &opts)
+                };
+                let plain = run(false);
+                let traced = run(true);
+                assert_eq!(
+                    plain.outputs, traced.outputs,
+                    "tracing changed {name} outputs at {threads} threads x {shards} shards"
+                );
+                assert!(plain.trace.is_none(), "tracing must be off by default");
+                let t = traced.trace.as_ref().expect("traced runs carry a summary");
+                assert!(t.events > 0, "{name}: a served workload must record events");
+                // One track per engine worker (lanes × shards) plus the
+                // scheduler's.
+                let lanes = threads.clamp(1, max_rows);
+                assert_eq!(
+                    t.workers.len(),
+                    lanes * shards + 1,
+                    "{name} at {threads}T x {shards}S"
+                );
+                assert_eq!(t.workers.last().unwrap().name, "scheduler");
+                assert!(
+                    t.phases.iter().any(|p| p.name == "iterate"),
+                    "{name}: the scheduler track must record iteration spans"
+                );
+                if *name == "tiered-f32" {
+                    let m = traced.serving.as_ref().unwrap();
+                    assert!(m.swap_preemptions > 0, "forced pressure must swap");
+                    assert!(
+                        t.phases.iter().any(|p| p.name == "tier_spill"),
+                        "swapping runs must record tier-spill spans: {:?}",
+                        t.phases.iter().map(|p| p.name).collect::<Vec<_>>()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `--trace-out`: the exported file is Chrome-trace-event JSON in the
+/// object form Perfetto loads, with one `thread_name` metadata record
+/// per track, B/E span pairs, and thread-scoped instants for request
+/// lifecycle edges.
+#[test]
+fn trace_out_writes_chrome_json() {
+    let (cfg, mut c) = coordinator(62, 1);
+    let reqs = synthetic_workload(2, 4, 5, cfg.vocab);
+    let path = std::env::temp_dir().join(format!("pallas_trace_{}.json", std::process::id()));
+    let ccfg =
+        ContinuousConfig::builder().block_size(4).num_blocks(32).max_batch(2).build();
+    let rep = c.serve(
+        &reqs,
+        &ServeOptions::continuous(ccfg).threads(2).trace_out(path.to_str().unwrap()),
+    );
+    assert!(rep.trace.is_some());
+    let body = std::fs::read_to_string(&path).expect("trace file written");
+    std::fs::remove_file(&path).ok();
+    assert!(body.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["), "{}", &body[..64]);
+    assert!(body.ends_with("]}"), "trace must close the object form");
+    assert!(body.contains("\"name\":\"thread_name\""), "tracks must be named");
+    assert!(body.contains("\"worker 0 (controller)\""));
+    assert!(body.contains("\"scheduler\""));
+    assert!(body.contains("\"ph\":\"B\"") && body.contains("\"ph\":\"E\""));
+    assert!(body.contains("\"ph\":\"i\""), "lifecycle instants must be present");
+    assert!(body.contains("\"name\":\"lm_head\""), "phase spans must be present");
+    assert!(body.contains("\"name\":\"finish\""), "request lifecycle must be present");
+}
+
+/// The machine-readable report schema: `ServeReport::to_json` opens
+/// with the schema tag, and a traced run's JSON carries the plan,
+/// serving and trace sections as objects (CI parses the real thing
+/// with Python's json module via tools/trace_summary.py and
+/// tools/bench_compare.py).
+#[test]
+fn report_to_json_is_stable_and_complete() {
+    let (cfg, mut c) = coordinator(63, 1);
+    let reqs = synthetic_workload(3, 4, 6, cfg.vocab);
+    let machine = MachineSpec::ryzen_5900x();
+    let rep = c.serve(&reqs, &ServeOptions::autotuned(3).machine(machine).trace());
+    let j = rep.to_json();
+    assert!(j.starts_with("{\"schema\":\"serve_report.v1\",\"requests\":3,"), "{j}");
+    for key in [
+        "\"generated_tokens\":18",
+        "\"decode_tok_s\":",
+        "\"ttft_p50_s\":",
+        "\"plan\":{\"hash\":\"",
+        "\"predicted_decode_iter_s\":",
+        "\"serving\":{\"iterations\":",
+        "\"request_e2e_p50_s\":",
+        "\"trace\":{\"events\":",
+        "\"wait_frac\":",
+    ] {
+        assert!(j.contains(key), "missing {key} in {j}");
+    }
+    let depth = j.chars().fold(0i64, |d, c| d + (c == '{') as i64 - (c == '}') as i64);
+    assert_eq!(depth, 0, "{j}");
+}
+
 /// The engine's own generate() agrees with serve() outputs (the report
 /// path adds no divergence).
 #[test]

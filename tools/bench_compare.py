@@ -20,6 +20,11 @@ and records rather than fails. `--strict` gates on every regression;
 `--strict-modes sweep,wquant` gates only on regressions in the named
 scenarios (flip a scenario in once its noise summaries over a few runs
 sit comfortably under the threshold, leave the rest advisory).
+
+Since the serve_report.v1 schema landed, each sample nests the run's
+full `ServeReport::to_json()` under "report"; metrics are read from it
+when present (see `field`), with the flat sample keys kept as the
+fallback for committed pre-v1 artifacts.
 """
 
 import argparse
@@ -38,6 +43,21 @@ def load(path):
         return None
 
 
+def field(sample, name, default=None):
+    """Read a metric from a sample, preferring the nested
+    `serve_report.v1` object (`sample["report"]`, emitted by the bench
+    since the ServeReport::to_json schema landed) and falling back to
+    the flat sample keys that committed pre-v1 reports (BENCH_6/7.json)
+    carry. Both spell shared keys identically (decode_tok_s,
+    prefill_tok_s, threads, shards, weight_quant, ...), so the nested
+    object is a strict superset and the fallback is purely for old
+    artifacts."""
+    rep = sample.get("report")
+    if isinstance(rep, dict) and rep.get("schema") == "serve_report.v1" and name in rep:
+        return rep[name]
+    return sample.get(name, default)
+
+
 def key(sample):
     # Older reports predate the "mode" / "plan" / "weight_quant" /
     # "prefill_chunk" fields; the defaults keep them comparable. Keying
@@ -46,11 +66,14 @@ def key(sample):
     # byte volumes and step shapes, so collapsing them would report a
     # configuration ratio as a "regression". The plan hash does the
     # same for autotuned runs: a deliberate planner change re-keys the
-    # series rather than tripping the regression warning.
+    # series rather than tripping the regression warning. mode / plan /
+    # pressure / prefill_chunk are bench-scenario identity, which the
+    # per-run report does not know — those stay flat-only.
     return (sample.get("mode", "sweep"), sample.get("plan", ""),
-            sample.get("shards", 1),
-            sample.get("weight_quant", "f32"),
-            sample.get("prefill_chunk", 1), sample["pressure"], sample["threads"])
+            field(sample, "shards", 1),
+            field(sample, "weight_quant", "f32"),
+            sample.get("prefill_chunk", 1), sample["pressure"],
+            field(sample, "threads"))
 
 
 def metric(sample):
@@ -58,8 +81,8 @@ def metric(sample):
     generates almost nothing (its decode tok/s is noise), so it is
     tracked on prefill throughput instead."""
     if sample.get("mode", "sweep") == "prefill":
-        return "prefill_tok_s", sample.get("prefill_tok_s", 0.0)
-    return "decode_tok_s", sample["decode_tok_s"]
+        return "prefill_tok_s", field(sample, "prefill_tok_s", 0.0)
+    return "decode_tok_s", field(sample, "decode_tok_s")
 
 
 def main():

@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Validate and summarize a serve-path Chrome trace.
+
+Consumes the JSON written by `repro serve --trace-out trace.json`
+(Chrome Trace Event Format, the dialect Perfetto's legacy importer
+accepts) and acts as both:
+
+* a validator — CI runs this against the bench-smoke trace so a
+  malformed export (unbalanced B/E spans, time going backwards within a
+  track, missing metadata) fails the job instead of silently producing
+  a file Perfetto rejects; and
+* a terminal summary — per-phase total duration and counts, per-track
+  event totals, so a trace can be sanity-checked without opening a UI.
+
+Checks enforced (exit 1 on any violation):
+* top level is an object with "traceEvents" (a list) and
+  "displayTimeUnit";
+* every event is an object with "name"-or-"ph:E", "ph", "pid", "tid",
+  "ts" (E records carry no name by design — the B they close names the
+  span);
+* within each (pid, tid) track, "ts" is non-decreasing in emitted
+  order (the exporter sorts per track; Perfetto tolerates disorder but
+  it would mean the merge is wrong);
+* within each track, B/E records balance like brackets: no E without
+  an open B, no B left open at end-of-track;
+* every track with span/instant events has a thread_name metadata
+  record ("ph":"M").
+
+Usage: tools/trace_summary.py trace.json [--top N]
+Stdlib only (json/argparse) — runs anywhere CI has python3.
+"""
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+
+def fail(msg):
+    print(f"trace-summary: INVALID: {msg}")
+    return 1
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome-trace JSON written by --trace-out")
+    ap.add_argument("--top", type=int, default=12,
+                    help="phases to list in the duration table (default 12)")
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return fail(f"cannot parse {args.trace}: {e}")
+
+    if not isinstance(doc, dict):
+        return fail("top level must be an object (the JSON Object Format), not an array")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return fail('missing or non-list "traceEvents"')
+    if "displayTimeUnit" not in doc:
+        return fail('missing "displayTimeUnit"')
+    if not events:
+        return fail("empty traceEvents — the run recorded nothing")
+
+    track_names = {}          # (pid, tid) -> thread_name
+    open_spans = defaultdict(list)   # (pid, tid) -> stack of open B names
+    last_ts = {}              # (pid, tid) -> last seen ts
+    phase_total_us = defaultdict(float)
+    phase_count = defaultdict(int)
+    instant_count = defaultdict(int)
+    track_events = defaultdict(int)
+    n_spans = 0
+
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            return fail(f"event #{i} is not an object")
+        ph = ev.get("ph")
+        if ph is None:
+            return fail(f'event #{i} has no "ph"')
+        for k in ("pid", "tid"):
+            if k not in ev:
+                return fail(f'event #{i} ({ph}) has no "{k}"')
+        track = (ev["pid"], ev["tid"])
+
+        if ph == "M":
+            if ev.get("name") == "thread_name":
+                track_names[track] = ev.get("args", {}).get("name", "?")
+            continue
+
+        if "ts" not in ev:
+            return fail(f'event #{i} ({ph}) has no "ts"')
+        ts = float(ev["ts"])
+        if ts < last_ts.get(track, 0.0):
+            return fail(f"event #{i}: ts {ts} goes backwards on track {track} "
+                        f"(last {last_ts[track]}) — per-track order must be chronological")
+        last_ts[track] = ts
+        track_events[track] += 1
+
+        if ph == "B":
+            name = ev.get("name")
+            if not name:
+                return fail(f'event #{i}: B record without a "name"')
+            open_spans[track].append((name, ts))
+        elif ph == "E":
+            if not open_spans[track]:
+                return fail(f"event #{i}: E at ts {ts} closes nothing on track {track}")
+            name, t0 = open_spans[track].pop()
+            phase_total_us[name] += ts - t0
+            phase_count[name] += 1
+            n_spans += 1
+        elif ph == "i":
+            name = ev.get("name")
+            if not name:
+                return fail(f'event #{i}: instant without a "name"')
+            instant_count[name] += 1
+        else:
+            return fail(f'event #{i}: unexpected "ph":"{ph}" (exporter only emits M/B/E/i)')
+
+    for track, stack in open_spans.items():
+        if stack:
+            return fail(f"track {track} ends with {len(stack)} unclosed span(s): "
+                        f"{[n for n, _ in stack]}")
+    for track in track_events:
+        if track not in track_names:
+            return fail(f"track {track} has events but no thread_name metadata")
+    if n_spans == 0:
+        return fail("no completed spans — a serve run always times its phases")
+
+    print(f"trace-summary: {args.trace} OK — {len(events)} events, "
+          f"{n_spans} spans, {sum(instant_count.values())} instants, "
+          f"{len(track_events)} tracks")
+    for track in sorted(track_events):
+        print(f"  track {track[1]:>3} {track_names[track]:<24} {track_events[track]:>7} events")
+    print(f"  top phases by total duration (of {len(phase_total_us)}):")
+    ranked = sorted(phase_total_us.items(), key=lambda kv: -kv[1])
+    for name, us in ranked[:args.top]:
+        print(f"    {name:<20} {us / 1e3:>10.3f} ms  x{phase_count[name]}")
+    if instant_count:
+        shown = sorted(instant_count.items(), key=lambda kv: -kv[1])
+        print("  instants: " + ", ".join(f"{n} x{c}" for n, c in shown))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -633,6 +633,95 @@ fn main() {
         });
     }
 
+    // == Chaos scenario: mid-run worker panic under full batch pressure. ==
+    // A deterministic failpoint kills a worker at decode iteration 10;
+    // the epoch-restart recovery audits the pool, rolls in-flight
+    // sequences back to committed KV and replays. Token identity to the
+    // calm run and a clean (zero-leak) audit are hard asserts — they are
+    // correctness, not perf. The recovered run's throughput is reported
+    // warn-only: one epoch restart re-pays in-flight work, so a tax is
+    // expected; the number here sizes it.
+    let chaos_pressure = 16usize;
+    let chaos_reqs = synthetic_workload(chaos_pressure, prompt_len, max_new, cfg.vocab);
+    let run_chaos = |faults: Option<nncase_repro::serving::FaultPlan>| {
+        let mut c = Coordinator::new(Qwen3Engine::new(
+            Qwen3Weights::random(&cfg, 42),
+            1,
+            prompt_len + max_new + 1,
+        ));
+        let ccfg = ContinuousConfig::builder()
+            .block_size(16)
+            .num_blocks(4 * chaos_pressure + 8)
+            .max_batch(chaos_pressure)
+            .build();
+        let mut opts = ServeOptions::continuous(ccfg).threads(2);
+        if let Some(plan) = faults {
+            opts = opts.faults(plan);
+        }
+        c.serve(&chaos_reqs, &opts)
+    };
+    let calm_rep = run_chaos(None);
+    let chaos_plan = nncase_repro::serving::FaultPlan::new().panic_at(
+        nncase_repro::obs::Code::Attn,
+        10,
+        None,
+    );
+    let chaos_rep = run_chaos(Some(chaos_plan));
+    assert_eq!(
+        calm_rep.outputs, chaos_rep.outputs,
+        "panic recovery must be token-identical to the calm run"
+    );
+    let chaos_faults = chaos_rep.faults.as_ref().expect("fault ledger");
+    assert_eq!(chaos_faults.injected, 1, "the failpoint must actually fire");
+    assert_eq!(chaos_faults.recovered, 1, "one epoch restart must absorb it");
+    assert_eq!(
+        chaos_rep.serving.as_ref().unwrap().fault_leaked_blocks,
+        0,
+        "the recovery audit must find no leaked blocks"
+    );
+    let chaos_tax = if calm_rep.decode_tokens_per_s > 0.0 {
+        chaos_rep.decode_tokens_per_s / calm_rep.decode_tokens_per_s
+    } else {
+        0.0
+    };
+    row(
+        &format!("chaos batch {chaos_pressure} x 2T"),
+        format!(
+            "calm {:>8.2} tok/s | recovered {:>8.2} tok/s | {chaos_tax:>5.2}x \
+             (requeued {})",
+            calm_rep.decode_tokens_per_s,
+            chaos_rep.decode_tokens_per_s,
+            chaos_faults.requeued,
+        ),
+    );
+    for (mode, rep) in [("chaos-calm", &calm_rep), ("chaos-faulted", &chaos_rep)] {
+        samples.push(Sample {
+            mode,
+            plan: String::new(),
+            shards: 1,
+            weight_quant: sweep_wq.name(),
+            weight_bytes: cfg.weight_bytes(),
+            prefill_chunk: 1,
+            pressure: chaos_pressure,
+            threads: 2,
+            decode_tok_s: rep.decode_tokens_per_s,
+            prefill_tok_s: rep.prefill_tok_s,
+            ttft_p50_s: rep.ttft.percentile(50.0),
+            wall_s: rep.wall_s,
+            speedup_vs_fcfs: 0.0,
+            report: rep.to_json(),
+        });
+    }
+    gate(
+        false, // never gating: one restart's replay tax is workload-dependent
+        "recovered throughput should stay within 2x of the calm run",
+        chaos_tax > 0.5,
+        format!(
+            "recovered {:.2} vs calm {:.2} tok/s",
+            chaos_rep.decode_tokens_per_s, calm_rep.decode_tokens_per_s,
+        ),
+    );
+
     // == Per-scenario noise summary. ==
     // How spread out each scenario's decode throughput samples are —
     // the number to check before trusting any single gate ratio above,

@@ -3,14 +3,16 @@
 //! [`Coordinator::serve`] with [`ServeOptions`].
 
 use std::collections::HashMap;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::Qwen3Engine;
 use crate::cost::MachineSpec;
 use crate::dist::ShardSpec;
 use crate::obs::{json_escape, json_f64, Ring, TraceSummary, WorkerTrace};
 use crate::serving::{
-    BatchEngine, ContinuousConfig, ContinuousScheduler, ServingMetrics, StepSlot, TierConfig,
+    BatchEngine, ContinuousConfig, ContinuousScheduler, FaultPlan, FaultReport,
+    ServingMetrics, StepSlot, TierConfig,
 };
 use crate::util::Stats;
 
@@ -20,6 +22,13 @@ use crate::util::Stats;
 /// oldest events when full (`TraceSummary` reports the drop count), so
 /// a too-small value degrades coverage, never correctness.
 pub const DEFAULT_TRACE_EVENTS: usize = 65536;
+
+/// Epoch restarts [`Coordinator::serve`] attempts after a poisoned SPMD
+/// scope before giving up and resuming the original panic. Injected
+/// failpoints are one-shot, so a healthy recovery converges in one
+/// restart; a *recurring* panic is a real bug and must surface, not
+/// loop forever.
+const MAX_EPOCH_RECOVERIES: u32 = 3;
 
 /// One generation request.
 #[derive(Debug, Clone)]
@@ -80,6 +89,9 @@ pub struct ServeOptions {
     machine: Option<MachineSpec>,
     trace: bool,
     trace_out: Option<String>,
+    deadline_ms: Option<u64>,
+    max_queue: Option<usize>,
+    faults: Option<FaultPlan>,
 }
 
 impl ServeOptions {
@@ -162,6 +174,37 @@ impl ServeOptions {
         self
     }
 
+    /// Per-request deadline in milliseconds (continuous modes only):
+    /// requests that cannot finish in time are cancelled — queued or
+    /// running — with their blocks released and any partial output
+    /// kept, and dead-on-arrival submissions are rejected outright.
+    /// Under deadline pressure the scheduler first halves the prefill
+    /// chunk before shedding work. `0` rejects every request.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Bound the admission queue (continuous modes only): submissions
+    /// beyond `max_queue` waiting requests are refused with a typed
+    /// [`crate::serving::RejectReason`] — counted in the report's
+    /// `faults.rejected` — instead of queued without bound.
+    pub fn max_queue(mut self, max_queue: usize) -> Self {
+        self.max_queue = Some(max_queue);
+        self
+    }
+
+    /// Install a deterministic failpoint plan (continuous modes only)
+    /// for chaos testing: seeded worker panics at a phase barrier,
+    /// cold-tier fetch failures and payload corruption, transient block
+    /// allocation failures ([`FaultPlan`]). An explicit plan wins over
+    /// the `PALLAS_FAILPOINTS` env spec; the FCFS oracle path never
+    /// injects, so differential tests always have a clean reference.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Check the option set; `Err` names the first violated rule.
     /// [`Coordinator::serve`] calls this (then the resolved config's
     /// own [`ContinuousConfig::validate`]) before any work runs.
@@ -173,14 +216,21 @@ impl ServeOptions {
                 || self.shards.is_some()
                 || self.machine.is_some()
                 || self.trace
+                || self.deadline_ms.is_some()
+                || self.max_queue.is_some()
+                || self.faults.is_some()
             {
                 return Err(
                     "FCFS takes no overrides (threads/prefill_chunk/tiering/shards/machine/\
-                     trace apply to the continuous modes; the dense engine's shape is fixed \
-                     at Qwen3Engine::new)"
+                     trace/deadline_ms/max_queue/faults apply to the continuous modes; the \
+                     dense engine's shape is fixed at Qwen3Engine::new and the oracle path \
+                     never injects faults)"
                         .into(),
                 );
             }
+        }
+        if self.max_queue == Some(0) {
+            return Err("max_queue must be >= 1 (leave it unset for an unbounded queue)".into());
         }
         if let ServeMode::Autotuned { max_batch } = self.mode {
             if max_batch == 0 {
@@ -223,6 +273,12 @@ impl ServeOptions {
         }
         if let Some(t) = &self.tiering {
             cfg.tiering = Some(t.clone());
+        }
+        if let Some(ms) = self.deadline_ms {
+            cfg.deadline = Some(Duration::from_millis(ms));
+        }
+        if let Some(q) = self.max_queue {
+            cfg.max_queue = q;
         }
         match self.shards {
             Some(s) if s > 1 => {
@@ -319,6 +375,12 @@ pub struct ServeReport {
     pub sbp_sig: Option<String>,
     /// Extended metrics of the continuous-batching path (None for FCFS).
     pub serving: Option<ServingMetrics>,
+    /// Fault/robustness accounting of a continuous run: failpoints
+    /// injected, epoch restarts, sequences requeued by recovery,
+    /// requests rejected by admission backpressure, deadlines missed.
+    /// All-zero on a healthy run; `None` for FCFS (the oracle path
+    /// neither injects nor recovers).
+    pub faults: Option<FaultReport>,
     /// Phase/utilization summary of a traced run
     /// ([`ServeOptions::trace`]): per-phase time breakdown with
     /// barrier-wait attribution and per-worker busy/wait split. `None`
@@ -383,6 +445,14 @@ impl ServeReport {
         }
         if let Some(m) = &self.serving {
             s.push_str(&format!(" | {}", m.render()));
+        }
+        if let Some(f) = &self.faults {
+            if f.any() {
+                s.push_str(&format!(
+                    " | faults injected={} recovered={} requeued={} rejected={} missed={}",
+                    f.injected, f.recovered, f.requeued, f.rejected, f.deadline_missed,
+                ));
+            }
         }
         if let Some(t) = &self.trace {
             s.push_str(&format!(" | trace[{}]", t.render()));
@@ -474,6 +544,17 @@ impl ServeReport {
                 o.push('}');
             }
             None => o.push_str(",\"serving\":null"),
+        }
+        match &self.faults {
+            Some(f) => {
+                let _ = write!(o, ",\"faults\":{{\"injected\":{}", f.injected);
+                int(&mut o, "recovered", f.recovered as u64);
+                int(&mut o, "requeued", f.requeued as u64);
+                int(&mut o, "rejected", f.rejected as u64);
+                int(&mut o, "deadline_missed", f.deadline_missed as u64);
+                o.push('}');
+            }
+            None => o.push_str(",\"faults\":null"),
         }
         match &self.trace {
             Some(t) => {
@@ -602,6 +683,7 @@ impl Coordinator {
             shards: 1,
             sbp_sig: None,
             serving: None,
+            faults: None,
             trace: None,
         }
     }
@@ -643,14 +725,26 @@ impl Coordinator {
             sched.set_tier_geometry(model.layers, model.kv_heads * model.head_dim);
             be.enable_tier(t.cold_blocks, t.quant);
         }
+        // Failpoints: an explicit plan on the options wins; otherwise
+        // the PALLAS_FAILPOINTS env spec (lenient parse — malformed
+        // degrades to unfaulted with one warning). One Arc is shared by
+        // the engine's barrier/tier hooks, the scheduler's admission
+        // hook, and this loop's report. `None` — the overwhelmingly
+        // common case — keeps every hook a single untaken branch.
+        let faults: Option<Arc<FaultPlan>> = opts
+            .faults
+            .clone()
+            .or_else(FaultPlan::from_env)
+            .filter(|p| !p.is_empty())
+            .map(Arc::new);
+        be.set_faults(faults.clone());
+        sched.set_faults(faults.clone());
         // Tracing: one shared epoch for every ring (the SPMD workers'
         // and the scheduler's) so all timelines merge onto one time
         // axis. Capacity is per track; the rings overwrite their oldest
         // events when full, so the knob bounds memory, not run length.
         let trace_cfg = opts.trace.then(|| {
-            let cap = std::env::var("PALLAS_TRACE_EVENTS")
-                .ok()
-                .and_then(|v| v.parse::<usize>().ok())
+            let cap = crate::util::env_knob("PALLAS_TRACE_EVENTS", |v: &usize| *v > 0)
                 .unwrap_or(DEFAULT_TRACE_EVENTS);
             (Instant::now(), cap)
         });
@@ -662,42 +756,92 @@ impl Coordinator {
         }
         let mut request_latency = Stats::default();
         let mut done: HashMap<u64, Vec<usize>> = HashMap::new();
-        // One SPMD run for the whole serve: the workers are spawned once
-        // and parked between iterations, so the per-step cost is one
-        // barrier release instead of a spawn/join per step.
-        let ((), log) = be.run_traced(threads, max_rows, trace_cfg, |stepper| {
-            while !sched.is_done() {
-                // schedule() either yields at least one runnable sequence
-                // or panics (pool too small for the queue head) — a 0
-                // return with work left cannot happen.
-                let _scheduled = sched.schedule();
-                debug_assert!(_scheduled > 0, "scheduler yielded no work while not done");
-                // Tier traffic first: spills/fetches move KV across the
-                // storage boundary before the step reads or overwrites
-                // the affected blocks.
-                let ops = sched.take_tier_ops();
-                stepper.tier_ops(&ops);
-                let t_iter = Instant::now();
-                let slots: Vec<StepSlot> = sched
-                    .running()
-                    .iter()
-                    .map(|s| StepSlot {
-                        tokens: &s.tokens[s.pos..s.pos + s.span],
-                        pos: s.pos,
-                        table: &s.table.blocks,
-                        cold: &s.cold,
-                        sample: s.span_reaches_frontier(),
-                    })
-                    .collect();
-                let samples = stepper.step(&slots);
-                drop(slots);
-                sched.commit(&samples, t_iter.elapsed().as_secs_f64());
-                for f in sched.take_finished() {
-                    request_latency.push(wall.elapsed().as_secs_f64());
-                    done.insert(f.id, f.generated);
+        // One SPMD run per *epoch* — the workers are spawned once and
+        // parked between iterations, so the per-step cost is one barrier
+        // release instead of a spawn/join per step. A panic anywhere in
+        // the scope (a worker or the driver, injected or real) poisons
+        // the barrier and unwinds out of `run_traced`; the epoch loop
+        // catches it here, at a committed boundary: interrupted
+        // iterations never called `commit`, so rolling every in-flight
+        // sequence back to its committed KV position and requeuing it
+        // (`recover_after_panic`, which also audits the pool for leaked
+        // blocks) replays to token-identical outputs — greedy argmax is
+        // per-request deterministic, so batching composition cannot
+        // change tokens. Bounded retries: a *recurring* panic is a real
+        // bug and resumes instead of looping. On a traced run the
+        // timeline covers the final (successful) epoch — a poisoned
+        // epoch's rings unwind with its scope.
+        let mut recovered_epochs = 0u32;
+        let log = loop {
+            let epoch = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                be.run_traced(threads, max_rows, trace_cfg, |stepper| {
+                    while !sched.is_done() {
+                        let scheduled = sched.schedule();
+                        // Without failpoints, schedule() either yields at
+                        // least one runnable sequence or panics (pool too
+                        // small for the queue head); an injected transient
+                        // allocation failure may instead defer every
+                        // admission for one iteration.
+                        debug_assert!(
+                            scheduled > 0 || faults.is_some(),
+                            "scheduler yielded no work while not done"
+                        );
+                        if scheduled == 0 {
+                            sched.commit(&[], 0.0);
+                            continue;
+                        }
+                        // Tier traffic first: spills/fetches move KV
+                        // across the storage boundary before the step
+                        // reads or overwrites the affected blocks.
+                        // Fetches whose payload fails checksum
+                        // verification (or draws an injected transient
+                        // failure) come back as bad slots — and so do
+                        // direct-read resumes whose in-place cold audit
+                        // fails.
+                        let ops = sched.take_tier_ops();
+                        let mut bad = stepper.tier_ops(&ops);
+                        bad.extend(stepper.verify_cold(&sched.resume_audits()));
+                        if !bad.is_empty() {
+                            // Reclassify the owners swap → recompute and
+                            // re-plan the iteration without them: their
+                            // KV is rebuilt from the prompt, never served
+                            // from a corrupt payload.
+                            sched.fault_cold(&bad);
+                            continue;
+                        }
+                        let t_iter = Instant::now();
+                        let slots: Vec<StepSlot> = sched
+                            .running()
+                            .iter()
+                            .map(|s| StepSlot {
+                                tokens: &s.tokens[s.pos..s.pos + s.span],
+                                pos: s.pos,
+                                table: &s.table.blocks,
+                                cold: &s.cold,
+                                sample: s.span_reaches_frontier(),
+                            })
+                            .collect();
+                        let samples = stepper.step(&slots);
+                        drop(slots);
+                        sched.commit(&samples, t_iter.elapsed().as_secs_f64());
+                        for f in sched.take_finished() {
+                            request_latency.push(wall.elapsed().as_secs_f64());
+                            done.insert(f.id, f.generated);
+                        }
+                    }
+                })
+            }));
+            match epoch {
+                Ok(((), log)) => break log,
+                Err(payload) => {
+                    if recovered_epochs >= MAX_EPOCH_RECOVERIES {
+                        std::panic::resume_unwind(payload);
+                    }
+                    recovered_epochs += 1;
+                    sched.recover_after_panic();
                 }
             }
-        });
+        };
         // Degenerate requests (empty prompt / zero budget) finish at
         // submit time without ever entering the loop.
         for f in sched.take_finished() {
@@ -724,6 +868,18 @@ impl Coordinator {
         });
 
         let metrics = std::mem::take(&mut sched.metrics);
+        // Fault ledger: injection counts come straight off the plan's
+        // atomic counters, recovery counts off the epoch loop, and the
+        // request-level counters off the scheduler metrics. Always
+        // `Some` on the continuous path (all-zero on a calm run) so the
+        // JSON shape is stable; the FCFS oracle reports `None`.
+        let fault_report = FaultReport {
+            injected: faults.as_ref().map_or(0, |p| p.injected()),
+            recovered: recovered_epochs,
+            requeued: metrics.fault_requeued as u32,
+            rejected: metrics.rejected as u32,
+            deadline_missed: metrics.deadline_missed as u32,
+        };
         let outputs: Vec<(u64, Vec<usize>)> = requests
             .iter()
             .map(|r| (r.id, done.remove(&r.id).unwrap_or_default()))
@@ -747,6 +903,7 @@ impl Coordinator {
             shards,
             sbp_sig,
             serving: Some(metrics),
+            faults: Some(fault_report),
             trace,
         }
     }
@@ -926,7 +1083,13 @@ mod tests {
         // FCFS: every nullable section reads as literal null.
         let j = c.serve(&reqs, &ServeOptions::fcfs()).to_json();
         assert!(j.starts_with("{\"schema\":\"serve_report.v1\",\"requests\":2,"), "{j}");
-        for key in ["\"plan\":null", "\"tier\":null", "\"serving\":null", "\"trace\":null"] {
+        for key in [
+            "\"plan\":null",
+            "\"tier\":null",
+            "\"serving\":null",
+            "\"faults\":null",
+            "\"trace\":null",
+        ] {
             assert!(j.contains(key), "{j}");
         }
         // Traced autotuned run: every section is an object.
@@ -937,6 +1100,9 @@ mod tests {
         assert!(j.contains("\"predicted_decode_iter_s\":"), "{j}");
         assert!(j.contains("\"serving\":{\"iterations\":"), "{j}");
         assert!(j.contains("\"decode_iter_mean_s\":"), "{j}");
+        // Continuous runs always carry the fault ledger (all-zero on a
+        // calm run) so downstream parsers see one shape per mode.
+        assert!(j.contains("\"faults\":{\"injected\":0"), "{j}");
         assert!(j.contains("\"trace\":{\"events\":"), "{j}");
         assert!(!j.contains("NaN") && !j.contains("inf"), "{j}");
         // Braces and quotes balance — the cheap well-formedness check
@@ -1034,11 +1200,22 @@ mod tests {
         assert!(ServeOptions::fcfs().shards(2).validate().is_err());
         assert!(ServeOptions::fcfs().trace().validate().is_err());
         assert!(ServeOptions::fcfs().trace_out("t.json").validate().is_err());
+        // ... and the robustness knobs are continuous-only too: the
+        // oracle must stay the unperturbed reference.
+        assert!(ServeOptions::fcfs().deadline_ms(10).validate().is_err());
+        assert!(ServeOptions::fcfs().max_queue(4).validate().is_err());
+        assert!(ServeOptions::fcfs().faults(FaultPlan::new().fail_fetch(0)).validate().is_err());
         // Degenerate values are named, not clamped into surprises.
         let cfg = ContinuousConfig::default();
         assert!(ServeOptions::continuous(cfg.clone()).shards(0).validate().is_err());
         assert!(ServeOptions::continuous(cfg.clone()).threads(0).validate().is_err());
+        assert!(ServeOptions::continuous(cfg.clone()).max_queue(0).validate().is_err());
         assert!(ServeOptions::autotuned(0).validate().is_err());
+        assert!(ServeOptions::continuous(cfg.clone())
+            .deadline_ms(50)
+            .max_queue(8)
+            .validate()
+            .is_ok());
         assert!(ServeOptions::continuous(cfg).shards(2).threads(2).validate().is_ok());
         // The config builder rejects inconsistent knob sets.
         assert!(ContinuousConfig::builder().block_size(0).try_build().is_err());
@@ -1113,6 +1290,38 @@ mod tests {
         assert!(sp.sbp_sig.contains("wq="), "{}", sp.sbp_sig);
         assert_ne!(bp.plan_hash(), sp.plan_hash(), "layout must be plan identity");
         assert!(sp.render().contains("sbp["), "{}", sp.render());
+    }
+
+    #[test]
+    fn injected_panic_recovers_and_matches_the_oracle() {
+        // The tentpole contract end to end: a worker panic mid-serve
+        // poisons the barrier, the epoch loop audits + requeues, the
+        // fresh SPMD scope replays from committed KV — and the outputs
+        // are token-identical to the unperturbed FCFS oracle.
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 2, 64));
+        let reqs = synthetic_workload(3, 4, 6, cfg.vocab);
+        let oracle = c.serve(&reqs, &ServeOptions::fcfs());
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(32)
+            .max_batch(3)
+            .build();
+        let plan = FaultPlan::parse("panic@phase=attn,iter=3,worker=1")
+            .expect("spec must parse");
+        let rep = c.serve(
+            &reqs,
+            &ServeOptions::continuous(ccfg).threads(2).faults(plan),
+        );
+        assert_eq!(oracle.outputs, rep.outputs, "recovery must not change tokens");
+        let f = rep.faults.as_ref().expect("continuous runs carry the fault ledger");
+        assert_eq!(f.injected, 1, "the one-shot panic fired exactly once");
+        assert_eq!(f.recovered, 1, "one epoch restart absorbed it");
+        assert!(f.requeued >= 1, "in-flight work was rolled back and requeued");
+        assert!(rep.render().contains("faults injected=1"), "{}", rep.render());
+        let m = rep.serving.as_ref().unwrap();
+        assert_eq!(m.fault_leaked_blocks, 0, "recovery audit must find no leaks");
     }
 
     #[test]

@@ -35,14 +35,20 @@ fn usage() -> ! {
          serve     [--threads N] [--requests N] [--max-new N] [--policy fcfs|continuous]\n\
          \x20          [--max-batch N] [--prefill-chunk N] [--shards N] [--kv-cold-blocks N]\n\
          \x20          [--kv-quant int8|f32] [--weight-quant f32|int8|int4] [--autotune]\n\
+         \x20          [--deadline-ms N] [--max-queue N] [--failpoints SPEC]\n\
          \x20          [--trace-out trace.json] [--report-json report.json]\n\
          \x20          (--autotune derives chunk/budget/threads/panel/pool from the\n\
          \x20           serve-time planner; --shards partitions the projection GEMMs\n\
          \x20           across dist-planned worker groups; explicit flags override\n\
          \x20           planner knobs; outputs are token-identical either way;\n\
-         \x20           --trace-out records per-worker phase timelines as Chrome-trace\n\
-         \x20           JSON for Perfetto [continuous only], --report-json writes the\n\
-         \x20           machine-readable ServeReport)\n\
+         \x20           --deadline-ms cancels requests past their latency budget,\n\
+         \x20           --max-queue bounds admission [both continuous only];\n\
+         \x20           --failpoints injects deterministic faults, e.g.\n\
+         \x20           'panic@phase=attn,iter=3;fetch@nth=1' — same grammar as the\n\
+         \x20           PALLAS_FAILPOINTS env var; recovery keeps outputs\n\
+         \x20           token-identical; --trace-out records per-worker phase\n\
+         \x20           timelines as Chrome-trace JSON for Perfetto [continuous\n\
+         \x20           only], --report-json writes the machine-readable ServeReport)\n\
          sweep     [--figure 9|10]\n\
          artifacts [--dir artifacts]"
     );
@@ -202,6 +208,24 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                         &cfg,
                         threads_flag.unwrap_or(threads),
                     ));
+                }
+                // Robustness knobs: request deadlines (cancel past the
+                // latency budget), bounded admission (typed rejection
+                // when the queue is full), and deterministic failpoint
+                // injection (--failpoints wins over PALLAS_FAILPOINTS;
+                // recovery keeps outputs token-identical).
+                if let Some(ms) = opt(&args, "--deadline-ms").and_then(|v| v.parse::<u64>().ok())
+                {
+                    opts = opts.deadline_ms(ms);
+                }
+                if let Some(q) = opt(&args, "--max-queue").and_then(|v| v.parse::<usize>().ok())
+                {
+                    opts = opts.max_queue(q);
+                }
+                if let Some(spec) = opt(&args, "--failpoints") {
+                    let plan = nncase_repro::serving::FaultPlan::parse(&spec)
+                        .unwrap_or_else(|e| panic!("bad --failpoints {spec:?}: {e}"));
+                    opts = opts.faults(plan);
                 }
                 // Serve-path tracing: per-worker phase timelines into
                 // pre-allocated rings, exported as Chrome-trace JSON

@@ -67,10 +67,21 @@ pub enum Code {
     SwapIn = 20,
     /// Request finished.
     Finish = 21,
+    /// A failpoint fired (`arg` = fault-site tag: 0 panic, 1 fetch
+    /// failure, 2 corruption, 3 alloc failure).
+    FaultInject = 22,
+    /// The serve loop recovered from a poisoned SPMD epoch
+    /// (`arg` = sequences requeued by the recovery audit).
+    Recover = 23,
+    /// Request cancelled because its deadline passed (`arg` =
+    /// request id).
+    DeadlineMiss = 24,
+    /// Request rejected at submission (`arg` = request id).
+    Reject = 25,
 }
 
 /// Number of distinct codes (`Code` discriminants are `0..COUNT`).
-pub const CODE_COUNT: usize = 22;
+pub const CODE_COUNT: usize = 26;
 
 impl Code {
     pub fn name(self) -> &'static str {
@@ -97,6 +108,10 @@ impl Code {
             Code::SwapOut => "swap_out",
             Code::SwapIn => "swap_in",
             Code::Finish => "finish",
+            Code::FaultInject => "fault_inject",
+            Code::Recover => "recover",
+            Code::DeadlineMiss => "deadline_miss",
+            Code::Reject => "reject",
         }
     }
 
@@ -112,6 +127,10 @@ impl Code {
                 | Code::SwapOut
                 | Code::SwapIn
                 | Code::Finish
+                | Code::FaultInject
+                | Code::Recover
+                | Code::DeadlineMiss
+                | Code::Reject
         )
     }
 
@@ -147,6 +166,10 @@ impl Code {
             19 => Code::SwapOut,
             20 => Code::SwapIn,
             21 => Code::Finish,
+            22 => Code::FaultInject,
+            23 => Code::Recover,
+            24 => Code::DeadlineMiss,
+            25 => Code::Reject,
             _ => return None,
         })
     }

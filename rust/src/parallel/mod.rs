@@ -38,6 +38,13 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 /// turns the whole SPMD region into a silent deadlock (the scope join
 /// blocks on threads parked at the barrier) — with it, the panic
 /// cascades, every thread unwinds, and the original payload propagates.
+///
+/// Poison is *permanent*: there is deliberately no un-poison. Fault
+/// recovery (the serve path's epoch restart) must tear the scope down
+/// and build a fresh barrier rather than resuscitate this one — a
+/// half-poisoned barrier racing late wakers against a reset flag is
+/// exactly the kind of recovery bug the audit in
+/// `coordinator::serve` exists to rule out.
 pub struct SpinBarrier {
     n: usize,
     count: AtomicUsize,
@@ -437,6 +444,24 @@ mod tests {
         assert!(barrier.is_poisoned());
         // Later waits die immediately too.
         assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| barrier.wait())).is_err());
+    }
+
+    #[test]
+    fn poison_is_permanent_across_would_be_reuse() {
+        // The epoch-restart recovery contract: once poisoned, a barrier
+        // never serves another phase — every wait dies, including after
+        // the participant count's worth of waits that would have
+        // "cycled" a healthy barrier. Recovery must build a fresh
+        // barrier (a fresh SPMD scope), never reuse this one.
+        let b = SpinBarrier::new(2);
+        b.poison();
+        for _ in 0..4 {
+            assert!(
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b.wait())).is_err(),
+                "poisoned barrier must stay dead"
+            );
+        }
+        assert!(b.is_poisoned());
     }
 
     #[test]

@@ -67,8 +67,10 @@
 //! per GEMM phase.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
+use super::fault::FaultPlan;
 use super::tiered::{ColdKv, KvQuant, TierOp};
 use crate::coordinator::argmax;
 use crate::dist::{MatShard, ShardSpec};
@@ -299,9 +301,22 @@ impl ShardCtx {
 /// span covering the wait, with `arg` naming the phase the barrier
 /// closes — per-phase barrier time is the load-imbalance signal the
 /// trace summary reports. The untraced arm is exactly
-/// `barrier.wait()`.
+/// `barrier.wait()` behind one untaken failpoint branch.
 #[inline]
-fn traced_wait(barrier: &SpinBarrier, tr: &mut Option<&mut Ring>, phase: Code) {
+fn traced_wait(
+    barrier: &SpinBarrier,
+    tr: &mut Option<&mut Ring>,
+    phase: Code,
+    fp: Option<&FaultPlan>,
+    wi: usize,
+) {
+    // Failpoint: an injected worker panic fires here, *before* the
+    // wait — a panicking worker's PoisonGuard (or, for the controller,
+    // the driver catch_unwind in `run_traced`) poisons the barrier, so
+    // every other participant unwinds instead of spinning forever.
+    if let Some(fp) = fp {
+        fp.maybe_panic(phase, wi);
+    }
     match tr {
         None => barrier.wait(),
         Some(r) => {
@@ -341,6 +356,7 @@ fn spmd_step(
     scratch: &mut Vec<f32>,
     colbuf: &mut Vec<f32>,
     tr: &mut Option<&mut Ring>,
+    fp: Option<&FaultPlan>,
 ) {
     // SAFETY: the controller wrote this step's slots + row map before
     // releasing the workers through the barrier, and rewrites them only
@@ -390,7 +406,7 @@ fn spmd_step(
             .copy_from_slice(weights.embedding.row(token % vocab));
     }
     obs::span(tr, Code::Embed, t_ph, 0);
-    traced_wait(barrier, tr, Code::Embed);
+    traced_wait(barrier, tr, Code::Embed, fp, wi);
 
     for l in 0..cfg.layers {
         let w = &weights.layers[l];
@@ -408,7 +424,7 @@ fn spmd_step(
             }
         }
         obs::span(tr, Code::Norm, t_ph, 0);
-        traced_wait(barrier, tr, Code::Norm);
+        traced_wait(barrier, tr, Code::Norm, fp, wi);
         // Phase 2: batched QKV projections under each matrix's
         // dist-chosen layout — with chunked prefill these are genuinely
         // tall GEMMs (M = total step tokens), each worker streaming its
@@ -421,7 +437,7 @@ fn spmd_step(
             shard.gemm(&pw.wv, sharding.wv, xn, n, &st.vvec, kvdim, scratch, colbuf);
         }
         obs::span(tr, Code::QkvGemm, t_ph, 0);
-        traced_wait(barrier, tr, Code::QkvGemm);
+        traced_wait(barrier, tr, Code::QkvGemm, fp, wi);
         // Phase 3: RoPE, per-row shard (positions differ per row).
         let t_ph = obs::mark(tr);
         for r in r0..r1 {
@@ -437,7 +453,7 @@ fn spmd_step(
             }
         }
         obs::span(tr, Code::Rope, t_ph, 0);
-        traced_wait(barrier, tr, Code::Rope);
+        traced_wait(barrier, tr, Code::Rope, fp, wi);
         // Phase 4 (serial): commit every row's K/V through its slot's
         // block table, in ascending row order — which is ascending
         // position order within each slot (the row map is span-major).
@@ -464,7 +480,7 @@ fn spmd_step(
             });
             obs::span(tr, Code::KvCommit, t_ph, 0);
         }
-        traced_wait(barrier, tr, Code::KvCommit);
+        traced_wait(barrier, tr, Code::KvCommit, fp, wi);
         // Phase 5: paged GQA attention, per-row shard, causal window
         // `[0, pos]` per row. Rows with a cold prefix take the hybrid
         // path: the leading full blocks are read *in place* from the
@@ -561,7 +577,7 @@ fn spmd_step(
             }
         }
         obs::span(tr, Code::Attn, t_ph, 0);
-        traced_wait(barrier, tr, Code::Attn);
+        traced_wait(barrier, tr, Code::Attn, fp, wi);
         // Phase 6: output projection under its dist-chosen layout.
         let t_ph = obs::mark(tr);
         unsafe {
@@ -569,7 +585,7 @@ fn spmd_step(
             shard.gemm(&pw.wo, sharding.wo, ctx, n, &st.attn, h, scratch, colbuf);
         }
         obs::span(tr, Code::OGemm, t_ph, 0);
-        traced_wait(barrier, tr, Code::OGemm);
+        traced_wait(barrier, tr, Code::OGemm, fp, wi);
         // Phase 7: residual + MLP RMSNorm, per-row shard.
         let t_ph = obs::mark(tr);
         for r in r0..r1 {
@@ -587,7 +603,7 @@ fn spmd_step(
             }
         }
         obs::span(tr, Code::Norm, t_ph, 0);
-        traced_wait(barrier, tr, Code::Norm);
+        traced_wait(barrier, tr, Code::Norm, fp, wi);
         // Phase 8: SwiGLU gate/up under their dist-chosen layouts. With
         // both replicated (the seed path) the elementwise tail runs
         // fused on the rows this worker just computed; column-sharded
@@ -606,7 +622,7 @@ fn spmd_step(
         }
         obs::span(tr, Code::MlpGemm, t_ph, 0);
         if !fused_mlp {
-            traced_wait(barrier, tr, Code::MlpGemm);
+            traced_wait(barrier, tr, Code::MlpGemm, fp, wi);
             let t_tail = obs::mark(tr);
             for r in r0..r1 {
                 unsafe {
@@ -617,7 +633,7 @@ fn spmd_step(
             }
             obs::span(tr, Code::MlpGemm, t_tail, 0);
         }
-        traced_wait(barrier, tr, Code::MlpGemm);
+        traced_wait(barrier, tr, Code::MlpGemm, fp, wi);
         // Phase 9: down projection under its dist-chosen layout.
         let t_ph = obs::mark(tr);
         unsafe {
@@ -625,7 +641,7 @@ fn spmd_step(
             shard.gemm(&pw.w_down, sharding.w_down, gate, n, &st.down, h, scratch, colbuf);
         }
         obs::span(tr, Code::MlpGemm, t_ph, 0);
-        traced_wait(barrier, tr, Code::MlpGemm);
+        traced_wait(barrier, tr, Code::MlpGemm, fp, wi);
         // Phase 10: residual, per-row shard.
         let t_ph = obs::mark(tr);
         for r in r0..r1 {
@@ -637,7 +653,7 @@ fn spmd_step(
             }
         }
         obs::span(tr, Code::Norm, t_ph, 0);
-        traced_wait(barrier, tr, Code::Norm);
+        traced_wait(barrier, tr, Code::Norm, fp, wi);
     }
     // Final norm (per-row shard) + LM head (MR-panel shard).
     let t_ph = obs::mark(tr);
@@ -652,7 +668,7 @@ fn spmd_step(
         }
     }
     obs::span(tr, Code::Norm, t_ph, 0);
-    traced_wait(barrier, tr, Code::Norm);
+    traced_wait(barrier, tr, Code::Norm, fp, wi);
     let t_ph = obs::mark(tr);
     unsafe {
         let xn = &st.xn.read()[..n * h];
@@ -661,7 +677,7 @@ fn spmd_step(
     obs::span(tr, Code::LmHead, t_ph, 0);
     // Final barrier: publishes every logits shard to the controller and
     // parks the workers for the next step.
-    traced_wait(barrier, tr, Code::LmHead);
+    traced_wait(barrier, tr, Code::LmHead, fp, wi);
 }
 
 /// The batched paged-attention decode engine.
@@ -681,6 +697,10 @@ pub struct BatchEngine<'w> {
     /// ([`BatchEngine::set_sharding`]; default [`ShardSpec::single`],
     /// the unsharded seed engine).
     sharding: ShardSpec,
+    /// Shared failpoint plan ([`BatchEngine::set_faults`]); `None`
+    /// (the default) keeps every injection hook a single untaken
+    /// branch, so the no-fault hot path is unchanged.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 /// Controller handle of a live SPMD serve run (see [`BatchEngine::run`]):
@@ -705,6 +725,8 @@ pub struct BatchStepper<'a, 'kv> {
     /// ([`BatchEngine::run_traced`]); `None` (one branch per hook, no
     /// allocation) otherwise.
     trace: Option<&'a mut Ring>,
+    /// The run's failpoint plan (from [`BatchEngine::set_faults`]).
+    faults: Option<&'a FaultPlan>,
 }
 
 impl BatchStepper<'_, '_> {
@@ -727,13 +749,23 @@ impl BatchStepper<'_, '_> {
     /// the barrier release publishes the moved rows to the step. The
     /// two directions run in separate commit windows so a traced run
     /// attributes each its own span (`arg` = op count).
-    pub fn tier_ops(&mut self, ops: &[TierOp]) {
+    ///
+    /// Every fetch re-verifies the slot's FNV payload checksum before
+    /// trusting the bytes; a mismatch — or an injected transient fetch
+    /// failure — skips the copy and reports the slot in the returned
+    /// list, which the driver feeds to the scheduler's swap → recompute
+    /// reclassification (`ContinuousScheduler::fault_cold`) instead of
+    /// serving corrupt KV. Empty on a healthy run.
+    pub fn tier_ops(&mut self, ops: &[TierOp]) -> Vec<u32> {
         if ops.is_empty() {
-            return;
+            return Vec::new();
         }
         let cold_cell = self.cold_cell.expect("tier ops on an engine without a cold tier");
+        let fp = self.faults;
         let n_spill = ops.iter().filter(|o| matches!(o, TierOp::Spill { .. })).count() as u32;
         let n_fetch = ops.len() as u32 - n_spill;
+        let mut corrupted = 0u32;
+        let mut failed: Vec<u32> = Vec::new();
         if n_spill > 0 {
             let t0 = obs::mark(&self.trace);
             cold_cell.commit(0, |cold| {
@@ -741,11 +773,23 @@ impl BatchStepper<'_, '_> {
                     for op in ops {
                         if let TierOp::Spill { hot, cold: slot, filled } = *op {
                             cold.spill(slot, kv, hot, filled);
+                            // Failpoint: flip payload bytes *after* the
+                            // spill recorded its checksum, so the later
+                            // verification has real damage to catch.
+                            if let Some(p) = fp {
+                                if p.take_corrupt() {
+                                    cold.corrupt_slot(slot, &mut p.corruption_rng(slot));
+                                    corrupted += 1;
+                                }
+                            }
                         }
                     }
                 });
             });
             obs::span(&mut self.trace, Code::TierSpill, t0, n_spill);
+            for _ in 0..corrupted {
+                obs::instant(&mut self.trace, Code::FaultInject, 2);
+            }
         }
         if n_fetch > 0 {
             let t0 = obs::mark(&self.trace);
@@ -753,13 +797,42 @@ impl BatchStepper<'_, '_> {
                 self.kv_cell.commit(0, |kv| {
                     for op in ops {
                         if let TierOp::Fetch { cold: slot, hot, .. } = *op {
-                            cold.fetch(slot, kv, hot);
+                            let injected = fp.map_or(false, |p| p.take_fetch_fail());
+                            if injected || !cold.verify(slot) {
+                                failed.push(slot);
+                            } else {
+                                cold.fetch(slot, kv, hot);
+                            }
                         }
                     }
                 });
             });
             obs::span(&mut self.trace, Code::TierFetch, t0, n_fetch);
+            for _ in &failed {
+                obs::instant(&mut self.trace, Code::FaultInject, 1);
+            }
         }
+        failed
+    }
+
+    /// Re-verify the payload checksums of cold slots the step is about
+    /// to read **in place** (the direct-read resume path bypasses
+    /// fetches, so it never crosses the fetch-side verification in
+    /// [`BatchStepper::tier_ops`]). Returns the slots that failed; the
+    /// driver feeds them to the scheduler's swap → recompute
+    /// reclassification before the step's slots are built.
+    pub fn verify_cold(&mut self, slots: &[u32]) -> Vec<u32> {
+        if slots.is_empty() {
+            return Vec::new();
+        }
+        let cold_cell =
+            self.cold_cell.expect("cold-slot audit on an engine without a cold tier");
+        let cold = cold_cell.read();
+        let failed: Vec<u32> = slots.iter().copied().filter(|&s| !cold.verify(s)).collect();
+        for _ in &failed {
+            obs::instant(&mut self.trace, Code::FaultInject, 2);
+        }
+        failed
     }
 
     /// Advance every slot by its span; returns the argmax token of the
@@ -823,6 +896,11 @@ impl BatchStepper<'_, '_> {
                 }
             }
         }
+        // Advance the failpoint iteration counter before the release —
+        // workers read it behind the barrier, so `Relaxed` suffices.
+        if let Some(fp) = self.faults {
+            fp.begin_iter();
+        }
         // Release the workers into the step and join as worker 0. The
         // final barrier inside `spmd_step` publishes all logits shards.
         self.barrier.wait();
@@ -842,6 +920,7 @@ impl BatchStepper<'_, '_> {
             &mut self.scratch,
             &mut self.colbuf,
             &mut self.trace,
+            self.faults,
         );
         let vocab = self.weights.cfg.vocab;
         let logits = self.st.logits.read();
@@ -886,6 +965,7 @@ impl<'w> BatchEngine<'w> {
             cold: None,
             panel_rows: MR,
             sharding: ShardSpec::single(),
+            faults: None,
         }
     }
 
@@ -918,6 +998,16 @@ impl<'w> BatchEngine<'w> {
     /// The installed shard layout.
     pub fn sharding(&self) -> &ShardSpec {
         &self.sharding
+    }
+
+    /// Install (or clear) the shared failpoint plan for subsequent runs
+    /// ([`FaultPlan`]; the serving coordinator shares one `Arc` between
+    /// the engine, the scheduler and the serve loop). The hooks sit on
+    /// the phase barriers, the tier-op windows and the admission path;
+    /// with `None` — the default — each hook is one untaken branch, so
+    /// the no-fault hot path is unchanged.
+    pub fn set_faults(&mut self, faults: Option<Arc<FaultPlan>>) {
+        self.faults = faults;
     }
 
     /// Stored bytes of the packed/quantized weight plane (all layers +
@@ -1006,6 +1096,7 @@ impl<'w> BatchEngine<'w> {
         let packed_lm_head = &self.packed_lm_head;
         let kv_cell = KvCell::new(&mut self.kv);
         let cold_cell = self.cold.as_mut().map(KvCell::new);
+        let fault: Option<&FaultPlan> = self.faults.as_deref();
         // Pre-allocate one ring per worker before the scope opens; the
         // hot path only ever writes into its own ring through an
         // `Option<&mut Ring>` (no locks, no allocation).
@@ -1053,6 +1144,7 @@ impl<'w> BatchEngine<'w> {
                             &mut scratch,
                             &mut colbuf,
                             &mut ring,
+                            fault,
                         );
                     }
                 });
@@ -1073,6 +1165,7 @@ impl<'w> BatchEngine<'w> {
                 scratch: Vec::new(),
                 colbuf: Vec::new(),
                 trace: ring_slots[0].take(),
+                faults: fault,
             };
             // Workers stay parked between steps; if the driver unwinds
             // (scheduler panics, test assertions, a panic inside the
@@ -1094,7 +1187,14 @@ impl<'w> BatchEngine<'w> {
                     // start barrier or stuck at a phase barrier mid-step.
                     // Poisoning makes every wait panic, so all of them
                     // unwind instead of deadlocking the scope join; the
-                    // original payload then takes precedence.
+                    // original payload then takes precedence. This arm
+                    // covers every driver-side unwind uniformly: the
+                    // scheduler's own panics, the `tier_ops` commit
+                    // windows (which run while all workers are parked),
+                    // the controller's share of a step, and injected
+                    // failpoint panics — the serve loop catches the
+                    // resumed payload at its epoch boundary, audits and
+                    // requeues, then restarts a fresh scope.
                     barrier.poison();
                     std::panic::resume_unwind(payload)
                 }
@@ -1702,5 +1802,77 @@ mod tests {
             out
         });
         assert_eq!(want, got, "direct cold reads diverged from fetch+dequantize");
+    }
+
+    #[test]
+    fn injected_worker_panic_unwinds_and_disarms() {
+        // An armed failpoint panic on a non-controller worker must
+        // poison the barrier and propagate out of run() instead of
+        // deadlocking the scope join; the spec is one-shot, so the next
+        // run on the same engine executes clean.
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 13);
+        let mut be = BatchEngine::new(&w, 8, 4);
+        let fp = Arc::new(FaultPlan::new().panic_at(Code::Attn, 2, Some(1)));
+        be.set_faults(Some(fp.clone()));
+        let table: Vec<u32> = vec![0, 1];
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            be.run(2, 2, |stepper| {
+                for (pos, tok) in [7usize, 42, 9].iter().enumerate() {
+                    stepper
+                        .step(&[StepSlot::hot(std::slice::from_ref(tok), pos, &table, true)]);
+                }
+            });
+        }));
+        assert!(result.is_err(), "injected panic must propagate, not hang the join");
+        assert_eq!(fp.injected(), 1, "exactly one fault fires");
+        let samples = be.run(2, 2, |stepper| {
+            stepper.step(&[StepSlot::hot(&[7usize], 0, &table, true)])
+        });
+        assert!(samples[0].is_some(), "disarmed plan must not re-fire on the restart");
+    }
+
+    #[test]
+    fn tier_op_panic_poisons_parked_workers() {
+        // `tier_ops` runs on the controller while the workers are parked
+        // — a panic inside it (here: tier ops on an engine with no cold
+        // tier) unwinds through the driver closure and the Err arm of
+        // run_traced must poison the parked workers awake rather than
+        // deadlock the scope join.
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 3);
+        let mut be = BatchEngine::new(&w, 4, 4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            be.run(2, 2, |stepper| {
+                stepper.tier_ops(&[TierOp::Spill { hot: 0, cold: 0, filled: 1 }]);
+            });
+        }));
+        assert!(result.is_err(), "tier-op panic must propagate, not hang the join");
+    }
+
+    #[test]
+    fn corrupted_spill_fails_verification_on_fetch() {
+        // An injected payload corruption (bytes flipped after the spill
+        // recorded its checksum) must be caught by both read paths: the
+        // direct-read audit and the fetch-side verification, which
+        // skips the copy and reports the slot instead of serving it.
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 31);
+        let bs = 4usize;
+        let mut be = BatchEngine::new(&w, 8, bs);
+        be.enable_tier(2, KvQuant::F32);
+        let fp = Arc::new(FaultPlan::new().corrupt_spill(0));
+        be.set_faults(Some(fp.clone()));
+        let failed = be.run(1, 1, |stepper| {
+            let table: Vec<u32> = vec![0];
+            for (pos, tok) in [5usize, 9, 11, 2].iter().enumerate() {
+                stepper.step(&[StepSlot::hot(std::slice::from_ref(tok), pos, &table, false)]);
+            }
+            stepper.tier_ops(&[TierOp::Spill { hot: 0, cold: 1, filled: bs }]);
+            assert_eq!(stepper.verify_cold(&[1]), vec![1], "direct-read audit missed it");
+            stepper.tier_ops(&[TierOp::Fetch { cold: 1, hot: 2, seq: 0 }])
+        });
+        assert_eq!(failed, vec![1], "fetch must report the corrupt slot, not copy it");
+        assert_eq!(fp.injected(), 1);
     }
 }

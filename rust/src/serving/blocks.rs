@@ -93,6 +93,54 @@ impl BlockPool {
     pub fn refcount(&self, b: u32) -> u32 {
         self.refcount[b as usize]
     }
+
+    /// Recovery-path invariant repair: force every block's refcount to
+    /// `expected` and rebuild the free list to match. Used after a
+    /// panicked SPMD epoch, when in-flight bookkeeping may have leaked
+    /// references; never on the healthy path. Returns the audit deltas
+    /// (all zero ⇔ the pool already satisfied `expected`).
+    pub fn reconcile(&mut self, expected: &[u32]) -> BlockAudit {
+        assert_eq!(expected.len(), self.refcount.len(), "audit must cover every block");
+        let mut audit = BlockAudit::default();
+        for (&want, have) in expected.iter().zip(self.refcount.iter_mut()) {
+            if *have > want {
+                audit.leaked_refs += (*have - want) as usize;
+                if want == 0 {
+                    audit.freed_blocks += 1;
+                }
+            } else if *have < want {
+                audit.repaired_refs += (want - *have) as usize;
+            }
+            *have = want;
+        }
+        // Deterministic free order, same as `new`: lowest id pops first.
+        self.free = (0..self.refcount.len() as u32)
+            .rev()
+            .filter(|&b| self.refcount[b as usize] == 0)
+            .collect();
+        audit
+    }
+}
+
+/// What a refcount audit found (and repaired). All-zero means every
+/// block's refcount already matched the live tables + prefix cache.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BlockAudit {
+    /// References held above what live owners justify (dropped).
+    pub leaked_refs: usize,
+    /// Blocks returned to the free list by dropping leaked references.
+    pub freed_blocks: usize,
+    /// References that were *missing* (block freed while an owner still
+    /// pointed at it) and were restored. Nonzero here means a real
+    /// invariant break was healed, not just a leak.
+    pub repaired_refs: usize,
+}
+
+impl BlockAudit {
+    /// True when the audit found nothing to fix.
+    pub fn clean(&self) -> bool {
+        self.leaked_refs == 0 && self.freed_blocks == 0 && self.repaired_refs == 0
+    }
 }
 
 /// A sequence's logical-position -> physical-block mapping.
@@ -270,6 +318,28 @@ impl KvBlockManager {
     pub fn cached_blocks(&self) -> usize {
         self.prefix.len()
     }
+
+    /// Audit every block's refcount against its justified owners — one
+    /// reference per appearance in a `live` table plus one per prefix-
+    /// cache entry — and repair any drift (leaked references dropped,
+    /// missing references restored, free list rebuilt). The recovery
+    /// step after a panicked serve epoch; on a healthy pool it returns
+    /// a clean audit and changes nothing observable.
+    pub fn audit_and_reclaim<'a>(
+        &mut self,
+        live: impl IntoIterator<Item = &'a BlockTable>,
+    ) -> BlockAudit {
+        let mut expected = vec![0u32; self.pool.num_blocks()];
+        for t in live {
+            for &b in &t.blocks {
+                expected[b as usize] += 1;
+            }
+        }
+        for e in self.prefix.values() {
+            expected[e.block as usize] += 1;
+        }
+        self.pool.reconcile(&expected)
+    }
 }
 
 #[cfg(test)]
@@ -403,6 +473,46 @@ mod tests {
         // A re-attached block survives eviction (it is referenced).
         assert_eq!(m.evict_unused_cached(), 1, "only the unreferenced first block frees");
         assert_eq!(m.lookup_block(&prompt[..8]), Some(b1), "still cached while referenced");
+    }
+
+    #[test]
+    fn audit_is_clean_on_a_healthy_pool() {
+        let mut m = KvBlockManager::new(8, 4);
+        let prompt: Vec<usize> = (0..9).collect();
+        let (mut t1, _) = m.lookup_prefix(&prompt);
+        assert!(m.ensure_slot(&mut t1, 8));
+        m.register_full_block(&prompt[..4], t1.blocks[0]);
+        let free_before = m.pool.free_blocks();
+        let audit = m.audit_and_reclaim([&t1]);
+        assert!(audit.clean(), "{audit:?}");
+        assert_eq!(m.pool.free_blocks(), free_before);
+        // The cached block still serves hits after the audit.
+        m.release_table(&mut t1);
+        let (_, covered) = m.lookup_prefix(&prompt);
+        assert_eq!(covered, 4);
+    }
+
+    #[test]
+    fn audit_reclaims_leaked_and_restores_missing_refs() {
+        let mut m = KvBlockManager::new(8, 4);
+        let mut t = BlockTable::default();
+        assert!(m.ensure_slot(&mut t, 11)); // 3 blocks
+        // Leak: drop the table's claim on its last block without
+        // releasing — the audit must free it.
+        let leaked = t.blocks.pop().unwrap();
+        // Break the other way: free a block the table still references.
+        m.pool.release(t.blocks[1]);
+        let audit = m.audit_and_reclaim([&t]);
+        assert_eq!(audit.leaked_refs, 1);
+        assert_eq!(audit.freed_blocks, 1);
+        assert_eq!(audit.repaired_refs, 1);
+        assert_eq!(m.pool.refcount(leaked), 0);
+        assert_eq!(m.pool.refcount(t.blocks[1]), 1, "missing ref restored");
+        assert_eq!(m.pool.free_blocks(), 8 - t.blocks.len());
+        // Fully recovered: a fresh audit is clean and release balances.
+        assert!(m.audit_and_reclaim([&t]).clean());
+        m.release_table(&mut t);
+        assert_eq!(m.pool.free_blocks(), 8);
     }
 
     #[test]

@@ -1,0 +1,525 @@
+//! Deterministic, seeded failpoint registry for the serving path.
+//!
+//! A [`FaultPlan`] names up to one fault per injection site; every
+//! trigger is a *one-shot* (it fires once and disarms) so a recovered
+//! run converges instead of dying in a crash loop. Sites:
+//!
+//! * **Worker panic** — a participant of the SPMD phase loop panics at
+//!   phase `P` of engine iteration `N` (optionally pinned to worker
+//!   `W`). The poisonable `SpinBarrier` turns this into a loud
+//!   crash of the whole scope; `coordinator/serve.rs` catches it,
+//!   audits the scheduler/pool invariants and restarts the epoch.
+//! * **Cold-tier fetch failure** — the `nth` cold→hot fetch reports a
+//!   transient I/O-style failure; the owning sequence is reclassified
+//!   swap→recompute through the existing preemption fallback.
+//! * **Cold-tier corruption** — the payload of the `nth` hot→cold
+//!   spill is flipped after its FNV-1a checksum was recorded, so the
+//!   next integrity check (fetch or direct-read audit) trips.
+//! * **Transient allocation failure** — the `nth` admission round is
+//!   treated as if the block pool momentarily had no free block;
+//!   admission retries on the next scheduler iteration.
+//!
+//! Configured via `ServeOptions::faults(..)` or the `PALLAS_FAILPOINTS`
+//! env spec (the explicit option wins). Grammar — `;`-separated
+//! clauses, `,`-separated keys:
+//!
+//! ```text
+//! panic@phase=<name|u16>,iter=<n>[,worker=<w>]
+//! fetch@nth=<n>
+//! corrupt@nth=<n>
+//! alloc@nth=<n>
+//! seed=<u64>
+//! ```
+//!
+//! e.g. `PALLAS_FAILPOINTS="panic@phase=attn,iter=3;corrupt@nth=0"`.
+//! Phase names are the `obs::Code` span names (`embed`, `norm`,
+//! `qkv_gemm`, `rope`, `kv_commit`, `attn`, `o_gemm`, `mlp_gemm`,
+//! `lm_head`).
+//!
+//! **The unset path costs nothing.** Every hook takes an
+//! `Option<&FaultPlan>` (or an `Option<Arc<FaultPlan>>` field) and
+//! compiles to a single branch on `None` — no clock, no allocation —
+//! pinned by the counting-allocator test in `rust/tests/obs.rs`, which
+//! runs with no plan installed.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+
+use crate::obs::Code;
+use crate::util::Rng;
+
+/// Worker-panic trigger: phase code × engine iteration, optionally
+/// pinned to one SPMD participant index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PanicSpec {
+    /// `obs::Code` discriminant of the phase barrier to die at.
+    pub phase: u16,
+    /// 1-based engine iteration (`BatchStepper::step` call) to fire on.
+    pub iter: u32,
+    /// SPMD participant to fire on; `None` = first participant to
+    /// reach the armed phase barrier.
+    pub worker: Option<usize>,
+}
+
+/// One-shot failpoint registry. Interior mutability is all atomic so a
+/// single plan can be shared (`Arc`) between the scheduler, the serve
+/// driver and every SPMD worker thread.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    panic_at: Option<PanicSpec>,
+    fetch_fail_nth: Option<u32>,
+    corrupt_nth: Option<u32>,
+    alloc_fail_nth: Option<u32>,
+    /// Current engine iteration (bumped by the controller before each
+    /// step; workers read it behind the step barrier).
+    iter: AtomicU32,
+    panic_armed: AtomicBool,
+    fetches_seen: AtomicU32,
+    spills_seen: AtomicU32,
+    allocs_seen: AtomicU32,
+    injected: AtomicU32,
+}
+
+impl Clone for FaultPlan {
+    fn clone(&self) -> Self {
+        FaultPlan {
+            seed: self.seed,
+            panic_at: self.panic_at,
+            fetch_fail_nth: self.fetch_fail_nth,
+            corrupt_nth: self.corrupt_nth,
+            alloc_fail_nth: self.alloc_fail_nth,
+            iter: AtomicU32::new(self.iter.load(Ordering::Relaxed)),
+            panic_armed: AtomicBool::new(self.panic_armed.load(Ordering::Relaxed)),
+            fetches_seen: AtomicU32::new(self.fetches_seen.load(Ordering::Relaxed)),
+            spills_seen: AtomicU32::new(self.spills_seen.load(Ordering::Relaxed)),
+            allocs_seen: AtomicU32::new(self.allocs_seen.load(Ordering::Relaxed)),
+            injected: AtomicU32::new(self.injected.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0x5EED,
+            panic_at: None,
+            fetch_fail_nth: None,
+            corrupt_nth: None,
+            alloc_fail_nth: None,
+            iter: AtomicU32::new(0),
+            panic_armed: AtomicBool::new(true),
+            fetches_seen: AtomicU32::new(0),
+            spills_seen: AtomicU32::new(0),
+            allocs_seen: AtomicU32::new(0),
+            injected: AtomicU32::new(0),
+        }
+    }
+}
+
+fn parse_phase(v: &str) -> Result<u16, String> {
+    if let Ok(n) = v.parse::<u16>() {
+        return match Code::from_u16(n) {
+            Some(_) => Ok(n),
+            None => Err(format!("phase code {n} out of range")),
+        };
+    }
+    for c in 0..crate::obs::CODE_COUNT as u16 {
+        let code = Code::from_u16(c).expect("dense discriminants");
+        if code.name() == v {
+            return Ok(c);
+        }
+    }
+    Err(format!("unknown phase {v:?}"))
+}
+
+fn parse_kv<'a>(kv: &'a str, clause: &str) -> Result<(&'a str, &'a str), String> {
+    kv.split_once('=')
+        .map(|(k, v)| (k.trim(), v.trim()))
+        .ok_or_else(|| format!("expected key=value in clause {clause:?}, got {kv:?}"))
+}
+
+fn parse_nth(clause: &str, body: &str) -> Result<u32, String> {
+    let (k, v) = parse_kv(body, clause)?;
+    if k != "nth" {
+        return Err(format!("clause {clause:?} takes nth=<n>, got {k:?}"));
+    }
+    v.parse::<u32>().map_err(|_| format!("bad nth in {clause:?}: {v:?}"))
+}
+
+impl FaultPlan {
+    /// A plan with no failpoints armed (useful as a builder base).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse a `PALLAS_FAILPOINTS`-style spec (grammar in the module
+    /// docs). Errors describe the offending clause.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        let mut any = false;
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(v) = clause.strip_prefix("seed=") {
+                plan.seed =
+                    v.trim().parse().map_err(|_| format!("bad seed: {v:?}"))?;
+                continue;
+            }
+            let (site, body) = clause
+                .split_once('@')
+                .ok_or_else(|| format!("expected site@args, got {clause:?}"))?;
+            match site.trim() {
+                "panic" => {
+                    let mut spec = PanicSpec { phase: u16::MAX, iter: 0, worker: None };
+                    for kv in body.split(',') {
+                        let (k, v) = parse_kv(kv, clause)?;
+                        match k {
+                            "phase" => spec.phase = parse_phase(v)?,
+                            "iter" => {
+                                spec.iter = v
+                                    .parse()
+                                    .map_err(|_| format!("bad iter: {v:?}"))?
+                            }
+                            "worker" => {
+                                spec.worker = Some(
+                                    v.parse()
+                                        .map_err(|_| format!("bad worker: {v:?}"))?,
+                                )
+                            }
+                            _ => return Err(format!("unknown panic key {k:?}")),
+                        }
+                    }
+                    if spec.phase == u16::MAX || spec.iter == 0 {
+                        return Err(
+                            "panic@ needs phase=<name|u16> and iter=<n> (1-based)".into()
+                        );
+                    }
+                    plan.panic_at = Some(spec);
+                }
+                "fetch" => plan.fetch_fail_nth = Some(parse_nth(clause, body)?),
+                "corrupt" => plan.corrupt_nth = Some(parse_nth(clause, body)?),
+                "alloc" => plan.alloc_fail_nth = Some(parse_nth(clause, body)?),
+                s => return Err(format!("unknown failpoint site {s:?}")),
+            }
+            any = true;
+        }
+        if !any && plan.seed == 0x5EED {
+            return Err("empty failpoint spec".into());
+        }
+        Ok(plan)
+    }
+
+    /// Read `PALLAS_FAILPOINTS`. Unset → `None`; malformed → one-line
+    /// stderr warning and `None` (the serve call proceeds unfaulted),
+    /// matching the lenient env-knob policy in [`crate::util::env_knob`].
+    pub fn from_env() -> Option<FaultPlan> {
+        let spec = std::env::var("PALLAS_FAILPOINTS").ok()?;
+        match FaultPlan::parse(&spec) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!(
+                    "warning: ignoring malformed PALLAS_FAILPOINTS={spec:?}: {e}"
+                );
+                None
+            }
+        }
+    }
+
+    /// Builder: worker panic at `phase` (an `obs::Code`) on 1-based
+    /// engine iteration `iter`.
+    pub fn panic_at(mut self, phase: Code, iter: u32, worker: Option<usize>) -> Self {
+        self.panic_at = Some(PanicSpec { phase: phase as u16, iter, worker });
+        self
+    }
+
+    /// Builder: the `nth` (0-based) cold-tier fetch fails transiently.
+    pub fn fail_fetch(mut self, nth: u32) -> Self {
+        self.fetch_fail_nth = Some(nth);
+        self
+    }
+
+    /// Builder: corrupt the payload of the `nth` (0-based) spill.
+    pub fn corrupt_spill(mut self, nth: u32) -> Self {
+        self.corrupt_nth = Some(nth);
+        self
+    }
+
+    /// Builder: the `nth` (0-based) admission round sees a transient
+    /// block-allocation failure.
+    pub fn fail_alloc(mut self, nth: u32) -> Self {
+        self.alloc_fail_nth = Some(nth);
+        self
+    }
+
+    /// Builder: seed for the corruption byte-flip position.
+    pub fn seeded(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Deterministic RNG for payload corruption, keyed on the plan
+    /// seed and the victim slot.
+    pub fn corruption_rng(&self, slot: u32) -> Rng {
+        Rng::new(self.seed ^ ((slot as u64) << 32 | 0x0BAD))
+    }
+
+    /// Controller hook: advance the engine-iteration counter before a
+    /// step's phase barriers open (workers observe it behind the step
+    /// barrier, so no stronger ordering than `Relaxed` is needed).
+    #[inline]
+    pub fn begin_iter(&self) {
+        self.iter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Phase-barrier hook: panic here iff this is the armed
+    /// (phase, iter) pair — and, when the spec pins a worker, this
+    /// participant. One-shot: the swap disarms before unwinding so the
+    /// restarted epoch runs clean.
+    #[inline]
+    pub fn maybe_panic(&self, phase: Code, wi: usize) {
+        if let Some(p) = self.panic_at {
+            if p.phase == phase as u16
+                && self.iter.load(Ordering::Relaxed) == p.iter
+                && p.worker.map_or(true, |w| w == wi)
+                && self.panic_armed.swap(false, Ordering::Relaxed)
+            {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                panic!(
+                    "injected fault: worker {wi} panic at phase {} iter {}",
+                    phase.name(),
+                    p.iter
+                );
+            }
+        }
+    }
+
+    /// Cold-tier hook: should this fetch fail transiently?
+    #[inline]
+    pub fn take_fetch_fail(&self) -> bool {
+        match self.fetch_fail_nth {
+            Some(n) => {
+                let k = self.fetches_seen.fetch_add(1, Ordering::Relaxed);
+                if k == n {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    true
+                } else {
+                    false
+                }
+            }
+            None => false,
+        }
+    }
+
+    /// Cold-tier hook: should this spill's payload be corrupted?
+    #[inline]
+    pub fn take_corrupt(&self) -> bool {
+        match self.corrupt_nth {
+            Some(n) => {
+                let k = self.spills_seen.fetch_add(1, Ordering::Relaxed);
+                if k == n {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    true
+                } else {
+                    false
+                }
+            }
+            None => false,
+        }
+    }
+
+    /// Block-pool hook: should this admission round see a transient
+    /// allocation failure?
+    #[inline]
+    pub fn take_alloc_fail(&self) -> bool {
+        match self.alloc_fail_nth {
+            Some(n) => {
+                let k = self.allocs_seen.fetch_add(1, Ordering::Relaxed);
+                if k == n {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    true
+                } else {
+                    false
+                }
+            }
+            None => false,
+        }
+    }
+
+    /// Faults fired so far (any site).
+    pub fn injected(&self) -> u32 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// True when no site is armed (a no-op plan).
+    pub fn is_empty(&self) -> bool {
+        self.panic_at.is_none()
+            && self.fetch_fail_nth.is_none()
+            && self.corrupt_nth.is_none()
+            && self.alloc_fail_nth.is_none()
+    }
+}
+
+/// Why a request was refused at submission, instead of queued.
+/// Surfaced per request so callers can retry, shed, or re-route —
+/// a typed contract, not a panic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded admission queue is at `limit` waiting requests.
+    QueueFull { limit: usize },
+    /// The request's deadline had already expired at submission.
+    DeadlineExpired,
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull { limit } => {
+                write!(f, "admission queue full ({limit} waiting)")
+            }
+            RejectReason::DeadlineExpired => write!(f, "deadline already expired"),
+        }
+    }
+}
+
+/// The `faults` section of a `ServeReport`: what was injected, what
+/// the run did about it, and what request-level policy refused.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Failpoints that fired (all sites).
+    pub injected: u32,
+    /// Epoch restarts that brought the SPMD scope back after a panic.
+    pub recovered: u32,
+    /// Sequences rolled back to a committed boundary and requeued
+    /// (epoch recovery + cold-integrity reclassification).
+    pub requeued: u32,
+    /// Requests refused at submission (queue full / dead on arrival).
+    pub rejected: u32,
+    /// Requests cancelled because their deadline passed.
+    pub deadline_missed: u32,
+}
+
+impl FaultReport {
+    pub fn any(&self) -> bool {
+        self.injected > 0
+            || self.recovered > 0
+            || self.requeued > 0
+            || self.rejected > 0
+            || self.deadline_missed > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse(
+            "panic@phase=attn,iter=3,worker=1;fetch@nth=2;corrupt@nth=0;alloc@nth=4;seed=9",
+        )
+        .unwrap();
+        assert_eq!(
+            p.panic_at,
+            Some(PanicSpec { phase: Code::Attn as u16, iter: 3, worker: Some(1) })
+        );
+        assert_eq!(p.fetch_fail_nth, Some(2));
+        assert_eq!(p.corrupt_nth, Some(0));
+        assert_eq!(p.alloc_fail_nth, Some(4));
+        assert_eq!(p.seed, 9);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn parse_numeric_phase_and_spaces() {
+        let p = FaultPlan::parse(" panic@ phase = 5 , iter = 1 ").unwrap();
+        assert_eq!(p.panic_at.unwrap().phase, Code::Attn as u16);
+        assert_eq!(p.panic_at.unwrap().worker, None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "",
+            "panic@phase=attn",          // missing iter
+            "panic@phase=nope,iter=1",   // unknown phase name
+            "panic@phase=999,iter=1",    // phase code out of range
+            "panic@phase=attn,iter=x",   // non-numeric iter
+            "warp@nth=1",                // unknown site
+            "corrupt@n=1",               // wrong key
+            "fetch@nth=minus",           // bad nth
+            "seed=zebra",                // bad seed
+            "panicphase=1",              // no @
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn panic_trigger_is_one_shot_and_iter_gated() {
+        let p = FaultPlan::new().panic_at(Code::Attn, 2, None);
+        p.begin_iter(); // iter 1
+        p.maybe_panic(Code::Attn, 0); // wrong iter — no fire
+        p.begin_iter(); // iter 2
+        p.maybe_panic(Code::Norm, 0); // wrong phase — no fire
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.maybe_panic(Code::Attn, 1)
+        }));
+        assert!(r.is_err(), "armed (phase, iter) must fire");
+        assert_eq!(p.injected(), 1);
+        // Disarmed: the same (phase, iter) no longer fires.
+        p.maybe_panic(Code::Attn, 1);
+        assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn worker_pinned_panic_ignores_other_participants() {
+        let p = FaultPlan::new().panic_at(Code::Rope, 1, Some(2));
+        p.begin_iter();
+        p.maybe_panic(Code::Rope, 0);
+        p.maybe_panic(Code::Rope, 1);
+        assert_eq!(p.injected(), 0);
+        assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.maybe_panic(Code::Rope, 2)
+        }))
+        .is_err());
+    }
+
+    #[test]
+    fn nth_counters_fire_once() {
+        let p = FaultPlan::new().fail_fetch(1).corrupt_spill(0).fail_alloc(2);
+        assert!(!p.take_fetch_fail()); // fetch 0
+        assert!(p.take_fetch_fail()); // fetch 1 — fires
+        assert!(!p.take_fetch_fail()); // fetch 2
+        assert!(p.take_corrupt()); // spill 0 — fires
+        assert!(!p.take_corrupt());
+        assert!(!p.take_alloc_fail());
+        assert!(!p.take_alloc_fail());
+        assert!(p.take_alloc_fail()); // round 2 — fires
+        assert_eq!(p.injected(), 3);
+    }
+
+    #[test]
+    fn corruption_rng_is_deterministic_per_slot() {
+        let p = FaultPlan::new().seeded(7);
+        let a: Vec<u64> = (0..4).map(|_| p.corruption_rng(3).next_u64()).collect();
+        assert!(a.windows(2).all(|w| w[0] == w[1]));
+        assert_ne!(p.corruption_rng(3).next_u64(), p.corruption_rng(4).next_u64());
+    }
+
+    #[test]
+    fn reject_reason_renders() {
+        assert_eq!(
+            RejectReason::QueueFull { limit: 8 }.to_string(),
+            "admission queue full (8 waiting)"
+        );
+        assert_eq!(RejectReason::DeadlineExpired.to_string(), "deadline already expired");
+    }
+
+    #[test]
+    fn fault_report_any() {
+        assert!(!FaultReport::default().any());
+        assert!(FaultReport { rejected: 1, ..Default::default() }.any());
+    }
+}

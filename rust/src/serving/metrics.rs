@@ -90,6 +90,25 @@ pub struct ServingMetrics {
     /// (bandwidth + latency of the machine's cold tier); advisory —
     /// never added to wall time.
     pub tier_sim_s: f64,
+    /// Requests refused at submission by admission backpressure
+    /// (bounded queue full, or dead on arrival past their deadline).
+    pub rejected: usize,
+    /// Requests cancelled — queued or running — because their
+    /// deadline passed before they finished.
+    pub deadline_missed: usize,
+    /// Sequences rolled back to a committed KV boundary and requeued
+    /// by fault recovery (epoch-restart audits and cold-tier
+    /// integrity reclassifications).
+    pub fault_requeued: usize,
+    /// Blocks the epoch-restart audit found leaked (refcount above the
+    /// surviving references) and reclaimed. Always 0 in a healthy build
+    /// — recovery releases everything explicitly; non-zero means the
+    /// audit caught and repaired an invariant violation.
+    pub fault_leaked_blocks: usize,
+    /// Cold blocks whose FNV payload checksum failed verification
+    /// (fetch or direct-read audit); each one reclassified its owner
+    /// swap -> recompute instead of serving corrupt KV.
+    pub cold_checksum_failures: usize,
     /// `(request id, generated-token index)` of each sequence's first
     /// resume over lossy (quantized) KV: output tokens before the index
     /// are exact; divergence from the oracle is possible only at or
@@ -165,10 +184,16 @@ impl ServingMetrics {
                 self.chunk_size.max(),
             ));
         }
+        if self.rejected > 0 || self.deadline_missed > 0 || self.fault_requeued > 0 {
+            s.push_str(&format!(
+                " | robustness rejected={} deadline_missed={} requeued={}",
+                self.rejected, self.deadline_missed, self.fault_requeued,
+            ));
+        }
         if self.tiered {
             s.push_str(&format!(
                 " | tier swap={} recompute={} spill={}B/{} fetch={}B/{} reattach={} direct={} \
-                 cold peak={} sim={:.2}ms replay={}",
+                 cold peak={} sim={:.2}ms replay={} checksum_fail={}",
                 self.swap_preemptions,
                 self.recompute_preemptions,
                 self.spill_bytes,
@@ -180,6 +205,7 @@ impl ServingMetrics {
                 self.peak_cold_in_use,
                 self.tier_sim_s * 1e3,
                 self.replay_steps,
+                self.cold_checksum_failures,
             ));
         }
         s
@@ -242,6 +268,20 @@ mod tests {
         assert!((m.decode_iter_mean_s() - 0.05).abs() < 1e-12);
         assert!((m.prefill_iter_mean_s() - 0.25).abs() < 1e-12);
         assert_eq!(ServingMetrics::default().decode_iter_mean_s(), 0.0);
+    }
+
+    #[test]
+    fn robustness_counters_render_only_when_nonzero() {
+        let calm = ServingMetrics::default();
+        assert!(!calm.render().contains("robustness"), "calm runs stay quiet");
+        let m = ServingMetrics {
+            rejected: 2,
+            deadline_missed: 1,
+            fault_requeued: 3,
+            ..Default::default()
+        };
+        let s = m.render();
+        assert!(s.contains("robustness rejected=2 deadline_missed=1 requeued=3"), "{s}");
     }
 
     #[test]

@@ -31,6 +31,16 @@
 //!   lossless f32) spill targets, the swap-vs-recompute cost model, and
 //!   the scheduler-side cold-slot control plane. Swap-based preemption
 //!   moves KV across the tier boundary instead of recomputing it.
+//!   Every cold slot carries an FNV-1a payload checksum, verified on
+//!   fetch and on direct-read resume; a mismatch reclassifies the
+//!   owner swap→recompute instead of serving corrupt KV.
+//! * [`fault`] — deterministic seeded failpoint registry
+//!   ([`FaultPlan`], `PALLAS_FAILPOINTS`) plus the typed
+//!   request-rejection ([`RejectReason`]) and fault-report
+//!   ([`FaultReport`]) contracts. The serve loop in
+//!   [`crate::coordinator::serve`] pairs it with panic-isolated run
+//!   epochs: a poisoned SPMD scope is audited, rolled back to
+//!   committed boundaries, requeued and restarted.
 //!
 //! Selected via [`crate::coordinator::ServeOptions`]; outputs are
 //! token-identical to the FCFS oracle (`rust/tests/serving.rs`) whenever
@@ -39,13 +49,15 @@
 pub mod autotune;
 pub mod batch_engine;
 pub mod blocks;
+pub mod fault;
 pub mod metrics;
 pub mod scheduler;
 pub mod tiered;
 
 pub use autotune::ServePlan;
 pub use batch_engine::{BatchEngine, BatchStepper, PagedKv, StepSlot};
-pub use blocks::{BlockPool, BlockTable, KvBlockManager};
+pub use blocks::{BlockAudit, BlockPool, BlockTable, KvBlockManager};
+pub use fault::{FaultPlan, FaultReport, RejectReason};
 pub use metrics::ServingMetrics;
 pub use scheduler::{
     ContinuousConfig, ContinuousConfigBuilder, ContinuousScheduler, SeqState, Sequence,

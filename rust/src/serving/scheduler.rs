@@ -35,9 +35,11 @@
 //! oracle may start; a fully re-attached resume stays exact.
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::blocks::{BlockTable, KvBlockManager};
+use super::fault::{FaultPlan, RejectReason};
 use super::metrics::ServingMetrics;
 use super::tiered::{SwapPolicy, TierConfig, TierOp, TierState};
 use crate::coordinator::Request;
@@ -166,6 +168,21 @@ pub struct ContinuousConfig {
     /// `None` = the unsharded seed engine. Layout only — outputs stay
     /// token-identical to the FCFS oracle under any spec.
     pub sharding: Option<crate::dist::ShardSpec>,
+    /// Per-request completion deadline measured from submission (`None`
+    /// = no deadline, the default). A request that exceeds it is
+    /// cancelled wherever it is — queued or running — with its blocks
+    /// fully released (both tiers) and whatever it generated so far as
+    /// its partial output. `Some(ZERO)` is the degenerate dead-on-arrival
+    /// deadline: every submission is rejected with
+    /// [`RejectReason::DeadlineExpired`]. Wall-clock driven, so it can
+    /// change *which* tokens a request gets to produce, never their
+    /// values (greedy decode stays deterministic per request).
+    pub deadline: Option<Duration>,
+    /// Admission-queue bound: [`ContinuousScheduler::try_submit`]
+    /// rejects with [`RejectReason::QueueFull`] once this many requests
+    /// are waiting. 0 (the default) = unbounded, the pre-backpressure
+    /// behaviour.
+    pub max_queue: usize,
 }
 
 impl Default for ContinuousConfig {
@@ -180,6 +197,8 @@ impl Default for ContinuousConfig {
             tiering: None,
             plan: None,
             sharding: None,
+            deadline: None,
+            max_queue: 0,
         }
     }
 }
@@ -239,6 +258,16 @@ impl ContinuousConfigBuilder {
 
     pub fn sharding(mut self, sharding: crate::dist::ShardSpec) -> Self {
         self.cfg.sharding = Some(sharding);
+        self
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.cfg.deadline = Some(deadline);
+        self
+    }
+
+    pub fn max_queue(mut self, max_queue: usize) -> Self {
+        self.cfg.max_queue = max_queue;
         self
     }
 
@@ -352,6 +381,8 @@ impl ContinuousConfig {
             tiering: None,
             plan: None,
             sharding: None,
+            deadline: None,
+            max_queue: 0,
         }
     }
 
@@ -377,6 +408,8 @@ impl ContinuousConfig {
             tiering: None,
             plan: Some(plan),
             sharding: None,
+            deadline: None,
+            max_queue: 0,
         }
     }
 }
@@ -397,6 +430,9 @@ pub struct ContinuousScheduler {
     /// whole-iteration spans, and per-request lifecycle instants.
     /// `None` (the default) records nothing — every hook is one branch.
     trace: Option<Ring>,
+    /// Failpoint plan shared with the engine ([`crate::serving::fault`]).
+    /// `None` (the default) keeps every injection hook a single branch.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl ContinuousScheduler {
@@ -414,7 +450,16 @@ impl ContinuousScheduler {
             iter: 0,
             finished: Vec::new(),
             trace: None,
+            faults: None,
         }
+    }
+
+    /// Share the run's failpoint plan (the same [`Arc`] the engine
+    /// holds, so nth-counters are global across injection sites). The
+    /// scheduler consults it only in `admit` (transient allocation
+    /// failure); `None` keeps the hook a single branch.
+    pub fn set_faults(&mut self, faults: Option<Arc<FaultPlan>>) {
+        self.faults = faults;
     }
 
     /// Attach a pre-allocated event ring: the scheduler then records
@@ -477,9 +522,8 @@ impl ContinuousScheduler {
         ops
     }
 
-    /// Enqueue a request (arrival time = now, for TTFT accounting).
-    pub fn submit(&mut self, req: &Request) {
-        let mut seq = Sequence {
+    fn make_seq(req: &Request) -> Sequence {
+        Sequence {
             id: req.id,
             tokens: req.prompt.clone(),
             prompt_len: req.prompt.len(),
@@ -497,7 +541,45 @@ impl ContinuousScheduler {
             resume_direct: false,
             reattached_cold: Vec::new(),
             submitted: Instant::now(),
+        }
+    }
+
+    /// Enqueue a request (arrival time = now, for TTFT accounting).
+    /// Backpressure rejections are absorbed: the request still produces
+    /// a (empty) finished output, so callers that submit blindly keep
+    /// an output per request. Use [`try_submit`] to observe the reason.
+    ///
+    /// [`try_submit`]: ContinuousScheduler::try_submit
+    pub fn submit(&mut self, req: &Request) {
+        let _ = self.try_submit(req);
+    }
+
+    /// Enqueue a request, or reject it with a typed reason when
+    /// admission backpressure applies: the bounded queue
+    /// ([`ContinuousConfig::max_queue`]) is full, or the configured
+    /// deadline is the degenerate zero budget (dead on arrival). A
+    /// rejected request is retired immediately as a `Done` sequence
+    /// with no output — rejection is observable in the output stream,
+    /// not a silent drop.
+    pub fn try_submit(&mut self, req: &Request) -> Result<(), RejectReason> {
+        let reason = if self.config.max_queue > 0 && self.queue.len() >= self.config.max_queue {
+            Some(RejectReason::QueueFull { limit: self.config.max_queue })
+        } else if self.config.deadline.map_or(false, |d| d.is_zero()) {
+            Some(RejectReason::DeadlineExpired)
+        } else {
+            None
         };
+        if let Some(reason) = reason {
+            self.metrics.rejected += 1;
+            if let Some(r) = self.trace.as_mut() {
+                r.instant(Code::Reject, req.id as u32);
+            }
+            let mut seq = Self::make_seq(req);
+            seq.state = SeqState::Done;
+            self.finished.push(seq);
+            return Err(reason);
+        }
+        let mut seq = Self::make_seq(req);
         if let Some(r) = self.trace.as_mut() {
             r.instant(Code::Enqueue, req.id as u32);
         }
@@ -508,9 +590,10 @@ impl ContinuousScheduler {
                 r.instant(Code::Finish, seq.id as u32);
             }
             self.finished.push(seq);
-            return;
+            return Ok(());
         }
         self.queue.push_back(seq);
+        Ok(())
     }
 
     pub fn is_done(&self) -> bool {
@@ -534,10 +617,11 @@ impl ContinuousScheduler {
     pub fn schedule(&mut self) -> usize {
         let t0 = self.trace.as_ref().map(|r| r.now_ns());
         self.iter += 1;
-        self.admit();
+        self.cancel_expired();
+        let admission_faulted = self.admit();
         self.plan_spans();
         self.ensure_all_slots();
-        if self.running.is_empty() && !self.queue.is_empty() {
+        if !admission_faulted && self.running.is_empty() && !self.queue.is_empty() {
             let head = self.queue.front().unwrap();
             panic!(
                 "KV block pool too small: request {} needs ~{} blocks of {} tokens, pool has {}",
@@ -578,7 +662,7 @@ impl ContinuousScheduler {
     /// in running (admission) order — a deterministic packing, so the
     /// step shape is a pure function of scheduler state.
     fn plan_spans(&mut self) {
-        let chunk = self.config.chunk();
+        let chunk = self.effective_chunk();
         let budget = self.config.token_budget().max(self.running.len());
         let mut extra = budget - self.running.len();
         for seq in &mut self.running {
@@ -590,6 +674,84 @@ impl ContinuousScheduler {
             seq.span = 1 + ext;
             extra -= ext;
         }
+    }
+
+    /// The prefill chunk this iteration packs with. Under deadline
+    /// pressure — any live request past half its budget — the chunk
+    /// halves (floor 1): shorter prefill spans mean more frequent
+    /// sampling opportunities for everyone, degrading throughput before
+    /// anything is shed. Wall-clock driven, so it changes only *when*
+    /// positions are computed, never token values.
+    fn effective_chunk(&self) -> usize {
+        let chunk = self.config.chunk();
+        if chunk <= 1 {
+            return chunk;
+        }
+        match self.config.deadline {
+            Some(d) if !d.is_zero() => {
+                let half = d / 2;
+                let pressured = self
+                    .running
+                    .iter()
+                    .chain(self.queue.iter())
+                    .any(|s| s.submitted.elapsed() >= half);
+                if pressured {
+                    (chunk / 2).max(1)
+                } else {
+                    chunk
+                }
+            }
+            _ => chunk,
+        }
+    }
+
+    /// Cancel every request — queued or running — whose deadline has
+    /// passed. Cancellation is a full retirement: hot blocks and cold
+    /// slots are released, the sequence finishes `Done` with whatever
+    /// it generated so far as its partial output, and the miss is
+    /// counted in `deadline_missed`. Runs at the top of `schedule()`,
+    /// where every sequence is at a committed boundary (no tier ops
+    /// pending, no unread re-attaches).
+    fn cancel_expired(&mut self) {
+        let Some(d) = self.config.deadline else { return };
+        if d.is_zero() {
+            return; // dead-on-arrival is handled at submission
+        }
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].submitted.elapsed() >= d {
+                let seq = self.running.remove(i);
+                self.cancel_deadline(seq);
+            } else {
+                i += 1;
+            }
+        }
+        let mut j = 0;
+        while j < self.queue.len() {
+            if self.queue[j].submitted.elapsed() >= d {
+                let seq = self.queue.remove(j).expect("index checked above");
+                self.cancel_deadline(seq);
+            } else {
+                j += 1;
+            }
+        }
+    }
+
+    fn cancel_deadline(&mut self, mut seq: Sequence) {
+        self.kv.release_table(&mut seq.table);
+        if let Some(tier) = self.tier.as_mut() {
+            for slot in seq.cold.drain(..) {
+                tier.release(slot);
+            }
+        }
+        seq.state = SeqState::Done;
+        self.metrics.deadline_missed += 1;
+        self.metrics.request_e2e.push(seq.submitted.elapsed().as_secs_f64());
+        if let Some(r) = self.trace.as_mut() {
+            r.instant(Code::DeadlineMiss, seq.id as u32);
+            r.instant(Code::Finish, seq.id as u32);
+        }
+        self.finished.push(seq);
     }
 
     /// Record the outcome of one batched step: `samples[i]` corresponds
@@ -733,7 +895,20 @@ impl ContinuousScheduler {
         self.metrics.peak_blocks_in_use = self.kv.pool.max_in_use();
     }
 
-    fn admit(&mut self) {
+    /// Returns true when an injected transient allocation failure
+    /// skipped admission this iteration (the queue is retried next
+    /// iteration — `schedule()` must not diagnose the empty running set
+    /// as a too-small pool).
+    fn admit(&mut self) -> bool {
+        // Failpoint: a transient block-allocation failure defers every
+        // admission by one iteration. One-shot and retried, so outputs
+        // are unaffected — only admission order in time shifts.
+        if self.faults.as_ref().map_or(false, |fp| fp.take_alloc_fail()) {
+            if let Some(r) = self.trace.as_mut() {
+                r.instant(Code::FaultInject, 3);
+            }
+            return true;
+        }
         // Blocks promised to sequences admitted earlier in this same
         // call: admission allocates lazily, so without this the same
         // free blocks would be counted for every admission and fresh
@@ -779,6 +954,7 @@ impl ContinuousScheduler {
             }
             self.running.push(seq);
         }
+        false
     }
 
     /// Swap the cold queue head back in. In order of preference per
@@ -1114,6 +1290,151 @@ impl ContinuousScheduler {
             self.metrics.recompute_preemptions += 1;
         }
     }
+
+    /// Cold slots that must pass checksum verification before this
+    /// iteration's step may read them in place: the direct-read prefixes
+    /// of sequences resumed *this* iteration. (Fetched slots are
+    /// verified inside the fetch itself; a slot is only ever trusted
+    /// after one of the two checks.) The driver feeds the list to
+    /// `BatchStepper::verify_cold` and routes failures back through
+    /// [`fault_cold`].
+    ///
+    /// [`fault_cold`]: ContinuousScheduler::fault_cold
+    pub fn resume_audits(&self) -> Vec<u32> {
+        let iter = self.iter;
+        self.running
+            .iter()
+            .filter(|s| s.admitted_iter == iter && s.resume_direct)
+            .flat_map(|s| s.cold.iter().copied())
+            .collect()
+    }
+
+    /// Handle cold slots whose payload failed checksum verification
+    /// (fetch or direct-read audit): the owning sequences cannot trust
+    /// their cold KV, so each is reclassified swap -> recompute through
+    /// the existing fallback — blocks released on both tiers, position
+    /// rolled back to 0, requeued at the front. Never serves corrupt
+    /// KV; outputs stay token-identical because recompute replays the
+    /// exact committed token stream. Returns the number of sequences
+    /// demoted. Must run after `take_tier_ops()` and before the step's
+    /// slots are built.
+    pub fn fault_cold(&mut self, bad_slots: &[u32]) -> usize {
+        if bad_slots.is_empty() {
+            return 0;
+        }
+        let Some(tier) = self.tier.as_ref() else { return 0 };
+        self.metrics.cold_checksum_failures += bad_slots.len();
+        let mut owners: Vec<u64> = Vec::new();
+        for &slot in bad_slots {
+            if let Some(id) = tier.owner_of(slot) {
+                if !owners.contains(&id) {
+                    owners.push(id);
+                }
+            }
+        }
+        let mut demoted = 0;
+        for id in owners {
+            if let Some(i) = self.running.iter().position(|s| s.id == id) {
+                self.demote_to_recompute(i);
+                demoted += 1;
+            } else if self.queue.iter().any(|s| s.id == id) {
+                // A queued swap set turned out corrupt: same
+                // reclassification the LRU eviction path uses.
+                self.evict_cold_owner(id);
+                demoted += 1;
+            }
+        }
+        self.metrics.fault_requeued += demoted;
+        demoted
+    }
+
+    /// Reclassify `running[i]` swap -> recompute after a cold-integrity
+    /// failure. Mirrors the recompute arm of `preempt`, plus the undo
+    /// of a not-yet-stepped resume's bookkeeping (the step never ran,
+    /// so re-attach hits must not count). Fetched slots of the aborted
+    /// resume are already queued for release (`release_after_ops`) and
+    /// flush at the next commit.
+    fn demote_to_recompute(&mut self, i: usize) {
+        if let Some(r) = self.trace.as_mut() {
+            r.instant(Code::FaultInject, 2);
+        }
+        let mut seq = self.running.remove(i);
+        self.kv.prefix_hits -= seq.reattached_cold.len();
+        seq.reattached_cold.clear();
+        self.kv.release_table(&mut seq.table);
+        if let Some(tier) = self.tier.as_mut() {
+            for slot in seq.cold.drain(..) {
+                tier.release(slot);
+            }
+        }
+        seq.resume_lossy = false;
+        seq.resume_direct = false;
+        seq.pos = 0;
+        seq.state = SeqState::Preempted;
+        self.metrics.swap_preemptions = self.metrics.swap_preemptions.saturating_sub(1);
+        self.metrics.recompute_preemptions += 1;
+        self.queue.push_front(seq);
+    }
+
+    /// Roll the scheduler back to its last committed boundary after an
+    /// SPMD run epoch died (a worker panicked and poisoned the
+    /// barrier). The interrupted step committed nothing — `pos` only
+    /// advances in `commit()` — but its KV writes may be partial and
+    /// its tier ops may not have run, so nothing in-flight is trusted:
+    ///
+    /// * every running sequence is demoted to recompute and requeued at
+    ///   the front in admission order (replay of the committed token
+    ///   stream is deterministic, so outputs are unchanged);
+    /// * queued swap sets are stripped to recompute (the tier reset
+    ///   below frees their slots);
+    /// * the cold tier is cleared wholesale ([`TierState::reset`]);
+    /// * hot-pool refcounts are reconciled against the surviving
+    ///   references (prefix cache only, at this point) and leaked
+    ///   blocks reclaimed ([`KvBlockManager::audit_and_reclaim`]).
+    ///
+    /// Returns the number of sequences requeued. The caller restarts a
+    /// fresh SPMD scope and keeps serving.
+    pub fn recover_after_panic(&mut self) -> usize {
+        let mut requeued = 0;
+        // Back-to-front pops + push_front keep admission order at the
+        // head of the queue.
+        while let Some(mut seq) = self.running.pop() {
+            self.kv.prefix_hits -= seq.reattached_cold.len();
+            seq.reattached_cold.clear();
+            self.kv.release_table(&mut seq.table);
+            seq.cold.clear(); // slots die with the tier reset below
+            seq.resume_lossy = false;
+            seq.resume_direct = false;
+            seq.pos = 0;
+            seq.state = SeqState::Preempted;
+            self.metrics.preemptions += 1;
+            self.metrics.recompute_preemptions += 1;
+            requeued += 1;
+            self.queue.push_front(seq);
+        }
+        for seq in self.queue.iter_mut() {
+            if seq.state == SeqState::Swapped || !seq.cold.is_empty() {
+                seq.cold.clear();
+                seq.pos = 0;
+                seq.state = SeqState::Preempted;
+                self.metrics.swap_preemptions =
+                    self.metrics.swap_preemptions.saturating_sub(1);
+                self.metrics.recompute_preemptions += 1;
+            }
+        }
+        if let Some(tier) = self.tier.as_mut() {
+            tier.reset();
+        }
+        let audit = self.kv.audit_and_reclaim(std::iter::empty());
+        if !audit.clean() {
+            self.metrics.fault_leaked_blocks += audit.freed_blocks;
+        }
+        self.metrics.fault_requeued += requeued;
+        if let Some(r) = self.trace.as_mut() {
+            r.instant(Code::Recover, requeued as u32);
+        }
+        requeued
+    }
 }
 
 #[cfg(test)]
@@ -1438,6 +1759,203 @@ mod tests {
         assert!(s.metrics.swap_preemptions > 0);
         assert!(s.metrics.swap_points.is_empty(), "f32 swap is lossless: no divergence points");
         assert!(s.take_finished().iter().all(|f| !f.tainted && f.swap_in_at.is_none()));
+    }
+
+    #[test]
+    fn bounded_queue_rejects_with_typed_reason() {
+        let cfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(8)
+            .max_batch(2)
+            .max_queue(1)
+            .build();
+        let mut s = ContinuousScheduler::new(cfg);
+        assert!(s.try_submit(&req(0, vec![1, 2], 2)).is_ok());
+        assert_eq!(
+            s.try_submit(&req(1, vec![3, 4], 2)),
+            Err(RejectReason::QueueFull { limit: 1 })
+        );
+        assert_eq!(s.metrics.rejected, 1);
+        let fin = s.take_finished();
+        assert_eq!(fin.len(), 1, "a rejected request still yields an (empty) output");
+        assert_eq!(fin[0].id, 1);
+        assert!(fin[0].generated.is_empty());
+        assert_eq!(fin[0].state, SeqState::Done);
+    }
+
+    #[test]
+    fn zero_deadline_rejects_dead_on_arrival() {
+        let cfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(8)
+            .max_batch(2)
+            .deadline(Duration::ZERO)
+            .build();
+        let mut s = ContinuousScheduler::new(cfg);
+        assert_eq!(s.try_submit(&req(0, vec![1], 1)), Err(RejectReason::DeadlineExpired));
+        assert_eq!(s.metrics.rejected, 1);
+        assert!(s.is_done(), "the rejected request retires immediately");
+    }
+
+    #[test]
+    fn expired_deadline_cancels_queued_and_running() {
+        let cfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(8)
+            .max_batch(1)
+            .deadline(Duration::from_millis(40))
+            .build();
+        let mut s = ContinuousScheduler::new(cfg);
+        s.submit(&req(0, vec![1, 2], 8));
+        s.submit(&req(1, vec![3, 4], 8)); // stays queued behind max_batch 1
+        assert_eq!(s.schedule(), 1);
+        s.commit(&[None], 0.0);
+        s.schedule();
+        s.commit(&[Some(7)], 0.0); // request 0 holds one token at the miss
+        std::thread::sleep(Duration::from_millis(50));
+        s.schedule();
+        assert!(s.is_done(), "both requests must be cancelled past the deadline");
+        assert_eq!(s.metrics.deadline_missed, 2);
+        let fin = s.take_finished();
+        assert_eq!(fin.len(), 2);
+        let r0 = fin.iter().find(|f| f.id == 0).unwrap();
+        assert_eq!(r0.generated, vec![7], "the partial output survives cancellation");
+        assert!(fin.iter().find(|f| f.id == 1).unwrap().generated.is_empty());
+        s.kv.evict_unused_cached();
+        assert_eq!(s.kv.pool.free_blocks(), 8, "cancellation releases every block");
+    }
+
+    #[test]
+    fn deadline_pressure_halves_prefill_chunk() {
+        let cfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(32)
+            .max_batch(2)
+            .prefill_chunk(8)
+            .deadline(Duration::from_secs(10))
+            .build();
+        let mut s = ContinuousScheduler::new(cfg);
+        s.iter = 1;
+        s.running.push(Sequence {
+            id: 0,
+            tokens: (0..12).collect(),
+            prompt_len: 12,
+            max_new: 4,
+            table: BlockTable::default(),
+            pos: 0,
+            span: 1,
+            generated: Vec::new(),
+            state: SeqState::Prefill,
+            admitted_iter: 1,
+            cold: Vec::new(),
+            tainted: false,
+            swap_in_at: None,
+            resume_lossy: false,
+            resume_direct: false,
+            reattached_cold: Vec::new(),
+            submitted: Instant::now(),
+        });
+        s.plan_spans();
+        assert_eq!(s.running[0].span, 8, "fresh request: the full chunk");
+        // Age the request past half its budget (guarded: `Instant`
+        // cannot go below the platform epoch on a freshly booted box).
+        if let Some(aged) = Instant::now().checked_sub(Duration::from_secs(6)) {
+            s.running[0].submitted = aged;
+            s.plan_spans();
+            assert_eq!(s.running[0].span, 4, "past half the deadline the chunk halves");
+        }
+    }
+
+    #[test]
+    fn injected_alloc_failure_defers_admission_one_iteration() {
+        let fp = Arc::new(FaultPlan::new().fail_alloc(0));
+        let mut s = ContinuousScheduler::new(flat_config(4, 8, 2));
+        s.set_faults(Some(fp.clone()));
+        s.submit(&req(0, vec![1, 2], 2));
+        assert_eq!(s.schedule(), 0, "the first admission round hits the injected failure");
+        s.commit(&[], 0.0);
+        assert_eq!(s.schedule(), 1, "the failure is transient: admission retries and wins");
+        assert_eq!(fp.injected(), 1);
+        while !s.is_done() {
+            let samples: Vec<Option<usize>> =
+                s.running().iter().map(|q| q.span_reaches_frontier().then_some(9)).collect();
+            s.commit(&samples, 0.0);
+            s.schedule();
+        }
+        assert_eq!(s.take_finished()[0].generated, vec![9, 9], "outputs are unaffected");
+    }
+
+    #[test]
+    fn recover_after_panic_requeues_and_replays_to_the_same_tokens() {
+        let mut s = ContinuousScheduler::new(flat_config(4, 16, 2));
+        s.submit(&req(0, vec![1, 2, 3], 4));
+        s.submit(&req(1, vec![4, 5, 6], 4));
+        // Five committed iterations: three prompt positions, then two
+        // decode tokens — so the rollback has decode work to replay.
+        for _ in 0..5 {
+            s.schedule();
+            let samples: Vec<Option<usize>> =
+                s.running().iter().map(|q| q.span_reaches_frontier().then_some(7)).collect();
+            s.commit(&samples, 0.0);
+        }
+        s.schedule(); // the in-flight iteration whose step "panics"
+        let requeued = s.recover_after_panic();
+        assert_eq!(requeued, 2, "both running sequences roll back");
+        assert!(s.running().is_empty());
+        assert_eq!(s.metrics.fault_requeued, 2);
+        assert_eq!(s.metrics.fault_leaked_blocks, 0, "recovery releases everything itself");
+        assert_eq!(s.queue.front().unwrap().id, 0, "admission order survives the rollback");
+        while !s.is_done() {
+            s.schedule();
+            let samples: Vec<Option<usize>> =
+                s.running().iter().map(|q| q.span_reaches_frontier().then_some(7)).collect();
+            s.commit(&samples, 0.0);
+        }
+        let mut fin = s.take_finished();
+        fin.sort_by_key(|f| f.id);
+        assert_eq!(fin.len(), 2);
+        assert!(fin.iter().all(|f| f.generated == vec![7, 7, 7, 7]));
+        assert!(s.metrics.replay_steps > 0, "the rollback replays committed positions");
+        s.kv.evict_unused_cached();
+        assert_eq!(s.kv.pool.free_blocks(), 16, "no block survives past the finishes");
+    }
+
+    #[test]
+    fn checksum_failure_reclassifies_direct_read_resume_to_recompute() {
+        let mut cfg = tiered_config(5, 8);
+        if let Some(t) = cfg.tiering.as_mut() {
+            t.direct_read_min_frac = Some(0.0);
+        }
+        let mut s = ContinuousScheduler::new(cfg);
+        s.set_tier_geometry(2, 8);
+        s.submit(&req(0, vec![1, 2, 3, 4], 12));
+        s.submit(&req(1, vec![5, 6, 7, 8], 12));
+        let mut audited = false;
+        for _ in 0..300 {
+            if s.is_done() {
+                break;
+            }
+            s.schedule();
+            let _ = s.take_tier_ops();
+            let audits = s.resume_audits();
+            if !audited && !audits.is_empty() {
+                // Pretend every audited slot failed verification.
+                let demoted = s.fault_cold(&audits);
+                assert!(demoted > 0, "the direct-read owner must be demoted");
+                audited = true;
+            }
+            let samples: Vec<Option<usize>> =
+                s.running().iter().map(|q| q.span_reaches_frontier().then_some(7)).collect();
+            s.commit(&samples, 0.0);
+        }
+        assert!(audited, "the scenario must produce a direct-read resume to audit");
+        assert!(s.is_done(), "corruption must degrade to recompute, not hang");
+        assert!(s.metrics.cold_checksum_failures > 0);
+        assert!(s.metrics.recompute_preemptions > 0, "reclassified swap -> recompute");
+        assert!(s.metrics.fault_requeued > 0);
+        let fin = s.take_finished();
+        assert!(fin.iter().all(|f| f.generated.len() == 12));
+        assert_eq!(s.tier.as_ref().unwrap().in_use(), 0, "demotion releases the cold slots");
     }
 
     #[test]

@@ -35,6 +35,22 @@ use super::batch_engine::PagedKv;
 use crate::cost::MachineSpec;
 use crate::model::Qwen3Config;
 use crate::ntt::{dequantize_block_i8, quantize_block_i8};
+use crate::util::Rng;
+
+/// FNV-1a 64-bit over a byte stream — the cold tier's per-slot payload
+/// checksum. Dependency-free and byte-order-stable; collision
+/// resistance is not the goal (this detects storage corruption, not
+/// adversaries).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
 
 /// Storage format of the cold tier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -229,6 +245,10 @@ pub struct ColdKv {
     v_zero: Vec<f32>,
     /// Rows holding real data per slot (partial tail blocks).
     filled: Vec<usize>,
+    /// Per-slot FNV-1a checksum of the payload (+ quant params),
+    /// recorded at spill time and verified before the data is trusted
+    /// again (fetch, or the direct-read audit on swap-in).
+    sum: Vec<u64>,
 }
 
 impl ColdKv {
@@ -259,6 +279,7 @@ impl ColdKv {
             v_scale: vec![0.0; params],
             v_zero: vec![0.0; params],
             filled: vec![0; cold_blocks],
+            sum: vec![0; cold_blocks],
         }
     }
 
@@ -329,6 +350,71 @@ impl ColdKv {
                     self.fk[b..b + filled * w].copy_from_slice(k_src);
                     self.fv[b..b + filled * w].copy_from_slice(v_src);
                 }
+            }
+        }
+        self.sum[slot as usize] = self.checksum(slot);
+    }
+
+    /// FNV-1a over the slot's live payload rows and (in the int8 tier)
+    /// its scale/zero parameters. The row count is folded in so a
+    /// truncated slot can't pass as a shorter valid one.
+    fn checksum(&self, slot: u32) -> u64 {
+        let filled = self.filled[slot as usize];
+        let w = self.width;
+        let mut h = fnv1a(FNV_OFFSET, &(filled as u64).to_le_bytes());
+        for l in 0..self.layers {
+            let b = self.base(slot, l);
+            let p = self.pidx(slot, l);
+            match self.quant {
+                KvQuant::Int8 => {
+                    for &q in &self.qk[b..b + filled * w] {
+                        h = fnv1a(h, &[q as u8]);
+                    }
+                    for &q in &self.qv[b..b + filled * w] {
+                        h = fnv1a(h, &[q as u8]);
+                    }
+                    for v in
+                        [self.k_scale[p], self.k_zero[p], self.v_scale[p], self.v_zero[p]]
+                    {
+                        h = fnv1a(h, &v.to_le_bytes());
+                    }
+                }
+                KvQuant::F32 => {
+                    for &v in &self.fk[b..b + filled * w] {
+                        h = fnv1a(h, &v.to_le_bytes());
+                    }
+                    for &v in &self.fv[b..b + filled * w] {
+                        h = fnv1a(h, &v.to_le_bytes());
+                    }
+                }
+            }
+        }
+        h
+    }
+
+    /// Does the slot's payload still match the checksum recorded when
+    /// it was spilled? Called before a fetch dequantizes the slot and
+    /// by the direct-read audit on swap-in; `false` means the cold
+    /// copy must not be trusted (the owner recomputes instead).
+    pub fn verify(&self, slot: u32) -> bool {
+        self.sum[slot as usize] == self.checksum(slot)
+    }
+
+    /// Fault injection only: flip bits in the slot's payload *without*
+    /// updating the recorded checksum, simulating storage corruption
+    /// between spill and re-read. The flipped position comes from the
+    /// caller's seeded RNG so chaos runs reproduce.
+    pub fn corrupt_slot(&mut self, slot: u32, rng: &mut Rng) {
+        let filled = self.filled[slot as usize];
+        if filled == 0 || self.layers == 0 {
+            return;
+        }
+        let l = rng.below(self.layers);
+        let idx = self.base(slot, l) + rng.below(filled * self.width);
+        match self.quant {
+            KvQuant::Int8 => self.qk[idx] = (self.qk[idx] as u8 ^ 0x55) as i8,
+            KvQuant::F32 => {
+                self.fk[idx] = f32::from_bits(self.fk[idx].to_bits() ^ (1 << 20))
             }
         }
     }
@@ -494,6 +580,27 @@ impl TierState {
         }
     }
 
+    /// The sequence owning `slot`, if any (maps a failed fetch or a
+    /// tripped checksum back to the sequence that must recompute).
+    pub fn owner_of(&self, slot: u32) -> Option<u64> {
+        self.owner[slot as usize]
+    }
+
+    /// Recovery path: drop every pending op and deferred release and
+    /// free every slot. Used after a panicked SPMD epoch, when partial
+    /// tier-op execution may have left the control plane out of sync
+    /// with the engine arena — all swapped state rolls back to
+    /// recompute, so no cold data stays live. Returns how many slots
+    /// were in use.
+    pub fn reset(&mut self) -> usize {
+        let n = self.in_use();
+        self.pending.clear();
+        self.pending_release.clear();
+        self.owner.iter_mut().for_each(|o| *o = None);
+        self.free = (0..self.owner.len() as u32).rev().collect();
+        n
+    }
+
     /// Release all slots owned by `owner`; returns how many were freed.
     pub fn release_owned(&mut self, owner: u64) -> usize {
         let mut n = 0;
@@ -624,6 +731,68 @@ mod tests {
         t.flush_releases();
         assert_eq!(t.in_use(), 1);
         let _ = a;
+    }
+
+    #[test]
+    fn checksum_detects_corruption_in_both_formats() {
+        let (bs, layers, width) = (4usize, 2usize, 6usize);
+        let mut hot = PagedKv::new(layers, 2, bs, width);
+        for l in 0..layers {
+            for (i, v) in hot.k[l].data.iter_mut().enumerate() {
+                *v = (l * 100 + i) as f32 * 0.3 - 2.0;
+            }
+            for (i, v) in hot.v[l].data.iter_mut().enumerate() {
+                *v = -((l * 100 + i) as f32) * 0.7;
+            }
+        }
+        for quant in [KvQuant::Int8, KvQuant::F32] {
+            let mut cold = ColdKv::new(2, bs, layers, width, quant);
+            cold.spill(0, &hot, 1, bs);
+            cold.spill(1, &hot, 0, 2); // partial block
+            assert!(cold.verify(0), "{quant:?}: fresh spill must verify");
+            assert!(cold.verify(1));
+            let mut rng = Rng::new(0xC0FFEE);
+            cold.corrupt_slot(0, &mut rng);
+            assert!(!cold.verify(0), "{quant:?}: corruption must trip the checksum");
+            assert!(cold.verify(1), "{quant:?}: other slots stay intact");
+            // Re-spilling the slot heals it (fresh payload, fresh sum).
+            cold.spill(0, &hot, 1, bs);
+            assert!(cold.verify(0));
+        }
+    }
+
+    #[test]
+    fn corruption_is_deterministic_under_one_seed() {
+        let (bs, layers, width) = (2usize, 1usize, 4usize);
+        let mut hot = PagedKv::new(layers, 1, bs, width);
+        for (i, v) in hot.k[0].data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let make = || {
+            let mut c = ColdKv::new(1, bs, layers, width, KvQuant::F32);
+            c.spill(0, &hot, 0, bs);
+            c.corrupt_slot(0, &mut Rng::new(9));
+            c.fk.clone()
+        };
+        assert_eq!(make(), make(), "same seed, same flipped bit");
+    }
+
+    #[test]
+    fn tier_state_owner_lookup_and_reset() {
+        let mut t = TierState::new(TierConfig::new(3));
+        let a = t.alloc(10, 4).unwrap();
+        let b = t.alloc(11, 4).unwrap();
+        assert_eq!(t.owner_of(a), Some(10));
+        assert_eq!(t.owner_of(b), Some(11));
+        t.pending.push(TierOp::Fetch { cold: a, hot: 0, seq: 10 });
+        t.release_after_ops(b);
+        assert_eq!(t.reset(), 2);
+        assert_eq!(t.in_use(), 0);
+        assert_eq!(t.free_slots(), 3);
+        assert!(t.pending.is_empty());
+        assert_eq!(t.owner_of(a), None);
+        // The control plane is reusable after the reset.
+        assert!(t.alloc(12, 1).is_some());
     }
 
     #[test]

@@ -167,6 +167,24 @@ impl Stats {
     }
 }
 
+/// Lenient env-knob parsing, shared by every `PALLAS_*` knob
+/// (`PALLAS_TRACE_EVENTS`, `PALLAS_TEST_THREADS`, `PALLAS_TEST_SHARDS`,
+/// `PALLAS_FAILPOINTS`, ...): an unset variable returns `None`
+/// silently; a set-but-malformed value (unparseable, or rejected by
+/// `valid`) prints ONE stderr warning and returns `None` so the
+/// caller's default wins. A misspelled knob must degrade a run, never
+/// kill it.
+pub fn env_knob<T: std::str::FromStr>(name: &str, valid: fn(&T) -> bool) -> Option<T> {
+    let raw = std::env::var(name).ok()?;
+    match raw.trim().parse::<T>() {
+        Ok(v) if valid(&v) => Some(v),
+        _ => {
+            eprintln!("warning: ignoring malformed {name}={raw:?}; using the default");
+            None
+        }
+    }
+}
+
 /// Human-readable byte count (KiB/MiB/GiB).
 pub fn human_bytes(b: usize) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -280,6 +298,20 @@ mod tests {
         s.push(1.5);
         s.push(2.5);
         assert_eq!(s.sum(), 4.0);
+    }
+
+    #[test]
+    fn env_knob_is_lenient() {
+        // Unique variable names per case: the test harness shares one
+        // process environment across threads.
+        assert_eq!(env_knob::<usize>("PALLAS_UTIL_TEST_UNSET", |_| true), None);
+        std::env::set_var("PALLAS_UTIL_TEST_OK", " 42 ");
+        assert_eq!(env_knob::<usize>("PALLAS_UTIL_TEST_OK", |_| true), Some(42));
+        std::env::set_var("PALLAS_UTIL_TEST_BAD", "not-a-number");
+        assert_eq!(env_knob::<usize>("PALLAS_UTIL_TEST_BAD", |_| true), None);
+        std::env::set_var("PALLAS_UTIL_TEST_ZERO", "0");
+        // A validator rejection degrades to the default too.
+        assert_eq!(env_knob::<usize>("PALLAS_UTIL_TEST_ZERO", |v| *v >= 1), None);
     }
 
     #[test]

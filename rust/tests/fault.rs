@@ -1,0 +1,289 @@
+//! Fault-tolerance differential tests: every deterministic failpoint —
+//! worker panics mid-phase, cold-tier fetch failures, payload
+//! corruption, transient allocation failures — must be *invisible in
+//! the tokens*. Recovery rolls interrupted work back to committed KV
+//! boundaries and replays it, and greedy argmax is per-request
+//! deterministic, so a recovered run is token-identical to the
+//! unperturbed FCFS oracle. Each test also pins the zero-leak
+//! invariant: the post-panic pool audit must find nothing to reclaim.
+//!
+//! The `#[ignore]`d test at the bottom is the CI chaos hook: it runs
+//! the plain differential under whatever `PALLAS_FAILPOINTS` spec the
+//! environment carries (the serve path picks the env spec up when no
+//! explicit plan is set; the FCFS oracle never injects).
+
+use nncase_repro::coordinator::{
+    synthetic_workload, Coordinator, Qwen3Engine, Request, ServeOptions, ServeReport,
+};
+use nncase_repro::model::{Qwen3Config, Qwen3Weights};
+use nncase_repro::obs::Code;
+use nncase_repro::serving::{ContinuousConfig, FaultPlan, KvQuant, TierConfig};
+
+fn coordinator(seed: u64) -> (Qwen3Config, Coordinator) {
+    let cfg = Qwen3Config::tiny();
+    let w = Qwen3Weights::random(&cfg, seed);
+    (cfg.clone(), Coordinator::new(Qwen3Engine::new(w, 1, 128)))
+}
+
+/// Worker counts under test (same `PALLAS_TEST_THREADS` pinning as
+/// tests/serving.rs, through the lenient env-knob parser).
+fn thread_counts() -> Vec<usize> {
+    nncase_repro::util::env_knob("PALLAS_TEST_THREADS", |t: &usize| *t >= 1)
+        .map_or_else(|| vec![1, 2, 4], |t| vec![t])
+}
+
+fn oracle_outputs(seed: u64, reqs: &[Request]) -> ServeReport {
+    let (_, mut c) = coordinator(seed);
+    c.serve(reqs, &ServeOptions::fcfs())
+}
+
+/// Assert the recovered run is token-identical to the oracle and that
+/// the recovery audit found no leaked blocks.
+fn assert_clean_recovery(want: &ServeReport, got: &ServeReport, ctx: &str) {
+    assert_eq!(want.outputs, got.outputs, "{ctx}: recovery changed tokens");
+    let m = got.serving.as_ref().expect("continuous metrics");
+    assert_eq!(m.fault_leaked_blocks, 0, "{ctx}: recovery audit must find no leaks");
+    assert!(got.faults.is_some(), "{ctx}: continuous runs carry the fault ledger");
+}
+
+/// The tentpole matrix: an injected worker panic at each SPMD phase, at
+/// every worker count, recovers to oracle-identical tokens. `worker:
+/// None` arms every participant — the one-shot latch guarantees exactly
+/// one fires, whichever thread hits the failpoint first.
+#[test]
+fn worker_panic_matrix_recovers_to_oracle_tokens() {
+    let (cfg, _) = coordinator(71);
+    let reqs = synthetic_workload(4, 4, 8, cfg.vocab);
+    let want = oracle_outputs(71, &reqs);
+    // Attn and MlpGemm run on every step; LmHead needs a sampling step,
+    // so its iteration lands well inside decode.
+    let sites: [(Code, u32); 3] = [(Code::Attn, 2), (Code::MlpGemm, 3), (Code::LmHead, 8)];
+    for (phase, iter) in sites {
+        for threads in thread_counts() {
+            let (_, mut c) = coordinator(71);
+            let ccfg = ContinuousConfig::builder()
+                .block_size(4)
+                .num_blocks(64)
+                .max_batch(4)
+                .build();
+            let plan = FaultPlan::new().panic_at(phase, iter, None);
+            let got = c.serve(
+                &reqs,
+                &ServeOptions::continuous(ccfg).threads(threads).faults(plan),
+            );
+            let ctx = format!("panic@{}#{iter} at {threads}T", phase.name());
+            assert_clean_recovery(&want, &got, &ctx);
+            let f = got.faults.as_ref().unwrap();
+            assert_eq!(f.injected, 1, "{ctx}: the one-shot panic fires exactly once");
+            assert_eq!(f.recovered, 1, "{ctx}: one epoch restart absorbs it");
+            assert!(f.requeued >= 1, "{ctx}: in-flight work must be rolled back");
+        }
+    }
+}
+
+/// Panic recovery composed with the tiered pool under forced swap
+/// pressure: the epoch restart must also reset tier state (cold slots,
+/// pending tier ops) without leaking either pool.
+#[test]
+fn worker_panic_recovers_under_tier_pressure() {
+    let (cfg, _) = coordinator(72);
+    let reqs = synthetic_workload(3, 4, 12, cfg.vocab);
+    let want = oracle_outputs(72, &reqs);
+    for threads in thread_counts() {
+        let (_, mut c) = coordinator(72);
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(7)
+            .max_batch(3)
+            .tiering(TierConfig { quant: KvQuant::F32, ..TierConfig::new(16) })
+            .build();
+        let plan = FaultPlan::new().panic_at(Code::Attn, 5, None);
+        let got = c.serve(
+            &reqs,
+            &ServeOptions::continuous(ccfg).threads(threads).faults(plan),
+        );
+        let ctx = format!("tiered panic at {threads}T");
+        assert_clean_recovery(&want, &got, &ctx);
+        let f = got.faults.as_ref().unwrap();
+        assert_eq!(f.injected, 1, "{ctx}");
+        assert_eq!(f.recovered, 1, "{ctx}");
+    }
+}
+
+/// A corrupted cold payload (bytes flipped after the spill recorded its
+/// checksum) must be *detected* at fetch time and the owner reclassified
+/// swap -> recompute — never served. Recompute rebuilds exact KV, so the
+/// outputs still match the oracle bitwise.
+#[test]
+fn corrupted_cold_payload_is_detected_and_recomputed() {
+    let (cfg, _) = coordinator(73);
+    let reqs = synthetic_workload(3, 4, 12, cfg.vocab);
+    let want = oracle_outputs(73, &reqs);
+    for threads in thread_counts() {
+        let (_, mut c) = coordinator(73);
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(7)
+            .max_batch(3)
+            .tiering(TierConfig { quant: KvQuant::F32, ..TierConfig::new(16) })
+            .build();
+        let plan = FaultPlan::new().corrupt_spill(0);
+        let got = c.serve(
+            &reqs,
+            &ServeOptions::continuous(ccfg).threads(threads).faults(plan),
+        );
+        let ctx = format!("corrupt spill at {threads}T");
+        assert_clean_recovery(&want, &got, &ctx);
+        let f = got.faults.as_ref().unwrap();
+        assert_eq!(f.injected, 1, "{ctx}: exactly the 0th spill is corrupted");
+        assert!(f.requeued >= 1, "{ctx}: the owner must be reclassified and requeued");
+        let m = got.serving.as_ref().unwrap();
+        assert!(
+            m.cold_checksum_failures >= 1,
+            "{ctx}: the checksum failure must be counted"
+        );
+    }
+}
+
+/// A transient cold-tier fetch failure takes the same reclassification
+/// path as corruption: the victim recomputes instead of resuming, and
+/// tokens stay oracle-identical.
+#[test]
+fn transient_fetch_failure_falls_back_to_recompute() {
+    let (cfg, _) = coordinator(74);
+    let reqs = synthetic_workload(3, 4, 12, cfg.vocab);
+    let want = oracle_outputs(74, &reqs);
+    for threads in thread_counts() {
+        let (_, mut c) = coordinator(74);
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(7)
+            .max_batch(3)
+            .tiering(TierConfig { quant: KvQuant::F32, ..TierConfig::new(16) })
+            .build();
+        let plan = FaultPlan::new().fail_fetch(0);
+        let got = c.serve(
+            &reqs,
+            &ServeOptions::continuous(ccfg).threads(threads).faults(plan),
+        );
+        let ctx = format!("fetch fail at {threads}T");
+        assert_clean_recovery(&want, &got, &ctx);
+        let f = got.faults.as_ref().unwrap();
+        assert_eq!(f.injected, 1, "{ctx}: exactly the 0th fetch fails");
+        assert!(f.requeued >= 1, "{ctx}: the victim must recompute");
+    }
+}
+
+/// A transient block-pool allocation failure defers admission for one
+/// iteration instead of crashing or mis-accounting — the request is
+/// admitted on retry and the tokens stay oracle-identical.
+#[test]
+fn transient_alloc_failure_defers_admission() {
+    let (cfg, _) = coordinator(75);
+    let reqs = synthetic_workload(4, 4, 8, cfg.vocab);
+    let want = oracle_outputs(75, &reqs);
+    for threads in thread_counts() {
+        let (_, mut c) = coordinator(75);
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(64)
+            .max_batch(4)
+            .build();
+        let plan = FaultPlan::new().fail_alloc(0);
+        let got = c.serve(
+            &reqs,
+            &ServeOptions::continuous(ccfg).threads(threads).faults(plan),
+        );
+        let ctx = format!("alloc fail at {threads}T");
+        assert_clean_recovery(&want, &got, &ctx);
+        let f = got.faults.as_ref().unwrap();
+        assert_eq!(f.injected, 1, "{ctx}: exactly the 0th allocation fails");
+    }
+}
+
+/// Independent failpoints compose in one run: a corrupted spill *and* a
+/// later worker panic, each recovered by its own mechanism, still land
+/// on the oracle's tokens.
+#[test]
+fn composed_faults_recover_in_one_run() {
+    let (cfg, _) = coordinator(76);
+    let reqs = synthetic_workload(3, 4, 12, cfg.vocab);
+    let want = oracle_outputs(76, &reqs);
+    let (_, mut c) = coordinator(76);
+    let ccfg = ContinuousConfig::builder()
+        .block_size(4)
+        .num_blocks(7)
+        .max_batch(3)
+        .tiering(TierConfig { quant: KvQuant::F32, ..TierConfig::new(16) })
+        .build();
+    let plan = FaultPlan::new().corrupt_spill(0).panic_at(Code::MlpGemm, 9, None);
+    let got = c.serve(&reqs, &ServeOptions::continuous(ccfg).threads(2).faults(plan));
+    assert_clean_recovery(&want, &got, "composed faults");
+    let f = got.faults.as_ref().unwrap();
+    assert_eq!(f.injected, 2, "both failpoints must fire");
+    assert_eq!(f.recovered, 1, "the panic costs one epoch restart");
+    assert!(f.requeued >= 1);
+}
+
+/// Bounded admission is deterministic backpressure: with the whole
+/// workload submitted up front and a 2-deep queue, the overflow is
+/// rejected with a typed reason, the survivors finish with oracle
+/// tokens, and the rejects surface as empty outputs (an answer per
+/// request, no special cases downstream).
+#[test]
+fn bounded_admission_rejects_deterministically() {
+    let (cfg, _) = coordinator(77);
+    let reqs = synthetic_workload(5, 4, 6, cfg.vocab);
+    let want = oracle_outputs(77, &reqs);
+    let (_, mut c) = coordinator(77);
+    let ccfg =
+        ContinuousConfig::builder().block_size(4).num_blocks(64).max_batch(2).build();
+    let got = c.serve(&reqs, &ServeOptions::continuous(ccfg).max_queue(2));
+    let f = got.faults.as_ref().expect("fault ledger");
+    assert!(f.rejected > 0, "a 2-deep queue under a 5-request burst must reject");
+    assert_eq!(got.outputs.len(), reqs.len(), "every request gets an answer");
+    let mut served = 0usize;
+    for (id, toks) in &got.outputs {
+        if toks.is_empty() {
+            continue; // rejected: empty output, counted in the ledger
+        }
+        served += 1;
+        let oracle_toks = &want.outputs.iter().find(|(i, _)| i == id).unwrap().1;
+        assert_eq!(&toks, &oracle_toks, "admitted request {id} must match the oracle");
+    }
+    assert_eq!(served + f.rejected as usize, reqs.len());
+    let m = got.serving.as_ref().unwrap();
+    assert_eq!(m.fault_leaked_blocks, 0);
+}
+
+/// The CI chaos hook: run the plain differential under whatever
+/// `PALLAS_FAILPOINTS` spec the environment carries. Without the env
+/// var this is just the calm differential (it still passes); CI runs it
+/// with `-- --ignored` and a panic spec to exercise recovery through
+/// the env path end to end.
+#[test]
+#[ignore = "chaos hook: run with PALLAS_FAILPOINTS set (CI does)"]
+fn env_spec_chaos_matches_oracle() {
+    let (cfg, _) = coordinator(78);
+    let reqs = synthetic_workload(4, 4, 10, cfg.vocab);
+    let want = oracle_outputs(78, &reqs);
+    for threads in thread_counts() {
+        let (_, mut c) = coordinator(78);
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(64)
+            .max_batch(4)
+            .build();
+        // No explicit plan: serve_continuous falls back to the env spec.
+        let got = c.serve(&reqs, &ServeOptions::continuous(ccfg).threads(threads));
+        let ctx = format!("env chaos at {threads}T");
+        assert_clean_recovery(&want, &got, &ctx);
+        if std::env::var("PALLAS_FAILPOINTS").is_ok() {
+            let f = got.faults.as_ref().unwrap();
+            assert!(
+                f.injected >= 1,
+                "{ctx}: the env spec must actually fire (check phase/iter reachability)"
+            );
+        }
+    }
+}

@@ -76,6 +76,28 @@ fn tracing_hot_path_never_allocates() {
     assert_eq!(ring.written(), 4_000, "every hook call must have recorded");
     assert!(ring.dropped() > 0, "the 256-slot ring must have wrapped");
 
+    // Failpoint hot path: with no plan installed the engine-side hook is
+    // the same single branch-on-None as tracing, and even an *armed*
+    // plan's per-step checks are pure atomics — neither may allocate.
+    // (The serve path's no-fault acceptance bar — zero allocation and
+    // bitwise-identical behaviour with `faults: None` — rests on this.)
+    use nncase_repro::serving::FaultPlan;
+    let none: Option<&FaultPlan> = None;
+    let armed = FaultPlan::new().fail_fetch(1_000_000).corrupt_spill(1_000_000);
+    let before = allocs();
+    for wi in 0..10_000usize {
+        if let Some(fp) = none {
+            fp.maybe_panic(Code::Attn, wi);
+        }
+        armed.begin_iter();
+        armed.maybe_panic(Code::Attn, wi % 4);
+        let _ = armed.take_fetch_fail();
+        let _ = armed.take_corrupt();
+        let _ = armed.take_alloc_fail();
+    }
+    assert_eq!(allocs() - before, 0, "failpoint checks must not allocate");
+    assert_eq!(armed.injected(), 0, "distant nth counters must not fire");
+
     // Cold path (post-run, allowed to allocate): the wrapped ring still
     // yields a well-formed merged timeline and Chrome export.
     let events = ring.events();

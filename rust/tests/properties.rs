@@ -431,6 +431,58 @@ fn prop_causal_span_attention_equals_sequential_steps() {
     }
 }
 
+/// `util::Stats` hardening: across random series — empty, singleton,
+/// long, and magnitude-swept — every accessor the `serve_report.v1`
+/// JSON and the report renders draw from (mean, min, max, percentiles,
+/// stddev) returns a finite number, never NaN or infinity. This is the
+/// property that keeps a degenerate run (zero requests, zero decode
+/// iterations, all-equal samples) from emitting unparseable JSON.
+#[test]
+fn prop_stats_accessors_never_yield_nan() {
+    use nncase_repro::util::Stats;
+    let finite = |name: &str, v: f64, ctx: &str| {
+        assert!(v.is_finite(), "{name} yielded non-finite {v} on {ctx}");
+    };
+    let check = |s: &Stats, ctx: &str| {
+        finite("mean", s.mean(), ctx);
+        finite("min", s.min(), ctx);
+        finite("max", s.max(), ctx);
+        finite("sum", s.sum(), ctx);
+        finite("stddev", s.stddev(), ctx);
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            finite("percentile", s.percentile(p), ctx);
+        }
+        finite("p99", s.p99(), ctx);
+    };
+    check(&Stats::default(), "empty series");
+    let mut rng = Rng::new(0x57A7);
+    for round in 0..50 {
+        let n = rng.below(200); // 0 included: empties keep showing up
+        let mag = 10f64.powi(rng.below(13) as i32 - 6);
+        let mut s = Stats::default();
+        for _ in 0..n {
+            s.push(rng.normal() as f64 * mag);
+        }
+        check(&s, &format!("round {round} (n={n}, mag={mag:e})"));
+        assert_eq!(s.len(), n);
+        if n > 0 {
+            assert!(s.min() <= s.percentile(50.0) && s.percentile(50.0) <= s.max());
+        }
+    }
+    // All-equal series: stddev's variance subtraction cancels to ~0 and
+    // must not go negative-then-NaN through the sqrt.
+    let mut eq = Stats::default();
+    for _ in 0..17 {
+        eq.push(3.25e8);
+    }
+    check(&eq, "all-equal series");
+    assert!(eq.stddev() >= 0.0);
+    // And the serving render built on these accessors stays NaN-free on
+    // a default (all-empty) metrics value — the degenerate-report path.
+    let r = nncase_repro::serving::ServingMetrics::default().render();
+    assert!(!r.contains("NaN") && !r.contains("inf"), "{r}");
+}
+
 /// KV-cache accounting: the config-level bytes-per-token formula matches
 /// the engine's actual cache allocation.
 #[test]

@@ -26,35 +26,21 @@ fn coordinator(seed: u64, threads: usize) -> (Qwen3Config, Coordinator) {
 }
 
 /// Batched-engine worker counts under test: `PALLAS_TEST_THREADS` pins a
-/// single count (the CI matrix), default is the {1, 2, 4} sweep.
+/// single count (the CI matrix), default is the {1, 2, 4} sweep. Parsed
+/// through [`nncase_repro::util::env_knob`] — a malformed value warns
+/// once and falls back to the sweep instead of panicking, the same
+/// lenient policy every other `PALLAS_*` knob follows.
 fn thread_counts() -> Vec<usize> {
-    match std::env::var("PALLAS_TEST_THREADS") {
-        Ok(v) => {
-            let t: usize = v
-                .trim()
-                .parse()
-                .expect("PALLAS_TEST_THREADS must be a positive integer");
-            assert!(t >= 1, "PALLAS_TEST_THREADS must be >= 1");
-            vec![t]
-        }
-        Err(_) => vec![1, 2, 4],
-    }
+    nncase_repro::util::env_knob("PALLAS_TEST_THREADS", |t: &usize| *t >= 1)
+        .map_or_else(|| vec![1, 2, 4], |t| vec![t])
 }
 
 /// Shard-group counts under test: `PALLAS_TEST_SHARDS` pins a single
-/// count (the CI matrix), default is the {1, 2, 4} sweep.
+/// count (the CI matrix), default is the {1, 2, 4} sweep. Same lenient
+/// `env_knob` parsing as [`thread_counts`].
 fn shard_counts() -> Vec<usize> {
-    match std::env::var("PALLAS_TEST_SHARDS") {
-        Ok(v) => {
-            let s: usize = v
-                .trim()
-                .parse()
-                .expect("PALLAS_TEST_SHARDS must be a positive integer");
-            assert!(s >= 1, "PALLAS_TEST_SHARDS must be >= 1");
-            vec![s]
-        }
-        Err(_) => vec![1, 2, 4],
-    }
+    nncase_repro::util::env_knob("PALLAS_TEST_SHARDS", |s: &usize| *s >= 1)
+        .map_or_else(|| vec![1, 2, 4], |s| vec![s])
 }
 
 fn serve_continuous(

@@ -54,7 +54,11 @@ def field(sample, name, default=None):
     artifacts."""
     rep = sample.get("report")
     if isinstance(rep, dict) and rep.get("schema") == "serve_report.v1" and name in rep:
-        return rep[name]
+        # A partial/corrupt nested report (e.g. a truncated artifact)
+        # can carry nulls; fall back rather than propagate None into
+        # arithmetic downstream.
+        if rep[name] is not None:
+            return rep[name]
     return sample.get(name, default)
 
 
@@ -69,11 +73,14 @@ def key(sample):
     # series rather than tripping the regression warning. mode / plan /
     # pressure / prefill_chunk are bench-scenario identity, which the
     # per-run report does not know — those stay flat-only.
+    # Every lookup defaults: a hand-edited or truncated artifact with a
+    # missing key must degrade to "no matching series" (the sample just
+    # won't pair up), never crash the whole comparison.
     return (sample.get("mode", "sweep"), sample.get("plan", ""),
             field(sample, "shards", 1),
             field(sample, "weight_quant", "f32"),
-            sample.get("prefill_chunk", 1), sample["pressure"],
-            field(sample, "threads"))
+            sample.get("prefill_chunk", 1), sample.get("pressure", 0),
+            field(sample, "threads", 1))
 
 
 def metric(sample):
@@ -82,7 +89,7 @@ def metric(sample):
     tracked on prefill throughput instead."""
     if sample.get("mode", "sweep") == "prefill":
         return "prefill_tok_s", field(sample, "prefill_tok_s", 0.0)
-    return "decode_tok_s", field(sample, "decode_tok_s")
+    return "decode_tok_s", field(sample, "decode_tok_s", 0.0)
 
 
 def main():
@@ -104,16 +111,21 @@ def main():
         print(f"bench-compare: no previous report at {args.prev} (first run?) — skipping")
         return 0
     prev, cur = load(args.prev), load(args.cur)
-    if prev is None or cur is None:
+    if not isinstance(prev, dict) or not isinstance(cur, dict):
+        print("bench-compare: report is not a JSON object — skipping")
         return 0
     if prev.get("quick") != cur.get("quick"):
         print("bench-compare: quick-mode mismatch between runs — skipping (not comparable)")
         return 0
 
-    prev_by_key = {key(s): s for s in prev.get("samples", [])}
+    # Non-object entries in "samples" (a malformed artifact) are dropped
+    # up front: every accessor below assumes dicts.
+    prev_samples = [s for s in prev.get("samples", []) if isinstance(s, dict)]
+    cur_samples = [s for s in cur.get("samples", []) if isinstance(s, dict)]
+    prev_by_key = {key(s): s for s in prev_samples}
     regressions = []
     deltas_by_mode = defaultdict(list)
-    for s in cur.get("samples", []):
+    for s in cur_samples:
         p = prev_by_key.get(key(s))
         if p is None:
             continue

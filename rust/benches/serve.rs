@@ -28,7 +28,14 @@
 //! * autotune scenario (always on): a planner-derived
 //!   `ContinuousConfig::autotuned` serve is token-identical to the FCFS
 //!   oracle, and the chosen `ServePlan` hash is recorded so the
-//!   regression tracker keys plan changes as new series.
+//!   regression tracker keys plan changes as new series;
+//! * spec scenario (always on): self-drafting speculative decoding is
+//!   token-identical to spec-off on both a lookup-friendly (repetitive
+//!   prompt) mix and a random mix — hard asserts — and the perf claims
+//!   are warn-gated in *both* modes (spec throughput is acceptance-rate
+//!   dependent, too workload-sensitive to gate CI on): spec-on should
+//!   beat spec-off decode tok/s on the lookup-friendly mix, and should
+//!   cost <= 2% on the random mix where drafts mostly miss.
 //!
 //! Env knobs (the CI bench-smoke job sets both):
 //! * `PALLAS_BENCH_QUICK=1` — reduced workload for a fast smoke signal;
@@ -43,20 +50,24 @@
 //! thread/chunk knobs still override, mirroring the CLI); `--shards N`
 //! pins the shard scenario to one worker-group count instead of the
 //! {1, 2, 4} sweep — CI runs the quick bench again with int8 weights,
-//! with `--prefill-chunk 64`, and with `--autotune`, so the
-//! FCFS-vs-continuous token-identity assert and the regression tracker
-//! cover the fused dequant-GEMM path, the span-packed step path, and
-//! the serve-time planner.
+//! with `--prefill-chunk 64`, with `--autotune`, and with `--spec-k 4`,
+//! so the FCFS-vs-continuous token-identity assert and the regression
+//! tracker cover the fused dequant-GEMM path, the span-packed step
+//! path, the serve-time planner, and the speculative verify path;
+//! `--spec-k N` sets the spec scenario's draft depth (default 4).
 //!
 //! Run: `cargo bench --bench serve [-- --weight-quant int8]
-//! [-- --prefill-chunk 64] [-- --autotune] [-- --shards 2]`
+//! [-- --prefill-chunk 64] [-- --autotune] [-- --shards 2]
+//! [-- --spec-k 4]`
 
 mod bench_util;
 
 use std::fmt::Write as _;
 
 use bench_util::row;
-use nncase_repro::coordinator::{synthetic_workload, Coordinator, Qwen3Engine, ServeOptions};
+use nncase_repro::coordinator::{
+    synthetic_workload, Coordinator, Qwen3Engine, Request, ServeOptions,
+};
 use nncase_repro::cost::MachineSpec;
 use nncase_repro::model::{Qwen3Config, Qwen3Weights};
 use nncase_repro::ntt::WeightQuant;
@@ -82,6 +93,10 @@ struct Sample {
     weight_bytes: u64,
     /// Prefill chunk of the run (1 = the one-token-per-slot seed).
     prefill_chunk: usize,
+    /// Speculative-decoding depth of the run (0 = off). Part of the
+    /// regression-tracker key: a spec-on series is a different decode
+    /// GEMM shape than spec-off, not a same-config regression.
+    spec_k: usize,
     pressure: usize,
     threads: usize,
     decode_tok_s: f64,
@@ -110,7 +125,7 @@ fn json_report(samples: &[Sample], quick: bool) -> String {
             "    {{\"mode\": \"{}\", \"plan\": \"{}\", \"shards\": {}, \
              \"weight_quant\": \"{}\", \
              \"weight_bytes\": {}, \
-             \"prefill_chunk\": {}, \"pressure\": {}, \"threads\": {}, \
+             \"prefill_chunk\": {}, \"spec_k\": {}, \"pressure\": {}, \"threads\": {}, \
              \"decode_tok_s\": {:.3}, \"prefill_tok_s\": {:.3}, \"ttft_p50_s\": {:.6}, \
              \"wall_s\": {:.4}, \"speedup_vs_fcfs\": {:.3}, \"report\": {}}}",
             s.mode,
@@ -119,6 +134,7 @@ fn json_report(samples: &[Sample], quick: bool) -> String {
             s.weight_quant,
             s.weight_bytes,
             s.prefill_chunk,
+            s.spec_k,
             s.pressure,
             s.threads,
             s.decode_tok_s,
@@ -173,6 +189,15 @@ fn main() {
     // --prefill-chunk still override the plan's knobs (mirroring the
     // CLI, where explicit flags win over the planner).
     let autotune = args.iter().any(|a| a == "--autotune");
+    // `--spec-k N` sets the spec scenario's self-drafting depth (the
+    // scenario always runs; the flag only repoints the draft depth so
+    // CI can key a separate regression series per depth).
+    let spec_flag: usize = args
+        .iter()
+        .position(|a| a == "--spec-k")
+        .and_then(|i| args.get(i + 1))
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --spec-k {v:?}")))
+        .unwrap_or(4);
     let machine = MachineSpec::ryzen_5900x();
     let cfg = Qwen3Config::tiny().with_weight_quant(sweep_wq);
     // Quick mode: fewer generated tokens and pressures — a smoke signal
@@ -277,6 +302,7 @@ fn main() {
                 weight_quant: sweep_wq.name(),
                 weight_bytes: cfg.weight_bytes(),
                 prefill_chunk: sample_chunk,
+                spec_k: 0,
                 pressure,
                 threads: cont_rep.threads,
                 decode_tok_s: cont_rep.decode_tokens_per_s,
@@ -351,6 +377,7 @@ fn main() {
             weight_quant: sweep_wq.name(),
             weight_bytes: cfg.weight_bytes(),
             prefill_chunk: 1,
+            spec_k: 0,
             pressure,
             threads: 1,
             decode_tok_s: rep.decode_tokens_per_s,
@@ -404,6 +431,7 @@ fn main() {
                 weight_quant: mode.name(),
                 weight_bytes: qcfg.weight_bytes(),
                 prefill_chunk: 1,
+                spec_k: 0,
                 pressure,
                 threads: 1,
                 decode_tok_s: rep.decode_tokens_per_s,
@@ -488,6 +516,7 @@ fn main() {
             weight_quant: sweep_wq.name(),
             weight_bytes: cfg.weight_bytes(),
             prefill_chunk: chunk,
+            spec_k: 0,
             pressure: prefill_reqs_n,
             threads: 1,
             decode_tok_s: rep.decode_tokens_per_s,
@@ -549,6 +578,7 @@ fn main() {
         weight_quant: sweep_wq.name(),
         weight_bytes: cfg.weight_bytes(),
         prefill_chunk: at_plan.prefill_chunk,
+        spec_k: 0,
         pressure: at_pressure,
         threads: at_rep.threads,
         decode_tok_s: at_rep.decode_tokens_per_s,
@@ -622,6 +652,7 @@ fn main() {
             weight_quant: sweep_wq.name(),
             weight_bytes: cfg.weight_bytes(),
             prefill_chunk: 1,
+            spec_k: 0,
             pressure: shard_pressure,
             threads: 1,
             decode_tok_s: rep.decode_tokens_per_s,
@@ -702,6 +733,7 @@ fn main() {
             weight_quant: sweep_wq.name(),
             weight_bytes: cfg.weight_bytes(),
             prefill_chunk: 1,
+            spec_k: 0,
             pressure: chaos_pressure,
             threads: 2,
             decode_tok_s: rep.decode_tokens_per_s,
@@ -721,6 +753,126 @@ fn main() {
             chaos_rep.decode_tokens_per_s, calm_rep.decode_tokens_per_s,
         ),
     );
+
+    // == Spec scenario: self-drafting speculative decoding vs spec-off. ==
+    // Two workload shapes, each served twice (spec off / spec on):
+    // * "spec-lookup" — prompts cycle a short motif, so decode keeps
+    //   re-entering already-seen n-gram contexts and the prompt-lookup
+    //   drafter lands drafts; accepted drafts collapse decode
+    //   iterations into multi-row verify spans, so decode tok/s should
+    //   rise;
+    // * "spec-random" — the sweep's random prompts, where drafts mostly
+    //   miss; this shape prices the verify-row overhead, which should
+    //   stay within 2% of spec-off decode throughput.
+    // Token identity to the spec-off run is a hard assert in both
+    // shapes: greedy acceptance emits only the model's own argmaxes, so
+    // speculation is semantics-free by construction. The perf claims
+    // are warn-only even in full mode — acceptance rate (and with it
+    // throughput) depends on how repetitive the *generated* stream is,
+    // which a tiny random-weight model does not promise — the numbers
+    // here size the win/tax rather than gate it.
+    let spec_pressure = 8usize;
+    let spec_new = if quick { 12usize } else { 32 };
+    let spec_prompt_len = 9usize;
+    let lookup_reqs: Vec<Request> = (0..spec_pressure)
+        .map(|i| {
+            let motif = [7usize, 1031, 299];
+            Request {
+                id: i as u64,
+                prompt: (0..spec_prompt_len)
+                    .map(|p| (motif[p % motif.len()] + 97 * i) % cfg.vocab)
+                    .collect(),
+                max_new_tokens: spec_new,
+            }
+        })
+        .collect();
+    let random_reqs = synthetic_workload(spec_pressure, prompt_len, spec_new, cfg.vocab);
+    let spec_ctx = spec_prompt_len.max(prompt_len) + spec_new + 1;
+    let run_spec = |reqs: &[Request], k: usize| {
+        let mut c =
+            Coordinator::new(Qwen3Engine::new(Qwen3Weights::random(&cfg, 42), 1, spec_ctx));
+        let ccfg = ContinuousConfig::builder()
+            .block_size(16)
+            .num_blocks(4 * spec_pressure + 8)
+            .max_batch(spec_pressure)
+            .build();
+        c.serve(reqs, &ServeOptions::continuous(ccfg).spec_k(k))
+    };
+    let mut spec_tok_s = Vec::new(); // (shape, off tok/s, on tok/s)
+    for (shape, reqs) in [("spec-lookup", &lookup_reqs), ("spec-random", &random_reqs)] {
+        let off_rep = run_spec(reqs, 0);
+        let on_rep = run_spec(reqs, spec_flag);
+        assert_eq!(
+            off_rep.outputs, on_rep.outputs,
+            "{shape}: speculative decoding (k={spec_flag}) must be token-identical to spec-off"
+        );
+        assert!(off_rep.spec.is_none(), "a spec-off run must not report a spec summary");
+        let sm = on_rep.spec.as_ref().expect("a spec-on run reports its spec summary");
+        let spec_speedup = if off_rep.decode_tokens_per_s > 0.0 {
+            on_rep.decode_tokens_per_s / off_rep.decode_tokens_per_s
+        } else {
+            0.0
+        };
+        row(
+            &format!("{shape} k={spec_flag}"),
+            format!(
+                "off {:>8.2} tok/s | on {:>8.2} tok/s | {spec_speedup:>5.2}x | \
+                 accept {:>5.1}% | {:.2} tok/step",
+                off_rep.decode_tokens_per_s,
+                on_rep.decode_tokens_per_s,
+                100.0 * sm.accept_rate,
+                sm.accepted_tokens_per_step,
+            ),
+        );
+        for (k, rep) in [(0usize, &off_rep), (spec_flag, &on_rep)] {
+            samples.push(Sample {
+                mode: shape,
+                plan: String::new(),
+                shards: 1,
+                weight_quant: sweep_wq.name(),
+                weight_bytes: cfg.weight_bytes(),
+                prefill_chunk: 1,
+                spec_k: k,
+                pressure: spec_pressure,
+                threads: 1,
+                decode_tok_s: rep.decode_tokens_per_s,
+                prefill_tok_s: rep.prefill_tok_s,
+                ttft_p50_s: rep.ttft.percentile(50.0),
+                wall_s: rep.wall_s,
+                speedup_vs_fcfs: 0.0,
+                report: rep.to_json(),
+            });
+        }
+        if shape == "spec-lookup" {
+            gate(
+                false, // never gating: acceptance depends on the generated stream
+                "spec-on should accept more than one token per decode step on the lookup mix",
+                sm.accepted_tokens_per_step > 1.0,
+                format!(
+                    "{:.2} tok/step (accept {:.1}%, {} drafted)",
+                    sm.accepted_tokens_per_step,
+                    100.0 * sm.accept_rate,
+                    sm.drafted,
+                ),
+            );
+        }
+        spec_tok_s.push((shape, off_rep.decode_tokens_per_s, on_rep.decode_tokens_per_s));
+    }
+    for &(shape, off, on) in &spec_tok_s {
+        let lookup = shape == "spec-lookup";
+        let claim = if lookup {
+            "spec-on should beat spec-off decode throughput on the lookup-friendly mix"
+        } else {
+            "spec-on overhead on the random mix should stay within 2% of spec-off"
+        };
+        let ok = if lookup { on > off } else { on >= 0.98 * off };
+        gate(
+            false, // never gating: both sides ride the acceptance rate
+            claim,
+            ok,
+            format!("on {on:.2} vs off {off:.2} tok/s"),
+        );
+    }
 
     // == Per-scenario noise summary. ==
     // How spread out each scenario's decode throughput samples are —

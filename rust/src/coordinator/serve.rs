@@ -12,7 +12,7 @@ use crate::dist::ShardSpec;
 use crate::obs::{json_escape, json_f64, Ring, TraceSummary, WorkerTrace};
 use crate::serving::{
     BatchEngine, ContinuousConfig, ContinuousScheduler, FaultPlan, FaultReport,
-    ServingMetrics, StepSlot, TierConfig,
+    ServingMetrics, SpecSummary, StepSlot, TierConfig,
 };
 use crate::util::Stats;
 
@@ -92,6 +92,7 @@ pub struct ServeOptions {
     deadline_ms: Option<u64>,
     max_queue: Option<usize>,
     faults: Option<FaultPlan>,
+    spec_k: Option<usize>,
 }
 
 impl ServeOptions {
@@ -205,6 +206,18 @@ impl ServeOptions {
         self
     }
 
+    /// Enable self-drafting speculative decoding (continuous modes
+    /// only): each decode sequence drafts up to `k` tokens from its own
+    /// context by prompt lookup ([`crate::serving::spec`]), the engine
+    /// verifies the whole draft in one span step, and commit keeps the
+    /// longest matched causal prefix. Greedy acceptance keeps outputs
+    /// token-identical to spec-off (and to the FCFS oracle) — this is a
+    /// pure performance knob. `0` = explicitly off.
+    pub fn spec_k(mut self, k: usize) -> Self {
+        self.spec_k = Some(k);
+        self
+    }
+
     /// Check the option set; `Err` names the first violated rule.
     /// [`Coordinator::serve`] calls this (then the resolved config's
     /// own [`ContinuousConfig::validate`]) before any work runs.
@@ -219,12 +232,13 @@ impl ServeOptions {
                 || self.deadline_ms.is_some()
                 || self.max_queue.is_some()
                 || self.faults.is_some()
+                || self.spec_k.is_some()
             {
                 return Err(
                     "FCFS takes no overrides (threads/prefill_chunk/tiering/shards/machine/\
-                     trace/deadline_ms/max_queue/faults apply to the continuous modes; the \
-                     dense engine's shape is fixed at Qwen3Engine::new and the oracle path \
-                     never injects faults)"
+                     trace/deadline_ms/max_queue/faults/spec_k apply to the continuous \
+                     modes; the dense engine's shape is fixed at Qwen3Engine::new and the \
+                     oracle path stays the unperturbed, non-speculative reference)"
                         .into(),
                 );
             }
@@ -280,6 +294,9 @@ impl ServeOptions {
         if let Some(q) = self.max_queue {
             cfg.max_queue = q;
         }
+        if let Some(k) = self.spec_k {
+            cfg.spec_k = k;
+        }
         match self.shards {
             Some(s) if s > 1 => {
                 cfg.sharding = Some(ShardSpec::derive(model, &self.machine_or_default(), s));
@@ -288,7 +305,8 @@ impl ServeOptions {
             None => {}
         }
         // A plan's hash must pin the layout the run executes, so two
-        // runs under one hash served the same SBP signatures.
+        // runs under one hash served the same SBP signatures — and the
+        // same speculative depth.
         if let Some(plan) = cfg.plan.as_mut() {
             match &cfg.sharding {
                 Some(s) => {
@@ -300,6 +318,7 @@ impl ServeOptions {
                     plan.sbp_sig = "-".into();
                 }
             }
+            plan.spec_k = cfg.spec_k;
         }
         cfg.validate()?;
         Ok(Some(cfg))
@@ -373,6 +392,13 @@ pub struct ServeReport {
     /// not just that sharding was on. `None` for FCFS and unsharded
     /// runs.
     pub sbp_sig: Option<String>,
+    /// Speculative-decoding accounting of a continuous run with
+    /// `spec_k > 0` ([`ServeOptions::spec_k`]): drafted / accepted /
+    /// rejected totals plus the accept rate and the accepted-tokens-
+    /// per-decode-step ratio (> 1.0 means decode finished in fewer
+    /// engine iterations than tokens emitted). `None` for FCFS and for
+    /// spec-off continuous runs, mirroring `faults`.
+    pub spec: Option<SpecSummary>,
     /// Extended metrics of the continuous-batching path (None for FCFS).
     pub serving: Option<ServingMetrics>,
     /// Fault/robustness accounting of a continuous run: failpoints
@@ -466,8 +492,8 @@ impl ServeReport {
     /// (`repro serve --report-json`). Every number goes through
     /// [`json_f64`] so the output is always valid JSON (non-finite
     /// values degrade to 0.0); nullable sections (`sbp_sig`, `plan`,
-    /// `tier`, `serving`, `trace`) are emitted as JSON `null` so
-    /// readers see one shape regardless of mode.
+    /// `tier`, `serving`, `faults`, `spec`, `trace`) are emitted as
+    /// JSON `null` so readers see one shape regardless of mode.
     pub fn to_json(&self) -> String {
         use std::fmt::Write as _;
         fn int(o: &mut String, k: &str, v: u64) {
@@ -555,6 +581,19 @@ impl ServeReport {
                 o.push('}');
             }
             None => o.push_str(",\"faults\":null"),
+        }
+        match &self.spec {
+            Some(s) => {
+                let _ = write!(o, ",\"spec\":{{\"spec_k\":{}", s.spec_k);
+                int(&mut o, "steps", s.steps as u64);
+                int(&mut o, "drafted", s.drafted as u64);
+                int(&mut o, "accepted", s.accepted as u64);
+                int(&mut o, "rejected", s.rejected as u64);
+                num(&mut o, "accept_rate", s.accept_rate);
+                num(&mut o, "accepted_tokens_per_step", s.accepted_tokens_per_step);
+                o.push('}');
+            }
+            None => o.push_str(",\"spec\":null"),
         }
         match &self.trace {
             Some(t) => {
@@ -682,6 +721,7 @@ impl Coordinator {
             plan: None,
             shards: 1,
             sbp_sig: None,
+            spec: None,
             serving: None,
             faults: None,
             trace: None,
@@ -821,9 +861,20 @@ impl Coordinator {
                                 sample: s.span_reaches_frontier(),
                             })
                             .collect();
-                        let samples = stepper.step(&slots);
-                        drop(slots);
-                        sched.commit(&samples, t_iter.elapsed().as_secs_f64());
+                        // Speculative runs read the argmax of every row
+                        // (spec rows carry drafts to verify); plain runs
+                        // sample only span-final frontier rows. Both
+                        // readouts happen after the same final barrier,
+                        // so both are bitwise across threads x shards.
+                        if cfg.spec_k > 0 {
+                            let rows = stepper.step_verify(&slots);
+                            drop(slots);
+                            sched.commit_verified(&rows, t_iter.elapsed().as_secs_f64());
+                        } else {
+                            let samples = stepper.step(&slots);
+                            drop(slots);
+                            sched.commit(&samples, t_iter.elapsed().as_secs_f64());
+                        }
                         for f in sched.take_finished() {
                             request_latency.push(wall.elapsed().as_secs_f64());
                             done.insert(f.id, f.generated);
@@ -884,6 +935,10 @@ impl Coordinator {
             .iter()
             .map(|r| (r.id, done.remove(&r.id).unwrap_or_default()))
             .collect();
+        // Snapshot the speculative summary before `metrics` moves into
+        // the report; `None` whenever spec was off, mirroring `faults`
+        // on the FCFS side.
+        let spec = metrics.spec_summary(cfg.spec_k);
         ServeReport {
             requests: requests.len(),
             prompt_tokens: requests.iter().map(|r| r.prompt.len()).sum(),
@@ -902,6 +957,7 @@ impl Coordinator {
             plan: cfg.plan.clone(),
             shards,
             sbp_sig,
+            spec,
             serving: Some(metrics),
             faults: Some(fault_report),
             trace,
@@ -1088,6 +1144,7 @@ mod tests {
             "\"tier\":null",
             "\"serving\":null",
             "\"faults\":null",
+            "\"spec\":null",
             "\"trace\":null",
         ] {
             assert!(j.contains(key), "{j}");
@@ -1103,6 +1160,9 @@ mod tests {
         // Continuous runs always carry the fault ledger (all-zero on a
         // calm run) so downstream parsers see one shape per mode.
         assert!(j.contains("\"faults\":{\"injected\":0"), "{j}");
+        // ... but `spec` stays null until the knob is on, mirroring the
+        // report field's contract.
+        assert!(j.contains("\"spec\":null"), "{j}");
         assert!(j.contains("\"trace\":{\"events\":"), "{j}");
         assert!(!j.contains("NaN") && !j.contains("inf"), "{j}");
         // Braces and quotes balance — the cheap well-formedness check
@@ -1205,6 +1265,7 @@ mod tests {
         assert!(ServeOptions::fcfs().deadline_ms(10).validate().is_err());
         assert!(ServeOptions::fcfs().max_queue(4).validate().is_err());
         assert!(ServeOptions::fcfs().faults(FaultPlan::new().fail_fetch(0)).validate().is_err());
+        assert!(ServeOptions::fcfs().spec_k(4).validate().is_err());
         // Degenerate values are named, not clamped into surprises.
         let cfg = ContinuousConfig::default();
         assert!(ServeOptions::continuous(cfg.clone()).shards(0).validate().is_err());
@@ -1216,6 +1277,7 @@ mod tests {
             .max_queue(8)
             .validate()
             .is_ok());
+        assert!(ServeOptions::continuous(cfg.clone()).spec_k(4).validate().is_ok());
         assert!(ServeOptions::continuous(cfg).shards(2).threads(2).validate().is_ok());
         // The config builder rejects inconsistent knob sets.
         assert!(ContinuousConfig::builder().block_size(0).try_build().is_err());
@@ -1290,6 +1352,42 @@ mod tests {
         assert!(sp.sbp_sig.contains("wq="), "{}", sp.sbp_sig);
         assert_ne!(bp.plan_hash(), sp.plan_hash(), "layout must be plan identity");
         assert!(sp.render().contains("sbp["), "{}", sp.render());
+    }
+
+    #[test]
+    fn speculative_serve_matches_plain_and_reports_spec() {
+        let cfg = Qwen3Config::tiny();
+        let w = Qwen3Weights::random(&cfg, 7);
+        let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 64));
+        let reqs = synthetic_workload(3, 6, 8, cfg.vocab);
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(64)
+            .max_batch(3)
+            .build();
+        let plain = c.serve(&reqs, &ServeOptions::continuous(ccfg.clone()));
+        assert!(plain.spec.is_none(), "spec-off runs report no spec section");
+        assert!(plain.to_json().contains("\"spec\":null"));
+        let spec = c.serve(&reqs, &ServeOptions::continuous(ccfg).spec_k(4));
+        assert_eq!(plain.outputs, spec.outputs, "speculation must not change tokens");
+        let s = spec.spec.as_ref().expect("spec-on runs carry the summary");
+        assert_eq!(s.spec_k, 4);
+        assert_eq!(s.drafted, s.accepted + s.rejected);
+        let j = spec.to_json();
+        assert!(j.contains("\"spec\":{\"spec_k\":4"), "{j}");
+        assert!(j.contains("\"accepted_tokens_per_step\":"), "{j}");
+        // Autotuned: the plan hash pins the speculative depth, like the
+        // shard layout — one hash, one executed configuration.
+        let machine = crate::cost::MachineSpec::ryzen_5900x();
+        let base = c.serve(&reqs, &ServeOptions::autotuned(3).machine(machine.clone()));
+        let tuned = c.serve(&reqs, &ServeOptions::autotuned(3).machine(machine).spec_k(4));
+        assert_eq!(base.outputs, tuned.outputs, "spec_k is a pure perf knob");
+        assert_eq!(tuned.plan.as_ref().unwrap().spec_k, 4);
+        assert_ne!(
+            base.plan.unwrap().plan_hash(),
+            tuned.plan.unwrap().plan_hash(),
+            "speculative depth must be plan identity"
+        );
     }
 
     #[test]

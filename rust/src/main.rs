@@ -35,7 +35,7 @@ fn usage() -> ! {
          serve     [--threads N] [--requests N] [--max-new N] [--policy fcfs|continuous]\n\
          \x20          [--max-batch N] [--prefill-chunk N] [--shards N] [--kv-cold-blocks N]\n\
          \x20          [--kv-quant int8|f32] [--weight-quant f32|int8|int4] [--autotune]\n\
-         \x20          [--deadline-ms N] [--max-queue N] [--failpoints SPEC]\n\
+         \x20          [--deadline-ms N] [--max-queue N] [--failpoints SPEC] [--spec-k N]\n\
          \x20          [--trace-out trace.json] [--report-json report.json]\n\
          \x20          (--autotune derives chunk/budget/threads/panel/pool from the\n\
          \x20           serve-time planner; --shards partitions the projection GEMMs\n\
@@ -46,7 +46,11 @@ fn usage() -> ! {
          \x20           --failpoints injects deterministic faults, e.g.\n\
          \x20           'panic@phase=attn,iter=3;fetch@nth=1' — same grammar as the\n\
          \x20           PALLAS_FAILPOINTS env var; recovery keeps outputs\n\
-         \x20           token-identical; --trace-out records per-worker phase\n\
+         \x20           token-identical; --spec-k N enables self-drafting\n\
+         \x20           speculative decoding: each decode slot verifies up to N\n\
+         \x20           prompt-lookup drafts per step [continuous only; outputs\n\
+         \x20           token-identical, decode iterations fewer when drafts hit];\n\
+         \x20           --trace-out records per-worker phase\n\
          \x20           timelines as Chrome-trace JSON for Perfetto [continuous\n\
          \x20           only], --report-json writes the machine-readable ServeReport)\n\
          sweep     [--figure 9|10]\n\
@@ -226,6 +230,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     let plan = nncase_repro::serving::FaultPlan::parse(&spec)
                         .unwrap_or_else(|e| panic!("bad --failpoints {spec:?}: {e}"));
                     opts = opts.faults(plan);
+                }
+                // Self-drafting speculative decoding: each decode slot
+                // drafts up to N tokens from its own context (prompt
+                // lookup) and the engine verifies them in one span
+                // step. Token-identical at any depth; fewer decode
+                // iterations when the workload repeats itself.
+                if let Some(k) = opt(&args, "--spec-k").and_then(|v| v.parse::<usize>().ok()) {
+                    opts = opts.spec_k(k);
                 }
                 // Serve-path tracing: per-worker phase timelines into
                 // pre-allocated rings, exported as Chrome-trace JSON

@@ -78,10 +78,18 @@ pub enum Code {
     DeadlineMiss = 24,
     /// Request rejected at submission (`arg` = request id).
     Reject = 25,
+    /// Self-drafter appended draft tokens to a decode span (`arg` =
+    /// draft count).
+    Draft = 26,
+    /// A speculative span was verified (`arg` = drafts accepted).
+    Verify = 27,
+    /// Rejected drafts rolled back out of the token stream and KV
+    /// (`arg` = drafts rejected).
+    Rollback = 28,
 }
 
 /// Number of distinct codes (`Code` discriminants are `0..COUNT`).
-pub const CODE_COUNT: usize = 26;
+pub const CODE_COUNT: usize = 29;
 
 impl Code {
     pub fn name(self) -> &'static str {
@@ -112,6 +120,9 @@ impl Code {
             Code::Recover => "recover",
             Code::DeadlineMiss => "deadline_miss",
             Code::Reject => "reject",
+            Code::Draft => "draft",
+            Code::Verify => "verify",
+            Code::Rollback => "rollback",
         }
     }
 
@@ -131,6 +142,9 @@ impl Code {
                 | Code::Recover
                 | Code::DeadlineMiss
                 | Code::Reject
+                | Code::Draft
+                | Code::Verify
+                | Code::Rollback
         )
     }
 
@@ -170,6 +184,9 @@ impl Code {
             23 => Code::Recover,
             24 => Code::DeadlineMiss,
             25 => Code::Reject,
+            26 => Code::Draft,
+            27 => Code::Verify,
+            28 => Code::Rollback,
             _ => return None,
         })
     }

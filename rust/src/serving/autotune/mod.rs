@@ -35,4 +35,4 @@ pub mod search;
 
 pub use cache::{cached_plan_count, plan_for, plan_key};
 pub use plan::{pool_sizing, ServePlan};
-pub use search::{search_plan, SearchResult};
+pub use search::{search_plan, spec_iter_time_s, SearchResult};

@@ -63,6 +63,12 @@ pub struct ServePlan {
     /// executes (`ShardSpec::sig`; `"-"` when unsharded). Part of the
     /// plan's identity: two runs under one hash served the same layout.
     pub sbp_sig: String,
+    /// Self-drafting speculative depth the plan serves under (0 = off;
+    /// set by `ServeOptions::spec_k` at resolve time, not by the
+    /// search). Part of the plan's identity: speculative spans change
+    /// the decode GEMM shape, so two runs under one hash drafted the
+    /// same depth.
+    pub spec_k: usize,
     /// Roofline-predicted seconds of one decode iteration under this
     /// plan (diagnostic; floors from `cost::decode_weight_stream_s`).
     pub predicted_decode_iter_s: f64,
@@ -82,7 +88,7 @@ impl ServePlan {
     /// `tools/bench_compare.py` keys on.
     pub fn plan_hash(&self) -> u64 {
         let s = format!(
-            "{}|{}|{}|b{}|bs{}|nb{}|t{}|c{}|tb{}|p{}|s{}|{}|sh{}|{}",
+            "{}|{}|{}|b{}|bs{}|nb{}|t{}|c{}|tb{}|p{}|s{}|{}|sh{}|{}|k{}",
             self.model,
             self.machine,
             self.weight_quant.name(),
@@ -97,6 +103,7 @@ impl ServePlan {
             self.tiling,
             self.shards.max(1),
             self.sbp_sig,
+            self.spec_k,
         );
         let mut h: u64 = 0xcbf29ce484222325;
         for b in s.bytes() {
@@ -210,6 +217,7 @@ mod tests {
             tiling: "i,j,k".into(),
             shards: 1,
             sbp_sig: "-".into(),
+            spec_k: 0,
             predicted_decode_iter_s: 1e-3,
             predicted_prefill_iter_s: 2e-3,
             predicted_cost_s: 0.5,
@@ -235,6 +243,11 @@ mod tests {
         let mut e = d.clone();
         e.sbp_sig = "wq=B,lm_head=B".into();
         assert_ne!(d.plan_hash(), e.plan_hash(), "sbp signature is identity");
+        // The speculative depth is identity too: spec spans change the
+        // decode GEMM shape the plan's predictions describe.
+        let mut f = a.clone();
+        f.spec_k = 4;
+        assert_ne!(a.plan_hash(), f.plan_hash(), "speculative depth is identity");
     }
 
     #[test]

@@ -249,6 +249,11 @@ pub fn search_plan(
                         // dist-extracted layout in before the run.
                         shards: 1,
                         sbp_sig: "-".into(),
+                        // Speculation is a serve-options decision too:
+                        // its payoff depends on workload repetitiveness,
+                        // which pure (model, machine) arithmetic cannot
+                        // see. Resolve stamps the depth in.
+                        spec_k: 0,
                         predicted_decode_iter_s: decode_iter,
                         predicted_prefill_iter_s: prefill_iter,
                         predicted_cost_s: cost,
@@ -269,6 +274,29 @@ pub fn search_plan(
     let chosen = candidates.remove(0);
     debug_assert!(chosen.check_legal(model).is_ok(), "planner emitted an illegal plan");
     SearchResult { chosen, rejected: candidates }
+}
+
+/// Predicted seconds of one *speculative* decode iteration under
+/// `plan` with depth `spec_k`: every decode slot carries `1 + spec_k`
+/// token rows (the sampled token plus its drafts) through one tall
+/// GEMM. The roofline prices this far below `1 + spec_k` sequential
+/// decode iterations — decode is weight-stream-bound, and the extra
+/// rows ride the same streamed weight plane — which is exactly the
+/// amortization speculative decoding banks on. Diagnostic, like
+/// [`plan_floors`]: the scheduler never gates drafting on it.
+pub fn spec_iter_time_s(
+    model: &Qwen3Config,
+    machine: &MachineSpec,
+    plan: &ServePlan,
+    spec_k: usize,
+) -> f64 {
+    iter_time_s(
+        model,
+        machine,
+        plan.decode_threads,
+        plan.panel_rows,
+        plan.max_batch * (1 + spec_k),
+    )
 }
 
 /// Consistency handles the docs and tests lean on: the floors the
@@ -352,6 +380,28 @@ mod tests {
             plan.predicted_prefill_iter_s
                 >= prefill_floor * plan.step_token_budget as f64 * 0.5
         );
+    }
+
+    #[test]
+    fn speculative_iterations_amortize_the_weight_stream() {
+        // The cost-model case for self-drafting: verifying k drafts in
+        // one tall iteration must be priced well below running 1 + k
+        // weight-stream-bound decode iterations.
+        let model = Qwen3Config::tiny();
+        let machine = MachineSpec::ryzen_5900x();
+        let plan = search_plan(&model, &machine, 8).chosen;
+        let base = plan.predicted_decode_iter_s;
+        for k in [1usize, 2, 4, 8] {
+            let spec = spec_iter_time_s(&model, &machine, &plan, k);
+            assert!(spec >= base, "extra rows cannot be free: k={k}");
+            assert!(
+                spec < (1 + k) as f64 * base,
+                "k={k}: one tall iteration ({spec:.6}s) must beat {} sequential \
+                 iterations ({:.6}s)",
+                1 + k,
+                (1 + k) as f64 * base
+            );
+        }
     }
 
     #[test]

@@ -935,6 +935,43 @@ impl BatchStepper<'_, '_> {
             .collect();
         (samples, if keep_logits { logits[..rows_total * vocab].to_vec() } else { Vec::new() })
     }
+
+    /// As [`BatchStepper::step`], but returning the argmax token of
+    /// **every** row of every slot's span (span-major): element `i` of
+    /// a slot's vector is the model's next-token argmax after consuming
+    /// `tokens[..=i]` of the span — the speculative verifier's readout.
+    /// One tall GEMM step verifies all the slot's draft tokens at once;
+    /// the scheduler's `commit_verified` keeps the longest causally-
+    /// matched prefix.
+    ///
+    /// Like `step`'s frontier sampling, every argmax runs controller-
+    /// side after the final barrier over logits each accumulated whole
+    /// (full K, ascending) by one statically-known worker — so the
+    /// result is bitwise independent of the `(threads × shards)`
+    /// topology, and speculative acceptance inherits the engine's
+    /// determinism guarantee for free.
+    pub fn step_verify(&mut self, slots: &[StepSlot]) -> Vec<Vec<usize>> {
+        let _ = self.step_logits(slots, false);
+        // The logits buffer persists after the step (the workers are
+        // parked behind the final barrier), so the per-row readout is a
+        // plain controller-side scan.
+        let vocab = self.weights.cfg.vocab;
+        let logits = self.st.logits.read();
+        let mut row_base = 0usize;
+        slots
+            .iter()
+            .map(|s| {
+                let rows = (0..s.tokens.len())
+                    .map(|i| {
+                        let r = row_base + i;
+                        argmax(&logits[r * vocab..(r + 1) * vocab])
+                    })
+                    .collect();
+                row_base += s.tokens.len();
+                rows
+            })
+            .collect()
+    }
 }
 
 impl<'w> BatchEngine<'w> {
@@ -1239,6 +1276,15 @@ impl<'w> BatchEngine<'w> {
         let cap = slots.iter().map(|s| s.tokens.len()).sum::<usize>().max(1);
         self.run(1, cap, |stepper| stepper.step_logits(slots, keep_logits))
     }
+
+    /// As [`BatchEngine::step`], returning the argmax of *every* row of
+    /// every span (the speculative-decoding verify readout,
+    /// [`BatchStepper::step_verify`]). One-shot single-threaded
+    /// convenience wrapper — serving drives the stepper directly.
+    pub fn step_verify(&mut self, slots: &[StepSlot]) -> Vec<Vec<usize>> {
+        let cap = slots.iter().map(|s| s.tokens.len()).sum::<usize>().max(1);
+        self.run(1, cap, |stepper| stepper.step_verify(slots))
+    }
 }
 
 #[cfg(test)]
@@ -1314,6 +1360,40 @@ mod tests {
                     "chunk {chunk} diverged from sequential steps at {threads} threads"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn verify_rows_match_single_token_argmax_at_any_thread_count() {
+        // The speculative-verify contract: `step_verify` must return,
+        // for every row of a span, exactly the argmax a sequential
+        // single-token run computes at that position — at any worker
+        // count, with spans straddling block boundaries. This is what
+        // makes greedy acceptance semantics-free: an accepted draft IS
+        // the token the model would have sampled.
+        let cfg = Qwen3Config::tiny();
+        let w_seq = Qwen3Weights::random(&cfg, 303);
+        let w_spec = Qwen3Weights::random(&cfg, 303);
+        let bs = 4usize;
+        let tokens = [3usize, 91, 7, 12, 404, 55, 8, 230, 17];
+        let table: Vec<u32> = vec![2, 7, 0];
+        let mut seq_engine = BatchEngine::new(&w_seq, 8, bs);
+        let mut want = Vec::new();
+        for (pos, tok) in tokens.iter().enumerate() {
+            let slot = StepSlot::hot(std::slice::from_ref(tok), pos, &table, true);
+            let (_, logits) = seq_engine.step_logits(&[slot], true);
+            want.push(crate::coordinator::argmax(&logits));
+        }
+        for threads in [1usize, 2, 3] {
+            let mut be = BatchEngine::new(&w_spec, 8, bs);
+            let got = be.run(threads, tokens.len(), |stepper| {
+                stepper.step_verify(&[StepSlot::hot(&tokens, 0, &table, true)])
+            });
+            assert_eq!(got.len(), 1);
+            assert_eq!(
+                got[0], want,
+                "verify rows diverged from sequential argmax at {threads} threads"
+            );
         }
     }
 

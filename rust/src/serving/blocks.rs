@@ -288,6 +288,34 @@ impl KvBlockManager {
         }
     }
 
+    /// Truncate `table` to the blocks covering its first `keep_tokens`
+    /// positions, releasing every block past that prefix; returns how
+    /// many blocks were released. The speculative-decode rollback
+    /// primitive (`ContinuousScheduler::commit_verified` rewinds a
+    /// sequence to its accepted prefix with this), also usable by any
+    /// preemption edge that shortens a sequence instead of dropping it.
+    ///
+    /// Prefix-cache consistency: a released block that the cache
+    /// registered survives via the cache's own reference — exactly like
+    /// [`KvBlockManager::release_table`] at retirement. That is correct,
+    /// not merely safe: full blocks are only ever registered for
+    /// *committed* prefixes (commit registers boundaries as positions
+    /// are accepted), so a cached block never contains rolled-back
+    /// speculative rows and stays valid for future prefix hits.
+    /// `keep_tokens = 0` empties the table (equivalent to
+    /// `release_table`).
+    pub fn truncate_table(&mut self, table: &mut BlockTable, keep_tokens: usize) -> usize {
+        let bs = self.pool.block_size();
+        let keep_blocks = keep_tokens.div_ceil(bs);
+        let mut freed = 0;
+        while table.blocks.len() > keep_blocks {
+            let b = table.blocks.pop().expect("len > keep_blocks");
+            self.pool.release(b);
+            freed += 1;
+        }
+        freed
+    }
+
     /// Under memory pressure: drop cache entries whose block no live
     /// sequence references (refcount 1 = cache only), in deterministic
     /// LRU order — least recently inserted/hit first. The order decides
@@ -513,6 +541,57 @@ mod tests {
         assert!(m.audit_and_reclaim([&t]).clean());
         m.release_table(&mut t);
         assert_eq!(m.pool.free_blocks(), 8);
+    }
+
+    #[test]
+    fn truncate_table_releases_only_past_the_kept_prefix() {
+        let mut m = KvBlockManager::new(8, 4);
+        let mut t = BlockTable::default();
+        assert!(m.ensure_slot(&mut t, 15)); // 4 blocks, 16 positions
+        assert_eq!(t.blocks.len(), 4);
+        // Keeping 9 tokens needs ceil(9/4) = 3 blocks: exactly one frees.
+        assert_eq!(m.truncate_table(&mut t, 9), 1);
+        assert_eq!(t.blocks.len(), 3);
+        assert_eq!(m.pool.free_blocks(), 8 - 3);
+        // A no-op truncation (already covered) frees nothing.
+        assert_eq!(m.truncate_table(&mut t, 12), 0);
+        assert_eq!(t.blocks.len(), 3);
+        // Keeping a partial block keeps the whole block (positions are
+        // block-granular; the tail block's extra rows are overwritten
+        // before they are ever read).
+        assert_eq!(m.truncate_table(&mut t, 5), 1);
+        assert_eq!(t.blocks.len(), 2);
+        // keep 0 empties the table like release_table.
+        assert_eq!(m.truncate_table(&mut t, 0), 2);
+        assert!(t.blocks.is_empty());
+        assert_eq!(m.pool.free_blocks(), 8);
+        // The pool audit is clean after the rollbacks.
+        assert!(m.audit_and_reclaim([&t]).clean());
+    }
+
+    #[test]
+    fn truncate_table_keeps_cache_registrations_alive() {
+        let mut m = KvBlockManager::new(8, 4);
+        let prompt: Vec<usize> = (0..9).collect();
+        let (mut t, _) = m.lookup_prefix(&prompt);
+        assert!(m.ensure_slot(&mut t, 8)); // 3 blocks
+        m.register_full_block(&prompt[..4], t.blocks[0]);
+        m.register_full_block(&prompt[..8], t.blocks[1]);
+        let b1 = t.blocks[1];
+        // Roll back to 5 tokens: blocks 2 and 3 leave the table, but
+        // block 1 was registered — the cache's own reference keeps it
+        // allocated and serving hits.
+        assert_eq!(m.truncate_table(&mut t, 5), 1);
+        assert_eq!(t.blocks.len(), 2);
+        assert_eq!(m.pool.refcount(b1), 2, "table + cache");
+        assert_eq!(m.truncate_table(&mut t, 4), 1);
+        assert_eq!(m.pool.refcount(b1), 1, "cache only — still alive");
+        assert_eq!(m.lookup_block(&prompt[..8]), Some(b1), "registration survives");
+        m.pool.release(b1); // drop the lookup's reference again
+        assert!(m.audit_and_reclaim([&t]).clean());
+        m.release_table(&mut t);
+        assert_eq!(m.evict_unused_cached(), 2);
+        assert_eq!(m.pool.free_blocks(), 8, "full round trip balances");
     }
 
     #[test]

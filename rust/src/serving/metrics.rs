@@ -114,6 +114,23 @@ pub struct ServingMetrics {
     /// are exact; divergence from the oracle is possible only at or
     /// after it. Empty for lossless (f32) tiers.
     pub swap_points: Vec<(u64, usize)>,
+    /// True when the run had self-drafting speculation configured
+    /// (`spec_k > 0`) — gates the spec segment of `render` like
+    /// `tiered` gates the tier segment.
+    pub spec_enabled: bool,
+    /// Speculative verify steps committed (iterations in which a
+    /// sequence carried a `[sampled, drafts..]` span).
+    pub spec_steps: usize,
+    /// Draft tokens proposed by the self-drafter across all spec steps.
+    pub spec_drafted: usize,
+    /// Draft tokens accepted (they matched the model's own argmax and
+    /// were emitted without costing a weight-streaming step of their
+    /// own).
+    pub spec_accepted: usize,
+    /// Draft tokens rejected and rolled back (their verify rows are the
+    /// price of speculating; `spec_drafted == spec_accepted +
+    /// spec_rejected`).
+    pub spec_rejected: usize,
 }
 
 impl ServingMetrics {
@@ -160,6 +177,44 @@ impl ServingMetrics {
         }
     }
 
+    /// Tokens emitted per speculative verify step (each step emits its
+    /// accepted drafts plus the bonus argmax, so > 1.0 means
+    /// speculation is amortizing the weight stream; exactly 1.0 means
+    /// every draft was rejected). 0.0 when no spec step ran.
+    pub fn accepted_tokens_per_step(&self) -> f64 {
+        if self.spec_steps > 0 {
+            (self.spec_steps + self.spec_accepted) as f64 / self.spec_steps as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of proposed drafts that were accepted (0.0 when nothing
+    /// was drafted).
+    pub fn accept_rate(&self) -> f64 {
+        if self.spec_drafted > 0 {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// The nullable spec section of `ServeReport` (`Some` iff
+    /// speculation was configured, mirroring how `faults` reports):
+    /// counters plus the derived rates, stamped with the `spec_k` the
+    /// run used.
+    pub fn spec_summary(&self, spec_k: usize) -> Option<SpecSummary> {
+        (spec_k > 0).then(|| SpecSummary {
+            spec_k,
+            steps: self.spec_steps,
+            drafted: self.spec_drafted,
+            accepted: self.spec_accepted,
+            rejected: self.spec_rejected,
+            accept_rate: self.accept_rate(),
+            accepted_tokens_per_step: self.accepted_tokens_per_step(),
+        })
+    }
+
     pub fn render(&self) -> String {
         let mut s = format!(
             "ttft p50={:.2}ms tpot p50={:.2}ms req e2e p50={:.2}ms p99={:.2}ms \
@@ -190,6 +245,18 @@ impl ServingMetrics {
                 self.rejected, self.deadline_missed, self.fault_requeued,
             ));
         }
+        if self.spec_enabled {
+            s.push_str(&format!(
+                " | spec steps={} drafted={} accepted={} rejected={} accept_rate={:.2} \
+                 tok/step={:.2}",
+                self.spec_steps,
+                self.spec_drafted,
+                self.spec_accepted,
+                self.spec_rejected,
+                self.accept_rate(),
+                self.accepted_tokens_per_step(),
+            ));
+        }
         if self.tiered {
             s.push_str(&format!(
                 " | tier swap={} recompute={} spill={}B/{} fetch={}B/{} reattach={} direct={} \
@@ -210,6 +277,28 @@ impl ServingMetrics {
         }
         s
     }
+}
+
+/// The `spec` section of `ServeReport` (`serve_report.v1`): counters
+/// and derived rates of a self-drafting speculative run. `None` in the
+/// report when speculation is off, so the JSON shape stays stable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecSummary {
+    /// The configured max drafts per slot per iteration.
+    pub spec_k: usize,
+    /// Speculative verify steps committed.
+    pub steps: usize,
+    /// Draft tokens proposed.
+    pub drafted: usize,
+    /// Draft tokens accepted.
+    pub accepted: usize,
+    /// Draft tokens rejected and rolled back.
+    pub rejected: usize,
+    /// `accepted / drafted` (0.0 when nothing drafted).
+    pub accept_rate: f64,
+    /// Tokens emitted per spec step (> 1.0 = the weight stream is being
+    /// amortized).
+    pub accepted_tokens_per_step: f64,
 }
 
 #[cfg(test)]
@@ -282,6 +371,33 @@ mod tests {
         };
         let s = m.render();
         assert!(s.contains("robustness rejected=2 deadline_missed=1 requeued=3"), "{s}");
+    }
+
+    #[test]
+    fn spec_rates_and_summary() {
+        let m = ServingMetrics {
+            spec_enabled: true,
+            spec_steps: 10,
+            spec_drafted: 30,
+            spec_accepted: 24,
+            spec_rejected: 6,
+            ..Default::default()
+        };
+        assert!((m.accept_rate() - 0.8).abs() < 1e-12);
+        assert!((m.accepted_tokens_per_step() - 3.4).abs() < 1e-12);
+        let s = m.render();
+        assert!(s.contains("spec steps=10 drafted=30 accepted=24 rejected=6"), "{s}");
+        assert!(s.contains("accept_rate=0.80"), "{s}");
+        let sum = m.spec_summary(4).expect("spec_k > 0 must produce a summary");
+        assert_eq!(sum.spec_k, 4);
+        assert_eq!(sum.accepted, 24);
+        assert!((sum.accepted_tokens_per_step - 3.4).abs() < 1e-12);
+        assert!(m.spec_summary(0).is_none(), "spec off: the report section stays null");
+        // Spec-off runs keep the render segment out entirely.
+        let off = ServingMetrics::default();
+        assert_eq!(off.accepted_tokens_per_step(), 0.0);
+        assert_eq!(off.accept_rate(), 0.0);
+        assert!(!off.render().contains("spec "), "{}", off.render());
     }
 
     #[test]

@@ -27,6 +27,12 @@
 //!   `schedule::tile` tilings scored by the `cost` rooflines, instead
 //!   of hand-picked constants. Plans are pure perf artifacts — any
 //!   plan serves token-identical output.
+//! * [`spec`] — self-drafting (prompt-lookup / n-gram) speculative
+//!   decoding: a decode sequence drafts its own continuation from its
+//!   context, the engine verifies all drafts in one tall span step,
+//!   and commit keeps the longest matched causal prefix. Greedy
+//!   acceptance keeps outputs token-identical to spec-off — the knob
+//!   ([`ContinuousConfig`]`::spec_k`) is pure performance.
 //! * [`tiered`] — the quantized cold storage tier: per-block int8 (or
 //!   lossless f32) spill targets, the swap-vs-recompute cost model, and
 //!   the scheduler-side cold-slot control plane. Swap-based preemption
@@ -52,13 +58,14 @@ pub mod blocks;
 pub mod fault;
 pub mod metrics;
 pub mod scheduler;
+pub mod spec;
 pub mod tiered;
 
 pub use autotune::ServePlan;
 pub use batch_engine::{BatchEngine, BatchStepper, PagedKv, StepSlot};
 pub use blocks::{BlockAudit, BlockPool, BlockTable, KvBlockManager};
 pub use fault::{FaultPlan, FaultReport, RejectReason};
-pub use metrics::ServingMetrics;
+pub use metrics::{ServingMetrics, SpecSummary};
 pub use scheduler::{
     ContinuousConfig, ContinuousConfigBuilder, ContinuousScheduler, SeqState, Sequence,
 };

@@ -41,6 +41,7 @@ use std::time::{Duration, Instant};
 use super::blocks::{BlockTable, KvBlockManager};
 use super::fault::{FaultPlan, RejectReason};
 use super::metrics::ServingMetrics;
+use super::spec;
 use super::tiered::{SwapPolicy, TierConfig, TierOp, TierState};
 use crate::coordinator::Request;
 use crate::obs::{Code, Ring};
@@ -105,6 +106,14 @@ pub struct Sequence {
     /// the sequence is re-admitted; the cold copies are the durable
     /// ones).
     reattached_cold: Vec<u32>,
+    /// Trailing tokens of `tokens` that are *unverified drafts*
+    /// (self-drafted speculation appended by `plan_spans`): the step
+    /// verifies them and `commit_verified` keeps the longest matched
+    /// causal prefix, truncating the rest. While drafts are planned,
+    /// `span == 1 + spec_drafts` and the span still "reaches the
+    /// frontier" (the final row is the speculative sample). 0 whenever
+    /// the sequence is at a committed boundary.
+    pub spec_drafts: usize,
     submitted: Instant,
 }
 
@@ -123,6 +132,21 @@ impl Sequence {
     /// Token positions held by the cold prefix.
     pub fn cold_tokens(&self, block_size: usize) -> usize {
         self.cold.len() * block_size
+    }
+
+    /// Drop any planned-but-unverified draft tokens: the token stream
+    /// and span return to the committed frontier. Every path that
+    /// abandons an in-flight iteration (preemption, cold-integrity
+    /// demotion, epoch recovery, deadline cancellation) strips first,
+    /// and `plan_spans` strips defensively at the top — drafts never
+    /// survive past the step they were planned for. Idempotent.
+    pub fn strip_drafts(&mut self) {
+        if self.spec_drafts > 0 {
+            let real = self.tokens.len() - self.spec_drafts;
+            self.tokens.truncate(real);
+            self.spec_drafts = 0;
+            self.span = 1;
+        }
     }
 }
 
@@ -183,6 +207,18 @@ pub struct ContinuousConfig {
     /// are waiting. 0 (the default) = unbounded, the pre-backpressure
     /// behaviour.
     pub max_queue: usize,
+    /// Self-drafting speculative decoding: max draft tokens appended to
+    /// a frontier decode slot per iteration ([`crate::serving::spec`]).
+    /// 0 (the default) disables speculation — the scheduler is then
+    /// bitwise-identical to the pre-spec behaviour. Any value keeps
+    /// outputs token-identical to spec-off (greedy acceptance emits
+    /// only the model's own argmax tokens); the knob is pure
+    /// performance, which the FCFS differential oracle pins.
+    pub spec_k: usize,
+    /// Longest n-gram the self-drafter matches against the sequence's
+    /// own context (longer patterns win over shorter; recency breaks
+    /// ties). Only read when `spec_k > 0`; must then be >= 1.
+    pub spec_ngram: usize,
 }
 
 impl Default for ContinuousConfig {
@@ -199,6 +235,8 @@ impl Default for ContinuousConfig {
             sharding: None,
             deadline: None,
             max_queue: 0,
+            spec_k: 0,
+            spec_ngram: 3,
         }
     }
 }
@@ -271,6 +309,16 @@ impl ContinuousConfigBuilder {
         self
     }
 
+    pub fn spec_k(mut self, spec_k: usize) -> Self {
+        self.cfg.spec_k = spec_k;
+        self
+    }
+
+    pub fn spec_ngram(mut self, spec_ngram: usize) -> Self {
+        self.cfg.spec_ngram = spec_ngram;
+        self
+    }
+
     /// Validate and return the config; `Err` names the violated rule.
     pub fn try_build(self) -> Result<ContinuousConfig, String> {
         self.cfg.validate()?;
@@ -331,6 +379,13 @@ impl ContinuousConfig {
                 return Err("sharding.shards must be >= 1 (1 = unsharded)".into());
             }
         }
+        if self.spec_k > 0 && self.spec_ngram == 0 {
+            return Err(format!(
+                "spec_ngram must be >= 1 when spec_k > 0 (got spec_k = {}): the \
+                 self-drafter needs at least unigram matching to propose anything",
+                self.spec_k
+            ));
+        }
         Ok(())
     }
 
@@ -341,9 +396,13 @@ impl ContinuousConfig {
     }
 
     /// Effective per-iteration token budget (see `step_token_budget`).
+    /// The auto budget grows by `spec_k` rows per slot when speculation
+    /// is on (verify rows need headroom or the default chunk-1 budget
+    /// would never leave room to draft); an explicit budget is honoured
+    /// as-is — drafting then takes only whatever the packing leaves.
     pub fn token_budget(&self) -> usize {
         if self.step_token_budget == 0 {
-            self.max_batch.max(1) * self.chunk()
+            self.max_batch.max(1) * (self.chunk() + self.spec_k)
         } else {
             self.step_token_budget.max(1)
         }
@@ -383,6 +442,8 @@ impl ContinuousConfig {
             sharding: None,
             deadline: None,
             max_queue: 0,
+            spec_k: 0,
+            spec_ngram: 3,
         }
     }
 
@@ -410,6 +471,8 @@ impl ContinuousConfig {
             sharding: None,
             deadline: None,
             max_queue: 0,
+            spec_k: 0,
+            spec_ngram: 3,
         }
     }
 }
@@ -439,7 +502,11 @@ impl ContinuousScheduler {
     pub fn new(config: ContinuousConfig) -> Self {
         let kv = KvBlockManager::new(config.num_blocks, config.block_size);
         let tier = config.tiering.clone().map(TierState::new);
-        let metrics = ServingMetrics { tiered: tier.is_some(), ..Default::default() };
+        let metrics = ServingMetrics {
+            tiered: tier.is_some(),
+            spec_enabled: config.spec_k > 0,
+            ..Default::default()
+        };
         ContinuousScheduler {
             config,
             queue: VecDeque::new(),
@@ -540,6 +607,7 @@ impl ContinuousScheduler {
             resume_lossy: false,
             resume_direct: false,
             reattached_cold: Vec::new(),
+            spec_drafts: 0,
             submitted: Instant::now(),
         }
     }
@@ -660,8 +728,19 @@ impl ContinuousScheduler {
     /// running sequence gets at least one position; leftover budget
     /// extends sequences toward their frontier, up to `prefill_chunk`,
     /// in running (admission) order — a deterministic packing, so the
-    /// step shape is a pure function of scheduler state.
+    /// step shape is a pure function of scheduler state. With
+    /// `spec_k > 0`, budget left over after the packing turns frontier
+    /// decode slots into speculative verify spans: the self-drafter
+    /// ([`crate::serving::spec`]) appends up to `spec_k` draft tokens
+    /// and the span grows to `1 + drafts` — one tall verify GEMM
+    /// instead of `drafts` separate weight-streaming decode steps.
     fn plan_spans(&mut self) {
+        // Drafts left over from an abandoned iteration (a cold-integrity
+        // fault can skip the step and its commit) are stale: planning
+        // always starts from the committed token stream.
+        for seq in &mut self.running {
+            seq.strip_drafts();
+        }
         let chunk = self.effective_chunk();
         let budget = self.config.token_budget().max(self.running.len());
         let mut extra = budget - self.running.len();
@@ -673,6 +752,41 @@ impl ContinuousScheduler {
             let ext = (want - 1).min(extra);
             seq.span = 1 + ext;
             extra -= ext;
+        }
+        if self.config.spec_k == 0 {
+            return;
+        }
+        for seq in &mut self.running {
+            if extra == 0 {
+                break;
+            }
+            // Only frontier decode slots speculate: a replaying or
+            // prefilling sequence already knows its next tokens, and a
+            // frontier slot's span is exactly 1 after the packing.
+            if seq.state != SeqState::Decode || !seq.at_frontier() {
+                continue;
+            }
+            debug_assert_eq!(seq.span, 1);
+            // Room under the request's token cap: a k-draft span can
+            // emit up to k + 1 tokens (accepted drafts + the bonus
+            // argmax after the last accept).
+            let room = seq.max_new - seq.generated.len();
+            let cap = self.config.spec_k.min(extra).min(room.saturating_sub(1));
+            if cap == 0 {
+                continue;
+            }
+            let drafts = spec::propose(&seq.tokens, self.config.spec_ngram, cap);
+            if drafts.is_empty() {
+                continue;
+            }
+            let n = drafts.len();
+            seq.tokens.extend_from_slice(&drafts);
+            seq.spec_drafts = n;
+            seq.span = 1 + n;
+            extra -= n;
+            if let Some(r) = self.trace.as_mut() {
+                r.instant(Code::Draft, n as u32);
+            }
         }
     }
 
@@ -738,6 +852,7 @@ impl ContinuousScheduler {
     }
 
     fn cancel_deadline(&mut self, mut seq: Sequence) {
+        seq.strip_drafts();
         self.kv.release_table(&mut seq.table);
         if let Some(tier) = self.tier.as_mut() {
             for slot in seq.cold.drain(..) {
@@ -758,8 +873,49 @@ impl ContinuousScheduler {
     /// to `running()[i]` (the argmax of its span's final row when the
     /// span reached the frontier). `iter_s` is the wall time of the
     /// step, split evenly across all token rows for TPOT / throughput
-    /// accounting.
+    /// accounting. Callers running with `spec_k > 0` must use
+    /// [`commit_verified`] instead — speculative spans need every row's
+    /// argmax, and this entry debug-asserts none are in flight.
+    ///
+    /// [`commit_verified`]: ContinuousScheduler::commit_verified
     pub fn commit(&mut self, samples: &[Option<usize>], iter_s: f64) {
+        debug_assert!(
+            self.running.iter().all(|s| s.spec_drafts == 0),
+            "speculative spans must be committed through commit_verified"
+        );
+        self.commit_inner(samples, None, iter_s);
+    }
+
+    /// Record the outcome of one verified step: `rows[i]` holds the
+    /// argmax of **every** row of `running()[i]`'s span (from
+    /// [`crate::serving::BatchStepper::step_verify`]). Non-speculative
+    /// sequences commit exactly as through [`commit`]: their sample is
+    /// the final row's argmax when the span reached the frontier. A
+    /// speculative sequence accepts the longest causal prefix of its
+    /// drafts — draft `j` stands iff it equals the argmax the model
+    /// produced after the previous accepted token — then emits those
+    /// accepts plus the bonus argmax after the last one, and rolls the
+    /// rejected suffix back out of the token stream and the KV
+    /// ([`super::blocks::KvBlockManager::truncate_table`]). Every
+    /// emitted token is the model's own argmax, so the output stream is
+    /// token-identical to non-speculative greedy decode by construction.
+    ///
+    /// [`commit`]: ContinuousScheduler::commit
+    pub fn commit_verified(&mut self, rows: &[Vec<usize>], iter_s: f64) {
+        debug_assert_eq!(rows.len(), self.running.len());
+        let samples: Vec<Option<usize>> = self
+            .running
+            .iter()
+            .zip(rows)
+            .map(|(s, r)| {
+                (s.spec_drafts == 0 && s.span_reaches_frontier())
+                    .then(|| *r.last().expect("a span has at least one row"))
+            })
+            .collect();
+        self.commit_inner(&samples, Some(rows), iter_s);
+    }
+
+    fn commit_inner(&mut self, samples: &[Option<usize>], rows: Option<&[Vec<usize>]>, iter_s: f64) {
         debug_assert_eq!(samples.len(), self.running.len());
         let bs = self.config.block_size;
         let total_rows: usize = self.running.iter().map(|s| s.span).sum();
@@ -790,7 +946,7 @@ impl ContinuousScheduler {
             let t0 = t1.saturating_sub((iter_s * 1e9) as u64);
             r.record(Code::Iterate, t0, t1, total_rows as u32);
         }
-        for (seq, sample) in self.running.iter_mut().zip(samples) {
+        for (i, (seq, sample)) in self.running.iter_mut().zip(samples).enumerate() {
             // The re-attach bookkeeping of this iteration's swap-in is
             // consumed: the blocks were actually read by the step that
             // just ran, so they count NOW (a same-iteration revert never
@@ -814,6 +970,86 @@ impl ContinuousScheduler {
                     seq.swap_in_at = Some(seq.generated.len());
                     self.metrics.swap_points.push((seq.id, seq.generated.len()));
                 }
+            }
+            if seq.spec_drafts > 0 {
+                let verified = &rows.expect("speculative span committed without verify rows")[i];
+                debug_assert_eq!(verified.len(), seq.span);
+                let d = seq.spec_drafts;
+                // The committed frontier: tokens[..real] is what a
+                // non-speculative scheduler would hold (real == pos + 1).
+                let real = seq.tokens.len() - d;
+                // Every verify row streamed through the model, accepted
+                // or not — rejected rows are the cost of speculating and
+                // show up as decode throughput, like replay waste.
+                self.metrics.decode_s += seq.span as f64 * per_token_s;
+                // Longest causal prefix: draft j stands iff it equals
+                // the argmax after the previous accepted token (row j-1
+                // of the verify span; row 0 is the argmax after the
+                // last committed token).
+                let mut a = 0usize;
+                while a < d && seq.tokens[real + a] == verified[a] {
+                    a += 1;
+                }
+                // The span emits a + 1 tokens (accepts + the bonus
+                // argmax); clamp to the request's remaining room.
+                // plan_spans capped d at room - 1, so a_eff == a unless
+                // a raced the cap — the clamp is defensive.
+                let room = seq.max_new - seq.generated.len();
+                let a_eff = a.min(room.saturating_sub(1));
+                // Rejected (and over-cap) drafts leave the token stream
+                // and the KV: whole blocks past the accept point go back
+                // to the pool; rejected rows inside the kept tail block
+                // are overwritten by the next step before any read.
+                seq.tokens.truncate(real + a_eff);
+                seq.spec_drafts = 0;
+                let keep = seq.pos + a_eff + 1;
+                self.kv.truncate_table(&mut seq.table, keep - seq.cold_tokens(bs));
+                if let Some(r) = self.trace.as_mut() {
+                    r.instant(Code::Verify, a_eff as u32);
+                    if d > a_eff {
+                        r.instant(Code::Rollback, (d - a_eff) as u32);
+                    }
+                }
+                // Accepted positions publish their full blocks exactly
+                // like committed spans do (tokens[..p + 1] is final:
+                // every kept draft was verified).
+                for p in seq.pos..keep {
+                    if (p + 1) % bs == 0 && !seq.tainted && seq.cold.is_empty() {
+                        let block = seq.table.blocks[p / bs];
+                        self.kv.register_full_block(&seq.tokens[..p + 1], block);
+                    }
+                }
+                seq.pos = keep;
+                self.metrics.spec_steps += 1;
+                self.metrics.spec_drafted += d;
+                self.metrics.spec_accepted += a_eff;
+                self.metrics.spec_rejected += d - a_eff;
+                for (j, &tok) in verified[..=a_eff].iter().enumerate() {
+                    if seq.generated.is_empty() {
+                        // Unreachable in practice (speculation requires
+                        // Decode at the frontier, which implies a first
+                        // token); kept for parity with the plain path.
+                        self.metrics.ttft.push(seq.submitted.elapsed().as_secs_f64());
+                        if let Some(r) = self.trace.as_mut() {
+                            r.instant(Code::FirstToken, seq.id as u32);
+                        }
+                    }
+                    seq.generated.push(tok);
+                    self.metrics.tpot.push(per_token_s);
+                    self.metrics.decode_steps += 1;
+                    if j == a_eff {
+                        // Only the bonus token is new to the stream —
+                        // the accepts are already in `tokens` as kept
+                        // drafts (and a_eff <= room - 1 guarantees they
+                        // never hit the cap themselves).
+                        if seq.generated.len() < seq.max_new {
+                            seq.tokens.push(tok);
+                        } else {
+                            seq.state = SeqState::Done;
+                        }
+                    }
+                }
+                continue;
             }
             let span = seq.span;
             for off in 0..span {
@@ -1084,7 +1320,16 @@ impl ContinuousScheduler {
             // failed 1-token ensure means even `pos` is uncovered.)
             let covered = self.running[idx].table.capacity_tokens(bs) + cold_toks;
             if covered > pos {
-                self.running[idx].span = span.min(covered - pos);
+                let seq = &mut self.running[idx];
+                seq.span = span.min(covered - pos);
+                // A shrunken speculative span keeps only the drafts its
+                // verify rows can still hold KV for.
+                if seq.spec_drafts > 0 && seq.span < 1 + seq.spec_drafts {
+                    let real = seq.tokens.len() - seq.spec_drafts;
+                    let kept = seq.span - 1;
+                    seq.tokens.truncate(real + kept);
+                    seq.spec_drafts = kept;
+                }
                 idx += 1;
                 continue;
             }
@@ -1110,6 +1355,10 @@ impl ContinuousScheduler {
     }
 
     fn preempt(&mut self, i: usize) {
+        // A preempted speculative span will never be verified: the
+        // victim leaves with its committed token stream only (all three
+        // arms below reuse the committed-boundary invariants).
+        self.running[i].strip_drafts();
         self.metrics.preemptions += 1;
         if let Some(r) = self.trace.as_mut() {
             r.instant(Code::Preempt, self.running[i].id as u32);
@@ -1359,6 +1608,7 @@ impl ContinuousScheduler {
             r.instant(Code::FaultInject, 2);
         }
         let mut seq = self.running.remove(i);
+        seq.strip_drafts();
         self.kv.prefix_hits -= seq.reattached_cold.len();
         seq.reattached_cold.clear();
         self.kv.release_table(&mut seq.table);
@@ -1399,6 +1649,7 @@ impl ContinuousScheduler {
         // Back-to-front pops + push_front keep admission order at the
         // head of the queue.
         while let Some(mut seq) = self.running.pop() {
+            seq.strip_drafts();
             self.kv.prefix_hits -= seq.reattached_cold.len();
             seq.reattached_cold.clear();
             self.kv.release_table(&mut seq.table);
@@ -1576,6 +1827,7 @@ mod tests {
             resume_lossy: false,
             resume_direct: false,
             reattached_cold: Vec::new(),
+            spec_drafts: 0,
             submitted: Instant::now(),
         });
         s.plan_spans();
@@ -1853,6 +2105,7 @@ mod tests {
             resume_lossy: false,
             resume_direct: false,
             reattached_cold: Vec::new(),
+            spec_drafts: 0,
             submitted: Instant::now(),
         });
         s.plan_spans();
@@ -1956,6 +2209,220 @@ mod tests {
         let fin = s.take_finished();
         assert!(fin.iter().all(|f| f.generated.len() == 12));
         assert_eq!(s.tier.as_ref().unwrap().in_use(), 0, "demotion releases the cold slots");
+    }
+
+    /// Drive a periodic-prompt request through prefill and one plain
+    /// decode token, stopping at the first iteration whose schedule
+    /// planned a speculative span (the drafter needs a repeated suffix,
+    /// which the period provides immediately).
+    fn spec_ready(spec_k: usize) -> ContinuousScheduler {
+        let cfg = ContinuousConfig::builder()
+            .block_size(2)
+            .num_blocks(16)
+            .max_batch(2)
+            .spec_k(spec_k)
+            .build();
+        let mut s = ContinuousScheduler::new(cfg);
+        s.submit(&req(0, vec![1, 2, 1, 2, 1, 2], 8));
+        loop {
+            s.schedule();
+            if s.running[0].spec_drafts > 0 {
+                return s;
+            }
+            // Sampling 1 continues the period, so the next schedule
+            // finds the suffix [1, 2, 1] repeated and drafts from it.
+            let samples: Vec<Option<usize>> =
+                s.running().iter().map(|q| q.span_reaches_frontier().then_some(1)).collect();
+            s.commit(&samples, 0.0);
+        }
+    }
+
+    #[test]
+    fn drafting_extends_frontier_decode_spans_and_accepts() {
+        let mut s = spec_ready(4);
+        // Context [1,2,1,2,1,2,1]: suffix [1,2,1] recurs at index 2, so
+        // the drafter proposes its continuation [2,1] — verbatim.
+        let seq = &s.running[0];
+        assert_eq!(seq.spec_drafts, 2);
+        assert_eq!(seq.span, 3, "span carries [sampled, draft_1, draft_2]");
+        assert_eq!(&seq.tokens[7..], &[2, 1], "drafts ride at the token tail");
+        assert!(seq.span_reaches_frontier(), "the verify span still samples");
+        // The "model" keeps the period going: every draft is its argmax.
+        s.commit_verified(&[vec![2, 1, 2]], 0.0);
+        let seq = &s.running[0];
+        assert_eq!(seq.spec_drafts, 0);
+        assert_eq!(seq.generated, vec![1, 2, 1, 2], "three tokens from one step");
+        assert_eq!(seq.pos, 9, "pos jumps past both accepts and the bonus");
+        assert!(seq.at_frontier());
+        assert_eq!(s.metrics.spec_steps, 1);
+        assert_eq!(s.metrics.spec_drafted, 2);
+        assert_eq!(s.metrics.spec_accepted, 2);
+        assert_eq!(s.metrics.spec_rejected, 0);
+        assert!((s.metrics.accepted_tokens_per_step() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejection_rolls_back_tokens_and_kv() {
+        let mut s = spec_ready(4);
+        assert_eq!(s.running[0].spec_drafts, 2);
+        let blocks_before = s.running[0].table.blocks.len();
+        // The model accepts draft_1 (2) but contradicts draft_2 (1 vs 9):
+        // the span emits [2, 9] and everything past the accept rolls back.
+        s.commit_verified(&[vec![2, 9, 7]], 0.0);
+        let seq = &s.running[0];
+        assert_eq!(seq.generated, vec![1, 2, 9]);
+        assert_eq!(seq.tokens, vec![1, 2, 1, 2, 1, 2, 1, 2, 9]);
+        assert_eq!(seq.pos, 8);
+        assert!(seq.at_frontier(), "the rollback lands on a committed frontier");
+        assert!(
+            seq.table.blocks.len() < blocks_before,
+            "whole blocks past the accept point return to the pool"
+        );
+        assert_eq!(s.metrics.spec_accepted, 1);
+        assert_eq!(s.metrics.spec_rejected, 1);
+        let audit = s.kv.audit_and_reclaim(s.running.iter().map(|q| &q.table));
+        assert!(audit.clean(), "rollback leaks no blocks: {audit:?}");
+        // Finish under a constant-output model (its own drafts accept).
+        for _ in 0..100 {
+            if s.is_done() {
+                break;
+            }
+            s.schedule();
+            let rows: Vec<Vec<usize>> =
+                s.running.iter().map(|q| vec![9; q.span]).collect();
+            s.commit_verified(&rows, 0.0);
+        }
+        assert!(s.is_done());
+        assert_eq!(s.take_finished()[0].generated.len(), 8);
+        s.kv.evict_unused_cached();
+        assert_eq!(s.kv.pool.free_blocks(), 16, "every block returns at the finish");
+    }
+
+    #[test]
+    fn preemption_strips_planned_drafts() {
+        let mut s = spec_ready(4);
+        assert_eq!(s.running[0].tokens.len(), 9);
+        s.preempt(0);
+        let victim = s.queue.front().unwrap();
+        assert_eq!(victim.spec_drafts, 0);
+        assert_eq!(victim.tokens, vec![1, 2, 1, 2, 1, 2, 1], "drafts leave with the span");
+        assert_eq!(victim.span, 1);
+        assert_eq!(victim.state, SeqState::Preempted);
+        s.kv.evict_unused_cached();
+        assert_eq!(s.kv.pool.free_blocks(), 16);
+    }
+
+    /// A stand-in "model" whose argmax depends only on the previous
+    /// token: consistent across speculative and plain runs, converges
+    /// to a fixed point (15), so self-drafting finds accepts.
+    fn model_next(t: usize) -> usize {
+        (t * 2 + 1) % 16
+    }
+
+    fn drive_model(s: &mut ContinuousScheduler, iters: usize) {
+        for _ in 0..iters {
+            if s.is_done() {
+                break;
+            }
+            s.schedule();
+            let rows: Vec<Vec<usize>> = s
+                .running
+                .iter()
+                .map(|q| (0..q.span).map(|off| model_next(q.tokens[q.pos + off])).collect())
+                .collect();
+            s.commit_verified(&rows, 0.0);
+        }
+    }
+
+    #[test]
+    fn speculative_decode_is_token_identical_to_plain() {
+        let run = |spec_k: usize| {
+            let cfg = ContinuousConfig::builder()
+                .block_size(4)
+                .num_blocks(32)
+                .max_batch(2)
+                .spec_k(spec_k)
+                .build();
+            let mut s = ContinuousScheduler::new(cfg);
+            s.submit(&req(0, vec![1, 1, 1], 10));
+            s.submit(&req(1, vec![2, 3, 2, 3], 12));
+            drive_model(&mut s, 500);
+            assert!(s.is_done());
+            let mut fin = s.take_finished();
+            fin.sort_by_key(|f| f.id);
+            let outs: Vec<Vec<usize>> = fin.iter().map(|f| f.generated.clone()).collect();
+            (outs, s.metrics)
+        };
+        let (plain, pm) = run(0);
+        let (spec, sm) = run(4);
+        assert_eq!(spec, plain, "speculation must be invisible in the output stream");
+        assert_eq!(pm.spec_drafted, 0, "spec-off must never draft");
+        assert!(sm.spec_drafted > 0, "the fixed-point tail must produce drafts");
+        assert!(sm.spec_accepted > 0, "the fixed-point tail must produce accepts");
+        assert!(
+            sm.iterations < pm.iterations,
+            "accepted drafts must finish the same work in fewer iterations"
+        );
+        assert!(sm.accepted_tokens_per_step() > 1.0);
+    }
+
+    #[test]
+    fn spec_knobs_validate_and_widen_the_auto_budget() {
+        assert!(
+            ContinuousConfig::builder().spec_k(4).spec_ngram(0).try_build().is_err(),
+            "spec_k > 0 with spec_ngram 0 can never draft: reject at build"
+        );
+        let cfg = ContinuousConfig::builder().max_batch(2).spec_k(3).build();
+        assert_eq!(cfg.token_budget(), 2 * (1 + 3), "auto budget grows verify headroom");
+        assert_eq!(cfg.row_capacity(), 8, "the engine must size rows for verify spans");
+        let explicit =
+            ContinuousConfig { step_token_budget: 4, ..cfg.clone() };
+        assert_eq!(explicit.token_budget(), 4, "explicit budgets are honoured as-is");
+    }
+
+    #[test]
+    fn tight_budget_and_token_cap_bound_drafting() {
+        // Explicit budget of 2 with one running sequence leaves exactly
+        // one row of headroom: at most one draft, whatever spec_k says.
+        let cfg = ContinuousConfig::builder()
+            .block_size(2)
+            .num_blocks(16)
+            .max_batch(1)
+            .spec_k(4)
+            .step_token_budget(2)
+            .build();
+        let mut s = ContinuousScheduler::new(cfg);
+        s.submit(&req(0, vec![1, 2, 1, 2, 1, 2], 8));
+        loop {
+            s.schedule();
+            if s.running[0].spec_drafts > 0 {
+                break;
+            }
+            let samples: Vec<Option<usize>> =
+                s.running().iter().map(|q| q.span_reaches_frontier().then_some(1)).collect();
+            s.commit(&samples, 0.0);
+        }
+        assert_eq!(s.running[0].spec_drafts, 1, "the budget caps the draft, not spec_k");
+        assert_eq!(s.running[0].span, 2);
+
+        // max_new 2: after the first token one slot of room remains, so
+        // a draft span could overshoot the cap — drafting must not plan.
+        let cfg = ContinuousConfig::builder()
+            .block_size(2)
+            .num_blocks(16)
+            .max_batch(1)
+            .spec_k(4)
+            .build();
+        let mut s = ContinuousScheduler::new(cfg);
+        s.submit(&req(0, vec![1, 2, 1, 2, 1, 2], 2));
+        while !s.is_done() {
+            s.schedule();
+            assert_eq!(s.running[0].spec_drafts, 0, "no room to speculate under the cap");
+            let samples: Vec<Option<usize>> =
+                s.running().iter().map(|q| q.span_reaches_frontier().then_some(1)).collect();
+            s.commit(&samples, 0.0);
+        }
+        assert_eq!(s.take_finished()[0].generated, vec![1, 1]);
     }
 
     #[test]

@@ -1,0 +1,122 @@
+//! Self-drafting (prompt-lookup / n-gram) speculative decoding: the
+//! drafter half of the spec-decode path.
+//!
+//! No second model, no auxiliary state: a decode sequence drafts its
+//! own continuation by looking the tail of its context (prompt +
+//! committed generation) up **inside that same context**. Repetitive
+//! and shared-prefix traffic — exactly what the prefix cache already
+//! serves — repeats n-grams constantly, and greedy decode loves to fall
+//! into loops, so the tokens after an earlier occurrence of the current
+//! suffix are a cheap, surprisingly accurate draft. The scheduler
+//! appends the drafts to the step span, the engine verifies all of them
+//! in one tall GEMM ([`super::batch_engine::BatchStepper::step_verify`]),
+//! and commit keeps the longest causally-matched prefix
+//! ([`super::ContinuousScheduler::commit_verified`]) — so the output
+//! stream is **token-identical** to non-speculative greedy decode by
+//! construction: every emitted token is the model's own argmax.
+//!
+//! The drafter is pure and deterministic: same context in, same drafts
+//! out, across threads, shards and runs. It allocates only its return
+//! vector and scans O(`ngram` × context) in the worst case — a few
+//! microseconds against a step that streams the whole weight plane.
+
+/// Propose up to `max_k` draft continuation tokens for a sequence whose
+/// committed context is `context` (prompt + generated, oldest first).
+///
+/// Matching: for `n` from `ngram` down to 1, take the context's final
+/// `n` tokens as the pattern and find its **most recent** earlier
+/// occurrence; on a hit, return the tokens that followed that
+/// occurrence, verbatim, capped at `max_k`. Longer patterns win over
+/// recency because they carry more evidence; among equal-length
+/// matches, recency wins because generation drifts.
+///
+/// Returns an empty vector when nothing matches (the scheduler then
+/// plans a plain 1-row decode span — drafting is an optimization,
+/// never a requirement). Every returned token is a verbatim element of
+/// `context`, a property the test suite pins.
+pub fn propose(context: &[usize], ngram: usize, max_k: usize) -> Vec<usize> {
+    let len = context.len();
+    // Need at least one pattern token and one continuation token.
+    if len < 2 || max_k == 0 || ngram == 0 {
+        return Vec::new();
+    }
+    for n in (1..=ngram.min(len - 1)).rev() {
+        let pattern = &context[len - n..];
+        // Earlier occurrences only (i + n < len keeps at least one
+        // continuation token and excludes the suffix matching itself),
+        // scanned right-to-left so the most recent wins.
+        for i in (0..len - n).rev() {
+            if &context[i..i + n] == pattern {
+                let start = i + n;
+                let end = (start + max_k).min(len);
+                return context[start..end].to_vec();
+            }
+        }
+    }
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_ngram_proposes_its_continuation() {
+        // Suffix [1,2,3] occurred at the start; the tokens after it are
+        // the draft, capped at max_k.
+        let ctx = [1, 2, 3, 4, 5, 1, 2, 3];
+        assert_eq!(propose(&ctx, 3, 4), vec![4, 5, 1, 2]);
+        assert_eq!(propose(&ctx, 3, 2), vec![4, 5], "max_k caps the draft");
+        assert_eq!(propose(&ctx, 3, 1), vec![4]);
+    }
+
+    #[test]
+    fn longer_patterns_win_over_shorter() {
+        // The unigram [2] has a more recent match (index 4 -> continues
+        // with 9), but the bigram [1,2] at index 0 carries more
+        // evidence and must win: its continuation is 7.
+        let ctx = [1, 2, 7, 8, 2, 9, 1, 2];
+        assert_eq!(propose(&ctx, 3, 1), vec![7]);
+        // With ngram capped at 1 the recent unigram match wins instead.
+        assert_eq!(propose(&ctx, 1, 1), vec![9]);
+    }
+
+    #[test]
+    fn most_recent_occurrence_wins_at_equal_length() {
+        // [5] occurs at 0 (-> 7) and at 2 (-> 9): recency picks 9.
+        let ctx = [5, 7, 5, 9, 5];
+        assert_eq!(propose(&ctx, 1, 1), vec![9]);
+    }
+
+    #[test]
+    fn no_match_and_degenerate_inputs_return_empty() {
+        assert!(propose(&[1, 2, 3, 4], 3, 4).is_empty(), "all-distinct context");
+        assert!(propose(&[], 3, 4).is_empty());
+        assert!(propose(&[7], 3, 4).is_empty(), "no room for a continuation");
+        assert!(propose(&[7, 7, 7], 0, 4).is_empty(), "ngram 0 disables matching");
+        assert!(propose(&[7, 7, 7], 3, 0).is_empty(), "max_k 0 disables drafting");
+    }
+
+    #[test]
+    fn draft_never_runs_past_the_context() {
+        // The match sits one token from the end: the draft is that one
+        // token, however large max_k is.
+        let ctx = [3, 1, 4, 1];
+        assert_eq!(propose(&ctx, 1, 16), vec![4]);
+    }
+
+    #[test]
+    fn periodic_context_drafts_the_period() {
+        // A period-4 loop (what greedy decode converges into): the
+        // drafter reads the next period verbatim.
+        let ctx: Vec<usize> = [10, 20, 30, 40].repeat(4);
+        let draft = propose(&ctx, 3, 4);
+        assert_eq!(draft, vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let ctx: Vec<usize> = (0..32).map(|i| i % 5).collect();
+        assert_eq!(propose(&ctx, 3, 8), propose(&ctx, 3, 8));
+    }
+}

@@ -256,6 +256,59 @@ fn bounded_admission_rejects_deterministically() {
     assert_eq!(m.fault_leaked_blocks, 0);
 }
 
+/// Speculative decoding composed with fault recovery: a worker panic
+/// during a decode iteration — whose spans carry draft rows when
+/// `spec_k > 0` — poisons the epoch; recovery must strip the in-flight
+/// drafts, roll every sequence back to committed KV, and replay to
+/// oracle-identical tokens with zero leaked blocks. Speculation adds
+/// rollback state, not new failure modes.
+#[test]
+fn speculative_decode_survives_worker_panic() {
+    let (cfg, _) = coordinator(79);
+    // Repetitive prompts (the lookup-friendly shape tests/serving.rs
+    // uses) so drafting is plausibly in flight when the panic lands.
+    let reqs: Vec<Request> = (0..3usize)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: [7usize, 1031, 299]
+                .iter()
+                .cycle()
+                .take(9)
+                .map(|&t| (t + 97 * i) % cfg.vocab)
+                .collect(),
+            max_new_tokens: 10,
+        })
+        .collect();
+    let want = oracle_outputs(79, &reqs);
+    for threads in thread_counts() {
+        let (_, mut c) = coordinator(79);
+        let ccfg = ContinuousConfig::builder()
+            .block_size(4)
+            .num_blocks(64)
+            .max_batch(3)
+            .build();
+        // 9 prefill iterations precede decode, and even maximal draft
+        // acceptance leaves >= 2 decode iterations, so iteration 10
+        // lands inside decode under either counting convention.
+        let plan = FaultPlan::new().panic_at(Code::Attn, 10, None);
+        let got = c.serve(
+            &reqs,
+            &ServeOptions::continuous(ccfg).threads(threads).faults(plan).spec_k(4),
+        );
+        let ctx = format!("spec panic at {threads}T");
+        assert_clean_recovery(&want, &got, &ctx);
+        let f = got.faults.as_ref().unwrap();
+        assert_eq!(f.injected, 1, "{ctx}: the one-shot panic fires exactly once");
+        assert_eq!(f.recovered, 1, "{ctx}: one epoch restart absorbs it");
+        let sm = got.spec.as_ref().expect("spec-on runs carry the summary");
+        assert_eq!(
+            sm.drafted,
+            sm.accepted + sm.rejected,
+            "{ctx}: the draft ledger must balance across the restart"
+        );
+    }
+}
+
 /// The CI chaos hook: run the plain differential under whatever
 /// `PALLAS_FAILPOINTS` spec the environment carries. Without the env
 /// var this is just the calm differential (it still passes); CI runs it

@@ -552,3 +552,53 @@ fn prop_autotune_plan_is_deterministic_legal_and_minimal() {
         }
     }
 }
+
+/// Prompt-lookup drafter invariants over random contexts: every
+/// proposal is the verbatim continuation of an earlier occurrence of
+/// the context's trailing n-gram (a contiguous subsequence of the
+/// context — the drafter invents nothing), its length never exceeds
+/// `max_k`, degenerate inputs propose nothing, and proposals are
+/// deterministic. Small alphabets force dense repetition, large ones
+/// exercise the no-match path.
+#[test]
+fn prop_spec_drafter_proposes_verbatim_continuations() {
+    use nncase_repro::serving::spec::propose;
+    let mut rng = Rng::new(0xD8AF7);
+    for _ in 0..300 {
+        let alphabet = 2 + rng.below(12);
+        let len = rng.below(40);
+        let context: Vec<usize> = (0..len).map(|_| rng.below(alphabet)).collect();
+        let ngram = 1 + rng.below(4);
+        let max_k = rng.below(6);
+        let drafts = propose(&context, ngram, max_k);
+        assert!(drafts.len() <= max_k, "proposal exceeds max_k={max_k}: {drafts:?}");
+        assert_eq!(
+            drafts,
+            propose(&context, ngram, max_k),
+            "the drafter must be deterministic"
+        );
+        if context.len() < 2 || max_k == 0 {
+            assert!(drafts.is_empty(), "degenerate inputs must propose nothing");
+            continue;
+        }
+        if drafts.is_empty() {
+            continue;
+        }
+        // The proposal must be the continuation of some earlier
+        // occurrence of a trailing n-gram: find a window of the
+        // context that ends with a suffix of the context and is
+        // followed verbatim by the drafts.
+        let ok = (1..=ngram.min(context.len() - 1)).any(|n| {
+            let pattern = &context[context.len() - n..];
+            (0..context.len() - n).any(|i| {
+                &context[i..i + n] == pattern
+                    && context[i + n..].starts_with(&drafts)
+            })
+        });
+        assert!(
+            ok,
+            "proposal {drafts:?} is not a verbatim n-gram continuation of {context:?} \
+             (ngram={ngram})"
+        );
+    }
+}

@@ -785,6 +785,129 @@ fn report_to_json_is_stable_and_complete() {
     assert_eq!(depth, 0, "{j}");
 }
 
+/// True iff some request's greedy stream revisits a token early enough
+/// for the self-drafter to act on it: the token generated at step
+/// `j - 1` already occurs in `prompt ++ generated[..j-1]` for some
+/// planning step `j` with at least two tokens of budget left (the
+/// final decode step never drafts — there is no headroom to accept).
+/// This is exactly the prompt-lookup drafter's weakest (1-gram) match
+/// condition, so whenever it holds, a spec-on run MUST have drafted.
+fn stream_has_early_repeat(reqs: &[Request], oracle: &ServeReport) -> bool {
+    reqs.iter().any(|r| {
+        let g = &oracle.outputs.iter().find(|(id, _)| *id == r.id).expect("same ids").1;
+        (1..g.len().saturating_sub(1)).any(|j| {
+            let t = g[j - 1];
+            r.prompt.contains(&t) || g[..j - 1].contains(&t)
+        })
+    })
+}
+
+/// The speculative-decoding differential matrix: self-drafting
+/// (`spec_k > 0`) must be token-identical to the spec-off run AND to
+/// the FCFS oracle at every (threads × shards) matrix point, across
+/// the plain pool, chunked prefill, int8 weights, and the lossless f32
+/// tier under forced swap pressure. Greedy acceptance makes
+/// speculation semantics-free by construction — every emitted token is
+/// the model's own argmax, whether it arrived drafted or sampled — and
+/// this pins that end to end over the real engine.
+#[test]
+fn speculative_serve_matches_spec_off_and_fcfs_across_the_matrix() {
+    // Lookup-friendly prompts: one short motif repeated, so the
+    // drafter's n-gram scan has something to mine from step one.
+    let vocab = Qwen3Config::tiny().vocab;
+    let reqs: Vec<Request> = (0..3usize)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: [7usize, 1031, 299]
+                .iter()
+                .cycle()
+                .take(9)
+                .map(|&t| (t + 97 * i) % vocab)
+                .collect(),
+            max_new_tokens: 10,
+        })
+        .collect();
+    let machine = MachineSpec::test_numa();
+    let configs: [(&str, WeightQuant, ContinuousConfig); 4] = [
+        (
+            "plain",
+            WeightQuant::F32,
+            ContinuousConfig::builder().block_size(4).num_blocks(64).max_batch(3).build(),
+        ),
+        (
+            "chunked",
+            WeightQuant::F32,
+            ContinuousConfig::builder()
+                .block_size(4)
+                .num_blocks(64)
+                .max_batch(3)
+                .prefill_chunk(3)
+                .build(),
+        ),
+        (
+            "int8-weights",
+            WeightQuant::Int8,
+            ContinuousConfig::builder().block_size(4).num_blocks(64).max_batch(3).build(),
+        ),
+        (
+            "tiered-f32",
+            WeightQuant::F32,
+            ContinuousConfig::builder()
+                .block_size(4)
+                .num_blocks(7)
+                .max_batch(3)
+                .tiering(TierConfig { quant: KvQuant::F32, ..TierConfig::new(16) })
+                .build(),
+        ),
+    ];
+    for (name, wq, ccfg) in &configs {
+        let qcfg = Qwen3Config::tiny().with_weight_quant(*wq);
+        let w = Qwen3Weights::random(&qcfg, 71);
+        let mut oracle = Coordinator::new(Qwen3Engine::new(w, 1, 128));
+        let want = oracle.serve(&reqs, &ServeOptions::fcfs());
+        for shards in shard_counts() {
+            for threads in thread_counts() {
+                let mut run = |spec_k: usize| {
+                    let w = Qwen3Weights::random(&qcfg, 71);
+                    let mut c = Coordinator::new(Qwen3Engine::new(w, 1, 128));
+                    let mut opts = ServeOptions::continuous(ccfg.clone())
+                        .threads(threads)
+                        .shards(shards)
+                        .machine(machine.clone());
+                    if spec_k > 0 {
+                        opts = opts.spec_k(spec_k);
+                    }
+                    c.serve(&reqs, &opts)
+                };
+                let off = run(0);
+                let on = run(4);
+                assert_eq!(
+                    want.outputs, off.outputs,
+                    "{name}: spec-off diverged from FCFS at {threads}T x {shards}S"
+                );
+                assert_eq!(
+                    off.outputs, on.outputs,
+                    "{name}: speculation changed tokens at {threads}T x {shards}S"
+                );
+                assert!(off.spec.is_none(), "{name}: spec-off runs carry no summary");
+                let sm = on.spec.as_ref().expect("spec-on runs carry the summary");
+                assert_eq!(
+                    sm.drafted,
+                    sm.accepted + sm.rejected,
+                    "{name}: the draft ledger must balance"
+                );
+                // Wherever the emitted stream revisits a token with
+                // headroom left, the drafter must have proposed — pin
+                // it on the preemption-free config, where every
+                // planned draft survives to commit.
+                if *name == "plain" && stream_has_early_repeat(&reqs, &want) {
+                    assert!(sm.drafted > 0, "{name}: a repeating stream must draft");
+                }
+            }
+        }
+    }
+}
+
 /// The engine's own generate() agrees with serve() outputs (the report
 /// path adds no divergence).
 #[test]

@@ -5,11 +5,15 @@ regressions.
 Seeds the perf-regression tracker ROADMAP asks for: the CI bench-smoke
 job downloads the previous successful run's `serve-bench.json` artifact
 and diffs it against the fresh one. Samples are matched on
-(mode, plan, shards, weight_quant, prefill_chunk, pressure, threads) —
-`plan` is the ServePlan hash of autotuned runs (empty for hand-picked
-configs), so a planner change starts a new series instead of reading
-as a same-config regression; `shards` keys the dist-sharded scenario's
-worker-group counts apart (default 1 for pre-shard reports). Any drop in the scenario's gating metric
+(mode, plan, shards, weight_quant, prefill_chunk, spec_k, pressure,
+threads) — `plan` is the ServePlan hash of autotuned runs (empty for
+hand-picked configs), so a planner change starts a new series instead
+of reading as a same-config regression; `shards` keys the dist-sharded
+scenario's worker-group counts apart (default 1 for pre-shard
+reports); `spec_k` keys speculative-decoding depths apart (default 0
+for pre-spec reports) — a spec-on run steps a different decode GEMM
+shape than spec-off, so diffing them would report a configuration
+ratio as a regression. Any drop in the scenario's gating metric
 (prefill tok/s for the "prefill" scenario, decode tok/s otherwise)
 beyond --warn-pct emits a GitHub `::warning::` annotation. A
 per-scenario noise summary (mean/max |delta| across the compared keys)
@@ -71,15 +75,18 @@ def key(sample):
     # configuration ratio as a "regression". The plan hash does the
     # same for autotuned runs: a deliberate planner change re-keys the
     # series rather than tripping the regression warning. mode / plan /
-    # pressure / prefill_chunk are bench-scenario identity, which the
-    # per-run report does not know — those stay flat-only.
+    # pressure / prefill_chunk / spec_k are bench-scenario identity,
+    # which the per-run report does not carry at its top level — those
+    # stay flat-only (the nested report spells spec depth under "spec",
+    # out of `field`'s flat reach).
     # Every lookup defaults: a hand-edited or truncated artifact with a
     # missing key must degrade to "no matching series" (the sample just
     # won't pair up), never crash the whole comparison.
     return (sample.get("mode", "sweep"), sample.get("plan", ""),
             field(sample, "shards", 1),
             field(sample, "weight_quant", "f32"),
-            sample.get("prefill_chunk", 1), sample.get("pressure", 0),
+            sample.get("prefill_chunk", 1), sample.get("spec_k", 0),
+            sample.get("pressure", 0),
             field(sample, "threads", 1))
 
 
